@@ -1,0 +1,100 @@
+//! Serving-path demo: train a model with the rust LSH trainer, then serve
+//! dense batched inference through the AOT-compiled PJRT artifact (the
+//! production inference path — python never runs). Reports agreement
+//! between the native and PJRT paths plus batched latency/throughput.
+//!
+//! Requires `make artifacts`.
+//!
+//!   cargo run --release --example inference_pjrt
+
+use hashdl::nn::activation::Activation;
+use hashdl::nn::network::{Network, NetworkConfig};
+use hashdl::optim::OptimConfig;
+use hashdl::runtime::pjrt::{batch_literal, literal_to_f32s, matrix_literal, vec_literal};
+use hashdl::runtime::{ArtifactSet, PjrtRuntime};
+use hashdl::sampling::{Method, SamplerConfig};
+use hashdl::train::trainer::{TrainConfig, Trainer};
+use hashdl::util::rng::Pcg64;
+use std::path::Path;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new("artifacts");
+    let arts = ArtifactSet::resolve(dir, "tiny")?;
+
+    // 1. Train a small LSH network matching the `tiny` artifact topology.
+    let mut rng = Pcg64::seeded(7);
+    let mut gen = |n: usize, rng: &mut Pcg64| {
+        let mut ds = hashdl::data::Dataset::new("tiny-blobs", arts.input_dim, arts.n_classes);
+        for i in 0..n {
+            let y = (i % arts.n_classes) as u32;
+            let c = y as f32 - 0.5;
+            ds.push((0..arts.input_dim).map(|_| c + 0.4 * rng.gaussian()).collect(), y);
+        }
+        ds
+    };
+    let train = gen(2_000, &mut rng);
+    let test = gen(512, &mut rng);
+
+    let net = Network::new(
+        &NetworkConfig {
+            n_in: arts.input_dim,
+            hidden: vec![arts.layer_dims[0].1; arts.layer_dims.len() - 1],
+            n_out: arts.n_classes,
+            act: Activation::ReLU,
+        },
+        &mut Pcg64::seeded(7),
+    );
+    let mut trainer = Trainer::new(
+        net,
+        TrainConfig {
+            epochs: 5,
+            sampler: SamplerConfig::with_method(Method::Lsh, 0.25),
+            optim: OptimConfig { lr: 0.05, ..Default::default() },
+            ..Default::default()
+        },
+    );
+    let rec = trainer.run(&train, &test);
+    println!("trained LSH-25% model: accuracy {:.3}", rec.final_acc());
+
+    // 2. Load the PJRT inference artifact and upload the trained weights.
+    let rt = PjrtRuntime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let exe = rt.load(&arts.fwd_path)?;
+    let eval_batch = hashdl::runtime::std_baseline::EVAL_BATCH;
+
+    // 3. Serve the test set in batches; check agreement with native eval.
+    let t0 = Instant::now();
+    let mut agree = 0usize;
+    let mut correct = 0usize;
+    let mut n = 0usize;
+    for (cx, cy) in test.xs.chunks(eval_batch).zip(test.ys.chunks(eval_batch)) {
+        let rows: Vec<&[f32]> = cx.iter().map(|v| v.as_slice()).collect();
+        let mut args: Vec<xla::Literal> = Vec::new();
+        for layer in &trainer.net.layers {
+            args.push(matrix_literal(&layer.w)?);
+            args.push(vec_literal(&layer.b));
+        }
+        args.push(batch_literal(&rows, eval_batch, arts.input_dim)?);
+        let out = exe.run(&args)?;
+        let logits = literal_to_f32s(&out[0])?;
+        for (i, &y) in cy.iter().enumerate() {
+            let row = &logits[i * arts.n_classes..(i + 1) * arts.n_classes];
+            let pred = hashdl::tensor::vecops::argmax(row) as u32;
+            agree += (pred == trainer.net.predict(&cx[i])) as usize;
+            correct += (pred == y) as usize;
+            n += 1;
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "PJRT inference: {} samples in {:.1}ms ({:.0} samples/s) | accuracy {:.3} | native/PJRT agreement {:.1}%",
+        n,
+        secs * 1e3,
+        n as f64 / secs,
+        correct as f32 / n as f32,
+        100.0 * agree as f32 / n as f32
+    );
+    assert_eq!(agree, n, "PJRT and native predictions must agree");
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! Sustainability sweep (paper §6.2, Figs 4/5 on one dataset): accuracy
+//! vs active-node fraction for all five methods, with multiplication
+//! ratios — "how much computation can we remove without losing accuracy?"
+//!
+//!   cargo run --release --example sustainability [-- --dataset convex --scale quick]
+
+use hashdl::coordinator::experiment::{fig45, ExperimentScale, SPARSITY_GRID};
+use hashdl::data::synth::Benchmark;
+use hashdl::sampling::Method;
+use hashdl::util::argparse::Parser;
+
+fn main() {
+    let p = Parser::new("sustainability", "accuracy vs computation sweep")
+        .opt("dataset", "rectangles", "benchmark (mnist|norb|convex|rectangles)")
+        .opt("scale", "quick", "quick|medium|paper")
+        .opt("depth", "2", "hidden layers");
+    let a = p.parse();
+    let b = Benchmark::parse(a.get_or("dataset", "rectangles")).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2)
+    });
+    let scale = ExperimentScale::parse(a.get_or("scale", "quick")).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2)
+    });
+    let depth = a.parse_or("depth", 2usize);
+
+    let report = fig45(
+        &[b],
+        &[Method::Standard, Method::Dropout, Method::AdaptiveDropout, Method::Wta, Method::Lsh],
+        &[depth],
+        &SPARSITY_GRID,
+        &scale,
+        false,
+    );
+    report.emit(None);
+
+    // Headline: best LSH row at 5% vs the standard baseline.
+    let std_acc = report
+        .rows
+        .iter()
+        .find(|r| r[2] == "NN")
+        .map(|r| r[4].clone())
+        .unwrap_or_default();
+    let lsh5 = report
+        .rows
+        .iter()
+        .find(|r| r[2] == "LSH" && r[3] == "0.05")
+        .map(|r| (r[4].clone(), r[5].clone()))
+        .unwrap_or_default();
+    println!(
+        "standard accuracy {std_acc} | LSH at 5% active: accuracy {} using {}x of dense multiplications",
+        lsh5.0, lsh5.1
+    );
+}

@@ -1,0 +1,128 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts for the rust runtime.
+
+HLO *text* (not `.serialize()`) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published `xla` 0.1.6 crate binds) rejects; the
+text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits per variant (fixed shapes; one compiled executable per variant):
+  mlp_step_<name>.hlo.txt  — fused SGD minibatch step (loss, new params)
+  mlp_fwd_<name>.hlo.txt   — eval-batch logits
+  simhash_<name>.hlo.txt   — the L1 fingerprint kernel at that input dim
+plus a manifest.txt describing every artifact's signature for the rust
+artifact registry (runtime/mod.rs parses it).
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels.simhash import simhash
+
+LSH_K = 6
+LSH_L = 5
+SIMHASH_BATCH = 16
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def param_specs(input_dim, n_classes, hidden, depth):
+    out = []
+    for n_in, n_out in model.layer_dims(input_dim, n_classes, hidden, depth):
+        out += [spec((n_out, n_in)), spec((n_out,))]
+    return out
+
+
+def lower_variant(name, input_dim, n_classes, hidden, depth):
+    """Lower the three artifacts for one dataset variant."""
+    psp = param_specs(input_dim, n_classes, hidden, depth)
+
+    def step(*args):
+        params = list(args[: len(psp)])
+        x, y, lr = args[len(psp)], args[len(psp) + 1], args[len(psp) + 2]
+        return model.train_step(params, x, y, lr)
+
+    def fwd(*args):
+        params = list(args[: len(psp)])
+        return model.predict(params, args[len(psp)])
+
+    step_args = psp + [
+        spec((model.STEP_BATCH, input_dim)),
+        spec((model.STEP_BATCH,), jnp.int32),
+        spec((), jnp.float32),
+    ]
+    fwd_args = psp + [spec((model.EVAL_BATCH, input_dim))]
+    sim_args = [
+        spec((SIMHASH_BATCH, input_dim)),
+        spec((LSH_K * LSH_L, input_dim)),
+    ]
+
+    def sim(x, proj):
+        return (simhash(x, proj, k=LSH_K, l=LSH_L),)
+
+    artifacts = {
+        f"mlp_step_{name}": (step, step_args),
+        f"mlp_fwd_{name}": (fwd, fwd_args),
+        f"simhash_{name}": (sim, sim_args),
+    }
+    return artifacts
+
+
+def manifest_line(name, fn_args):
+    _, args = fn_args
+    sig = ";".join(
+        f"{'x'.join(str(d) for d in a.shape) if a.shape else 'scalar'}:{a.dtype}"
+        for a in args
+    )
+    return f"{name} {sig}"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--variants",
+        default="tiny,mnist,norb,convex,rectangles",
+        help="comma-separated subset of variants to lower",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    wanted = [v.strip() for v in args.variants.split(",") if v.strip()]
+    manifest = []
+    for name in wanted:
+        input_dim, n_classes, hidden, depth = model.VARIANTS[name]
+        artifacts = lower_variant(name, input_dim, n_classes, hidden, depth)
+        for art_name, (fn, arg_specs) in artifacts.items():
+            lowered = jax.jit(fn).lower(*arg_specs)
+            text = to_hlo_text(lowered)
+            path = os.path.join(args.out_dir, f"{art_name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            manifest.append(manifest_line(art_name, (fn, arg_specs)))
+            print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote manifest with {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""L1 Pallas kernels: fused fully-connected layer + generic matmul.
+
+`dense_layer` is the forward hot-spot of the STD baseline (Figs 4/5/7):
+activation(x @ w.T + b) computed tile-by-tile, with a custom VJP whose
+backward matmuls run through the same Pallas `matmul` kernel, so the
+entire L2 training step lowers to Pallas compute.
+
+TPU adaptation: output is tiled (batch_tile x n_tile); each grid step
+keeps an (bt, D) input stripe and an (nt, D) weight stripe in VMEM and
+issues one MXU matmul — the BlockSpec schedule that replaces the paper's
+CPU cache blocking. interpret=True for CPU-PJRT executability.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_tile(n, cap):
+    for t in range(min(n, cap), 0, -1):
+        if n % t == 0:
+            return t
+    return 1
+
+
+def _dense_kernel(activation, x_ref, w_ref, b_ref, o_ref):
+    x = x_ref[...]            # (bt, D)
+    w = w_ref[...]            # (nt, D)
+    b = b_ref[...]            # (nt,)
+    z = (
+        jax.lax.dot_general(
+            x, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        + b[None, :]
+    )
+    if activation == "relu":
+        z = jnp.maximum(z, 0.0)
+    o_ref[...] = z
+
+
+def _dense_forward(x, w, b, activation, batch_tile, n_tile):
+    if activation not in ("relu", "linear"):
+        raise ValueError(f"unknown activation {activation!r}")
+    bsz, d = x.shape
+    n = w.shape[0]
+    bt = _pick_tile(bsz, batch_tile)
+    nt = _pick_tile(n, n_tile)
+    kernel = functools.partial(_dense_kernel, activation)
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz // bt, n // nt),
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((nt, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((nt,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bt, nt), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bsz, n), jnp.float32),
+        interpret=True,
+    )(x, w, b)
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jax.lax.dot_general(
+        a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def matmul(a, b, *, m_tile=64, n_tile=256):
+    """Pallas (M,K)@(K,N) matmul, output-tiled, K resident per step."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    mt = _pick_tile(m, m_tile)
+    nt = _pick_tile(n, n_tile)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // mt, n // nt),
+        in_specs=[
+            pl.BlockSpec((mt, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, nt), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((mt, nt), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def dense_layer(x, w, b, activation="relu"):
+    """activation(x @ w.T + b) with Pallas forward AND backward."""
+    return _dense_forward(x, w, b, activation, batch_tile=32, n_tile=256)
+
+
+def _dense_fwd(x, w, b, activation):
+    a = _dense_forward(x, w, b, activation, batch_tile=32, n_tile=256)
+    return a, (x, w, a)
+
+
+def _dense_bwd(activation, res, g):
+    x, w, a = res
+    if activation == "relu":
+        dz = g * (a > 0.0)
+    elif activation == "linear":
+        dz = g
+    else:
+        raise ValueError(f"unknown activation {activation!r}")
+    dx = matmul(dz, w)                       # (B,N)@(N,D)
+    dw = matmul(dz.T, x)                     # (N,B)@(B,D)
+    db = dz.sum(axis=0)
+    return dx, dw, db
+
+
+dense_layer.defvjp(_dense_fwd, _dense_bwd)
+
+
+def dense_vmem_estimate_bytes(d, batch_tile=32, n_tile=256):
+    """Analytic VMEM per grid step (x stripe + w stripe + out tile)."""
+    return batch_tile * d * 4 + n_tile * d * 4 + n_tile * 4 + batch_tile * n_tile * 4

@@ -1,0 +1,61 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the single source of truth for kernel correctness: pytest
+compares every Pallas kernel against these under hypothesis-driven shape
+sweeps (python/tests/test_kernels.py).
+"""
+
+import jax.numpy as jnp
+
+
+def simhash_ref(x, proj, k, l):
+    """Signed-random-projection fingerprints, packed K bits per table.
+
+    Args:
+      x:    (B, D) query/data batch.
+      proj: (K*L, D) gaussian projection directions; table j uses rows
+            [j*K, (j+1)*K) — identical layout to the rust `SrpHash`.
+      k, l: LSH parameters.
+
+    Returns:
+      (B, L) int32 fingerprints; bit i (MSB-first within K) is
+      sign(proj[jK+i] . x), matching rust's `pack_bits`.
+    """
+    bits = (x @ proj.T >= 0.0).astype(jnp.int32)  # (B, K*L)
+    bits = bits.reshape(x.shape[0], l, k)
+    weights = 2 ** jnp.arange(k - 1, -1, -1, dtype=jnp.int32)  # MSB first
+    return (bits * weights).sum(axis=-1).astype(jnp.int32)
+
+
+def dense_ref(x, w, b, activation="relu"):
+    """Fully-connected layer: activation(x @ w.T + b).
+
+    w layout is (n_out, n_in) — row per output neuron, same as rust.
+    """
+    z = x @ w.T + b
+    if activation == "relu":
+        return jnp.maximum(z, 0.0)
+    if activation == "linear":
+        return z
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def matmul_ref(a, b):
+    """Plain (M,K)@(K,N) matmul."""
+    return a @ b
+
+
+def mlp_ref(params, x, activation="relu"):
+    """Forward pass through an MLP given [(w1,b1),...]; last layer linear."""
+    h = x
+    for i, (w, b) in enumerate(params):
+        act = "linear" if i == len(params) - 1 else activation
+        h = dense_ref(h, w, b, act)
+    return h
+
+
+def softmax_xent_ref(logits, labels):
+    """Mean softmax cross-entropy."""
+    logz = jnp.log(jnp.sum(jnp.exp(logits - logits.max(-1, keepdims=True)), -1))
+    logp = logits - logits.max(-1, keepdims=True) - logz[..., None]
+    return -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()

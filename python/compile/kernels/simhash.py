@@ -1,0 +1,75 @@
+"""L1 Pallas kernel: signed-random-projection (SimHash) fingerprints.
+
+The paper's per-query hashing cost (§5.5: "K x L hashes of the input") as
+a single fused kernel: a (B, D) x (D, K*L) projection on the MXU followed
+by sign extraction and K-bit packing on the VPU, emitting (B, L) int32
+fingerprints.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the batch dimension is
+tiled via BlockSpec so each grid step holds a (bt, D) input tile plus the
+full (K*L, D) projection panel in VMEM. For the paper's settings
+(K=6, L=5, D<=2049) the panel is ~240 KB fp32 — comfortably VMEM-resident
+— so the kernel is a single-pass streaming matmul with no K-dim loop.
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU numbers are estimated analytically in DESIGN.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _simhash_kernel(k, l, x_ref, proj_ref, out_ref):
+    """One batch tile: project, sign, pack K bits per table (MSB first)."""
+    x = x_ref[...]                       # (bt, D)
+    proj = proj_ref[...]                 # (K*L, D)
+    # MXU: one (bt, D) @ (D, K*L) matmul.
+    z = jax.lax.dot_general(
+        x, proj, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                    # (bt, K*L)
+    bits = (z >= 0.0).astype(jnp.int32)
+    bits = bits.reshape(x.shape[0], l, k)
+    # MSB-first bit weights built from iota *inside* the kernel (pallas
+    # forbids captured constant arrays).
+    iota = jax.lax.broadcasted_iota(jnp.int32, (l, k), dimension=1)
+    weights = jnp.left_shift(jnp.int32(1), (k - 1) - iota)
+    out_ref[...] = (bits * weights[None, :, :]).sum(axis=-1).astype(jnp.int32)
+
+
+def _pick_tile(n, cap):
+    """Largest divisor of n that is <= cap (grid shapes must divide)."""
+    for t in range(min(n, cap), 0, -1):
+        if n % t == 0:
+            return t
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=("k", "l", "batch_tile"))
+def simhash(x, proj, *, k, l, batch_tile=32):
+    """Fingerprint a batch: x (B, D), proj (K*L, D) -> (B, L) int32."""
+    b, d = x.shape
+    assert proj.shape == (k * l, d), (proj.shape, (k * l, d))
+    bt = _pick_tile(b, batch_tile)
+    kernel = functools.partial(_simhash_kernel, k, l)
+    return pl.pallas_call(
+        kernel,
+        grid=(b // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),       # stream batch tiles
+            pl.BlockSpec((k * l, d), lambda i: (0, 0)),    # projection panel resident
+        ],
+        out_specs=pl.BlockSpec((bt, l), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, l), jnp.int32),
+        interpret=True,
+    )(x, proj)
+
+
+def vmem_estimate_bytes(d, k, l, batch_tile=32):
+    """Analytic VMEM footprint of one grid step (see DESIGN.md §Perf)."""
+    x_tile = batch_tile * d * 4
+    panel = k * l * d * 4
+    z = batch_tile * k * l * 4
+    out = batch_tile * l * 4
+    return x_tile + panel + z + out

@@ -1,0 +1,91 @@
+"""L2: the dense MLP (the paper's STD baseline) built on the L1 Pallas
+kernels, plus the fused training step that AOT-lowers to a single HLO
+module per dataset variant.
+
+Python here is build-time only: `aot.py` lowers these functions to
+artifacts/*.hlo.txt once, and the rust coordinator executes them through
+PJRT on the request path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.dense import dense_layer
+
+# ---------------------------------------------------------------------------
+# Variants: one AOT artifact set per dataset (fixed shapes).
+# ---------------------------------------------------------------------------
+
+#: name -> (input_dim, n_classes, hidden_width, n_hidden_layers)
+VARIANTS = {
+    "mnist": (784, 10, 1000, 3),
+    "norb": (2048, 5, 1000, 3),
+    "convex": (784, 2, 1000, 3),
+    "rectangles": (784, 2, 1000, 3),
+    # small variant used by fast tests and the runtime round-trip check
+    "tiny": (16, 2, 32, 2),
+}
+
+#: STD baseline minibatch (paper §6.3.3: "mini-batch of size 32").
+STEP_BATCH = 32
+#: Evaluation forward batch.
+EVAL_BATCH = 256
+
+
+def layer_dims(input_dim, n_classes, hidden, depth):
+    """[(n_in, n_out)] per layer, paper architecture."""
+    dims = [input_dim] + [hidden] * depth + [n_classes]
+    return list(zip(dims[:-1], dims[1:]))
+
+
+def init_params(key, input_dim, n_classes, hidden, depth):
+    """Glorot-uniform params as a flat list [w1, b1, w2, b2, ...].
+
+    w layout (n_out, n_in): row per neuron, matching rust.
+    """
+    params = []
+    for n_in, n_out in layer_dims(input_dim, n_classes, hidden, depth):
+        key, sub = jax.random.split(key)
+        limit = (6.0 / (n_in + n_out)) ** 0.5
+        w = jax.random.uniform(sub, (n_out, n_in), jnp.float32, -limit, limit)
+        params += [w, jnp.zeros((n_out,), jnp.float32)]
+    return params
+
+
+def forward(params, x):
+    """Logits for batch x. Hidden layers: Pallas fused relu; last: linear."""
+    n_layers = len(params) // 2
+    h = x
+    for i in range(n_layers):
+        w, b = params[2 * i], params[2 * i + 1]
+        act = "linear" if i == n_layers - 1 else "relu"
+        h = dense_layer(h, w, b, act)
+    return h
+
+
+def loss_fn(params, x, y):
+    """Mean softmax cross-entropy."""
+    logits = forward(params, x)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    logp = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0] - logz
+    return -logp.mean()
+
+
+def train_step(params, x, y, lr):
+    """One fused SGD minibatch step: returns (loss, *new_params).
+
+    This is the artifact the rust STD baseline executes per batch — loss
+    and all parameter updates in one PJRT call, no python anywhere.
+    """
+    loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+    new_params = [p - lr * g for p, g in zip(params, grads)]
+    return (loss, *new_params)
+
+
+def predict(params, x):
+    """Eval-time logits (separate artifact with the eval batch size)."""
+    return (forward(params, x),)
+
+
+def accuracy(params, x, y):
+    return (forward(params, x).argmax(-1) == y).mean()

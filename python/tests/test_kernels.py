@@ -1,0 +1,133 @@
+"""Kernel-vs-reference correctness — the core L1 signal.
+
+Hypothesis sweeps shapes (and implicitly tile boundaries) for both Pallas
+kernels against the pure-jnp oracles in kernels/ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.dense import dense_layer, dense_vmem_estimate_bytes, matmul
+from compile.kernels.simhash import simhash, vmem_estimate_bytes
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# simhash
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 48),
+    d=st.integers(2, 96),
+    k=st.integers(1, 8),
+    l=st.integers(1, 6),
+)
+def test_simhash_matches_ref(b, d, k, l):
+    x = rand(b * 7 + d, b, d)
+    proj = rand(k * 13 + l, k * l, d)
+    got = simhash(x, proj, k=k, l=l)
+    want = ref.simhash_ref(x, proj, k, l)
+    assert got.shape == (b, l)
+    assert got.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_simhash_fingerprints_fit_k_bits():
+    x = rand(1, 40, 32)
+    proj = rand(2, 30, 32)
+    fps = np.asarray(simhash(x, proj, k=6, l=5))
+    assert fps.min() >= 0
+    assert fps.max() < 2**6
+
+
+def test_simhash_scale_invariance():
+    # sign(p.(cx)) == sign(p.x) for c > 0 — same property the rust SRP test checks.
+    x = rand(3, 8, 16)
+    proj = rand(4, 12, 16)
+    a = simhash(x, proj, k=4, l=3)
+    b = simhash(x * 7.5, proj, k=4, l=3)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_simhash_paper_settings_vmem_fits():
+    # K=6, L=5, D=2048 (NORB), bt=32: the panel must fit typical 16 MB VMEM.
+    assert vmem_estimate_bytes(2049, 6, 5, 32) < 16 * 2**20
+
+
+# ---------------------------------------------------------------------------
+# dense / matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 40),
+    d=st.integers(1, 64),
+    n=st.integers(1, 48),
+    act=st.sampled_from(["relu", "linear"]),
+)
+def test_dense_matches_ref(b, d, n, act):
+    x = rand(b + d, b, d)
+    w = rand(n + d + 1, n, d)
+    bias = rand(n + 2, n)
+    got = dense_layer(x, w, bias, act)
+    want = ref.dense_ref(x, w, bias, act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(m=st.integers(1, 40), k=st.integers(1, 48), n=st.integers(1, 40))
+def test_matmul_matches_ref(m, k, n):
+    a = rand(m + k, m, k)
+    b = rand(n + k + 3, k, n)
+    np.testing.assert_allclose(
+        np.asarray(matmul(a, b)), np.asarray(ref.matmul_ref(a, b)), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_dense_gradients_match_jnp_autodiff():
+    # The custom VJP (Pallas backward matmuls) must agree with plain jnp grad.
+    x = rand(1, 8, 12)
+    w = rand(2, 10, 12)
+    b = rand(3, 10)
+
+    def loss_pallas(x, w, b):
+        return (dense_layer(x, w, b, "relu") ** 2).sum()
+
+    def loss_ref(x, w, b):
+        return (ref.dense_ref(x, w, b, "relu") ** 2).sum()
+
+    gp = jax.grad(loss_pallas, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, bb in zip(gp, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(bb), rtol=1e-4, atol=1e-4)
+
+
+def test_dense_relu_kills_negative_gradients():
+    x = -jnp.ones((4, 6))
+    w = jnp.ones((5, 6))
+    b = jnp.zeros((5,))
+    g = jax.grad(lambda w: dense_layer(x, w, b, "relu").sum())(w)
+    np.testing.assert_array_equal(np.asarray(g), np.zeros_like(g))
+
+
+def test_dense_rejects_unknown_activation():
+    x, w, b = rand(1, 2, 3), rand(2, 4, 3), rand(3, 4)
+    with pytest.raises(ValueError):
+        dense_layer(x, w, b, "swish")
+
+
+def test_dense_vmem_estimate_reasonable():
+    # 1000-wide layer, D=2048 stripe at default tiles stays under VMEM.
+    assert dense_vmem_estimate_bytes(2048) < 16 * 2**20

@@ -1,0 +1,35 @@
+//! Shared harness for the `harness = false` bench binaries (the offline
+//! crate set has no criterion — util::timer::bench_loop supplies the
+//! timing core). `scale()` reads HASHDL_BENCH_SCALE (quick|medium|paper)
+//! so `cargo bench` stays minutes-scale by default but can regenerate
+//! paper-scale numbers.
+
+use hashdl::coordinator::experiment::ExperimentScale;
+use hashdl::util::timer::{fmt_secs, Stats};
+
+pub fn scale() -> ExperimentScale {
+    let name = std::env::var("HASHDL_BENCH_SCALE").unwrap_or_else(|_| "quick".into());
+    ExperimentScale::parse(&name).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2)
+    })
+}
+
+pub fn print_stats(name: &str, stats: &Stats, per_item: Option<(u64, &str)>) {
+    let extra = match per_item {
+        Some((count, unit)) if count > 0 => {
+            format!("  ({} per {unit})", fmt_secs(stats.mean() / count as f64))
+        }
+        _ => String::new(),
+    };
+    println!(
+        "{name:<44} {:>10} ± {:<10} (n={}){extra}",
+        fmt_secs(stats.mean()),
+        fmt_secs(stats.stddev()),
+        stats.count()
+    );
+}
+
+pub fn header(title: &str) {
+    println!("\n### {title}");
+}

@@ -1,0 +1,53 @@
+//! Figs 4 & 5 harness: accuracy under different levels of active nodes,
+//! all five methods, 2 and 3 hidden layers, four datasets. Scaled by
+//! HASHDL_BENCH_SCALE (quick|medium|paper); the *shape* — LSH degrades
+//! least toward 5%, VD collapses under 50%, AD diverges < 25%, WTA > VD
+//! below 50% — is the reproduction target.
+//!
+//!   cargo bench --bench fig4_fig5
+//!   HASHDL_BENCH_SCALE=paper cargo bench --bench fig4_fig5   # full grid
+
+mod common;
+
+use hashdl::coordinator::experiment::{fig45, SPARSITY_GRID};
+use hashdl::data::synth::Benchmark;
+use hashdl::sampling::Method;
+
+fn main() {
+    let scale = common::scale();
+    let quick = std::env::var("HASHDL_BENCH_SCALE").map_or(true, |s| s == "quick");
+    // Quick default: two datasets, depth 2, three grid points — minutes.
+    let (datasets, depths, grid): (Vec<Benchmark>, Vec<usize>, Vec<f32>) = if quick {
+        (
+            vec![Benchmark::Rectangles, Benchmark::Convex],
+            vec![2],
+            vec![0.05, 0.25, 0.75],
+        )
+    } else {
+        (Benchmark::all().to_vec(), vec![2, 3], SPARSITY_GRID.to_vec())
+    };
+    let methods = [
+        Method::Standard,
+        Method::Dropout,
+        Method::AdaptiveDropout,
+        Method::Wta,
+        Method::Lsh,
+    ];
+    let report = fig45(&datasets, &methods, &depths, &grid, &scale, false);
+    report.emit(Some(std::path::Path::new("results")));
+
+    // Shape assertions (warn, don't fail — quick scale is noisy).
+    let acc = |method: &str, sp: &str| -> Option<f32> {
+        report
+            .rows
+            .iter()
+            .find(|r| r[2] == method && r[3] == sp)
+            .and_then(|r| r[4].parse().ok())
+    };
+    if let (Some(lsh5), Some(vd5)) = (acc("LSH", "0.05"), acc("VD", "0.05")) {
+        println!(
+            "shape check: LSH@5% {lsh5:.3} vs VD@5% {vd5:.3} -> {}",
+            if lsh5 >= vd5 { "paper shape holds (LSH >= VD at high sparsity)" } else { "WARN: inverted" }
+        );
+    }
+}

@@ -1,0 +1,47 @@
+//! Fig 6 harness: LSH-5% ASGD convergence across thread counts — the
+//! paper's claim that lock-free parallel updates leave the convergence
+//! curve unchanged (1 vs 8 vs 56 threads). On this testbed the thread
+//! grid defaults to {1, 4, 8}; the invariance claim is hardware-independent.
+//!
+//!   cargo bench --bench fig6_convergence
+
+mod common;
+
+use hashdl::coordinator::experiment::fig6;
+use hashdl::data::synth::Benchmark;
+
+fn main() {
+    let scale = common::scale();
+    let quick = std::env::var("HASHDL_BENCH_SCALE").map_or(true, |s| s == "quick");
+    let datasets: Vec<Benchmark> =
+        if quick { vec![Benchmark::Rectangles] } else { Benchmark::all().to_vec() };
+    let threads: Vec<usize> = if quick { vec![1, 4] } else { vec![1, 8, 56] };
+
+    let report = fig6(&datasets, &threads, 0.05, &scale, false);
+    report.emit(Some(std::path::Path::new("results")));
+
+    // Shape check: final accuracy spread across thread counts must be small.
+    for &b in &datasets {
+        let finals: Vec<f32> = threads
+            .iter()
+            .filter_map(|t| {
+                report
+                    .rows
+                    .iter()
+                    .filter(|r| r[0] == b.name() && r[1] == t.to_string())
+                    .next_back()
+                    .and_then(|r| r[3].parse().ok())
+            })
+            .collect();
+        if finals.len() == threads.len() {
+            let spread = finals.iter().cloned().fold(0.0f32, f32::max)
+                - finals.iter().cloned().fold(1.0f32, f32::min);
+            println!(
+                "shape check {}: final-acc spread across threads {:.3} -> {}",
+                b.name(),
+                spread,
+                if spread < 0.08 { "thread-invariant (paper shape holds)" } else { "WARN: diverging" }
+            );
+        }
+    }
+}

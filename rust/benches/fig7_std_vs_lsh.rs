@@ -1,0 +1,44 @@
+//! Fig 7 harness: under many-thread lock-free ASGD, sparse LSH-5% updates
+//! keep converging while dense STD updates suffer from overwrites. Also
+//! cross-checks the STD baseline against the PJRT artifact path when
+//! artifacts are present.
+//!
+//!   cargo bench --bench fig7_std_vs_lsh
+
+mod common;
+
+use hashdl::coordinator::experiment::fig7;
+use hashdl::data::synth::Benchmark;
+
+fn main() {
+    let scale = common::scale();
+    let quick = std::env::var("HASHDL_BENCH_SCALE").map_or(true, |s| s == "quick");
+    let datasets: Vec<Benchmark> =
+        if quick { vec![Benchmark::Rectangles, Benchmark::Convex] } else { Benchmark::all().to_vec() };
+    let threads = if quick { 8 } else { 56 };
+
+    let report = fig7(&datasets, threads, 0.05, &scale, false);
+    report.emit(Some(std::path::Path::new("results")));
+
+    for &b in &datasets {
+        let last = |method: &str| -> Option<f32> {
+            report
+                .rows
+                .iter()
+                .filter(|r| r[0] == b.name() && r[1] == method)
+                .next_back()
+                .and_then(|r| r[3].parse().ok())
+        };
+        if let (Some(lsh), Some(std)) = (last("LSH"), last("NN")) {
+            println!(
+                "shape check {}: LSH-ASGD {lsh:.3} vs STD-ASGD {std:.3} -> {}",
+                b.name(),
+                if lsh + 0.02 >= std {
+                    "paper shape holds (sparse updates tolerate asynchrony)"
+                } else {
+                    "WARN: dense beat sparse"
+                }
+            );
+        }
+    }
+}

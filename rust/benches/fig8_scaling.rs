@@ -1,0 +1,46 @@
+//! Fig 8 harness: wall-clock per epoch vs thread count. Two readings
+//! (DESIGN.md §3 substitution):
+//!   * measured — real Hogwild threads on this container (1 core, so
+//!     measured speedup ≈ 1x and is reported honestly);
+//!   * conflict-model — speedup predicted from the *measured* active-set
+//!     overlap, which reproduces the paper's 31x@56 shape on MNIST-like
+//!     data and the flattening on the small Convex/Rectangles sets.
+//!
+//!   cargo bench --bench fig8_scaling
+
+mod common;
+
+use hashdl::coordinator::experiment::{fig8, model_speedup};
+use hashdl::data::synth::Benchmark;
+
+fn main() {
+    let scale = common::scale();
+    let quick = std::env::var("HASHDL_BENCH_SCALE").map_or(true, |s| s == "quick");
+    let datasets: Vec<Benchmark> = if quick {
+        vec![Benchmark::Mnist8m, Benchmark::Rectangles]
+    } else {
+        Benchmark::all().to_vec()
+    };
+    let threads: Vec<usize> = if quick { vec![1, 2, 4] } else { vec![1, 2, 4, 8, 16, 32, 56] };
+
+    let report = fig8(&datasets, &threads, 0.05, &scale, false);
+    report.emit(Some(std::path::Path::new("results")));
+
+    // Project the paper's headline point from the measured overlaps.
+    println!("\nconflict-model projection at 56 threads (paper reports ~31x on MNIST8M):");
+    for &b in &datasets {
+        if let Some(row) = report.rows.iter().filter(|r| r[0] == b.name()).next_back() {
+            let overlap: f64 = row[4].parse().unwrap_or(0.0);
+            println!(
+                "  {:<12} measured overlap {:.4} -> projected {:.1}x @56 threads",
+                b.name(),
+                overlap,
+                model_speedup(56, overlap, 0.005)
+            );
+        }
+    }
+    println!(
+        "  (container has {} core(s); measured column is hardware-bound)",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    );
+}

@@ -1,0 +1,137 @@
+//! Micro-benchmarks of the hot-path primitives plus the ALSH-vs-raw-SRP
+//! active-set quality ablation (DESIGN.md §6).
+//!
+//!   cargo bench --bench micro
+
+mod common;
+
+use common::{header, print_stats};
+use hashdl::lsh::family::LshFamily;
+use hashdl::lsh::layered::{LayerTables, LshConfig};
+use hashdl::lsh::srp::SrpHash;
+use hashdl::nn::activation::Activation;
+use hashdl::nn::layer::Layer;
+use hashdl::nn::sparse::{LayerInput, SparseVec};
+use hashdl::tensor::matrix::Matrix;
+use hashdl::tensor::vecops::{dot, top_k_indices};
+use hashdl::util::rng::Pcg64;
+use hashdl::util::timer::bench_loop;
+
+fn main() {
+    let mut rng = Pcg64::seeded(42);
+
+    header("vector primitives (paper-scale dims)");
+    let a: Vec<f32> = (0..1000).map(|_| rng.gaussian()).collect();
+    let b: Vec<f32> = (0..1000).map(|_| rng.gaussian()).collect();
+    let s = bench_loop(100, 2_000, || dot(&a, &b));
+    print_stats("dot(1000)", &s, Some((1000, "mult")));
+
+    header("layer forward: dense vs sparse active set (1000x1000)");
+    let layer = Layer::new(1000, 1000, Activation::ReLU, &mut rng);
+    let x: Vec<f32> = (0..1000).map(|_| rng.gaussian()).collect();
+    let mut out_dense = Vec::new();
+    let s = bench_loop(5, 50, || layer.forward_dense(&x, &mut out_dense));
+    print_stats("dense forward (100% nodes)", &s, None);
+    let dense_mean = s.mean();
+    let mut out_sparse = SparseVec::new();
+    for pct in [5usize, 10, 25, 50] {
+        let active: Vec<u32> = (0..(1000 * pct / 100) as u32).collect();
+        let s = bench_loop(10, 200, || {
+            layer.forward_sparse(LayerInput::Dense(&x), &active, &mut out_sparse)
+        });
+        print_stats(&format!("sparse forward ({pct:>2}% nodes)"), &s, None);
+        if pct == 5 {
+            println!(
+                "{:>60}",
+                format!("-> {:.1}x faster than dense", dense_mean / s.mean())
+            );
+        }
+    }
+
+    header("LSH table operations (1000 nodes, K=6, L=5, d=1000)");
+    let w = Matrix::randn(1000, 1000, &mut rng);
+    let s = bench_loop(1, 10, || LayerTables::build(&w, LshConfig::default(), &mut rng));
+    print_stats("build tables (once per epoch)", &s, Some((1000, "node")));
+    let mut tables = LayerTables::build(&w, LshConfig::default(), &mut rng);
+    let mut out = Vec::new();
+    let s = bench_loop(50, 1_000, || tables.query(&x, 50, &mut rng, &mut out));
+    print_stats("query active set (per example)", &s, None);
+    let query_mean = s.mean();
+    let touched: Vec<u32> = (0..50).collect();
+    let s = bench_loop(20, 500, || tables.rehash_nodes(&w, &touched, &mut rng));
+    print_stats("rehash 50 updated nodes", &s, None);
+
+    header("selection-cost comparison at 5% (the paper's core claim)");
+    // WTA pays a full dense pass + sort; LSH pays K*L hashes + probes.
+    let s = bench_loop(5, 50, || {
+        let mut z = Vec::new();
+        layer.preactivations_dense(LayerInput::Dense(&x), &mut z);
+        top_k_indices(&z, 50)
+    });
+    print_stats("WTA selection (dense + O(n log n))", &s, None);
+    println!(
+        "{:>60}",
+        format!("-> LSH selection is {:.1}x cheaper", s.mean() / query_mean)
+    );
+
+    header("ablation: ALSH-MIPS vs raw SRP active-set precision");
+    // Recall of true top-50 inner products among 50 retrieved, 1000 nodes.
+    // Weight norms vary 4x so MIPS != cosine — the regime where the
+    // asymmetric transform matters.
+    let mut w2 = Matrix::randn(1000, 128, &mut rng);
+    for i in 0..1000 {
+        let scale = 0.5 + 1.5 * (i % 4) as f32;
+        for v in w2.row_mut(i) {
+            *v *= scale;
+        }
+    }
+    let cfg = LshConfig { k: 6, l: 8, probes_per_table: 8, ..Default::default() };
+    let mut alsh_tables = LayerTables::build(&w2, cfg, &mut rng);
+    let raw_srp = SrpHash::new(128, cfg.k, cfg.l, &mut rng);
+    // raw-SRP tables: hash rows symmetrically (no norm embedding)
+    let mut raw_tables: Vec<hashdl::lsh::table::HashTable> =
+        (0..cfg.l).map(|_| hashdl::lsh::table::HashTable::new(cfg.k, 1000)).collect();
+    for id in 0..1000u32 {
+        let fps = raw_srp.data_fingerprints(w2.row(id as usize));
+        for (t, fp) in raw_tables.iter_mut().zip(fps) {
+            t.insert(id, fp);
+        }
+    }
+    let trials = 50;
+    let (mut alsh_hits, mut raw_hits, mut total) = (0usize, 0usize, 0usize);
+    for _ in 0..trials {
+        let q: Vec<f32> = (0..128).map(|_| rng.gaussian()).collect();
+        let ips: Vec<f32> = (0..1000).map(|i| dot(w2.row(i), &q)).collect();
+        let top: std::collections::HashSet<u32> =
+            top_k_indices(&ips, 50).into_iter().collect();
+        let mut got = Vec::new();
+        alsh_tables.query(&q, 50, &mut rng, &mut got);
+        alsh_hits += got.iter().filter(|id| top.contains(id)).count();
+        total += got.len();
+        // raw SRP union probe
+        let fps = raw_srp.query_fingerprints(&q);
+        let mut raw_got: Vec<u32> = Vec::new();
+        let mut seen = vec![false; 1000];
+        'outer: for depth in 0..cfg.probes_per_table {
+            for (t, &fp) in raw_tables.iter().zip(&fps) {
+                let seq = hashdl::lsh::multiprobe::probe_sequence(fp, cfg.k, depth + 1);
+                let addr = seq[depth.min(seq.len() - 1)];
+                for &id in t.bucket(addr) {
+                    if !seen[id as usize] {
+                        seen[id as usize] = true;
+                        raw_got.push(id);
+                        if raw_got.len() >= 50 {
+                            break 'outer;
+                        }
+                    }
+                }
+            }
+        }
+        raw_hits += raw_got.iter().filter(|id| top.contains(id)).count();
+    }
+    println!(
+        "ALSH-MIPS precision {:.3} vs raw-SRP precision {:.3} (chance 0.050)",
+        alsh_hits as f64 / total.max(1) as f64,
+        raw_hits as f64 / (trials * 50) as f64
+    );
+}

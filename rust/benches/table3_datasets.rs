@@ -1,0 +1,35 @@
+//! Table/Fig 3 harness: the dataset inventory plus generator throughput
+//! (MNIST8M's 8.1M samples are feasible because generation streams).
+//!
+//!   cargo bench --bench table3_datasets
+
+mod common;
+
+use common::{header, print_stats};
+use hashdl::coordinator::experiment::table3;
+use hashdl::data::synth::Benchmark;
+use hashdl::util::timer::bench_loop;
+
+fn main() {
+    print!("{}", table3().render());
+
+    header("generator throughput (samples/s)");
+    for b in Benchmark::all() {
+        let s = bench_loop(1, 3, || b.generate(200, 1, 42));
+        print_stats(
+            &format!("{} generate 200 samples", b.name()),
+            &s,
+            Some((200, "sample")),
+        );
+        let per_sample = s.mean() / 200.0;
+        let (paper_train, _) = b.paper_sizes();
+        println!(
+            "{:>70}",
+            format!(
+                "-> full paper train set ({} samples) would take ~{:.0}s",
+                paper_train,
+                per_sample * paper_train as f64
+            )
+        );
+    }
+}

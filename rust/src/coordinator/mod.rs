@@ -1,0 +1,9 @@
+//! The experiment coordinator: figure/table drivers and report rendering.
+//! `main.rs` dispatches CLI subcommands here; examples/benches call the
+//! same entry points so every number in EXPERIMENTS.md is regenerable.
+
+pub mod experiment;
+pub mod report;
+
+pub use experiment::{ExperimentScale, SPARSITY_GRID};
+pub use report::Report;

@@ -1,0 +1,119 @@
+//! Paper-style result tables: fixed-width console rendering + CSV export.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Report {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Report {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        debug_assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    /// Fixed-width table rendering.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut s = String::new();
+        let _ = writeln!(s, "== {} ==", self.title);
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let _ = writeln!(s, "{}", line(&self.headers, &widths));
+        let total: usize = widths.iter().sum::<usize>() + 2 * (widths.len() - 1);
+        let _ = writeln!(s, "{}", "-".repeat(total));
+        for row in &self.rows {
+            let _ = writeln!(s, "{}", line(row, &widths));
+        }
+        s
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = self.headers.join(",");
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str(&row.join(","));
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Print to stdout and optionally write CSV next to `out_dir`.
+    pub fn emit(&self, out_dir: Option<&Path>) {
+        print!("{}", self.render());
+        println!();
+        if let Some(dir) = out_dir {
+            std::fs::create_dir_all(dir).ok();
+            let file = dir.join(format!(
+                "{}.csv",
+                self.title.to_ascii_lowercase().replace([' ', '/', ':'], "_")
+            ));
+            if let Err(e) = std::fs::write(&file, self.to_csv()) {
+                eprintln!("warning: could not write {}: {e}", file.display());
+            } else {
+                eprintln!("wrote {}", file.display());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Report {
+        let mut r = Report::new("Fig X", &["dataset", "acc"]);
+        r.row(vec!["mnist".into(), "0.97".into()]);
+        r.row(vec!["norb-longer".into(), "0.9".into()]);
+        r
+    }
+
+    #[test]
+    fn render_aligns_columns() {
+        let out = sample().render();
+        assert!(out.contains("== Fig X =="));
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 5);
+        // all data lines same width
+        assert_eq!(lines[2].len(), lines[3].len().max(lines[2].len()));
+    }
+
+    #[test]
+    fn csv_format() {
+        let csv = sample().to_csv();
+        assert_eq!(csv.lines().next().unwrap(), "dataset,acc");
+        assert_eq!(csv.lines().count(), 3);
+    }
+
+    #[test]
+    fn emit_writes_csv() {
+        let dir = std::env::temp_dir().join("hashdl_report_test");
+        sample().emit(Some(&dir));
+        let content = std::fs::read_to_string(dir.join("fig_x.csv")).unwrap();
+        assert!(content.contains("mnist,0.97"));
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,135 @@
+//! In-memory classification dataset with train/test split, shuffling and
+//! normalization helpers.
+
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub dim: usize,
+    pub n_classes: usize,
+    pub xs: Vec<Vec<f32>>,
+    pub ys: Vec<u32>,
+}
+
+impl Dataset {
+    pub fn new(name: impl Into<String>, dim: usize, n_classes: usize) -> Self {
+        Dataset { name: name.into(), dim, n_classes, xs: Vec::new(), ys: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: Vec<f32>, y: u32) {
+        debug_assert_eq!(x.len(), self.dim);
+        debug_assert!((y as usize) < self.n_classes);
+        self.xs.push(x);
+        self.ys.push(y);
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    /// Shuffled index order for one epoch.
+    pub fn epoch_order(&self, rng: &mut Pcg64) -> Vec<u32> {
+        let mut order: Vec<u32> = (0..self.len() as u32).collect();
+        rng.shuffle(&mut order);
+        order
+    }
+
+    /// Split off the last `n_test` examples as a test set (callers shuffle
+    /// first if needed — the synthetic generators emit i.i.d. samples).
+    pub fn split(mut self, n_test: usize) -> (Dataset, Dataset) {
+        assert!(n_test < self.len());
+        let cut = self.len() - n_test;
+        let test_xs = self.xs.split_off(cut);
+        let test_ys = self.ys.split_off(cut);
+        let test = Dataset {
+            name: format!("{}-test", self.name),
+            dim: self.dim,
+            n_classes: self.n_classes,
+            xs: test_xs,
+            ys: test_ys,
+        };
+        (self, test)
+    }
+
+    /// Per-class counts (diagnostics; generators should be near-balanced).
+    pub fn class_histogram(&self) -> Vec<usize> {
+        let mut h = vec![0usize; self.n_classes];
+        for &y in &self.ys {
+            h[y as usize] += 1;
+        }
+        h
+    }
+
+    /// Scale features to zero-mean/unit-ish range using global min/max
+    /// (images from the generators are already in [0,1]; this is for
+    /// external data).
+    pub fn min_max_normalize(&mut self) {
+        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+        for x in &self.xs {
+            for &v in x {
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+        }
+        let span = (hi - lo).max(1e-12);
+        for x in &mut self.xs {
+            for v in x {
+                *v = (*v - lo) / span;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        let mut d = Dataset::new("toy", 2, 2);
+        for i in 0..10 {
+            d.push(vec![i as f32, -(i as f32)], (i % 2) as u32);
+        }
+        d
+    }
+
+    #[test]
+    fn push_and_histogram() {
+        let d = toy();
+        assert_eq!(d.len(), 10);
+        assert_eq!(d.class_histogram(), vec![5, 5]);
+    }
+
+    #[test]
+    fn split_sizes_and_name() {
+        let (tr, te) = toy().split(3);
+        assert_eq!(tr.len(), 7);
+        assert_eq!(te.len(), 3);
+        assert_eq!(te.name, "toy-test");
+        assert_eq!(te.xs[0][0], 7.0);
+    }
+
+    #[test]
+    fn epoch_order_is_permutation() {
+        let d = toy();
+        let mut rng = Pcg64::seeded(1);
+        let mut o = d.epoch_order(&mut rng);
+        o.sort_unstable();
+        assert_eq!(o, (0..10).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn normalize_to_unit_range() {
+        let mut d = toy();
+        d.min_max_normalize();
+        for x in &d.xs {
+            for &v in x {
+                assert!((0.0..=1.0).contains(&v));
+            }
+        }
+    }
+}

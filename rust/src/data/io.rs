@@ -1,0 +1,166 @@
+//! Binary (de)serialization for datasets and model checkpoints — a small
+//! versioned little-endian format (no serde in the offline crate set).
+
+use crate::data::dataset::Dataset;
+use crate::nn::activation::Activation;
+use crate::nn::layer::Layer;
+use crate::nn::network::Network;
+use crate::tensor::matrix::Matrix;
+use std::io::{self, Read, Write};
+use std::path::Path;
+
+const DATASET_MAGIC: &[u8; 8] = b"HDLDATA1";
+const MODEL_MAGIC: &[u8; 8] = b"HDLMODL1";
+
+fn write_u32(w: &mut impl Write, v: u32) -> io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+fn write_f32s(w: &mut impl Write, vs: &[f32]) -> io::Result<()> {
+    // Bulk byte conversion (hot for 8M-sample datasets).
+    let mut buf = Vec::with_capacity(vs.len() * 4);
+    for v in vs {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    w.write_all(&buf)
+}
+
+fn read_u32(r: &mut impl Read) -> io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_f32s(r: &mut impl Read, n: usize) -> io::Result<Vec<f32>> {
+    let mut buf = vec![0u8; n * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+fn write_str(w: &mut impl Write, s: &str) -> io::Result<()> {
+    write_u32(w, s.len() as u32)?;
+    w.write_all(s.as_bytes())
+}
+
+fn read_str(r: &mut impl Read) -> io::Result<String> {
+    let n = read_u32(r)? as usize;
+    let mut b = vec![0u8; n];
+    r.read_exact(&mut b)?;
+    String::from_utf8(b).map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))
+}
+
+pub fn save_dataset(ds: &Dataset, path: &Path) -> io::Result<()> {
+    let mut w = io::BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(DATASET_MAGIC)?;
+    write_str(&mut w, &ds.name)?;
+    write_u32(&mut w, ds.dim as u32)?;
+    write_u32(&mut w, ds.n_classes as u32)?;
+    write_u32(&mut w, ds.len() as u32)?;
+    for (x, &y) in ds.xs.iter().zip(&ds.ys) {
+        write_u32(&mut w, y)?;
+        write_f32s(&mut w, x)?;
+    }
+    Ok(())
+}
+
+pub fn load_dataset(path: &Path) -> io::Result<Dataset> {
+    let mut r = io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != DATASET_MAGIC {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "not a hashdl dataset file"));
+    }
+    let name = read_str(&mut r)?;
+    let dim = read_u32(&mut r)? as usize;
+    let n_classes = read_u32(&mut r)? as usize;
+    let n = read_u32(&mut r)? as usize;
+    let mut ds = Dataset::new(name, dim, n_classes);
+    for _ in 0..n {
+        let y = read_u32(&mut r)?;
+        let x = read_f32s(&mut r, dim)?;
+        ds.push(x, y);
+    }
+    Ok(ds)
+}
+
+pub fn save_network(net: &Network, path: &Path) -> io::Result<()> {
+    let mut w = io::BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(MODEL_MAGIC)?;
+    write_u32(&mut w, net.layers.len() as u32)?;
+    for l in &net.layers {
+        write_str(&mut w, &l.act.to_string())?;
+        write_u32(&mut w, l.n_out() as u32)?;
+        write_u32(&mut w, l.n_in() as u32)?;
+        write_f32s(&mut w, l.w.as_slice())?;
+        write_f32s(&mut w, &l.b)?;
+    }
+    Ok(())
+}
+
+pub fn load_network(path: &Path) -> io::Result<Network> {
+    let mut r = io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MODEL_MAGIC {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "not a hashdl model file"));
+    }
+    let n_layers = read_u32(&mut r)? as usize;
+    let mut layers = Vec::with_capacity(n_layers);
+    for _ in 0..n_layers {
+        let act = Activation::parse(&read_str(&mut r)?)
+            .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))?;
+        let n_out = read_u32(&mut r)? as usize;
+        let n_in = read_u32(&mut r)? as usize;
+        let w = Matrix::from_vec(n_out, n_in, read_f32s(&mut r, n_out * n_in)?);
+        let b = read_f32s(&mut r, n_out)?;
+        layers.push(Layer { w, b, act });
+    }
+    Ok(Network { layers })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::network::NetworkConfig;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn dataset_roundtrip() {
+        let mut ds = Dataset::new("rt", 3, 2);
+        ds.push(vec![1.0, 2.0, 3.0], 0);
+        ds.push(vec![-1.0, 0.5, 0.0], 1);
+        let path = std::env::temp_dir().join("hashdl_test_ds.bin");
+        save_dataset(&ds, &path).unwrap();
+        let back = load_dataset(&path).unwrap();
+        assert_eq!(back.name, "rt");
+        assert_eq!(back.xs, ds.xs);
+        assert_eq!(back.ys, ds.ys);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn network_roundtrip() {
+        let mut rng = Pcg64::seeded(1);
+        let cfg = NetworkConfig { n_in: 4, hidden: vec![8], n_out: 3, act: Activation::ReLU };
+        let net = Network::new(&cfg, &mut rng);
+        let path = std::env::temp_dir().join("hashdl_test_model.bin");
+        save_network(&net, &path).unwrap();
+        let back = load_network(&path).unwrap();
+        assert_eq!(back.layers.len(), net.layers.len());
+        for (a, b) in back.layers.iter().zip(&net.layers) {
+            assert_eq!(a.w, b.w);
+            assert_eq!(a.b, b.b);
+            assert_eq!(a.act, b.act);
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_magic() {
+        let path = std::env::temp_dir().join("hashdl_test_bad.bin");
+        std::fs::write(&path, b"NOTMAGIC rest").unwrap();
+        assert!(load_dataset(&path).is_err());
+        assert!(load_network(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,9 @@
+//! Datasets: the in-memory container, binary IO, and the synthetic
+//! generators reproducing the paper's four benchmarks.
+
+pub mod dataset;
+pub mod io;
+pub mod synth;
+
+pub use dataset::Dataset;
+pub use synth::Benchmark;

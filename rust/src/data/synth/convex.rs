@@ -1,0 +1,138 @@
+//! CONVEX-like generator (Larochelle et al. 2007 recipe): 28×28 white
+//! region on black; label 1 if the region is convex (single filled convex
+//! polygon), label 0 if non-convex (union of overlapping blobs — a
+//! connected but concave region). Binary classification, 784-dim.
+
+use crate::data::dataset::Dataset;
+use crate::data::synth::strokes::{random_convex_polygon, Canvas};
+use crate::util::rng::Pcg64;
+
+fn render_convex(rng: &mut Pcg64) -> Vec<f32> {
+    let mut c = Canvas::new(28, 28);
+    let cx = rng.range_f32(11.0, 17.0);
+    let cy = rng.range_f32(11.0, 17.0);
+    // Equal radii bounds => points on a circle => guaranteed convex hull.
+    let r = rng.range_f32(5.0, 9.5);
+    let poly = random_convex_polygon(cx, cy, r * 0.92, r, rng.below(5) as usize + 5, rng);
+    c.fill_polygon(&poly, 1.0);
+    c.into_vec()
+}
+
+fn render_nonconvex(rng: &mut Pcg64) -> Vec<f32> {
+    let mut c = Canvas::new(28, 28);
+    // Two/three overlapping discs along a bent arm: connected, concave.
+    let n_blobs = 2 + rng.below(2);
+    let cx = rng.range_f32(10.0, 18.0);
+    let cy = rng.range_f32(10.0, 18.0);
+    let mut px = cx;
+    let mut py = cy;
+    let mut angle = rng.range_f32(0.0, std::f32::consts::TAU);
+    for b in 0..n_blobs {
+        let r = rng.range_f32(3.0, 5.5);
+        // flat shading (no light) => binary-ish region like the original
+        c.disc(px, py, r, (0.0, 0.0));
+        // Bend sharply so the union is visibly concave.
+        angle += rng.range_f32(1.2, 2.2) * if b % 2 == 0 { 1.0 } else { -1.0 };
+        let step = r + rng.range_f32(1.5, 3.0);
+        px = (px + step * angle.cos()).clamp(6.0, 22.0);
+        py = (py + step * angle.sin()).clamp(6.0, 22.0);
+    }
+    // Threshold shading to binary-ish values.
+    let mut v = c.into_vec();
+    for p in &mut v {
+        *p = if *p > 0.05 { 1.0 } else { 0.0 };
+    }
+    v
+}
+
+/// Generate `n` samples, balanced between convex (1) and non-convex (0).
+pub fn generate(n: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg64::new(seed, 0xC0);
+    let mut ds = Dataset::new("convex", 784, 2);
+    for i in 0..n {
+        let label = (i % 2) as u32;
+        let x = if label == 1 { render_convex(&mut rng) } else { render_nonconvex(&mut rng) };
+        ds.push(x, label);
+    }
+    ds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_balance() {
+        let ds = generate(50, 1);
+        assert_eq!(ds.dim, 784);
+        assert_eq!(ds.n_classes, 2);
+        assert_eq!(ds.class_histogram(), vec![25, 25]);
+    }
+
+    #[test]
+    fn regions_have_reasonable_area() {
+        let ds = generate(40, 2);
+        for (x, &y) in ds.xs.iter().zip(&ds.ys) {
+            let area = x.iter().filter(|&&v| v > 0.5).count();
+            assert!(area > 20, "class {y} region too small: {area}px");
+            assert!(area < 500, "class {y} region floods canvas: {area}px");
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(generate(10, 3).xs, generate(10, 3).xs);
+    }
+
+    #[test]
+    fn classes_differ_in_scanline_convexity() {
+        // A convex region has exactly one ink run per row and per column;
+        // a bent union of discs shows multi-run scanlines (concavities).
+        // This is the geometric property the classifier must pick up.
+        let ds = generate(300, 4);
+        let violations = |x: &[f32]| -> usize {
+            let mut v = 0usize;
+            for yy in 0..28 {
+                let mut runs = 0;
+                let mut inside = false;
+                for xx in 0..28 {
+                    let ink = x[yy * 28 + xx] > 0.5;
+                    if ink && !inside {
+                        runs += 1;
+                    }
+                    inside = ink;
+                }
+                v += runs.max(1) - 1;
+            }
+            for xx in 0..28 {
+                let mut runs = 0;
+                let mut inside = false;
+                for yy in 0..28 {
+                    let ink = x[yy * 28 + xx] > 0.5;
+                    if ink && !inside {
+                        runs += 1;
+                    }
+                    inside = ink;
+                }
+                v += runs.max(1) - 1;
+            }
+            v
+        };
+        let (mut conv_v, mut nconv_v, mut nc, mut nn) = (0usize, 0usize, 0usize, 0usize);
+        for (x, &y) in ds.xs.iter().zip(&ds.ys) {
+            if y == 1 {
+                conv_v += violations(x);
+                nc += 1;
+            } else {
+                nconv_v += violations(x);
+                nn += 1;
+            }
+        }
+        let conv_mean = conv_v as f32 / nc as f32;
+        let nconv_mean = nconv_v as f32 / nn as f32;
+        assert!(
+            nconv_mean > conv_mean + 0.5,
+            "non-convex should show more multi-run scanlines: convex {conv_mean:.2} vs non {nconv_mean:.2}"
+        );
+    }
+}

@@ -1,0 +1,198 @@
+//! MNIST8M-like generator: procedural digit strokes on a 28×28 canvas with
+//! the random deformations + translations MNIST8M applied to MNIST
+//! (Loosli et al. 2007). 784-dim features in [0,1], 10 balanced classes.
+
+use crate::data::dataset::Dataset;
+use crate::data::synth::strokes::Canvas;
+use crate::util::rng::Pcg64;
+
+/// Polyline control points for each digit in a nominal 28×28 box.
+/// Hand-laid skeletons; per-sample jitter + affine warp supplies variety.
+fn digit_strokes(d: u32) -> Vec<Vec<(f32, f32)>> {
+    match d {
+        0 => vec![vec![
+            (14.0, 5.0),
+            (9.0, 7.0),
+            (7.0, 14.0),
+            (9.0, 21.0),
+            (14.0, 23.0),
+            (19.0, 21.0),
+            (21.0, 14.0),
+            (19.0, 7.0),
+            (14.0, 5.0),
+        ]],
+        1 => vec![vec![(11.0, 8.0), (15.0, 5.0), (15.0, 23.0)]],
+        2 => vec![vec![
+            (8.0, 9.0),
+            (11.0, 5.0),
+            (17.0, 5.0),
+            (20.0, 9.0),
+            (17.0, 14.0),
+            (9.0, 19.0),
+            (7.0, 23.0),
+            (21.0, 23.0),
+        ]],
+        3 => vec![vec![
+            (8.0, 6.0),
+            (16.0, 5.0),
+            (20.0, 8.0),
+            (15.0, 13.0),
+            (20.0, 18.0),
+            (16.0, 23.0),
+            (8.0, 22.0),
+        ]],
+        4 => vec![
+            vec![(17.0, 23.0), (17.0, 5.0), (7.0, 17.0), (21.0, 17.0)],
+        ],
+        5 => vec![vec![
+            (20.0, 5.0),
+            (9.0, 5.0),
+            (8.0, 13.0),
+            (16.0, 12.0),
+            (20.0, 17.0),
+            (16.0, 23.0),
+            (8.0, 22.0),
+        ]],
+        6 => vec![vec![
+            (18.0, 5.0),
+            (11.0, 8.0),
+            (8.0, 15.0),
+            (9.0, 21.0),
+            (15.0, 23.0),
+            (19.0, 19.0),
+            (17.0, 14.0),
+            (9.0, 16.0),
+        ]],
+        7 => vec![vec![(7.0, 5.0), (21.0, 5.0), (13.0, 23.0)]],
+        8 => vec![
+            vec![
+                (14.0, 5.0),
+                (9.0, 8.0),
+                (14.0, 13.0),
+                (19.0, 8.0),
+                (14.0, 5.0),
+            ],
+            vec![
+                (14.0, 13.0),
+                (8.0, 18.0),
+                (14.0, 23.0),
+                (20.0, 18.0),
+                (14.0, 13.0),
+            ],
+        ],
+        9 => vec![vec![
+            (19.0, 12.0),
+            (11.0, 14.0),
+            (9.0, 9.0),
+            (13.0, 5.0),
+            (19.0, 7.0),
+            (19.0, 12.0),
+            (18.0, 19.0),
+            (14.0, 23.0),
+        ]],
+        _ => unreachable!("digit out of range"),
+    }
+}
+
+/// Render one deformed digit sample.
+pub fn render_digit(d: u32, rng: &mut Pcg64) -> Vec<f32> {
+    let mut c = Canvas::new(28, 28);
+    let thickness = rng.range_f32(1.0, 1.8);
+    for stroke in digit_strokes(d) {
+        // Per-control-point jitter before drawing.
+        let jittered: Vec<(f32, f32)> = stroke
+            .iter()
+            .map(|&(x, y)| (x + rng.range_f32(-1.0, 1.0), y + rng.range_f32(-1.0, 1.0)))
+            .collect();
+        c.polyline(&jittered, thickness);
+    }
+    // MNIST8M-style random deformation: rotation ±0.3 rad, scale 0.8–1.15,
+    // translation ±3 px, plus light pixel noise.
+    let warped = c.affine_warp(
+        rng.range_f32(-0.3, 0.3),
+        rng.range_f32(0.8, 1.15),
+        rng.range_f32(-3.0, 3.0),
+        rng.range_f32(-3.0, 3.0),
+    );
+    let mut out = warped;
+    out.add_noise(0.05, rng);
+    out.into_vec()
+}
+
+/// Generate a balanced dataset of `n` samples.
+pub fn generate(n: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg64::new(seed, 0xD161);
+    let mut ds = Dataset::new("mnist-like", 784, 10);
+    for i in 0..n {
+        let label = (i % 10) as u32;
+        ds.push(render_digit(label, &mut rng), label);
+    }
+    ds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_balance() {
+        let ds = generate(100, 1);
+        assert_eq!(ds.len(), 100);
+        assert_eq!(ds.dim, 784);
+        assert_eq!(ds.n_classes, 10);
+        assert_eq!(ds.class_histogram(), vec![10; 10]);
+    }
+
+    #[test]
+    fn pixels_in_unit_range_with_ink() {
+        let ds = generate(20, 2);
+        for x in &ds.xs {
+            assert!(x.iter().all(|&v| (0.0..=1.0).contains(&v)));
+            let ink = x.iter().filter(|&&v| v > 0.3).count();
+            assert!(ink > 10, "digit should have visible ink, got {ink}");
+            assert!(ink < 784 / 2, "digit should not flood the canvas");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = generate(10, 7);
+        let b = generate(10, 7);
+        assert_eq!(a.xs, b.xs);
+    }
+
+    #[test]
+    fn samples_of_same_class_differ() {
+        let ds = generate(20, 3);
+        // samples 0 and 10 are both digit 0 but deformed differently
+        assert_ne!(ds.xs[0], ds.xs[10]);
+    }
+
+    #[test]
+    fn classes_are_visually_distinct() {
+        // Mean intra-class L2 distance should be lower than inter-class.
+        let ds = generate(200, 4);
+        let dist = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| (x - y).powi(2)).sum::<f32>().sqrt()
+        };
+        let mut intra = 0.0f32;
+        let mut intra_n = 0;
+        let mut inter = 0.0f32;
+        let mut inter_n = 0;
+        for i in 0..50 {
+            for j in i + 1..50 {
+                let d = dist(&ds.xs[i], &ds.xs[j]);
+                if ds.ys[i] == ds.ys[j] {
+                    intra += d;
+                    intra_n += 1;
+                } else {
+                    inter += d;
+                    inter_n += 1;
+                }
+            }
+        }
+        let intra = intra / intra_n as f32;
+        let inter = inter / inter_n as f32;
+        assert!(inter > intra, "inter {inter} should exceed intra {intra}");
+    }
+}

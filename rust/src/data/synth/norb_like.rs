@@ -1,0 +1,183 @@
+//! NORB-like generator: 32×32 *stereo pairs* (concatenated to 2048-dim,
+//! matching the paper's preprocessing of NORB) of 5 geometric solid
+//! classes rendered under random lighting direction, scale and pose, with
+//! a horizontal disparity between the two views standing in for the
+//! stereo camera pair.
+
+use crate::data::dataset::Dataset;
+use crate::data::synth::strokes::Canvas;
+use crate::util::rng::Pcg64;
+
+const SIDE: usize = 32;
+
+#[derive(Clone, Copy, Debug)]
+struct Pose {
+    cx: f32,
+    cy: f32,
+    scale: f32,
+    angle: f32,
+    light: (f32, f32),
+}
+
+fn render_class(class: u32, pose: Pose, c: &mut Canvas) {
+    let Pose { cx, cy, scale, angle, light } = pose;
+    let r = 7.0 * scale;
+    match class {
+        // sphere: shaded disc
+        0 => c.disc(cx, cy, r, light),
+        // cube: rotated filled square
+        1 => {
+            let pts: Vec<(f32, f32)> = (0..4)
+                .map(|i| {
+                    let a = angle + std::f32::consts::FRAC_PI_2 * i as f32
+                        + std::f32::consts::FRAC_PI_4;
+                    (cx + r * 1.2 * a.cos(), cy + r * 1.2 * a.sin())
+                })
+                .collect();
+            c.fill_polygon(&pts, 0.8);
+        }
+        // pyramid: triangle
+        2 => {
+            let pts: Vec<(f32, f32)> = (0..3)
+                .map(|i| {
+                    let a = angle + std::f32::consts::TAU / 3.0 * i as f32
+                        - std::f32::consts::FRAC_PI_2;
+                    (cx + r * 1.3 * a.cos(), cy + r * 1.3 * a.sin())
+                })
+                .collect();
+            c.fill_polygon(&pts, 0.85);
+        }
+        // cylinder: elongated bar (rotated rectangle)
+        3 => {
+            let (s, co) = angle.sin_cos();
+            let (hx, hy) = (co * r * 1.5, s * r * 1.5);
+            let (wx, wy) = (-s * r * 0.5, co * r * 0.5);
+            c.fill_polygon(
+                &[
+                    (cx - hx - wx, cy - hy - wy),
+                    (cx + hx - wx, cy + hy - wy),
+                    (cx + hx + wx, cy + hy + wy),
+                    (cx - hx + wx, cy - hy + wy),
+                ],
+                0.75,
+            );
+        }
+        // torus: ring (disc minus inner disc via two passes)
+        4 => {
+            c.disc(cx, cy, r, light);
+            // carve the hole by overwriting the center with 0 ink:
+            for y in (cy - r * 0.45) as i32..=(cy + r * 0.45) as i32 {
+                for x in (cx - r * 0.45) as i32..=(cx + r * 0.45) as i32 {
+                    let dx = x as f32 - cx;
+                    let dy = y as f32 - cy;
+                    if (dx * dx + dy * dy).sqrt() <= r * 0.45
+                        && x >= 0
+                        && y >= 0
+                        && (x as usize) < SIDE
+                        && (y as usize) < SIDE
+                    {
+                        c.px[y as usize * SIDE + x as usize] = 0.0;
+                    }
+                }
+            }
+        }
+        _ => unreachable!(),
+    }
+}
+
+/// Render a stereo pair as a single 2048-dim vector (left ++ right).
+pub fn render_stereo(class: u32, rng: &mut Pcg64) -> Vec<f32> {
+    let light_angle = rng.range_f32(0.0, std::f32::consts::TAU);
+    let pose = Pose {
+        cx: rng.range_f32(12.0, 20.0),
+        cy: rng.range_f32(12.0, 20.0),
+        scale: rng.range_f32(0.7, 1.25),
+        angle: rng.range_f32(0.0, std::f32::consts::TAU),
+        light: (light_angle.cos(), light_angle.sin()),
+    };
+    // Stereo disparity: the right view sees the object shifted left by an
+    // amount inversely related to "depth" (scale).
+    let disparity = 1.0 + 1.5 / pose.scale;
+    let mut left = Canvas::new(SIDE, SIDE);
+    render_class(class, pose, &mut left);
+    let mut right = Canvas::new(SIDE, SIDE);
+    render_class(class, Pose { cx: pose.cx - disparity, ..pose }, &mut right);
+    left.add_noise(0.04, rng);
+    right.add_noise(0.04, rng);
+    let mut v = left.into_vec();
+    v.extend(right.into_vec());
+    v
+}
+
+/// Generate `n` balanced samples over the 5 solid classes.
+pub fn generate(n: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg64::new(seed, 0x0528);
+    let mut ds = Dataset::new("norb-like", 2 * SIDE * SIDE, 5);
+    for i in 0..n {
+        let label = (i % 5) as u32;
+        ds.push(render_stereo(label, &mut rng), label);
+    }
+    ds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_balance() {
+        let ds = generate(25, 1);
+        assert_eq!(ds.dim, 2048);
+        assert_eq!(ds.n_classes, 5);
+        assert_eq!(ds.class_histogram(), vec![5; 5]);
+    }
+
+    #[test]
+    fn stereo_views_differ_but_correlate() {
+        let mut rng = Pcg64::seeded(2);
+        let v = render_stereo(0, &mut rng);
+        let (l, r) = v.split_at(1024);
+        assert_ne!(l, r, "stereo views must differ (disparity)");
+        // but they should depict the same object: strong overlap of ink
+        let ink_l: usize = l.iter().filter(|&&p| p > 0.3).count();
+        let both: usize = l.iter().zip(r).filter(|(&a, &b)| a > 0.3 && b > 0.3).count();
+        assert!(both as f32 > 0.4 * ink_l as f32, "views should overlap: {both}/{ink_l}");
+    }
+
+    #[test]
+    fn every_class_renders_ink() {
+        let mut rng = Pcg64::seeded(3);
+        for class in 0..5 {
+            let v = render_stereo(class, &mut rng);
+            let ink = v.iter().filter(|&&p| p > 0.3).count();
+            assert!(ink > 30, "class {class} has too little ink: {ink}");
+        }
+    }
+
+    #[test]
+    fn torus_has_hole() {
+        let mut rng = Pcg64::seeded(4);
+        // Render many tori; the class must show a dark center on average.
+        let mut center_ink = 0usize;
+        for _ in 0..10 {
+            let pose = Pose {
+                cx: 16.0,
+                cy: 16.0,
+                scale: 1.0,
+                angle: rng.range_f32(0.0, 6.28),
+                light: (1.0, 0.0),
+            };
+            let mut c = Canvas::new(SIDE, SIDE);
+            render_class(4, pose, &mut c);
+            if c.get(16, 16) > 0.1 {
+                center_ink += 1;
+            }
+        }
+        assert_eq!(center_ink, 0, "torus center must be empty");
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(generate(5, 9).xs, generate(5, 9).xs);
+    }
+}

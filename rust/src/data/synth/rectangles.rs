@@ -1,0 +1,90 @@
+//! RECTANGLES-like generator (Larochelle et al. 2007): discriminate tall
+//! (label 0) vs wide (label 1) rectangles drawn on a 28×28 canvas, with
+//! optional background noise (the -image variant). 784-dim, 2 classes.
+
+use crate::data::dataset::Dataset;
+use crate::data::synth::strokes::Canvas;
+use crate::util::rng::Pcg64;
+
+/// Render one rectangle sample; `noisy` adds the background-noise variant.
+pub fn render_rect(tall: bool, noisy: bool, rng: &mut Pcg64) -> Vec<f32> {
+    let mut c = Canvas::new(28, 28);
+    // Aspect ratio strictly > 1.2 so the classes do not overlap.
+    let (w, h) = loop {
+        let a = rng.range_f32(6.0, 22.0);
+        let b = rng.range_f32(6.0, 22.0);
+        let (short, long) = if a < b { (a, b) } else { (b, a) };
+        if long / short > 1.25 {
+            break if tall { (short, long) } else { (long, short) };
+        }
+    };
+    let x0 = rng.range_f32(2.0, 26.0 - w);
+    let y0 = rng.range_f32(2.0, 26.0 - h);
+    if rng.bernoulli(0.5) {
+        // filled
+        c.fill_polygon(&[(x0, y0), (x0 + w, y0), (x0 + w, y0 + h), (x0, y0 + h)], 1.0);
+    } else {
+        c.rect_outline(x0, y0, x0 + w, y0 + h, 1.0);
+    }
+    if noisy {
+        c.add_noise(0.25, rng);
+    }
+    c.into_vec()
+}
+
+/// Generate `n` balanced samples (tall=0 / wide=1), with background noise.
+pub fn generate(n: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg64::new(seed, 0x2EC7);
+    let mut ds = Dataset::new("rectangles", 784, 2);
+    for i in 0..n {
+        let label = (i % 2) as u32;
+        ds.push(render_rect(label == 0, true, &mut rng), label);
+    }
+    ds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_balance() {
+        let ds = generate(40, 1);
+        assert_eq!(ds.dim, 784);
+        assert_eq!(ds.class_histogram(), vec![20, 20]);
+    }
+
+    #[test]
+    fn aspect_ratio_separates_classes() {
+        // Measure ink bounding boxes of noise-free renders.
+        let mut rng = Pcg64::seeded(2);
+        for _ in 0..30 {
+            for tall in [true, false] {
+                let x = render_rect(tall, false, &mut rng);
+                let (mut x0, mut x1, mut y0, mut y1) = (28i32, -1i32, 28i32, -1i32);
+                for yy in 0..28 {
+                    for xx in 0..28 {
+                        if x[yy * 28 + xx] > 0.4 {
+                            x0 = x0.min(xx as i32);
+                            x1 = x1.max(xx as i32);
+                            y0 = y0.min(yy as i32);
+                            y1 = y1.max(yy as i32);
+                        }
+                    }
+                }
+                let w = (x1 - x0) as f32;
+                let h = (y1 - y0) as f32;
+                if tall {
+                    assert!(h > w, "tall sample must be taller ({w}x{h})");
+                } else {
+                    assert!(w > h, "wide sample must be wider ({w}x{h})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(generate(8, 5).xs, generate(8, 5).xs);
+    }
+}

@@ -1,0 +1,295 @@
+//! Shared raster substrate for the synthetic dataset generators: a small
+//! grayscale canvas with line/shape drawing, polygon fill, affine warps
+//! and noise. This re-implements the generative recipes behind the paper's
+//! benchmark datasets (MNIST-deformation, CONVEX, RECTANGLES are all
+//! procedurally constructed images — Larochelle et al. 2007).
+
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Debug)]
+pub struct Canvas {
+    pub w: usize,
+    pub h: usize,
+    pub px: Vec<f32>,
+}
+
+impl Canvas {
+    pub fn new(w: usize, h: usize) -> Self {
+        Canvas { w, h, px: vec![0.0; w * h] }
+    }
+
+    #[inline]
+    pub fn get(&self, x: i32, y: i32) -> f32 {
+        if x < 0 || y < 0 || x >= self.w as i32 || y >= self.h as i32 {
+            0.0
+        } else {
+            self.px[y as usize * self.w + x as usize]
+        }
+    }
+
+    #[inline]
+    pub fn set(&mut self, x: i32, y: i32, v: f32) {
+        if x >= 0 && y >= 0 && x < self.w as i32 && y < self.h as i32 {
+            let p = &mut self.px[y as usize * self.w + x as usize];
+            *p = p.max(v);
+        }
+    }
+
+    /// Thick anti-alias-free line segment (distance-to-segment stamping).
+    pub fn line(&mut self, x0: f32, y0: f32, x1: f32, y1: f32, thickness: f32) {
+        let minx = (x0.min(x1) - thickness).floor() as i32;
+        let maxx = (x0.max(x1) + thickness).ceil() as i32;
+        let miny = (y0.min(y1) - thickness).floor() as i32;
+        let maxy = (y0.max(y1) + thickness).ceil() as i32;
+        let dx = x1 - x0;
+        let dy = y1 - y0;
+        let len_sq = (dx * dx + dy * dy).max(1e-9);
+        for y in miny..=maxy {
+            for x in minx..=maxx {
+                let t = (((x as f32 - x0) * dx + (y as f32 - y0) * dy) / len_sq).clamp(0.0, 1.0);
+                let px = x0 + t * dx;
+                let py = y0 + t * dy;
+                let d = ((x as f32 - px).powi(2) + (y as f32 - py).powi(2)).sqrt();
+                if d <= thickness {
+                    self.set(x, y, (1.0 - d / thickness * 0.4).clamp(0.0, 1.0));
+                }
+            }
+        }
+    }
+
+    /// Connected polyline through control points.
+    pub fn polyline(&mut self, pts: &[(f32, f32)], thickness: f32) {
+        for seg in pts.windows(2) {
+            self.line(seg[0].0, seg[0].1, seg[1].0, seg[1].1, thickness);
+        }
+    }
+
+    /// Axis-aligned rectangle outline.
+    pub fn rect_outline(&mut self, x0: f32, y0: f32, x1: f32, y1: f32, thickness: f32) {
+        self.line(x0, y0, x1, y0, thickness);
+        self.line(x1, y0, x1, y1, thickness);
+        self.line(x1, y1, x0, y1, thickness);
+        self.line(x0, y1, x0, y0, thickness);
+    }
+
+    /// Filled convex-or-not polygon via even-odd scanline fill.
+    pub fn fill_polygon(&mut self, pts: &[(f32, f32)], value: f32) {
+        if pts.len() < 3 {
+            return;
+        }
+        for y in 0..self.h as i32 {
+            let fy = y as f32 + 0.5;
+            let mut xs: Vec<f32> = Vec::new();
+            for i in 0..pts.len() {
+                let (x0, y0) = pts[i];
+                let (x1, y1) = pts[(i + 1) % pts.len()];
+                if (y0 <= fy && fy < y1) || (y1 <= fy && fy < y0) {
+                    xs.push(x0 + (fy - y0) / (y1 - y0) * (x1 - x0));
+                }
+            }
+            xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for pair in xs.chunks(2) {
+                if let [xa, xb] = pair {
+                    for x in xa.round() as i32..=xb.round() as i32 {
+                        self.set(x, y, value);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Filled disc with optional directional shading (for NORB-like solids).
+    pub fn disc(&mut self, cx: f32, cy: f32, r: f32, light: (f32, f32)) {
+        for y in (cy - r).floor() as i32..=(cy + r).ceil() as i32 {
+            for x in (cx - r).floor() as i32..=(cx + r).ceil() as i32 {
+                let dx = x as f32 - cx;
+                let dy = y as f32 - cy;
+                let d = (dx * dx + dy * dy).sqrt();
+                if d <= r {
+                    // Lambert-ish shading from the light direction.
+                    let shade = 0.55 + 0.45 * ((dx * light.0 + dy * light.1) / r).clamp(-1.0, 1.0);
+                    self.set(x, y, shade.clamp(0.05, 1.0));
+                }
+            }
+        }
+    }
+
+    /// Apply an affine warp (rotation θ, scale s, translation) about the
+    /// canvas center, sampling the source bilinearly. Returns a new canvas
+    /// — the deformation MNIST8M applies to MNIST digits.
+    pub fn affine_warp(&self, theta: f32, scale: f32, tx: f32, ty: f32) -> Canvas {
+        let mut out = Canvas::new(self.w, self.h);
+        let (cx, cy) = (self.w as f32 / 2.0, self.h as f32 / 2.0);
+        let (sin, cos) = theta.sin_cos();
+        let inv_s = 1.0 / scale.max(1e-6);
+        for y in 0..self.h as i32 {
+            for x in 0..self.w as i32 {
+                // Inverse map destination -> source.
+                let dx = (x as f32 - cx - tx) * inv_s;
+                let dy = (y as f32 - cy - ty) * inv_s;
+                let sx = cos * dx + sin * dy + cx;
+                let sy = -sin * dx + cos * dy + cy;
+                out.px[y as usize * self.w + x as usize] = self.bilinear(sx, sy);
+            }
+        }
+        out
+    }
+
+    fn bilinear(&self, x: f32, y: f32) -> f32 {
+        let x0 = x.floor();
+        let y0 = y.floor();
+        let fx = x - x0;
+        let fy = y - y0;
+        let (x0, y0) = (x0 as i32, y0 as i32);
+        let v00 = self.get(x0, y0);
+        let v10 = self.get(x0 + 1, y0);
+        let v01 = self.get(x0, y0 + 1);
+        let v11 = self.get(x0 + 1, y0 + 1);
+        v00 * (1.0 - fx) * (1.0 - fy)
+            + v10 * fx * (1.0 - fy)
+            + v01 * (1.0 - fx) * fy
+            + v11 * fx * fy
+    }
+
+    /// Additive uniform pixel noise, clamped to [0, 1].
+    pub fn add_noise(&mut self, amplitude: f32, rng: &mut Pcg64) {
+        for p in &mut self.px {
+            *p = (*p + rng.range_f32(-amplitude, amplitude)).clamp(0.0, 1.0);
+        }
+    }
+
+    /// Fraction of pixels above a threshold (test helper / stats).
+    pub fn ink_fraction(&self, thr: f32) -> f32 {
+        self.px.iter().filter(|&&v| v > thr).count() as f32 / self.px.len() as f32
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.px
+    }
+}
+
+/// Random convex polygon: sorted-by-angle points on a jittered circle.
+pub fn random_convex_polygon(
+    cx: f32,
+    cy: f32,
+    r_min: f32,
+    r_max: f32,
+    n_pts: usize,
+    rng: &mut Pcg64,
+) -> Vec<(f32, f32)> {
+    let mut angles: Vec<f32> =
+        (0..n_pts).map(|_| rng.range_f32(0.0, std::f32::consts::TAU)).collect();
+    angles.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    angles
+        .into_iter()
+        .map(|a| {
+            let r = rng.range_f32(r_min, r_max);
+            (cx + r * a.cos(), cy + r * a.sin())
+        })
+        .collect()
+}
+
+/// Check convexity of a polygon (all cross products same sign) — used by
+/// tests and by the CONVEX generator's rejection step.
+pub fn is_convex(pts: &[(f32, f32)]) -> bool {
+    let n = pts.len();
+    if n < 4 {
+        return true;
+    }
+    let mut sign = 0i32;
+    for i in 0..n {
+        let (ax, ay) = pts[i];
+        let (bx, by) = pts[(i + 1) % n];
+        let (cx, cy) = pts[(i + 2) % n];
+        let cross = (bx - ax) * (cy - by) - (by - ay) * (cx - bx);
+        if cross.abs() > 1e-6 {
+            let s = if cross > 0.0 { 1 } else { -1 };
+            if sign == 0 {
+                sign = s;
+            } else if s != sign {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_leaves_ink() {
+        let mut c = Canvas::new(28, 28);
+        c.line(4.0, 4.0, 24.0, 24.0, 1.2);
+        assert!(c.ink_fraction(0.1) > 0.02);
+        assert!(c.ink_fraction(0.1) < 0.5);
+    }
+
+    #[test]
+    fn set_clamps_out_of_bounds() {
+        let mut c = Canvas::new(8, 8);
+        c.set(-1, 3, 1.0);
+        c.set(100, 3, 1.0);
+        assert_eq!(c.px.iter().sum::<f32>(), 0.0);
+    }
+
+    #[test]
+    fn fill_polygon_fills_interior() {
+        let mut c = Canvas::new(28, 28);
+        c.fill_polygon(&[(5.0, 5.0), (22.0, 5.0), (22.0, 22.0), (5.0, 22.0)], 1.0);
+        assert!(c.get(14, 14) > 0.9, "center filled");
+        assert_eq!(c.get(1, 1), 0.0, "outside empty");
+        let frac = c.ink_fraction(0.5);
+        assert!((0.3..0.55).contains(&frac), "square fill fraction {frac}");
+    }
+
+    #[test]
+    fn warp_identity_preserves_image() {
+        let mut c = Canvas::new(16, 16);
+        c.fill_polygon(&[(4.0, 4.0), (12.0, 4.0), (12.0, 12.0), (4.0, 12.0)], 1.0);
+        let w = c.affine_warp(0.0, 1.0, 0.0, 0.0);
+        let diff: f32 = c.px.iter().zip(&w.px).map(|(a, b)| (a - b).abs()).sum();
+        assert!(diff < 1.0, "identity warp should be near-exact, diff {diff}");
+    }
+
+    #[test]
+    fn warp_translation_moves_ink() {
+        let mut c = Canvas::new(16, 16);
+        c.set(8, 8, 1.0);
+        let w = c.affine_warp(0.0, 1.0, 3.0, 0.0);
+        assert!(w.get(11, 8) > 0.5);
+        assert!(w.get(8, 8) < 0.5);
+    }
+
+    #[test]
+    fn convex_polygon_generator_is_convex() {
+        let mut rng = Pcg64::seeded(1);
+        for _ in 0..50 {
+            let p = random_convex_polygon(14.0, 14.0, 4.0, 9.0, 8, &mut rng);
+            // Points on a star-shaped radial sample sorted by angle are not
+            // always convex; the generator is used with a rejection loop.
+            // Here we only check the helper agrees with a known square.
+            assert_eq!(p.len(), 8);
+        }
+        assert!(is_convex(&[(0.0, 0.0), (1.0, 0.0), (1.0, 1.0), (0.0, 1.0)]));
+        assert!(!is_convex(&[(0.0, 0.0), (2.0, 0.0), (1.0, 0.5), (2.0, 2.0), (0.0, 2.0)]));
+    }
+
+    #[test]
+    fn disc_shading_varies_with_light() {
+        let mut c = Canvas::new(32, 32);
+        c.disc(16.0, 16.0, 10.0, (1.0, 0.0));
+        let left = c.get(8, 16);
+        let right = c.get(24, 16);
+        assert!(right > left, "lit side brighter: {right} vs {left}");
+    }
+
+    #[test]
+    fn noise_stays_in_range() {
+        let mut c = Canvas::new(8, 8);
+        let mut rng = Pcg64::seeded(2);
+        c.add_noise(0.3, &mut rng);
+        assert!(c.px.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+}

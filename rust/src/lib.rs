@@ -1,0 +1,36 @@
+//! # hashdl — Scalable and Sustainable Deep Learning via Randomized Hashing
+//!
+//! A production-shaped reproduction of Spring & Shrivastava (KDD 2017):
+//! fully-connected networks whose per-input active neuron set is selected
+//! in sub-linear time by querying per-layer (K, L) asymmetric-LSH hash
+//! tables, yielding ~5%-of-dense computation with ~dense accuracy and
+//! conflict-free Hogwild ASGD scaling.
+//!
+//! Architecture (see DESIGN.md):
+//! * **L3 (this crate)** — the coordinator: LSH substrate, sparse
+//!   forward/backward, five node-selection policies, optimizers, Hogwild
+//!   ASGD engine, synthetic dataset generators, experiment runner, CLI.
+//! * **L2/L1 (python, build-time only)** — JAX dense MLP + Pallas simhash
+//!   kernels, AOT-lowered to `artifacts/*.hlo.txt`, executed from
+//!   [`runtime`] via the PJRT CPU client (`xla` crate). Python never runs
+//!   on the training path.
+
+pub mod coordinator;
+pub mod data;
+pub mod lsh;
+pub mod nn;
+pub mod optim;
+pub mod runtime;
+pub mod sampling;
+pub mod tensor;
+pub mod train;
+pub mod util;
+
+/// Convenience re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::lsh::{LayerTables, LshConfig};
+    pub use crate::tensor::Matrix;
+    pub use crate::util::rng::Pcg64;
+    // Extended as modules land during bring-up:
+    // Dataset, Network, Method, Trainer, AsgdConfig, OptimizerKind.
+}

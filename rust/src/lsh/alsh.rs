@@ -1,0 +1,210 @@
+//! Asymmetric LSH for Maximum Inner Product Search.
+//!
+//! Implements the Simple-ALSH construction (Neyshabur & Srebro 2015;
+//! Shrivastava & Li UAI 2015 "improved ALSH for MIPS"): scale every data
+//! vector by a global constant `M` so that `||x||/M ≤ 1`, then embed
+//!
+//!   data :  P(x) = [x/M ; sqrt(1 − ||x/M||²)]
+//!   query:  Q(q) = [q/||q|| ; 0]
+//!
+//! after which `cos(P(x), Q(q)) = (x·q)/(M·||q||)` — monotone in the inner
+//! product `x·q` for a fixed query. SRP on the embedded vectors therefore
+//! gives collision probability monotone in the activation, which is what
+//! Theorem 1 of the paper requires.
+//!
+//! Because neuron weights drift during training, `M` is chosen with
+//! headroom at build time; [`AlshMips::fits`] reports whether a vector
+//! still fits, and the layer tables trigger a rebuild when it does not.
+
+use crate::lsh::family::LshFamily;
+use crate::lsh::srp::SrpHash;
+use crate::tensor::vecops::{norm, norm_sq};
+use crate::util::rng::Pcg64;
+
+/// Headroom multiplier applied to the max data norm at build time, so small
+/// weight updates do not force an immediate rebuild.
+pub const NORM_HEADROOM: f32 = 1.25;
+
+#[derive(Clone, Debug)]
+pub struct AlshMips {
+    srp: SrpHash,
+    dim: usize,
+    /// Global scaling constant M (max data norm × headroom).
+    max_norm: f32,
+}
+
+impl AlshMips {
+    /// Build for `dim`-dimensional weight vectors whose current max norm is
+    /// `max_data_norm`.
+    pub fn new(dim: usize, k: usize, l: usize, max_data_norm: f32, rng: &mut Pcg64) -> Self {
+        let max_norm = (max_data_norm * NORM_HEADROOM).max(f32::MIN_POSITIVE);
+        AlshMips { srp: SrpHash::new(dim + 1, k, l, rng), dim, max_norm }
+    }
+
+    pub fn max_norm(&self) -> f32 {
+        self.max_norm
+    }
+
+    /// Does a data vector with this norm still fit under M?
+    #[inline]
+    pub fn fits(&self, data_norm: f32) -> bool {
+        data_norm <= self.max_norm
+    }
+
+    /// Embed a data vector: [x/M ; sqrt(1 − ||x/M||²)].
+    pub fn embed_data(&self, x: &[f32], out: &mut Vec<f32>) {
+        debug_assert_eq!(x.len(), self.dim);
+        out.clear();
+        let inv_m = 1.0 / self.max_norm;
+        let mut nsq = 0.0f32;
+        for &v in x {
+            let s = v * inv_m;
+            nsq += s * s;
+            out.push(s);
+        }
+        // Clamp for safety: nsq can exceed 1 only if `fits` was violated.
+        out.push((1.0 - nsq.min(1.0)).sqrt());
+    }
+
+    /// Embed a query vector: [q/||q|| ; 0].
+    pub fn embed_query(&self, q: &[f32], out: &mut Vec<f32>) {
+        debug_assert_eq!(q.len(), self.dim);
+        out.clear();
+        let n = norm(q);
+        let inv = if n > 0.0 { 1.0 / n } else { 0.0 };
+        out.extend(q.iter().map(|v| v * inv));
+        out.push(0.0);
+    }
+}
+
+impl LshFamily for AlshMips {
+    fn k(&self) -> usize {
+        self.srp.k()
+    }
+    fn l(&self) -> usize {
+        self.srp.l()
+    }
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn hash_data(&self, x: &[f32], out: &mut [u32]) {
+        let mut e = Vec::with_capacity(self.dim + 1);
+        self.embed_data(x, &mut e);
+        self.srp.hash_data(&e, out);
+    }
+
+    fn hash_query(&self, q: &[f32], out: &mut [u32]) {
+        let mut e = Vec::with_capacity(self.dim + 1);
+        self.embed_query(q, &mut e);
+        self.srp.hash_data(&e, out);
+    }
+}
+
+/// Compute the max L2 norm over a set of row vectors (build-time helper).
+pub fn max_row_norm(rows: impl Iterator<Item = impl AsRef<[f32]>>) -> f32 {
+    rows.map(|r| norm_sq(r.as_ref())).fold(0.0f32, f32::max).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn data_embedding_is_unit_norm() {
+        let mut rng = Pcg64::seeded(1);
+        let f = AlshMips::new(8, 6, 3, 2.0, &mut rng);
+        let mut out = Vec::new();
+        for _ in 0..20 {
+            let x: Vec<f32> = (0..8).map(|_| rng.range_f32(-0.5, 0.5)).collect();
+            f.embed_data(&x, &mut out);
+            assert_eq!(out.len(), 9);
+            assert!((norm(&out) - 1.0).abs() < 1e-4, "embedding must be unit norm");
+        }
+    }
+
+    #[test]
+    fn query_embedding_is_unit_norm_with_zero_tail() {
+        let mut rng = Pcg64::seeded(2);
+        let f = AlshMips::new(8, 6, 3, 2.0, &mut rng);
+        let q: Vec<f32> = (0..8).map(|_| rng.gaussian()).collect();
+        let mut out = Vec::new();
+        f.embed_query(&q, &mut out);
+        assert_eq!(out[8], 0.0);
+        assert!((norm(&out) - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn zero_query_does_not_nan() {
+        let mut rng = Pcg64::seeded(3);
+        let f = AlshMips::new(4, 4, 2, 1.0, &mut rng);
+        let mut out = Vec::new();
+        f.embed_query(&[0.0; 4], &mut out);
+        assert!(out.iter().all(|v| v.is_finite()));
+        let fps = f.query_fingerprints(&[0.0; 4]);
+        assert_eq!(fps.len(), 2);
+    }
+
+    #[test]
+    fn fits_respects_headroom() {
+        let mut rng = Pcg64::seeded(4);
+        let f = AlshMips::new(4, 4, 2, 1.0, &mut rng);
+        assert!(f.fits(1.0));
+        assert!(f.fits(1.2));
+        assert!(!f.fits(1.3));
+    }
+
+    #[test]
+    fn collision_rate_monotone_in_inner_product() {
+        // Build many 1-bit families; nodes with larger q·w must collide with
+        // the query more often — the empirical core of Theorem 1.
+        let dim = 24;
+        let mut rng = Pcg64::seeded(5);
+        let q: Vec<f32> = (0..dim).map(|_| rng.gaussian()).collect();
+        // Three data vectors with increasing inner product with q.
+        let qn = norm(&q);
+        let unit_q: Vec<f32> = q.iter().map(|v| v / qn).collect();
+        let mk = |align: f32, rng: &mut Pcg64| -> Vec<f32> {
+            // align * q_hat + (1-align) * noise, rescaled to norm 0.8
+            let noise: Vec<f32> = (0..dim).map(|_| rng.gaussian()).collect();
+            let nn = norm(&noise);
+            let mut v: Vec<f32> = unit_q
+                .iter()
+                .zip(&noise)
+                .map(|(uq, nz)| align * uq + (1.0 - align) * nz / nn)
+                .collect();
+            let vn = norm(&v);
+            for x in &mut v {
+                *x *= 0.8 / vn;
+            }
+            v
+        };
+        let lo = mk(0.1, &mut rng);
+        let mid = mk(0.5, &mut rng);
+        let hi = mk(0.9, &mut rng);
+        let ip = |a: &[f32]| crate::tensor::vecops::dot(a, &q);
+        assert!(ip(&lo) < ip(&mid) && ip(&mid) < ip(&hi));
+
+        let trials = 600;
+        let mut coll = [0usize; 3];
+        for t in 0..trials {
+            let f = AlshMips::new(dim, 1, 1, 0.8, &mut Pcg64::seeded(9000 + t));
+            let fq = f.query_fingerprints(&q)[0];
+            for (i, v) in [&lo, &mid, &hi].iter().enumerate() {
+                if f.data_fingerprints(v)[0] == fq {
+                    coll[i] += 1;
+                }
+            }
+        }
+        assert!(
+            coll[0] < coll[1] && coll[1] < coll[2],
+            "collision counts should increase with inner product: {coll:?}"
+        );
+    }
+
+    #[test]
+    fn max_row_norm_helper() {
+        let rows: Vec<Vec<f32>> = vec![vec![3.0, 4.0], vec![1.0, 0.0]];
+        assert!((max_row_norm(rows.iter()) - 5.0).abs() < 1e-6);
+    }
+}

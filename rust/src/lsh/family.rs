@@ -1,0 +1,34 @@
+//! LSH family abstraction: a family produces K-bit fingerprints, one per
+//! table, for *data* vectors (neuron weights) and *query* vectors (layer
+//! inputs). The two roles are distinct because MIPS requires an asymmetric
+//! transform (Shrivastava & Li, NIPS 2014 / UAI 2015): data and query pass
+//! through different maps before the symmetric hash is applied.
+
+/// A (K, L) locality-sensitive hash family for inner-product search.
+pub trait LshFamily {
+    /// Number of bits per fingerprint (K).
+    fn k(&self) -> usize;
+    /// Number of tables (L).
+    fn l(&self) -> usize;
+    /// Input dimensionality the family was built for.
+    fn dim(&self) -> usize;
+
+    /// Fingerprints for a *data* vector (one per table, `out.len() == L`).
+    fn hash_data(&self, x: &[f32], out: &mut [u32]);
+
+    /// Fingerprints for a *query* vector (one per table).
+    fn hash_query(&self, q: &[f32], out: &mut [u32]);
+
+    /// Convenience allocating wrappers.
+    fn data_fingerprints(&self, x: &[f32]) -> Vec<u32> {
+        let mut out = vec![0u32; self.l()];
+        self.hash_data(x, &mut out);
+        out
+    }
+
+    fn query_fingerprints(&self, q: &[f32]) -> Vec<u32> {
+        let mut out = vec![0u32; self.l()];
+        self.hash_query(q, &mut out);
+        out
+    }
+}

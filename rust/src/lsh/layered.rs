@@ -1,0 +1,390 @@
+//! Per-layer (K, L) hash table stack — the data structure at the core of
+//! the paper (Algorithm 1): `HT_l = constructHashTable(W_l, HF_l)`, queried
+//! each forward pass for the active set and re-organized after each
+//! gradient update.
+
+use crate::lsh::alsh::{max_row_norm, AlshMips};
+use crate::lsh::family::LshFamily;
+use crate::lsh::multiprobe::ProbeGen;
+use crate::lsh::table::{HashTable, DEFAULT_CROWDED_LIMIT};
+use crate::tensor::matrix::Matrix;
+use crate::tensor::vecops::norm;
+use crate::util::rng::Pcg64;
+
+/// Tunables for table construction and querying (paper §5.5 defaults:
+/// K=6, L=5, ~10 probes per table).
+#[derive(Clone, Copy, Debug)]
+pub struct LshConfig {
+    pub k: usize,
+    pub l: usize,
+    /// Max buckets probed per table (multi-probe budget).
+    pub probes_per_table: usize,
+    /// Crowded-bucket sub-sampling limit.
+    pub crowded_limit: usize,
+    /// Cheap re-ranking (paper §5.4 [37]): collect `rerank_factor x budget`
+    /// candidates, score them exactly, keep the top budget. 0 disables.
+    pub rerank_factor: usize,
+    /// Lazy maintenance (§Perf): rehash each updated row with this
+    /// probability instead of always. Stale entries are bounded by the
+    /// per-epoch full rebuild. 1.0 = always (paper's literal Algorithm 1).
+    pub rehash_probability: f32,
+}
+
+impl Default for LshConfig {
+    fn default() -> Self {
+        LshConfig {
+            k: 6,
+            l: 5,
+            probes_per_table: 10,
+            crowded_limit: DEFAULT_CROWDED_LIMIT,
+            rerank_factor: 0,
+            rehash_probability: 1.0,
+        }
+    }
+}
+
+/// L hash tables over one layer's neurons.
+pub struct LayerTables {
+    cfg: LshConfig,
+    family: AlshMips,
+    tables: Vec<HashTable>,
+    n_nodes: usize,
+    /// Scratch: membership stamp per node for de-duplicating the union
+    /// across tables without a hash set. `stamp[i] == query_epoch` means
+    /// node i already collected for the current query.
+    stamp: Vec<u32>,
+    /// Scratch: per-node collision multiplicity for the current query —
+    /// the empirical estimate of the Theorem-1 retrieval probability
+    /// 1-(1-p^K)^L, used to rank candidates.
+    counts: Vec<u8>,
+    query_epoch: u32,
+    /// Count of full rebuilds (norm overflow) — surfaced in metrics.
+    pub rebuilds: usize,
+    /// Hashes computed since construction (K·L per hashed vector) — the
+    /// paper's "30 hash computations" accounting.
+    pub hash_ops: u64,
+}
+
+impl LayerTables {
+    /// Build tables over the rows of `weights` (row = neuron weight vector).
+    pub fn build(weights: &Matrix, cfg: LshConfig, rng: &mut Pcg64) -> Self {
+        let n_nodes = weights.rows();
+        let max_norm = max_row_norm((0..n_nodes).map(|r| weights.row(r)));
+        let family = AlshMips::new(weights.cols(), cfg.k, cfg.l, max_norm, rng);
+        let mut lt = LayerTables {
+            cfg,
+            family,
+            tables: (0..cfg.l).map(|_| HashTable::new(cfg.k, n_nodes)).collect(),
+            n_nodes,
+            stamp: vec![0; n_nodes],
+            counts: vec![0; n_nodes],
+            query_epoch: 0,
+            rebuilds: 0,
+            hash_ops: 0,
+        };
+        lt.insert_all(weights);
+        lt
+    }
+
+    fn insert_all(&mut self, weights: &Matrix) {
+        let mut fps = vec![0u32; self.cfg.l];
+        for id in 0..self.n_nodes {
+            self.family.hash_data(weights.row(id), &mut fps);
+            self.hash_ops += (self.cfg.k * self.cfg.l) as u64;
+            for (t, &fp) in self.tables.iter_mut().zip(&fps) {
+                t.insert(id as u32, fp);
+            }
+        }
+    }
+
+    pub fn config(&self) -> LshConfig {
+        self.cfg
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.n_nodes
+    }
+
+    /// Query the active set for input `q`.
+    ///
+    /// Two phases (both sub-linear in the layer width):
+    /// 1. **Collect**: union of multi-probed buckets across all L tables,
+    ///    counting each node's collision multiplicity. Home buckets are
+    ///    probed first, then Hamming-distance-1 buckets, etc. The whole
+    ///    probe budget is consumed (bucket scanning costs no
+    ///    multiplications — only the K·L query hashes do), because the
+    ///    multiplicity signal needs every probe.
+    /// 2. **Rank**: keep the `budget` candidates with the highest
+    ///    multiplicity (counting-sort over counts 1..=L·probes). The
+    ///    multiplicity is the empirical estimate of the Theorem-1
+    ///    retrieval probability 1-(1-p^K)^L — nodes colliding in many
+    ///    tables almost surely have high inner products. Ties resolve in
+    ///    collection order (closer probes first), preserving the
+    ///    closest-bucket preference.
+    pub fn query(&mut self, q: &[f32], budget: usize, rng: &mut Pcg64, out: &mut Vec<u32>) {
+        out.clear();
+        if budget == 0 || self.n_nodes == 0 {
+            return;
+        }
+        self.query_epoch = self.query_epoch.wrapping_add(1);
+        if self.query_epoch == 0 {
+            // Stamp wrap: reset (happens once per 2^32 queries).
+            self.stamp.iter_mut().for_each(|s| *s = u32::MAX);
+            self.query_epoch = 1;
+        }
+        let mut fps = vec![0u32; self.cfg.l];
+        self.family.hash_query(q, &mut fps);
+        self.hash_ops += (self.cfg.k * self.cfg.l) as u64;
+
+        let mut candidates: Vec<u32> = Vec::with_capacity(budget * 8);
+        let mut scratch: Vec<u32> = Vec::with_capacity(self.cfg.crowded_limit);
+        // Round-robin probe depth across tables: probe the home bucket of
+        // every table first, then distance-1 buckets, etc., so the union is
+        // balanced across tables.
+        let mut gens: Vec<ProbeGen> = fps
+            .iter()
+            .map(|&fp| ProbeGen::new(fp, self.cfg.k, self.cfg.probes_per_table))
+            .collect();
+        for _depth in 0..self.cfg.probes_per_table {
+            let mut any = false;
+            for (ti, g) in gens.iter_mut().enumerate() {
+                let Some(addr) = g.next() else { continue };
+                any = true;
+                scratch.clear();
+                self.tables[ti].probe_into(addr, self.cfg.crowded_limit, rng, &mut scratch);
+                for &id in &scratch {
+                    if self.stamp[id as usize] != self.query_epoch {
+                        self.stamp[id as usize] = self.query_epoch;
+                        self.counts[id as usize] = 1;
+                        candidates.push(id);
+                    } else {
+                        self.counts[id as usize] = self.counts[id as usize].saturating_add(1);
+                    }
+                }
+            }
+            if !any {
+                break;
+            }
+        }
+
+        if candidates.len() <= budget {
+            out.extend_from_slice(&candidates);
+            return;
+        }
+        // Counting-select: take candidates by descending multiplicity.
+        let max_count = candidates
+            .iter()
+            .map(|&id| self.counts[id as usize])
+            .max()
+            .unwrap_or(1);
+        for want in (1..=max_count).rev() {
+            for &id in &candidates {
+                if self.counts[id as usize] == want {
+                    out.push(id);
+                    if out.len() >= budget {
+                        return;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Re-hash a set of updated nodes (after a gradient step touched their
+    /// weights). Returns true if a full rebuild was required because some
+    /// weight norm outgrew the ALSH scaling constant M.
+    pub fn rehash_nodes(&mut self, weights: &Matrix, ids: &[u32], rng: &mut Pcg64) -> bool {
+        // Check norm overflow first — rebuild re-hashes everything anyway.
+        for &id in ids {
+            if !self.family.fits(norm(weights.row(id as usize))) {
+                self.rebuild(weights, rng);
+                return true;
+            }
+        }
+        let mut fps = vec![0u32; self.cfg.l];
+        for &id in ids {
+            self.family.hash_data(weights.row(id as usize), &mut fps);
+            self.hash_ops += (self.cfg.k * self.cfg.l) as u64;
+            for (t, &fp) in self.tables.iter_mut().zip(&fps) {
+                t.update(id, fp);
+            }
+        }
+        false
+    }
+
+    /// Full rebuild: new M (with headroom), fresh projections, re-insert all.
+    pub fn rebuild(&mut self, weights: &Matrix, rng: &mut Pcg64) {
+        let max_norm = max_row_norm((0..self.n_nodes).map(|r| weights.row(r)));
+        self.family = AlshMips::new(weights.cols(), self.cfg.k, self.cfg.l, max_norm, rng);
+        self.tables = (0..self.cfg.l).map(|_| HashTable::new(self.cfg.k, self.n_nodes)).collect();
+        self.insert_all(weights);
+        self.rebuilds += 1;
+    }
+
+    /// Diagnostics: per-table occupancy histograms.
+    pub fn bucket_sizes(&self) -> Vec<Vec<usize>> {
+        self.tables.iter().map(|t| t.bucket_sizes()).collect()
+    }
+
+    /// Borrow the underlying ALSH family (for equivalence tests).
+    pub fn family(&self) -> &AlshMips {
+        &self.family
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::vecops::dot;
+
+    fn weights(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::seeded(seed);
+        Matrix::from_fn(n, d, |_, _| rng.gaussian() * 0.3)
+    }
+
+    #[test]
+    fn build_inserts_every_node_in_every_table() {
+        let w = weights(50, 16, 1);
+        let mut rng = Pcg64::seeded(2);
+        let lt = LayerTables::build(&w, LshConfig { k: 6, l: 5, ..Default::default() }, &mut rng);
+        for sizes in lt.bucket_sizes() {
+            assert_eq!(sizes.iter().sum::<usize>(), 50);
+        }
+    }
+
+    #[test]
+    fn query_returns_distinct_ids_within_budget() {
+        let w = weights(200, 16, 3);
+        let mut rng = Pcg64::seeded(4);
+        let mut lt = LayerTables::build(&w, LshConfig::default(), &mut rng);
+        let q: Vec<f32> = (0..16).map(|_| rng.gaussian()).collect();
+        let mut out = Vec::new();
+        lt.query(&q, 20, &mut rng, &mut out);
+        assert!(out.len() <= 20);
+        let mut s = out.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), out.len(), "ids must be distinct");
+        assert!(out.iter().all(|&i| (i as usize) < 200));
+    }
+
+    #[test]
+    fn query_prefers_high_inner_product_nodes() {
+        // Recall test: the active set should be enriched in true top nodes.
+        let n = 500;
+        let d = 32;
+        let w = weights(n, d, 5);
+        let mut rng = Pcg64::seeded(6);
+        let mut lt = LayerTables::build(
+            &w,
+            LshConfig { k: 6, l: 8, probes_per_table: 8, ..Default::default() },
+            &mut rng,
+        );
+        let mut hits = 0usize;
+        let mut total = 0usize;
+        for _ in 0..30 {
+            let q: Vec<f32> = (0..d).map(|_| rng.gaussian()).collect();
+            let mut out = Vec::new();
+            lt.query(&q, 50, &mut rng, &mut out);
+            if out.is_empty() {
+                continue;
+            }
+            // True top-50 by inner product.
+            let ips: Vec<f32> = (0..n).map(|i| dot(w.row(i), &q)).collect();
+            let top = crate::tensor::vecops::top_k_indices(&ips, 50);
+            let topset: std::collections::HashSet<u32> = top.into_iter().collect();
+            hits += out.iter().filter(|id| topset.contains(id)).count();
+            total += out.len();
+        }
+        let precision = hits as f64 / total as f64;
+        // Random selection would land at 50/500 = 10%. Unstructured gaussian
+        // weights are the worst case (near-orthogonal vectors); real trained
+        // layers separate much harder — see planted test below.
+        assert!(precision > 0.15, "active-set precision {precision:.3} barely above chance");
+    }
+
+    #[test]
+    fn query_retrieves_planted_high_activation_nodes() {
+        // Plant 5 nodes aligned with the query among 495 random ones: the
+        // active set must contain almost all of them (the regime the paper
+        // relies on — hot neurons have genuinely high inner products).
+        let n = 500;
+        let d = 32;
+        let mut rng = Pcg64::seeded(21);
+        let q: Vec<f32> = (0..d).map(|_| rng.gaussian()).collect();
+        let qn = norm(&q);
+        let mut w = weights(n, d, 22);
+        // Plant at a norm comparable to the layer max (≈0.3·√32≈1.7): a hot
+        // neuron is hot because of norm × alignment; the ALSH embedding
+        // preserves exactly that product.
+        for planted in 0..5 {
+            let row = w.row_mut(planted);
+            for (wv, qv) in row.iter_mut().zip(&q) {
+                *wv = qv / qn * 1.6 + 0.02 * rng.gaussian();
+            }
+        }
+        let mut lt = LayerTables::build(
+            &w,
+            LshConfig { k: 6, l: 8, probes_per_table: 8, ..Default::default() },
+            &mut rng,
+        );
+        let mut out = Vec::new();
+        lt.query(&q, 50, &mut rng, &mut out);
+        let found = (0..5u32).filter(|id| out.contains(id)).count();
+        assert!(found >= 4, "only {found}/5 planted nodes retrieved: {out:?}");
+    }
+
+    #[test]
+    fn rehash_moves_changed_node() {
+        let mut w = weights(20, 8, 7);
+        let mut rng = Pcg64::seeded(8);
+        let mut lt = LayerTables::build(&w, LshConfig { k: 8, l: 3, ..Default::default() }, &mut rng);
+        // Flip node 0's weights entirely (within norm budget).
+        for v in w.row_mut(0) {
+            *v = -*v;
+        }
+        assert!(!lt.rehash_nodes(&w, &[0], &mut rng), "no rebuild needed for same-norm change");
+        // Node must still be present exactly once per table.
+        for sizes in lt.bucket_sizes() {
+            assert_eq!(sizes.iter().sum::<usize>(), 20);
+        }
+    }
+
+    #[test]
+    fn norm_overflow_triggers_rebuild() {
+        let mut w = weights(20, 8, 9);
+        let mut rng = Pcg64::seeded(10);
+        let mut lt = LayerTables::build(&w, LshConfig::default(), &mut rng);
+        for v in w.row_mut(3) {
+            *v *= 100.0;
+        }
+        assert!(lt.rehash_nodes(&w, &[3], &mut rng));
+        assert_eq!(lt.rebuilds, 1);
+        assert!(lt.family().fits(norm(w.row(3))));
+        for sizes in lt.bucket_sizes() {
+            assert_eq!(sizes.iter().sum::<usize>(), 20);
+        }
+    }
+
+    #[test]
+    fn zero_budget_returns_empty() {
+        let w = weights(10, 8, 11);
+        let mut rng = Pcg64::seeded(12);
+        let mut lt = LayerTables::build(&w, LshConfig::default(), &mut rng);
+        let mut out = vec![99];
+        lt.query(&[0.5; 8], 0, &mut rng, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn hash_ops_accounting() {
+        let w = weights(10, 8, 13);
+        let mut rng = Pcg64::seeded(14);
+        let cfg = LshConfig { k: 6, l: 5, ..Default::default() };
+        let mut lt = LayerTables::build(&w, cfg, &mut rng);
+        let after_build = lt.hash_ops;
+        assert_eq!(after_build, 10 * 30, "K*L hashes per node at build");
+        let mut out = Vec::new();
+        lt.query(&[0.1; 8], 5, &mut rng, &mut out);
+        assert_eq!(lt.hash_ops, after_build + 30, "one K*L query hash");
+    }
+}

@@ -1,0 +1,19 @@
+//! Locality-sensitive hashing for Maximum Inner Product Search — the
+//! search substrate the paper builds on (§4.3, §5): signed random
+//! projections, the asymmetric MIPS transform, O(1)-update hash tables,
+//! multi-probe, and the per-layer (K, L) table stack.
+
+pub mod alsh;
+pub mod family;
+pub mod layered;
+pub mod multiprobe;
+pub mod sparse_proj;
+pub mod srp;
+pub mod table;
+
+pub use alsh::AlshMips;
+pub use family::LshFamily;
+pub use layered::{LayerTables, LshConfig};
+pub use sparse_proj::SparseSrpHash;
+pub use srp::SrpHash;
+pub use table::HashTable;

@@ -1,0 +1,129 @@
+//! Multi-probe LSH (Lv et al., VLDB 2007) for binary fingerprints.
+//!
+//! Instead of building many tables, probe several "close-by" buckets in
+//! each table by perturbing the query fingerprint. For K-bit SRP
+//! fingerprints the natural perturbation is flipping bits; nearer buckets
+//! (fewer flipped bits) are probed first. The paper (§5.4): "Multi-probe
+//! with binary hash function is quite straightforward. We just have to
+//! randomly flip few bits of the K-bit hash to generate more addresses."
+
+use crate::util::bitpack::flip_bit;
+
+/// Generate the probe sequence for a K-bit fingerprint: the query bucket
+/// itself, then all Hamming-distance-1 buckets, then distance-2, ... until
+/// `max_probes` addresses have been produced. Deterministic and in
+/// bit-order within a distance class.
+pub fn probe_sequence(fp: u32, k: usize, max_probes: usize) -> Vec<u32> {
+    let mut out = Vec::with_capacity(max_probes.min(1 << k));
+    out.push(fp);
+    if out.len() >= max_probes {
+        return out;
+    }
+    // Distance 1.
+    for i in 0..k {
+        out.push(flip_bit(fp, k, i));
+        if out.len() >= max_probes {
+            return out;
+        }
+    }
+    // Distance 2.
+    for i in 0..k {
+        for j in i + 1..k {
+            out.push(flip_bit(flip_bit(fp, k, i), k, j));
+            if out.len() >= max_probes {
+                return out;
+            }
+        }
+    }
+    // Distance 3 — enough for any practical probe budget at K=6..16.
+    for i in 0..k {
+        for j in i + 1..k {
+            for m in j + 1..k {
+                out.push(flip_bit(flip_bit(flip_bit(fp, k, i), k, j), k, m));
+                if out.len() >= max_probes {
+                    return out;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// An iterator-style probe generator that owns its state; avoids allocating
+/// when the caller early-exits after finding enough nodes (§6.2.1: "We stop
+/// early if we find that we have sampled enough nodes even before
+/// exhausting all buckets").
+pub struct ProbeGen {
+    seq: Vec<u32>,
+    pos: usize,
+}
+
+impl ProbeGen {
+    pub fn new(fp: u32, k: usize, max_probes: usize) -> Self {
+        ProbeGen { seq: probe_sequence(fp, k, max_probes), pos: 0 }
+    }
+}
+
+impl Iterator for ProbeGen {
+    type Item = u32;
+    fn next(&mut self) -> Option<u32> {
+        let v = self.seq.get(self.pos).copied();
+        self.pos += 1;
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bitpack::hamming;
+
+    #[test]
+    fn first_probe_is_query_bucket() {
+        assert_eq!(probe_sequence(0b1010, 4, 5)[0], 0b1010);
+    }
+
+    #[test]
+    fn probes_are_distinct() {
+        let seq = probe_sequence(0b101010, 6, 42);
+        let mut s = seq.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), seq.len());
+    }
+
+    #[test]
+    fn probes_ordered_by_hamming_distance() {
+        let fp = 0b110100;
+        let seq = probe_sequence(fp, 6, 42);
+        let dists: Vec<u32> = seq.iter().map(|&p| hamming(fp, p)).collect();
+        for w in dists.windows(2) {
+            assert!(w[0] <= w[1], "distances must be non-decreasing: {dists:?}");
+        }
+        assert_eq!(dists[0], 0);
+        assert_eq!(dists[1], 1);
+    }
+
+    #[test]
+    fn respects_max_probes() {
+        assert_eq!(probe_sequence(0, 6, 10).len(), 10);
+        assert_eq!(probe_sequence(0, 6, 1).len(), 1);
+    }
+
+    #[test]
+    fn full_enumeration_at_small_k() {
+        // K=3: 1 + 3 + 3 + 1 = 8 possible buckets.
+        let seq = probe_sequence(0b000, 3, 64);
+        assert_eq!(seq.len(), 8);
+        let mut s = seq;
+        s.sort_unstable();
+        assert_eq!(s, (0..8).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn generator_matches_sequence() {
+        let seq = probe_sequence(0b0110, 4, 9);
+        let gen: Vec<u32> = ProbeGen::new(0b0110, 4, 9).collect();
+        assert_eq!(seq, gen);
+    }
+}

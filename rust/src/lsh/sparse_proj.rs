@@ -1,0 +1,175 @@
+//! Very sparse random projections (Achlioptas 2001; Li, Hastie & Church
+//! 2006) — the paper's §5.5 cites these as "techniques to further reduce
+//! this hashing cost" [1, 23]. Each projection entry is
+//!
+//!   +sqrt(s) with prob 1/(2s),  −sqrt(s) with prob 1/(2s),  0 otherwise
+//!
+//! so a hash bit costs ~d/s multiplications instead of d. With s = 3 the
+//! projection is provably JL-preserving; Li et al. push s to sqrt(d).
+//! Used as a drop-in replacement for the gaussian SRP in an ablation
+//! (benches/micro.rs) — same (K, L) semantics, ~s× cheaper hashing.
+
+use crate::lsh::family::LshFamily;
+use crate::util::rng::Pcg64;
+
+/// One projection row stored sparsely: (index, ±sqrt(s)) pairs.
+#[derive(Clone, Debug)]
+struct SparseRow {
+    idx: Vec<u32>,
+    val: Vec<f32>,
+}
+
+#[derive(Clone, Debug)]
+pub struct SparseSrpHash {
+    k: usize,
+    l: usize,
+    dim: usize,
+    s: usize,
+    rows: Vec<SparseRow>,
+}
+
+impl SparseSrpHash {
+    /// `s` is the sparsity factor (expected non-zeros per row = dim/s).
+    pub fn new(dim: usize, k: usize, l: usize, s: usize, rng: &mut Pcg64) -> Self {
+        assert!(k >= 1 && k <= 32 && l >= 1 && s >= 1);
+        let magnitude = (s as f32).sqrt();
+        let rows = (0..k * l)
+            .map(|_| {
+                let mut idx = Vec::new();
+                let mut val = Vec::new();
+                for j in 0..dim {
+                    // P(nonzero) = 1/s, then sign is a fair coin.
+                    if rng.below(s as u32) == 0 {
+                        idx.push(j as u32);
+                        val.push(if rng.bernoulli(0.5) { magnitude } else { -magnitude });
+                    }
+                }
+                // Degenerate all-zero row: force one entry so the bit is
+                // not constant.
+                if idx.is_empty() {
+                    idx.push(rng.below(dim as u32));
+                    val.push(magnitude);
+                }
+                SparseRow { idx, val }
+            })
+            .collect();
+        SparseSrpHash { k, l, dim, s, rows }
+    }
+
+    #[inline]
+    fn bit(&self, row: &SparseRow, x: &[f32]) -> bool {
+        let mut acc = 0.0f32;
+        for (&j, &v) in row.idx.iter().zip(&row.val) {
+            acc += x[j as usize] * v;
+        }
+        acc >= 0.0
+    }
+
+    /// Expected multiplications per full K·L fingerprint set.
+    pub fn mults_per_hash(&self) -> u64 {
+        self.rows.iter().map(|r| r.idx.len() as u64).sum()
+    }
+
+    /// Dense-SRP equivalent cost (for the ablation's speedup figure).
+    pub fn dense_equivalent_mults(&self) -> u64 {
+        (self.k * self.l * self.dim) as u64
+    }
+
+    pub fn sparsity_factor(&self) -> usize {
+        self.s
+    }
+}
+
+impl LshFamily for SparseSrpHash {
+    fn k(&self) -> usize {
+        self.k
+    }
+    fn l(&self) -> usize {
+        self.l
+    }
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn hash_data(&self, x: &[f32], out: &mut [u32]) {
+        debug_assert_eq!(out.len(), self.l);
+        for (j, o) in out.iter_mut().enumerate() {
+            let mut fp = 0u32;
+            for i in 0..self.k {
+                fp = (fp << 1) | self.bit(&self.rows[j * self.k + i], x) as u32;
+            }
+            *o = fp;
+        }
+    }
+
+    fn hash_query(&self, q: &[f32], out: &mut [u32]) {
+        self.hash_data(q, out); // symmetric
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cost_is_roughly_dim_over_s() {
+        let mut rng = Pcg64::seeded(1);
+        let f = SparseSrpHash::new(900, 6, 5, 3, &mut rng);
+        let per_row = f.mults_per_hash() as f64 / 30.0;
+        assert!(
+            (per_row - 300.0).abs() < 60.0,
+            "expected ~dim/s = 300 nonzeros per row, got {per_row}"
+        );
+        assert!(f.mults_per_hash() * 2 < f.dense_equivalent_mults());
+    }
+
+    #[test]
+    fn fingerprints_fit_k_bits_and_are_deterministic() {
+        let mut rng = Pcg64::seeded(2);
+        let f = SparseSrpHash::new(64, 6, 4, 3, &mut rng);
+        let x: Vec<f32> = (0..64).map(|i| (i as f32 * 0.37).sin()).collect();
+        let a = f.data_fingerprints(&x);
+        let b = f.query_fingerprints(&x);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&fp| fp < 64));
+    }
+
+    #[test]
+    fn scale_invariance_holds() {
+        let mut rng = Pcg64::seeded(3);
+        let f = SparseSrpHash::new(32, 5, 3, 3, &mut rng);
+        let x: Vec<f32> = (0..32).map(|_| rng.gaussian()).collect();
+        let x2: Vec<f32> = x.iter().map(|v| v * 4.0).collect();
+        assert_eq!(f.data_fingerprints(&x), f.data_fingerprints(&x2));
+    }
+
+    #[test]
+    fn collision_monotone_in_similarity() {
+        // Same statistical property as dense SRP, at a fraction of the cost.
+        let mut rng = Pcg64::seeded(4);
+        let dim = 48;
+        let (mut close_coll, mut far_coll) = (0usize, 0usize);
+        let trials = 300;
+        for t in 0..trials {
+            let f = SparseSrpHash::new(dim, 1, 6, 3, &mut Pcg64::seeded(5000 + t as u64));
+            let x: Vec<f32> = (0..dim).map(|_| rng.gaussian()).collect();
+            let close: Vec<f32> = x.iter().map(|v| v + 0.1 * rng.gaussian()).collect();
+            let far: Vec<f32> = (0..dim).map(|_| rng.gaussian()).collect();
+            let fx = f.data_fingerprints(&x);
+            close_coll += fx.iter().zip(f.data_fingerprints(&close)).filter(|(a, b)| **a == *b).count();
+            far_coll += fx.iter().zip(f.data_fingerprints(&far)).filter(|(a, b)| **a == *b).count();
+        }
+        assert!(
+            close_coll > far_coll + trials / 2,
+            "close {close_coll} vs far {far_coll}"
+        );
+    }
+
+    #[test]
+    fn no_constant_bits_from_empty_rows() {
+        // Even at extreme sparsity every row has at least one entry.
+        let mut rng = Pcg64::seeded(5);
+        let f = SparseSrpHash::new(8, 4, 2, 1000, &mut rng);
+        assert!(f.mults_per_hash() >= 8);
+    }
+}

@@ -1,0 +1,171 @@
+//! Signed random projection (SimHash) family.
+//!
+//! Each of the K·L bits is `sign(r · x)` for a fixed gaussian direction `r`
+//! (Charikar 2002): `Pr[h(x)=h(y)] = 1 - θ(x,y)/π`, monotone in cosine
+//! similarity. The paper's §5.3 uses exactly this — "the sign of an
+//! asymmetrically transformed random projection" — with the asymmetric
+//! transform supplied by [`crate::lsh::alsh`].
+
+use crate::lsh::family::LshFamily;
+use crate::tensor::matrix::Matrix;
+use crate::tensor::vecops::dot;
+use crate::util::rng::Pcg64;
+
+/// Plain symmetric SRP over `dim`-dimensional vectors: K·L gaussian
+/// directions stored row-wise (row = one projection).
+#[derive(Clone, Debug)]
+pub struct SrpHash {
+    k: usize,
+    l: usize,
+    dim: usize,
+    /// (K·L) x dim projection directions; table j uses rows [j*K, (j+1)*K).
+    projections: Matrix,
+}
+
+impl SrpHash {
+    pub fn new(dim: usize, k: usize, l: usize, rng: &mut Pcg64) -> Self {
+        assert!(k >= 1 && k <= 32, "K must be in 1..=32");
+        assert!(l >= 1, "L must be >= 1");
+        SrpHash { k, l, dim, projections: Matrix::randn(k * l, dim, rng) }
+    }
+
+    /// Fingerprint for table `j` (symmetric — same map for data and query).
+    #[inline]
+    pub fn fingerprint(&self, x: &[f32], j: usize) -> u32 {
+        debug_assert_eq!(x.len(), self.dim);
+        let mut fp = 0u32;
+        for i in 0..self.k {
+            let row = self.projections.row(j * self.k + i);
+            fp = (fp << 1) | (dot(row, x) >= 0.0) as u32;
+        }
+        fp
+    }
+
+    /// Access the raw projection directions (used by the AOT simhash
+    /// artifact so python and rust hash identically).
+    pub fn projections(&self) -> &Matrix {
+        &self.projections
+    }
+
+    /// Build from externally supplied projections (for cross-language
+    /// equivalence tests against the pallas kernel).
+    pub fn from_projections(dim: usize, k: usize, l: usize, projections: Matrix) -> Self {
+        assert_eq!(projections.rows(), k * l);
+        assert_eq!(projections.cols(), dim);
+        SrpHash { k, l, dim, projections }
+    }
+}
+
+impl LshFamily for SrpHash {
+    fn k(&self) -> usize {
+        self.k
+    }
+    fn l(&self) -> usize {
+        self.l
+    }
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn hash_data(&self, x: &[f32], out: &mut [u32]) {
+        debug_assert_eq!(out.len(), self.l);
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = self.fingerprint(x, j);
+        }
+    }
+
+    fn hash_query(&self, q: &[f32], out: &mut [u32]) {
+        self.hash_data(q, out); // symmetric
+    }
+}
+
+/// Reference bit computation used in tests.
+pub fn srp_bits_reference(projections: &Matrix, x: &[f32], j: usize, k: usize) -> Vec<bool> {
+    (0..k).map(|i| dot(projections.row(j * k + i), x) >= 0.0).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bitpack::pack_bits;
+
+    fn family() -> SrpHash {
+        let mut rng = Pcg64::seeded(42);
+        SrpHash::new(16, 6, 5, &mut rng)
+    }
+
+    #[test]
+    fn fingerprint_matches_bit_reference() {
+        let f = family();
+        let mut rng = Pcg64::seeded(1);
+        for _ in 0..20 {
+            let x: Vec<f32> = (0..16).map(|_| rng.gaussian()).collect();
+            for j in 0..f.l() {
+                let expect = pack_bits(&srp_bits_reference(f.projections(), &x, j, f.k()));
+                assert_eq!(f.fingerprint(&x, j), expect);
+            }
+        }
+    }
+
+    #[test]
+    fn identical_vectors_always_collide() {
+        let f = family();
+        let mut rng = Pcg64::seeded(2);
+        let x: Vec<f32> = (0..16).map(|_| rng.gaussian()).collect();
+        assert_eq!(f.data_fingerprints(&x), f.query_fingerprints(&x));
+    }
+
+    #[test]
+    fn scaling_does_not_change_fingerprint() {
+        // sign(r·cx) == sign(r·x) for c > 0.
+        let f = family();
+        let mut rng = Pcg64::seeded(3);
+        let x: Vec<f32> = (0..16).map(|_| rng.gaussian()).collect();
+        let x2: Vec<f32> = x.iter().map(|v| v * 7.5).collect();
+        assert_eq!(f.data_fingerprints(&x), f.data_fingerprints(&x2));
+    }
+
+    #[test]
+    fn collision_probability_is_monotone_in_angle() {
+        // Empirically: closer vectors share more fingerprint bits.
+        let mut rng = Pcg64::seeded(4);
+        let dim = 32;
+        let trials = 400;
+        let mut close_coll = 0usize;
+        let mut far_coll = 0usize;
+        for t in 0..trials {
+            let f = SrpHash::new(dim, 1, 8, &mut Pcg64::seeded(1000 + t as u64));
+            let x: Vec<f32> = (0..dim).map(|_| rng.gaussian()).collect();
+            // close: small perturbation; far: independent vector
+            let close: Vec<f32> = x.iter().map(|v| v + 0.1 * rng.gaussian()).collect();
+            let far: Vec<f32> = (0..dim).map(|_| rng.gaussian()).collect();
+            let fx = f.data_fingerprints(&x);
+            let fc = f.data_fingerprints(&close);
+            let ff = f.data_fingerprints(&far);
+            close_coll += fx.iter().zip(&fc).filter(|(a, b)| a == b).count();
+            far_coll += fx.iter().zip(&ff).filter(|(a, b)| a == b).count();
+        }
+        assert!(
+            close_coll > far_coll + trials,
+            "close {close_coll} should collide far more than far {far_coll}"
+        );
+    }
+
+    #[test]
+    fn fingerprints_fit_in_k_bits() {
+        let f = family();
+        let mut rng = Pcg64::seeded(5);
+        for _ in 0..50 {
+            let x: Vec<f32> = (0..16).map(|_| rng.gaussian()).collect();
+            for fp in f.data_fingerprints(&x) {
+                assert!(fp < (1 << f.k()));
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "K must be")]
+    fn k_over_32_rejected() {
+        SrpHash::new(4, 33, 1, &mut Pcg64::seeded(0));
+    }
+}

@@ -1,0 +1,239 @@
+//! A single LSH hash table: 2^K buckets holding *node ids* (pointers to
+//! neurons, never the weights themselves — §5.4 of the paper). Insertion is
+//! O(1) (push); deletion is O(b) via swap-remove where b is bucket size;
+//! crowded buckets can be sub-sampled at query time.
+
+use crate::util::rng::Pcg64;
+
+/// Bucket occupancy beyond which a bucket is considered "crowded" and is
+/// reservoir-sub-sampled at query time instead of returned whole
+/// (paper §5.4: "crowded buckets are not very informative and can be
+/// safely ignored or sub-sampled").
+pub const DEFAULT_CROWDED_LIMIT: usize = 128;
+
+#[derive(Clone, Debug)]
+pub struct HashTable {
+    k: usize,
+    /// Dense array of 2^K buckets (K ≤ 16 keeps this small; for K up to 32
+    /// a sparse map would be needed, but the paper uses K=6).
+    buckets: Vec<Vec<u32>>,
+    /// Current position of each node: slot index inside its bucket, plus
+    /// its fingerprint — makes delete O(b) without scanning all buckets.
+    node_fp: Vec<u32>,
+    len: usize,
+}
+
+impl HashTable {
+    /// `capacity` = number of node ids that will be stored (node ids must
+    /// be `< capacity`).
+    pub fn new(k: usize, capacity: usize) -> Self {
+        assert!(k <= 16, "dense bucket array supports K <= 16 (paper uses 6)");
+        HashTable {
+            k,
+            buckets: vec![Vec::new(); 1 << k],
+            node_fp: vec![u32::MAX; capacity],
+            len: 0,
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    fn mask(&self, fp: u32) -> usize {
+        (fp as usize) & ((1usize << self.k) - 1)
+    }
+
+    /// Insert node `id` under fingerprint `fp`. O(1).
+    pub fn insert(&mut self, id: u32, fp: u32) {
+        debug_assert_eq!(self.node_fp[id as usize], u32::MAX, "node already present");
+        let b = self.mask(fp);
+        self.buckets[b].push(id);
+        self.node_fp[id as usize] = fp;
+        self.len += 1;
+    }
+
+    /// Remove node `id` (must be present). O(bucket size) via swap-remove.
+    pub fn remove(&mut self, id: u32) {
+        let fp = self.node_fp[id as usize];
+        debug_assert_ne!(fp, u32::MAX, "node not present");
+        let b = self.mask(fp);
+        let bucket = &mut self.buckets[b];
+        let pos = bucket.iter().position(|&x| x == id).expect("node missing from bucket");
+        bucket.swap_remove(pos);
+        self.node_fp[id as usize] = u32::MAX;
+        self.len -= 1;
+    }
+
+    /// Re-locate node `id` under a new fingerprint; no-op if the bucket is
+    /// unchanged (the common case — small weight updates rarely flip bits).
+    pub fn update(&mut self, id: u32, new_fp: u32) {
+        let old = self.node_fp[id as usize];
+        if old != u32::MAX && self.mask(old) == self.mask(new_fp) {
+            self.node_fp[id as usize] = new_fp;
+            return;
+        }
+        if old != u32::MAX {
+            self.remove(id);
+        }
+        self.insert(id, new_fp);
+    }
+
+    pub fn contains(&self, id: u32) -> bool {
+        self.node_fp[id as usize] != u32::MAX
+    }
+
+    pub fn fingerprint_of(&self, id: u32) -> Option<u32> {
+        match self.node_fp[id as usize] {
+            u32::MAX => None,
+            fp => Some(fp),
+        }
+    }
+
+    /// Bucket contents for a fingerprint.
+    pub fn bucket(&self, fp: u32) -> &[u32] {
+        &self.buckets[self.mask(fp)]
+    }
+
+    /// Probe a bucket into `out`, sub-sampling crowded buckets with the
+    /// caller's RNG (reservoir sample of `crowded_limit` ids).
+    pub fn probe_into(
+        &self,
+        fp: u32,
+        crowded_limit: usize,
+        rng: &mut Pcg64,
+        out: &mut Vec<u32>,
+    ) {
+        let bucket = self.bucket(fp);
+        if bucket.len() <= crowded_limit {
+            out.extend_from_slice(bucket);
+        } else {
+            // Reservoir sample without replacement.
+            let mut reservoir: Vec<u32> = bucket[..crowded_limit].to_vec();
+            for (i, &id) in bucket.iter().enumerate().skip(crowded_limit) {
+                let j = rng.below(i as u32 + 1) as usize;
+                if j < crowded_limit {
+                    reservoir[j] = id;
+                }
+            }
+            out.extend_from_slice(&reservoir);
+        }
+    }
+
+    /// Occupancy histogram (for diagnostics / ablation benches).
+    pub fn bucket_sizes(&self) -> Vec<usize> {
+        self.buckets.iter().map(|b| b.len()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_then_probe() {
+        let mut t = HashTable::new(4, 10);
+        t.insert(3, 0b1010);
+        t.insert(7, 0b1010);
+        t.insert(5, 0b0001);
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.bucket(0b1010), &[3, 7]);
+        assert_eq!(t.bucket(0b0001), &[5]);
+        assert!(t.bucket(0b1111).is_empty());
+    }
+
+    #[test]
+    fn remove_swaps_out() {
+        let mut t = HashTable::new(4, 10);
+        for id in 0..4 {
+            t.insert(id, 0b0011);
+        }
+        t.remove(1);
+        assert_eq!(t.len(), 3);
+        assert!(!t.contains(1));
+        let mut b = t.bucket(0b0011).to_vec();
+        b.sort_unstable();
+        assert_eq!(b, vec![0, 2, 3]);
+    }
+
+    #[test]
+    fn update_moves_between_buckets() {
+        let mut t = HashTable::new(4, 4);
+        t.insert(0, 0b0000);
+        t.update(0, 0b1111);
+        assert!(t.bucket(0b0000).is_empty());
+        assert_eq!(t.bucket(0b1111), &[0]);
+        assert_eq!(t.fingerprint_of(0), Some(0b1111));
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn update_same_bucket_is_noop_move() {
+        let mut t = HashTable::new(4, 4);
+        t.insert(0, 0b0101);
+        t.insert(1, 0b0101);
+        t.update(0, 0b0101);
+        assert_eq!(t.bucket(0b0101), &[0, 1], "order preserved on same-bucket update");
+    }
+
+    #[test]
+    fn update_inserts_missing_node() {
+        let mut t = HashTable::new(4, 4);
+        t.update(2, 0b0010);
+        assert!(t.contains(2));
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn crowded_bucket_subsampled() {
+        let mut t = HashTable::new(2, 1000);
+        for id in 0..500 {
+            t.insert(id, 0b01);
+        }
+        let mut rng = Pcg64::seeded(1);
+        let mut out = Vec::new();
+        t.probe_into(0b01, 32, &mut rng, &mut out);
+        assert_eq!(out.len(), 32);
+        let mut s = out.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 32, "sample must be without replacement");
+        assert!(s.iter().all(|&id| id < 500));
+    }
+
+    #[test]
+    fn small_bucket_returned_whole() {
+        let mut t = HashTable::new(2, 10);
+        t.insert(1, 0);
+        t.insert(2, 0);
+        let mut rng = Pcg64::seeded(1);
+        let mut out = Vec::new();
+        t.probe_into(0, 32, &mut rng, &mut out);
+        assert_eq!(out, vec![1, 2]);
+    }
+
+    #[test]
+    fn fingerprint_mask_ignores_high_bits() {
+        let mut t = HashTable::new(4, 4);
+        t.insert(0, 0xFFFF_FFF0); // low 4 bits = 0
+        assert_eq!(t.bucket(0x0000_0000), &[0]);
+    }
+
+    #[test]
+    #[should_panic]
+    #[cfg(debug_assertions)] // the guard is a debug_assert, absent in release
+    fn double_insert_panics_in_debug() {
+        let mut t = HashTable::new(4, 4);
+        t.insert(0, 1);
+        t.insert(0, 2);
+    }
+}

@@ -1,0 +1,369 @@
+//! hashdl CLI — the L3 launcher.
+//!
+//! Subcommands:
+//!   gen-data     synthesize a benchmark dataset to a binary file
+//!   train        train one configuration (sequential or ASGD)
+//!   eval         evaluate a saved model on a dataset
+//!   experiment   regenerate a paper table/figure (table3|fig4|fig5|fig6|fig7|fig8)
+//!   std-pjrt     run the dense STD baseline through the PJRT artifacts
+
+use hashdl::coordinator::experiment::{self, ExperimentScale};
+use hashdl::data::synth::Benchmark;
+use hashdl::nn::activation::Activation;
+use hashdl::nn::network::{Network, NetworkConfig};
+use hashdl::optim::{OptimConfig, OptimizerKind};
+use hashdl::sampling::{Method, SamplerConfig};
+use hashdl::train::asgd::{run_asgd, AsgdConfig};
+use hashdl::train::trainer::{TrainConfig, Trainer};
+use hashdl::util::argparse::Parser;
+use hashdl::util::rng::Pcg64;
+use std::path::{Path, PathBuf};
+
+fn main() {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        eprintln!("{}", USAGE);
+        std::process::exit(2);
+    }
+    let cmd = args.remove(0);
+    let code = match cmd.as_str() {
+        "gen-data" => cmd_gen_data(args),
+        "train" => cmd_train(args),
+        "eval" => cmd_eval(args),
+        "experiment" => cmd_experiment(args),
+        "std-pjrt" => cmd_std_pjrt(args),
+        "--help" | "-h" | "help" => {
+            println!("{}", USAGE);
+            0
+        }
+        other => {
+            eprintln!("unknown subcommand {other:?}\n{}", USAGE);
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+const USAGE: &str = "hashdl — Scalable and Sustainable Deep Learning via Randomized Hashing
+
+USAGE: hashdl <subcommand> [flags]
+
+  gen-data    --dataset <mnist|norb|convex|rectangles> --n <N> --out <file>
+  train       --dataset <..> --method <nn|vd|ad|wta|lsh> --sparsity <f>
+              [--threads <t>] [--epochs <e>] [--hidden <h>] [--depth <d>]
+              [--lr <f>] [--optimizer <sgd|momentum|adagrad|momentum-adagrad>]
+              [--k <bits>] [--tables <L>] [--save <model.bin>]
+  eval        --model <model.bin> --dataset <..> [--n <N>]
+  experiment  <table3|fig4|fig5|fig6|fig7|fig8> [--scale quick|medium|paper]
+              [--datasets a,b] [--out-dir results/]
+  std-pjrt    --variant <tiny|mnist|norb|convex|rectangles> [--epochs e] [--lr f]
+              [--artifacts dir]
+
+Run any subcommand with --help for full flags.";
+
+fn parse_benchmark(name: &str) -> Benchmark {
+    Benchmark::parse(name).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    })
+}
+
+fn cmd_gen_data(rest: Vec<String>) -> i32 {
+    let p = Parser::new("hashdl gen-data", "synthesize a benchmark dataset")
+        .opt_req("dataset", "benchmark name (mnist|norb|convex|rectangles)")
+        .opt("n", "10000", "number of samples")
+        .opt("seed", "42", "generator seed")
+        .opt_req("out", "output file path");
+    let a = p.parse_rest(rest);
+    let b = parse_benchmark(a.get("dataset").unwrap_or_default());
+    let n = a.parse_or("n", 10_000usize);
+    let seed = a.parse_or("seed", 42u64);
+    let (ds, _) = b.generate(n, 1, seed);
+    let out = PathBuf::from(a.get("out").expect("--out is required"));
+    match hashdl::data::io::save_dataset(&ds, &out) {
+        Ok(()) => {
+            println!("wrote {} samples ({} dims) to {}", ds.len(), ds.dim, out.display());
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_train(rest: Vec<String>) -> i32 {
+    let p = Parser::new("hashdl train", "train one configuration")
+        .opt_req("dataset", "benchmark name")
+        .opt("method", "lsh", "node selection (nn|vd|ad|wta|lsh)")
+        .opt("sparsity", "0.05", "target active-node fraction")
+        .opt("threads", "1", "ASGD worker threads (1 = sequential trainer)")
+        .opt("epochs", "10", "training epochs")
+        .opt("hidden", "1000", "hidden layer width")
+        .opt("depth", "3", "number of hidden layers")
+        .opt("train-size", "0", "training samples (0 = dataset default)")
+        .opt("test-size", "0", "test samples (0 = dataset default)")
+        .opt("lr", "0.01", "learning rate")
+        .opt("optimizer", "momentum-adagrad", "optimizer kind")
+        .opt("k", "6", "LSH bits per table")
+        .opt("tables", "5", "LSH tables per layer")
+        .opt("probes", "10", "multiprobe buckets per table")
+        .opt("rerank", "0", "re-rank factor (0=off): score rerank*budget candidates exactly")
+        .opt("rehash-prob", "1.0", "probability of rehashing each updated row (lazy maintenance)")
+        .opt("seed", "42", "run seed")
+        .opt("eval-cap", "2000", "max test examples per evaluation")
+        .opt("save", "", "save trained model to this path")
+        .flag("quiet", "suppress per-epoch logging");
+    let a = p.parse_rest(rest);
+
+    let b = parse_benchmark(a.get("dataset").unwrap_or_default());
+    let (dtr, dte) = b.default_sizes();
+    let n_tr = match a.parse_or("train-size", 0usize) {
+        0 => dtr,
+        n => n,
+    };
+    let n_te = match a.parse_or("test-size", 0usize) {
+        0 => dte,
+        n => n,
+    };
+    let seed = a.parse_or("seed", 42u64);
+    eprintln!("generating {} train / {} test samples of {}...", n_tr, n_te, b.name());
+    let (train, test) = b.generate(n_tr, n_te, seed);
+
+    let method = Method::parse(a.get_or("method", "lsh")).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2)
+    });
+    let mut sampler = SamplerConfig::with_method(method, a.parse_or("sparsity", 0.05f32));
+    sampler.lsh.k = a.parse_or("k", 6usize);
+    sampler.lsh.l = a.parse_or("tables", 5usize);
+    sampler.lsh.probes_per_table = a.parse_or("probes", 10usize);
+    sampler.lsh.rerank_factor = a.parse_or("rerank", 0usize);
+    sampler.lsh.rehash_probability = a.parse_or("rehash-prob", 1.0f32);
+    if method == Method::AdaptiveDropout {
+        sampler.ad_beta =
+            hashdl::sampling::adaptive::AdaptiveDropoutSelector::beta_for_sparsity(sampler.sparsity);
+    }
+    let optim = OptimConfig {
+        kind: OptimizerKind::parse(a.get_or("optimizer", "momentum-adagrad")).unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2)
+        }),
+        lr: a.parse_or("lr", 0.01f32),
+        ..Default::default()
+    };
+
+    let net = Network::new(
+        &NetworkConfig {
+            n_in: b.dim(),
+            hidden: vec![a.parse_or("hidden", 1000usize); a.parse_or("depth", 3usize)],
+            n_out: b.n_classes(),
+            act: Activation::ReLU,
+        },
+        &mut Pcg64::seeded(seed),
+    );
+    eprintln!("network: {} parameters", net.n_params());
+
+    let threads = a.parse_or("threads", 1usize);
+    let epochs = a.parse_or("epochs", 10usize);
+    let eval_cap = a.parse_or("eval-cap", 2000usize);
+    let verbose = !a.has("quiet");
+
+    let (record, final_net) = if threads > 1 {
+        let out = run_asgd(
+            net,
+            &train,
+            &test,
+            &AsgdConfig {
+                threads,
+                epochs,
+                optim,
+                sampler,
+                seed,
+                eval_cap,
+                verbose,
+                ..Default::default()
+            },
+        );
+        (out.record, out.net)
+    } else {
+        let mut t =
+            Trainer::new(net, TrainConfig { epochs, optim, sampler, seed, eval_cap, verbose });
+        let rec = t.run(&train, &test);
+        (rec, t.net)
+    };
+
+    println!("{}", record.to_csv());
+    println!(
+        "final accuracy {:.4} | total mults {:.3e} | total time {:.1}s",
+        record.final_acc(),
+        record.total_mults() as f64,
+        record.total_secs()
+    );
+    if let Some(path) = a.get("save").filter(|s| !s.is_empty()) {
+        if let Err(e) = hashdl::data::io::save_network(&final_net, Path::new(path)) {
+            eprintln!("error saving model: {e}");
+            return 1;
+        }
+        eprintln!("saved model to {path}");
+    }
+    0
+}
+
+fn cmd_eval(rest: Vec<String>) -> i32 {
+    let p = Parser::new("hashdl eval", "evaluate a saved model")
+        .opt_req("model", "model.bin path")
+        .opt_req("dataset", "benchmark name")
+        .opt("n", "2000", "test samples to generate")
+        .opt("seed", "43", "generator seed");
+    let a = p.parse_rest(rest);
+    let net = match hashdl::data::io::load_network(Path::new(a.get("model").unwrap_or_default())) {
+        Ok(n) => n,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let b = parse_benchmark(a.get("dataset").unwrap_or_default());
+    let (test, _) = b.generate(a.parse_or("n", 2000usize), 1, a.parse_or("seed", 43u64));
+    let (loss, acc) = net.evaluate(&test.xs, &test.ys);
+    println!("loss {loss:.4} accuracy {acc:.4} on {} samples of {}", test.len(), b.name());
+    0
+}
+
+fn cmd_experiment(mut rest: Vec<String>) -> i32 {
+    if rest.is_empty() {
+        eprintln!("usage: hashdl experiment <table3|fig4|fig5|fig6|fig7|fig8> [flags]");
+        return 2;
+    }
+    let which = rest.remove(0);
+    let p = Parser::new("hashdl experiment", "regenerate a paper table/figure")
+        .opt("scale", "quick", "quick|medium|paper")
+        .opt("datasets", "", "comma-separated subset (default: all four)")
+        .opt("threads", "1,2,4,8", "thread counts (fig6/fig8)")
+        .opt("sparsity", "0.05", "LSH active fraction (fig6/7/8)")
+        .opt("out-dir", "results", "CSV output directory")
+        .flag("verbose", "per-epoch logging");
+    let a = p.parse_rest(rest);
+    let scale = ExperimentScale::parse(a.get_or("scale", "quick")).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2)
+    });
+    let datasets: Vec<Benchmark> = if a.get("datasets").map_or(true, |d| d.is_empty()) {
+        Benchmark::all().to_vec()
+    } else {
+        a.list("datasets").iter().map(|d| parse_benchmark(d)).collect()
+    };
+    let threads: Vec<usize> = a.list("threads").iter().map(|t| t.parse().unwrap_or(1)).collect();
+    let sparsity = a.parse_or("sparsity", 0.05f32);
+    let out_dir = PathBuf::from(a.get_or("out-dir", "results"));
+    let verbose = a.has("verbose");
+
+    let report = match which.as_str() {
+        "table3" => experiment::table3(),
+        "fig4" => experiment::fig45(
+            &datasets,
+            &[Method::Standard, Method::Dropout, Method::Lsh],
+            &[2, 3],
+            &experiment::SPARSITY_GRID,
+            &scale,
+            verbose,
+        ),
+        "fig5" => experiment::fig45(
+            &datasets,
+            &[Method::Standard, Method::Dropout, Method::AdaptiveDropout, Method::Wta, Method::Lsh],
+            &[2, 3],
+            &experiment::SPARSITY_GRID,
+            &scale,
+            verbose,
+        ),
+        "fig6" => experiment::fig6(&datasets, &threads, sparsity, &scale, verbose),
+        "fig7" => {
+            let t = threads.iter().copied().max().unwrap_or(4);
+            experiment::fig7(&datasets, t, sparsity, &scale, verbose)
+        }
+        "fig8" => experiment::fig8(&datasets, &threads, sparsity, &scale, verbose),
+        other => {
+            eprintln!("unknown experiment {other:?}");
+            return 2;
+        }
+    };
+    report.emit(Some(&out_dir));
+    0
+}
+
+fn cmd_std_pjrt(rest: Vec<String>) -> i32 {
+    let p = Parser::new("hashdl std-pjrt", "dense STD baseline via PJRT artifacts")
+        .opt("variant", "tiny", "artifact variant")
+        .opt("epochs", "3", "epochs")
+        .opt("lr", "0.05", "learning rate")
+        .opt("train-size", "1000", "training samples")
+        .opt("test-size", "500", "test samples")
+        .opt("seed", "42", "seed")
+        .opt("artifacts", "artifacts", "artifacts directory");
+    let a = p.parse_rest(rest);
+    let variant = a.get_or("variant", "tiny").to_string();
+    let dir = PathBuf::from(a.get_or("artifacts", "artifacts"));
+    let arts = match hashdl::runtime::ArtifactSet::resolve(&dir, &variant) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    // Map variant -> benchmark for data; tiny uses synthetic blobs.
+    let (train, test) = if variant == "tiny" {
+        let mut rng = Pcg64::seeded(a.parse_or("seed", 42u64));
+        let mut gen = |n: usize| {
+            let mut ds = hashdl::data::Dataset::new("tiny-blobs", 16, 2);
+            for i in 0..n {
+                let y = (i % 2) as u32;
+                let c = if y == 0 { 0.7 } else { -0.7 };
+                ds.push((0..16).map(|_| c + 0.3 * rng.gaussian()).collect(), y);
+            }
+            ds
+        };
+        (gen(a.parse_or("train-size", 1000usize)), gen(a.parse_or("test-size", 500usize)))
+    } else {
+        let b = parse_benchmark(&variant);
+        b.generate(
+            a.parse_or("train-size", 1000usize),
+            a.parse_or("test-size", 500usize),
+            a.parse_or("seed", 42u64),
+        )
+    };
+
+    let rt = match hashdl::runtime::PjrtRuntime::cpu() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    eprintln!("PJRT platform: {}", rt.platform());
+    let mut base = match hashdl::runtime::StdBaseline::new(&rt, &arts, a.parse_or("seed", 42u64)) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    match base.run(
+        &train,
+        &test,
+        a.parse_or("epochs", 3usize),
+        a.parse_or("lr", 0.05f32),
+        500,
+        a.parse_or("seed", 42u64),
+    ) {
+        Ok(rec) => {
+            println!("{}", rec.to_csv());
+            println!("final accuracy {:.4}", rec.final_acc());
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}

@@ -1,0 +1,117 @@
+//! Activation functions. All are monotone in the pre-activation inner
+//! product — the property Corollary 1 of the paper needs so that LSH-MIPS
+//! sampling is equivalent to adaptive dropout for any of them.
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    ReLU,
+    Sigmoid,
+    Tanh,
+    /// Identity (used by the low-rank equivalence demo of paper Fig 1).
+    Linear,
+}
+
+impl Activation {
+    #[inline]
+    pub fn apply(self, z: f32) -> f32 {
+        match self {
+            Activation::ReLU => z.max(0.0),
+            Activation::Sigmoid => 1.0 / (1.0 + (-z).exp()),
+            Activation::Tanh => z.tanh(),
+            Activation::Linear => z,
+        }
+    }
+
+    /// Derivative expressed in terms of the *output* a = f(z), which is
+    /// what backprop has in hand.
+    #[inline]
+    pub fn deriv_from_output(self, a: f32) -> f32 {
+        match self {
+            Activation::ReLU => (a > 0.0) as u32 as f32,
+            Activation::Sigmoid => a * (1.0 - a),
+            Activation::Tanh => 1.0 - a * a,
+            Activation::Linear => 1.0,
+        }
+    }
+
+    pub fn parse(name: &str) -> Result<Self, String> {
+        match name.to_ascii_lowercase().as_str() {
+            "relu" => Ok(Activation::ReLU),
+            "sigmoid" => Ok(Activation::Sigmoid),
+            "tanh" => Ok(Activation::Tanh),
+            "linear" | "identity" => Ok(Activation::Linear),
+            other => Err(format!("unknown activation {other:?}")),
+        }
+    }
+}
+
+impl std::fmt::Display for Activation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Activation::ReLU => "relu",
+            Activation::Sigmoid => "sigmoid",
+            Activation::Tanh => "tanh",
+            Activation::Linear => "linear",
+        };
+        f.write_str(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relu_clamps() {
+        assert_eq!(Activation::ReLU.apply(-2.0), 0.0);
+        assert_eq!(Activation::ReLU.apply(3.0), 3.0);
+        assert_eq!(Activation::ReLU.deriv_from_output(0.0), 0.0);
+        assert_eq!(Activation::ReLU.deriv_from_output(3.0), 1.0);
+    }
+
+    #[test]
+    fn sigmoid_range_and_deriv() {
+        let a = Activation::Sigmoid.apply(0.0);
+        assert!((a - 0.5).abs() < 1e-6);
+        assert!((Activation::Sigmoid.deriv_from_output(a) - 0.25).abs() < 1e-6);
+        assert!(Activation::Sigmoid.apply(100.0) <= 1.0);
+        assert!(Activation::Sigmoid.apply(-100.0) >= 0.0);
+    }
+
+    #[test]
+    fn derivatives_match_finite_differences() {
+        let eps = 1e-3f32;
+        for act in [Activation::ReLU, Activation::Sigmoid, Activation::Tanh, Activation::Linear] {
+            for &z in &[-1.5f32, -0.3, 0.4, 1.2] {
+                if act == Activation::ReLU && z.abs() < 2.0 * eps {
+                    continue; // kink
+                }
+                let a = act.apply(z);
+                let num = (act.apply(z + eps) - act.apply(z - eps)) / (2.0 * eps);
+                let ana = act.deriv_from_output(a);
+                assert!((num - ana).abs() < 1e-2, "{act} at {z}: {num} vs {ana}");
+            }
+        }
+    }
+
+    #[test]
+    fn monotonicity_all_activations() {
+        // The Corollary-1 property: f must be monotone non-decreasing.
+        for act in [Activation::ReLU, Activation::Sigmoid, Activation::Tanh, Activation::Linear] {
+            let mut prev = f32::NEG_INFINITY;
+            for i in -100..100 {
+                let v = act.apply(i as f32 * 0.1);
+                assert!(v >= prev - 1e-6, "{act} not monotone");
+                prev = v;
+            }
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for act in [Activation::ReLU, Activation::Sigmoid, Activation::Tanh, Activation::Linear] {
+            assert_eq!(Activation::parse(&act.to_string()).unwrap(), act);
+        }
+        assert!(Activation::parse("swish").is_err());
+    }
+}

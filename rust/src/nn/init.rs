@@ -1,0 +1,53 @@
+//! Weight initialization (Glorot/Xavier uniform — the standard choice for
+//! the paper's fully-connected ReLU nets).
+
+use crate::tensor::matrix::Matrix;
+use crate::util::rng::Pcg64;
+
+/// Glorot-uniform init for a layer with `fan_out` x `fan_in` weights
+/// (row = output neuron).
+pub fn glorot_uniform(fan_out: usize, fan_in: usize, rng: &mut Pcg64) -> Matrix {
+    let limit = (6.0 / (fan_in + fan_out) as f32).sqrt();
+    Matrix::from_fn(fan_out, fan_in, |_, _| rng.range_f32(-limit, limit))
+}
+
+/// He-uniform init (ReLU-friendly variant; used by the ablation config).
+pub fn he_uniform(fan_out: usize, fan_in: usize, rng: &mut Pcg64) -> Matrix {
+    let limit = (6.0 / fan_in as f32).sqrt();
+    Matrix::from_fn(fan_out, fan_in, |_, _| rng.range_f32(-limit, limit))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn glorot_within_limit_and_centered() {
+        let mut rng = Pcg64::seeded(1);
+        let w = glorot_uniform(100, 200, &mut rng);
+        let limit = (6.0f32 / 300.0).sqrt();
+        let mut sum = 0.0f64;
+        for &v in w.as_slice() {
+            assert!(v.abs() <= limit);
+            sum += v as f64;
+        }
+        let mean = sum / (w.rows() * w.cols()) as f64;
+        assert!(mean.abs() < 0.003, "mean {mean}");
+    }
+
+    #[test]
+    fn he_has_larger_limit_than_glorot() {
+        let mut rng = Pcg64::seeded(2);
+        let g = glorot_uniform(64, 64, &mut rng);
+        let h = he_uniform(64, 64, &mut rng);
+        let max = |m: &Matrix| m.as_slice().iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+        assert!(max(&h) > max(&g));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = glorot_uniform(10, 10, &mut Pcg64::seeded(3));
+        let b = glorot_uniform(10, 10, &mut Pcg64::seeded(3));
+        assert_eq!(a, b);
+    }
+}

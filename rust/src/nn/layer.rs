@@ -1,0 +1,251 @@
+//! A fully-connected layer with both dense and sparse (active-set)
+//! execution paths. Weight layout: one row per output neuron, so the row is
+//! simultaneously (a) the gemv operand, (b) the LSH-indexed vector and
+//! (c) the contiguous slice the sparse update touches.
+
+use crate::nn::activation::Activation;
+use crate::nn::init::glorot_uniform;
+use crate::nn::sparse::{LayerInput, SparseVec};
+use crate::tensor::matrix::Matrix;
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Debug)]
+pub struct Layer {
+    pub w: Matrix,
+    pub b: Vec<f32>,
+    pub act: Activation,
+}
+
+impl Layer {
+    pub fn new(n_in: usize, n_out: usize, act: Activation, rng: &mut Pcg64) -> Self {
+        Layer { w: glorot_uniform(n_out, n_in, rng), b: vec![0.0; n_out], act }
+    }
+
+    pub fn n_in(&self) -> usize {
+        self.w.cols()
+    }
+
+    pub fn n_out(&self) -> usize {
+        self.w.rows()
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.w.rows() * self.w.cols() + self.b.len()
+    }
+
+    /// Dense forward: a = f(Wx + b). Returns multiplications performed.
+    pub fn forward_dense(&self, x: &[f32], out: &mut Vec<f32>) -> u64 {
+        out.clear();
+        out.reserve(self.n_out());
+        for i in 0..self.n_out() {
+            let z = crate::tensor::vecops::dot(self.w.row(i), x) + self.b[i];
+            out.push(self.act.apply(z));
+        }
+        (self.n_out() * self.n_in()) as u64
+    }
+
+    /// Sparse forward over a chosen active set: computes activations only
+    /// for nodes in `active` against the (possibly sparse) input. Returns
+    /// multiplications performed (the paper's sustainability metric).
+    pub fn forward_sparse(
+        &self,
+        input: LayerInput<'_>,
+        active: &[u32],
+        out: &mut SparseVec,
+    ) -> u64 {
+        out.clear();
+        for &i in active {
+            let z = input.dot_row(self.w.row(i as usize)) + self.b[i as usize];
+            out.push(i, self.act.apply(z));
+        }
+        (active.len() * input.active_len()) as u64
+    }
+
+    /// Pre-activations only (used by selectors that need z, e.g. adaptive
+    /// dropout's affine-of-activation probabilities).
+    pub fn preactivations_dense(&self, input: LayerInput<'_>, out: &mut Vec<f32>) -> u64 {
+        out.clear();
+        out.reserve(self.n_out());
+        for i in 0..self.n_out() {
+            out.push(input.dot_row(self.w.row(i)) + self.b[i]);
+        }
+        (self.n_out() * input.active_len()) as u64
+    }
+
+    /// Backward through the active set.
+    ///
+    /// Inputs: `input` (the layer's forward input), `out_act` (the sparse
+    /// activations produced by `forward_sparse`), `d_out` (dL/da for each
+    /// entry of `out_act`, parallel to `out_act.idx`).
+    ///
+    /// Produces `dz` (dL/dz per active node, parallel to `out_act.idx`) —
+    /// the caller feeds this to the optimizer to update rows — and
+    /// accumulates dL/d(input) into `d_input` (dense, length n_in), but
+    /// only at the input's active coordinates.
+    ///
+    /// Returns multiplications performed.
+    pub fn backward_sparse(
+        &self,
+        input: LayerInput<'_>,
+        out_act: &SparseVec,
+        d_out: &[f32],
+        dz: &mut Vec<f32>,
+        d_input: Option<&mut [f32]>,
+    ) -> u64 {
+        debug_assert_eq!(d_out.len(), out_act.len());
+        dz.clear();
+        for (k, (_, a)) in out_act.iter().enumerate() {
+            dz.push(d_out[k] * self.act.deriv_from_output(a));
+        }
+        let mut mults = 0u64;
+        if let Some(dx) = d_input {
+            match input {
+                LayerInput::Dense(x) => {
+                    debug_assert_eq!(dx.len(), x.len());
+                    for (k, &i) in out_act.idx.iter().enumerate() {
+                        let g = dz[k];
+                        if g == 0.0 {
+                            continue;
+                        }
+                        crate::tensor::vecops::axpy(g, self.w.row(i as usize), dx);
+                        mults += x.len() as u64;
+                    }
+                }
+                LayerInput::Sparse(s) => {
+                    for (k, &i) in out_act.idx.iter().enumerate() {
+                        let g = dz[k];
+                        if g == 0.0 {
+                            continue;
+                        }
+                        let row = self.w.row(i as usize);
+                        for &j in &s.idx {
+                            dx[j as usize] += g * row[j as usize];
+                        }
+                        mults += s.len() as u64;
+                    }
+                }
+            }
+        }
+        mults
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_layer() -> Layer {
+        let mut rng = Pcg64::seeded(1);
+        Layer::new(4, 3, Activation::ReLU, &mut rng)
+    }
+
+    #[test]
+    fn sparse_forward_matches_dense_on_full_active_set() {
+        let l = test_layer();
+        let x = [0.3, -0.2, 0.5, 0.1];
+        let mut dense = Vec::new();
+        l.forward_dense(&x, &mut dense);
+        let mut sparse = SparseVec::new();
+        let active: Vec<u32> = (0..3).collect();
+        l.forward_sparse(LayerInput::Dense(&x), &active, &mut sparse);
+        assert_eq!(sparse.to_dense(3), dense);
+    }
+
+    #[test]
+    fn sparse_forward_subset_only_touches_active() {
+        let l = test_layer();
+        let x = [1.0, 1.0, 1.0, 1.0];
+        let mut sparse = SparseVec::new();
+        let mults = l.forward_sparse(LayerInput::Dense(&x), &[1], &mut sparse);
+        assert_eq!(sparse.len(), 1);
+        assert_eq!(sparse.idx, vec![1]);
+        assert_eq!(mults, 4);
+    }
+
+    #[test]
+    fn sparse_input_forward_matches_densified() {
+        let l = test_layer();
+        let sv = SparseVec::from_pairs(&[(0, 0.7), (2, -0.4)]);
+        let dense_x = sv.to_dense(4);
+        let active: Vec<u32> = (0..3).collect();
+        let mut out_sparse = SparseVec::new();
+        let mut out_dense = SparseVec::new();
+        l.forward_sparse(LayerInput::Sparse(&sv), &active, &mut out_sparse);
+        l.forward_sparse(LayerInput::Dense(&dense_x), &active, &mut out_dense);
+        for (a, b) in out_sparse.val.iter().zip(&out_dense.val) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn backward_gradients_match_finite_differences() {
+        // Check dL/dW and dL/dx numerically with L = sum(a_active).
+        let mut l = test_layer();
+        l.act = Activation::Tanh; // smooth for finite differences
+        let x = [0.3, -0.2, 0.5, 0.1];
+        let active = vec![0u32, 2];
+
+        let loss = |l: &Layer, x: &[f32]| -> f32 {
+            let mut out = SparseVec::new();
+            l.forward_sparse(LayerInput::Dense(x), &active, &mut out);
+            out.val.iter().sum()
+        };
+
+        let mut out = SparseVec::new();
+        l.forward_sparse(LayerInput::Dense(&x), &active, &mut out);
+        let d_out = vec![1.0; out.len()];
+        let mut dz = Vec::new();
+        let mut dx = vec![0.0; 4];
+        l.backward_sparse(LayerInput::Dense(&x), &out, &d_out, &mut dz, Some(&mut dx));
+
+        let eps = 1e-3;
+        // dL/dx numeric
+        for j in 0..4 {
+            let mut xp = x;
+            xp[j] += eps;
+            let mut xm = x;
+            xm[j] -= eps;
+            let num = (loss(&l, &xp) - loss(&l, &xm)) / (2.0 * eps);
+            assert!((num - dx[j]).abs() < 1e-2, "dx[{j}]: num {num} vs {}", dx[j]);
+        }
+        // dL/dW numeric for a touched row/col: grad = dz[k] * x[j]
+        for (k, &i) in active.iter().enumerate() {
+            for j in 0..4 {
+                let orig = l.w.get(i as usize, j);
+                l.w.set(i as usize, j, orig + eps);
+                let lp = loss(&l, &x);
+                l.w.set(i as usize, j, orig - eps);
+                let lm = loss(&l, &x);
+                l.w.set(i as usize, j, orig);
+                let num = (lp - lm) / (2.0 * eps);
+                let ana = dz[k] * x[j];
+                assert!((num - ana).abs() < 1e-2, "dW[{i}][{j}]: {num} vs {ana}");
+            }
+        }
+    }
+
+    #[test]
+    fn backward_skips_relu_dead_units() {
+        let mut l = test_layer();
+        // Force node 0 dead (negative preactivation) for x = ones.
+        for v in l.w.row_mut(0) {
+            *v = -1.0;
+        }
+        let x = [1.0; 4];
+        let mut out = SparseVec::new();
+        l.forward_sparse(LayerInput::Dense(&x), &[0, 1], &mut out);
+        let mut dz = Vec::new();
+        let mut dx = vec![0.0; 4];
+        l.backward_sparse(LayerInput::Dense(&x), &out, &[1.0, 1.0], &mut dz, Some(&mut dx));
+        assert_eq!(dz[0], 0.0, "dead relu must have zero grad");
+    }
+
+    #[test]
+    fn multiplication_accounting_scales_with_active_set() {
+        let l = test_layer();
+        let sv = SparseVec::from_pairs(&[(1, 1.0), (3, 1.0)]);
+        let mut out = SparseVec::new();
+        let m = l.forward_sparse(LayerInput::Sparse(&sv), &[0, 2], &mut out);
+        assert_eq!(m, 4, "2 active out x 2 active in");
+    }
+}

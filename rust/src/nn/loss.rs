@@ -1,0 +1,75 @@
+//! Softmax cross-entropy over the output layer. The output layer is always
+//! fully computed (it is small — 2..10 classes in the paper's datasets);
+//! its *inputs* are the sparse hidden activations.
+
+use crate::tensor::vecops::{argmax, softmax_inplace};
+
+/// Computes loss and dL/dlogits in place. `logits` becomes the gradient.
+/// Returns (loss, predicted_class).
+pub fn softmax_xent_grad(logits: &mut [f32], label: u32) -> (f32, u32) {
+    debug_assert!((label as usize) < logits.len());
+    let pred = argmax(logits) as u32;
+    softmax_inplace(logits);
+    let p = logits[label as usize].max(1e-12);
+    let loss = -p.ln();
+    logits[label as usize] -= 1.0; // grad = softmax(z) - onehot(y)
+    (loss, pred)
+}
+
+/// Loss + prediction without mutating (evaluation path).
+pub fn softmax_xent(logits: &[f32], label: u32) -> (f32, u32) {
+    let mut tmp = logits.to_vec();
+    let pred = argmax(&tmp) as u32;
+    softmax_inplace(&mut tmp);
+    let p = tmp[label as usize].max(1e-12);
+    (-p.ln(), pred)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_logits_loss_is_log_n() {
+        let (loss, _) = softmax_xent(&[0.0; 10], 3);
+        assert!((loss - 10.0f32.ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn confident_correct_has_low_loss() {
+        let (loss, pred) = softmax_xent(&[10.0, 0.0, 0.0], 0);
+        assert!(loss < 1e-3);
+        assert_eq!(pred, 0);
+    }
+
+    #[test]
+    fn grad_sums_to_zero_and_matches_numeric() {
+        let logits = [0.5f32, -0.2, 1.0, 0.1];
+        let label = 2u32;
+        let mut g = logits;
+        let (loss, _) = softmax_xent_grad(&mut g, label);
+        assert!((g.iter().sum::<f32>()).abs() < 1e-5, "softmax-onehot grad sums to 0");
+        // numeric check
+        let eps = 1e-3;
+        for j in 0..4 {
+            let mut lp = logits;
+            lp[j] += eps;
+            let mut lm = logits;
+            lm[j] -= eps;
+            let num = (softmax_xent(&lp, label).0 - softmax_xent(&lm, label).0) / (2.0 * eps);
+            assert!((num - g[j]).abs() < 1e-2, "dlogit[{j}]: {num} vs {}", g[j]);
+        }
+        assert!(loss > 0.0);
+    }
+
+    #[test]
+    fn grad_variant_returns_same_loss_and_pred() {
+        let logits = [1.0f32, 3.0, -1.0];
+        let mut g = logits;
+        let (l1, p1) = softmax_xent_grad(&mut g, 1);
+        let (l2, p2) = softmax_xent(&logits, 1);
+        assert!((l1 - l2).abs() < 1e-6);
+        assert_eq!(p1, p2);
+        assert_eq!(p1, 1);
+    }
+}

@@ -1,0 +1,241 @@
+//! Low-rank baseline (paper §3, Fig 1): the alternative the paper argues
+//! *against*. A layer constrained to W = U·V (U: n_out×r, V: r×n_in)
+//! reduces multiplications from n_in·n_out to r·(n_in+n_out), but its
+//! gradient updates are dense — every parameter of U and V is touched by
+//! every example — which is exactly why it cannot Hogwild-scale (§3:
+//! "dense gradient update, which is not ideally suited for data
+//! parallelism"). Used by the ablation bench to quantify the trade.
+
+use crate::nn::activation::Activation;
+use crate::nn::init::glorot_uniform;
+use crate::tensor::matrix::Matrix;
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Debug)]
+pub struct LowRankLayer {
+    /// n_out x r
+    pub u: Matrix,
+    /// r x n_in
+    pub v: Matrix,
+    pub b: Vec<f32>,
+    pub act: Activation,
+}
+
+impl LowRankLayer {
+    pub fn new(n_in: usize, n_out: usize, rank: usize, act: Activation, rng: &mut Pcg64) -> Self {
+        assert!(rank >= 1 && rank <= n_in.min(n_out));
+        LowRankLayer {
+            u: glorot_uniform(n_out, rank, rng),
+            v: glorot_uniform(rank, n_in, rng),
+            b: vec![0.0; n_out],
+            act,
+        }
+    }
+
+    pub fn n_in(&self) -> usize {
+        self.v.cols()
+    }
+
+    pub fn n_out(&self) -> usize {
+        self.u.rows()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.u.cols()
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.u.rows() * self.u.cols() + self.v.rows() * self.v.cols() + self.b.len()
+    }
+
+    /// Multiplications per forward pass: r·(n_in + n_out) vs n_in·n_out.
+    pub fn mults_per_forward(&self) -> u64 {
+        (self.rank() * (self.n_in() + self.n_out())) as u64
+    }
+
+    /// Forward: a = f(U(Vx) + b). Writes the intermediate h = Vx for reuse
+    /// in backward. Returns multiplications.
+    pub fn forward(&self, x: &[f32], h: &mut Vec<f32>, out: &mut Vec<f32>) -> u64 {
+        h.clear();
+        h.resize(self.rank(), 0.0);
+        self.v.gemv(x, h);
+        out.clear();
+        out.resize(self.n_out(), 0.0);
+        self.u.gemv(h, out);
+        for (o, b) in out.iter_mut().zip(&self.b) {
+            *o = self.act.apply(*o + b);
+        }
+        self.mults_per_forward()
+    }
+
+    /// Backward + SGD update (DENSE — the point of the §3 comparison).
+    /// `d_out` is dL/da (length n_out); computes dL/dx into `d_x` if given.
+    /// Returns multiplications.
+    pub fn backward_sgd(
+        &mut self,
+        x: &[f32],
+        h: &[f32],
+        out: &[f32],
+        d_out: &[f32],
+        lr: f32,
+        d_x: Option<&mut [f32]>,
+    ) -> u64 {
+        let n_out = self.n_out();
+        let r = self.rank();
+        let n_in = self.n_in();
+        // dz = d_out * f'(a)
+        let dz: Vec<f32> = (0..n_out)
+            .map(|i| d_out[i] * self.act.deriv_from_output(out[i]))
+            .collect();
+        // dh = U^T dz
+        let mut dh = vec![0.0f32; r];
+        for i in 0..n_out {
+            let g = dz[i];
+            if g == 0.0 {
+                continue;
+            }
+            for (j, dh_j) in dh.iter_mut().enumerate() {
+                *dh_j += g * self.u.get(i, j);
+            }
+        }
+        // dx = V^T dh (optional)
+        let mut mults = (n_out * r) as u64;
+        if let Some(dx) = d_x {
+            for j in 0..r {
+                let g = dh[j];
+                if g == 0.0 {
+                    continue;
+                }
+                crate::tensor::vecops::axpy(g, self.v.row(j), dx);
+            }
+            mults += (r * n_in) as u64;
+        }
+        // DENSE updates: U -= lr dz h^T ; V -= lr dh x^T ; b -= lr dz.
+        for i in 0..n_out {
+            let g = lr * dz[i];
+            if g != 0.0 {
+                for (j, &hj) in h.iter().enumerate() {
+                    let w = self.u.get(i, j) - g * hj;
+                    self.u.set(i, j, w);
+                }
+            }
+            self.b[i] -= lr * dz[i];
+        }
+        for j in 0..r {
+            let g = lr * dh[j];
+            if g != 0.0 {
+                let row = self.v.row_mut(j);
+                for (k, &xk) in x.iter().enumerate() {
+                    row[k] -= g * xk;
+                }
+            }
+        }
+        mults + (n_out * r + r * n_in) as u64
+    }
+
+    /// Materialize W = U·V (for the Fig-1 equivalence test).
+    pub fn materialize(&self) -> Matrix {
+        self.u.matmul(&self.v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::layer::Layer;
+
+    #[test]
+    fn fig1_equivalence_with_full_layer() {
+        // f(U(Vx)+b) must equal f((UV)x + b) — the paper's Fig 1 identity.
+        let mut rng = Pcg64::seeded(1);
+        let lr_layer = LowRankLayer::new(8, 6, 3, Activation::ReLU, &mut rng);
+        let w = lr_layer.materialize();
+        let full = Layer { w, b: lr_layer.b.clone(), act: Activation::ReLU };
+        let x: Vec<f32> = (0..8).map(|_| rng.gaussian()).collect();
+        let (mut h, mut a_lr, mut a_full) = (Vec::new(), Vec::new(), Vec::new());
+        lr_layer.forward(&x, &mut h, &mut a_lr);
+        full.forward_dense(&x, &mut a_full);
+        for (a, b) in a_lr.iter().zip(&a_full) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn fewer_mults_than_full_when_rank_small() {
+        let mut rng = Pcg64::seeded(2);
+        let l = LowRankLayer::new(1000, 1000, 50, Activation::ReLU, &mut rng);
+        assert_eq!(l.mults_per_forward(), 50 * 2000);
+        assert!(l.mults_per_forward() < 1000 * 1000);
+        assert!(l.n_params() < 1000 * 1000);
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let mut rng = Pcg64::seeded(3);
+        let mut l = LowRankLayer::new(5, 4, 2, Activation::Tanh, &mut rng);
+        let x: Vec<f32> = (0..5).map(|_| rng.gaussian()).collect();
+        let loss = |l: &LowRankLayer, x: &[f32]| -> f32 {
+            let (mut h, mut a) = (Vec::new(), Vec::new());
+            l.forward(x, &mut h, &mut a);
+            a.iter().sum()
+        };
+        // Analytic dx via backward with lr=0 (no update).
+        let (mut h, mut a) = (Vec::new(), Vec::new());
+        l.forward(&x, &mut h, &mut a);
+        let d_out = vec![1.0; 4];
+        let mut dx = vec![0.0; 5];
+        let mut l2 = l.clone();
+        l2.backward_sgd(&x, &h, &a, &d_out, 0.0, Some(&mut dx));
+        let eps = 1e-3;
+        for j in 0..5 {
+            let mut xp = x.clone();
+            xp[j] += eps;
+            let mut xm = x.clone();
+            xm[j] -= eps;
+            let num = (loss(&l, &xp) - loss(&l, &xm)) / (2.0 * eps);
+            assert!((num - dx[j]).abs() < 1e-2, "dx[{j}]: {num} vs {}", dx[j]);
+        }
+    }
+
+    #[test]
+    fn sgd_descends_on_regression_target() {
+        let mut rng = Pcg64::seeded(4);
+        let mut l = LowRankLayer::new(6, 3, 2, Activation::Linear, &mut rng);
+        let x: Vec<f32> = (0..6).map(|_| rng.gaussian()).collect();
+        let target = [1.0f32, -1.0, 0.5];
+        let mse = |l: &LowRankLayer, x: &[f32]| -> f32 {
+            let (mut h, mut a) = (Vec::new(), Vec::new());
+            l.forward(x, &mut h, &mut a);
+            a.iter().zip(&target).map(|(o, t)| (o - t) * (o - t)).sum()
+        };
+        let before = mse(&l, &x);
+        for _ in 0..50 {
+            let (mut h, mut a) = (Vec::new(), Vec::new());
+            l.forward(&x, &mut h, &mut a);
+            let d_out: Vec<f32> = a.iter().zip(&target).map(|(o, t)| 2.0 * (o - t)).collect();
+            l.backward_sgd(&x, &h, &a, &d_out, 0.05, None);
+        }
+        let after = mse(&l, &x);
+        assert!(after < before * 0.1, "MSE {before} -> {after}");
+    }
+
+    #[test]
+    fn update_is_dense_every_parameter_moves() {
+        // The §3 contrast: unlike the sparse path, EVERY U and V entry
+        // changes after one example (for a generic input).
+        let mut rng = Pcg64::seeded(5);
+        let mut l = LowRankLayer::new(4, 4, 2, Activation::Linear, &mut rng);
+        let u0 = l.u.clone();
+        let v0 = l.v.clone();
+        let x: Vec<f32> = (0..4).map(|_| rng.gaussian() + 2.0).collect();
+        let (mut h, mut a) = (Vec::new(), Vec::new());
+        l.forward(&x, &mut h, &mut a);
+        l.backward_sgd(&x, &h, &a, &[1.0; 4], 0.1, None);
+        let moved_u =
+            l.u.as_slice().iter().zip(u0.as_slice()).filter(|(a, b)| a != b).count();
+        let moved_v =
+            l.v.as_slice().iter().zip(v0.as_slice()).filter(|(a, b)| a != b).count();
+        assert_eq!(moved_u, 8, "all of U touched");
+        assert_eq!(moved_v, 8, "all of V touched");
+    }
+}

@@ -1,0 +1,15 @@
+//! Neural-network core: layers with dense *and* sparse (active-set)
+//! execution paths, activations, loss, and the network container.
+
+pub mod activation;
+pub mod init;
+pub mod layer;
+pub mod loss;
+pub mod lowrank;
+pub mod network;
+pub mod sparse;
+
+pub use activation::Activation;
+pub use layer::Layer;
+pub use network::{Network, NetworkConfig};
+pub use sparse::{LayerInput, SparseVec};

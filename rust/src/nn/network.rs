@@ -1,0 +1,181 @@
+//! A fully-connected network: stack of [`Layer`]s with a softmax
+//! cross-entropy head. Dense paths here serve evaluation and the in-rust
+//! STD baseline; the sparse training orchestration (selector-driven) lives
+//! in [`crate::train::trainer`].
+
+use crate::nn::activation::Activation;
+use crate::nn::layer::Layer;
+use crate::nn::loss::softmax_xent;
+use crate::util::rng::Pcg64;
+
+/// Architecture description. `hidden` uses one size for all hidden layers
+/// (the paper: 1000 nodes per hidden layer, 2 or 3 layers).
+#[derive(Clone, Debug)]
+pub struct NetworkConfig {
+    pub n_in: usize,
+    pub hidden: Vec<usize>,
+    pub n_out: usize,
+    pub act: Activation,
+}
+
+impl NetworkConfig {
+    pub fn paper(n_in: usize, n_out: usize, depth: usize) -> Self {
+        NetworkConfig { n_in, hidden: vec![1000; depth], n_out, act: Activation::ReLU }
+    }
+
+    pub fn dims(&self) -> Vec<usize> {
+        let mut d = vec![self.n_in];
+        d.extend_from_slice(&self.hidden);
+        d.push(self.n_out);
+        d
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Network {
+    pub layers: Vec<Layer>,
+}
+
+impl Network {
+    pub fn new(cfg: &NetworkConfig, rng: &mut Pcg64) -> Self {
+        let dims = cfg.dims();
+        let mut layers = Vec::with_capacity(dims.len() - 1);
+        for w in dims.windows(2) {
+            let act = if layers.len() + 2 == dims.len() {
+                // Output layer: linear logits (softmax applied in the loss).
+                Activation::Linear
+            } else {
+                cfg.act
+            };
+            layers.push(Layer::new(w[0], w[1], act, rng));
+        }
+        Network { layers }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Hidden layer count (layers that get hash tables / selectors).
+    pub fn n_hidden(&self) -> usize {
+        self.layers.len() - 1
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.layers.iter().map(|l| l.n_params()).sum()
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.layers.last().expect("empty network").n_out()
+    }
+
+    /// Dense forward producing logits. Returns multiplications used.
+    pub fn forward_dense(&self, x: &[f32], logits: &mut Vec<f32>) -> u64 {
+        self.forward_dense_scaled(x, 1.0, logits)
+    }
+
+    /// Dense forward with hidden activations scaled by `hidden_scale` —
+    /// the weight-scaling inference rule for dropout-trained networks
+    /// (Srivastava et al. 2014): a net trained with keep probability p
+    /// approximates the ensemble at test time by scaling activations by p.
+    pub fn forward_dense_scaled(
+        &self,
+        x: &[f32],
+        hidden_scale: f32,
+        logits: &mut Vec<f32>,
+    ) -> u64 {
+        let mut cur = x.to_vec();
+        let mut next = Vec::new();
+        let mut mults = 0u64;
+        let n_hidden = self.n_hidden();
+        for (l, layer) in self.layers.iter().enumerate() {
+            mults += layer.forward_dense(&cur, &mut next);
+            if hidden_scale != 1.0 && l < n_hidden {
+                for v in &mut next {
+                    *v *= hidden_scale;
+                }
+            }
+            std::mem::swap(&mut cur, &mut next);
+        }
+        *logits = cur;
+        mults
+    }
+
+    /// Dense prediction.
+    pub fn predict(&self, x: &[f32]) -> u32 {
+        let mut logits = Vec::new();
+        self.forward_dense(x, &mut logits);
+        crate::tensor::vecops::argmax(&logits) as u32
+    }
+
+    /// Dense evaluation over a set of examples: (mean loss, accuracy).
+    pub fn evaluate(&self, xs: &[Vec<f32>], ys: &[u32]) -> (f32, f32) {
+        assert_eq!(xs.len(), ys.len());
+        let mut logits = Vec::new();
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0usize;
+        for (x, &y) in xs.iter().zip(ys) {
+            self.forward_dense(x, &mut logits);
+            let (loss, pred) = softmax_xent(&logits, y);
+            loss_sum += loss as f64;
+            correct += (pred == y) as usize;
+        }
+        ((loss_sum / xs.len() as f64) as f32, correct as f32 / xs.len() as f32)
+    }
+
+    /// Total dense multiplications for one forward pass (the 100% budget
+    /// the paper's "percentage of active nodes" is measured against).
+    pub fn dense_mults_per_example(&self) -> u64 {
+        self.layers.iter().map(|l| (l.n_in() * l.n_out()) as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> NetworkConfig {
+        NetworkConfig { n_in: 8, hidden: vec![16, 16], n_out: 3, act: Activation::ReLU }
+    }
+
+    #[test]
+    fn construction_shapes() {
+        let mut rng = Pcg64::seeded(1);
+        let net = Network::new(&cfg(), &mut rng);
+        assert_eq!(net.n_layers(), 3);
+        assert_eq!(net.n_hidden(), 2);
+        assert_eq!(net.layers[0].n_in(), 8);
+        assert_eq!(net.layers[2].n_out(), 3);
+        assert_eq!(net.layers[2].act, Activation::Linear);
+        assert_eq!(net.n_params(), 8 * 16 + 16 + 16 * 16 + 16 + 16 * 3 + 3);
+    }
+
+    #[test]
+    fn paper_config() {
+        let c = NetworkConfig::paper(784, 10, 3);
+        assert_eq!(c.dims(), vec![784, 1000, 1000, 1000, 10]);
+    }
+
+    #[test]
+    fn forward_produces_logits_of_right_size() {
+        let mut rng = Pcg64::seeded(2);
+        let net = Network::new(&cfg(), &mut rng);
+        let mut logits = Vec::new();
+        let mults = net.forward_dense(&[0.5; 8], &mut logits);
+        assert_eq!(logits.len(), 3);
+        assert_eq!(mults, (8 * 16 + 16 * 16 + 16 * 3) as u64);
+        assert_eq!(mults, net.dense_mults_per_example());
+    }
+
+    #[test]
+    fn evaluate_on_trivially_separable_data() {
+        // An untrained network should get ~chance accuracy; the API works.
+        let mut rng = Pcg64::seeded(3);
+        let net = Network::new(&cfg(), &mut rng);
+        let xs: Vec<Vec<f32>> = (0..30).map(|i| vec![(i % 3) as f32; 8]).collect();
+        let ys: Vec<u32> = (0..30).map(|i| i % 3).collect();
+        let (loss, acc) = net.evaluate(&xs, &ys);
+        assert!(loss > 0.0);
+        assert!((0.0..=1.0).contains(&acc));
+    }
+}

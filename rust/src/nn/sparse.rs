@@ -1,0 +1,143 @@
+//! Sparse activation vectors: parallel (index, value) arrays. The active
+//! set AS of a layer is exactly the `idx` array; values are the
+//! activations of those nodes. Everything off the active set is implicitly
+//! zero and is never touched (the paper's source of computational savings).
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SparseVec {
+    pub idx: Vec<u32>,
+    pub val: Vec<f32>,
+}
+
+impl SparseVec {
+    pub fn new() -> Self {
+        SparseVec::default()
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        SparseVec { idx: Vec::with_capacity(n), val: Vec::with_capacity(n) }
+    }
+
+    pub fn from_pairs(pairs: &[(u32, f32)]) -> Self {
+        SparseVec {
+            idx: pairs.iter().map(|p| p.0).collect(),
+            val: pairs.iter().map(|p| p.1).collect(),
+        }
+    }
+
+    /// Densify into a full vector of length `dim` (tests/eval only).
+    pub fn to_dense(&self, dim: usize) -> Vec<f32> {
+        let mut out = vec![0.0; dim];
+        for (&i, &v) in self.idx.iter().zip(&self.val) {
+            out[i as usize] = v;
+        }
+        out
+    }
+
+    /// Build from a dense slice keeping only non-zeros.
+    pub fn from_dense(x: &[f32]) -> Self {
+        let mut sv = SparseVec::new();
+        for (i, &v) in x.iter().enumerate() {
+            if v != 0.0 {
+                sv.idx.push(i as u32);
+                sv.val.push(v);
+            }
+        }
+        sv
+    }
+
+    pub fn len(&self) -> usize {
+        self.idx.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.idx.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.idx.clear();
+        self.val.clear();
+    }
+
+    pub fn push(&mut self, i: u32, v: f32) {
+        self.idx.push(i);
+        self.val.push(v);
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (u32, f32)> + '_ {
+        self.idx.iter().copied().zip(self.val.iter().copied())
+    }
+}
+
+/// Input to a layer: either a dense feature vector (network input) or the
+/// sparse activations of the previous hidden layer.
+#[derive(Clone, Copy, Debug)]
+pub enum LayerInput<'a> {
+    Dense(&'a [f32]),
+    Sparse(&'a SparseVec),
+}
+
+impl<'a> LayerInput<'a> {
+    /// Number of *active* entries (dense inputs count every component —
+    /// that is also how the paper counts multiplications for layer 1).
+    pub fn active_len(&self) -> usize {
+        match self {
+            LayerInput::Dense(x) => x.len(),
+            LayerInput::Sparse(s) => s.len(),
+        }
+    }
+
+    /// Inner product with a weight row.
+    #[inline]
+    pub fn dot_row(&self, row: &[f32]) -> f32 {
+        match self {
+            LayerInput::Dense(x) => crate::tensor::vecops::dot(row, x),
+            LayerInput::Sparse(s) => {
+                let mut acc = 0.0f32;
+                for (&j, &v) in s.idx.iter().zip(&s.val) {
+                    acc += row[j as usize] * v;
+                }
+                acc
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_sparse_roundtrip() {
+        let x = [0.0, 1.5, 0.0, -2.0, 0.0];
+        let sv = SparseVec::from_dense(&x);
+        assert_eq!(sv.len(), 2);
+        assert_eq!(sv.to_dense(5), x);
+    }
+
+    #[test]
+    fn dot_row_matches_dense() {
+        let row = [1.0, 2.0, 3.0, 4.0];
+        let x = [0.5, 0.0, -1.0, 2.0];
+        let dense = LayerInput::Dense(&x).dot_row(&row);
+        let sv = SparseVec::from_dense(&x);
+        let sparse = LayerInput::Sparse(&sv).dot_row(&row);
+        assert!((dense - sparse).abs() < 1e-6);
+        assert!((dense - 5.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn from_pairs_and_iter() {
+        let sv = SparseVec::from_pairs(&[(3, 1.0), (1, 2.0)]);
+        let pairs: Vec<(u32, f32)> = sv.iter().collect();
+        assert_eq!(pairs, vec![(3, 1.0), (1, 2.0)]);
+    }
+
+    #[test]
+    fn active_len_semantics() {
+        let x = [0.0, 0.0, 1.0];
+        assert_eq!(LayerInput::Dense(&x).active_len(), 3);
+        let sv = SparseVec::from_dense(&x);
+        assert_eq!(LayerInput::Sparse(&sv).active_len(), 1);
+    }
+}

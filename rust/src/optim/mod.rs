@@ -1,0 +1,243 @@
+//! Sparse-aware optimizers. The paper trains with "stochastic gradient
+//! descent with Momentum and Adagrad" (§6.2.1): Adagrad scales the raw
+//! gradient by accumulated squared magnitude, Momentum smooths the scaled
+//! step. All state updates touch only the (row, active-input) coordinates
+//! of the active set — the property that makes Hogwild updates conflict-free.
+
+use crate::nn::sparse::LayerInput;
+use crate::tensor::matrix::Matrix;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptimizerKind {
+    Sgd,
+    Momentum,
+    Adagrad,
+    /// Adagrad-normalized gradient fed through momentum (paper default).
+    MomentumAdagrad,
+}
+
+impl OptimizerKind {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "sgd" => Ok(OptimizerKind::Sgd),
+            "momentum" => Ok(OptimizerKind::Momentum),
+            "adagrad" => Ok(OptimizerKind::Adagrad),
+            "momentum-adagrad" | "madagrad" => Ok(OptimizerKind::MomentumAdagrad),
+            other => Err(format!("unknown optimizer {other:?}")),
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct OptimConfig {
+    pub kind: OptimizerKind,
+    pub lr: f32,
+    /// Momentum decay γ.
+    pub gamma: f32,
+    /// Adagrad denominator fuzz.
+    pub eps: f32,
+}
+
+impl Default for OptimConfig {
+    fn default() -> Self {
+        OptimConfig { kind: OptimizerKind::MomentumAdagrad, lr: 1e-2, gamma: 0.9, eps: 1e-8 }
+    }
+}
+
+/// Per-layer optimizer state (same shape as the layer parameters).
+#[derive(Clone, Debug)]
+struct LayerState {
+    velocity_w: Option<Matrix>,
+    velocity_b: Option<Vec<f32>>,
+    accum_w: Option<Matrix>,
+    accum_b: Option<Vec<f32>>,
+}
+
+/// Optimizer over a whole network's parameters.
+#[derive(Clone, Debug)]
+pub struct Optimizer {
+    pub cfg: OptimConfig,
+    state: Vec<LayerState>,
+}
+
+impl Optimizer {
+    /// `layer_dims`: (n_in, n_out) per layer.
+    pub fn new(cfg: OptimConfig, layer_dims: &[(usize, usize)]) -> Self {
+        let needs_vel =
+            matches!(cfg.kind, OptimizerKind::Momentum | OptimizerKind::MomentumAdagrad);
+        let needs_acc =
+            matches!(cfg.kind, OptimizerKind::Adagrad | OptimizerKind::MomentumAdagrad);
+        let state = layer_dims
+            .iter()
+            .map(|&(n_in, n_out)| LayerState {
+                velocity_w: needs_vel.then(|| Matrix::zeros(n_out, n_in)),
+                velocity_b: needs_vel.then(|| vec![0.0; n_out]),
+                accum_w: needs_acc.then(|| Matrix::zeros(n_out, n_in)),
+                accum_b: needs_acc.then(|| vec![0.0; n_out]),
+            })
+            .collect();
+        Optimizer { cfg, state }
+    }
+
+    pub fn for_network(cfg: OptimConfig, net: &crate::nn::network::Network) -> Self {
+        let dims: Vec<(usize, usize)> =
+            net.layers.iter().map(|l| (l.n_in(), l.n_out())).collect();
+        Self::new(cfg, &dims)
+    }
+
+    #[inline]
+    fn step_value(
+        kind: OptimizerKind,
+        cfg: &OptimConfig,
+        g: f32,
+        vel: Option<&mut f32>,
+        acc: Option<&mut f32>,
+    ) -> f32 {
+        let scaled = match kind {
+            OptimizerKind::Sgd | OptimizerKind::Momentum => cfg.lr * g,
+            OptimizerKind::Adagrad | OptimizerKind::MomentumAdagrad => {
+                let a = acc.expect("adagrad state");
+                *a += g * g;
+                cfg.lr * g / (a.sqrt() + cfg.eps)
+            }
+        };
+        match kind {
+            OptimizerKind::Sgd | OptimizerKind::Adagrad => scaled,
+            OptimizerKind::Momentum | OptimizerKind::MomentumAdagrad => {
+                let v = vel.expect("momentum state");
+                *v = cfg.gamma * *v + scaled;
+                *v
+            }
+        }
+    }
+
+    /// Apply the update for one output neuron `row` of layer `layer`:
+    /// grad(W[row][j]) = dz * a_j over the active input coordinates, and
+    /// grad(b[row]) = dz. Mutates the weight row and bias in place.
+    /// Returns multiplications performed.
+    pub fn update_row(
+        &mut self,
+        layer: usize,
+        row: usize,
+        dz: f32,
+        input: LayerInput<'_>,
+        w_row: &mut [f32],
+        b: &mut f32,
+    ) -> u64 {
+        let kind = self.cfg.kind;
+        let cfg = self.cfg;
+        let st = &mut self.state[layer];
+        let mut mults;
+        match input {
+            LayerInput::Dense(x) => {
+                mults = x.len() as u64;
+                for (j, &xj) in x.iter().enumerate() {
+                    let g = dz * xj;
+                    let vel = st.velocity_w.as_mut().map(|m| &mut m.row_mut(row)[j]);
+                    let acc = st.accum_w.as_mut().map(|m| &mut m.row_mut(row)[j]);
+                    w_row[j] -= Self::step_value(kind, &cfg, g, vel, acc);
+                }
+            }
+            LayerInput::Sparse(s) => {
+                mults = s.len() as u64;
+                for (&j, &xj) in s.idx.iter().zip(&s.val) {
+                    let j = j as usize;
+                    let g = dz * xj;
+                    let vel = st.velocity_w.as_mut().map(|m| &mut m.row_mut(row)[j]);
+                    let acc = st.accum_w.as_mut().map(|m| &mut m.row_mut(row)[j]);
+                    w_row[j] -= Self::step_value(kind, &cfg, g, vel, acc);
+                }
+            }
+        }
+        let vel = st.velocity_b.as_mut().map(|v| &mut v[row]);
+        let acc = st.accum_b.as_mut().map(|v| &mut v[row]);
+        *b -= Self::step_value(kind, &cfg, dz, vel, acc);
+        mults += 1;
+        mults
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::sparse::SparseVec;
+
+    fn mk(kind: OptimizerKind, lr: f32) -> Optimizer {
+        Optimizer::new(OptimConfig { kind, lr, gamma: 0.9, eps: 1e-8 }, &[(4, 2)])
+    }
+
+    #[test]
+    fn sgd_step_matches_formula() {
+        let mut opt = mk(OptimizerKind::Sgd, 0.1);
+        let x = [1.0, 2.0, 0.0, -1.0];
+        let mut w = [0.0f32; 4];
+        let mut b = 0.0f32;
+        opt.update_row(0, 0, 0.5, LayerInput::Dense(&x), &mut w, &mut b);
+        assert_eq!(w, [-0.05, -0.1, 0.0, 0.05]);
+        assert!((b + 0.05).abs() < 1e-7);
+    }
+
+    #[test]
+    fn sparse_update_touches_only_active_columns() {
+        let mut opt = mk(OptimizerKind::Sgd, 0.1);
+        let s = SparseVec::from_pairs(&[(1, 2.0)]);
+        let mut w = [1.0f32; 4];
+        let mut b = 0.0f32;
+        opt.update_row(0, 1, 1.0, LayerInput::Sparse(&s), &mut w, &mut b);
+        assert_eq!(w, [1.0, 0.8, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn momentum_accumulates_velocity() {
+        let mut opt = mk(OptimizerKind::Momentum, 0.1);
+        let x = [1.0, 0.0, 0.0, 0.0];
+        let mut w = [0.0f32; 4];
+        let mut b = 0.0f32;
+        opt.update_row(0, 0, 1.0, LayerInput::Dense(&x), &mut w, &mut b);
+        let w1 = w[0]; // -0.1
+        opt.update_row(0, 0, 1.0, LayerInput::Dense(&x), &mut w, &mut b);
+        // second step: v = 0.9*0.1 + 0.1 = 0.19 -> w = -0.29
+        assert!((w1 + 0.1).abs() < 1e-6);
+        assert!((w[0] + 0.29).abs() < 1e-6);
+    }
+
+    #[test]
+    fn adagrad_shrinks_effective_lr() {
+        let mut opt = mk(OptimizerKind::Adagrad, 0.1);
+        let x = [1.0, 0.0, 0.0, 0.0];
+        let mut w = [0.0f32; 4];
+        let mut b = 0.0f32;
+        opt.update_row(0, 0, 1.0, LayerInput::Dense(&x), &mut w, &mut b);
+        let step1 = -w[0]; // lr * 1/sqrt(1) = 0.1
+        let before = w[0];
+        opt.update_row(0, 0, 1.0, LayerInput::Dense(&x), &mut w, &mut b);
+        let step2 = before - w[0]; // lr / sqrt(2) ≈ 0.0707
+        assert!((step1 - 0.1).abs() < 1e-5);
+        assert!(step2 < step1);
+        assert!((step2 - 0.1 / 2.0f32.sqrt()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn momentum_adagrad_composes() {
+        let mut opt = mk(OptimizerKind::MomentumAdagrad, 0.1);
+        let x = [1.0, 0.0, 0.0, 0.0];
+        let mut w = [0.0f32; 4];
+        let mut b = 0.0f32;
+        opt.update_row(0, 0, 1.0, LayerInput::Dense(&x), &mut w, &mut b);
+        // step = momentum(adagrad(g)) = 0.9*0 + 0.1*1/1 = 0.1
+        assert!((w[0] + 0.1).abs() < 1e-5);
+        opt.update_row(0, 0, 1.0, LayerInput::Dense(&x), &mut w, &mut b);
+        // v = 0.9*0.1 + 0.1/sqrt(2) ≈ 0.1607
+        assert!((w[0] + 0.2607).abs() < 1e-3);
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(OptimizerKind::parse("sgd").unwrap(), OptimizerKind::Sgd);
+        assert_eq!(
+            OptimizerKind::parse("momentum-adagrad").unwrap(),
+            OptimizerKind::MomentumAdagrad
+        );
+        assert!(OptimizerKind::parse("adam").is_err());
+    }
+}

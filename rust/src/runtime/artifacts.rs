@@ -1,0 +1,133 @@
+//! Artifact registry: maps dataset variants to their AOT artifact paths
+//! and declared layer shapes, cross-checked against the manifest emitted
+//! by `python/compile/aot.py`.
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Variant table — must stay in sync with `python/compile/model.py`
+/// VARIANTS (the manifest check below catches drift).
+pub const VARIANTS: &[(&str, usize, usize, usize, usize)] = &[
+    // (name, input_dim, n_classes, hidden, depth)
+    ("mnist", 784, 10, 1000, 3),
+    ("norb", 2048, 5, 1000, 3),
+    ("convex", 784, 2, 1000, 3),
+    ("rectangles", 784, 2, 1000, 3),
+    ("tiny", 16, 2, 32, 2),
+];
+
+/// LSH parameters baked into the simhash artifacts (aot.py).
+pub const SIMHASH_K: usize = 6;
+pub const SIMHASH_L: usize = 5;
+pub const SIMHASH_BATCH: usize = 16;
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSet {
+    pub variant: String,
+    pub input_dim: usize,
+    pub n_classes: usize,
+    /// (n_in, n_out) per layer.
+    pub layer_dims: Vec<(usize, usize)>,
+    pub step_path: PathBuf,
+    pub fwd_path: PathBuf,
+    pub simhash_path: PathBuf,
+}
+
+impl ArtifactSet {
+    /// Resolve a variant's artifacts under `dir`, verifying files exist.
+    pub fn resolve(dir: &Path, variant: &str) -> Result<Self> {
+        let &(name, input_dim, n_classes, hidden, depth) = VARIANTS
+            .iter()
+            .find(|v| v.0 == variant)
+            .with_context(|| format!("unknown variant {variant:?}"))?;
+        let mut dims = vec![input_dim];
+        dims.extend(std::iter::repeat(hidden).take(depth));
+        dims.push(n_classes);
+        let layer_dims: Vec<(usize, usize)> =
+            dims.windows(2).map(|w| (w[0], w[1])).collect();
+        let set = ArtifactSet {
+            variant: name.to_string(),
+            input_dim,
+            n_classes,
+            layer_dims,
+            step_path: dir.join(format!("mlp_step_{name}.hlo.txt")),
+            fwd_path: dir.join(format!("mlp_fwd_{name}.hlo.txt")),
+            simhash_path: dir.join(format!("simhash_{name}.hlo.txt")),
+        };
+        for p in [&set.step_path, &set.fwd_path, &set.simhash_path] {
+            if !p.exists() {
+                bail!(
+                    "missing artifact {} — run `make artifacts` first",
+                    p.display()
+                );
+            }
+        }
+        Ok(set)
+    }
+
+    /// Validate against the aot.py manifest (first arg of mlp_fwd must be
+    /// the first weight matrix with our expected shape).
+    pub fn check_manifest(&self, dir: &Path) -> Result<()> {
+        let text = std::fs::read_to_string(dir.join("manifest.txt"))
+            .context("reading artifacts/manifest.txt")?;
+        let key = format!("mlp_fwd_{} ", self.variant);
+        let line = text
+            .lines()
+            .find(|l| l.starts_with(&key))
+            .with_context(|| format!("manifest missing {key}"))?;
+        let sig = line.split_once(' ').unwrap().1;
+        let first = sig.split(';').next().unwrap_or("");
+        let expect = format!(
+            "{}x{}:float32",
+            self.layer_dims[0].1, self.layer_dims[0].0
+        );
+        if first != expect {
+            bail!("manifest drift: expected first param {expect}, manifest says {first}");
+        }
+        Ok(())
+    }
+
+    /// Default artifacts directory: $HASHDL_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("HASHDL_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_table_has_paper_architectures() {
+        let m = VARIANTS.iter().find(|v| v.0 == "mnist").unwrap();
+        assert_eq!((m.1, m.2, m.3, m.4), (784, 10, 1000, 3));
+        let n = VARIANTS.iter().find(|v| v.0 == "norb").unwrap();
+        assert_eq!((n.1, n.2), (2048, 5));
+    }
+
+    #[test]
+    fn unknown_variant_rejected() {
+        assert!(ArtifactSet::resolve(Path::new("/nonexistent"), "nope").is_err());
+    }
+
+    #[test]
+    fn missing_files_reported() {
+        let err = ArtifactSet::resolve(Path::new("/nonexistent"), "tiny").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn layer_dims_chain() {
+        // Verified against a real dir only in integration tests; here just
+        // check the dim chain construction via a fake resolve failure path.
+        let dims = {
+            let mut dims = vec![784usize];
+            dims.extend(std::iter::repeat(1000).take(3));
+            dims.push(10);
+            dims.windows(2).map(|w| (w[0], w[1])).collect::<Vec<_>>()
+        };
+        assert_eq!(dims, vec![(784, 1000), (1000, 1000), (1000, 1000), (1000, 10)]);
+    }
+}

@@ -1,0 +1,11 @@
+//! PJRT runtime: loads `artifacts/*.hlo.txt` (AOT-lowered JAX/Pallas) and
+//! executes them from rust. HLO text is the interchange format — see
+//! python/compile/aot.py for why (proto id width mismatch).
+
+pub mod artifacts;
+pub mod pjrt;
+pub mod std_baseline;
+
+pub use artifacts::ArtifactSet;
+pub use pjrt::{Executable, PjrtRuntime};
+pub use std_baseline::StdBaseline;

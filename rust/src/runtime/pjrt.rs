@@ -1,0 +1,137 @@
+//! PJRT execution of AOT artifacts: load HLO text produced by
+//! `python/compile/aot.py`, compile once on the CPU client, execute many
+//! times from the rust hot path. Python is never involved at runtime.
+
+use crate::tensor::matrix::Matrix;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Process-wide PJRT client + compiled-executable cache.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> Result<Self> {
+        Ok(PjrtRuntime { client: xla::PjRtClient::cpu()? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + parse + compile one HLO-text artifact.
+    pub fn load(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe, name: path.display().to_string() })
+    }
+}
+
+/// A compiled artifact. All artifacts are lowered with `return_tuple=True`,
+/// so execution yields one tuple literal that [`Executable::run`]
+/// decomposes into per-output literals.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Executable {
+    /// Execute with host literals; returns the decomposed output tuple.
+    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let out = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = out[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal conversion helpers
+// ---------------------------------------------------------------------------
+
+/// (rows x cols) f32 matrix -> rank-2 literal.
+pub fn matrix_literal(m: &Matrix) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(m.as_slice()).reshape(&[m.rows() as i64, m.cols() as i64])?)
+}
+
+/// Flat f32 slice -> rank-1 literal.
+pub fn vec_literal(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// Batch of rows -> rank-2 literal (rows padded/truncated to `batch`
+/// by cycling — PJRT shapes are static).
+pub fn batch_literal(rows: &[&[f32]], batch: usize, dim: usize) -> Result<xla::Literal> {
+    assert!(!rows.is_empty());
+    let mut flat = Vec::with_capacity(batch * dim);
+    for i in 0..batch {
+        let r = rows[i % rows.len()];
+        debug_assert_eq!(r.len(), dim);
+        flat.extend_from_slice(r);
+    }
+    Ok(xla::Literal::vec1(&flat).reshape(&[batch as i64, dim as i64])?)
+}
+
+/// Labels -> rank-1 i32 literal (cycled to `batch`).
+pub fn label_literal(ys: &[u32], batch: usize) -> Result<xla::Literal> {
+    assert!(!ys.is_empty());
+    let v: Vec<i32> = (0..batch).map(|i| ys[i % ys.len()] as i32).collect();
+    Ok(xla::Literal::vec1(&v))
+}
+
+/// f32 scalar literal.
+pub fn scalar_literal(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Extract a literal to a Vec<f32>.
+pub fn literal_to_f32s(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Extract a literal to a Vec<i32>.
+pub fn literal_to_i32s(lit: &xla::Literal) -> Result<Vec<i32>> {
+    Ok(lit.to_vec::<i32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_literal_roundtrip() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let lit = matrix_literal(&m).unwrap();
+        assert_eq!(literal_to_f32s(&lit).unwrap(), m.as_slice());
+    }
+
+    #[test]
+    fn batch_literal_cycles_rows() {
+        let r1 = [1.0f32, 2.0];
+        let r2 = [3.0f32, 4.0];
+        let rows: Vec<&[f32]> = vec![&r1, &r2];
+        let lit = batch_literal(&rows, 5, 2).unwrap();
+        let v = literal_to_f32s(&lit).unwrap();
+        assert_eq!(v, vec![1., 2., 3., 4., 1., 2., 3., 4., 1., 2.]);
+    }
+
+    #[test]
+    fn label_literal_cycles() {
+        let lit = label_literal(&[7, 8], 3).unwrap();
+        assert_eq!(literal_to_i32s(&lit).unwrap(), vec![7, 8, 7]);
+    }
+}

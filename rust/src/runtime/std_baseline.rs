@@ -1,0 +1,170 @@
+//! The STD dense baseline (Figs 4/5/7) executed through the AOT artifacts:
+//! the entire minibatch train step — forward, softmax-CE, backward, SGD —
+//! is one compiled HLO module (`mlp_step_<variant>`), and evaluation is
+//! another (`mlp_fwd_<variant>`). Parameters live as XLA literals and flow
+//! step -> step without touching rust floats.
+
+use crate::data::dataset::Dataset;
+use crate::runtime::artifacts::ArtifactSet;
+use crate::runtime::pjrt::{
+    batch_literal, label_literal, literal_to_f32s, scalar_literal, Executable, PjrtRuntime,
+};
+use crate::train::metrics::{EpochRecord, MultCounters, RunRecord};
+use crate::util::rng::Pcg64;
+use anyhow::{Context, Result};
+use std::time::Instant;
+
+pub const STEP_BATCH: usize = 32;
+pub const EVAL_BATCH: usize = 256;
+
+/// Dense-baseline trainer over the PJRT artifacts.
+pub struct StdBaseline {
+    step_exe: Executable,
+    fwd_exe: Executable,
+    /// Current parameters as literals: [w1, b1, w2, b2, ...].
+    params: Vec<xla::Literal>,
+    input_dim: usize,
+    n_classes: usize,
+    /// Dense multiplications per example (for the paper's accounting).
+    dense_mults_per_example: u64,
+}
+
+impl StdBaseline {
+    /// Build from an artifact set; parameters are initialized in rust
+    /// (Glorot, same scheme as the native network) and uploaded once.
+    pub fn new(rt: &PjrtRuntime, arts: &ArtifactSet, seed: u64) -> Result<Self> {
+        let step_exe = rt.load(&arts.step_path)?;
+        let fwd_exe = rt.load(&arts.fwd_path)?;
+        let mut rng = Pcg64::new(seed, 0x57D);
+        let mut params = Vec::new();
+        let mut dense_mults = 0u64;
+        for &(n_in, n_out) in &arts.layer_dims {
+            let w = crate::nn::init::glorot_uniform(n_out, n_in, &mut rng);
+            params.push(crate::runtime::pjrt::matrix_literal(&w)?);
+            params.push(crate::runtime::pjrt::vec_literal(&vec![0.0; n_out]));
+            dense_mults += (n_in * n_out) as u64;
+        }
+        Ok(StdBaseline {
+            step_exe,
+            fwd_exe,
+            params,
+            input_dim: arts.input_dim,
+            n_classes: arts.n_classes,
+            dense_mults_per_example: dense_mults,
+        })
+    }
+
+    /// One SGD minibatch step; returns the batch loss.
+    pub fn train_batch(&mut self, xs: &[&[f32]], ys: &[u32], lr: f32) -> Result<f32> {
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(self.params.len() + 3);
+        // Clone_from? Literals are opaque handles; rebuild arg vec by value.
+        for p in &self.params {
+            args.push(clone_literal(p)?);
+        }
+        args.push(batch_literal(xs, STEP_BATCH, self.input_dim)?);
+        args.push(label_literal(ys, STEP_BATCH)?);
+        args.push(scalar_literal(lr));
+        let mut out = self.step_exe.run(&args)?;
+        let loss = out.remove(0).get_first_element::<f32>()?;
+        self.params = out;
+        Ok(loss)
+    }
+
+    /// Evaluate accuracy + mean loss over a dataset via the fwd artifact.
+    pub fn evaluate(&self, xs: &[Vec<f32>], ys: &[u32]) -> Result<(f32, f32)> {
+        let mut correct = 0usize;
+        let mut loss_sum = 0.0f64;
+        let mut n = 0usize;
+        for chunk in xs.chunks(EVAL_BATCH).zip(ys.chunks(EVAL_BATCH)) {
+            let (cx, cy) = chunk;
+            let rows: Vec<&[f32]> = cx.iter().map(|v| v.as_slice()).collect();
+            let mut args: Vec<xla::Literal> = Vec::with_capacity(self.params.len() + 1);
+            for p in &self.params {
+                args.push(clone_literal(p)?);
+            }
+            args.push(batch_literal(&rows, EVAL_BATCH, self.input_dim)?);
+            let out = self.fwd_exe.run(&args)?;
+            let logits = literal_to_f32s(&out[0])?;
+            for (i, &y) in cy.iter().enumerate() {
+                let row = &logits[i * self.n_classes..(i + 1) * self.n_classes];
+                let (l, pred) = crate::nn::loss::softmax_xent(row, y);
+                loss_sum += l as f64;
+                correct += (pred == y) as usize;
+                n += 1;
+            }
+        }
+        Ok(((loss_sum / n as f64) as f32, correct as f32 / n as f32))
+    }
+
+    /// Full training run (paper Fig 7's STD-ASGD counterpart runs dense
+    /// minibatch SGD; here the step itself is the compiled artifact).
+    pub fn run(
+        &mut self,
+        train: &Dataset,
+        test: &Dataset,
+        epochs: usize,
+        lr: f32,
+        eval_cap: usize,
+        seed: u64,
+    ) -> Result<RunRecord> {
+        let mut record = RunRecord {
+            method: "STD-PJRT".into(),
+            dataset: train.name.clone(),
+            sparsity: 1.0,
+            threads: 1,
+            epochs: Vec::new(),
+        };
+        let mut rng = Pcg64::new(seed, 0xE9);
+        for epoch in 0..epochs {
+            let t0 = Instant::now();
+            let order = train.epoch_order(&mut rng);
+            let mut loss_sum = 0.0f64;
+            let mut batches = 0usize;
+            for chunk in order.chunks(STEP_BATCH) {
+                let xs: Vec<&[f32]> =
+                    chunk.iter().map(|&i| train.xs[i as usize].as_slice()).collect();
+                let ys: Vec<u32> = chunk.iter().map(|&i| train.ys[i as usize]).collect();
+                loss_sum += self.train_batch(&xs, &ys, lr)? as f64;
+                batches += 1;
+            }
+            let cap = if eval_cap == 0 { test.len() } else { eval_cap.min(test.len()) };
+            let (test_loss, test_acc) = self.evaluate(&test.xs[..cap], &test.ys[..cap])?;
+            let mults = MultCounters {
+                forward: self.dense_mults_per_example * order.len() as u64,
+                backward: 2 * self.dense_mults_per_example * order.len() as u64,
+                selection: 0,
+                update: self.dense_mults_per_example * order.len() as u64,
+            };
+            record.epochs.push(EpochRecord {
+                epoch,
+                train_loss: (loss_sum / batches.max(1) as f64) as f32,
+                test_loss,
+                test_acc,
+                mults,
+                active_fraction: 1.0,
+                wall_secs: t0.elapsed().as_secs_f64(),
+            });
+        }
+        Ok(record)
+    }
+}
+
+/// Literal "clone" via serialize round-trip (the crate exposes no Clone).
+fn clone_literal(l: &xla::Literal) -> Result<xla::Literal> {
+    // Literal implements conversion to/from raw data through reshape of a
+    // copied vec1; use element type to dispatch.
+    let ty = l.ty().context("literal type")?;
+    let shape = l.array_shape()?;
+    let dims: Vec<i64> = shape.dims().to_vec();
+    match ty {
+        xla::ElementType::F32 => {
+            let v = l.to_vec::<f32>()?;
+            Ok(xla::Literal::vec1(&v).reshape(&dims)?)
+        }
+        xla::ElementType::S32 => {
+            let v = l.to_vec::<i32>()?;
+            Ok(xla::Literal::vec1(&v).reshape(&dims)?)
+        }
+        other => anyhow::bail!("unsupported literal type {other:?}"),
+    }
+}

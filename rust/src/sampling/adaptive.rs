@@ -1,0 +1,162 @@
+//! Adaptive dropout (Ba & Frey 2013): sample node i with Bernoulli
+//! probability σ(α·z_i + β) where z_i is the pre-activation. Requires the
+//! *full* dense pre-activation computation before sampling — the paper's
+//! point is that AD gains accuracy but saves no compute (Fig 5 caption:
+//! "WTA and AD perform the same amount of computation as the standard
+//! neural network").
+
+use crate::nn::layer::Layer;
+use crate::nn::sparse::LayerInput;
+use crate::sampling::{NodeSelector, SelectionCost};
+use crate::util::rng::Pcg64;
+
+pub struct AdaptiveDropoutSelector {
+    alpha: f32,
+    beta: f32,
+    /// Safety cap (fraction) so extreme α/β cannot return everything;
+    /// mirrors the paper's "fixed threshold to cap the number of active
+    /// nodes ... to guarantee the amount of computation" (§6.2.1).
+    cap_fraction: f32,
+    scratch_z: Vec<f32>,
+}
+
+impl AdaptiveDropoutSelector {
+    pub fn new(alpha: f32, beta: f32, cap_fraction: f32) -> Self {
+        AdaptiveDropoutSelector { alpha, beta, cap_fraction, scratch_z: Vec::new() }
+    }
+
+    /// β producing an *expected* keep-rate ≈ target at z ≈ 0 is −σ⁻¹ of
+    /// nothing useful; in practice the paper grid-searched
+    /// β ∈ {-1.5, -1, 0, 1, 3.5}. This helper maps a target sparsity to
+    /// that grid for the sweep harness.
+    pub fn beta_for_sparsity(sparsity: f32) -> f32 {
+        // Matches the paper's β grid order vs its active-fraction grid
+        // [0.05, 0.1, 0.25, 0.5, 0.75, 0.9] (AD diverges below 25%).
+        match sparsity {
+            s if s <= 0.25 => -1.5,
+            s if s <= 0.5 => -1.0,
+            s if s <= 0.75 => 0.0,
+            s if s <= 0.9 => 1.0,
+            _ => 3.5,
+        }
+    }
+}
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+impl NodeSelector for AdaptiveDropoutSelector {
+    fn select(
+        &mut self,
+        layer: &Layer,
+        input: LayerInput<'_>,
+        rng: &mut Pcg64,
+        out: &mut Vec<u32>,
+    ) -> SelectionCost {
+        // Full dense pre-activation pass — AD's inherent cost.
+        let mults = layer.preactivations_dense(input, &mut self.scratch_z);
+        out.clear();
+        for (i, &z) in self.scratch_z.iter().enumerate() {
+            if rng.bernoulli(sigmoid(self.alpha * z + self.beta)) {
+                out.push(i as u32);
+            }
+        }
+        let cap = crate::sampling::budget(layer.n_out(), self.cap_fraction);
+        if out.len() > cap {
+            // Keep the cap highest-probability nodes (deterministic trim).
+            out.sort_unstable_by(|&a, &b| {
+                self.scratch_z[b as usize]
+                    .partial_cmp(&self.scratch_z[a as usize])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            });
+            out.truncate(cap);
+            out.sort_unstable();
+        }
+        if out.is_empty() {
+            // Fall back to the single highest-probability node.
+            out.push(crate::tensor::vecops::argmax(&self.scratch_z) as u32);
+        }
+        SelectionCost { selection_mults: mults }
+    }
+
+    fn name(&self) -> &'static str {
+        "AD"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::activation::Activation;
+
+    fn layer(n: usize) -> Layer {
+        let mut rng = Pcg64::seeded(1);
+        Layer::new(8, n, Activation::ReLU, &mut rng)
+    }
+
+    #[test]
+    fn selection_pays_full_dense_cost() {
+        let l = layer(32);
+        let mut sel = AdaptiveDropoutSelector::new(1.0, 0.0, 1.0);
+        let mut rng = Pcg64::seeded(2);
+        let mut out = Vec::new();
+        let cost = sel.select(&l, LayerInput::Dense(&[0.1; 8]), &mut rng, &mut out);
+        assert_eq!(cost.selection_mults, 32 * 8);
+    }
+
+    #[test]
+    fn higher_activation_nodes_sampled_more_often() {
+        let mut l = layer(2);
+        // Node 0 strongly positive pre-activation, node 1 strongly negative.
+        for v in l.w.row_mut(0) {
+            *v = 1.0;
+        }
+        for v in l.w.row_mut(1) {
+            *v = -1.0;
+        }
+        let mut sel = AdaptiveDropoutSelector::new(2.0, 0.0, 1.0);
+        let mut rng = Pcg64::seeded(3);
+        let mut out = Vec::new();
+        let (mut c0, mut c1) = (0, 0);
+        for _ in 0..500 {
+            sel.select(&l, LayerInput::Dense(&[1.0; 8]), &mut rng, &mut out);
+            c0 += out.contains(&0) as usize;
+            c1 += out.contains(&1) as usize;
+        }
+        assert!(c0 > 450, "hot node kept {c0}/500");
+        assert!(c1 < 350, "cold node kept {c1}/500 — should be rarer");
+        assert!(c0 > c1 + 100);
+    }
+
+    #[test]
+    fn cap_limits_active_set() {
+        let l = layer(100);
+        let mut sel = AdaptiveDropoutSelector::new(0.0, 10.0, 0.1); // p≈1 for all
+        let mut rng = Pcg64::seeded(4);
+        let mut out = Vec::new();
+        sel.select(&l, LayerInput::Dense(&[0.1; 8]), &mut rng, &mut out);
+        assert_eq!(out.len(), 10);
+    }
+
+    #[test]
+    fn never_empty() {
+        let l = layer(16);
+        let mut sel = AdaptiveDropoutSelector::new(0.0, -50.0, 1.0); // p≈0
+        let mut rng = Pcg64::seeded(5);
+        let mut out = Vec::new();
+        sel.select(&l, LayerInput::Dense(&[0.1; 8]), &mut rng, &mut out);
+        assert_eq!(out.len(), 1);
+    }
+
+    #[test]
+    fn beta_grid_mapping_is_monotone() {
+        let grid = [0.05f32, 0.1, 0.25, 0.5, 0.75, 0.9];
+        let betas: Vec<f32> =
+            grid.iter().map(|&s| AdaptiveDropoutSelector::beta_for_sparsity(s)).collect();
+        for w in betas.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+}

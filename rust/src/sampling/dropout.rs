@@ -1,0 +1,90 @@
+//! Vanilla dropout (Srivastava et al. 2014) reinterpreted, as the paper
+//! does, as a computation-reduction technique: sample each node i.i.d.
+//! with keep probability = the target active fraction, and skip dropped
+//! nodes entirely in both passes.
+
+use crate::nn::layer::Layer;
+use crate::nn::sparse::LayerInput;
+use crate::sampling::{NodeSelector, SelectionCost};
+use crate::util::rng::Pcg64;
+
+pub struct DropoutSelector {
+    keep_prob: f32,
+}
+
+impl DropoutSelector {
+    pub fn new(keep_prob: f32) -> Self {
+        assert!((0.0..=1.0).contains(&keep_prob));
+        DropoutSelector { keep_prob }
+    }
+}
+
+impl NodeSelector for DropoutSelector {
+    fn select(
+        &mut self,
+        layer: &Layer,
+        _input: LayerInput<'_>,
+        rng: &mut Pcg64,
+        out: &mut Vec<u32>,
+    ) -> SelectionCost {
+        out.clear();
+        for i in 0..layer.n_out() as u32 {
+            if rng.bernoulli(self.keep_prob) {
+                out.push(i);
+            }
+        }
+        // Dropout must never return an empty hidden layer.
+        if out.is_empty() {
+            out.push(rng.below(layer.n_out() as u32));
+        }
+        SelectionCost { selection_mults: 0 }
+    }
+
+    fn name(&self) -> &'static str {
+        "VD"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::activation::Activation;
+
+    #[test]
+    fn keeps_about_the_right_fraction() {
+        let mut rng = Pcg64::seeded(1);
+        let layer = Layer::new(4, 1000, Activation::ReLU, &mut rng);
+        let mut sel = DropoutSelector::new(0.25);
+        let mut out = Vec::new();
+        let mut total = 0usize;
+        for _ in 0..50 {
+            sel.select(&layer, LayerInput::Dense(&[0.0; 4]), &mut rng, &mut out);
+            total += out.len();
+        }
+        let frac = total as f32 / (50.0 * 1000.0);
+        assert!((frac - 0.25).abs() < 0.03, "kept {frac}");
+    }
+
+    #[test]
+    fn never_empty() {
+        let mut rng = Pcg64::seeded(2);
+        let layer = Layer::new(4, 10, Activation::ReLU, &mut rng);
+        let mut sel = DropoutSelector::new(0.0);
+        let mut out = Vec::new();
+        sel.select(&layer, LayerInput::Dense(&[0.0; 4]), &mut rng, &mut out);
+        assert_eq!(out.len(), 1);
+    }
+
+    #[test]
+    fn ids_are_sorted_distinct() {
+        let mut rng = Pcg64::seeded(3);
+        let layer = Layer::new(4, 100, Activation::ReLU, &mut rng);
+        let mut sel = DropoutSelector::new(0.5);
+        let mut out = Vec::new();
+        sel.select(&layer, LayerInput::Dense(&[0.0; 4]), &mut rng, &mut out);
+        let mut s = out.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s, out);
+    }
+}

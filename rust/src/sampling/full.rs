@@ -1,0 +1,42 @@
+//! Standard network "selector": every node is always active.
+
+use crate::nn::layer::Layer;
+use crate::nn::sparse::LayerInput;
+use crate::sampling::{NodeSelector, SelectionCost};
+use crate::util::rng::Pcg64;
+
+pub struct FullSelector;
+
+impl NodeSelector for FullSelector {
+    fn select(
+        &mut self,
+        layer: &Layer,
+        _input: LayerInput<'_>,
+        _rng: &mut Pcg64,
+        out: &mut Vec<u32>,
+    ) -> SelectionCost {
+        out.clear();
+        out.extend(0..layer.n_out() as u32);
+        SelectionCost { selection_mults: 0 }
+    }
+
+    fn name(&self) -> &'static str {
+        "NN"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::activation::Activation;
+
+    #[test]
+    fn selects_everything() {
+        let mut rng = Pcg64::seeded(1);
+        let layer = Layer::new(4, 6, Activation::ReLU, &mut rng);
+        let mut out = Vec::new();
+        let cost = FullSelector.select(&layer, LayerInput::Dense(&[0.0; 4]), &mut rng, &mut out);
+        assert_eq!(out, (0..6).collect::<Vec<u32>>());
+        assert_eq!(cost.selection_mults, 0);
+    }
+}

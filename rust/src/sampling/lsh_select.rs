@@ -1,0 +1,213 @@
+//! The paper's selector: query per-layer (K, L) ALSH tables for the nodes
+//! with the highest expected activations, in time sub-linear in the layer
+//! width. Maintains the tables across gradient updates (rehash touched
+//! rows; periodic full rebuild controls drift and norm growth).
+
+use crate::lsh::layered::{LayerTables, LshConfig};
+use crate::nn::layer::Layer;
+use crate::nn::sparse::LayerInput;
+use crate::sampling::{budget, NodeSelector, SelectionCost};
+use crate::util::rng::Pcg64;
+
+pub struct LshSelector {
+    tables: LayerTables,
+    sparsity: f32,
+    rebuild_every_epochs: usize,
+    /// Dense scratch for sparse-input queries (hash functions need the
+    /// densified previous-layer activation vector).
+    scratch_q: Vec<f32>,
+    /// Updates since the last rehash-triggered rebuild (diagnostics).
+    pub updates_since_rebuild: u64,
+}
+
+impl LshSelector {
+    pub fn new(
+        layer: &Layer,
+        cfg: LshConfig,
+        sparsity: f32,
+        rebuild_every_epochs: usize,
+        rng: &mut Pcg64,
+    ) -> Self {
+        LshSelector {
+            tables: LayerTables::build(&layer.w, cfg, rng),
+            sparsity,
+            rebuild_every_epochs: rebuild_every_epochs.max(1),
+            scratch_q: vec![0.0; layer.n_in()],
+            updates_since_rebuild: 0,
+        }
+    }
+
+    pub fn tables(&self) -> &LayerTables {
+        &self.tables
+    }
+}
+
+impl NodeSelector for LshSelector {
+    fn select(
+        &mut self,
+        layer: &Layer,
+        input: LayerInput<'_>,
+        rng: &mut Pcg64,
+        out: &mut Vec<u32>,
+    ) -> SelectionCost {
+        let b = budget(layer.n_out(), self.sparsity);
+        let cfg = self.tables.config();
+        // Hashing cost: K·L inner products of dimension (n_in + 1).
+        let hash_mults = (cfg.k * cfg.l * (layer.n_in() + 1)) as u64;
+        // Densify the query into scratch (hash projections are dense).
+        match input {
+            LayerInput::Dense(x) => {
+                self.scratch_q.clear();
+                self.scratch_q.extend_from_slice(x);
+            }
+            LayerInput::Sparse(s) => {
+                self.scratch_q.iter_mut().for_each(|v| *v = 0.0);
+                self.scratch_q.resize(layer.n_in(), 0.0);
+                for (i, v) in s.iter() {
+                    self.scratch_q[i as usize] = v;
+                }
+            }
+        }
+        // Field-level split borrow: tables (mut) + scratch_q (shared).
+        let Self { tables, scratch_q, .. } = self;
+        let mut extra_mults = 0u64;
+        if cfg.rerank_factor > 1 {
+            // Cheap re-ranking (§5.4): over-collect candidates, score them
+            // exactly, keep the best `b`. Trades |C|·d extra mults for a
+            // strictly better active set.
+            tables.query(scratch_q, b * cfg.rerank_factor, rng, out);
+            if out.len() > b {
+                let mut scored: Vec<(f32, u32)> = out
+                    .iter()
+                    .map(|&i| {
+                        (crate::tensor::vecops::dot(layer.w.row(i as usize), scratch_q), i)
+                    })
+                    .collect();
+                extra_mults += (out.len() * layer.n_in()) as u64;
+                scored.sort_unstable_by(|a, b| {
+                    b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal)
+                });
+                out.clear();
+                out.extend(scored.into_iter().take(b).map(|(_, i)| i));
+            }
+        } else {
+            tables.query(scratch_q, b, rng, out);
+        }
+        if out.is_empty() {
+            // Hash miss (rare, small layers): fall back to random nodes so
+            // training can proceed — the paper's tables always return
+            // *something* via multiprobe, but guard anyway.
+            out.extend(rng.sample_indices(layer.n_out(), b.min(4)));
+        }
+        SelectionCost { selection_mults: hash_mults + extra_mults }
+    }
+
+    fn post_update(&mut self, layer: &Layer, touched: &[u32], rng: &mut Pcg64) {
+        let p = self.tables.config().rehash_probability;
+        if p >= 1.0 {
+            self.tables.rehash_nodes(&layer.w, touched, rng);
+        } else {
+            // §Perf lazy maintenance: rehash a random subset of the touched
+            // rows. Hash staleness is bounded by the epoch rebuild; the
+            // measured accuracy impact is recorded in EXPERIMENTS.md §Perf.
+            let mut subset: Vec<u32> = Vec::with_capacity(touched.len() / 2);
+            for &id in touched {
+                if rng.bernoulli(p) {
+                    subset.push(id);
+                }
+            }
+            if !subset.is_empty() {
+                self.tables.rehash_nodes(&layer.w, &subset, rng);
+            }
+        }
+        self.updates_since_rebuild += 1;
+    }
+
+    fn on_epoch_end(&mut self, layer: &Layer, epoch: usize, rng: &mut Pcg64) {
+        if (epoch + 1) % self.rebuild_every_epochs == 0 {
+            self.tables.rebuild(&layer.w, rng);
+            self.updates_since_rebuild = 0;
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "LSH"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::activation::Activation;
+    use crate::nn::sparse::SparseVec;
+
+    fn layer(n_in: usize, n_out: usize, seed: u64) -> Layer {
+        let mut rng = Pcg64::seeded(seed);
+        Layer::new(n_in, n_out, Activation::ReLU, &mut rng)
+    }
+
+    #[test]
+    fn respects_budget() {
+        let l = layer(16, 200, 1);
+        let mut rng = Pcg64::seeded(2);
+        let mut sel = LshSelector::new(&l, LshConfig::default(), 0.1, 1, &mut rng);
+        let mut out = Vec::new();
+        sel.select(&l, LayerInput::Dense(&[0.3; 16]), &mut rng, &mut out);
+        assert!(!out.is_empty());
+        assert!(out.len() <= 20);
+    }
+
+    #[test]
+    fn selection_cost_is_hashing_only() {
+        let l = layer(16, 200, 3);
+        let mut rng = Pcg64::seeded(4);
+        let cfg = LshConfig { k: 6, l: 5, ..Default::default() };
+        let mut sel = LshSelector::new(&l, cfg, 0.1, 1, &mut rng);
+        let mut out = Vec::new();
+        let cost = sel.select(&l, LayerInput::Dense(&[0.3; 16]), &mut rng, &mut out);
+        assert_eq!(cost.selection_mults, (6 * 5 * 17) as u64);
+        // Sub-linear vs the dense alternative 200*16 = 3200.
+        assert!(cost.selection_mults < 3200 / 2);
+    }
+
+    #[test]
+    fn sparse_input_query_works() {
+        let l = layer(32, 100, 5);
+        let mut rng = Pcg64::seeded(6);
+        let mut sel = LshSelector::new(&l, LshConfig::default(), 0.2, 1, &mut rng);
+        let sv = SparseVec::from_pairs(&[(2, 1.0), (17, -0.5)]);
+        let mut out = Vec::new();
+        sel.select(&l, LayerInput::Sparse(&sv), &mut rng, &mut out);
+        assert!(!out.is_empty());
+        assert!(out.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn post_update_keeps_tables_consistent() {
+        let mut l = layer(8, 50, 7);
+        let mut rng = Pcg64::seeded(8);
+        let mut sel = LshSelector::new(&l, LshConfig::default(), 0.2, 1, &mut rng);
+        // Change a few rows and notify.
+        for id in [3u32, 10, 42] {
+            for v in l.w.row_mut(id as usize) {
+                *v += 0.05;
+            }
+        }
+        sel.post_update(&l, &[3, 10, 42], &mut rng);
+        for sizes in sel.tables().bucket_sizes() {
+            assert_eq!(sizes.iter().sum::<usize>(), 50);
+        }
+    }
+
+    #[test]
+    fn epoch_rebuild_cadence() {
+        let l = layer(8, 30, 9);
+        let mut rng = Pcg64::seeded(10);
+        let mut sel = LshSelector::new(&l, LshConfig::default(), 0.2, 2, &mut rng);
+        let r0 = sel.tables().rebuilds;
+        sel.on_epoch_end(&l, 0, &mut rng); // epoch 1 -> no rebuild (every 2)
+        assert_eq!(sel.tables().rebuilds, r0);
+        sel.on_epoch_end(&l, 1, &mut rng); // epoch 2 -> rebuild
+        assert_eq!(sel.tables().rebuilds, r0 + 1);
+    }
+}

@@ -1,0 +1,197 @@
+//! Node-selection policies — the five methods the paper evaluates (§6):
+//! Standard (NN), vanilla Dropout (VD), Adaptive Dropout (AD),
+//! Winner-Take-All (WTA), and Randomized Hashing (LSH). One selector
+//! instance exists per hidden layer; the output layer is always fully
+//! active (the paper hashes only hidden layers — Fig 2).
+
+pub mod adaptive;
+pub mod dropout;
+pub mod full;
+pub mod lsh_select;
+pub mod wta;
+
+use crate::lsh::layered::LshConfig;
+use crate::nn::layer::Layer;
+use crate::nn::sparse::LayerInput;
+use crate::util::rng::Pcg64;
+
+/// Which policy picks the active set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// Standard fully-dense network.
+    Standard,
+    /// Vanilla dropout: uniform random keep.
+    Dropout,
+    /// Adaptive dropout: Bernoulli with probability σ(α·z + β).
+    AdaptiveDropout,
+    /// Winner-take-all: exact top-k% activations (full computation).
+    Wta,
+    /// The paper's contribution: LSH-MIPS hash-table sampling.
+    Lsh,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "nn" | "std" | "standard" => Ok(Method::Standard),
+            "vd" | "dropout" => Ok(Method::Dropout),
+            "ad" | "adaptive" => Ok(Method::AdaptiveDropout),
+            "wta" => Ok(Method::Wta),
+            "lsh" | "hash" => Ok(Method::Lsh),
+            other => Err(format!("unknown method {other:?} (nn|vd|ad|wta|lsh)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Standard => "NN",
+            Method::Dropout => "VD",
+            Method::AdaptiveDropout => "AD",
+            Method::Wta => "WTA",
+            Method::Lsh => "LSH",
+        }
+    }
+
+    pub fn all() -> [Method; 5] {
+        [Method::Standard, Method::Dropout, Method::AdaptiveDropout, Method::Wta, Method::Lsh]
+    }
+}
+
+/// Configuration shared by all selectors.
+#[derive(Clone, Copy, Debug)]
+pub struct SamplerConfig {
+    pub method: Method,
+    /// Target fraction of active nodes per hidden layer (the paper's
+    /// "percentage of active nodes", x-axis of Figs 4/5).
+    pub sparsity: f32,
+    /// LSH table parameters (paper: K=6, L=5, ~10 probes).
+    pub lsh: LshConfig,
+    /// Adaptive-dropout affine parameters: p_i = σ(α·z_i + β).
+    pub ad_alpha: f32,
+    pub ad_beta: f32,
+    /// Rebuild LSH tables from scratch every this many epochs (drift control).
+    pub rebuild_every_epochs: usize,
+}
+
+impl Default for SamplerConfig {
+    fn default() -> Self {
+        SamplerConfig {
+            method: Method::Lsh,
+            sparsity: 0.05,
+            lsh: LshConfig::default(),
+            ad_alpha: 1.0,
+            ad_beta: 0.0,
+            rebuild_every_epochs: 1,
+        }
+    }
+}
+
+impl SamplerConfig {
+    pub fn with_method(method: Method, sparsity: f32) -> Self {
+        SamplerConfig { method, sparsity, ..Default::default() }
+    }
+
+    /// Tuned LSH operating point for this reproduction: the paper's
+    /// K=6/L=5 tables alone were not selective enough from random
+    /// initialization on our synthetic benchmarks (active-set precision
+    /// barely above chance — see EXPERIMENTS.md §Deviations), so the
+    /// experiment drivers use shallower fingerprints with more tables
+    /// plus the §5.4 cheap re-rank. Total selection cost stays below
+    /// ~10% of the dense budget.
+    pub fn lsh_tuned(sparsity: f32) -> Self {
+        SamplerConfig {
+            method: Method::Lsh,
+            sparsity,
+            lsh: LshConfig {
+                k: 4,
+                l: 10,
+                probes_per_table: 10,
+                rerank_factor: 4,
+                rehash_probability: 0.25,
+                ..LshConfig::default()
+            },
+            ..Default::default()
+        }
+    }
+}
+
+/// Result of a selection: active ids are written into the caller's buffer;
+/// `selection_mults` is the extra multiplication cost the policy itself
+/// incurred (WTA/AD pay the full dense pre-activation cost; LSH pays only
+/// K·L·d hashing; NN/VD pay nothing).
+pub struct SelectionCost {
+    pub selection_mults: u64,
+}
+
+/// A per-hidden-layer node selector. Stateful (LSH owns hash tables).
+pub trait NodeSelector: Send {
+    /// Choose the active set for this input into `out`.
+    fn select(
+        &mut self,
+        layer: &Layer,
+        input: LayerInput<'_>,
+        rng: &mut Pcg64,
+        out: &mut Vec<u32>,
+    ) -> SelectionCost;
+
+    /// Notify the selector that the listed rows of `layer` changed
+    /// (post-gradient). Default: nothing to maintain.
+    fn post_update(&mut self, _layer: &Layer, _touched: &[u32], _rng: &mut Pcg64) {}
+
+    /// Called at epoch boundaries; selectors with drift (LSH) rebuild here.
+    fn on_epoch_end(&mut self, _layer: &Layer, _epoch: usize, _rng: &mut Pcg64) {}
+
+    /// Human-readable policy name.
+    fn name(&self) -> &'static str;
+}
+
+/// Build a selector for one hidden layer.
+pub fn make_selector(
+    cfg: &SamplerConfig,
+    layer: &Layer,
+    rng: &mut Pcg64,
+) -> Box<dyn NodeSelector> {
+    match cfg.method {
+        Method::Standard => Box::new(full::FullSelector),
+        Method::Dropout => Box::new(dropout::DropoutSelector::new(cfg.sparsity)),
+        Method::AdaptiveDropout => {
+            Box::new(adaptive::AdaptiveDropoutSelector::new(cfg.ad_alpha, cfg.ad_beta, cfg.sparsity))
+        }
+        Method::Wta => Box::new(wta::WtaSelector::new(cfg.sparsity)),
+        Method::Lsh => Box::new(lsh_select::LshSelector::new(
+            layer,
+            cfg.lsh,
+            cfg.sparsity,
+            cfg.rebuild_every_epochs,
+            rng,
+        )),
+    }
+}
+
+/// Active-set budget for a layer of `n` nodes at `sparsity` (at least 1).
+#[inline]
+pub fn budget(n: usize, sparsity: f32) -> usize {
+    ((n as f32 * sparsity).round() as usize).clamp(1, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for m in Method::all() {
+            assert_eq!(Method::parse(m.name()).unwrap(), m);
+        }
+        assert_eq!(Method::parse("nn").unwrap(), Method::Standard);
+        assert!(Method::parse("xyz").is_err());
+    }
+
+    #[test]
+    fn budget_clamps() {
+        assert_eq!(budget(1000, 0.05), 50);
+        assert_eq!(budget(10, 0.0), 1);
+        assert_eq!(budget(10, 1.0), 10);
+        assert_eq!(budget(10, 5.0), 10);
+    }
+}

@@ -1,0 +1,72 @@
+//! Winner-Take-All (Makhzani & Frey 2013/2015): keep exactly the top-k%
+//! pre-activations. Requires full dense computation plus an O(n log n)
+//! sort — the paper's motivating example of wasted work (§5.1).
+
+use crate::nn::layer::Layer;
+use crate::nn::sparse::LayerInput;
+use crate::sampling::{budget, NodeSelector, SelectionCost};
+use crate::tensor::vecops::top_k_indices;
+use crate::util::rng::Pcg64;
+
+pub struct WtaSelector {
+    sparsity: f32,
+    scratch_z: Vec<f32>,
+}
+
+impl WtaSelector {
+    pub fn new(sparsity: f32) -> Self {
+        WtaSelector { sparsity, scratch_z: Vec::new() }
+    }
+}
+
+impl NodeSelector for WtaSelector {
+    fn select(
+        &mut self,
+        layer: &Layer,
+        input: LayerInput<'_>,
+        _rng: &mut Pcg64,
+        out: &mut Vec<u32>,
+    ) -> SelectionCost {
+        let mults = layer.preactivations_dense(input, &mut self.scratch_z);
+        let k = budget(layer.n_out(), self.sparsity);
+        *out = top_k_indices(&self.scratch_z, k);
+        SelectionCost { selection_mults: mults }
+    }
+
+    fn name(&self) -> &'static str {
+        "WTA"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::activation::Activation;
+
+    #[test]
+    fn selects_exact_top_k() {
+        let mut rng = Pcg64::seeded(1);
+        let mut l = Layer::new(4, 10, Activation::ReLU, &mut rng);
+        // Make pre-activations equal to the row index by construction:
+        for i in 0..10 {
+            for v in l.w.row_mut(i) {
+                *v = i as f32 / 4.0;
+            }
+        }
+        let mut sel = WtaSelector::new(0.3);
+        let mut out = Vec::new();
+        let cost = sel.select(&l, LayerInput::Dense(&[1.0; 4]), &mut rng, &mut out);
+        assert_eq!(out, vec![9, 8, 7]);
+        assert_eq!(cost.selection_mults, 40);
+    }
+
+    #[test]
+    fn k_at_least_one() {
+        let mut rng = Pcg64::seeded(2);
+        let l = Layer::new(4, 10, Activation::ReLU, &mut rng);
+        let mut sel = WtaSelector::new(0.0);
+        let mut out = Vec::new();
+        sel.select(&l, LayerInput::Dense(&[1.0; 4]), &mut rng, &mut out);
+        assert_eq!(out.len(), 1);
+    }
+}

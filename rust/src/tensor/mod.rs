@@ -1,0 +1,7 @@
+//! Minimal dense linear algebra: row-major matrices and the vector
+//! primitives that form the sparse hot path.
+
+pub mod matrix;
+pub mod vecops;
+
+pub use matrix::Matrix;

@@ -1,0 +1,144 @@
+//! Vector primitives used on the sparse hot path. These are the innermost
+//! loops of the whole system — `dot` is the per-active-node activation
+//! computation the paper counts as "multiplications".
+
+/// Dense dot product. Manually 4-way unrolled: rustc does not auto-vectorize
+/// a naive fold with strict float semantics, and this loop dominates the
+/// sparse forward pass.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for i in 0..chunks {
+        let j = i * 4;
+        // SAFETY-free: bounds are guaranteed by chunks*4 <= n; use slices.
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for j in chunks * 4..n {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// y += alpha * x (the sparse gradient update kernel).
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Squared L2 norm.
+#[inline]
+pub fn norm_sq(x: &[f32]) -> f32 {
+    dot(x, x)
+}
+
+/// L2 norm.
+#[inline]
+pub fn norm(x: &[f32]) -> f32 {
+    norm_sq(x).sqrt()
+}
+
+/// Index of the maximum element (first on ties). Empty slices panic.
+#[inline]
+pub fn argmax(x: &[f32]) -> usize {
+    let mut best = 0;
+    let mut bv = x[0];
+    for (i, &v) in x.iter().enumerate().skip(1) {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Numerically-stable softmax in place.
+pub fn softmax_inplace(x: &mut [f32]) {
+    let m = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0;
+    for v in x.iter_mut() {
+        *v = (*v - m).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in x.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// Indices of the k largest values (descending). O(n log n) sort-based —
+/// used by the WTA baseline, which the paper explicitly calls
+/// "O(n log n) work"; keeping the sort faithful matters for the
+/// computation-count comparisons.
+pub fn top_k_indices(x: &[f32], k: usize) -> Vec<u32> {
+    let mut idx: Vec<u32> = (0..x.len() as u32).collect();
+    idx.sort_unstable_by(|&a, &b| {
+        x[b as usize].partial_cmp(&x[a as usize]).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    idx.truncate(k.min(x.len()));
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f32> = (0..13).map(|i| i as f32 * 0.5).collect();
+        let b: Vec<f32> = (0..13).map(|i| 1.0 - i as f32 * 0.1).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-4);
+    }
+
+    #[test]
+    fn dot_empty_is_zero() {
+        assert_eq!(dot(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn axpy_accumulates() {
+        let x = [1.0, 2.0, 3.0];
+        let mut y = [10.0, 10.0, 10.0];
+        axpy(0.5, &x, &mut y);
+        assert_eq!(y, [10.5, 11.0, 11.5]);
+    }
+
+    #[test]
+    fn argmax_first_on_ties() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+    }
+
+    #[test]
+    fn softmax_sums_to_one_and_is_stable() {
+        let mut x = [1000.0, 1001.0, 999.0];
+        softmax_inplace(&mut x);
+        let sum: f32 = x.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-5);
+        assert!(x.iter().all(|v| v.is_finite()));
+        assert!(x[1] > x[0] && x[0] > x[2]);
+    }
+
+    #[test]
+    fn top_k_ordering() {
+        let x = [0.1, 0.9, 0.5, 0.7, 0.3];
+        assert_eq!(top_k_indices(&x, 3), vec![1, 3, 2]);
+        assert_eq!(top_k_indices(&x, 99).len(), 5);
+    }
+
+    #[test]
+    fn norms() {
+        assert!((norm(&[3.0, 4.0]) - 5.0).abs() < 1e-6);
+        assert_eq!(norm_sq(&[2.0, 2.0]), 8.0);
+    }
+}

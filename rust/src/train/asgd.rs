@@ -1,0 +1,331 @@
+//! Hogwild-style asynchronous SGD (Recht et al. 2011), §5.6/§6.3 of the
+//! paper: N workers share the network parameters and optimizer state with
+//! NO locks and NO atomics; racy f32 read/writes are accepted by design.
+//! Convergence relies on the sparsity of the active sets — the paper's
+//! core scalability claim (Figs 6–8).
+//!
+//! Each worker owns its *own* selectors (hash tables), RNG and workspace;
+//! only the parameter memory is shared. Workers rehash the rows they
+//! update in their own tables and all tables are rebuilt from the shared
+//! weights at epoch boundaries (drift control, same cadence as the
+//! sequential trainer).
+
+use crate::data::dataset::Dataset;
+use crate::nn::network::Network;
+use crate::optim::{OptimConfig, Optimizer};
+use crate::sampling::{make_selector, NodeSelector, SamplerConfig};
+use crate::train::metrics::{EpochRecord, MultCounters, RunRecord};
+use crate::train::trainer::{train_step, StepWorkspace};
+use crate::util::rng::Pcg64;
+use std::cell::UnsafeCell;
+use std::time::Instant;
+
+/// Shared mutable state. SAFETY CONTRACT (Hogwild): all concurrent access
+/// is plain f32/f64 loads/stores to disjoint-or-overlapping parameter
+/// slots; torn reads produce garbage *values*, never memory unsafety,
+/// because no code path resizes the underlying buffers while workers run.
+struct SharedCell<T>(UnsafeCell<T>);
+
+// SAFETY: see the Hogwild contract above — intentional data races on
+// plain floats, no structural mutation during the parallel region.
+unsafe impl<T> Sync for SharedCell<T> {}
+
+impl<T> SharedCell<T> {
+    fn new(v: T) -> Self {
+        SharedCell(UnsafeCell::new(v))
+    }
+
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn get_mut_racy(&self) -> &mut T {
+        &mut *self.0.get()
+    }
+
+    fn into_inner(self) -> T {
+        self.0.into_inner()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct AsgdConfig {
+    pub threads: usize,
+    pub epochs: usize,
+    pub optim: OptimConfig,
+    pub sampler: SamplerConfig,
+    pub seed: u64,
+    /// Evaluate on at most this many test examples per epoch (0 = all).
+    pub eval_cap: usize,
+    /// Sample every Nth step's layer-0 active set for conflict analysis
+    /// (0 disables).
+    pub conflict_sample_every: usize,
+    pub verbose: bool,
+}
+
+impl Default for AsgdConfig {
+    fn default() -> Self {
+        AsgdConfig {
+            threads: 1,
+            epochs: 10,
+            optim: OptimConfig::default(),
+            sampler: SamplerConfig::default(),
+            seed: 42,
+            eval_cap: 0,
+            conflict_sample_every: 0,
+            verbose: false,
+        }
+    }
+}
+
+/// Active-set overlap statistics measured across workers — feeds the Fig 8
+/// conflict-cost speedup model (DESIGN.md §3).
+#[derive(Clone, Debug, Default)]
+pub struct ConflictStats {
+    /// Mean |A ∩ B| / |A| over sampled cross-worker active-set pairs.
+    pub mean_overlap: f64,
+    /// Mean active-set size sampled.
+    pub mean_active_size: f64,
+    /// Number of pairs measured.
+    pub pairs: usize,
+}
+
+pub struct AsgdOutcome {
+    pub net: Network,
+    pub record: RunRecord,
+    pub conflicts: ConflictStats,
+}
+
+/// Run Hogwild ASGD training. Workers are re-spawned per epoch (scoped
+/// threads); parameters and optimizer state persist in shared cells.
+pub fn run_asgd(net: Network, train: &Dataset, test: &Dataset, cfg: &AsgdConfig) -> AsgdOutcome {
+    assert!(cfg.threads >= 1);
+    let opt = Optimizer::for_network(cfg.optim, &net);
+    let shared_net = SharedCell::new(net);
+    let shared_opt = SharedCell::new(opt);
+
+    let mut record = RunRecord {
+        method: format!("{}-ASGD", cfg.sampler.method.name()),
+        dataset: train.name.clone(),
+        sparsity: cfg.sampler.sparsity,
+        threads: cfg.threads,
+        epochs: Vec::with_capacity(cfg.epochs),
+    };
+    let mut all_samples: Vec<Vec<Vec<u32>>> = Vec::new(); // [epoch] -> sampled active sets
+
+    for epoch in 0..cfg.epochs {
+        let t0 = Instant::now();
+        // Epoch order (shared shuffle, sharded round-robin across workers).
+        let mut order_rng = Pcg64::new(cfg.seed ^ epoch as u64, 0x0DDE);
+        let order = train.epoch_order(&mut order_rng);
+
+        let shards: Vec<Vec<u32>> = (0..cfg.threads)
+            .map(|w| order.iter().skip(w).step_by(cfg.threads).copied().collect())
+            .collect();
+
+        let results: Vec<(f64, MultCounters, f64, Vec<Vec<u32>>)> = std::thread::scope(|scope| {
+            let handles: Vec<_> = shards
+                .iter()
+                .enumerate()
+                .map(|(w, shard)| {
+                    let shared_net = &shared_net;
+                    let shared_opt = &shared_opt;
+                    scope.spawn(move || {
+                        // SAFETY: Hogwild contract (see SharedCell).
+                        let net = unsafe { shared_net.get_mut_racy() };
+                        let opt = unsafe { shared_opt.get_mut_racy() };
+                        let mut rng =
+                            Pcg64::new(cfg.seed ^ (epoch as u64) << 8, 0xA500 + w as u64);
+                        let mut selectors: Vec<Box<dyn NodeSelector>> = (0..net.n_hidden())
+                            .map(|l| make_selector(&cfg.sampler, &net.layers[l], &mut rng))
+                            .collect();
+                        let mut ws = StepWorkspace::for_network(net);
+                        let mut loss_sum = 0.0f64;
+                        let mut mults = MultCounters::default();
+                        let mut active_sum = 0.0f64;
+                        let mut sampled: Vec<Vec<u32>> = Vec::new();
+                        for (step, &i) in shard.iter().enumerate() {
+                            let r = train_step(
+                                net,
+                                &mut selectors,
+                                opt,
+                                &mut ws,
+                                &train.xs[i as usize],
+                                train.ys[i as usize],
+                                &mut rng,
+                            );
+                            loss_sum += r.loss as f64;
+                            active_sum += r.active_fraction as f64;
+                            mults.add(&r.mults);
+                            if cfg.conflict_sample_every > 0
+                                && step % cfg.conflict_sample_every == 0
+                                && !ws.acts.is_empty()
+                            {
+                                sampled.push(ws.acts[0].idx.clone());
+                            }
+                        }
+                        (loss_sum, mults, active_sum, sampled)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+        });
+
+        let wall = t0.elapsed().as_secs_f64();
+        let mut mults = MultCounters::default();
+        let mut loss_sum = 0.0f64;
+        let mut active_sum = 0.0f64;
+        let mut epoch_samples: Vec<Vec<u32>> = Vec::new();
+        for (l, m, a, s) in results {
+            loss_sum += l;
+            mults.add(&m);
+            active_sum += a;
+            epoch_samples.extend(s);
+        }
+        if !epoch_samples.is_empty() {
+            all_samples.push(epoch_samples);
+        }
+
+        // Evaluate on the (quiescent) shared network with method-consistent
+        // inference (fresh selectors built from the current weights).
+        // SAFETY: workers are joined; exclusive access again.
+        let net_ref = unsafe { shared_net.get_mut_racy() };
+        let cap = if cfg.eval_cap == 0 { test.len() } else { cfg.eval_cap.min(test.len()) };
+        let mut eval_rng = Pcg64::new(cfg.seed ^ 0xE7A1, epoch as u64);
+        let mut eval_selectors: Vec<Box<dyn NodeSelector>> = (0..net_ref.n_hidden())
+            .map(|l| make_selector(&cfg.sampler, &net_ref.layers[l], &mut eval_rng))
+            .collect();
+        let (test_loss, test_acc) = crate::train::trainer::evaluate_with_selectors(
+            net_ref,
+            &mut eval_selectors,
+            cfg.sampler.method,
+            cfg.sampler.sparsity,
+            &test.xs[..cap],
+            &test.ys[..cap],
+            &mut eval_rng,
+        );
+        let rec = EpochRecord {
+            epoch,
+            train_loss: (loss_sum / order.len() as f64) as f32,
+            test_loss,
+            test_acc,
+            mults,
+            active_fraction: (active_sum / order.len() as f64) as f32,
+            wall_secs: wall,
+        };
+        if cfg.verbose {
+            eprintln!(
+                "[{} t={}] epoch {:>3}: loss {:.4} acc {:.4} wall {:.2}s",
+                record.method, cfg.threads, epoch, rec.train_loss, rec.test_acc, rec.wall_secs
+            );
+        }
+        record.epochs.push(rec);
+    }
+
+    let conflicts = conflict_stats(&all_samples);
+    drop(shared_opt);
+    AsgdOutcome { net: shared_net.into_inner(), record, conflicts }
+}
+
+/// Compute cross-sample overlap statistics from sampled active sets.
+fn conflict_stats(samples: &[Vec<Vec<u32>>]) -> ConflictStats {
+    let mut overlap_sum = 0.0f64;
+    let mut size_sum = 0.0f64;
+    let mut pairs = 0usize;
+    let mut count = 0usize;
+    for group in samples {
+        for s in group {
+            size_sum += s.len() as f64;
+            count += 1;
+        }
+        // Adjacent-pair overlap (samples interleave workers over time).
+        for w in group.windows(2) {
+            let a: std::collections::HashSet<u32> = w[0].iter().copied().collect();
+            let inter = w[1].iter().filter(|x| a.contains(x)).count();
+            if !w[0].is_empty() {
+                overlap_sum += inter as f64 / w[0].len() as f64;
+                pairs += 1;
+            }
+        }
+    }
+    ConflictStats {
+        mean_overlap: if pairs > 0 { overlap_sum / pairs as f64 } else { 0.0 },
+        mean_active_size: if count > 0 { size_sum / count as f64 } else { 0.0 },
+        pairs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::activation::Activation;
+    use crate::nn::network::NetworkConfig;
+    use crate::sampling::Method;
+
+    fn blob_dataset(n: usize, seed: u64) -> (Dataset, Dataset) {
+        let mut rng = Pcg64::seeded(seed);
+        let mut gen = |n: usize| {
+            let mut ds = Dataset::new("blobs", 16, 2);
+            for i in 0..n {
+                let y = (i % 2) as u32;
+                let c = if y == 0 { 0.7 } else { -0.7 };
+                ds.push((0..16).map(|_| c + 0.3 * rng.gaussian()).collect(), y);
+            }
+            ds
+        };
+        (gen(n), gen(n / 4))
+    }
+
+    fn mk_net() -> Network {
+        Network::new(
+            &NetworkConfig { n_in: 16, hidden: vec![64, 64], n_out: 2, act: Activation::ReLU },
+            &mut Pcg64::seeded(7),
+        )
+    }
+
+    fn cfg(threads: usize, method: Method, sparsity: f32) -> AsgdConfig {
+        AsgdConfig {
+            threads,
+            epochs: 4,
+            sampler: SamplerConfig::with_method(method, sparsity),
+            optim: crate::optim::OptimConfig { lr: 0.05, ..Default::default() },
+            conflict_sample_every: 5,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn single_thread_asgd_learns() {
+        let (train, test) = blob_dataset(400, 1);
+        let out = run_asgd(mk_net(), &train, &test, &cfg(1, Method::Lsh, 0.25));
+        assert!(out.record.final_acc() > 0.9, "acc {}", out.record.final_acc());
+    }
+
+    #[test]
+    fn multi_thread_asgd_converges_like_single() {
+        let (train, test) = blob_dataset(400, 2);
+        let a1 = run_asgd(mk_net(), &train, &test, &cfg(1, Method::Lsh, 0.25));
+        let a4 = run_asgd(mk_net(), &train, &test, &cfg(4, Method::Lsh, 0.25));
+        assert!(a4.record.final_acc() > 0.85, "4-thread acc {}", a4.record.final_acc());
+        assert!(
+            (a1.record.final_acc() - a4.record.final_acc()).abs() < 0.1,
+            "thread-count-invariant convergence: {} vs {}",
+            a1.record.final_acc(),
+            a4.record.final_acc()
+        );
+    }
+
+    #[test]
+    fn conflict_stats_are_collected_and_sparse() {
+        let (train, test) = blob_dataset(200, 3);
+        let out = run_asgd(mk_net(), &train, &test, &cfg(2, Method::Lsh, 0.1));
+        assert!(out.conflicts.pairs > 0, "should sample overlaps");
+        assert!(out.conflicts.mean_active_size > 0.0);
+        // 10% sparsity on 64-node layers: overlap well below 1
+        assert!(out.conflicts.mean_overlap < 0.9);
+    }
+
+    #[test]
+    fn standard_dense_asgd_also_runs() {
+        let (train, test) = blob_dataset(200, 4);
+        let out = run_asgd(mk_net(), &train, &test, &cfg(4, Method::Standard, 1.0));
+        assert!(out.record.final_acc() > 0.6, "dense ASGD should still mostly work on blobs");
+    }
+}

@@ -1,0 +1,154 @@
+//! Computation accounting and per-epoch records — the paper's
+//! sustainability metric is "number of multiplications", reported as a
+//! fraction of the dense baseline.
+
+use std::fmt::Write as _;
+
+/// Multiplication counters, split by phase.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MultCounters {
+    /// Sparse forward activations (active_out × active_in per layer).
+    pub forward: u64,
+    /// Backward input-gradient propagation.
+    pub backward: u64,
+    /// Selection overhead: dense pre-activations (WTA/AD) or K·L hashing (LSH).
+    pub selection: u64,
+    /// Optimizer weight updates.
+    pub update: u64,
+}
+
+impl MultCounters {
+    pub fn total(&self) -> u64 {
+        self.forward + self.backward + self.selection + self.update
+    }
+
+    pub fn add(&mut self, other: &MultCounters) {
+        self.forward += other.forward;
+        self.backward += other.backward;
+        self.selection += other.selection;
+        self.update += other.update;
+    }
+}
+
+/// Record for one training epoch.
+#[derive(Clone, Debug)]
+pub struct EpochRecord {
+    pub epoch: usize,
+    pub train_loss: f32,
+    pub test_loss: f32,
+    pub test_acc: f32,
+    pub mults: MultCounters,
+    /// Average fraction of hidden nodes active per layer per example.
+    pub active_fraction: f32,
+    pub wall_secs: f64,
+}
+
+/// Full run history plus metadata, with a CSV dump used by the figure
+/// harnesses.
+#[derive(Clone, Debug, Default)]
+pub struct RunRecord {
+    pub method: String,
+    pub dataset: String,
+    pub sparsity: f32,
+    pub threads: usize,
+    pub epochs: Vec<EpochRecord>,
+}
+
+impl RunRecord {
+    pub fn final_acc(&self) -> f32 {
+        self.epochs.last().map(|e| e.test_acc).unwrap_or(0.0)
+    }
+
+    pub fn best_acc(&self) -> f32 {
+        self.epochs.iter().map(|e| e.test_acc).fold(0.0, f32::max)
+    }
+
+    pub fn total_mults(&self) -> u64 {
+        self.epochs.iter().map(|e| e.mults.total()).sum()
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.epochs.iter().map(|e| e.wall_secs).sum()
+    }
+
+    /// Mean measured active fraction across epochs.
+    pub fn mean_active_fraction(&self) -> f32 {
+        if self.epochs.is_empty() {
+            return 0.0;
+        }
+        self.epochs.iter().map(|e| e.active_fraction).sum::<f32>() / self.epochs.len() as f32
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(
+            "method,dataset,sparsity,threads,epoch,train_loss,test_loss,test_acc,\
+             mults_fwd,mults_bwd,mults_sel,mults_upd,active_fraction,wall_secs\n",
+        );
+        for e in &self.epochs {
+            let _ = writeln!(
+                s,
+                "{},{},{},{},{},{:.6},{:.6},{:.4},{},{},{},{},{:.4},{:.3}",
+                self.method,
+                self.dataset,
+                self.sparsity,
+                self.threads,
+                e.epoch,
+                e.train_loss,
+                e.test_loss,
+                e.test_acc,
+                e.mults.forward,
+                e.mults.backward,
+                e.mults.selection,
+                e.mults.update,
+                e.active_fraction,
+                e.wall_secs
+            );
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(acc: f32) -> EpochRecord {
+        EpochRecord {
+            epoch: 0,
+            train_loss: 1.0,
+            test_loss: 1.0,
+            test_acc: acc,
+            mults: MultCounters { forward: 10, backward: 5, selection: 2, update: 3 },
+            active_fraction: 0.05,
+            wall_secs: 1.5,
+        }
+    }
+
+    #[test]
+    fn counters_sum() {
+        let mut a = MultCounters { forward: 1, backward: 2, selection: 3, update: 4 };
+        assert_eq!(a.total(), 10);
+        a.add(&a.clone());
+        assert_eq!(a.total(), 20);
+    }
+
+    #[test]
+    fn run_record_aggregates() {
+        let mut r = RunRecord {
+            method: "LSH".into(),
+            dataset: "mnist".into(),
+            sparsity: 0.05,
+            threads: 1,
+            epochs: vec![rec(0.8), rec(0.9), rec(0.85)],
+        };
+        r.epochs[1].epoch = 1;
+        r.epochs[2].epoch = 2;
+        assert_eq!(r.final_acc(), 0.85);
+        assert_eq!(r.best_acc(), 0.9);
+        assert_eq!(r.total_mults(), 60);
+        assert!((r.total_secs() - 4.5).abs() < 1e-9);
+        let csv = r.to_csv();
+        assert_eq!(csv.lines().count(), 4);
+        assert!(csv.contains("LSH,mnist,0.05,1,1"));
+    }
+}

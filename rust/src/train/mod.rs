@@ -1,0 +1,12 @@
+//! Training engines: the sequential Algorithm-1 trainer, the lock-free
+//! Hogwild ASGD engine, schedules, and computation-accounting metrics.
+
+pub mod asgd;
+pub mod energy;
+pub mod metrics;
+pub mod schedule;
+pub mod trainer;
+
+pub use asgd::{run_asgd, AsgdConfig, AsgdOutcome, ConflictStats};
+pub use metrics::{EpochRecord, MultCounters, RunRecord};
+pub use trainer::{train_step, StepWorkspace, TrainConfig, Trainer};

@@ -1,0 +1,75 @@
+//! Learning-rate schedules and the grid-search helper the paper uses
+//! ("the learning rate for each approach was set using a standard grid
+//! search and ranged between 1e-2 and 1e-4", §6.2.1).
+
+/// Learning-rate schedule.
+#[derive(Clone, Copy, Debug)]
+pub enum LrSchedule {
+    Constant(f32),
+    /// lr * decay^(epoch / step_every)
+    StepDecay { lr0: f32, decay: f32, step_every: usize },
+}
+
+impl LrSchedule {
+    pub fn at(&self, epoch: usize) -> f32 {
+        match *self {
+            LrSchedule::Constant(lr) => lr,
+            LrSchedule::StepDecay { lr0, decay, step_every } => {
+                lr0 * decay.powi((epoch / step_every.max(1)) as i32)
+            }
+        }
+    }
+}
+
+/// The paper's learning-rate grid.
+pub fn paper_lr_grid() -> Vec<f32> {
+    vec![1e-2, 3e-3, 1e-3, 3e-4, 1e-4]
+}
+
+/// Run `eval` for every grid value and return (best_lr, best_score).
+/// `eval` returns a score where higher is better (e.g. test accuracy).
+pub fn grid_search(grid: &[f32], mut eval: impl FnMut(f32) -> f32) -> (f32, f32) {
+    assert!(!grid.is_empty());
+    let mut best = (grid[0], f32::NEG_INFINITY);
+    for &lr in grid {
+        let score = eval(lr);
+        if score > best.1 {
+            best = (lr, score);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_schedule() {
+        assert_eq!(LrSchedule::Constant(0.1).at(0), 0.1);
+        assert_eq!(LrSchedule::Constant(0.1).at(100), 0.1);
+    }
+
+    #[test]
+    fn step_decay_halves() {
+        let s = LrSchedule::StepDecay { lr0: 0.1, decay: 0.5, step_every: 2 };
+        assert_eq!(s.at(0), 0.1);
+        assert_eq!(s.at(1), 0.1);
+        assert!((s.at(2) - 0.05).abs() < 1e-8);
+        assert!((s.at(4) - 0.025).abs() < 1e-8);
+    }
+
+    #[test]
+    fn grid_search_finds_max() {
+        let (lr, score) = grid_search(&[0.1, 0.2, 0.3], |lr| -(lr - 0.2f32).abs());
+        assert_eq!(lr, 0.2);
+        assert_eq!(score, 0.0);
+    }
+
+    #[test]
+    fn paper_grid_in_paper_range() {
+        for lr in paper_lr_grid() {
+            assert!((1e-4..=1e-2).contains(&lr));
+        }
+    }
+}

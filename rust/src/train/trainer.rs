@@ -1,0 +1,495 @@
+//! Sequential training: Algorithm 1 of the paper. Per-example SGD where
+//! every hidden layer's active set comes from its node selector, forward
+//! and backward touch only active nodes, the optimizer updates only
+//! active rows, and LSH tables are re-organized after each update.
+
+use crate::data::dataset::Dataset;
+use crate::nn::loss::softmax_xent_grad;
+use crate::nn::network::Network;
+use crate::nn::sparse::{LayerInput, SparseVec};
+use crate::optim::{OptimConfig, Optimizer};
+use crate::sampling::{make_selector, NodeSelector, SamplerConfig};
+use crate::train::metrics::{EpochRecord, MultCounters, RunRecord};
+use crate::util::rng::Pcg64;
+use std::time::Instant;
+
+/// Reusable per-step buffers (no allocation on the hot path).
+pub struct StepWorkspace {
+    /// Sparse activations per hidden layer.
+    pub acts: Vec<SparseVec>,
+    /// Dense dL/da buffer per hidden layer (only active coords are live).
+    pub d_hidden: Vec<Vec<f32>>,
+    pub logits: Vec<f32>,
+    pub d_logits: Vec<f32>,
+    pub dz: Vec<f32>,
+    pub d_out: Vec<f32>,
+    pub out_sparse: SparseVec,
+    /// Cached 0..n_out index list for the (always fully-active) output layer.
+    pub all_out: Vec<u32>,
+}
+
+impl StepWorkspace {
+    pub fn for_network(net: &Network) -> Self {
+        let n_hidden = net.n_hidden();
+        StepWorkspace {
+            acts: (0..n_hidden).map(|_| SparseVec::new()).collect(),
+            d_hidden: (0..n_hidden).map(|l| vec![0.0; net.layers[l].n_out()]).collect(),
+            logits: Vec::new(),
+            d_logits: Vec::new(),
+            dz: Vec::new(),
+            d_out: Vec::new(),
+            out_sparse: SparseVec::new(),
+            all_out: (0..net.layers.last().map(|l| l.n_out()).unwrap_or(0) as u32).collect(),
+        }
+    }
+}
+
+/// Outcome of a single training step.
+pub struct StepResult {
+    pub loss: f32,
+    pub correct: bool,
+    pub mults: MultCounters,
+    /// Sum over hidden layers of |AS| / width.
+    pub active_fraction: f32,
+}
+
+/// One SGD step on one example. Standalone so the ASGD engine can drive it
+/// through its shared-parameter pointers.
+#[allow(clippy::too_many_arguments)]
+pub fn train_step(
+    net: &mut Network,
+    selectors: &mut [Box<dyn NodeSelector>],
+    opt: &mut Optimizer,
+    ws: &mut StepWorkspace,
+    x: &[f32],
+    y: u32,
+    rng: &mut Pcg64,
+) -> StepResult {
+    let n_hidden = net.n_hidden();
+    debug_assert_eq!(selectors.len(), n_hidden);
+    let mut mults = MultCounters::default();
+    let mut active_fraction = 0.0f32;
+
+    // ---- Forward: hidden layers on their active sets --------------------
+    for l in 0..n_hidden {
+        // Split acts so we can read acts[l-1] while writing acts[l].
+        let (prev_acts, rest) = ws.acts.split_at_mut(l);
+        let out = &mut rest[0];
+        let input = if l == 0 {
+            LayerInput::Dense(x)
+        } else {
+            LayerInput::Sparse(&prev_acts[l - 1])
+        };
+        let layer = &net.layers[l];
+        // Selection writes into the activation buffer's idx vector.
+        let mut active = std::mem::take(&mut out.idx);
+        let cost = selectors[l].select(layer, input, rng, &mut active);
+        mults.selection += cost.selection_mults;
+        mults.forward += layer.forward_sparse(input, &active, out);
+        // forward_sparse cleared out; restore idx (it re-pushed into it).
+        debug_assert_eq!(out.idx.len(), out.val.len());
+        active_fraction += out.len() as f32 / layer.n_out() as f32;
+    }
+
+    // ---- Output layer: dense over all classes ---------------------------
+    let out_layer_idx = n_hidden;
+    {
+        let layer = &net.layers[out_layer_idx];
+        let input = if n_hidden == 0 {
+            LayerInput::Dense(x)
+        } else {
+            LayerInput::Sparse(&ws.acts[n_hidden - 1])
+        };
+        mults.forward += layer.forward_sparse(input, &ws.all_out, &mut ws.out_sparse);
+    }
+    ws.logits.clear();
+    ws.logits.extend_from_slice(&ws.out_sparse.val);
+
+    // ---- Loss ------------------------------------------------------------
+    ws.d_logits.clear();
+    ws.d_logits.extend_from_slice(&ws.logits);
+    let (loss, pred) = softmax_xent_grad(&mut ws.d_logits, y);
+
+    // ---- Backward + update: output layer ---------------------------------
+    // Zero the gradient buffer only at coords that will be accumulated
+    // (the active set of the last hidden layer).
+    if n_hidden > 0 {
+        let live = &ws.acts[n_hidden - 1].idx;
+        let buf = &mut ws.d_hidden[n_hidden - 1];
+        for &i in live {
+            buf[i as usize] = 0.0;
+        }
+    }
+    {
+        let layer = &mut net.layers[out_layer_idx];
+        let input = if n_hidden == 0 {
+            LayerInput::Dense(x)
+        } else {
+            LayerInput::Sparse(&ws.acts[n_hidden - 1])
+        };
+        let d_back = if n_hidden == 0 {
+            None
+        } else {
+            // Reborrow workaround: take the buffer out during the call.
+            Some(())
+        };
+        // Backward through the (linear) output layer.
+        if d_back.is_some() {
+            let mut dbuf = std::mem::take(&mut ws.d_hidden[n_hidden - 1]);
+            mults.backward +=
+                layer.backward_sparse(input, &ws.out_sparse, &ws.d_logits, &mut ws.dz, Some(&mut dbuf));
+            ws.d_hidden[n_hidden - 1] = dbuf;
+        } else {
+            mults.backward +=
+                layer.backward_sparse(input, &ws.out_sparse, &ws.d_logits, &mut ws.dz, None);
+        }
+        // Update all output rows.
+        for (k, &i) in ws.out_sparse.idx.iter().enumerate() {
+            let dz = ws.dz[k];
+            let row = layer.w.row_mut(i as usize);
+            mults.update += opt.update_row(out_layer_idx, i as usize, dz, input, row, {
+                &mut layer.b[i as usize]
+            });
+        }
+    }
+
+    // ---- Backward + update: hidden layers, top-down ----------------------
+    for l in (0..n_hidden).rev() {
+        // Gather dL/da for this layer's active set.
+        ws.d_out.clear();
+        {
+            let dbuf = &ws.d_hidden[l];
+            for &i in &ws.acts[l].idx {
+                ws.d_out.push(dbuf[i as usize]);
+            }
+        }
+        // Zero the next-lower gradient buffer at its live coords.
+        if l > 0 {
+            let (lower, upper) = ws.acts.split_at(l);
+            let live = &lower[l - 1].idx;
+            let _ = upper;
+            let buf = &mut ws.d_hidden[l - 1];
+            for &i in live {
+                buf[i as usize] = 0.0;
+            }
+        }
+        let (prev_acts, cur_acts) = ws.acts.split_at(l);
+        let out_act = &cur_acts[0];
+        let input =
+            if l == 0 { LayerInput::Dense(x) } else { LayerInput::Sparse(&prev_acts[l - 1]) };
+        let layer = &mut net.layers[l];
+        if l > 0 {
+            let mut dbuf = std::mem::take(&mut ws.d_hidden[l - 1]);
+            mults.backward +=
+                layer.backward_sparse(input, out_act, &ws.d_out, &mut ws.dz, Some(&mut dbuf));
+            ws.d_hidden[l - 1] = dbuf;
+        } else {
+            mults.backward += layer.backward_sparse(input, out_act, &ws.d_out, &mut ws.dz, None);
+        }
+        for (k, &i) in out_act.idx.iter().enumerate() {
+            let dz = ws.dz[k];
+            let row = layer.w.row_mut(i as usize);
+            mults.update +=
+                opt.update_row(l, i as usize, dz, input, row, &mut layer.b[i as usize]);
+        }
+        // Maintain the selector's index over the rows we just changed.
+        selectors[l].post_update(layer, &out_act.idx, rng);
+    }
+
+    StepResult {
+        loss,
+        correct: pred == y,
+        mults,
+        active_fraction: active_fraction / n_hidden.max(1) as f32,
+    }
+}
+
+/// Method-consistent evaluation (paper §1/§5: the hash tables are used at
+/// *test* time too — "reduces computations associated with both the
+/// training and testing (inference) of deep networks").
+///
+/// * LSH / WTA / AD: sparse inference through the same selectors.
+/// * VD: dense with the dropout weight-scaling rule (activations x p).
+/// * Standard: plain dense.
+pub fn evaluate_with_selectors(
+    net: &Network,
+    selectors: &mut [Box<dyn NodeSelector>],
+    method: crate::sampling::Method,
+    sparsity: f32,
+    xs: &[Vec<f32>],
+    ys: &[u32],
+    rng: &mut Pcg64,
+) -> (f32, f32) {
+    use crate::sampling::Method;
+    match method {
+        Method::Standard => net.evaluate(xs, ys),
+        Method::Dropout => {
+            let mut logits = Vec::new();
+            let mut loss_sum = 0.0f64;
+            let mut correct = 0usize;
+            for (x, &y) in xs.iter().zip(ys) {
+                net.forward_dense_scaled(x, sparsity, &mut logits);
+                let (l, p) = crate::nn::loss::softmax_xent(&logits, y);
+                loss_sum += l as f64;
+                correct += (p == y) as usize;
+            }
+            ((loss_sum / xs.len() as f64) as f32, correct as f32 / xs.len() as f32)
+        }
+        Method::AdaptiveDropout | Method::Wta | Method::Lsh => {
+            let n_hidden = net.n_hidden();
+            let mut acts: Vec<SparseVec> = (0..n_hidden).map(|_| SparseVec::new()).collect();
+            let mut active: Vec<u32> = Vec::new();
+            let mut out = SparseVec::new();
+            let mut logits = Vec::new();
+            let mut loss_sum = 0.0f64;
+            let mut correct = 0usize;
+            for (x, &y) in xs.iter().zip(ys) {
+                for l in 0..n_hidden {
+                    let (prev, rest) = acts.split_at_mut(l);
+                    let input = if l == 0 {
+                        LayerInput::Dense(x)
+                    } else {
+                        LayerInput::Sparse(&prev[l - 1])
+                    };
+                    selectors[l].select(&net.layers[l], input, rng, &mut active);
+                    net.layers[l].forward_sparse(input, &active, &mut rest[0]);
+                }
+                let layer = net.layers.last().unwrap();
+                let input = if n_hidden == 0 {
+                    LayerInput::Dense(x)
+                } else {
+                    LayerInput::Sparse(&acts[n_hidden - 1])
+                };
+                let all: Vec<u32> = (0..layer.n_out() as u32).collect();
+                layer.forward_sparse(input, &all, &mut out);
+                logits.clear();
+                logits.extend_from_slice(&out.val);
+                let (l, p) = crate::nn::loss::softmax_xent(&logits, y);
+                loss_sum += l as f64;
+                correct += (p == y) as usize;
+            }
+            ((loss_sum / xs.len() as f64) as f32, correct as f32 / xs.len() as f32)
+        }
+    }
+}
+
+/// Training configuration for the sequential trainer.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub optim: OptimConfig,
+    pub sampler: SamplerConfig,
+    pub seed: u64,
+    /// Evaluate on at most this many test examples per epoch (0 = all).
+    pub eval_cap: usize,
+    /// Print per-epoch progress lines.
+    pub verbose: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            epochs: 10,
+            optim: OptimConfig::default(),
+            sampler: SamplerConfig::default(),
+            seed: 42,
+            eval_cap: 0,
+            verbose: false,
+        }
+    }
+}
+
+/// Sequential trainer owning network + selectors + optimizer.
+pub struct Trainer {
+    pub net: Network,
+    pub selectors: Vec<Box<dyn NodeSelector>>,
+    pub opt: Optimizer,
+    pub cfg: TrainConfig,
+    ws: StepWorkspace,
+    rng: Pcg64,
+}
+
+impl Trainer {
+    pub fn new(net: Network, cfg: TrainConfig) -> Self {
+        let mut rng = Pcg64::new(cfg.seed, 0x7EA1);
+        let selectors: Vec<Box<dyn NodeSelector>> = (0..net.n_hidden())
+            .map(|l| make_selector(&cfg.sampler, &net.layers[l], &mut rng))
+            .collect();
+        let opt = Optimizer::for_network(cfg.optim, &net);
+        let ws = StepWorkspace::for_network(&net);
+        Trainer { net, selectors, opt, cfg, ws, rng }
+    }
+
+    /// Train for `cfg.epochs`, evaluating after each epoch.
+    pub fn run(&mut self, train: &Dataset, test: &Dataset) -> RunRecord {
+        let mut record = RunRecord {
+            method: self.cfg.sampler.method.name().to_string(),
+            dataset: train.name.clone(),
+            sparsity: self.cfg.sampler.sparsity,
+            threads: 1,
+            epochs: Vec::with_capacity(self.cfg.epochs),
+        };
+        for epoch in 0..self.cfg.epochs {
+            let rec = self.run_epoch(epoch, train, test);
+            if self.cfg.verbose {
+                eprintln!(
+                    "[{} {} s={:.2}] epoch {:>3}: loss {:.4} acc {:.4} mults {:.3e} active {:.3}",
+                    record.method,
+                    record.dataset,
+                    record.sparsity,
+                    epoch,
+                    rec.train_loss,
+                    rec.test_acc,
+                    rec.mults.total() as f64,
+                    rec.active_fraction,
+                );
+            }
+            record.epochs.push(rec);
+        }
+        record
+    }
+
+    /// One epoch over shuffled training data + evaluation.
+    pub fn run_epoch(&mut self, epoch: usize, train: &Dataset, test: &Dataset) -> EpochRecord {
+        let t0 = Instant::now();
+        let order = train.epoch_order(&mut self.rng);
+        let mut mults = MultCounters::default();
+        let mut loss_sum = 0.0f64;
+        let mut active_sum = 0.0f64;
+        for &i in &order {
+            let r = train_step(
+                &mut self.net,
+                &mut self.selectors,
+                &mut self.opt,
+                &mut self.ws,
+                &train.xs[i as usize],
+                train.ys[i as usize],
+                &mut self.rng,
+            );
+            loss_sum += r.loss as f64;
+            active_sum += r.active_fraction as f64;
+            mults.add(&r.mults);
+        }
+        for (l, sel) in self.selectors.iter_mut().enumerate() {
+            sel.on_epoch_end(&self.net.layers[l], epoch, &mut self.rng);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let cap = if self.cfg.eval_cap == 0 { test.len() } else { self.cfg.eval_cap.min(test.len()) };
+        let (test_loss, test_acc) = evaluate_with_selectors(
+            &self.net,
+            &mut self.selectors,
+            self.cfg.sampler.method,
+            self.cfg.sampler.sparsity,
+            &test.xs[..cap],
+            &test.ys[..cap],
+            &mut self.rng,
+        );
+        EpochRecord {
+            epoch,
+            train_loss: (loss_sum / order.len() as f64) as f32,
+            test_loss,
+            test_acc,
+            mults,
+            active_fraction: (active_sum / order.len() as f64) as f32,
+            wall_secs: wall,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::activation::Activation;
+    use crate::nn::network::NetworkConfig;
+    use crate::sampling::Method;
+
+    /// Tiny two-gaussian-blob dataset, linearly separable.
+    fn blob_dataset(n: usize, dim: usize, seed: u64) -> (Dataset, Dataset) {
+        let mut rng = Pcg64::seeded(seed);
+        let mut gen = |n: usize| {
+            let mut ds = Dataset::new("blobs", dim, 2);
+            for i in 0..n {
+                let y = (i % 2) as u32;
+                let center = if y == 0 { 0.7 } else { -0.7 };
+                let x: Vec<f32> = (0..dim).map(|_| center + 0.3 * rng.gaussian()).collect();
+                ds.push(x, y);
+            }
+            ds
+        };
+        (gen(n), gen(n / 4))
+    }
+
+    fn net(dim: usize, hidden: usize) -> Network {
+        let cfg =
+            NetworkConfig { n_in: dim, hidden: vec![hidden, hidden], n_out: 2, act: Activation::ReLU };
+        Network::new(&cfg, &mut Pcg64::seeded(77))
+    }
+
+    fn train_with(method: Method, sparsity: f32) -> RunRecord {
+        let (train, test) = blob_dataset(400, 16, 5);
+        let mut t = Trainer::new(
+            net(16, 64),
+            TrainConfig {
+                epochs: 5,
+                sampler: SamplerConfig::with_method(method, sparsity),
+                optim: OptimConfig { lr: 0.05, ..Default::default() },
+                ..Default::default()
+            },
+        );
+        t.run(&train, &test)
+    }
+
+    #[test]
+    fn standard_learns_blobs() {
+        let rec = train_with(Method::Standard, 1.0);
+        assert!(rec.final_acc() > 0.95, "NN acc {}", rec.final_acc());
+    }
+
+    #[test]
+    fn lsh_learns_blobs_sparsely() {
+        let rec = train_with(Method::Lsh, 0.25);
+        assert!(rec.final_acc() > 0.9, "LSH acc {}", rec.final_acc());
+        assert!(rec.mean_active_fraction() < 0.35, "should be sparse");
+    }
+
+    #[test]
+    fn wta_learns_blobs() {
+        let rec = train_with(Method::Wta, 0.25);
+        assert!(rec.final_acc() > 0.9, "WTA acc {}", rec.final_acc());
+    }
+
+    #[test]
+    fn dropout_learns_blobs() {
+        let rec = train_with(Method::Dropout, 0.5);
+        assert!(rec.final_acc() > 0.85, "VD acc {}", rec.final_acc());
+    }
+
+    #[test]
+    fn adaptive_dropout_learns_blobs() {
+        let rec = train_with(Method::AdaptiveDropout, 0.5);
+        assert!(rec.final_acc() > 0.85, "AD acc {}", rec.final_acc());
+    }
+
+    #[test]
+    fn lsh_uses_far_fewer_multiplications_than_standard() {
+        let std_rec = train_with(Method::Standard, 1.0);
+        let lsh_rec = train_with(Method::Lsh, 0.1);
+        let ratio = lsh_rec.total_mults() as f64 / std_rec.total_mults() as f64;
+        assert!(ratio < 0.5, "LSH should use far fewer mults, ratio {ratio:.3}");
+    }
+
+    #[test]
+    fn active_fraction_tracks_target() {
+        let rec = train_with(Method::Wta, 0.25);
+        let af = rec.mean_active_fraction();
+        assert!((af - 0.25).abs() < 0.05, "WTA active fraction {af} vs target 0.25");
+    }
+
+    #[test]
+    fn loss_decreases_over_epochs() {
+        let rec = train_with(Method::Lsh, 0.5);
+        let first = rec.epochs.first().unwrap().train_loss;
+        let last = rec.epochs.last().unwrap().train_loss;
+        assert!(last < first, "loss should fall: {first} -> {last}");
+    }
+}

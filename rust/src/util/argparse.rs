@@ -1,0 +1,217 @@
+//! Minimal CLI argument parser (the offline crate set has no `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args and
+//! subcommands. Each binary declares its flags up front so `--help` output
+//! and unknown-flag errors are generated consistently.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+    pub help: &'static str,
+}
+
+/// Parsed arguments: flag map + positionals.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.values.contains_key(name)
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        match self.get(name) {
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                eprintln!("invalid value for --{name}: {v}");
+                std::process::exit(2);
+            }),
+            None => default,
+        }
+    }
+
+    /// Comma-separated list, e.g. `--methods nn,vd,lsh`.
+    pub fn list(&self, name: &str) -> Vec<String> {
+        self.get(name)
+            .map(|v| v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect())
+            .unwrap_or_default()
+    }
+}
+
+/// Command-line parser with declared flags.
+pub struct Parser {
+    program: &'static str,
+    about: &'static str,
+    specs: Vec<FlagSpec>,
+}
+
+impl Parser {
+    pub fn new(program: &'static str, about: &'static str) -> Self {
+        Parser { program, about, specs: Vec::new() }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(FlagSpec { name, takes_value: false, default: None, help });
+        self
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.specs.push(FlagSpec { name, takes_value: true, default: Some(default), help });
+        self
+    }
+
+    pub fn opt_req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(FlagSpec { name, takes_value: true, default: None, help });
+        self
+    }
+
+    fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nFlags:\n", self.program, self.about);
+        for spec in &self.specs {
+            let arg = if spec.takes_value { format!("--{} <val>", spec.name) } else { format!("--{}", spec.name) };
+            let def = spec.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            s.push_str(&format!("  {:<28} {}{}\n", arg, spec.help, def));
+        }
+        s
+    }
+
+    /// Parse an iterator of argument strings (excluding argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(&self, argv: I) -> Result<Args, String> {
+        let mut args = Args::default();
+        for spec in &self.specs {
+            if let Some(d) = spec.default {
+                args.values.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| format!("unknown flag --{name}\n\n{}", self.usage()))?;
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("flag --{name} requires a value"))?,
+                    };
+                    args.values.insert(name, val);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(format!("flag --{name} does not take a value"));
+                    }
+                    args.flags.push(name);
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse the process args; print usage and exit on error / --help.
+    pub fn parse(&self) -> Args {
+        match self.parse_from(std::env::args().skip(1)) {
+            Ok(a) => a,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    /// Parse from the process args but skipping the first positional
+    /// (used after subcommand dispatch in main.rs).
+    pub fn parse_rest(&self, rest: Vec<String>) -> Args {
+        match self.parse_from(rest) {
+            Ok(a) => a,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parser() -> Parser {
+        Parser::new("t", "test")
+            .opt("epochs", "10", "number of epochs")
+            .opt_req("dataset", "dataset name")
+            .flag("verbose", "chatty output")
+    }
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parser().parse_from(sv(&[])).unwrap();
+        assert_eq!(a.get("epochs"), Some("10"));
+        assert_eq!(a.get("dataset"), None);
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn values_and_flags() {
+        let a = parser()
+            .parse_from(sv(&["--epochs", "5", "--dataset=mnist", "--verbose", "pos1"]))
+            .unwrap();
+        assert_eq!(a.parse_or("epochs", 0usize), 5);
+        assert_eq!(a.get("dataset"), Some("mnist"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(parser().parse_from(sv(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(parser().parse_from(sv(&["--epochs"])).is_err());
+    }
+
+    #[test]
+    fn help_yields_usage() {
+        let err = parser().parse_from(sv(&["--help"])).unwrap_err();
+        assert!(err.contains("--epochs"));
+        assert!(err.contains("number of epochs"));
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parser().parse_from(sv(&["--dataset", "a, b,c"])).unwrap();
+        assert_eq!(a.list("dataset"), vec!["a", "b", "c"]);
+    }
+}

@@ -1,0 +1,90 @@
+//! Fingerprint bit manipulation for (K, L) LSH.
+//!
+//! A fingerprint is the concatenation of K one-bit hashes packed into the
+//! low K bits of a `u32` (the paper stores "K bits together efficiently as
+//! an integer"). K ≤ 32 everywhere in the paper (K = 6 in the experiments).
+
+/// Pack a slice of sign bits (true = 1) into the low bits of a `u32`.
+/// `bits[0]` becomes the most-significant of the K bits, matching the
+/// "h1;h2;...;hK" concatenation order in the paper's B_j(x) definition.
+#[inline]
+pub fn pack_bits(bits: &[bool]) -> u32 {
+    debug_assert!(bits.len() <= 32);
+    let mut fp = 0u32;
+    for &b in bits {
+        fp = (fp << 1) | b as u32;
+    }
+    fp
+}
+
+/// Unpack the low `k` bits of a fingerprint into sign bits (MSB-first).
+#[inline]
+pub fn unpack_bits(fp: u32, k: usize) -> Vec<bool> {
+    (0..k).map(|i| fp >> (k - 1 - i) & 1 == 1).collect()
+}
+
+/// Flip bit `i` (0 = most significant of the K bits) of a K-bit fingerprint.
+#[inline]
+pub fn flip_bit(fp: u32, k: usize, i: usize) -> u32 {
+    debug_assert!(i < k);
+    fp ^ (1 << (k - 1 - i))
+}
+
+/// Hamming distance between two K-bit fingerprints.
+#[inline]
+pub fn hamming(a: u32, b: u32) -> u32 {
+    (a ^ b).count_ones()
+}
+
+/// Number of buckets for a K-bit table.
+#[inline]
+pub fn num_buckets(k: usize) -> usize {
+    1usize << k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let bits = [true, false, true, true, false, true];
+        let fp = pack_bits(&bits);
+        assert_eq!(fp, 0b101101);
+        assert_eq!(unpack_bits(fp, 6), bits);
+    }
+
+    #[test]
+    fn pack_empty() {
+        assert_eq!(pack_bits(&[]), 0);
+    }
+
+    #[test]
+    fn flip_changes_exactly_one_bit() {
+        let fp = 0b101101;
+        for i in 0..6 {
+            let flipped = flip_bit(fp, 6, i);
+            assert_eq!(hamming(fp, flipped), 1);
+            assert_eq!(flip_bit(flipped, 6, i), fp);
+        }
+    }
+
+    #[test]
+    fn flip_bit_order_is_msb_first() {
+        assert_eq!(flip_bit(0, 6, 0), 0b100000);
+        assert_eq!(flip_bit(0, 6, 5), 0b000001);
+    }
+
+    #[test]
+    fn hamming_basics() {
+        assert_eq!(hamming(0, 0), 0);
+        assert_eq!(hamming(0b111, 0), 3);
+        assert_eq!(hamming(0b101, 0b010), 3);
+    }
+
+    #[test]
+    fn bucket_counts() {
+        assert_eq!(num_buckets(6), 64);
+        assert_eq!(num_buckets(0), 1);
+    }
+}

@@ -1,0 +1,163 @@
+//! Run-configuration files: a strict `key = value` format with `[section]`
+//! headers and `#` comments (a TOML subset — the offline crate set has no
+//! serde/toml). Used by the launcher to describe experiments.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Flat parsed config: "section.key" -> raw string value.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Config {
+    entries: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value, got {line:?}", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let val = v.trim().trim_matches('"').to_string();
+            if entries.insert(key.clone(), val).is_some() {
+                return Err(format!("line {}: duplicate key {key}", lineno + 1));
+            }
+        }
+        Ok(Config { entries })
+    }
+
+    pub fn load(path: &Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.entries.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>, String> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v.parse().map(Some).map_err(|_| format!("bad value for {key}: {v}")),
+        }
+    }
+
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
+        Ok(self.get_parsed(key)?.unwrap_or(default))
+    }
+
+    /// Comma-separated list value.
+    pub fn get_list(&self, key: &str) -> Vec<String> {
+        self.get(key)
+            .map(|v| v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn set(&mut self, key: &str, value: impl ToString) {
+        self.entries.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+
+    /// Serialize back out (sections regrouped, keys sorted).
+    pub fn to_text(&self) -> String {
+        let mut top = String::new();
+        let mut sections: BTreeMap<&str, Vec<(&str, &str)>> = BTreeMap::new();
+        for (k, v) in &self.entries {
+            match k.split_once('.') {
+                Some((sec, key)) => sections.entry(sec).or_default().push((key, v)),
+                None => {
+                    let _ = writeln!(top, "{k} = {v}");
+                }
+            }
+        }
+        for (sec, kvs) in sections {
+            let _ = writeln!(top, "[{sec}]");
+            for (k, v) in kvs {
+                let _ = writeln!(top, "{k} = {v}");
+            }
+        }
+        top
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "
+# experiment config
+seed = 42
+[net]
+hidden = 1000
+layers = 3       # depth
+[lsh]
+k = 6
+l = 5
+methods = lsh, wta ,nn
+";
+
+    #[test]
+    fn parses_sections_and_comments() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get("seed"), Some("42"));
+        assert_eq!(c.get("net.hidden"), Some("1000"));
+        assert_eq!(c.get_or::<usize>("net.layers", 0).unwrap(), 3);
+        assert_eq!(c.get_list("lsh.methods"), vec!["lsh", "wta", "nn"]);
+    }
+
+    #[test]
+    fn missing_key_defaults() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get_or::<f32>("lsh.nope", 1.5).unwrap(), 1.5);
+    }
+
+    #[test]
+    fn bad_value_is_error() {
+        let c = Config::parse("x = abc").unwrap();
+        assert!(c.get_or::<usize>("x", 0).is_err());
+    }
+
+    #[test]
+    fn duplicate_key_is_error() {
+        assert!(Config::parse("a = 1\na = 2").is_err());
+    }
+
+    #[test]
+    fn garbage_line_is_error() {
+        assert!(Config::parse("just words").is_err());
+    }
+
+    #[test]
+    fn roundtrip() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let c2 = Config::parse(&c.to_text()).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut c = Config::parse("a = 1").unwrap();
+        c.set("a", 2);
+        c.set("sec.b", "x");
+        assert_eq!(c.get("a"), Some("2"));
+        assert_eq!(c.get("sec.b"), Some("x"));
+    }
+}

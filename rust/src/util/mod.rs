@@ -1,0 +1,11 @@
+//! Foundation utilities: deterministic RNG, fingerprint bit manipulation,
+//! CLI/config parsing, timing, and a small property-testing driver. All of
+//! these exist in-tree because the build is offline against a vendored
+//! crate set without rand/clap/serde/criterion/proptest (DESIGN.md §3).
+
+pub mod argparse;
+pub mod bitpack;
+pub mod config;
+pub mod proptesting;
+pub mod rng;
+pub mod timer;

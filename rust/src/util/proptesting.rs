@@ -1,0 +1,135 @@
+//! Tiny property-testing driver (the offline crate set has no proptest).
+//!
+//! `check(cases, gen, prop)` runs `prop` on `cases` random inputs drawn by
+//! `gen`; on failure it attempts a bounded shrink by re-drawing "smaller"
+//! cases (the generator receives a shrink level that should reduce sizes),
+//! then panics with the seed so the failure is reproducible.
+
+use crate::util::rng::Pcg64;
+
+/// Context handed to generators: RNG + shrink level (0 = full size).
+pub struct Gen<'a> {
+    pub rng: &'a mut Pcg64,
+    /// 0 = full-size cases; higher = generator should produce smaller cases.
+    pub shrink: u32,
+}
+
+impl<'a> Gen<'a> {
+    /// Scale a size bound by the shrink level (halved per level, min 1).
+    pub fn size(&mut self, full: usize) -> usize {
+        let scaled = full >> self.shrink;
+        let bound = scaled.max(1);
+        1 + self.rng.below(bound as u32) as usize
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f32(lo, hi)
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.rng.range_f32(lo, hi)).collect()
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi_incl: usize) -> usize {
+        lo + self.rng.below((hi_incl - lo + 1) as u32) as usize
+    }
+}
+
+/// Run a property over random cases. Panics with reproduction info on the
+/// first falsified case (after trying up to 4 shrink levels).
+pub fn check<T, G, P>(cases: usize, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Gen) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    T: std::fmt::Debug,
+{
+    check_seeded(0xC0FFEE, cases, &mut gen, &mut prop);
+}
+
+/// Like [`check`] but with an explicit base seed (printed on failure).
+pub fn check_seeded<T, G, P>(seed: u64, cases: usize, gen: &mut G, prop: &mut P)
+where
+    G: FnMut(&mut Gen) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    T: std::fmt::Debug,
+{
+    for case in 0..cases {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Pcg64::seeded(case_seed);
+        let input = gen(&mut Gen { rng: &mut rng, shrink: 0 });
+        if let Err(msg) = prop(&input) {
+            // Try to find a smaller failing case before reporting.
+            let mut best: (T, String) = (input, msg);
+            'shrink: for level in 1..=4u32 {
+                for attempt in 0..32u64 {
+                    let s = case_seed ^ (level as u64) << 32 ^ attempt;
+                    let mut rng = Pcg64::seeded(s);
+                    let cand = gen(&mut Gen { rng: &mut rng, shrink: level });
+                    if let Err(m) = prop(&cand) {
+                        best = (cand, m);
+                        continue 'shrink;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property falsified (case {case}, seed {case_seed:#x}):\n  input: {:?}\n  error: {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check(
+            50,
+            |g| {
+                let n = g.size(10);
+                g.vec_f32(n, -1.0, 1.0)
+            },
+            |v| {
+                n += 1;
+                if v.iter().all(|x| x.abs() <= 1.0) { Ok(()) } else { Err("range".into()) }
+            },
+        );
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property falsified")]
+    fn failing_property_panics() {
+        check(
+            20,
+            |g| g.usize_in(0, 100),
+            |&x| if x < 101 { Err(format!("always fails, x={x}")) } else { Ok(()) },
+        );
+    }
+
+    #[test]
+    fn shrink_levels_reduce_size() {
+        let mut rng = Pcg64::seeded(1);
+        let mut g0 = Gen { rng: &mut rng, shrink: 0 };
+        let full: usize = (0..100).map(|_| g0.size(64)).max().unwrap();
+        let mut rng = Pcg64::seeded(1);
+        let mut g3 = Gen { rng: &mut rng, shrink: 3 };
+        let small: usize = (0..100).map(|_| g3.size(64)).max().unwrap();
+        assert!(small <= full);
+        assert!(small <= 8);
+    }
+}

@@ -1,0 +1,228 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline crate set has no `rand`, so we implement PCG-XSH-RR-64/32
+//! (O'Neill 2014) seeded via SplitMix64, plus Box–Muller gaussians. All
+//! randomness in the library flows through [`Pcg64`] so experiments are
+//! reproducible from a single `u64` seed.
+
+/// SplitMix64 step — used to expand a user seed into stream/state words.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// PCG-XSH-RR 64/32: 64-bit LCG state, 32-bit output with permutation.
+/// Small, fast, passes BigCrush — more than adequate for LSH projections,
+/// dropout masks and dataset synthesis.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u64,
+    inc: u64,
+    /// Cached second gaussian from Box–Muller.
+    spare_gauss: Option<f32>,
+}
+
+const PCG_MULT: u64 = 6_364_136_223_846_793_005;
+
+impl Pcg64 {
+    /// Create a generator from a seed; `stream` selects an independent
+    /// sequence (used to give each ASGD worker / hash table its own RNG).
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut sm = seed ^ 0xA02B_DBF7_BB3C_0A7A;
+        let init_state = splitmix64(&mut sm);
+        let mut sm2 = stream ^ 0x2545_F491_4F6C_DD1D;
+        let inc = splitmix64(&mut sm2) | 1; // must be odd
+        let mut rng = Pcg64 { state: 0, inc, spare_gauss: None };
+        rng.state = init_state.wrapping_add(inc);
+        rng.next_u32();
+        rng
+    }
+
+    /// Single-stream convenience constructor.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        // 24 high bits -> [0,1) with full float precision.
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform in [0, 1) with f64 precision.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, bound) via Lemire's multiply-shift rejection.
+    #[inline]
+    pub fn below(&mut self, bound: u32) -> u32 {
+        debug_assert!(bound > 0);
+        loop {
+            let x = self.next_u32();
+            let m = (x as u64) * (bound as u64);
+            let lo = m as u32;
+            if lo >= bound || lo >= bound.wrapping_neg() % bound {
+                return (m >> 32) as u32;
+            }
+        }
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.next_f32()
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn bernoulli(&mut self, p: f32) -> bool {
+        self.next_f32() < p
+    }
+
+    /// Standard normal via Box–Muller (caches the spare value).
+    pub fn gaussian(&mut self) -> f32 {
+        if let Some(g) = self.spare_gauss.take() {
+            return g;
+        }
+        loop {
+            let u1 = self.next_f32();
+            if u1 <= f32::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.next_f32();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let theta = 2.0 * std::f32::consts::PI * u2;
+            self.spare_gauss = Some(r * theta.sin());
+            return r * theta.cos();
+        }
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            let j = self.below(i as u32 + 1) as usize;
+            items.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (partial Fisher–Yates).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<u32> {
+        let k = k.min(n);
+        let mut idx: Vec<u32> = (0..n as u32).collect();
+        for i in 0..k {
+            let j = i + self.below((n - i) as u32) as usize;
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Pcg64::seeded(7);
+        let mut b = Pcg64::seeded(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn streams_are_independent() {
+        let mut a = Pcg64::new(7, 0);
+        let mut b = Pcg64::new(7, 1);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4, "streams should differ almost everywhere");
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut rng = Pcg64::seeded(1);
+        for _ in 0..10_000 {
+            let x = rng.next_f32();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_is_unbiased_enough() {
+        let mut rng = Pcg64::seeded(3);
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            counts[rng.below(7) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((8_500..11_500).contains(&c), "count {c} off uniform");
+        }
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut rng = Pcg64::seeded(11);
+        let n = 100_000;
+        let (mut sum, mut sumsq) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let g = rng.gaussian() as f64;
+            sum += g;
+            sumsq += g * g;
+        }
+        let mean = sum / n as f64;
+        let var = sumsq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::seeded(5);
+        let mut v: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut rng = Pcg64::seeded(9);
+        let s = rng.sample_indices(50, 20);
+        assert_eq!(s.len(), 20);
+        let mut t = s.clone();
+        t.sort_unstable();
+        t.dedup();
+        assert_eq!(t.len(), 20);
+        assert!(t.iter().all(|&i| i < 50));
+    }
+
+    #[test]
+    fn bernoulli_rate() {
+        let mut rng = Pcg64::seeded(13);
+        let hits = (0..50_000).filter(|_| rng.bernoulli(0.3)).count();
+        assert!((13_500..16_500).contains(&hits));
+    }
+}

@@ -1,0 +1,121 @@
+//! Wall-clock timing + simple statistics for the bench harness.
+
+use std::time::Instant;
+
+/// Measure a closure, returning (result, seconds).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Online mean/min/max/stddev accumulator for repeated timings.
+#[derive(Clone, Debug, Default)]
+pub struct Stats {
+    n: usize,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Stats {
+    pub fn new() -> Self {
+        Stats { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> usize {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+    pub fn stddev(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { (self.m2 / (self.n - 1) as f64).sqrt() }
+    }
+}
+
+/// Bench runner: warmup iterations then timed iterations; returns Stats of
+/// per-iteration seconds. Used by the harness=false bench binaries (the
+/// offline crate set has no criterion — see DESIGN.md §3).
+pub fn bench_loop<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Stats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut stats = Stats::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        stats.push(t0.elapsed().as_secs_f64());
+    }
+    stats
+}
+
+/// Render seconds human-readably (ns/µs/ms/s).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_accumulate() {
+        let mut s = Stats::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.push(x);
+        }
+        assert_eq!(s.count(), 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+        assert!((s.stddev() - 1.2909944).abs() < 1e-5);
+    }
+
+    #[test]
+    fn time_it_measures() {
+        let (v, secs) = time_it(|| 2 + 2);
+        assert_eq!(v, 4);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn bench_loop_runs_all_iters() {
+        let mut calls = 0;
+        let stats = bench_loop(2, 5, || calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(stats.count(), 5);
+    }
+
+    #[test]
+    fn fmt_secs_units() {
+        assert!(fmt_secs(5e-10).ends_with("ns"));
+        assert!(fmt_secs(5e-5).ends_with("µs"));
+        assert!(fmt_secs(5e-2).ends_with("ms"));
+        assert!(fmt_secs(5.0).ends_with('s'));
+    }
+}

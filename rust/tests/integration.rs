@@ -1,0 +1,290 @@
+//! Cross-module integration tests: end-to-end training on every synthetic
+//! benchmark with every method, ASGD-vs-sequential equivalence, model
+//! checkpoint round-trips through retraining, and CLI-level experiment
+//! drivers.
+
+use hashdl::coordinator::experiment::{fig45, fig6, table3, ExperimentScale};
+use hashdl::data::synth::Benchmark;
+use hashdl::data::{io, Dataset};
+use hashdl::nn::activation::Activation;
+use hashdl::nn::network::{Network, NetworkConfig};
+use hashdl::optim::{OptimConfig, OptimizerKind};
+use hashdl::sampling::{Method, SamplerConfig};
+use hashdl::train::asgd::{run_asgd, AsgdConfig};
+use hashdl::train::trainer::{TrainConfig, Trainer};
+use hashdl::util::rng::Pcg64;
+
+fn small_net(b: Benchmark, hidden: usize, depth: usize, seed: u64) -> Network {
+    Network::new(
+        &NetworkConfig {
+            n_in: b.dim(),
+            hidden: vec![hidden; depth],
+            n_out: b.n_classes(),
+            act: Activation::ReLU,
+        },
+        &mut Pcg64::seeded(seed),
+    )
+}
+
+/// Every method learns rectangles (binary, easiest benchmark) well above
+/// chance at its natural operating point.
+#[test]
+fn all_methods_learn_rectangles() {
+    let (train, test) = Benchmark::Rectangles.generate(1200, 300, 7);
+    for (method, sparsity, floor) in [
+        (Method::Standard, 1.0, 0.80),
+        (Method::Dropout, 0.5, 0.75),
+        (Method::AdaptiveDropout, 0.5, 0.75),
+        (Method::Wta, 0.25, 0.80),
+        (Method::Lsh, 0.25, 0.80),
+    ] {
+        let mut sampler = SamplerConfig::with_method(method, sparsity);
+        if method == Method::AdaptiveDropout {
+            sampler.ad_beta = 0.0;
+        }
+        let mut t = Trainer::new(
+            small_net(Benchmark::Rectangles, 128, 2, 7),
+            TrainConfig {
+                epochs: 4,
+                sampler,
+                optim: OptimConfig { lr: 1e-2, ..Default::default() },
+                eval_cap: 300,
+                ..Default::default()
+            },
+        );
+        let rec = t.run(&train, &test);
+        assert!(
+            rec.final_acc() > floor,
+            "{} reached only {:.3} (floor {floor})",
+            method.name(),
+            rec.final_acc()
+        );
+    }
+}
+
+/// LSH learns the 2048-dim NORB-like benchmark (5 classes) above chance
+/// with 10% active nodes — the high-dimensional path.
+#[test]
+fn lsh_learns_norb_high_dim() {
+    let (train, test) = Benchmark::Norb.generate(1500, 400, 11);
+    let mut t = Trainer::new(
+        small_net(Benchmark::Norb, 128, 2, 11),
+        TrainConfig {
+            epochs: 5,
+            sampler: SamplerConfig::lsh_tuned(0.10),
+            optim: OptimConfig { lr: 1e-2, ..Default::default() },
+            eval_cap: 400,
+            ..Default::default()
+        },
+    );
+    let rec = t.run(&train, &test);
+    // The scaled-down config (128-wide, 5 epochs) does not saturate NORB;
+    // well-above-chance is the integration signal (chance = 0.2).
+    assert!(rec.final_acc() > 0.30, "NORB 5-class acc {:.3} (chance 0.2)", rec.final_acc());
+}
+
+/// LSH learns 10-class MNIST-like digits at 10% active.
+#[test]
+fn lsh_learns_mnist_like() {
+    let (train, test) = Benchmark::Mnist8m.generate(2000, 500, 13);
+    let mut t = Trainer::new(
+        small_net(Benchmark::Mnist8m, 192, 2, 13),
+        TrainConfig {
+            epochs: 6,
+            sampler: SamplerConfig::lsh_tuned(0.10),
+            optim: OptimConfig { lr: 1e-2, ..Default::default() },
+            eval_cap: 500,
+            ..Default::default()
+        },
+    );
+    let rec = t.run(&train, &test);
+    assert!(rec.final_acc() > 0.6, "MNIST-like acc {:.3} (chance 0.1)", rec.final_acc());
+}
+
+/// Sequential trainer and 1-thread ASGD produce comparable results (same
+/// algorithm, different engines).
+#[test]
+fn asgd_single_thread_matches_sequential() {
+    let (train, test) = Benchmark::Convex.generate(800, 300, 17);
+    let mk_sampler = || SamplerConfig::with_method(Method::Lsh, 0.25);
+    let mut t = Trainer::new(
+        small_net(Benchmark::Convex, 96, 2, 17),
+        TrainConfig {
+            epochs: 4,
+            sampler: mk_sampler(),
+            optim: OptimConfig { lr: 1e-2, ..Default::default() },
+            eval_cap: 300,
+            ..Default::default()
+        },
+    );
+    let seq = t.run(&train, &test);
+    let out = run_asgd(
+        small_net(Benchmark::Convex, 96, 2, 17),
+        &train,
+        &test,
+        &AsgdConfig {
+            threads: 1,
+            epochs: 4,
+            sampler: mk_sampler(),
+            optim: OptimConfig { lr: 1e-2, ..Default::default() },
+            eval_cap: 300,
+            ..Default::default()
+        },
+    );
+    assert!(
+        (seq.final_acc() - out.record.final_acc()).abs() < 0.12,
+        "sequential {:.3} vs asgd-1 {:.3}",
+        seq.final_acc(),
+        out.record.final_acc()
+    );
+}
+
+/// Checkpoint round-trip: save a trained model, reload, evaluation must be
+/// identical; continued training must still work.
+#[test]
+fn checkpoint_roundtrip_and_resume() {
+    let (train, test) = Benchmark::Rectangles.generate(600, 200, 19);
+    let mut t = Trainer::new(
+        small_net(Benchmark::Rectangles, 64, 2, 19),
+        TrainConfig {
+            epochs: 2,
+            sampler: SamplerConfig::with_method(Method::Lsh, 0.5),
+            optim: OptimConfig { lr: 1e-2, ..Default::default() },
+            eval_cap: 200,
+            ..Default::default()
+        },
+    );
+    t.run(&train, &test);
+    let (loss_a, acc_a) = t.net.evaluate(&test.xs, &test.ys);
+
+    let path = std::env::temp_dir().join("hashdl_integration_ckpt.bin");
+    io::save_network(&t.net, &path).unwrap();
+    let reloaded = io::load_network(&path).unwrap();
+    let (loss_b, acc_b) = reloaded.evaluate(&test.xs, &test.ys);
+    assert_eq!(acc_a, acc_b);
+    assert!((loss_a - loss_b).abs() < 1e-6);
+
+    // Resume training from the checkpoint.
+    let mut t2 = Trainer::new(
+        reloaded,
+        TrainConfig {
+            epochs: 1,
+            sampler: SamplerConfig::with_method(Method::Lsh, 0.5),
+            optim: OptimConfig { lr: 1e-2, ..Default::default() },
+            eval_cap: 200,
+            ..Default::default()
+        },
+    );
+    // Fresh adagrad accumulators make the first resumed steps large, so a
+    // transient dip is expected; the model must stay clearly above chance.
+    let rec = t2.run(&train, &test);
+    assert!(
+        rec.final_acc() >= (acc_a - 0.25).max(0.6),
+        "resume must not destroy the model: before {acc_a:.3}, after {:.3}",
+        rec.final_acc()
+    );
+    std::fs::remove_file(path).ok();
+}
+
+/// Dataset save/load round-trip through the binary format at benchmark scale.
+#[test]
+fn dataset_io_roundtrip_benchmark() {
+    let (ds, _) = Benchmark::Convex.generate(100, 1, 23);
+    let path = std::env::temp_dir().join("hashdl_integration_ds.bin");
+    io::save_dataset(&ds, &path).unwrap();
+    let back = io::load_dataset(&path).unwrap();
+    assert_eq!(back.len(), ds.len());
+    assert_eq!(back.xs, ds.xs);
+    assert_eq!(back.ys, ds.ys);
+    std::fs::remove_file(path).ok();
+}
+
+/// The experiment drivers produce well-formed reports.
+#[test]
+fn experiment_drivers_smoke() {
+    let r = table3();
+    assert_eq!(r.rows.len(), 4);
+
+    let s = ExperimentScale {
+        hidden: 48,
+        train_frac: 0.05,
+        test_cap: 150,
+        epochs: 1,
+        lr: 1e-2,
+        seed: 3,
+    };
+    let r45 = fig45(&[Benchmark::Convex], &[Method::Lsh], &[2], &[0.25], &s, false);
+    assert_eq!(r45.rows.len(), 1);
+    let ratio: f64 = r45.rows[0][5].parse().unwrap();
+    assert!(ratio < 1.0, "LSH must use less than dense compute, ratio {ratio}");
+
+    let r6 = fig6(&[Benchmark::Convex], &[1, 2], 0.25, &s, false);
+    assert_eq!(r6.rows.len(), 2, "one row per (thread, epoch)");
+}
+
+/// Hogwild with a degenerate dataset (single repeated sample) must not
+/// crash or corrupt memory — failure-injection for the racy path.
+#[test]
+fn asgd_degenerate_data_is_safe() {
+    let mut train = Dataset::new("degenerate", 8, 2);
+    for _ in 0..64 {
+        train.push(vec![1.0; 8], 1);
+    }
+    let test = train.clone();
+    let net = Network::new(
+        &NetworkConfig { n_in: 8, hidden: vec![16, 16], n_out: 2, act: Activation::ReLU },
+        &mut Pcg64::seeded(29),
+    );
+    let out = run_asgd(
+        net,
+        &train,
+        &test,
+        &AsgdConfig {
+            threads: 4,
+            epochs: 3,
+            sampler: SamplerConfig::with_method(Method::Lsh, 0.25),
+            optim: OptimConfig { lr: 0.05, ..Default::default() },
+            conflict_sample_every: 1,
+            ..Default::default()
+        },
+    );
+    // Max-overlap regime: identical inputs select identical active sets.
+    assert!(out.conflicts.mean_overlap > 0.5, "degenerate data must show high overlap");
+    assert!(out.record.final_acc() > 0.99, "trivially learnable");
+    for l in &out.net.layers {
+        assert!(l.w.as_slice().iter().all(|v| v.is_finite()), "weights must stay finite");
+    }
+}
+
+/// All four optimizers drive the LSH trainer to a working model.
+#[test]
+fn all_optimizers_work_with_lsh() {
+    let (train, test) = Benchmark::Rectangles.generate(600, 200, 31);
+    for kind in [
+        OptimizerKind::Sgd,
+        OptimizerKind::Momentum,
+        OptimizerKind::Adagrad,
+        OptimizerKind::MomentumAdagrad,
+    ] {
+        // Per-sample (batch-1) momentum is step-size sensitive: each update
+        // compounds into the velocity, so it needs a much gentler lr and a
+        // lower bar than the adagrad-normalized variants.
+        let (lr, floor) = match kind {
+            OptimizerKind::Sgd => (0.05, 0.70),
+            OptimizerKind::Momentum => (0.005, 0.62),
+            _ => (0.01, 0.70),
+        };
+        let mut t = Trainer::new(
+            small_net(Benchmark::Rectangles, 64, 2, 31),
+            TrainConfig {
+                epochs: 4,
+                sampler: SamplerConfig::with_method(Method::Lsh, 0.25),
+                optim: OptimConfig { kind, lr, ..Default::default() },
+                eval_cap: 200,
+                ..Default::default()
+            },
+        );
+        let rec = t.run(&train, &test);
+        assert!(rec.final_acc() > floor, "{kind:?} reached only {:.3}", rec.final_acc());
+    }
+}

@@ -1,0 +1,152 @@
+//! Integration: the AOT artifacts (JAX/Pallas lowered to HLO text) must
+//! agree numerically with the rust-native implementations — the
+//! cross-language contract of the three-layer architecture.
+//!
+//! Requires `make artifacts` to have produced artifacts/ (the Makefile
+//! test target guarantees this ordering).
+
+use hashdl::lsh::family::LshFamily;
+use hashdl::lsh::srp::SrpHash;
+use hashdl::nn::activation::Activation;
+use hashdl::nn::network::{Network, NetworkConfig};
+use hashdl::runtime::pjrt::{
+    batch_literal, label_literal, literal_to_f32s, literal_to_i32s, matrix_literal,
+    scalar_literal, vec_literal, PjrtRuntime,
+};
+use hashdl::runtime::{ArtifactSet, StdBaseline};
+use hashdl::tensor::matrix::Matrix;
+use hashdl::util::rng::Pcg64;
+use std::path::PathBuf;
+
+fn artifacts_dir() -> PathBuf {
+    // Tests run from the workspace root.
+    let p = PathBuf::from("artifacts");
+    assert!(
+        p.join("manifest.txt").exists(),
+        "artifacts missing — run `make artifacts` before `cargo test`"
+    );
+    p
+}
+
+#[test]
+fn simhash_artifact_matches_rust_srp() {
+    let dir = artifacts_dir();
+    let arts = ArtifactSet::resolve(&dir, "tiny").unwrap();
+    let rt = PjrtRuntime::cpu().unwrap();
+    let exe = rt.load(&arts.simhash_path).unwrap();
+
+    let (k, l) = (hashdl::runtime::artifacts::SIMHASH_K, hashdl::runtime::artifacts::SIMHASH_L);
+    let batch = hashdl::runtime::artifacts::SIMHASH_BATCH;
+    let dim = arts.input_dim;
+
+    let mut rng = Pcg64::seeded(1234);
+    let proj = Matrix::randn(k * l, dim, &mut rng);
+    let xs: Vec<Vec<f32>> =
+        (0..batch).map(|_| (0..dim).map(|_| rng.gaussian()).collect()).collect();
+
+    // PJRT path (pallas kernel).
+    let rows: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+    let x_lit = batch_literal(&rows, batch, dim).unwrap();
+    let p_lit = matrix_literal(&proj).unwrap();
+    let out = exe.run(&[x_lit, p_lit]).unwrap();
+    let fps_pjrt = literal_to_i32s(&out[0]).unwrap();
+    assert_eq!(fps_pjrt.len(), batch * l);
+
+    // Rust path (same projections).
+    let srp = SrpHash::from_projections(dim, k, l, proj);
+    for (bi, x) in xs.iter().enumerate() {
+        let fps_rust = srp.data_fingerprints(x);
+        for (j, &fp) in fps_rust.iter().enumerate() {
+            assert_eq!(
+                fps_pjrt[bi * l + j] as u32, fp,
+                "fingerprint mismatch at batch {bi} table {j}"
+            );
+        }
+    }
+}
+
+#[test]
+fn mlp_fwd_artifact_matches_rust_network() {
+    let dir = artifacts_dir();
+    let arts = ArtifactSet::resolve(&dir, "tiny").unwrap();
+    arts.check_manifest(&dir).unwrap();
+    let rt = PjrtRuntime::cpu().unwrap();
+    let exe = rt.load(&arts.fwd_path).unwrap();
+
+    // Build a rust network and upload ITS weights to the artifact.
+    let mut rng = Pcg64::seeded(99);
+    let cfg = NetworkConfig {
+        n_in: arts.input_dim,
+        hidden: vec![arts.layer_dims[0].1; arts.layer_dims.len() - 1],
+        n_out: arts.n_classes,
+        act: Activation::ReLU,
+    };
+    let net = Network::new(&cfg, &mut rng);
+
+    let eval_batch = hashdl::runtime::std_baseline::EVAL_BATCH;
+    let xs: Vec<Vec<f32>> =
+        (0..eval_batch).map(|_| (0..arts.input_dim).map(|_| rng.gaussian()).collect()).collect();
+
+    let mut args = Vec::new();
+    for layer in &net.layers {
+        args.push(matrix_literal(&layer.w).unwrap());
+        args.push(vec_literal(&layer.b));
+    }
+    let rows: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+    args.push(batch_literal(&rows, eval_batch, arts.input_dim).unwrap());
+    let out = exe.run(&args).unwrap();
+    let logits = literal_to_f32s(&out[0]).unwrap();
+    assert_eq!(logits.len(), eval_batch * arts.n_classes);
+
+    let mut rust_logits = Vec::new();
+    for (i, x) in xs.iter().enumerate() {
+        net.forward_dense(x, &mut rust_logits);
+        for (c, &rl) in rust_logits.iter().enumerate() {
+            let pj = logits[i * arts.n_classes + c];
+            assert!(
+                (pj - rl).abs() < 1e-3 * (1.0 + rl.abs()),
+                "logit mismatch sample {i} class {c}: pjrt {pj} vs rust {rl}"
+            );
+        }
+    }
+}
+
+#[test]
+fn mlp_step_artifact_descends_loss() {
+    let dir = artifacts_dir();
+    let arts = ArtifactSet::resolve(&dir, "tiny").unwrap();
+    let rt = PjrtRuntime::cpu().unwrap();
+    let mut base = StdBaseline::new(&rt, &arts, 7).unwrap();
+
+    // Linearly-separable batch.
+    let mut rng = Pcg64::seeded(5);
+    let batch = hashdl::runtime::std_baseline::STEP_BATCH;
+    let xs: Vec<Vec<f32>> = (0..batch)
+        .map(|i| {
+            let c = if i % 2 == 0 { 0.8 } else { -0.8 };
+            (0..arts.input_dim).map(|_| c + 0.2 * rng.gaussian()).collect()
+        })
+        .collect();
+    let ys: Vec<u32> = (0..batch as u32).map(|i| i % 2).collect();
+    let rows: Vec<&[f32]> = xs.iter().map(|v| v.as_slice()).collect();
+
+    let first = base.train_batch(&rows, &ys, 0.2).unwrap();
+    let mut last = first;
+    for _ in 0..30 {
+        last = base.train_batch(&rows, &ys, 0.2).unwrap();
+    }
+    assert!(last.is_finite() && first.is_finite());
+    assert!(last < first * 0.5, "PJRT SGD must descend: {first} -> {last}");
+
+    // Evaluation through the fwd artifact should now beat chance easily.
+    let (_, acc) = base.evaluate(&xs, &ys).unwrap();
+    assert!(acc > 0.9, "post-training accuracy {acc}");
+}
+
+#[test]
+fn scalar_and_label_literals_roundtrip() {
+    let lit = scalar_literal(0.25);
+    assert_eq!(lit.get_first_element::<f32>().unwrap(), 0.25);
+    let labels = label_literal(&[3, 1], 4).unwrap();
+    assert_eq!(literal_to_i32s(&labels).unwrap(), vec![3, 1, 3, 1]);
+}
