@@ -20,6 +20,7 @@ fn main() {
         .opt("epochs", "4", "epochs per run")
         .opt("train", "3000", "training samples")
         .opt("hidden", "256", "hidden width")
+        .opt("batch-size", "16", "minibatch size per worker step")
         .opt("sparsity", "0.05", "LSH active fraction");
     let a = p.parse();
     let b = Benchmark::parse(a.get_or("dataset", "rectangles")).unwrap();
@@ -45,6 +46,7 @@ fn main() {
             &AsgdConfig {
                 threads: t,
                 epochs: a.parse_or("epochs", 4usize),
+                batch_size: a.parse_or("batch-size", 16usize).max(1),
                 sampler: SamplerConfig::lsh_tuned(sparsity),
                 optim: OptimConfig { lr: 1e-2, ..Default::default() },
                 conflict_sample_every: 10,

@@ -20,6 +20,7 @@ fn main() {
         .opt("train", "20000", "training samples")
         .opt("test", "2000", "test samples")
         .opt("sparsity", "0.05", "LSH active fraction")
+        .opt("batch-size", "32", "minibatch size (1 = per-example Algorithm 1)")
         .opt("lr", "0.01", "learning rate")
         .opt("seed", "42", "seed")
         .flag("with-dense", "also train the dense standard baseline");
@@ -41,10 +42,13 @@ fn main() {
     );
 
     let sparsity = a.parse_or("sparsity", 0.05f32);
+    let batch_size = a.parse_or("batch-size", 32usize).max(1);
+    println!("minibatch size {batch_size} (LSH selection + table maintenance amortized per batch)");
     let mut trainer = Trainer::new(
         net,
         TrainConfig {
             epochs: a.parse_or("epochs", 8usize),
+            batch_size,
             sampler: SamplerConfig::lsh_tuned(sparsity),
             optim: OptimConfig { lr: a.parse_or("lr", 0.01f32), ..Default::default() },
             seed,
@@ -84,6 +88,7 @@ fn main() {
             net,
             TrainConfig {
                 epochs: a.parse_or("epochs", 8usize),
+                batch_size,
                 sampler: SamplerConfig::with_method(Method::Standard, 1.0),
                 optim: OptimConfig { lr: a.parse_or("lr", 0.01f32), ..Default::default() },
                 seed,

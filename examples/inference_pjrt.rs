@@ -20,7 +20,7 @@ use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
     let dir = Path::new("artifacts");
-    let arts = ArtifactSet::resolve(dir, "tiny")?;
+    let arts = ArtifactSet::resolve(dir, "tiny").map_err(|e| anyhow::anyhow!(e))?;
 
     // 1. Train a small LSH network matching the `tiny` artifact topology.
     let mut rng = Pcg64::seeded(7);

@@ -21,11 +21,13 @@ fn main() {
     );
     println!("{} parameters", net.n_params());
 
-    // 3. Train with the paper's method: LSH-sampled active sets at 10%.
+    // 3. Train with the paper's method: LSH-sampled active sets at 10%,
+    //    minibatched so hashing and table maintenance amortize per batch.
     let mut trainer = Trainer::new(
         net,
         TrainConfig {
             epochs: 5,
+            batch_size: 16,
             sampler: SamplerConfig::with_method(Method::Lsh, 0.10),
             optim: OptimConfig { lr: 1e-2, ..Default::default() },
             verbose: true,

@@ -4,6 +4,10 @@
 //! so `cargo bench` stays minutes-scale by default but can regenerate
 //! paper-scale numbers.
 
+// Each bench binary compiles this module separately and uses a subset of
+// the helpers; silence per-binary unused warnings.
+#![allow(dead_code)]
+
 use hashdl::coordinator::experiment::ExperimentScale;
 use hashdl::util::timer::{fmt_secs, Stats};
 

@@ -11,9 +11,14 @@ use hashdl::lsh::layered::{LayerTables, LshConfig};
 use hashdl::lsh::srp::SrpHash;
 use hashdl::nn::activation::Activation;
 use hashdl::nn::layer::Layer;
+use hashdl::nn::network::{Network, NetworkConfig};
 use hashdl::nn::sparse::{LayerInput, SparseVec};
+use hashdl::optim::{OptimConfig, Optimizer};
+use hashdl::sampling::lsh_select::LshSelector;
+use hashdl::sampling::{make_selector, Method, NodeSelector, SamplerConfig};
 use hashdl::tensor::matrix::Matrix;
 use hashdl::tensor::vecops::{dot, top_k_indices};
+use hashdl::train::trainer::{train_batch, BatchWorkspace};
 use hashdl::util::rng::Pcg64;
 use hashdl::util::timer::bench_loop;
 
@@ -134,4 +139,117 @@ fn main() {
         alsh_hits as f64 / total.max(1) as f64,
         raw_hits as f64 / (trials * 50) as f64
     );
+
+    bench_batched_engine();
+}
+
+/// Batched-vs-per-example throughput at sparsity 0.05 (the PR-tracking
+/// benchmark): full `train_batch` steps on a 256-512-512-2 LSH network,
+/// plus selection-level hash-computation accounting showing the
+/// once-per-batch maintenance amortization. Emits BENCH_batch.json.
+fn bench_batched_engine() {
+    header("batched sparse engine: minibatch vs per-example (LSH @ 5%)");
+    let dim = 256;
+    let n_train = 256usize;
+    let hidden = 512;
+    let mut data_rng = Pcg64::seeded(7);
+    let xs: Vec<Vec<f32>> = (0..n_train)
+        .map(|i| {
+            let c = if i % 2 == 0 { 0.5 } else { -0.5 };
+            (0..dim).map(|_| c + 0.3 * data_rng.gaussian()).collect()
+        })
+        .collect();
+    let ys: Vec<u32> = (0..n_train as u32).map(|i| i % 2).collect();
+    let net_cfg =
+        NetworkConfig { n_in: dim, hidden: vec![hidden, hidden], n_out: 2, act: Activation::ReLU };
+    let sampler = SamplerConfig::with_method(Method::Lsh, 0.05);
+    let batch_sizes = [1usize, 16, 64];
+
+    // Full-step throughput per batch size.
+    let mut throughput = Vec::new();
+    for &bsz in &batch_sizes {
+        let mut net = Network::new(&net_cfg, &mut Pcg64::seeded(11));
+        let mut rng = Pcg64::new(11, 0x7EA1);
+        let mut selectors: Vec<Box<dyn NodeSelector>> = (0..net.n_hidden())
+            .map(|l| make_selector(&sampler, &net.layers[l], &mut rng))
+            .collect();
+        let mut opt = Optimizer::for_network(OptimConfig::default(), &net);
+        let mut ws = BatchWorkspace::for_network(&net);
+        let mut mult_total = 0u64;
+        let mut xbuf: Vec<&[f32]> = Vec::with_capacity(bsz);
+        let mut ybuf: Vec<u32> = Vec::with_capacity(bsz);
+        let t0 = std::time::Instant::now();
+        let mut start = 0usize;
+        while start < n_train {
+            let end = (start + bsz).min(n_train);
+            xbuf.clear();
+            ybuf.clear();
+            for i in start..end {
+                xbuf.push(xs[i].as_slice());
+                ybuf.push(ys[i]);
+            }
+            let r =
+                train_batch(&mut net, &mut selectors, &mut opt, &mut ws, &xbuf, &ybuf, &mut rng);
+            mult_total += r.mults.total();
+            start = end;
+        }
+        let secs = t0.elapsed().as_secs_f64().max(1e-9);
+        let sps = n_train as f64 / secs;
+        let mps = mult_total as f64 / secs;
+        println!("train_batch B={bsz:>3}: {sps:>9.0} samples/s  {mps:.3e} mults/s");
+        throughput.push(format!(
+            "    {{\"batch_size\": {bsz}, \"samples_per_sec\": {sps:.1}, \
+             \"mults_per_sec\": {mps:.4e}, \"total_mults\": {mult_total}}}"
+        ));
+    }
+
+    // Selection-level hash computations per sample: query hashing is
+    // identical; maintenance (rehash of touched rows) runs once per batch
+    // over the union, so hash computations per sample fall with B.
+    let mut hash_cases = Vec::new();
+    for &bsz in &batch_sizes {
+        let mut rng = Pcg64::seeded(13);
+        let layer = Layer::new(dim, hidden, Activation::ReLU, &mut rng);
+        let mut sel = LshSelector::new(&layer, sampler.lsh, sampler.sparsity, 1, &mut rng);
+        let inputs: Vec<LayerInput> = xs[..64].iter().map(|x| LayerInput::Dense(x)).collect();
+        let base = sel.tables().hash_ops;
+        let mut outs: Vec<Vec<u32>> = vec![Vec::new(); bsz];
+        let mut seen = vec![false; hidden];
+        let mut union: Vec<u32> = Vec::new();
+        for chunk in inputs.chunks(bsz) {
+            let outs_slice = &mut outs[..chunk.len()];
+            sel.select_batch(&layer, chunk, &mut rng, outs_slice);
+            union.clear();
+            seen.iter_mut().for_each(|s| *s = false);
+            for o in outs_slice.iter() {
+                for &i in o {
+                    if !seen[i as usize] {
+                        seen[i as usize] = true;
+                        union.push(i);
+                    }
+                }
+            }
+            sel.post_update(&layer, &union, &mut rng);
+        }
+        let per_sample = (sel.tables().hash_ops - base) as f64 / inputs.len() as f64;
+        println!(
+            "LSH selection B={bsz:>3}: {per_sample:>7.1} hash computations/sample \
+             (query + amortized maintenance)"
+        );
+        hash_cases.push(format!(
+            "    {{\"batch_size\": {bsz}, \"hash_ops_per_sample\": {per_sample:.2}}}"
+        ));
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"batch\",\n  \"network\": \"{dim}-{hidden}-{hidden}-2\",\n  \
+         \"method\": \"lsh\",\n  \"sparsity\": 0.05,\n  \"samples\": {n_train},\n  \
+         \"throughput\": [\n{}\n  ],\n  \"selection_hash_ops\": [\n{}\n  ]\n}}\n",
+        throughput.join(",\n"),
+        hash_cases.join(",\n"),
+    );
+    match std::fs::write("BENCH_batch.json", &json) {
+        Ok(()) => println!("wrote BENCH_batch.json"),
+        Err(e) => eprintln!("warning: could not write BENCH_batch.json: {e}"),
+    }
 }

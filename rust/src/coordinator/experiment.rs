@@ -148,6 +148,7 @@ pub fn fig45(
                             seed: s.seed,
                             eval_cap: s.test_cap,
                             verbose,
+                            ..Default::default()
                         },
                     );
                     let rec = trainer.run(&train, &test);

@@ -28,9 +28,14 @@ pub mod util;
 
 /// Convenience re-exports for examples and downstream users.
 pub mod prelude {
+    pub use crate::data::{Benchmark, Dataset};
     pub use crate::lsh::{LayerTables, LshConfig};
-    pub use crate::tensor::Matrix;
+    pub use crate::nn::{Activation, Network, NetworkConfig};
+    pub use crate::optim::{OptimConfig, OptimizerKind};
+    pub use crate::sampling::{Method, SamplerConfig};
+    pub use crate::tensor::{Batch, BatchPlane, Matrix};
+    pub use crate::train::{
+        run_asgd, train_batch, AsgdConfig, BatchWorkspace, TrainConfig, Trainer,
+    };
     pub use crate::util::rng::Pcg64;
-    // Extended as modules land during bring-up:
-    // Dataset, Network, Method, Trainer, AsgdConfig, OptimizerKind.
 }

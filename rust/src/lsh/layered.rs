@@ -58,6 +58,13 @@ pub struct LayerTables {
     /// 1-(1-p^K)^L, used to rank candidates.
     counts: Vec<u8>,
     query_epoch: u32,
+    /// Reusable query scratch (fingerprints, candidate union, bucket probe
+    /// buffer, one probe generator per table) so repeated queries — in
+    /// particular the batched selection path — allocate nothing.
+    fps_scratch: Vec<u32>,
+    candidates: Vec<u32>,
+    probe_scratch: Vec<u32>,
+    gens: Vec<ProbeGen>,
     /// Count of full rebuilds (norm overflow) — surfaced in metrics.
     pub rebuilds: usize,
     /// Hashes computed since construction (K·L per hashed vector) — the
@@ -79,6 +86,10 @@ impl LayerTables {
             stamp: vec![0; n_nodes],
             counts: vec![0; n_nodes],
             query_epoch: 0,
+            fps_scratch: Vec::new(),
+            candidates: Vec::new(),
+            probe_scratch: Vec::new(),
+            gens: Vec::new(),
             rebuilds: 0,
             hash_ops: 0,
         };
@@ -126,39 +137,69 @@ impl LayerTables {
         if budget == 0 || self.n_nodes == 0 {
             return;
         }
+        let mut fps = std::mem::take(&mut self.fps_scratch);
+        self.hash_query_fps(q, &mut fps);
+        self.query_prehashed(&fps, budget, rng, out);
+        self.fps_scratch = fps;
+    }
+
+    /// Compute the K·L query fingerprints into `fps` (one per table) and
+    /// account the hash cost. Split out of [`LayerTables::query`] so the
+    /// batched selection path can hash every sample of a minibatch in one
+    /// pass before probing.
+    pub fn hash_query_fps(&mut self, q: &[f32], fps: &mut Vec<u32>) {
+        fps.clear();
+        fps.resize(self.cfg.l, 0);
+        self.family.hash_query(q, fps);
+        self.hash_ops += (self.cfg.k * self.cfg.l) as u64;
+    }
+
+    /// Probe + rank for a query whose fingerprints were already computed.
+    /// Uses the per-instance scratch buffers, so repeated calls allocate
+    /// nothing. Identical results to [`LayerTables::query`].
+    pub fn query_prehashed(
+        &mut self,
+        fps: &[u32],
+        budget: usize,
+        rng: &mut Pcg64,
+        out: &mut Vec<u32>,
+    ) {
+        out.clear();
+        if budget == 0 || self.n_nodes == 0 {
+            return;
+        }
         self.query_epoch = self.query_epoch.wrapping_add(1);
         if self.query_epoch == 0 {
             // Stamp wrap: reset (happens once per 2^32 queries).
             self.stamp.iter_mut().for_each(|s| *s = u32::MAX);
             self.query_epoch = 1;
         }
-        let mut fps = vec![0u32; self.cfg.l];
-        self.family.hash_query(q, &mut fps);
-        self.hash_ops += (self.cfg.k * self.cfg.l) as u64;
-
-        let mut candidates: Vec<u32> = Vec::with_capacity(budget * 8);
-        let mut scratch: Vec<u32> = Vec::with_capacity(self.cfg.crowded_limit);
+        let Self { cfg, tables, stamp, counts, query_epoch, candidates, probe_scratch, gens, .. } =
+            self;
+        candidates.clear();
         // Round-robin probe depth across tables: probe the home bucket of
         // every table first, then distance-1 buckets, etc., so the union is
         // balanced across tables.
-        let mut gens: Vec<ProbeGen> = fps
-            .iter()
-            .map(|&fp| ProbeGen::new(fp, self.cfg.k, self.cfg.probes_per_table))
-            .collect();
-        for _depth in 0..self.cfg.probes_per_table {
+        if gens.len() < fps.len() {
+            gens.resize_with(fps.len(), ProbeGen::idle);
+        }
+        for (g, &fp) in gens.iter_mut().zip(fps) {
+            g.reset(fp, cfg.k, cfg.probes_per_table);
+        }
+        for _depth in 0..cfg.probes_per_table {
             let mut any = false;
-            for (ti, g) in gens.iter_mut().enumerate() {
+            for (ti, g) in gens.iter_mut().take(fps.len()).enumerate() {
                 let Some(addr) = g.next() else { continue };
                 any = true;
-                scratch.clear();
-                self.tables[ti].probe_into(addr, self.cfg.crowded_limit, rng, &mut scratch);
-                for &id in &scratch {
-                    if self.stamp[id as usize] != self.query_epoch {
-                        self.stamp[id as usize] = self.query_epoch;
-                        self.counts[id as usize] = 1;
+                probe_scratch.clear();
+                tables[ti].probe_into(addr, cfg.crowded_limit, rng, probe_scratch);
+                for &id in probe_scratch.iter() {
+                    if stamp[id as usize] != *query_epoch {
+                        stamp[id as usize] = *query_epoch;
+                        counts[id as usize] = 1;
                         candidates.push(id);
                     } else {
-                        self.counts[id as usize] = self.counts[id as usize].saturating_add(1);
+                        counts[id as usize] = counts[id as usize].saturating_add(1);
                     }
                 }
             }
@@ -168,18 +209,15 @@ impl LayerTables {
         }
 
         if candidates.len() <= budget {
-            out.extend_from_slice(&candidates);
+            out.extend_from_slice(candidates);
             return;
         }
         // Counting-select: take candidates by descending multiplicity.
-        let max_count = candidates
-            .iter()
-            .map(|&id| self.counts[id as usize])
-            .max()
-            .unwrap_or(1);
+        let max_count =
+            candidates.iter().map(|&id| counts[id as usize]).max().unwrap_or(1);
         for want in (1..=max_count).rev() {
-            for &id in &candidates {
-                if self.counts[id as usize] == want {
+            for &id in candidates.iter() {
+                if counts[id as usize] == want {
                     out.push(id);
                     if out.len() >= budget {
                         return;
@@ -331,6 +369,23 @@ mod tests {
         lt.query(&q, 50, &mut rng, &mut out);
         let found = (0..5u32).filter(|id| out.contains(id)).count();
         assert!(found >= 4, "only {found}/5 planted nodes retrieved: {out:?}");
+    }
+
+    #[test]
+    fn prehashed_query_matches_query() {
+        let w = weights(120, 16, 31);
+        let mut rng_a = Pcg64::seeded(32);
+        let mut rng_b = Pcg64::seeded(32);
+        let mut lt_a = LayerTables::build(&w, LshConfig::default(), &mut rng_a);
+        let mut lt_b = LayerTables::build(&w, LshConfig::default(), &mut rng_b);
+        let q: Vec<f32> = (0..16).map(|i| (i as f32 * 0.31).cos()).collect();
+        let (mut out_a, mut out_b) = (Vec::new(), Vec::new());
+        lt_a.query(&q, 15, &mut rng_a, &mut out_a);
+        let mut fps = Vec::new();
+        lt_b.hash_query_fps(&q, &mut fps);
+        lt_b.query_prehashed(&fps, 15, &mut rng_b, &mut out_b);
+        assert_eq!(out_a, out_b, "split query path must match the one-shot path");
+        assert_eq!(lt_a.hash_ops, lt_b.hash_ops);
     }
 
     #[test]

@@ -15,15 +15,24 @@ use crate::util::bitpack::flip_bit;
 /// bit-order within a distance class.
 pub fn probe_sequence(fp: u32, k: usize, max_probes: usize) -> Vec<u32> {
     let mut out = Vec::with_capacity(max_probes.min(1 << k));
+    probe_sequence_into(fp, k, max_probes, &mut out);
+    out
+}
+
+/// Allocation-free variant of [`probe_sequence`]: appends into a caller
+/// buffer (cleared first), so the batched query path can reuse one
+/// allocation per table across the whole minibatch.
+pub fn probe_sequence_into(fp: u32, k: usize, max_probes: usize, out: &mut Vec<u32>) {
+    out.clear();
     out.push(fp);
     if out.len() >= max_probes {
-        return out;
+        return;
     }
     // Distance 1.
     for i in 0..k {
         out.push(flip_bit(fp, k, i));
         if out.len() >= max_probes {
-            return out;
+            return;
         }
     }
     // Distance 2.
@@ -31,7 +40,7 @@ pub fn probe_sequence(fp: u32, k: usize, max_probes: usize) -> Vec<u32> {
         for j in i + 1..k {
             out.push(flip_bit(flip_bit(fp, k, i), k, j));
             if out.len() >= max_probes {
-                return out;
+                return;
             }
         }
     }
@@ -41,12 +50,11 @@ pub fn probe_sequence(fp: u32, k: usize, max_probes: usize) -> Vec<u32> {
             for m in j + 1..k {
                 out.push(flip_bit(flip_bit(flip_bit(fp, k, i), k, j), k, m));
                 if out.len() >= max_probes {
-                    return out;
+                    return;
                 }
             }
         }
     }
-    out
 }
 
 /// An iterator-style probe generator that owns its state; avoids allocating
@@ -61,6 +69,19 @@ pub struct ProbeGen {
 impl ProbeGen {
     pub fn new(fp: u32, k: usize, max_probes: usize) -> Self {
         ProbeGen { seq: probe_sequence(fp, k, max_probes), pos: 0 }
+    }
+
+    /// Re-arm for a new fingerprint, reusing the internal buffer (the
+    /// batched selection path resets L generators per sample instead of
+    /// allocating them).
+    pub fn reset(&mut self, fp: u32, k: usize, max_probes: usize) {
+        probe_sequence_into(fp, k, max_probes, &mut self.seq);
+        self.pos = 0;
+    }
+
+    /// An empty generator (yields nothing until `reset`).
+    pub fn idle() -> Self {
+        ProbeGen { seq: Vec::new(), pos: 0 }
     }
 }
 
@@ -125,5 +146,17 @@ mod tests {
         let seq = probe_sequence(0b0110, 4, 9);
         let gen: Vec<u32> = ProbeGen::new(0b0110, 4, 9).collect();
         assert_eq!(seq, gen);
+    }
+
+    #[test]
+    fn reset_reuses_generator() {
+        let mut g = ProbeGen::idle();
+        assert_eq!(g.next(), None);
+        g.reset(0b0110, 4, 9);
+        let got: Vec<u32> = (&mut g).collect();
+        assert_eq!(got, probe_sequence(0b0110, 4, 9));
+        g.reset(0b0001, 4, 3);
+        let got: Vec<u32> = g.collect();
+        assert_eq!(got, probe_sequence(0b0001, 4, 3));
     }
 }

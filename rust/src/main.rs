@@ -15,9 +15,35 @@ use hashdl::optim::{OptimConfig, OptimizerKind};
 use hashdl::sampling::{Method, SamplerConfig};
 use hashdl::train::asgd::{run_asgd, AsgdConfig};
 use hashdl::train::trainer::{TrainConfig, Trainer};
-use hashdl::util::argparse::Parser;
+use hashdl::util::argparse::{Args, Parser};
+use hashdl::util::config::Config;
 use hashdl::util::rng::Pcg64;
 use std::path::{Path, PathBuf};
+
+/// Effective option value with three-layer precedence: an explicit CLI
+/// flag wins, then a `[train]` config-file key, then the flag's declared
+/// default.
+fn opt_layered<T: std::str::FromStr>(
+    a: &Args,
+    file: Option<&Config>,
+    flag: &str,
+    key: &str,
+    default: T,
+) -> T {
+    if !a.set_explicitly(flag) {
+        if let Some(c) = file {
+            match c.get_parsed::<T>(key) {
+                Ok(Some(v)) => return v,
+                Ok(None) => {}
+                Err(e) => {
+                    eprintln!("{e}");
+                    std::process::exit(2);
+                }
+            }
+        }
+    }
+    a.parse_or(flag, default)
+}
 
 fn main() {
     let mut args: Vec<String> = std::env::args().skip(1).collect();
@@ -50,7 +76,8 @@ USAGE: hashdl <subcommand> [flags]
 
   gen-data    --dataset <mnist|norb|convex|rectangles> --n <N> --out <file>
   train       --dataset <..> --method <nn|vd|ad|wta|lsh> --sparsity <f>
-              [--threads <t>] [--epochs <e>] [--hidden <h>] [--depth <d>]
+              [--batch-size <B>] [--threads <t>] [--epochs <e>]
+              [--hidden <h>] [--depth <d>] [--config <file.conf>]
               [--lr <f>] [--optimizer <sgd|momentum|adagrad|momentum-adagrad>]
               [--k <bits>] [--tables <L>] [--save <model.bin>]
   eval        --model <model.bin> --dataset <..> [--n <N>]
@@ -95,8 +122,10 @@ fn cmd_gen_data(rest: Vec<String>) -> i32 {
 fn cmd_train(rest: Vec<String>) -> i32 {
     let p = Parser::new("hashdl train", "train one configuration")
         .opt_req("dataset", "benchmark name")
+        .opt("config", "", "key=value config file supplying [train] defaults")
         .opt("method", "lsh", "node selection (nn|vd|ad|wta|lsh)")
         .opt("sparsity", "0.05", "target active-node fraction")
+        .opt("batch-size", "1", "minibatch size (1 = per-example Algorithm 1)")
         .opt("threads", "1", "ASGD worker threads (1 = sequential trainer)")
         .opt("epochs", "10", "training epochs")
         .opt("hidden", "1000", "hidden layer width")
@@ -116,6 +145,20 @@ fn cmd_train(rest: Vec<String>) -> i32 {
         .flag("quiet", "suppress per-epoch logging");
     let a = p.parse_rest(rest);
 
+    // Optional config file: `[train]` keys become defaults that explicit
+    // CLI flags still override.
+    let file_cfg = match a.get("config").filter(|s| !s.is_empty()) {
+        Some(path) => match Config::load(Path::new(path)) {
+            Ok(c) => Some(c),
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 2;
+            }
+        },
+        None => None,
+    };
+    let fc = file_cfg.as_ref();
+
     let b = parse_benchmark(a.get("dataset").unwrap_or_default());
     let (dtr, dte) = b.default_sizes();
     let n_tr = match a.parse_or("train-size", 0usize) {
@@ -130,11 +173,13 @@ fn cmd_train(rest: Vec<String>) -> i32 {
     eprintln!("generating {} train / {} test samples of {}...", n_tr, n_te, b.name());
     let (train, test) = b.generate(n_tr, n_te, seed);
 
-    let method = Method::parse(a.get_or("method", "lsh")).unwrap_or_else(|e| {
+    let method_name = opt_layered::<String>(&a, fc, "method", "train.method", "lsh".into());
+    let method = Method::parse(&method_name).unwrap_or_else(|e| {
         eprintln!("{e}");
         std::process::exit(2)
     });
-    let mut sampler = SamplerConfig::with_method(method, a.parse_or("sparsity", 0.05f32));
+    let sparsity = opt_layered(&a, fc, "sparsity", "train.sparsity", 0.05f32);
+    let mut sampler = SamplerConfig::with_method(method, sparsity);
     sampler.lsh.k = a.parse_or("k", 6usize);
     sampler.lsh.l = a.parse_or("tables", 5usize);
     sampler.lsh.probes_per_table = a.parse_or("probes", 10usize);
@@ -149,7 +194,7 @@ fn cmd_train(rest: Vec<String>) -> i32 {
             eprintln!("{e}");
             std::process::exit(2)
         }),
-        lr: a.parse_or("lr", 0.01f32),
+        lr: opt_layered(&a, fc, "lr", "train.lr", 0.01f32),
         ..Default::default()
     };
 
@@ -164,8 +209,9 @@ fn cmd_train(rest: Vec<String>) -> i32 {
     );
     eprintln!("network: {} parameters", net.n_params());
 
-    let threads = a.parse_or("threads", 1usize);
-    let epochs = a.parse_or("epochs", 10usize);
+    let threads = opt_layered(&a, fc, "threads", "train.threads", 1usize);
+    let epochs = opt_layered(&a, fc, "epochs", "train.epochs", 10usize);
+    let batch_size = opt_layered(&a, fc, "batch-size", "train.batch_size", 1usize).max(1);
     let eval_cap = a.parse_or("eval-cap", 2000usize);
     let verbose = !a.has("quiet");
 
@@ -177,6 +223,7 @@ fn cmd_train(rest: Vec<String>) -> i32 {
             &AsgdConfig {
                 threads,
                 epochs,
+                batch_size,
                 optim,
                 sampler,
                 seed,
@@ -187,8 +234,10 @@ fn cmd_train(rest: Vec<String>) -> i32 {
         );
         (out.record, out.net)
     } else {
-        let mut t =
-            Trainer::new(net, TrainConfig { epochs, optim, sampler, seed, eval_cap, verbose });
+        let mut t = Trainer::new(
+            net,
+            TrainConfig { epochs, batch_size, optim, sampler, seed, eval_cap, verbose },
+        );
         let rec = t.run(&train, &test);
         (rec, t.net)
     };
@@ -292,6 +341,16 @@ fn cmd_experiment(mut rest: Vec<String>) -> i32 {
     0
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_std_pjrt(_rest: Vec<String>) -> i32 {
+    eprintln!(
+        "std-pjrt requires a build with the `pjrt` feature (vendored xla crate):\n  \
+         cargo run --features pjrt -- std-pjrt ...\nSee README.md §PJRT."
+    );
+    2
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_std_pjrt(rest: Vec<String>) -> i32 {
     let p = Parser::new("hashdl std-pjrt", "dense STD baseline via PJRT artifacts")
         .opt("variant", "tiny", "artifact variant")

@@ -6,6 +6,7 @@
 use crate::nn::activation::Activation;
 use crate::nn::init::glorot_uniform;
 use crate::nn::sparse::{LayerInput, SparseVec};
+use crate::tensor::batch::BatchPlane;
 use crate::tensor::matrix::Matrix;
 use crate::util::rng::Pcg64;
 
@@ -59,6 +60,49 @@ impl Layer {
             out.push(i, self.act.apply(z));
         }
         (active.len() * input.active_len()) as u64
+    }
+
+    /// Minibatch sparse forward: one call per layer per batch, each sample
+    /// carrying its own active set. The weight matrix is traversed once
+    /// per batch (sample-inner loop per active row would need identical
+    /// active sets; per-sample sets are the common case, so the pass is
+    /// sample-major with the row slices shared through `&self.w`).
+    /// Returns total multiplications across the batch.
+    pub fn forward_sparse_batch(
+        &self,
+        inputs: &[LayerInput<'_>],
+        actives: &[Vec<u32>],
+        outs: &mut [SparseVec],
+    ) -> u64 {
+        debug_assert_eq!(inputs.len(), actives.len());
+        debug_assert_eq!(inputs.len(), outs.len());
+        let mut mults = 0u64;
+        for ((input, active), out) in inputs.iter().zip(actives).zip(outs.iter_mut()) {
+            mults += self.forward_sparse(*input, active, out);
+        }
+        mults
+    }
+
+    /// Minibatch dense forward for one layer: row-outer, sample-inner, so
+    /// each weight row is loaded once and dotted against every sample in
+    /// the batch (the shared weight pass). `cur` is the `B × n_in`
+    /// activation plane, `next` receives `B × n_out`. Bitwise-identical to
+    /// per-sample [`Layer::forward_dense`]. Returns multiplications.
+    pub fn forward_dense_batch(&self, cur: &BatchPlane, next: &mut BatchPlane) -> u64 {
+        debug_assert_eq!(cur.dim(), self.n_in());
+        let b = cur.batch();
+        next.reset(b, self.n_out());
+        let mut col = Vec::with_capacity(b);
+        let mut mults = 0u64;
+        for i in 0..self.n_out() {
+            mults += cur.dot_row(self.w.row(i), &mut col);
+            let bias = self.b[i];
+            for v in &mut col {
+                *v = self.act.apply(*v + bias);
+            }
+            next.set_col(i, &col);
+        }
+        mults
     }
 
     /// Pre-activations only (used by selectors that need z, e.g. adaptive
@@ -125,6 +169,31 @@ impl Layer {
                     }
                 }
             }
+        }
+        mults
+    }
+
+    /// Minibatch backward through per-sample active sets (layer-major:
+    /// all samples of this layer in one pass). `d_outs[s]` is dL/da
+    /// aligned with `out_acts[s].idx`; `dzs[s]` receives dL/dz per active
+    /// node; when given, `d_inputs` row `s` accumulates dL/d(input) for
+    /// sample `s` (caller pre-zeroes each row at its live coordinates).
+    /// Returns total multiplications across the batch.
+    pub fn backward_sparse_batch(
+        &self,
+        inputs: &[LayerInput<'_>],
+        out_acts: &[SparseVec],
+        d_outs: &[Vec<f32>],
+        dzs: &mut [Vec<f32>],
+        mut d_inputs: Option<&mut BatchPlane>,
+    ) -> u64 {
+        debug_assert_eq!(inputs.len(), out_acts.len());
+        debug_assert_eq!(inputs.len(), d_outs.len());
+        debug_assert_eq!(inputs.len(), dzs.len());
+        let mut mults = 0u64;
+        for s in 0..inputs.len() {
+            let d_in = d_inputs.as_mut().map(|p| p.row_mut(s));
+            mults += self.backward_sparse(inputs[s], &out_acts[s], &d_outs[s], &mut dzs[s], d_in);
         }
         mults
     }
@@ -238,6 +307,68 @@ mod tests {
         let mut dx = vec![0.0; 4];
         l.backward_sparse(LayerInput::Dense(&x), &out, &[1.0, 1.0], &mut dz, Some(&mut dx));
         assert_eq!(dz[0], 0.0, "dead relu must have zero grad");
+    }
+
+    #[test]
+    fn batched_sparse_forward_matches_per_sample() {
+        let l = test_layer();
+        let xs = [[0.3f32, -0.2, 0.5, 0.1], [1.0, 0.0, -1.0, 0.5]];
+        let actives = vec![vec![0u32, 2], vec![1u32]];
+        let inputs: Vec<LayerInput> = xs.iter().map(|x| LayerInput::Dense(x)).collect();
+        let mut outs = vec![SparseVec::new(), SparseVec::new()];
+        let batch_mults = l.forward_sparse_batch(&inputs, &actives, &mut outs);
+        let mut single_mults = 0u64;
+        for (s, x) in xs.iter().enumerate() {
+            let mut one = SparseVec::new();
+            single_mults += l.forward_sparse(LayerInput::Dense(x), &actives[s], &mut one);
+            assert_eq!(one, outs[s]);
+        }
+        assert_eq!(batch_mults, single_mults);
+    }
+
+    #[test]
+    fn batched_dense_forward_matches_per_sample() {
+        let l = test_layer();
+        let xs = vec![vec![0.3f32, -0.2, 0.5, 0.1], vec![1.0, 2.0, -1.0, 0.0]];
+        let batch = crate::tensor::batch::Batch::from_vecs(&xs);
+        let mut cur = BatchPlane::new();
+        cur.load(&batch);
+        let mut next = BatchPlane::new();
+        l.forward_dense_batch(&cur, &mut next);
+        for (s, x) in xs.iter().enumerate() {
+            let mut dense = Vec::new();
+            l.forward_dense(x, &mut dense);
+            assert_eq!(next.row(s), dense.as_slice(), "sample {s} must be bitwise equal");
+        }
+    }
+
+    #[test]
+    fn batched_backward_matches_per_sample() {
+        let mut l = test_layer();
+        l.act = Activation::Tanh;
+        let xs = [[0.3f32, -0.2, 0.5, 0.1], [1.0, 0.5, -1.0, 0.2]];
+        let actives = vec![vec![0u32, 2], vec![1u32, 2]];
+        let inputs: Vec<LayerInput> = xs.iter().map(|x| LayerInput::Dense(x)).collect();
+        let mut outs = vec![SparseVec::new(), SparseVec::new()];
+        l.forward_sparse_batch(&inputs, &actives, &mut outs);
+        let d_outs: Vec<Vec<f32>> = outs.iter().map(|o| vec![1.0; o.len()]).collect();
+        let mut dzs = vec![Vec::new(), Vec::new()];
+        let mut plane = BatchPlane::new();
+        plane.reset(2, 4);
+        l.backward_sparse_batch(&inputs, &outs, &d_outs, &mut dzs, Some(&mut plane));
+        for s in 0..2 {
+            let mut dz_ref = Vec::new();
+            let mut dx_ref = vec![0.0f32; 4];
+            l.backward_sparse(
+                LayerInput::Dense(&xs[s]),
+                &outs[s],
+                &d_outs[s],
+                &mut dz_ref,
+                Some(&mut dx_ref),
+            );
+            assert_eq!(dzs[s], dz_ref);
+            assert_eq!(plane.row(s), dx_ref.as_slice());
+        }
     }
 
     #[test]

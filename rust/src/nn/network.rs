@@ -6,6 +6,7 @@
 use crate::nn::activation::Activation;
 use crate::nn::layer::Layer;
 use crate::nn::loss::softmax_xent;
+use crate::tensor::batch::{Batch, BatchPlane};
 use crate::util::rng::Pcg64;
 
 /// Architecture description. `hidden` uses one size for all hidden layers
@@ -108,17 +109,53 @@ impl Network {
         crate::tensor::vecops::argmax(&logits) as u32
     }
 
+    /// Minibatch dense forward: runs every layer row-outer/sample-inner
+    /// (each weight row loaded once per batch — the shared weight pass).
+    /// On return `cur` holds the `B × n_classes` logit plane. Bitwise
+    /// equivalent to per-sample [`Network::forward_dense`]; the batching
+    /// changes memory-access order only. Returns multiplications.
+    pub fn forward_dense_batch(
+        &self,
+        batch: &Batch<'_>,
+        cur: &mut BatchPlane,
+        next: &mut BatchPlane,
+    ) -> u64 {
+        cur.load(batch);
+        let mut mults = 0u64;
+        for layer in &self.layers {
+            mults += layer.forward_dense_batch(cur, next);
+            std::mem::swap(cur, next);
+        }
+        mults
+    }
+
+    /// Default evaluation minibatch size (amortizes weight-row loads; any
+    /// value produces identical results — see [`Network::forward_dense_batch`]).
+    pub const EVAL_BATCH: usize = 64;
+
     /// Dense evaluation over a set of examples: (mean loss, accuracy).
+    /// Delegates to the batched path with [`Network::EVAL_BATCH`].
     pub fn evaluate(&self, xs: &[Vec<f32>], ys: &[u32]) -> (f32, f32) {
+        self.evaluate_batched(xs, ys, Self::EVAL_BATCH)
+    }
+
+    /// Batched dense evaluation: identical numbers to per-sample
+    /// evaluation for every `batch_size >= 1`.
+    pub fn evaluate_batched(&self, xs: &[Vec<f32>], ys: &[u32], batch_size: usize) -> (f32, f32) {
         assert_eq!(xs.len(), ys.len());
-        let mut logits = Vec::new();
+        assert!(batch_size >= 1);
+        let mut cur = BatchPlane::new();
+        let mut next = BatchPlane::new();
         let mut loss_sum = 0.0f64;
         let mut correct = 0usize;
-        for (x, &y) in xs.iter().zip(ys) {
-            self.forward_dense(x, &mut logits);
-            let (loss, pred) = softmax_xent(&logits, y);
-            loss_sum += loss as f64;
-            correct += (pred == y) as usize;
+        for (cx, cy) in xs.chunks(batch_size).zip(ys.chunks(batch_size)) {
+            let batch = Batch::from_vecs(cx);
+            self.forward_dense_batch(&batch, &mut cur, &mut next);
+            for (s, &y) in cy.iter().enumerate() {
+                let (loss, pred) = softmax_xent(cur.row(s), y);
+                loss_sum += loss as f64;
+                correct += (pred == y) as usize;
+            }
         }
         ((loss_sum / xs.len() as f64) as f32, correct as f32 / xs.len() as f32)
     }
@@ -165,6 +202,31 @@ mod tests {
         assert_eq!(logits.len(), 3);
         assert_eq!(mults, (8 * 16 + 16 * 16 + 16 * 3) as u64);
         assert_eq!(mults, net.dense_mults_per_example());
+    }
+
+    #[test]
+    fn batched_eval_matches_per_sample_eval() {
+        let mut rng = Pcg64::seeded(5);
+        let net = Network::new(&cfg(), &mut rng);
+        let xs: Vec<Vec<f32>> = (0..37).map(|i| vec![(i as f32 * 0.13).sin(); 8]).collect();
+        let ys: Vec<u32> = (0..37).map(|i| i % 3).collect();
+        // Per-sample reference.
+        let mut logits = Vec::new();
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0usize;
+        for (x, &y) in xs.iter().zip(&ys) {
+            net.forward_dense(x, &mut logits);
+            let (l, p) = crate::nn::loss::softmax_xent(&logits, y);
+            loss_sum += l as f64;
+            correct += (p == y) as usize;
+        }
+        let (ref_loss, ref_acc) =
+            ((loss_sum / xs.len() as f64) as f32, correct as f32 / xs.len() as f32);
+        for bsz in [1usize, 8, 37, 64] {
+            let (loss, acc) = net.evaluate_batched(&xs, &ys, bsz);
+            assert_eq!(acc, ref_acc, "batch={bsz}");
+            assert!((loss - ref_loss).abs() < 1e-5, "batch={bsz}: {loss} vs {ref_loss}");
+        }
     }
 
     #[test]

@@ -155,6 +155,58 @@ impl Optimizer {
         mults += 1;
         mults
     }
+
+    /// Apply a pre-accumulated (minibatch) gradient for one output neuron.
+    ///
+    /// `grad` is a dense-length gradient row (only the listed coordinates
+    /// are read); `cols: None` applies every coordinate (dense-input
+    /// layers — matching [`Optimizer::update_row`], which also touches
+    /// zero-gradient coordinates so momentum decay stays identical), while
+    /// `Some(cols)` applies the batch's union of live input coordinates.
+    /// With a batch of one the arithmetic is exactly `update_row`'s:
+    /// accumulate `g = dz·x_j`, then the same `step_value` per coordinate.
+    /// Returns multiplications performed.
+    #[allow(clippy::too_many_arguments)]
+    pub fn apply_row_grad(
+        &mut self,
+        layer: usize,
+        row: usize,
+        cols: Option<&[u32]>,
+        grad: &[f32],
+        grad_b: f32,
+        w_row: &mut [f32],
+        b: &mut f32,
+    ) -> u64 {
+        let kind = self.cfg.kind;
+        let cfg = self.cfg;
+        let st = &mut self.state[layer];
+        let mut mults;
+        match cols {
+            None => {
+                mults = grad.len() as u64;
+                for (j, &g) in grad.iter().enumerate() {
+                    let vel = st.velocity_w.as_mut().map(|m| &mut m.row_mut(row)[j]);
+                    let acc = st.accum_w.as_mut().map(|m| &mut m.row_mut(row)[j]);
+                    w_row[j] -= Self::step_value(kind, &cfg, g, vel, acc);
+                }
+            }
+            Some(cols) => {
+                mults = cols.len() as u64;
+                for &j in cols {
+                    let j = j as usize;
+                    let g = grad[j];
+                    let vel = st.velocity_w.as_mut().map(|m| &mut m.row_mut(row)[j]);
+                    let acc = st.accum_w.as_mut().map(|m| &mut m.row_mut(row)[j]);
+                    w_row[j] -= Self::step_value(kind, &cfg, g, vel, acc);
+                }
+            }
+        }
+        let vel = st.velocity_b.as_mut().map(|v| &mut v[row]);
+        let acc = st.accum_b.as_mut().map(|v| &mut v[row]);
+        *b -= Self::step_value(kind, &cfg, grad_b, vel, acc);
+        mults += 1;
+        mults
+    }
 }
 
 #[cfg(test)]
@@ -229,6 +281,43 @@ mod tests {
         opt.update_row(0, 0, 1.0, LayerInput::Dense(&x), &mut w, &mut b);
         // v = 0.9*0.1 + 0.1/sqrt(2) ≈ 0.1607
         assert!((w[0] + 0.2607).abs() < 1e-3);
+    }
+
+    #[test]
+    fn apply_row_grad_matches_update_row_for_batch_of_one() {
+        // For every optimizer kind, accumulating g = dz * x then applying
+        // must be bitwise identical to the fused per-example update.
+        for kind in [
+            OptimizerKind::Sgd,
+            OptimizerKind::Momentum,
+            OptimizerKind::Adagrad,
+            OptimizerKind::MomentumAdagrad,
+        ] {
+            let mut fused = mk(kind, 0.1);
+            let mut split = mk(kind, 0.1);
+            let x = [1.0f32, 2.0, 0.0, -1.0];
+            let dz = 0.5f32;
+            let (mut w_a, mut b_a) = ([0.2f32; 4], 0.1f32);
+            let (mut w_b, mut b_b) = ([0.2f32; 4], 0.1f32);
+            for _ in 0..3 {
+                fused.update_row(0, 0, dz, LayerInput::Dense(&x), &mut w_a, &mut b_a);
+                let grad: Vec<f32> = x.iter().map(|&xj| dz * xj).collect();
+                split.apply_row_grad(0, 0, None, &grad, dz, &mut w_b, &mut b_b);
+            }
+            assert_eq!(w_a, w_b, "{kind:?} weights");
+            assert_eq!(b_a, b_b, "{kind:?} bias");
+        }
+    }
+
+    #[test]
+    fn apply_row_grad_sparse_cols_touch_only_union() {
+        let mut opt = mk(OptimizerKind::Sgd, 0.1);
+        let grad = [0.0f32, 2.0, 0.0, -1.0];
+        let mut w = [1.0f32; 4];
+        let mut b = 0.0f32;
+        let m = opt.apply_row_grad(0, 1, Some(&[1, 3]), &grad, 0.0, &mut w, &mut b);
+        assert_eq!(w, [1.0, 0.8, 1.0, 1.1]);
+        assert_eq!(m, 3);
     }
 
     #[test]

@@ -1,9 +1,12 @@
 //! Artifact registry: maps dataset variants to their AOT artifact paths
 //! and declared layer shapes, cross-checked against the manifest emitted
-//! by `python/compile/aot.py`.
+//! by `python/compile/aot.py`. Error type is a plain `String` so the
+//! registry stays dependency-free (the `anyhow`-flavored execution path
+//! lives behind the `pjrt` feature).
 
-use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
+
+type Result<T> = std::result::Result<T, String>;
 
 /// Variant table — must stay in sync with `python/compile/model.py`
 /// VARIANTS (the manifest check below catches drift).
@@ -39,7 +42,7 @@ impl ArtifactSet {
         let &(name, input_dim, n_classes, hidden, depth) = VARIANTS
             .iter()
             .find(|v| v.0 == variant)
-            .with_context(|| format!("unknown variant {variant:?}"))?;
+            .ok_or_else(|| format!("unknown variant {variant:?}"))?;
         let mut dims = vec![input_dim];
         dims.extend(std::iter::repeat(hidden).take(depth));
         dims.push(n_classes);
@@ -56,10 +59,10 @@ impl ArtifactSet {
         };
         for p in [&set.step_path, &set.fwd_path, &set.simhash_path] {
             if !p.exists() {
-                bail!(
+                return Err(format!(
                     "missing artifact {} — run `make artifacts` first",
                     p.display()
-                );
+                ));
             }
         }
         Ok(set)
@@ -69,12 +72,12 @@ impl ArtifactSet {
     /// the first weight matrix with our expected shape).
     pub fn check_manifest(&self, dir: &Path) -> Result<()> {
         let text = std::fs::read_to_string(dir.join("manifest.txt"))
-            .context("reading artifacts/manifest.txt")?;
+            .map_err(|e| format!("reading artifacts/manifest.txt: {e}"))?;
         let key = format!("mlp_fwd_{} ", self.variant);
         let line = text
             .lines()
             .find(|l| l.starts_with(&key))
-            .with_context(|| format!("manifest missing {key}"))?;
+            .ok_or_else(|| format!("manifest missing {key}"))?;
         let sig = line.split_once(' ').unwrap().1;
         let first = sig.split(';').next().unwrap_or("");
         let expect = format!(
@@ -82,7 +85,9 @@ impl ArtifactSet {
             self.layer_dims[0].1, self.layer_dims[0].0
         );
         if first != expect {
-            bail!("manifest drift: expected first param {expect}, manifest says {first}");
+            return Err(format!(
+                "manifest drift: expected first param {expect}, manifest says {first}"
+            ));
         }
         Ok(())
     }

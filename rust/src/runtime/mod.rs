@@ -1,11 +1,20 @@
 //! PJRT runtime: loads `artifacts/*.hlo.txt` (AOT-lowered JAX/Pallas) and
 //! executes them from rust. HLO text is the interchange format — see
 //! python/compile/aot.py for why (proto id width mismatch).
+//!
+//! The artifact *registry* is always available; the execution path
+//! ([`pjrt`], [`std_baseline`]) needs the vendored `xla` crate and is
+//! gated behind the `pjrt` cargo feature so the default (offline,
+//! std-only) build stays self-contained.
 
 pub mod artifacts;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
+#[cfg(feature = "pjrt")]
 pub mod std_baseline;
 
 pub use artifacts::ArtifactSet;
+#[cfg(feature = "pjrt")]
 pub use pjrt::{Executable, PjrtRuntime};
+#[cfg(feature = "pjrt")]
 pub use std_baseline::StdBaseline;

@@ -16,8 +16,73 @@ pub struct LshSelector {
     /// Dense scratch for sparse-input queries (hash functions need the
     /// densified previous-layer activation vector).
     scratch_q: Vec<f32>,
+    /// Batched-selection scratch: densified queries for the whole
+    /// minibatch (`B × n_in`, row-major) and their fingerprints
+    /// (`B × L`), reused across batches.
+    q_plane: Vec<f32>,
+    fps_plane: Vec<u32>,
+    fps_buf: Vec<u32>,
     /// Updates since the last rehash-triggered rebuild (diagnostics).
     pub updates_since_rebuild: u64,
+}
+
+/// Densify a layer input into a pre-sized buffer of length `n_in`.
+fn densify_into(input: LayerInput<'_>, buf: &mut [f32]) {
+    match input {
+        LayerInput::Dense(x) => buf.copy_from_slice(x),
+        LayerInput::Sparse(s) => {
+            buf.iter_mut().for_each(|v| *v = 0.0);
+            for (i, v) in s.iter() {
+                buf[i as usize] = v;
+            }
+        }
+    }
+}
+
+/// Probe + rank for one pre-hashed query: multiprobe collection through
+/// [`LayerTables::query_prehashed`], optional §5.4 cheap re-rank, and the
+/// empty-result fallback. Shared verbatim by the per-example and batched
+/// selection paths so both produce identical active sets. Returns the
+/// extra (re-rank) multiplications.
+#[allow(clippy::too_many_arguments)]
+fn rank_candidates(
+    tables: &mut LayerTables,
+    layer: &Layer,
+    q: &[f32],
+    fps: &[u32],
+    b: usize,
+    cfg: LshConfig,
+    rng: &mut Pcg64,
+    out: &mut Vec<u32>,
+) -> u64 {
+    let mut extra_mults = 0u64;
+    if cfg.rerank_factor > 1 {
+        // Cheap re-ranking (§5.4): over-collect candidates, score them
+        // exactly, keep the best `b`. Trades |C|·d extra mults for a
+        // strictly better active set.
+        tables.query_prehashed(fps, b * cfg.rerank_factor, rng, out);
+        if out.len() > b {
+            let mut scored: Vec<(f32, u32)> = out
+                .iter()
+                .map(|&i| (crate::tensor::vecops::dot(layer.w.row(i as usize), q), i))
+                .collect();
+            extra_mults += (out.len() * layer.n_in()) as u64;
+            scored.sort_unstable_by(|a, b| {
+                b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal)
+            });
+            out.clear();
+            out.extend(scored.into_iter().take(b).map(|(_, i)| i));
+        }
+    } else {
+        tables.query_prehashed(fps, b, rng, out);
+    }
+    if out.is_empty() {
+        // Hash miss (rare, small layers): fall back to random nodes so
+        // training can proceed — the paper's tables always return
+        // *something* via multiprobe, but guard anyway.
+        out.extend(rng.sample_indices(layer.n_out(), b.min(4)));
+    }
+    extra_mults
 }
 
 impl LshSelector {
@@ -33,6 +98,9 @@ impl LshSelector {
             sparsity,
             rebuild_every_epochs: rebuild_every_epochs.max(1),
             scratch_q: vec![0.0; layer.n_in()],
+            q_plane: Vec::new(),
+            fps_plane: Vec::new(),
+            fps_buf: Vec::new(),
             updates_since_rebuild: 0,
         }
     }
@@ -54,52 +122,57 @@ impl NodeSelector for LshSelector {
         let cfg = self.tables.config();
         // Hashing cost: K·L inner products of dimension (n_in + 1).
         let hash_mults = (cfg.k * cfg.l * (layer.n_in() + 1)) as u64;
-        // Densify the query into scratch (hash projections are dense).
-        match input {
-            LayerInput::Dense(x) => {
-                self.scratch_q.clear();
-                self.scratch_q.extend_from_slice(x);
-            }
-            LayerInput::Sparse(s) => {
-                self.scratch_q.iter_mut().for_each(|v| *v = 0.0);
-                self.scratch_q.resize(layer.n_in(), 0.0);
-                for (i, v) in s.iter() {
-                    self.scratch_q[i as usize] = v;
-                }
-            }
-        }
-        // Field-level split borrow: tables (mut) + scratch_q (shared).
-        let Self { tables, scratch_q, .. } = self;
-        let mut extra_mults = 0u64;
-        if cfg.rerank_factor > 1 {
-            // Cheap re-ranking (§5.4): over-collect candidates, score them
-            // exactly, keep the best `b`. Trades |C|·d extra mults for a
-            // strictly better active set.
-            tables.query(scratch_q, b * cfg.rerank_factor, rng, out);
-            if out.len() > b {
-                let mut scored: Vec<(f32, u32)> = out
-                    .iter()
-                    .map(|&i| {
-                        (crate::tensor::vecops::dot(layer.w.row(i as usize), scratch_q), i)
-                    })
-                    .collect();
-                extra_mults += (out.len() * layer.n_in()) as u64;
-                scored.sort_unstable_by(|a, b| {
-                    b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal)
-                });
-                out.clear();
-                out.extend(scored.into_iter().take(b).map(|(_, i)| i));
-            }
-        } else {
-            tables.query(scratch_q, b, rng, out);
-        }
-        if out.is_empty() {
-            // Hash miss (rare, small layers): fall back to random nodes so
-            // training can proceed — the paper's tables always return
-            // *something* via multiprobe, but guard anyway.
-            out.extend(rng.sample_indices(layer.n_out(), b.min(4)));
-        }
+        // Field-level split borrow: tables (mut) + scratch buffers.
+        let Self { tables, scratch_q, fps_buf, .. } = self;
+        // resize is a steady-state no-op; densify_into overwrites every cell.
+        scratch_q.resize(layer.n_in(), 0.0);
+        densify_into(input, scratch_q);
+        tables.hash_query_fps(scratch_q, fps_buf);
+        let extra_mults = rank_candidates(tables, layer, scratch_q, fps_buf, b, cfg, rng, out);
         SelectionCost { selection_mults: hash_mults + extra_mults }
+    }
+
+    /// Real batched selection: densify every query and hash all `B × L`
+    /// fingerprints in one pass over the projection data, then probe and
+    /// rank each sample reusing the tables' probe buffers (no per-sample
+    /// allocation). Produces exactly the same active sets as calling
+    /// [`LshSelector::select`] per sample — required by the batch-of-one
+    /// equivalence guarantee — while the *maintenance* hashing is
+    /// amortized separately by the trainer's once-per-batch
+    /// [`NodeSelector::post_update`] over the union of touched rows.
+    fn select_batch(
+        &mut self,
+        layer: &Layer,
+        inputs: &[LayerInput<'_>],
+        rng: &mut Pcg64,
+        outs: &mut [Vec<u32>],
+    ) -> SelectionCost {
+        debug_assert_eq!(inputs.len(), outs.len());
+        let b = budget(layer.n_out(), self.sparsity);
+        let cfg = self.tables.config();
+        let n_in = layer.n_in();
+        let n = inputs.len();
+        let l = cfg.l;
+        let Self { tables, q_plane, fps_plane, fps_buf, .. } = self;
+        // Phase 1: densify + hash all fingerprints for the batch (resize
+        // reuses the buffer; densify_into overwrites every queried row).
+        q_plane.resize(n * n_in, 0.0);
+        for (s, input) in inputs.iter().enumerate() {
+            densify_into(*input, &mut q_plane[s * n_in..(s + 1) * n_in]);
+        }
+        fps_plane.clear();
+        for s in 0..n {
+            tables.hash_query_fps(&q_plane[s * n_in..(s + 1) * n_in], fps_buf);
+            fps_plane.extend_from_slice(fps_buf);
+        }
+        // Phase 2: probe + rank each sample over the shared scratch.
+        let mut selection_mults = (n * cfg.k * l * (n_in + 1)) as u64;
+        for (s, out) in outs.iter_mut().enumerate() {
+            let q = &q_plane[s * n_in..(s + 1) * n_in];
+            let fps = &fps_plane[s * l..(s + 1) * l];
+            selection_mults += rank_candidates(tables, layer, q, fps, b, cfg, rng, out);
+        }
+        SelectionCost { selection_mults }
     }
 
     fn post_update(&mut self, layer: &Layer, touched: &[u32], rng: &mut Pcg64) {
@@ -180,6 +253,28 @@ mod tests {
         sel.select(&l, LayerInput::Sparse(&sv), &mut rng, &mut out);
         assert!(!out.is_empty());
         assert!(out.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn select_batch_matches_per_sample_select() {
+        let l = layer(24, 150, 11);
+        let cfg = LshConfig { rerank_factor: 3, ..LshConfig::default() };
+        let mut rng_a = Pcg64::seeded(12);
+        let mut rng_b = Pcg64::seeded(12);
+        let mut sel_a = LshSelector::new(&l, cfg, 0.1, 1, &mut rng_a);
+        let mut sel_b = LshSelector::new(&l, cfg, 0.1, 1, &mut rng_b);
+        let xs: Vec<Vec<f32>> =
+            (0..8).map(|s| (0..24).map(|j| ((s * 24 + j) as f32 * 0.17).sin()).collect()).collect();
+        let inputs: Vec<LayerInput> = xs.iter().map(|x| LayerInput::Dense(x)).collect();
+        let mut outs: Vec<Vec<u32>> = vec![Vec::new(); 8];
+        let batch_cost = sel_a.select_batch(&l, &inputs, &mut rng_a, &mut outs);
+        let mut per_sample_cost = 0u64;
+        for (s, input) in inputs.iter().enumerate() {
+            let mut one = Vec::new();
+            per_sample_cost += sel_b.select(&l, *input, &mut rng_b, &mut one).selection_mults;
+            assert_eq!(one, outs[s], "sample {s} active set must match");
+        }
+        assert_eq!(batch_cost.selection_mults, per_sample_cost);
     }
 
     #[test]

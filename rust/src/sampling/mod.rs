@@ -134,8 +134,31 @@ pub trait NodeSelector: Send {
         out: &mut Vec<u32>,
     ) -> SelectionCost;
 
+    /// Choose active sets for a whole minibatch, one per sample. The
+    /// default loops over [`NodeSelector::select`], drawing randomness in
+    /// sample order, so any implementation that overrides this (LSH) must
+    /// keep the same per-sample results to preserve the batch-of-one ==
+    /// per-example equivalence guarantee (see `train::trainer` docs).
+    /// Returns the summed selection cost.
+    fn select_batch(
+        &mut self,
+        layer: &Layer,
+        inputs: &[LayerInput<'_>],
+        rng: &mut Pcg64,
+        outs: &mut [Vec<u32>],
+    ) -> SelectionCost {
+        debug_assert_eq!(inputs.len(), outs.len());
+        let mut selection_mults = 0u64;
+        for (input, out) in inputs.iter().zip(outs.iter_mut()) {
+            selection_mults += self.select(layer, *input, rng, out).selection_mults;
+        }
+        SelectionCost { selection_mults }
+    }
+
     /// Notify the selector that the listed rows of `layer` changed
-    /// (post-gradient). Default: nothing to maintain.
+    /// (post-gradient). The batched trainer calls this once per minibatch
+    /// with the *union* of touched rows — that is where LSH maintenance
+    /// hashing amortizes across the batch. Default: nothing to maintain.
     fn post_update(&mut self, _layer: &Layer, _touched: &[u32], _rng: &mut Pcg64) {}
 
     /// Called at epoch boundaries; selectors with drift (LSH) rebuild here.

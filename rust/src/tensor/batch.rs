@@ -1,0 +1,201 @@
+//! Minibatch view and batched primitives.
+//!
+//! A [`Batch`] is a row-major view over `B` samples of equal dimension —
+//! either borrowed rows (zero-copy over a `Dataset`) or an owned packed
+//! buffer. The batched kernels below iterate *row-outer, sample-inner* so
+//! one weight row is loaded once and dotted against every sample in the
+//! batch — the cache behaviour that makes minibatch execution faster than
+//! `B` independent per-example passes even before any algorithmic
+//! amortization.
+
+use crate::tensor::vecops;
+
+/// Borrowed row-major batch: `B` sample slices of identical length.
+#[derive(Clone, Debug, Default)]
+pub struct Batch<'a> {
+    rows: Vec<&'a [f32]>,
+    dim: usize,
+}
+
+impl<'a> Batch<'a> {
+    /// Build from a slice of row references (all must share one length).
+    pub fn from_rows(rows: &[&'a [f32]]) -> Self {
+        let dim = rows.first().map_or(0, |r| r.len());
+        debug_assert!(rows.iter().all(|r| r.len() == dim), "ragged batch");
+        Batch { rows: rows.to_vec(), dim }
+    }
+
+    /// Zero-copy view over owned vectors (e.g. `Dataset::xs`).
+    pub fn from_vecs(xs: &'a [Vec<f32>]) -> Self {
+        let dim = xs.first().map_or(0, |r| r.len());
+        debug_assert!(xs.iter().all(|r| r.len() == dim), "ragged batch");
+        Batch { rows: xs.iter().map(|x| x.as_slice()).collect(), dim }
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    #[inline]
+    pub fn row(&self, s: usize) -> &'a [f32] {
+        self.rows[s]
+    }
+
+    pub fn rows(&self) -> &[&'a [f32]] {
+        &self.rows
+    }
+}
+
+/// Owned row-major activation plane for batched dense evaluation:
+/// `B × dim` values in one contiguous allocation, reused across layers.
+#[derive(Clone, Debug, Default)]
+pub struct BatchPlane {
+    data: Vec<f32>,
+    batch: usize,
+    dim: usize,
+}
+
+impl BatchPlane {
+    pub fn new() -> Self {
+        BatchPlane::default()
+    }
+
+    /// Resize (without preserving contents) to `batch × dim`.
+    pub fn reset(&mut self, batch: usize, dim: usize) {
+        self.batch = batch;
+        self.dim = dim;
+        self.data.clear();
+        self.data.resize(batch * dim, 0.0);
+    }
+
+    /// Resize to `batch × dim` **without** clearing retained cells (newly
+    /// grown cells are zero). For callers that only read coordinates they
+    /// first wrote — e.g. the trainer's dL/da planes, which are zeroed
+    /// per sample at the live coordinates only — this skips the full
+    /// `B × dim` memset that [`BatchPlane::reset`] pays.
+    pub fn ensure_shape(&mut self, batch: usize, dim: usize) {
+        self.batch = batch;
+        self.dim = dim;
+        self.data.resize(batch * dim, 0.0);
+    }
+
+    /// Copy a borrowed batch into the plane.
+    pub fn load(&mut self, batch: &Batch<'_>) {
+        self.reset(batch.len(), batch.dim());
+        for (s, r) in batch.rows().iter().enumerate() {
+            self.row_mut(s).copy_from_slice(r);
+        }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    #[inline]
+    pub fn row(&self, s: usize) -> &[f32] {
+        &self.data[s * self.dim..(s + 1) * self.dim]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, s: usize) -> &mut [f32] {
+        &mut self.data[s * self.dim..(s + 1) * self.dim]
+    }
+
+    /// Batched gemv against one weight row: `out[s] = w · plane[s]`. The
+    /// weight row stays hot in cache across all `B` dots — the shared
+    /// weight pass used by [`crate::nn::Layer::forward_dense_batch`].
+    /// Returns multiplications performed.
+    pub fn dot_row(&self, w: &[f32], out: &mut Vec<f32>) -> u64 {
+        debug_assert_eq!(w.len(), self.dim);
+        out.clear();
+        out.reserve(self.batch);
+        for s in 0..self.batch {
+            out.push(vecops::dot(w, self.row(s)));
+        }
+        (self.batch * self.dim) as u64
+    }
+
+    /// Column-scatter for one output unit: write `vals[s]` into column
+    /// `col` of every sample row (the transpose-free way to assemble the
+    /// next layer's activation plane from row-major per-unit results).
+    pub fn set_col(&mut self, col: usize, vals: &[f32]) {
+        debug_assert_eq!(vals.len(), self.batch);
+        for (s, &v) in vals.iter().enumerate() {
+            self.data[s * self.dim + col] = v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_view_shapes() {
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32, 4.0];
+        let batch = Batch::from_rows(&[&a, &b]);
+        assert_eq!(batch.len(), 2);
+        assert_eq!(batch.dim(), 2);
+        assert_eq!(batch.row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn from_vecs_is_zero_copy_view() {
+        let xs = vec![vec![1.0f32, 0.0], vec![0.0, 1.0]];
+        let batch = Batch::from_vecs(&xs);
+        assert_eq!(batch.len(), 2);
+        assert_eq!(batch.row(0), xs[0].as_slice());
+    }
+
+    #[test]
+    fn dot_row_matches_per_sample() {
+        let xs = vec![vec![1.0f32, 2.0, 3.0], vec![-1.0, 0.5, 2.0]];
+        let mut plane = BatchPlane::new();
+        plane.load(&Batch::from_vecs(&xs));
+        let w = [0.5f32, -1.0, 2.0];
+        let mut out = Vec::new();
+        let mults = plane.dot_row(&w, &mut out);
+        assert_eq!(mults, 6);
+        for (s, x) in xs.iter().enumerate() {
+            assert_eq!(out[s], vecops::dot(&w, x));
+        }
+    }
+
+    #[test]
+    fn ensure_shape_keeps_written_cells_readable() {
+        let mut p = BatchPlane::new();
+        p.ensure_shape(2, 3);
+        p.row_mut(1)[2] = 7.0;
+        p.ensure_shape(2, 3);
+        assert_eq!(p.row(1)[2], 7.0, "same-shape ensure keeps contents");
+        p.ensure_shape(4, 3);
+        assert_eq!(p.row(3), &[0.0; 3], "grown rows start zeroed");
+    }
+
+    #[test]
+    fn plane_roundtrip_and_set_col() {
+        let xs = vec![vec![1.0f32, 2.0], vec![3.0, 4.0]];
+        let batch = Batch::from_vecs(&xs);
+        let mut plane = BatchPlane::new();
+        plane.load(&batch);
+        assert_eq!(plane.row(1), &[3.0, 4.0]);
+        let mut out = BatchPlane::new();
+        out.reset(2, 3);
+        out.set_col(2, &[7.0, 8.0]);
+        assert_eq!(out.row(0), &[0.0, 0.0, 7.0]);
+        assert_eq!(out.row(1), &[0.0, 0.0, 8.0]);
+    }
+}

@@ -1,7 +1,10 @@
-//! Minimal dense linear algebra: row-major matrices and the vector
-//! primitives that form the sparse hot path.
+//! Minimal dense linear algebra: row-major matrices, the vector
+//! primitives that form the sparse hot path, and the minibatch view used
+//! by the batched execution engine.
 
+pub mod batch;
 pub mod matrix;
 pub mod vecops;
 
+pub use batch::{Batch, BatchPlane};
 pub use matrix::Matrix;

@@ -35,6 +35,17 @@ pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     }
 }
 
+/// y[idx[k]] += alpha * val[k] — scatter-accumulate over an active-column
+/// set (sparse-input minibatch gradient accumulation; the union-tracking
+/// variant lives in `train::trainer::GradSink`).
+#[inline]
+pub fn axpy_at(alpha: f32, idx: &[u32], val: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(idx.len(), val.len());
+    for (&j, &v) in idx.iter().zip(val) {
+        y[j as usize] += alpha * v;
+    }
+}
+
 /// Squared L2 norm.
 #[inline]
 pub fn norm_sq(x: &[f32]) -> f32 {
@@ -111,6 +122,13 @@ mod tests {
         let mut y = [10.0, 10.0, 10.0];
         axpy(0.5, &x, &mut y);
         assert_eq!(y, [10.5, 11.0, 11.5]);
+    }
+
+    #[test]
+    fn axpy_at_scatters_only_listed_columns() {
+        let mut y = [0.0f32; 5];
+        axpy_at(2.0, &[1, 4], &[3.0, -1.0], &mut y);
+        assert_eq!(y, [0.0, 6.0, 0.0, 0.0, -2.0]);
     }
 
     #[test]

@@ -15,7 +15,7 @@ use crate::nn::network::Network;
 use crate::optim::{OptimConfig, Optimizer};
 use crate::sampling::{make_selector, NodeSelector, SamplerConfig};
 use crate::train::metrics::{EpochRecord, MultCounters, RunRecord};
-use crate::train::trainer::{train_step, StepWorkspace};
+use crate::train::trainer::{train_batch, BatchWorkspace};
 use crate::util::rng::Pcg64;
 use std::cell::UnsafeCell;
 use std::time::Instant;
@@ -49,12 +49,17 @@ impl<T> SharedCell<T> {
 pub struct AsgdConfig {
     pub threads: usize,
     pub epochs: usize,
+    /// Minibatch size per worker step: each worker consumes its shard in
+    /// chunks of this size through [`train_batch`], amortizing LSH
+    /// selection and table maintenance across the chunk (1 = the paper's
+    /// per-example Hogwild).
+    pub batch_size: usize,
     pub optim: OptimConfig,
     pub sampler: SamplerConfig,
     pub seed: u64,
     /// Evaluate on at most this many test examples per epoch (0 = all).
     pub eval_cap: usize,
-    /// Sample every Nth step's layer-0 active set for conflict analysis
+    /// Sample every Nth batch's layer-0 active set for conflict analysis
     /// (0 disables).
     pub conflict_sample_every: usize,
     pub verbose: bool,
@@ -65,6 +70,7 @@ impl Default for AsgdConfig {
         AsgdConfig {
             threads: 1,
             epochs: 10,
+            batch_size: 1,
             optim: OptimConfig::default(),
             sampler: SamplerConfig::default(),
             seed: 42,
@@ -132,33 +138,42 @@ pub fn run_asgd(net: Network, train: &Dataset, test: &Dataset, cfg: &AsgdConfig)
                         let net = unsafe { shared_net.get_mut_racy() };
                         let opt = unsafe { shared_opt.get_mut_racy() };
                         let mut rng =
-                            Pcg64::new(cfg.seed ^ (epoch as u64) << 8, 0xA500 + w as u64);
+                            Pcg64::new(cfg.seed ^ ((epoch as u64) << 8), 0xA500 + w as u64);
                         let mut selectors: Vec<Box<dyn NodeSelector>> = (0..net.n_hidden())
                             .map(|l| make_selector(&cfg.sampler, &net.layers[l], &mut rng))
                             .collect();
-                        let mut ws = StepWorkspace::for_network(net);
+                        let mut ws = BatchWorkspace::for_network(net);
+                        let bsz = cfg.batch_size.max(1);
                         let mut loss_sum = 0.0f64;
                         let mut mults = MultCounters::default();
                         let mut active_sum = 0.0f64;
                         let mut sampled: Vec<Vec<u32>> = Vec::new();
-                        for (step, &i) in shard.iter().enumerate() {
-                            let r = train_step(
+                        let mut xs_buf: Vec<&[f32]> = Vec::with_capacity(bsz);
+                        let mut ys_buf: Vec<u32> = Vec::with_capacity(bsz);
+                        for (step, chunk) in shard.chunks(bsz).enumerate() {
+                            xs_buf.clear();
+                            ys_buf.clear();
+                            for &i in chunk {
+                                xs_buf.push(train.xs[i as usize].as_slice());
+                                ys_buf.push(train.ys[i as usize]);
+                            }
+                            let r = train_batch(
                                 net,
                                 &mut selectors,
                                 opt,
                                 &mut ws,
-                                &train.xs[i as usize],
-                                train.ys[i as usize],
+                                &xs_buf,
+                                &ys_buf,
                                 &mut rng,
                             );
-                            loss_sum += r.loss as f64;
-                            active_sum += r.active_fraction as f64;
+                            loss_sum += r.loss as f64 * chunk.len() as f64;
+                            active_sum += r.active_fraction as f64 * chunk.len() as f64;
                             mults.add(&r.mults);
                             if cfg.conflict_sample_every > 0
                                 && step % cfg.conflict_sample_every == 0
                                 && !ws.acts.is_empty()
                             {
-                                sampled.push(ws.acts[0].idx.clone());
+                                sampled.push(ws.acts[0][0].idx.clone());
                             }
                         }
                         (loss_sum, mults, active_sum, sampled)
@@ -320,6 +335,16 @@ mod tests {
         assert!(out.conflicts.mean_active_size > 0.0);
         // 10% sparsity on 64-node layers: overlap well below 1
         assert!(out.conflicts.mean_overlap < 0.9);
+    }
+
+    #[test]
+    fn batched_workers_converge() {
+        let (train, test) = blob_dataset(400, 6);
+        let mut c = cfg(2, Method::Lsh, 0.25);
+        c.batch_size = 8;
+        let out = run_asgd(mk_net(), &train, &test, &c);
+        assert!(out.record.final_acc() > 0.85, "batched ASGD acc {}", out.record.final_acc());
+        assert!(out.conflicts.pairs > 0, "conflict sampling must still work per batch");
     }
 
     #[test]

@@ -1,5 +1,42 @@
-//! Training engines: the sequential Algorithm-1 trainer, the lock-free
+//! Training engines: the minibatch-first sparse trainer, the lock-free
 //! Hogwild ASGD engine, schedules, and computation-accounting metrics.
+//!
+//! # Batched execution model
+//!
+//! The execution core is [`trainer::train_batch`]: one call runs
+//! selection, sparse forward, sparse backward and the optimizer update
+//! for a whole minibatch. The batch dimension is threaded through every
+//! layer of the stack:
+//!
+//! * **selection** — [`crate::sampling::NodeSelector::select_batch`]
+//!   chooses per-sample active sets in one call; the LSH implementation
+//!   hashes all `B × L` query fingerprints in one pass and probes with
+//!   reusable buffers (zero allocation at steady state).
+//! * **forward/backward** — [`crate::nn::Layer::forward_sparse_batch`] /
+//!   [`crate::nn::Layer::backward_sparse_batch`] run layer-major over the
+//!   batch; dense evaluation uses the row-outer/sample-inner shared
+//!   weight pass ([`crate::nn::Network::forward_dense_batch`]).
+//! * **update** — per-row gradients are accumulated across the batch
+//!   ([`trainer::GradSink`]) and applied **once per touched row** with
+//!   mean-gradient semantics; optimizer state advances once per touched
+//!   coordinate per batch.
+//! * **maintenance** — LSH tables are re-organized once per batch over
+//!   the *union* of touched rows, so maintenance hash computations per
+//!   sample shrink roughly by the batch size relative to per-example
+//!   training (the dominant per-sample selection overhead identified by
+//!   the sampling-feasibility literature).
+//!
+//! # Equivalence guarantees
+//!
+//! * `train_batch` with `B = 1` reproduces the per-example Algorithm 1
+//!   step **bit-for-bit** — same RNG draw order, same gradient
+//!   arithmetic, same optimizer-state evolution, same hash-table
+//!   maintenance order. [`trainer::train_step`] is literally that case,
+//!   and `tests/batch_equivalence.rs` pins the guarantee against an
+//!   independent reference implementation for all five selection methods.
+//! * Batched dense evaluation is bitwise identical to per-sample dense
+//!   evaluation for every batch size (same dot-product reduction order;
+//!   only the memory-access pattern changes).
 
 pub mod asgd;
 pub mod energy;
@@ -9,4 +46,6 @@ pub mod trainer;
 
 pub use asgd::{run_asgd, AsgdConfig, AsgdOutcome, ConflictStats};
 pub use metrics::{EpochRecord, MultCounters, RunRecord};
-pub use trainer::{train_step, StepWorkspace, TrainConfig, Trainer};
+pub use trainer::{
+    train_batch, train_step, BatchResult, BatchWorkspace, StepWorkspace, TrainConfig, Trainer,
+};

@@ -1,50 +1,278 @@
-//! Sequential training: Algorithm 1 of the paper. Per-example SGD where
-//! every hidden layer's active set comes from its node selector, forward
-//! and backward touch only active nodes, the optimizer updates only
-//! active rows, and LSH tables are re-organized after each update.
+//! Minibatch-first sparse training engine.
+//!
+//! [`train_batch`] runs Algorithm 1 of the paper over a minibatch: every
+//! hidden layer's active sets come from one batched selector call
+//! ([`crate::sampling::NodeSelector::select_batch`] — LSH hashes all
+//! fingerprints for the batch in one pass and reuses probe buffers),
+//! forward and backward touch only active nodes, per-row gradients are
+//! accumulated across the batch and applied once per touched row, and LSH
+//! table maintenance runs once per batch over the *union* of touched rows
+//! (the amortization that makes minibatching pay — per-example training
+//! rehashes each touched row after every sample).
+//!
+//! **Equivalence guarantee:** with a batch of one, [`train_batch`] draws
+//! randomness, computes gradients, applies optimizer state updates and
+//! maintains hash tables in exactly the per-example order, so it
+//! reproduces the original per-example `train_step` bit-for-bit (see
+//! `tests/batch_equivalence.rs`). [`train_step`] is literally the
+//! batch-of-one case. For `B > 1` the semantics are standard minibatch
+//! SGD: mean gradient per touched (row, column), optimizer state advanced
+//! once per touched coordinate per batch.
 
 use crate::data::dataset::Dataset;
+use crate::nn::layer::Layer;
 use crate::nn::loss::softmax_xent_grad;
 use crate::nn::network::Network;
 use crate::nn::sparse::{LayerInput, SparseVec};
 use crate::optim::{OptimConfig, Optimizer};
 use crate::sampling::{make_selector, NodeSelector, SamplerConfig};
+use crate::tensor::batch::BatchPlane;
 use crate::train::metrics::{EpochRecord, MultCounters, RunRecord};
 use crate::util::rng::Pcg64;
 use std::time::Instant;
 
-/// Reusable per-step buffers (no allocation on the hot path).
-pub struct StepWorkspace {
-    /// Sparse activations per hidden layer.
-    pub acts: Vec<SparseVec>,
-    /// Dense dL/da buffer per hidden layer (only active coords are live).
-    pub d_hidden: Vec<Vec<f32>>,
-    pub logits: Vec<f32>,
-    pub d_logits: Vec<f32>,
-    pub dz: Vec<f32>,
-    pub d_out: Vec<f32>,
-    pub out_sparse: SparseVec,
+/// Per-layer minibatch gradient accumulator. Slot buffers are pooled and
+/// kept zeroed between batches, so steady-state training allocates
+/// nothing. Touched rows are recorded in first-touch order — for a batch
+/// of one that is exactly the active-set order the per-example path
+/// updated in, which keeps optimizer-state evolution identical.
+pub struct GradSink {
+    n_in: usize,
+    /// Layer 0 consumes the dense example vector: the optimizer is applied
+    /// at every column (like the per-example path, which also advances
+    /// momentum at zero-gradient columns). Upper layers apply at the
+    /// batch union of live input coordinates.
+    dense_input: bool,
+    /// row id -> slot index (u32::MAX = untouched this batch).
+    slot_of_row: Vec<u32>,
+    /// Touched rows, first-touch order.
+    rows: Vec<u32>,
+    /// Pooled per-slot buffers (grown, never shrunk; clean when unused).
+    grad_w: Vec<Vec<f32>>,
+    cols: Vec<Vec<u32>>,
+    col_mark: Vec<Vec<bool>>,
+    grad_b: Vec<f32>,
+}
+
+impl GradSink {
+    fn new(n_in: usize, n_out: usize, dense_input: bool) -> Self {
+        GradSink {
+            n_in,
+            dense_input,
+            slot_of_row: vec![u32::MAX; n_out],
+            rows: Vec::new(),
+            grad_w: Vec::new(),
+            cols: Vec::new(),
+            col_mark: Vec::new(),
+            grad_b: Vec::new(),
+        }
+    }
+
+    /// Rows touched by the current batch (first-touch order) — also the
+    /// union handed to selector maintenance.
+    pub fn touched_rows(&self) -> &[u32] {
+        &self.rows
+    }
+
+    /// Reset for the next batch, scrubbing only the dirtied coordinates.
+    fn clear(&mut self) {
+        for (k, &r) in self.rows.iter().enumerate() {
+            self.slot_of_row[r as usize] = u32::MAX;
+            if self.dense_input {
+                self.grad_w[k].iter_mut().for_each(|v| *v = 0.0);
+            } else {
+                let gw = &mut self.grad_w[k];
+                let mark = &mut self.col_mark[k];
+                for &j in &self.cols[k] {
+                    gw[j as usize] = 0.0;
+                    mark[j as usize] = false;
+                }
+                self.cols[k].clear();
+            }
+            self.grad_b[k] = 0.0;
+        }
+        self.rows.clear();
+    }
+
+    fn slot(&mut self, row: u32) -> usize {
+        let s = self.slot_of_row[row as usize];
+        if s != u32::MAX {
+            return s as usize;
+        }
+        let s = self.rows.len();
+        self.slot_of_row[row as usize] = s as u32;
+        self.rows.push(row);
+        if s == self.grad_w.len() {
+            self.grad_w.push(vec![0.0; self.n_in]);
+            if self.dense_input {
+                self.cols.push(Vec::new());
+                self.col_mark.push(Vec::new());
+            } else {
+                self.cols.push(Vec::new());
+                self.col_mark.push(vec![false; self.n_in]);
+            }
+            self.grad_b.push(0.0);
+        }
+        s
+    }
+
+    /// Accumulate one sample's contribution `dz` for `row` over the
+    /// input's active coordinates. Returns multiplications (the dz·x_j
+    /// products).
+    fn accumulate(&mut self, row: u32, dz: f32, input: LayerInput<'_>) -> u64 {
+        let s = self.slot(row);
+        self.grad_b[s] += dz;
+        match input {
+            LayerInput::Dense(x) => {
+                debug_assert!(self.dense_input, "dense input into sparse-input sink");
+                crate::tensor::vecops::axpy(dz, x, &mut self.grad_w[s]);
+                x.len() as u64
+            }
+            LayerInput::Sparse(sv) => {
+                let gw = &mut self.grad_w[s];
+                if self.dense_input {
+                    crate::tensor::vecops::axpy_at(dz, &sv.idx, &sv.val, gw);
+                } else {
+                    let cols = &mut self.cols[s];
+                    let mark = &mut self.col_mark[s];
+                    for (j, v) in sv.iter() {
+                        let ju = j as usize;
+                        if !mark[ju] {
+                            mark[ju] = true;
+                            cols.push(j);
+                        }
+                        gw[ju] += dz * v;
+                    }
+                }
+                sv.len() as u64
+            }
+        }
+    }
+
+    /// Apply every accumulated row gradient (scaled by `scale` = 1/B for
+    /// mean-gradient semantics; a no-op at B = 1) through the optimizer.
+    /// Does not clear — `touched_rows` stays valid for selector
+    /// maintenance until the next batch begins.
+    ///
+    /// Returned multiplications count 1 per touched row (the bias step):
+    /// the per-coordinate gradient products were already counted by
+    /// [`GradSink::accumulate`], so a batch of one reports exactly the
+    /// fused per-example accounting (`|input| + 1` per row) and the
+    /// paper's sustainability metric stays comparable across engines.
+    fn apply(
+        &mut self,
+        layer_idx: usize,
+        layer: &mut Layer,
+        opt: &mut Optimizer,
+        scale: f32,
+    ) -> u64 {
+        let mut mults = 0u64;
+        for (k, &row) in self.rows.iter().enumerate() {
+            let gw = &mut self.grad_w[k];
+            if scale != 1.0 {
+                if self.dense_input {
+                    gw.iter_mut().for_each(|v| *v *= scale);
+                } else {
+                    for &j in &self.cols[k] {
+                        gw[j as usize] *= scale;
+                    }
+                }
+                self.grad_b[k] *= scale;
+            }
+            let cols = if self.dense_input { None } else { Some(self.cols[k].as_slice()) };
+            let _ = opt.apply_row_grad(
+                layer_idx,
+                row as usize,
+                cols,
+                gw,
+                self.grad_b[k],
+                layer.w.row_mut(row as usize),
+                &mut layer.b[row as usize],
+            );
+            mults += 1;
+        }
+        mults
+    }
+}
+
+/// Reusable minibatch buffers, cleared per batch and shared across every
+/// batch item. Once grown to the working batch size no per-sample or
+/// per-coordinate buffer is reallocated; the only remaining per-batch
+/// allocations are the `B`-pointer `LayerInput` view vectors, whose
+/// borrows change every batch.
+pub struct BatchWorkspace {
+    /// `acts[l][s]`: sparse activations of hidden layer `l`, sample `s`.
+    pub acts: Vec<Vec<SparseVec>>,
+    /// Per-sample active-set buffers for the current layer's selection.
+    actives: Vec<Vec<u32>>,
+    /// Per-sample output-layer activations (logit values).
+    pub out_sparse: Vec<SparseVec>,
+    /// `d_hidden[l]`: `B × width(l)` plane of dL/da.
+    d_hidden: Vec<BatchPlane>,
+    /// Per-sample dL/dlogits.
+    d_logits: Vec<Vec<f32>>,
+    /// Per-sample dL/da gather buffer for the layer being back-propagated.
+    d_outs: Vec<Vec<f32>>,
+    /// Per-sample dL/dz for the layer being back-propagated.
+    dzs: Vec<Vec<f32>>,
+    /// Per-layer gradient accumulators (hidden layers + output layer).
+    grads: Vec<GradSink>,
     /// Cached 0..n_out index list for the (always fully-active) output layer.
     pub all_out: Vec<u32>,
 }
 
-impl StepWorkspace {
+/// Former name of [`BatchWorkspace`]; the per-example workspace is now the
+/// batch workspace used with B = 1.
+pub type StepWorkspace = BatchWorkspace;
+
+impl BatchWorkspace {
     pub fn for_network(net: &Network) -> Self {
         let n_hidden = net.n_hidden();
-        StepWorkspace {
-            acts: (0..n_hidden).map(|_| SparseVec::new()).collect(),
-            d_hidden: (0..n_hidden).map(|l| vec![0.0; net.layers[l].n_out()]).collect(),
-            logits: Vec::new(),
+        let grads = net
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(l, layer)| GradSink::new(layer.n_in(), layer.n_out(), l == 0))
+            .collect();
+        BatchWorkspace {
+            acts: (0..n_hidden).map(|_| Vec::new()).collect(),
+            actives: Vec::new(),
+            out_sparse: Vec::new(),
+            d_hidden: (0..n_hidden).map(|_| BatchPlane::new()).collect(),
             d_logits: Vec::new(),
-            dz: Vec::new(),
-            d_out: Vec::new(),
-            out_sparse: SparseVec::new(),
+            d_outs: Vec::new(),
+            dzs: Vec::new(),
+            grads,
             all_out: (0..net.layers.last().map(|l| l.n_out()).unwrap_or(0) as u32).collect(),
+        }
+    }
+
+    /// Grow per-sample buffers to hold `bsz` items (never shrinks).
+    fn ensure_capacity(&mut self, bsz: usize) {
+        for per_layer in &mut self.acts {
+            if per_layer.len() < bsz {
+                per_layer.resize_with(bsz, SparseVec::new);
+            }
+        }
+        if self.actives.len() < bsz {
+            self.actives.resize_with(bsz, Vec::new);
+        }
+        if self.out_sparse.len() < bsz {
+            self.out_sparse.resize_with(bsz, SparseVec::new);
+        }
+        if self.d_logits.len() < bsz {
+            self.d_logits.resize_with(bsz, Vec::new);
+        }
+        if self.d_outs.len() < bsz {
+            self.d_outs.resize_with(bsz, Vec::new);
+        }
+        if self.dzs.len() < bsz {
+            self.dzs.resize_with(bsz, Vec::new);
         }
     }
 }
 
-/// Outcome of a single training step.
+/// Outcome of a single training step (batch of one).
 pub struct StepResult {
     pub loss: f32,
     pub correct: bool,
@@ -53,154 +281,215 @@ pub struct StepResult {
     pub active_fraction: f32,
 }
 
-/// One SGD step on one example. Standalone so the ASGD engine can drive it
+/// Outcome of one minibatch step.
+pub struct BatchResult {
+    /// Mean loss over the batch.
+    pub loss: f32,
+    /// Correct argmax predictions in the batch (from training logits).
+    pub correct: usize,
+    /// Summed multiplication counters over the batch.
+    pub mults: MultCounters,
+    /// Mean over samples and hidden layers of |AS| / width.
+    pub active_fraction: f32,
+}
+
+/// One minibatch SGD step. Standalone so the ASGD engine can drive it
 /// through its shared-parameter pointers.
+#[allow(clippy::too_many_arguments)]
+pub fn train_batch(
+    net: &mut Network,
+    selectors: &mut [Box<dyn NodeSelector>],
+    opt: &mut Optimizer,
+    ws: &mut BatchWorkspace,
+    xs: &[&[f32]],
+    ys: &[u32],
+    rng: &mut Pcg64,
+) -> BatchResult {
+    let bsz = xs.len();
+    assert!(bsz > 0, "empty batch");
+    assert_eq!(bsz, ys.len());
+    let n_hidden = net.n_hidden();
+    debug_assert_eq!(selectors.len(), n_hidden);
+    ws.ensure_capacity(bsz);
+    for g in &mut ws.grads {
+        g.clear();
+    }
+    let mut mults = MultCounters::default();
+    let mut active_fraction = 0.0f32;
+
+    // ---- Forward: batched selection + sparse forward per layer ----------
+    for l in 0..n_hidden {
+        let layer = &net.layers[l];
+        let (prev_acts, rest) = ws.acts.split_at_mut(l);
+        let outs = &mut rest[0][..bsz];
+        let inputs: Vec<LayerInput> = (0..bsz)
+            .map(|s| {
+                if l == 0 {
+                    LayerInput::Dense(xs[s])
+                } else {
+                    LayerInput::Sparse(&prev_acts[l - 1][s])
+                }
+            })
+            .collect();
+        let cost = selectors[l].select_batch(layer, &inputs, rng, &mut ws.actives[..bsz]);
+        mults.selection += cost.selection_mults;
+        mults.forward += layer.forward_sparse_batch(&inputs, &ws.actives[..bsz], outs);
+        for out in outs.iter() {
+            active_fraction += out.len() as f32 / layer.n_out() as f32;
+        }
+    }
+
+    // ---- Output layer: dense over all classes, every sample -------------
+    let out_layer_idx = n_hidden;
+    {
+        let layer = &net.layers[out_layer_idx];
+        for s in 0..bsz {
+            let input = if n_hidden == 0 {
+                LayerInput::Dense(xs[s])
+            } else {
+                LayerInput::Sparse(&ws.acts[n_hidden - 1][s])
+            };
+            mults.forward += layer.forward_sparse(input, &ws.all_out, &mut ws.out_sparse[s]);
+        }
+    }
+
+    // ---- Loss ------------------------------------------------------------
+    let mut loss_sum = 0.0f64;
+    let mut correct = 0usize;
+    for s in 0..bsz {
+        let d = &mut ws.d_logits[s];
+        d.clear();
+        d.extend_from_slice(&ws.out_sparse[s].val);
+        let (loss, pred) = softmax_xent_grad(d, ys[s]);
+        loss_sum += loss as f64;
+        correct += (pred == ys[s]) as usize;
+    }
+
+    // ---- Backward (layer-major) + gradient accumulation ------------------
+    {
+        let layer = &net.layers[out_layer_idx];
+        if n_hidden > 0 {
+            // Zero dL/da only at each sample's live coordinates (the only
+            // ones the gather below reads) — not the whole B × width plane.
+            let plane = &mut ws.d_hidden[n_hidden - 1];
+            plane.ensure_shape(bsz, layer.n_in());
+            for s in 0..bsz {
+                let row = plane.row_mut(s);
+                for &i in &ws.acts[n_hidden - 1][s].idx {
+                    row[i as usize] = 0.0;
+                }
+            }
+        }
+        let inputs: Vec<LayerInput> = (0..bsz)
+            .map(|s| {
+                if n_hidden == 0 {
+                    LayerInput::Dense(xs[s])
+                } else {
+                    LayerInput::Sparse(&ws.acts[n_hidden - 1][s])
+                }
+            })
+            .collect();
+        let d_in = if n_hidden == 0 { None } else { Some(&mut ws.d_hidden[n_hidden - 1]) };
+        mults.backward += layer.backward_sparse_batch(
+            &inputs,
+            &ws.out_sparse[..bsz],
+            &ws.d_logits[..bsz],
+            &mut ws.dzs[..bsz],
+            d_in,
+        );
+        let sink = &mut ws.grads[out_layer_idx];
+        for s in 0..bsz {
+            for (k, &i) in ws.out_sparse[s].idx.iter().enumerate() {
+                mults.update += sink.accumulate(i, ws.dzs[s][k], inputs[s]);
+            }
+        }
+    }
+    for l in (0..n_hidden).rev() {
+        let layer = &net.layers[l];
+        // Gather dL/da for each sample's active set from the plane.
+        for s in 0..bsz {
+            let d = &mut ws.d_outs[s];
+            d.clear();
+            let plane_row = ws.d_hidden[l].row(s);
+            for &i in &ws.acts[l][s].idx {
+                d.push(plane_row[i as usize]);
+            }
+        }
+        if l > 0 {
+            let plane = &mut ws.d_hidden[l - 1];
+            plane.ensure_shape(bsz, layer.n_in());
+            for s in 0..bsz {
+                let row = plane.row_mut(s);
+                for &i in &ws.acts[l - 1][s].idx {
+                    row[i as usize] = 0.0;
+                }
+            }
+        }
+        let (prev_acts, rest) = ws.acts.split_at(l);
+        let cur = &rest[0];
+        let inputs: Vec<LayerInput> = (0..bsz)
+            .map(|s| {
+                if l == 0 {
+                    LayerInput::Dense(xs[s])
+                } else {
+                    LayerInput::Sparse(&prev_acts[l - 1][s])
+                }
+            })
+            .collect();
+        let d_in = if l == 0 { None } else { Some(&mut ws.d_hidden[l - 1]) };
+        mults.backward += layer.backward_sparse_batch(
+            &inputs,
+            &cur[..bsz],
+            &ws.d_outs[..bsz],
+            &mut ws.dzs[..bsz],
+            d_in,
+        );
+        let sink = &mut ws.grads[l];
+        for s in 0..bsz {
+            for (k, &i) in cur[s].idx.iter().enumerate() {
+                mults.update += sink.accumulate(i, ws.dzs[s][k], inputs[s]);
+            }
+        }
+    }
+
+    // ---- Apply once per touched row + batch-amortized maintenance --------
+    // Order matches the per-example path (output layer, then hidden layers
+    // top-down, each followed by its selector maintenance) so a batch of
+    // one reproduces it exactly.
+    let inv_b = 1.0 / bsz as f32;
+    mults.update +=
+        ws.grads[out_layer_idx].apply(out_layer_idx, &mut net.layers[out_layer_idx], opt, inv_b);
+    for l in (0..n_hidden).rev() {
+        let layer = &mut net.layers[l];
+        mults.update += ws.grads[l].apply(l, layer, opt, inv_b);
+        selectors[l].post_update(layer, ws.grads[l].touched_rows(), rng);
+    }
+
+    BatchResult {
+        loss: (loss_sum / bsz as f64) as f32,
+        correct,
+        mults,
+        active_fraction: active_fraction / (bsz as f32 * n_hidden.max(1) as f32),
+    }
+}
+
+/// One SGD step on one example — the batch-of-one case of [`train_batch`].
 #[allow(clippy::too_many_arguments)]
 pub fn train_step(
     net: &mut Network,
     selectors: &mut [Box<dyn NodeSelector>],
     opt: &mut Optimizer,
-    ws: &mut StepWorkspace,
+    ws: &mut BatchWorkspace,
     x: &[f32],
     y: u32,
     rng: &mut Pcg64,
 ) -> StepResult {
-    let n_hidden = net.n_hidden();
-    debug_assert_eq!(selectors.len(), n_hidden);
-    let mut mults = MultCounters::default();
-    let mut active_fraction = 0.0f32;
-
-    // ---- Forward: hidden layers on their active sets --------------------
-    for l in 0..n_hidden {
-        // Split acts so we can read acts[l-1] while writing acts[l].
-        let (prev_acts, rest) = ws.acts.split_at_mut(l);
-        let out = &mut rest[0];
-        let input = if l == 0 {
-            LayerInput::Dense(x)
-        } else {
-            LayerInput::Sparse(&prev_acts[l - 1])
-        };
-        let layer = &net.layers[l];
-        // Selection writes into the activation buffer's idx vector.
-        let mut active = std::mem::take(&mut out.idx);
-        let cost = selectors[l].select(layer, input, rng, &mut active);
-        mults.selection += cost.selection_mults;
-        mults.forward += layer.forward_sparse(input, &active, out);
-        // forward_sparse cleared out; restore idx (it re-pushed into it).
-        debug_assert_eq!(out.idx.len(), out.val.len());
-        active_fraction += out.len() as f32 / layer.n_out() as f32;
-    }
-
-    // ---- Output layer: dense over all classes ---------------------------
-    let out_layer_idx = n_hidden;
-    {
-        let layer = &net.layers[out_layer_idx];
-        let input = if n_hidden == 0 {
-            LayerInput::Dense(x)
-        } else {
-            LayerInput::Sparse(&ws.acts[n_hidden - 1])
-        };
-        mults.forward += layer.forward_sparse(input, &ws.all_out, &mut ws.out_sparse);
-    }
-    ws.logits.clear();
-    ws.logits.extend_from_slice(&ws.out_sparse.val);
-
-    // ---- Loss ------------------------------------------------------------
-    ws.d_logits.clear();
-    ws.d_logits.extend_from_slice(&ws.logits);
-    let (loss, pred) = softmax_xent_grad(&mut ws.d_logits, y);
-
-    // ---- Backward + update: output layer ---------------------------------
-    // Zero the gradient buffer only at coords that will be accumulated
-    // (the active set of the last hidden layer).
-    if n_hidden > 0 {
-        let live = &ws.acts[n_hidden - 1].idx;
-        let buf = &mut ws.d_hidden[n_hidden - 1];
-        for &i in live {
-            buf[i as usize] = 0.0;
-        }
-    }
-    {
-        let layer = &mut net.layers[out_layer_idx];
-        let input = if n_hidden == 0 {
-            LayerInput::Dense(x)
-        } else {
-            LayerInput::Sparse(&ws.acts[n_hidden - 1])
-        };
-        let d_back = if n_hidden == 0 {
-            None
-        } else {
-            // Reborrow workaround: take the buffer out during the call.
-            Some(())
-        };
-        // Backward through the (linear) output layer.
-        if d_back.is_some() {
-            let mut dbuf = std::mem::take(&mut ws.d_hidden[n_hidden - 1]);
-            mults.backward +=
-                layer.backward_sparse(input, &ws.out_sparse, &ws.d_logits, &mut ws.dz, Some(&mut dbuf));
-            ws.d_hidden[n_hidden - 1] = dbuf;
-        } else {
-            mults.backward +=
-                layer.backward_sparse(input, &ws.out_sparse, &ws.d_logits, &mut ws.dz, None);
-        }
-        // Update all output rows.
-        for (k, &i) in ws.out_sparse.idx.iter().enumerate() {
-            let dz = ws.dz[k];
-            let row = layer.w.row_mut(i as usize);
-            mults.update += opt.update_row(out_layer_idx, i as usize, dz, input, row, {
-                &mut layer.b[i as usize]
-            });
-        }
-    }
-
-    // ---- Backward + update: hidden layers, top-down ----------------------
-    for l in (0..n_hidden).rev() {
-        // Gather dL/da for this layer's active set.
-        ws.d_out.clear();
-        {
-            let dbuf = &ws.d_hidden[l];
-            for &i in &ws.acts[l].idx {
-                ws.d_out.push(dbuf[i as usize]);
-            }
-        }
-        // Zero the next-lower gradient buffer at its live coords.
-        if l > 0 {
-            let (lower, upper) = ws.acts.split_at(l);
-            let live = &lower[l - 1].idx;
-            let _ = upper;
-            let buf = &mut ws.d_hidden[l - 1];
-            for &i in live {
-                buf[i as usize] = 0.0;
-            }
-        }
-        let (prev_acts, cur_acts) = ws.acts.split_at(l);
-        let out_act = &cur_acts[0];
-        let input =
-            if l == 0 { LayerInput::Dense(x) } else { LayerInput::Sparse(&prev_acts[l - 1]) };
-        let layer = &mut net.layers[l];
-        if l > 0 {
-            let mut dbuf = std::mem::take(&mut ws.d_hidden[l - 1]);
-            mults.backward +=
-                layer.backward_sparse(input, out_act, &ws.d_out, &mut ws.dz, Some(&mut dbuf));
-            ws.d_hidden[l - 1] = dbuf;
-        } else {
-            mults.backward += layer.backward_sparse(input, out_act, &ws.d_out, &mut ws.dz, None);
-        }
-        for (k, &i) in out_act.idx.iter().enumerate() {
-            let dz = ws.dz[k];
-            let row = layer.w.row_mut(i as usize);
-            mults.update +=
-                opt.update_row(l, i as usize, dz, input, row, &mut layer.b[i as usize]);
-        }
-        // Maintain the selector's index over the rows we just changed.
-        selectors[l].post_update(layer, &out_act.idx, rng);
-    }
-
+    let r = train_batch(net, selectors, opt, ws, &[x], &[y], rng);
     StepResult {
-        loss,
-        correct: pred == y,
-        mults,
-        active_fraction: active_fraction / n_hidden.max(1) as f32,
+        loss: r.loss,
+        correct: r.correct == 1,
+        mults: r.mults,
+        active_fraction: r.active_fraction,
     }
 }
 
@@ -210,7 +499,7 @@ pub fn train_step(
 ///
 /// * LSH / WTA / AD: sparse inference through the same selectors.
 /// * VD: dense with the dropout weight-scaling rule (activations x p).
-/// * Standard: plain dense.
+/// * Standard: plain dense (batched shared-weight pass).
 pub fn evaluate_with_selectors(
     net: &Network,
     selectors: &mut [Box<dyn NodeSelector>],
@@ -277,6 +566,8 @@ pub fn evaluate_with_selectors(
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
     pub epochs: usize,
+    /// Minibatch size (1 = the paper's per-example Algorithm 1).
+    pub batch_size: usize,
     pub optim: OptimConfig,
     pub sampler: SamplerConfig,
     pub seed: u64,
@@ -290,6 +581,7 @@ impl Default for TrainConfig {
     fn default() -> Self {
         TrainConfig {
             epochs: 10,
+            batch_size: 1,
             optim: OptimConfig::default(),
             sampler: SamplerConfig::default(),
             seed: 42,
@@ -305,7 +597,7 @@ pub struct Trainer {
     pub selectors: Vec<Box<dyn NodeSelector>>,
     pub opt: Optimizer,
     pub cfg: TrainConfig,
-    ws: StepWorkspace,
+    ws: BatchWorkspace,
     rng: Pcg64,
 }
 
@@ -316,7 +608,7 @@ impl Trainer {
             .map(|l| make_selector(&cfg.sampler, &net.layers[l], &mut rng))
             .collect();
         let opt = Optimizer::for_network(cfg.optim, &net);
-        let ws = StepWorkspace::for_network(&net);
+        let ws = BatchWorkspace::for_network(&net);
         Trainer { net, selectors, opt, cfg, ws, rng }
     }
 
@@ -333,10 +625,12 @@ impl Trainer {
             let rec = self.run_epoch(epoch, train, test);
             if self.cfg.verbose {
                 eprintln!(
-                    "[{} {} s={:.2}] epoch {:>3}: loss {:.4} acc {:.4} mults {:.3e} active {:.3}",
+                    "[{} {} s={:.2} b={}] epoch {:>3}: loss {:.4} acc {:.4} \
+                     mults {:.3e} active {:.3}",
                     record.method,
                     record.dataset,
                     record.sparsity,
+                    self.cfg.batch_size.max(1),
                     epoch,
                     rec.train_loss,
                     rec.test_acc,
@@ -353,21 +647,30 @@ impl Trainer {
     pub fn run_epoch(&mut self, epoch: usize, train: &Dataset, test: &Dataset) -> EpochRecord {
         let t0 = Instant::now();
         let order = train.epoch_order(&mut self.rng);
+        let bsz = self.cfg.batch_size.max(1);
         let mut mults = MultCounters::default();
         let mut loss_sum = 0.0f64;
         let mut active_sum = 0.0f64;
-        for &i in &order {
-            let r = train_step(
+        let mut xs_buf: Vec<&[f32]> = Vec::with_capacity(bsz);
+        let mut ys_buf: Vec<u32> = Vec::with_capacity(bsz);
+        for chunk in order.chunks(bsz) {
+            xs_buf.clear();
+            ys_buf.clear();
+            for &i in chunk {
+                xs_buf.push(train.xs[i as usize].as_slice());
+                ys_buf.push(train.ys[i as usize]);
+            }
+            let r = train_batch(
                 &mut self.net,
                 &mut self.selectors,
                 &mut self.opt,
                 &mut self.ws,
-                &train.xs[i as usize],
-                train.ys[i as usize],
+                &xs_buf,
+                &ys_buf,
                 &mut self.rng,
             );
-            loss_sum += r.loss as f64;
-            active_sum += r.active_fraction as f64;
+            loss_sum += r.loss as f64 * chunk.len() as f64;
+            active_sum += r.active_fraction as f64 * chunk.len() as f64;
             mults.add(&r.mults);
         }
         for (l, sel) in self.selectors.iter_mut().enumerate() {
@@ -426,11 +729,16 @@ mod tests {
     }
 
     fn train_with(method: Method, sparsity: f32) -> RunRecord {
+        train_with_batch(method, sparsity, 1)
+    }
+
+    fn train_with_batch(method: Method, sparsity: f32, batch_size: usize) -> RunRecord {
         let (train, test) = blob_dataset(400, 16, 5);
         let mut t = Trainer::new(
             net(16, 64),
             TrainConfig {
                 epochs: 5,
+                batch_size,
                 sampler: SamplerConfig::with_method(method, sparsity),
                 optim: OptimConfig { lr: 0.05, ..Default::default() },
                 ..Default::default()
@@ -471,6 +779,22 @@ mod tests {
     }
 
     #[test]
+    fn minibatch_lsh_learns_blobs() {
+        // The batched engine must converge at real batch sizes too (mean
+        // gradients mean ~B× fewer optimizer steps per epoch, so the bar
+        // is slightly lower than the per-example variant's).
+        let rec = train_with_batch(Method::Lsh, 0.25, 16);
+        assert!(rec.final_acc() > 0.85, "LSH b=16 acc {}", rec.final_acc());
+        assert!(rec.mean_active_fraction() < 0.35, "should stay sparse");
+    }
+
+    #[test]
+    fn minibatch_standard_learns_blobs() {
+        let rec = train_with_batch(Method::Standard, 1.0, 8);
+        assert!(rec.final_acc() > 0.9, "NN b=8 acc {}", rec.final_acc());
+    }
+
+    #[test]
     fn lsh_uses_far_fewer_multiplications_than_standard() {
         let std_rec = train_with(Method::Standard, 1.0);
         let lsh_rec = train_with(Method::Lsh, 0.1);
@@ -491,5 +815,44 @@ mod tests {
         let first = rec.epochs.first().unwrap().train_loss;
         let last = rec.epochs.last().unwrap().train_loss;
         assert!(last < first, "loss should fall: {first} -> {last}");
+    }
+
+    #[test]
+    fn batched_update_applies_each_touched_row_once() {
+        // With a repeated identical sample, the batch gradient is B equal
+        // contributions averaged — one optimizer application — while the
+        // per-example path applies B times. Verify the batch path touched
+        // each row exactly once by checking grad sinks after a step.
+        let cfg = TrainConfig {
+            batch_size: 4,
+            sampler: SamplerConfig::with_method(Method::Standard, 1.0),
+            ..Default::default()
+        };
+        let mut t = Trainer::new(net(16, 32), cfg);
+        let x = vec![0.5f32; 16];
+        let xs: Vec<&[f32]> = vec![&x; 4];
+        let ys = vec![1u32; 4];
+        let r = train_batch(
+            &mut t.net,
+            &mut t.selectors,
+            &mut t.opt,
+            &mut t.ws,
+            &xs,
+            &ys,
+            &mut t.rng,
+        );
+        assert!(r.loss.is_finite());
+        // Full network at batch 4: every row touched once per sink.
+        for (l, sink) in t.ws.grads.iter().enumerate() {
+            let mut rows = sink.touched_rows().to_vec();
+            rows.sort_unstable();
+            rows.dedup();
+            assert_eq!(
+                rows.len(),
+                sink.touched_rows().len(),
+                "layer {l}: rows must be unique in the sink"
+            );
+            assert_eq!(rows.len(), t.net.layers[l].n_out(), "layer {l}: fully active");
+        }
     }
 }

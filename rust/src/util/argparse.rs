@@ -19,12 +19,21 @@ pub struct FlagSpec {
 pub struct Args {
     values: BTreeMap<String, String>,
     flags: Vec<String>,
+    /// Names that were explicitly present on the command line (as opposed
+    /// to filled from declared defaults) — lets callers layer config-file
+    /// values between built-in defaults and explicit flags.
+    explicit: Vec<String>,
     pub positional: Vec<String>,
 }
 
 impl Args {
     pub fn get(&self, name: &str) -> Option<&str> {
         self.values.get(name).map(|s| s.as_str())
+    }
+
+    /// Was this flag/option explicitly passed on the command line?
+    pub fn set_explicitly(&self, name: &str) -> bool {
+        self.explicit.iter().any(|f| f == name)
     }
 
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
@@ -120,11 +129,13 @@ impl Parser {
                             .next()
                             .ok_or_else(|| format!("flag --{name} requires a value"))?,
                     };
+                    args.explicit.push(name.clone());
                     args.values.insert(name, val);
                 } else {
                     if inline_val.is_some() {
                         return Err(format!("flag --{name} does not take a value"));
                     }
+                    args.explicit.push(name.clone());
                     args.flags.push(name);
                 }
             } else {
@@ -179,6 +190,16 @@ mod tests {
         assert_eq!(a.get("epochs"), Some("10"));
         assert_eq!(a.get("dataset"), None);
         assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn explicit_flags_are_distinguished_from_defaults() {
+        let a = parser().parse_from(sv(&["--epochs", "5", "--verbose"])).unwrap();
+        assert!(a.set_explicitly("epochs"));
+        assert!(a.set_explicitly("verbose"));
+        assert!(!a.set_explicitly("dataset"));
+        let b = parser().parse_from(sv(&[])).unwrap();
+        assert!(!b.set_explicitly("epochs"), "declared default is not explicit");
     }
 
     #[test]

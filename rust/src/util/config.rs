@@ -1,6 +1,19 @@
 //! Run-configuration files: a strict `key = value` format with `[section]`
 //! headers and `#` comments (a TOML subset — the offline crate set has no
 //! serde/toml). Used by the launcher to describe experiments.
+//!
+//! The `hashdl train --config file.conf` path reads the `[train]`
+//! section; recognized keys (all optional, CLI flags override):
+//!
+//! ```text
+//! [train]
+//! method     = lsh      # nn|vd|ad|wta|lsh
+//! sparsity   = 0.05
+//! batch_size = 32       # minibatch size (1 = per-example Algorithm 1)
+//! epochs     = 10
+//! threads    = 1
+//! lr         = 0.01
+//! ```
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -150,6 +163,17 @@ methods = lsh, wta ,nn
         let c = Config::parse(SAMPLE).unwrap();
         let c2 = Config::parse(&c.to_text()).unwrap();
         assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn train_section_keys_parse() {
+        let c = Config::parse(
+            "[train]\nmethod = lsh\nbatch_size = 32\nepochs = 4\nsparsity = 0.05\nlr = 0.01\n",
+        )
+        .unwrap();
+        assert_eq!(c.get("train.method"), Some("lsh"));
+        assert_eq!(c.get_or::<usize>("train.batch_size", 1).unwrap(), 32);
+        assert_eq!(c.get_or::<f32>("train.sparsity", 0.0).unwrap(), 0.05);
     }
 
     #[test]

@@ -1,0 +1,331 @@
+//! Batch/per-example equivalence suite (the contract of the batched
+//! execution engine):
+//!
+//! 1. `train_batch` with a batch of one reproduces the per-example
+//!    Algorithm-1 step — verified against an independent reference
+//!    implementation (written from the paper's per-example semantics,
+//!    using only public layer/optimizer APIs) for all five selection
+//!    methods.
+//! 2. Batched dense evaluation matches per-sample dense evaluation
+//!    within 1e-5 for networks trained with every method.
+//! 3. Batched LSH selection performs fewer hash computations per sample
+//!    than the per-example path at batch >= 16 (maintenance hashing is
+//!    amortized over the union of touched rows).
+
+use hashdl::data::dataset::Dataset;
+use hashdl::nn::activation::Activation;
+use hashdl::nn::layer::Layer;
+use hashdl::nn::loss::softmax_xent_grad;
+use hashdl::nn::network::{Network, NetworkConfig};
+use hashdl::nn::sparse::{LayerInput, SparseVec};
+use hashdl::optim::{OptimConfig, Optimizer};
+use hashdl::sampling::lsh_select::LshSelector;
+use hashdl::sampling::{make_selector, Method, NodeSelector, SamplerConfig};
+use hashdl::train::trainer::{train_batch, BatchWorkspace};
+use hashdl::util::rng::Pcg64;
+
+/// Reference per-example SGD step: the paper's Algorithm 1 exactly as the
+/// pre-batching engine executed it — per-sample selection, sparse
+/// forward, top-down backward with immediate per-row optimizer updates,
+/// selector maintenance after each layer's updates.
+fn reference_step(
+    net: &mut Network,
+    selectors: &mut [Box<dyn NodeSelector>],
+    opt: &mut Optimizer,
+    x: &[f32],
+    y: u32,
+    rng: &mut Pcg64,
+) -> f32 {
+    let n_hidden = net.n_hidden();
+    let mut acts: Vec<SparseVec> = (0..n_hidden).map(|_| SparseVec::new()).collect();
+    let mut d_hidden: Vec<Vec<f32>> =
+        net.layers[..n_hidden].iter().map(|l| vec![0.0; l.n_out()]).collect();
+    let mut active: Vec<u32> = Vec::new();
+
+    // Forward over per-layer active sets.
+    for l in 0..n_hidden {
+        let (prev, rest) = acts.split_at_mut(l);
+        let input =
+            if l == 0 { LayerInput::Dense(x) } else { LayerInput::Sparse(&prev[l - 1]) };
+        selectors[l].select(&net.layers[l], input, rng, &mut active);
+        net.layers[l].forward_sparse(input, &active, &mut rest[0]);
+    }
+
+    // Output layer: dense over all classes.
+    let out_idx = n_hidden;
+    let all: Vec<u32> = (0..net.layers[out_idx].n_out() as u32).collect();
+    let mut out_sparse = SparseVec::new();
+    {
+        let input = if n_hidden == 0 {
+            LayerInput::Dense(x)
+        } else {
+            LayerInput::Sparse(&acts[n_hidden - 1])
+        };
+        net.layers[out_idx].forward_sparse(input, &all, &mut out_sparse);
+    }
+    let mut d_logits = out_sparse.val.clone();
+    let (loss, _) = softmax_xent_grad(&mut d_logits, y);
+
+    // Output layer: backward then immediate per-row updates.
+    let mut dz = Vec::new();
+    {
+        let input = if n_hidden == 0 {
+            LayerInput::Dense(x)
+        } else {
+            LayerInput::Sparse(&acts[n_hidden - 1])
+        };
+        let layer = &mut net.layers[out_idx];
+        if n_hidden > 0 {
+            layer.backward_sparse(
+                input,
+                &out_sparse,
+                &d_logits,
+                &mut dz,
+                Some(&mut d_hidden[n_hidden - 1]),
+            );
+        } else {
+            layer.backward_sparse(input, &out_sparse, &d_logits, &mut dz, None);
+        }
+        for (k, &i) in out_sparse.idx.iter().enumerate() {
+            opt.update_row(
+                out_idx,
+                i as usize,
+                dz[k],
+                input,
+                layer.w.row_mut(i as usize),
+                &mut layer.b[i as usize],
+            );
+        }
+    }
+
+    // Hidden layers top-down: backward, update, maintain.
+    for l in (0..n_hidden).rev() {
+        let mut d_out = Vec::new();
+        for &i in &acts[l].idx {
+            d_out.push(d_hidden[l][i as usize]);
+        }
+        let (prev, cur) = acts.split_at(l);
+        let out_act = &cur[0];
+        let input =
+            if l == 0 { LayerInput::Dense(x) } else { LayerInput::Sparse(&prev[l - 1]) };
+        let layer = &mut net.layers[l];
+        let mut dz_l = Vec::new();
+        if l > 0 {
+            layer.backward_sparse(input, out_act, &d_out, &mut dz_l, Some(&mut d_hidden[l - 1]));
+        } else {
+            layer.backward_sparse(input, out_act, &d_out, &mut dz_l, None);
+        }
+        for (k, &i) in out_act.idx.iter().enumerate() {
+            opt.update_row(
+                l,
+                i as usize,
+                dz_l[k],
+                input,
+                layer.w.row_mut(i as usize),
+                &mut layer.b[i as usize],
+            );
+        }
+        selectors[l].post_update(layer, &out_act.idx, rng);
+    }
+    loss
+}
+
+fn blob_dataset(n: usize, dim: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg64::seeded(seed);
+    let mut ds = Dataset::new("blobs", dim, 2);
+    for i in 0..n {
+        let y = (i % 2) as u32;
+        let c = if y == 0 { 0.6 } else { -0.6 };
+        ds.push((0..dim).map(|_| c + 0.4 * rng.gaussian()).collect(), y);
+    }
+    ds
+}
+
+fn mk_net(dim: usize, seed: u64) -> Network {
+    Network::new(
+        &NetworkConfig { n_in: dim, hidden: vec![24, 24], n_out: 2, act: Activation::ReLU },
+        &mut Pcg64::seeded(seed),
+    )
+}
+
+fn sampler_for(method: Method) -> SamplerConfig {
+    match method {
+        // Exercise the full LSH pipeline: re-rank + lazy (probabilistic)
+        // maintenance, the paths with the most batching machinery.
+        Method::Lsh => SamplerConfig::lsh_tuned(0.25),
+        Method::Standard => SamplerConfig::with_method(method, 1.0),
+        _ => SamplerConfig::with_method(method, 0.5),
+    }
+}
+
+fn max_weight_diff(a: &Network, b: &Network) -> f32 {
+    let mut max = 0.0f32;
+    for (la, lb) in a.layers.iter().zip(&b.layers) {
+        for (wa, wb) in la.w.as_slice().iter().zip(lb.w.as_slice()) {
+            max = max.max((wa - wb).abs());
+        }
+        for (ba, bb) in la.b.iter().zip(&lb.b) {
+            max = max.max((ba - bb).abs());
+        }
+    }
+    max
+}
+
+/// Criterion 1: `train_batch` at batch = 1 reproduces the per-example
+/// reference step for every selection method — same losses, same weights.
+#[test]
+fn train_batch_of_one_matches_reference_step_all_methods() {
+    let ds = blob_dataset(60, 12, 9);
+    for method in Method::all() {
+        let sampler = sampler_for(method);
+        let seed = 0x5EEDu64;
+
+        let mut net_a = mk_net(12, seed);
+        let mut net_b = mk_net(12, seed);
+        let mut rng_a = Pcg64::new(seed, 0x7EA1);
+        let mut rng_b = Pcg64::new(seed, 0x7EA1);
+        let mut sel_a: Vec<Box<dyn NodeSelector>> = (0..net_a.n_hidden())
+            .map(|l| make_selector(&sampler, &net_a.layers[l], &mut rng_a))
+            .collect();
+        let mut sel_b: Vec<Box<dyn NodeSelector>> = (0..net_b.n_hidden())
+            .map(|l| make_selector(&sampler, &net_b.layers[l], &mut rng_b))
+            .collect();
+        let mut opt_a = Optimizer::for_network(OptimConfig::default(), &net_a);
+        let mut opt_b = Optimizer::for_network(OptimConfig::default(), &net_b);
+        let mut ws = BatchWorkspace::for_network(&net_b);
+
+        for step in 0..40 {
+            let i = step % ds.len();
+            let x = ds.xs[i].as_slice();
+            let y = ds.ys[i];
+            let loss_a = reference_step(&mut net_a, &mut sel_a, &mut opt_a, x, y, &mut rng_a);
+            let r =
+                train_batch(&mut net_b, &mut sel_b, &mut opt_b, &mut ws, &[x], &[y], &mut rng_b);
+            // The guarantee is bit-for-bit, so the bar is exact equality
+            // (abs-diff of 0 also tolerates ±0.0 sign differences, the one
+            // place "identical arithmetic" can legally disagree in bits).
+            assert!(
+                (loss_a - r.loss).abs() == 0.0,
+                "{}: step {step} loss {loss_a} vs {}",
+                method.name(),
+                r.loss
+            );
+        }
+        let diff = max_weight_diff(&net_a, &net_b);
+        assert!(
+            diff == 0.0,
+            "{}: batch-of-one diverged from per-example reference (max |Δw| = {diff})",
+            method.name()
+        );
+    }
+}
+
+/// Criterion 2: batched dense evaluation matches per-sample dense
+/// evaluation within 1e-5 on networks trained with every method.
+#[test]
+fn batched_dense_eval_matches_per_sample_all_methods() {
+    use hashdl::train::trainer::{TrainConfig, Trainer};
+    let train = blob_dataset(120, 12, 21);
+    let test = blob_dataset(48, 12, 22);
+    for method in Method::all() {
+        let mut t = Trainer::new(
+            mk_net(12, 3),
+            TrainConfig {
+                epochs: 2,
+                batch_size: 4,
+                sampler: sampler_for(method),
+                optim: OptimConfig { lr: 0.02, ..Default::default() },
+                ..Default::default()
+            },
+        );
+        t.run(&train, &test);
+
+        // Per-sample reference on the trained network.
+        let mut logits = Vec::new();
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0usize;
+        for (x, &y) in test.xs.iter().zip(&test.ys) {
+            t.net.forward_dense(x, &mut logits);
+            let (l, p) = hashdl::nn::loss::softmax_xent(&logits, y);
+            loss_sum += l as f64;
+            correct += (p == y) as usize;
+        }
+        let ref_loss = (loss_sum / test.len() as f64) as f32;
+        let ref_acc = correct as f32 / test.len() as f32;
+
+        for bsz in [1usize, 7, 16, 64] {
+            let (loss, acc) = t.net.evaluate_batched(&test.xs, &test.ys, bsz);
+            assert_eq!(acc, ref_acc, "{} bsz={bsz}", method.name());
+            assert!(
+                (loss - ref_loss).abs() < 1e-5,
+                "{} bsz={bsz}: {loss} vs {ref_loss}",
+                method.name()
+            );
+        }
+    }
+}
+
+/// Criterion 3: at batch >= 16, batched LSH selection + maintenance
+/// performs fewer hash computations per sample than the per-example path
+/// (query hashing is identical; maintenance rehashing runs once per batch
+/// over the union of touched rows instead of once per sample).
+#[test]
+fn batched_lsh_selection_hashes_less_per_sample() {
+    let dim = 32;
+    // 16 samples × budget 16 = 256 row touches over only 64 rows, so the
+    // union is pigeonhole-guaranteed to be far smaller than the per-sample
+    // sum and the amortization is deterministic.
+    let n_out = 64;
+    let batch = 16usize;
+    let mut rng = Pcg64::seeded(7);
+    let layer = Layer::new(dim, n_out, Activation::ReLU, &mut rng);
+    let cfg = SamplerConfig::with_method(Method::Lsh, 0.25); // rehash_probability = 1.0
+    let xs: Vec<Vec<f32>> = (0..batch)
+        .map(|s| (0..dim).map(|j| ((s * dim + j) as f32 * 0.23).sin()).collect())
+        .collect();
+    let inputs: Vec<LayerInput> = xs.iter().map(|x| LayerInput::Dense(x)).collect();
+
+    // Per-example: select + rehash touched rows after every sample.
+    let mut rng_a = Pcg64::seeded(8);
+    let mut sel_a = LshSelector::new(&layer, cfg.lsh, cfg.sparsity, 1, &mut rng_a);
+    let base_a = sel_a.tables().hash_ops;
+    let mut out = Vec::new();
+    for input in &inputs {
+        sel_a.select(&layer, *input, &mut rng_a, &mut out);
+        sel_a.post_update(&layer, &out, &mut rng_a);
+    }
+    let per_example_hashes = sel_a.tables().hash_ops - base_a;
+
+    // Batched: one selection pass + one maintenance pass over the union.
+    let mut rng_b = Pcg64::seeded(8);
+    let mut sel_b = LshSelector::new(&layer, cfg.lsh, cfg.sparsity, 1, &mut rng_b);
+    let base_b = sel_b.tables().hash_ops;
+    let mut outs: Vec<Vec<u32>> = vec![Vec::new(); batch];
+    sel_b.select_batch(&layer, &inputs, &mut rng_b, &mut outs);
+    let mut union: Vec<u32> = Vec::new();
+    let mut seen = vec![false; n_out];
+    for o in &outs {
+        for &i in o {
+            if !seen[i as usize] {
+                seen[i as usize] = true;
+                union.push(i);
+            }
+        }
+    }
+    sel_b.post_update(&layer, &union, &mut rng_b);
+    let batched_hashes = sel_b.tables().hash_ops - base_b;
+
+    let touched: usize = outs.iter().map(|o| o.len()).sum();
+    assert!(
+        union.len() < touched,
+        "active sets must overlap for amortization ({} union vs {touched} touched)",
+        union.len()
+    );
+    assert!(
+        batched_hashes < per_example_hashes,
+        "batched path must hash less: {batched_hashes} vs {per_example_hashes} \
+         ({:.2} vs {:.2} hash-mults/sample)",
+        batched_hashes as f64 / batch as f64,
+        per_example_hashes as f64 / batch as f64
+    );
+}

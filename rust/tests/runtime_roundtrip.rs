@@ -3,7 +3,11 @@
 //! cross-language contract of the three-layer architecture.
 //!
 //! Requires `make artifacts` to have produced artifacts/ (the Makefile
-//! test target guarantees this ordering).
+//! test target guarantees this ordering) and a build with the `pjrt`
+//! feature (vendored xla crate); the default offline build skips this
+//! file entirely.
+
+#![cfg(feature = "pjrt")]
 
 use hashdl::lsh::family::LshFamily;
 use hashdl::lsh::srp::SrpHash;
