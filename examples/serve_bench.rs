@@ -1,0 +1,75 @@
+//! Serving quickstart: train a small LSH model, freeze it into a
+//! snapshot, then serve a closed-loop request stream through the
+//! multi-threaded micro-batching pool in dense and sparse modes.
+//!
+//!   cargo run --release --example serve_bench
+
+use hashdl::prelude::*;
+use hashdl::serve::bench::{mult_fraction, run_closed_loop, throughput_scaling, BenchConfig};
+use std::time::Duration;
+
+fn main() {
+    // 1. Train a compact LSH network on the procedural MNIST stand-in.
+    let (train, test) = Benchmark::Mnist8m.generate(2_000, 500, 42);
+    let net = Network::new(
+        &NetworkConfig { n_in: 784, hidden: vec![512, 512], n_out: 10, act: Activation::ReLU },
+        &mut Pcg64::seeded(42),
+    );
+    let mut trainer = Trainer::new(
+        net,
+        TrainConfig {
+            epochs: 2,
+            batch_size: 32,
+            sampler: SamplerConfig::with_method(Method::Lsh, 0.05),
+            eval_cap: 300,
+            ..Default::default()
+        },
+    );
+    let record = trainer.run(&train, &test);
+    println!("trained: accuracy {:.3}", record.final_acc());
+
+    // 2. Freeze: weights + the live LSH tables become one snapshot. (In a
+    //    real deployment this goes through serve::save_snapshot /
+    //    load_snapshot — replicas loading the file serve identical answers.)
+    let snapshot = trainer.snapshot();
+    let engine = SparseInferenceEngine::from_snapshot(snapshot);
+    let dense_budget = engine.dense_mults_per_request();
+
+    // 3. Serve the test set closed-loop: dense baseline vs sparse, 1 and 4
+    //    workers, micro-batches closed at 32 requests or 200us.
+    let mut results = Vec::new();
+    for sparse in [false, true] {
+        for workers in [1usize, 4] {
+            let cfg = BenchConfig {
+                pool: PoolConfig {
+                    workers,
+                    max_batch: 32,
+                    batch_deadline: Duration::from_micros(200),
+                    queue_cap: 1024,
+                    sparse,
+                },
+                clients: 0, // 2x workers
+                requests: 1_000,
+            };
+            let r = run_closed_loop(&engine, &test.xs, &test.ys, &cfg);
+            println!(
+                "{:>6} w={} {:>8.0} req/s  p50 {:>5}us p99 {:>6}us  \
+                 {:>5.1}% of dense mults  acc {:.3}",
+                r.mode,
+                r.workers,
+                r.requests_per_sec,
+                r.p50_micros,
+                r.p99_micros,
+                100.0 * r.mults_per_request / dense_budget as f64,
+                r.accuracy,
+            );
+            results.push(r);
+        }
+    }
+    println!(
+        "sparse mult fraction {:.3}; scaling 1→4 workers: dense {:.2}x, sparse {:.2}x",
+        mult_fraction(&results, dense_budget),
+        throughput_scaling(&results, "dense"),
+        throughput_scaling(&results, "sparse"),
+    );
+}

@@ -1,5 +1,13 @@
 //! Binary (de)serialization for datasets and model checkpoints — a small
 //! versioned little-endian format (no serde in the offline crate set).
+//!
+//! Two model formats coexist:
+//! * **v1** (`HDLMODL1`) — weights only, written by [`save_network`].
+//! * **v2** (`HDLMODL2`) — the frozen serving snapshot: weights + sampler
+//!   config + prehashed LSH tables, implemented in
+//!   [`crate::serve::snapshot`] on top of the primitive helpers exported
+//!   here. [`load_network`] accepts both, so every old call site keeps
+//!   working on new files (the table payload is simply dropped).
 
 use crate::data::dataset::Dataset;
 use crate::nn::activation::Activation;
@@ -10,13 +18,22 @@ use std::io::{self, Read, Write};
 use std::path::Path;
 
 const DATASET_MAGIC: &[u8; 8] = b"HDLDATA1";
-const MODEL_MAGIC: &[u8; 8] = b"HDLMODL1";
+pub(crate) const MODEL_MAGIC: &[u8; 8] = b"HDLMODL1";
+pub(crate) const SNAPSHOT_MAGIC: &[u8; 8] = b"HDLMODL2";
 
-fn write_u32(w: &mut impl Write, v: u32) -> io::Result<()> {
+pub(crate) fn write_u32(w: &mut impl Write, v: u32) -> io::Result<()> {
     w.write_all(&v.to_le_bytes())
 }
 
-fn write_f32s(w: &mut impl Write, vs: &[f32]) -> io::Result<()> {
+pub(crate) fn write_u64(w: &mut impl Write, v: u64) -> io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+pub(crate) fn write_f32(w: &mut impl Write, v: f32) -> io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+pub(crate) fn write_f32s(w: &mut impl Write, vs: &[f32]) -> io::Result<()> {
     // Bulk byte conversion (hot for 8M-sample datasets).
     let mut buf = Vec::with_capacity(vs.len() * 4);
     for v in vs {
@@ -25,28 +42,58 @@ fn write_f32s(w: &mut impl Write, vs: &[f32]) -> io::Result<()> {
     w.write_all(&buf)
 }
 
-fn read_u32(r: &mut impl Read) -> io::Result<u32> {
+pub(crate) fn write_u32s(w: &mut impl Write, vs: &[u32]) -> io::Result<()> {
+    let mut buf = Vec::with_capacity(vs.len() * 4);
+    for v in vs {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    w.write_all(&buf)
+}
+
+pub(crate) fn read_u32(r: &mut impl Read) -> io::Result<u32> {
     let mut b = [0u8; 4];
     r.read_exact(&mut b)?;
     Ok(u32::from_le_bytes(b))
 }
 
-fn read_f32s(r: &mut impl Read, n: usize) -> io::Result<Vec<f32>> {
+pub(crate) fn read_u64(r: &mut impl Read) -> io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+pub(crate) fn read_f32(r: &mut impl Read) -> io::Result<f32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(f32::from_le_bytes(b))
+}
+
+pub(crate) fn read_f32s(r: &mut impl Read, n: usize) -> io::Result<Vec<f32>> {
     let mut buf = vec![0u8; n * 4];
     r.read_exact(&mut buf)?;
     Ok(buf.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
 }
 
-fn write_str(w: &mut impl Write, s: &str) -> io::Result<()> {
+pub(crate) fn read_u32s(r: &mut impl Read, n: usize) -> io::Result<Vec<u32>> {
+    let mut buf = vec![0u8; n * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+pub(crate) fn write_str(w: &mut impl Write, s: &str) -> io::Result<()> {
     write_u32(w, s.len() as u32)?;
     w.write_all(s.as_bytes())
 }
 
-fn read_str(r: &mut impl Read) -> io::Result<String> {
+pub(crate) fn read_str(r: &mut impl Read) -> io::Result<String> {
     let n = read_u32(r)? as usize;
     let mut b = vec![0u8; n];
     r.read_exact(&mut b)?;
     String::from_utf8(b).map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))
+}
+
+pub(crate) fn invalid(msg: impl Into<String>) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.into())
 }
 
 pub fn save_dataset(ds: &Dataset, path: &Path) -> io::Result<()> {
@@ -83,39 +130,55 @@ pub fn load_dataset(path: &Path) -> io::Result<Dataset> {
     Ok(ds)
 }
 
+/// Save weights only in the legacy v1 format (no hash tables). Serving
+/// snapshots — [`crate::serve::snapshot::save_snapshot`] — are the richer
+/// successor; this stays for table-less checkpoints and compatibility
+/// tests.
 pub fn save_network(net: &Network, path: &Path) -> io::Result<()> {
     let mut w = io::BufWriter::new(std::fs::File::create(path)?);
     w.write_all(MODEL_MAGIC)?;
-    write_u32(&mut w, net.layers.len() as u32)?;
+    write_network_body(&mut w, net)
+}
+
+/// The layer-stack section shared verbatim by the v1 format and the v2
+/// snapshot (which is why old readers can load new files' weights).
+pub(crate) fn write_network_body(w: &mut impl Write, net: &Network) -> io::Result<()> {
+    write_u32(w, net.layers.len() as u32)?;
     for l in &net.layers {
-        write_str(&mut w, &l.act.to_string())?;
-        write_u32(&mut w, l.n_out() as u32)?;
-        write_u32(&mut w, l.n_in() as u32)?;
-        write_f32s(&mut w, l.w.as_slice())?;
-        write_f32s(&mut w, &l.b)?;
+        write_str(w, &l.act.to_string())?;
+        write_u32(w, l.n_out() as u32)?;
+        write_u32(w, l.n_in() as u32)?;
+        write_f32s(w, l.w.as_slice())?;
+        write_f32s(w, &l.b)?;
     }
     Ok(())
 }
 
+pub(crate) fn read_network_body(r: &mut impl Read) -> io::Result<Network> {
+    let n_layers = read_u32(r)? as usize;
+    let mut layers = Vec::with_capacity(n_layers);
+    for _ in 0..n_layers {
+        let act = Activation::parse(&read_str(r)?).map_err(invalid)?;
+        let n_out = read_u32(r)? as usize;
+        let n_in = read_u32(r)? as usize;
+        let w = Matrix::from_vec(n_out, n_in, read_f32s(r, n_out * n_in)?);
+        let b = read_f32s(r, n_out)?;
+        layers.push(Layer { w, b, act });
+    }
+    Ok(Network { layers })
+}
+
+/// Load the network weights from either model format: legacy v1 files or
+/// v2 serving snapshots (whose table payload is ignored here — use
+/// [`crate::serve::snapshot::load_snapshot`] to keep it).
 pub fn load_network(path: &Path) -> io::Result<Network> {
     let mut r = io::BufReader::new(std::fs::File::open(path)?);
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)?;
-    if &magic != MODEL_MAGIC {
-        return Err(io::Error::new(io::ErrorKind::InvalidData, "not a hashdl model file"));
+    if &magic != MODEL_MAGIC && &magic != SNAPSHOT_MAGIC {
+        return Err(invalid("not a hashdl model file"));
     }
-    let n_layers = read_u32(&mut r)? as usize;
-    let mut layers = Vec::with_capacity(n_layers);
-    for _ in 0..n_layers {
-        let act = Activation::parse(&read_str(&mut r)?)
-            .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))?;
-        let n_out = read_u32(&mut r)? as usize;
-        let n_in = read_u32(&mut r)? as usize;
-        let w = Matrix::from_vec(n_out, n_in, read_f32s(&mut r, n_out * n_in)?);
-        let b = read_f32s(&mut r, n_out)?;
-        layers.push(Layer { w, b, act });
-    }
-    Ok(Network { layers })
+    read_network_body(&mut r)
 }
 
 #[cfg(test)]

@@ -22,6 +22,7 @@ pub mod nn;
 pub mod optim;
 pub mod runtime;
 pub mod sampling;
+pub mod serve;
 pub mod tensor;
 pub mod train;
 pub mod util;
@@ -33,6 +34,10 @@ pub mod prelude {
     pub use crate::nn::{Activation, Network, NetworkConfig};
     pub use crate::optim::{OptimConfig, OptimizerKind};
     pub use crate::sampling::{Method, SamplerConfig};
+    pub use crate::serve::{
+        load_snapshot, save_snapshot, InferenceWorkspace, ModelSnapshot, PoolConfig, ServePool,
+        SparseInferenceEngine,
+    };
     pub use crate::tensor::{Batch, BatchPlane, Matrix};
     pub use crate::train::{
         run_asgd, train_batch, AsgdConfig, BatchWorkspace, TrainConfig, Trainer,

@@ -45,6 +45,29 @@ impl AlshMips {
         self.max_norm
     }
 
+    /// Borrow the underlying SRP family (snapshot serialization reads the
+    /// raw projection directions from here).
+    pub fn srp(&self) -> &SrpHash {
+        &self.srp
+    }
+
+    /// Reassemble from serialized parts. `max_norm` is the *stored* scaling
+    /// constant M (headroom already applied at original build time — do not
+    /// reapply it), and `srp` must hash the (dim+1)-dimensional embedding.
+    pub fn from_parts(dim: usize, max_norm: f32, srp: SrpHash) -> Result<Self, String> {
+        if srp.dim() != dim + 1 {
+            return Err(format!(
+                "ALSH projections hash dim {} but expected embedded dim {}",
+                srp.dim(),
+                dim + 1
+            ));
+        }
+        if !(max_norm > 0.0 && max_norm.is_finite()) {
+            return Err(format!("invalid ALSH scaling constant M = {max_norm}"));
+        }
+        Ok(AlshMips { srp, dim, max_norm })
+    }
+
     /// Does a data vector with this norm still fit under M?
     #[inline]
     pub fn fits(&self, data_norm: f32) -> bool {

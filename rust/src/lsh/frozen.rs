@@ -1,0 +1,264 @@
+//! Frozen (read-only) LSH table views for concurrent inference serving.
+//!
+//! Training-time [`LayerTables`] interleave probing with mutation and keep
+//! their scratch buffers inline, so a query takes `&mut self` and the
+//! caller's RNG — fine for one trainer thread, unusable for a serving pool
+//! where N workers probe the same tables at once. A [`FrozenLayerTables`]
+//! is the immutable split: buckets + hash family shared behind an `Arc`,
+//! with every per-query buffer moved into a per-thread
+//! [`FrozenQueryScratch`] (the same reuse discipline as the batched
+//! selection path's `query_prehashed` probe buffers).
+//!
+//! **Determinism contract:** serving results must not depend on worker
+//! count or request interleaving (pinned by `tests/serve.rs`). The two
+//! places training-time queries consume caller RNG — crowded-bucket
+//! reservoir sub-sampling and the empty-result fallback — instead draw
+//! from a private RNG seeded from the query's own fingerprints, so any
+//! worker computes bit-identical active sets for the same input while
+//! distinct queries still sample crowded buckets differently.
+
+use crate::lsh::alsh::AlshMips;
+use crate::lsh::family::LshFamily;
+use crate::lsh::layered::{probe_and_rank, LayerTables, LshConfig, ProbeScratch};
+use crate::lsh::multiprobe::ProbeGen;
+use crate::lsh::table::HashTable;
+use crate::util::rng::{splitmix64, Pcg64};
+
+/// Immutable per-layer (K, L) table stack. All fields are plain data, so
+/// the struct is `Send + Sync` and can be shared across worker threads
+/// behind an `Arc` without locks.
+pub struct FrozenLayerTables {
+    cfg: LshConfig,
+    family: AlshMips,
+    tables: Vec<HashTable>,
+    n_nodes: usize,
+}
+
+/// Per-thread query workspace: fingerprints, membership stamps, collision
+/// counts, probe generators and the candidate union. One instance per
+/// serving worker, reused across every query and every layer (buffers grow
+/// to the widest layer and stay there).
+#[derive(Default)]
+pub struct FrozenQueryScratch {
+    stamp: Vec<u32>,
+    counts: Vec<u8>,
+    query_epoch: u32,
+    fps: Vec<u32>,
+    candidates: Vec<u32>,
+    probe_scratch: Vec<u32>,
+    gens: Vec<ProbeGen>,
+}
+
+impl FrozenQueryScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fingerprints of the most recent query (one per table).
+    pub fn fingerprints(&self) -> &[u32] {
+        &self.fps
+    }
+}
+
+impl FrozenLayerTables {
+    /// Clone a live training table stack into a frozen view (scratch state
+    /// is not carried over — it belongs to the query side now).
+    pub fn freeze(live: &LayerTables) -> Self {
+        FrozenLayerTables {
+            cfg: live.config(),
+            family: live.family().clone(),
+            tables: live.tables().to_vec(),
+            n_nodes: live.n_nodes(),
+        }
+    }
+
+    /// Reassemble from snapshot parts, validating table count against the
+    /// config and every table against `n_nodes`.
+    pub fn from_parts(
+        cfg: LshConfig,
+        family: AlshMips,
+        tables: Vec<HashTable>,
+        n_nodes: usize,
+    ) -> Result<Self, String> {
+        if tables.len() != cfg.l {
+            return Err(format!("expected {} tables, got {}", cfg.l, tables.len()));
+        }
+        for (t, table) in tables.iter().enumerate() {
+            if table.k() != cfg.k {
+                return Err(format!("table {t} has K={}, config says {}", table.k(), cfg.k));
+            }
+            if table.node_fingerprints().len() != n_nodes {
+                return Err(format!(
+                    "table {t} capacity {} != {n_nodes} nodes",
+                    table.node_fingerprints().len()
+                ));
+            }
+        }
+        Ok(FrozenLayerTables { cfg, family, tables, n_nodes })
+    }
+
+    pub fn config(&self) -> LshConfig {
+        self.cfg
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.n_nodes
+    }
+
+    pub fn family(&self) -> &AlshMips {
+        &self.family
+    }
+
+    pub fn tables(&self) -> &[HashTable] {
+        &self.tables
+    }
+
+    /// Multiplications one query spends on hashing: K·L inner products of
+    /// the (dim+1)-dimensional ALSH embedding — same accounting as the
+    /// training-time selector.
+    pub fn hash_mults(&self) -> u64 {
+        (self.cfg.k * self.cfg.l * (self.family.dim() + 1)) as u64
+    }
+
+    /// Probe + rank the active set for query `q` into `out` (at most
+    /// `budget` ids). Returns the hashing multiplication cost. Identical
+    /// collect/rank semantics to [`LayerTables::query_prehashed`]; RNG for
+    /// crowded buckets is derived from the fingerprints (see module docs).
+    pub fn query(
+        &self,
+        q: &[f32],
+        budget: usize,
+        scratch: &mut FrozenQueryScratch,
+        out: &mut Vec<u32>,
+    ) -> u64 {
+        out.clear();
+        scratch.fps.clear();
+        scratch.fps.resize(self.cfg.l, 0);
+        self.family.hash_query(q, &mut scratch.fps);
+        if budget == 0 || self.n_nodes == 0 {
+            return self.hash_mults();
+        }
+        let mut rng = self.derived_rng(&scratch.fps);
+        // Same collect + counting-select core as the training-time
+        // `LayerTables::query_prehashed` — one implementation, so training
+        // and serving can never disagree on the ranking algorithm.
+        let FrozenQueryScratch {
+            stamp,
+            counts,
+            query_epoch,
+            fps,
+            candidates,
+            probe_scratch,
+            gens,
+        } = scratch;
+        probe_and_rank(ProbeScratch {
+            cfg: self.cfg,
+            tables: &self.tables,
+            n_nodes: self.n_nodes,
+            fps,
+            budget,
+            stamp,
+            counts,
+            query_epoch,
+            gens,
+            probe_scratch,
+            candidates,
+            rng: &mut rng,
+            out,
+        });
+        if out.is_empty() {
+            // Hash miss (rare, small layers): deterministic fallback so the
+            // forward pass always has nodes to fire — mirrors the training
+            // selector's guard but stays worker-order independent.
+            out.extend(rng.sample_indices(self.n_nodes, budget.min(4)));
+        }
+        self.hash_mults()
+    }
+
+    /// Private per-query RNG: fingerprint-derived, so identical queries get
+    /// identical sampling decisions on every worker.
+    fn derived_rng(&self, fps: &[u32]) -> Pcg64 {
+        let mut acc = 0x5EED_F0E1_7AB1_E5u64;
+        for &fp in fps {
+            acc ^= fp as u64;
+            acc = splitmix64(&mut acc);
+        }
+        Pcg64::new(acc, 0xF07E_11)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matrix::Matrix;
+
+    fn live_tables(n: usize, d: usize, seed: u64, cfg: LshConfig) -> (Matrix, LayerTables) {
+        let mut rng = Pcg64::seeded(seed);
+        let w = Matrix::from_fn(n, d, |_, _| rng.gaussian() * 0.3);
+        let lt = LayerTables::build(&w, cfg, &mut rng);
+        (w, lt)
+    }
+
+    #[test]
+    fn frozen_query_matches_live_when_rng_is_unused() {
+        // With no crowded buckets and non-empty results, the training-time
+        // query never touches its RNG, so the frozen path must reproduce it
+        // exactly.
+        let cfg = LshConfig { k: 6, l: 5, ..Default::default() };
+        let (_, mut live) = live_tables(120, 16, 3, cfg);
+        let frozen = FrozenLayerTables::freeze(&live);
+        let mut scratch = FrozenQueryScratch::new();
+        let mut rng = Pcg64::seeded(99);
+        for t in 0..10 {
+            let q: Vec<f32> = (0..16).map(|j| ((t * 16 + j) as f32 * 0.23).sin()).collect();
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            live.query(&q, 12, &mut rng, &mut a);
+            frozen.query(&q, 12, &mut scratch, &mut b);
+            assert_eq!(a, b, "query {t}");
+        }
+    }
+
+    #[test]
+    fn frozen_query_is_reproducible_across_scratches() {
+        let cfg = LshConfig { k: 4, l: 6, ..Default::default() };
+        let (_, live) = live_tables(300, 24, 7, cfg);
+        let frozen = FrozenLayerTables::freeze(&live);
+        let q: Vec<f32> = (0..24).map(|j| (j as f32 * 0.31).cos()).collect();
+        let mut s1 = FrozenQueryScratch::new();
+        let mut s2 = FrozenQueryScratch::new();
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        frozen.query(&q, 30, &mut s1, &mut a);
+        // Interleave an unrelated query on s2 first: results must not
+        // depend on scratch history.
+        let other: Vec<f32> = (0..24).map(|j| (j as f32 * 0.77).sin()).collect();
+        let mut tmp = Vec::new();
+        frozen.query(&other, 30, &mut s2, &mut tmp);
+        frozen.query(&q, 30, &mut s2, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn freeze_preserves_buckets_and_family() {
+        let cfg = LshConfig::default();
+        let (_, live) = live_tables(80, 12, 11, cfg);
+        let frozen = FrozenLayerTables::freeze(&live);
+        assert_eq!(frozen.tables(), live.tables());
+        assert_eq!(frozen.family().max_norm(), live.family().max_norm());
+        assert_eq!(frozen.n_nodes(), 80);
+    }
+
+    #[test]
+    fn from_parts_validates_shape() {
+        let cfg = LshConfig { k: 6, l: 5, ..Default::default() };
+        let (_, live) = live_tables(40, 8, 13, cfg);
+        let ok = FrozenLayerTables::from_parts(
+            cfg,
+            live.family().clone(),
+            live.tables().to_vec(),
+            40,
+        );
+        assert!(ok.is_ok());
+        let short = live.tables()[..4].to_vec();
+        assert!(FrozenLayerTables::from_parts(cfg, live.family().clone(), short, 40).is_err());
+    }
+}

@@ -168,63 +168,33 @@ impl LayerTables {
         if budget == 0 || self.n_nodes == 0 {
             return;
         }
-        self.query_epoch = self.query_epoch.wrapping_add(1);
-        if self.query_epoch == 0 {
-            // Stamp wrap: reset (happens once per 2^32 queries).
-            self.stamp.iter_mut().for_each(|s| *s = u32::MAX);
-            self.query_epoch = 1;
-        }
-        let Self { cfg, tables, stamp, counts, query_epoch, candidates, probe_scratch, gens, .. } =
-            self;
-        candidates.clear();
-        // Round-robin probe depth across tables: probe the home bucket of
-        // every table first, then distance-1 buckets, etc., so the union is
-        // balanced across tables.
-        if gens.len() < fps.len() {
-            gens.resize_with(fps.len(), ProbeGen::idle);
-        }
-        for (g, &fp) in gens.iter_mut().zip(fps) {
-            g.reset(fp, cfg.k, cfg.probes_per_table);
-        }
-        for _depth in 0..cfg.probes_per_table {
-            let mut any = false;
-            for (ti, g) in gens.iter_mut().take(fps.len()).enumerate() {
-                let Some(addr) = g.next() else { continue };
-                any = true;
-                probe_scratch.clear();
-                tables[ti].probe_into(addr, cfg.crowded_limit, rng, probe_scratch);
-                for &id in probe_scratch.iter() {
-                    if stamp[id as usize] != *query_epoch {
-                        stamp[id as usize] = *query_epoch;
-                        counts[id as usize] = 1;
-                        candidates.push(id);
-                    } else {
-                        counts[id as usize] = counts[id as usize].saturating_add(1);
-                    }
-                }
-            }
-            if !any {
-                break;
-            }
-        }
-
-        if candidates.len() <= budget {
-            out.extend_from_slice(candidates);
-            return;
-        }
-        // Counting-select: take candidates by descending multiplicity.
-        let max_count =
-            candidates.iter().map(|&id| counts[id as usize]).max().unwrap_or(1);
-        for want in (1..=max_count).rev() {
-            for &id in candidates.iter() {
-                if counts[id as usize] == want {
-                    out.push(id);
-                    if out.len() >= budget {
-                        return;
-                    }
-                }
-            }
-        }
+        let Self {
+            cfg,
+            tables,
+            n_nodes,
+            stamp,
+            counts,
+            query_epoch,
+            candidates,
+            probe_scratch,
+            gens,
+            ..
+        } = self;
+        probe_and_rank(ProbeScratch {
+            cfg: *cfg,
+            tables,
+            n_nodes: *n_nodes,
+            fps,
+            budget,
+            stamp,
+            counts,
+            query_epoch,
+            gens,
+            probe_scratch,
+            candidates,
+            rng,
+            out,
+        });
     }
 
     /// Re-hash a set of updated nodes (after a gradient step touched their
@@ -266,6 +236,115 @@ impl LayerTables {
     /// Borrow the underlying ALSH family (for equivalence tests).
     pub fn family(&self) -> &AlshMips {
         &self.family
+    }
+
+    /// Read-only view of the per-table bucket structures — what the frozen
+    /// serving view and snapshot serialization consume.
+    pub fn tables(&self) -> &[HashTable] {
+        &self.tables
+    }
+}
+
+/// Everything one probe-and-rank pass needs: the immutable table state,
+/// the query, and every scratch buffer — bundled so the training-time
+/// (`&mut LayerTables`) and frozen serving (`&FrozenLayerTables` +
+/// external per-thread scratch) paths share one implementation instead of
+/// two drifting copies.
+pub(crate) struct ProbeScratch<'a> {
+    pub cfg: LshConfig,
+    pub tables: &'a [HashTable],
+    pub n_nodes: usize,
+    pub fps: &'a [u32],
+    pub budget: usize,
+    pub stamp: &'a mut Vec<u32>,
+    pub counts: &'a mut Vec<u8>,
+    pub query_epoch: &'a mut u32,
+    pub gens: &'a mut Vec<ProbeGen>,
+    pub probe_scratch: &'a mut Vec<u32>,
+    pub candidates: &'a mut Vec<u32>,
+    pub rng: &'a mut Pcg64,
+    pub out: &'a mut Vec<u32>,
+}
+
+/// The collect + counting-select core behind every table query (see
+/// [`LayerTables::query`] for the algorithm description). Callers clear
+/// `out` and handle the `budget == 0` / empty-table guards; this fills
+/// `out` with at most `budget` distinct node ids.
+pub(crate) fn probe_and_rank(s: ProbeScratch<'_>) {
+    let ProbeScratch {
+        cfg,
+        tables,
+        n_nodes,
+        fps,
+        budget,
+        stamp,
+        counts,
+        query_epoch,
+        gens,
+        probe_scratch,
+        candidates,
+        rng,
+        out,
+    } = s;
+    // Lazy sizing: the training tables pre-size these at build, the frozen
+    // per-thread scratch grows to the widest layer it has served.
+    if stamp.len() < n_nodes {
+        stamp.resize(n_nodes, 0);
+        counts.resize(n_nodes, 0);
+    }
+    *query_epoch = query_epoch.wrapping_add(1);
+    if *query_epoch == 0 {
+        // Stamp wrap: reset (happens once per 2^32 queries).
+        stamp.iter_mut().for_each(|v| *v = u32::MAX);
+        *query_epoch = 1;
+    }
+    candidates.clear();
+    // Round-robin probe depth across tables: probe the home bucket of
+    // every table first, then distance-1 buckets, etc., so the union is
+    // balanced across tables.
+    if gens.len() < fps.len() {
+        gens.resize_with(fps.len(), ProbeGen::idle);
+    }
+    for (g, &fp) in gens.iter_mut().zip(fps) {
+        g.reset(fp, cfg.k, cfg.probes_per_table);
+    }
+    for _depth in 0..cfg.probes_per_table {
+        let mut any = false;
+        for (ti, g) in gens.iter_mut().take(fps.len()).enumerate() {
+            let Some(addr) = g.next() else { continue };
+            any = true;
+            probe_scratch.clear();
+            tables[ti].probe_into(addr, cfg.crowded_limit, rng, probe_scratch);
+            for &id in probe_scratch.iter() {
+                if stamp[id as usize] != *query_epoch {
+                    stamp[id as usize] = *query_epoch;
+                    counts[id as usize] = 1;
+                    candidates.push(id);
+                } else {
+                    counts[id as usize] = counts[id as usize].saturating_add(1);
+                }
+            }
+        }
+        if !any {
+            break;
+        }
+    }
+
+    if candidates.len() <= budget {
+        out.extend_from_slice(candidates);
+        return;
+    }
+    // Counting-select: take candidates by descending multiplicity.
+    let max_count = candidates.iter().map(|&id| counts[id as usize]).max().unwrap_or(1);
+    for want in (1..=max_count).rev() {
+        for &id in candidates.iter() {
+            if counts[id as usize] == want {
+                out.push(id);
+                if out.len() >= budget {
+                    return;
+                }
+            }
+        }
     }
 }
 

@@ -5,6 +5,7 @@
 
 pub mod alsh;
 pub mod family;
+pub mod frozen;
 pub mod layered;
 pub mod multiprobe;
 pub mod sparse_proj;
@@ -13,6 +14,7 @@ pub mod table;
 
 pub use alsh::AlshMips;
 pub use family::LshFamily;
+pub use frozen::{FrozenLayerTables, FrozenQueryScratch};
 pub use layered::{LayerTables, LshConfig};
 pub use sparse_proj::SparseSrpHash;
 pub use srp::SrpHash;

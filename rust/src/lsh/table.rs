@@ -11,7 +11,7 @@ use crate::util::rng::Pcg64;
 /// safely ignored or sub-sampled").
 pub const DEFAULT_CROWDED_LIMIT: usize = 128;
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct HashTable {
     k: usize,
     /// Dense array of 2^K buckets (K ≤ 16 keeps this small; for K up to 32
@@ -133,6 +133,61 @@ impl HashTable {
     pub fn bucket_sizes(&self) -> Vec<usize> {
         self.buckets.iter().map(|b| b.len()).collect()
     }
+
+    /// Read-only view of the bucket arrays (frozen-snapshot serialization
+    /// and the lock-free serving probes read these directly).
+    pub fn buckets(&self) -> &[Vec<u32>] {
+        &self.buckets
+    }
+
+    /// Per-node stored fingerprint, `u32::MAX` = not present. Length is the
+    /// table capacity.
+    pub fn node_fingerprints(&self) -> &[u32] {
+        &self.node_fp
+    }
+
+    /// Reconstruct a table from serialized parts, preserving the exact
+    /// in-bucket ordering (which matters: probe collection order breaks
+    /// ranking ties). Validates the bucket/fingerprint cross-invariants so
+    /// a corrupt snapshot fails loudly instead of probing garbage.
+    pub fn from_parts(
+        k: usize,
+        node_fp: Vec<u32>,
+        buckets: Vec<Vec<u32>>,
+    ) -> Result<Self, String> {
+        if k > 16 {
+            return Err(format!("hash table K={k} out of range (max 16)"));
+        }
+        if buckets.len() != 1 << k {
+            return Err(format!("expected {} buckets for K={k}, got {}", 1 << k, buckets.len()));
+        }
+        let mask = |fp: u32| (fp as usize) & ((1usize << k) - 1);
+        let mut len = 0usize;
+        let mut seen = vec![false; node_fp.len()];
+        for (b, bucket) in buckets.iter().enumerate() {
+            for &id in bucket {
+                let fp = *node_fp
+                    .get(id as usize)
+                    .ok_or_else(|| format!("bucket id {id} out of capacity"))?;
+                if fp == u32::MAX {
+                    return Err(format!("node {id} in a bucket but marked absent"));
+                }
+                if mask(fp) != b {
+                    return Err(format!("node {id} fingerprint maps to bucket {}, stored in {b}", mask(fp)));
+                }
+                if seen[id as usize] {
+                    return Err(format!("node {id} appears in two buckets"));
+                }
+                seen[id as usize] = true;
+                len += 1;
+            }
+        }
+        let present = node_fp.iter().filter(|&&fp| fp != u32::MAX).count();
+        if present != len {
+            return Err(format!("{present} fingerprints but {len} bucket entries"));
+        }
+        Ok(HashTable { k, buckets, node_fp, len })
+    }
 }
 
 #[cfg(test)]
@@ -226,6 +281,34 @@ mod tests {
         let mut t = HashTable::new(4, 4);
         t.insert(0, 0xFFFF_FFF0); // low 4 bits = 0
         assert_eq!(t.bucket(0x0000_0000), &[0]);
+    }
+
+    #[test]
+    fn from_parts_roundtrip_preserves_order() {
+        let mut t = HashTable::new(4, 16);
+        for id in 0..12 {
+            t.insert(id, (id * 7) % 16);
+        }
+        t.remove(5);
+        t.update(3, 0b1111); // force some swap-remove reordering
+        let back = HashTable::from_parts(
+            t.k(),
+            t.node_fingerprints().to_vec(),
+            t.buckets().to_vec(),
+        )
+        .unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn from_parts_rejects_inconsistencies() {
+        let mut t = HashTable::new(2, 4);
+        t.insert(0, 0b01);
+        let mut bad_buckets = t.buckets().to_vec();
+        bad_buckets[0].push(0); // node 0 duplicated into the wrong bucket
+        assert!(HashTable::from_parts(2, t.node_fingerprints().to_vec(), bad_buckets).is_err());
+        assert!(HashTable::from_parts(2, t.node_fingerprints().to_vec(), vec![Vec::new(); 3])
+            .is_err());
     }
 
     #[test]

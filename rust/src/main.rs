@@ -3,7 +3,8 @@
 //! Subcommands:
 //!   gen-data     synthesize a benchmark dataset to a binary file
 //!   train        train one configuration (sequential or ASGD)
-//!   eval         evaluate a saved model on a dataset
+//!   eval         evaluate a saved model on a dataset (dense or --sparse)
+//!   serve-bench  closed-loop serving benchmark (dense vs sparse, 1..N workers)
 //!   experiment   regenerate a paper table/figure (table3|fig4|fig5|fig6|fig7|fig8)
 //!   std-pjrt     run the dense STD baseline through the PJRT artifacts
 
@@ -13,12 +14,19 @@ use hashdl::nn::activation::Activation;
 use hashdl::nn::network::{Network, NetworkConfig};
 use hashdl::optim::{OptimConfig, OptimizerKind};
 use hashdl::sampling::{Method, SamplerConfig};
+use hashdl::serve::bench::{mult_fraction, throughput_scaling, write_bench_json, BenchConfig};
+use hashdl::serve::pool::PoolConfig;
+use hashdl::serve::{
+    load_snapshot, run_closed_loop, save_snapshot, InferenceWorkspace, ModelSnapshot,
+    SparseInferenceEngine,
+};
 use hashdl::train::asgd::{run_asgd, AsgdConfig};
 use hashdl::train::trainer::{TrainConfig, Trainer};
 use hashdl::util::argparse::{Args, Parser};
 use hashdl::util::config::Config;
 use hashdl::util::rng::Pcg64;
 use std::path::{Path, PathBuf};
+use std::time::Duration;
 
 /// Effective option value with three-layer precedence: an explicit CLI
 /// flag wins, then a `[train]` config-file key, then the flag's declared
@@ -56,6 +64,7 @@ fn main() {
         "gen-data" => cmd_gen_data(args),
         "train" => cmd_train(args),
         "eval" => cmd_eval(args),
+        "serve-bench" => cmd_serve_bench(args),
         "experiment" => cmd_experiment(args),
         "std-pjrt" => cmd_std_pjrt(args),
         "--help" | "-h" | "help" => {
@@ -80,12 +89,18 @@ USAGE: hashdl <subcommand> [flags]
               [--hidden <h>] [--depth <d>] [--config <file.conf>]
               [--lr <f>] [--optimizer <sgd|momentum|adagrad|momentum-adagrad>]
               [--k <bits>] [--tables <L>] [--save <model.bin>]
-  eval        --model <model.bin> --dataset <..> [--n <N>]
+  eval        --model <model.bin> --dataset <..> [--n <N>] [--batch-size <B>]
+              [--sparse]   (serve through the snapshot's frozen LSH tables)
+  serve-bench [--dataset <..>] [--model <snap.bin>] [--requests <N>]
+              [--workers 1,4] [--modes dense,sparse] [--batch-cap <B>]
+              [--deadline-us <t>] [--sparsity <f>] [--out BENCH_serve.json]
   experiment  <table3|fig4|fig5|fig6|fig7|fig8> [--scale quick|medium|paper]
               [--datasets a,b] [--out-dir results/]
   std-pjrt    --variant <tiny|mnist|norb|convex|rectangles> [--epochs e] [--lr f]
               [--artifacts dir]
 
+`train --save` writes a v2 serving snapshot (weights + frozen LSH tables);
+`eval` and `serve-bench` load both v2 snapshots and legacy v1 model files.
 Run any subcommand with --help for full flags.";
 
 fn parse_benchmark(name: &str) -> Benchmark {
@@ -215,7 +230,10 @@ fn cmd_train(rest: Vec<String>) -> i32 {
     let eval_cap = a.parse_or("eval-cap", 2000usize);
     let verbose = !a.has("quiet");
 
-    let (record, final_net) = if threads > 1 {
+    // Snapshots clone the net (and freeze tables), so only build one when
+    // the run actually saves.
+    let saving = a.get("save").filter(|s| !s.is_empty()).is_some();
+    let (record, snapshot) = if threads > 1 {
         let out = run_asgd(
             net,
             &train,
@@ -232,14 +250,19 @@ fn cmd_train(rest: Vec<String>) -> i32 {
                 ..Default::default()
             },
         );
-        (out.record, out.net)
+        // ASGD workers each own per-thread tables over the shared weights;
+        // none is canonical, so ship a table-less snapshot that rebuilds
+        // deterministically on load.
+        let snap = saving.then(|| ModelSnapshot::without_tables(out.net, sampler, seed));
+        (out.record, snap)
     } else {
         let mut t = Trainer::new(
             net,
             TrainConfig { epochs, batch_size, optim, sampler, seed, eval_cap, verbose },
         );
         let rec = t.run(&train, &test);
-        (rec, t.net)
+        let snap = saving.then(|| t.snapshot());
+        (rec, snap)
     };
 
     println!("{}", record.to_csv());
@@ -250,24 +273,30 @@ fn cmd_train(rest: Vec<String>) -> i32 {
         record.total_secs()
     );
     if let Some(path) = a.get("save").filter(|s| !s.is_empty()) {
-        if let Err(e) = hashdl::data::io::save_network(&final_net, Path::new(path)) {
+        let snapshot = snapshot.expect("snapshot built whenever --save is set");
+        if let Err(e) = save_snapshot(&snapshot, Path::new(path)) {
             eprintln!("error saving model: {e}");
             return 1;
         }
-        eprintln!("saved model to {path}");
+        eprintln!(
+            "saved serving snapshot to {path} ({})",
+            if snapshot.tables.is_some() { "with frozen LSH tables" } else { "weights only" }
+        );
     }
     0
 }
 
 fn cmd_eval(rest: Vec<String>) -> i32 {
     let p = Parser::new("hashdl eval", "evaluate a saved model")
-        .opt_req("model", "model.bin path")
+        .opt_req("model", "model path (v1 weights or v2 serving snapshot)")
         .opt_req("dataset", "benchmark name")
         .opt("n", "2000", "test samples to generate")
-        .opt("seed", "43", "generator seed");
+        .opt("seed", "43", "generator seed")
+        .opt("batch-size", "64", "dense evaluation minibatch size")
+        .flag("sparse", "serve through the frozen LSH tables (sparse inference)");
     let a = p.parse_rest(rest);
-    let net = match hashdl::data::io::load_network(Path::new(a.get("model").unwrap_or_default())) {
-        Ok(n) => n,
+    let snap = match load_snapshot(Path::new(a.get("model").unwrap_or_default())) {
+        Ok(s) => s,
         Err(e) => {
             eprintln!("error: {e}");
             return 1;
@@ -275,8 +304,183 @@ fn cmd_eval(rest: Vec<String>) -> i32 {
     };
     let b = parse_benchmark(a.get("dataset").unwrap_or_default());
     let (test, _) = b.generate(a.parse_or("n", 2000usize), 1, a.parse_or("seed", 43u64));
-    let (loss, acc) = net.evaluate(&test.xs, &test.ys);
-    println!("loss {loss:.4} accuracy {acc:.4} on {} samples of {}", test.len(), b.name());
+    if a.has("sparse") {
+        let engine = SparseInferenceEngine::from_snapshot(snap);
+        let mut ws = InferenceWorkspace::new(&engine);
+        let s = engine.evaluate(&test.xs, &test.ys, &mut ws);
+        let dense_budget = engine.dense_mults_per_request() * test.len() as u64;
+        println!(
+            "loss {:.4} accuracy {:.4} on {} samples of {} | sparse mults {:.3e} \
+             ({:.1}% of dense) | active fraction {:.3}",
+            s.loss,
+            s.acc,
+            test.len(),
+            b.name(),
+            s.mults.total() as f64,
+            100.0 * s.mults.total() as f64 / dense_budget.max(1) as f64,
+            s.active_fraction,
+        );
+    } else {
+        let batch_size = a.parse_or("batch-size", 64usize).max(1);
+        let (loss, acc) = snap.net.evaluate_batched(&test.xs, &test.ys, batch_size);
+        println!(
+            "loss {loss:.4} accuracy {acc:.4} on {} samples of {} (batch {batch_size})",
+            test.len(),
+            b.name()
+        );
+    }
+    0
+}
+
+fn cmd_serve_bench(rest: Vec<String>) -> i32 {
+    let p = Parser::new("hashdl serve-bench", "closed-loop serving benchmark (dense vs sparse)")
+        .opt("dataset", "mnist", "benchmark supplying the request stream")
+        .opt("model", "", "serve this snapshot instead of quick-training one")
+        .opt("train-size", "2000", "quick-train samples (ignored with --model)")
+        .opt("epochs", "1", "quick-train epochs (ignored with --model)")
+        .opt("hidden", "1000", "hidden width (ignored with --model)")
+        .opt("depth", "2", "hidden layers (ignored with --model)")
+        .opt("lr", "0.01", "quick-train learning rate")
+        .opt("sparsity", "0.05", "active-node fraction (snapshot value unless explicit)")
+        .opt("requests", "2000", "requests per benchmark case")
+        .opt("workers", "1,4", "worker-thread counts to sweep")
+        .opt("clients", "0", "closed-loop client threads (0 = 2x workers)")
+        .opt("batch-cap", "32", "micro-batch size cap")
+        .opt("deadline-us", "200", "micro-batch close deadline (microseconds)")
+        .opt("queue-cap", "1024", "bounded request-queue capacity")
+        .opt("modes", "dense,sparse", "comma-separated modes to run")
+        .opt("seed", "42", "run seed")
+        .opt("out", "BENCH_serve.json", "JSON output path");
+    let a = p.parse_rest(rest);
+    let b = parse_benchmark(a.get("dataset").unwrap_or_default());
+    let seed = a.parse_or("seed", 42u64);
+    let n_requests = a.parse_or("requests", 2000usize).max(1);
+    let sparsity = a.parse_or("sparsity", 0.05f32);
+
+    // Request stream: a held-out test split (also gives accuracy labels).
+    let stream_len = n_requests.min(2000);
+    let (train, stream) =
+        b.generate(a.parse_or("train-size", 2000usize), stream_len, seed);
+
+    let mut snap = match a.get("model").filter(|s| !s.is_empty()) {
+        Some(path) => match load_snapshot(Path::new(path)) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        },
+        None => {
+            // Quick-train an LSH model so the tables reflect real weights.
+            let net = Network::new(
+                &NetworkConfig {
+                    n_in: b.dim(),
+                    hidden: vec![a.parse_or("hidden", 1000usize); a.parse_or("depth", 2usize)],
+                    n_out: b.n_classes(),
+                    act: Activation::ReLU,
+                },
+                &mut Pcg64::seeded(seed),
+            );
+            eprintln!(
+                "quick-training a {} parameter LSH model ({} samples, {} epochs)...",
+                net.n_params(),
+                train.len(),
+                a.parse_or("epochs", 1usize)
+            );
+            let mut t = Trainer::new(
+                net,
+                TrainConfig {
+                    epochs: a.parse_or("epochs", 1usize).max(1),
+                    batch_size: 32,
+                    optim: OptimConfig { lr: a.parse_or("lr", 0.01f32), ..Default::default() },
+                    sampler: SamplerConfig::with_method(Method::Lsh, sparsity),
+                    seed,
+                    eval_cap: 500,
+                    verbose: false,
+                },
+            );
+            t.run(&train, &stream);
+            t.snapshot()
+        }
+    };
+    if a.set_explicitly("sparsity") {
+        snap.sampler.sparsity = sparsity;
+    }
+    let engine = SparseInferenceEngine::from_snapshot(snap);
+    let net_desc: String = {
+        let mut dims = vec![engine.net().n_in().to_string()];
+        dims.extend(engine.net().layers.iter().map(|l| l.n_out().to_string()));
+        dims.join("-")
+    };
+    let dense_per_req = engine.dense_mults_per_request();
+
+    let worker_counts: Vec<usize> =
+        a.list("workers").iter().map(|w| w.parse().unwrap_or(1).max(1)).collect();
+    let worker_counts = if worker_counts.is_empty() { vec![1, 4] } else { worker_counts };
+    // Validate the mode list up front: a typo must fail fast, not abort a
+    // sweep that already burned minutes of benchmarking.
+    let mut sparse_flags = Vec::new();
+    for mode in a.list("modes") {
+        match mode.as_str() {
+            "sparse" => sparse_flags.push(true),
+            "dense" => sparse_flags.push(false),
+            other => {
+                eprintln!("unknown mode {other:?} (dense|sparse)");
+                return 2;
+            }
+        }
+    }
+    let mut results = Vec::new();
+    for &sparse in &sparse_flags {
+        for &workers in &worker_counts {
+            let cfg = BenchConfig {
+                pool: PoolConfig {
+                    workers,
+                    queue_cap: a.parse_or("queue-cap", 1024usize).max(1),
+                    max_batch: a.parse_or("batch-cap", 32usize).max(1),
+                    batch_deadline: Duration::from_micros(a.parse_or("deadline-us", 200u64)),
+                    sparse,
+                },
+                clients: a.parse_or("clients", 0usize),
+                requests: n_requests,
+            };
+            let r = run_closed_loop(&engine, &stream.xs, &stream.ys, &cfg);
+            println!(
+                "{:>6} w={:<2} {:>9.0} req/s  p50 {:>6}us  p99 {:>6}us  \
+                 {:>10.0} mults/req ({:>5.1}% of dense)  batch {:>5.2}  acc {:.3}",
+                r.mode,
+                r.workers,
+                r.requests_per_sec,
+                r.p50_micros,
+                r.p99_micros,
+                r.mults_per_request,
+                100.0 * r.mults_per_request / dense_per_req.max(1) as f64,
+                r.mean_batch,
+                r.accuracy,
+            );
+            results.push(r);
+        }
+    }
+    let frac = mult_fraction(&results, dense_per_req);
+    if results.iter().any(|r| r.mode == "sparse") {
+        println!(
+            "sparse serving uses {:.1}% of dense multiplications; throughput scaling \
+             {}→{} workers: dense {:.2}x, sparse {:.2}x",
+            100.0 * frac,
+            worker_counts.iter().min().unwrap_or(&1),
+            worker_counts.iter().max().unwrap_or(&1),
+            throughput_scaling(&results, "dense"),
+            throughput_scaling(&results, "sparse"),
+        );
+    }
+    let out = PathBuf::from(a.get_or("out", "BENCH_serve.json"));
+    match write_bench_json(&out, &net_desc, engine.shared().sparsity, dense_per_req, &results) {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => {
+            eprintln!("error writing {}: {e}", out.display());
+            return 1;
+        }
+    }
     0
 }
 

@@ -105,6 +105,21 @@ impl Layer {
         mults
     }
 
+    /// Inference-only forward over *every* output node from a (possibly
+    /// sparse) input, writing plain activations — no SparseVec index
+    /// bookkeeping, no gradient state. This is the serving engine's output
+    /// layer: always fully active, so carrying an active-set index array
+    /// per request is pure overhead. Returns multiplications performed.
+    pub fn forward_all(&self, input: LayerInput<'_>, out: &mut Vec<f32>) -> u64 {
+        out.clear();
+        out.reserve(self.n_out());
+        for i in 0..self.n_out() {
+            let z = input.dot_row(self.w.row(i)) + self.b[i];
+            out.push(self.act.apply(z));
+        }
+        (self.n_out() * input.active_len()) as u64
+    }
+
     /// Pre-activations only (used by selectors that need z, e.g. adaptive
     /// dropout's affine-of-activation probabilities).
     pub fn preactivations_dense(&self, input: LayerInput<'_>, out: &mut Vec<f32>) -> u64 {
@@ -229,6 +244,19 @@ mod tests {
         assert_eq!(sparse.len(), 1);
         assert_eq!(sparse.idx, vec![1]);
         assert_eq!(mults, 4);
+    }
+
+    #[test]
+    fn forward_all_matches_sparse_full_active_set() {
+        let l = test_layer();
+        let x = [0.3, -0.2, 0.5, 0.1];
+        let active: Vec<u32> = (0..3).collect();
+        let mut sparse = SparseVec::new();
+        let m1 = l.forward_sparse(LayerInput::Dense(&x), &active, &mut sparse);
+        let mut all = Vec::new();
+        let m2 = l.forward_all(LayerInput::Dense(&x), &mut all);
+        assert_eq!(all, sparse.to_dense(3));
+        assert_eq!(m1, m2);
     }
 
     #[test]

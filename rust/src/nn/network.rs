@@ -70,6 +70,11 @@ impl Network {
         self.layers.last().expect("empty network").n_out()
     }
 
+    /// Input dimensionality (what serving requests must supply).
+    pub fn n_in(&self) -> usize {
+        self.layers.first().expect("empty network").n_in()
+    }
+
     /// Dense forward producing logits. Returns multiplications used.
     pub fn forward_dense(&self, x: &[f32], logits: &mut Vec<f32>) -> u64 {
         self.forward_dense_scaled(x, 1.0, logits)

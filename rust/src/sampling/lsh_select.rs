@@ -6,7 +6,7 @@
 use crate::lsh::layered::{LayerTables, LshConfig};
 use crate::nn::layer::Layer;
 use crate::nn::sparse::LayerInput;
-use crate::sampling::{budget, NodeSelector, SelectionCost};
+use crate::sampling::{budget, rerank_exact, NodeSelector, SelectionCost};
 use crate::util::rng::Pcg64;
 
 pub struct LshSelector {
@@ -59,20 +59,11 @@ fn rank_candidates(
     if cfg.rerank_factor > 1 {
         // Cheap re-ranking (§5.4): over-collect candidates, score them
         // exactly, keep the best `b`. Trades |C|·d extra mults for a
-        // strictly better active set.
+        // strictly better active set. Policy shared with the serving
+        // engine through `sampling::rerank_exact`.
         tables.query_prehashed(fps, b * cfg.rerank_factor, rng, out);
-        if out.len() > b {
-            let mut scored: Vec<(f32, u32)> = out
-                .iter()
-                .map(|&i| (crate::tensor::vecops::dot(layer.w.row(i as usize), q), i))
-                .collect();
-            extra_mults += (out.len() * layer.n_in()) as u64;
-            scored.sort_unstable_by(|a, b| {
-                b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal)
-            });
-            out.clear();
-            out.extend(scored.into_iter().take(b).map(|(_, i)| i));
-        }
+        let mut scored = Vec::new();
+        extra_mults += rerank_exact(layer, q, b, out, &mut scored);
     } else {
         tables.query_prehashed(fps, b, rng, out);
     }
@@ -205,6 +196,10 @@ impl NodeSelector for LshSelector {
 
     fn name(&self) -> &'static str {
         "LSH"
+    }
+
+    fn lsh_tables(&self) -> Option<&LayerTables> {
+        Some(&self.tables)
     }
 }
 

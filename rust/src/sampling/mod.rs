@@ -164,6 +164,13 @@ pub trait NodeSelector: Send {
     /// Called at epoch boundaries; selectors with drift (LSH) rebuild here.
     fn on_epoch_end(&mut self, _layer: &Layer, _epoch: usize, _rng: &mut Pcg64) {}
 
+    /// Borrow the live hash tables, if this selector maintains any. The
+    /// trainer's snapshot emission freezes these into the serving format
+    /// (`serve::snapshot`); non-LSH policies have nothing to ship.
+    fn lsh_tables(&self) -> Option<&crate::lsh::layered::LayerTables> {
+        None
+    }
+
     /// Human-readable policy name.
     fn name(&self) -> &'static str;
 }
@@ -195,6 +202,35 @@ pub fn make_selector(
 #[inline]
 pub fn budget(n: usize, sparsity: f32) -> usize {
     ((n as f32 * sparsity).round() as usize).clamp(1, n)
+}
+
+/// Cheap re-ranking (paper §5.4), shared by training-time selection
+/// ([`lsh_select`]) and the serving engine (`serve::engine`) so the
+/// operating point and cost accounting can never drift apart: score the
+/// over-collected `candidates` exactly against the densified query `q`,
+/// keep the best `budget`. Returns the extra multiplications
+/// (`|candidates| · n_in`); no-op (0) when the collection fits the budget.
+pub fn rerank_exact(
+    layer: &Layer,
+    q: &[f32],
+    budget: usize,
+    candidates: &mut Vec<u32>,
+    scored: &mut Vec<(f32, u32)>,
+) -> u64 {
+    if candidates.len() <= budget {
+        return 0;
+    }
+    scored.clear();
+    scored.extend(
+        candidates
+            .iter()
+            .map(|&i| (crate::tensor::vecops::dot(layer.w.row(i as usize), q), i)),
+    );
+    let extra = (candidates.len() * layer.n_in()) as u64;
+    scored.sort_unstable_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal));
+    candidates.clear();
+    candidates.extend(scored.iter().take(budget).map(|&(_, i)| i));
+    extra
 }
 
 #[cfg(test)]

@@ -1,0 +1,299 @@
+//! Closed-loop serving benchmark: drive a [`ServePool`] with N client
+//! threads, each submitting its next request only after the previous
+//! answer arrives (classic closed-loop load generation — offered load
+//! scales with worker speed, so throughput comparisons between dense and
+//! sparse modes are fair), then report requests/sec, latency percentiles
+//! (measured client-side, submit → response) and exact multiplication
+//! counts.
+
+use crate::serve::engine::SparseInferenceEngine;
+use crate::serve::pool::{PoolConfig, ServePool};
+use std::fmt::Write as _;
+use std::io;
+use std::path::Path;
+use std::sync::mpsc::channel;
+use std::time::Instant;
+
+/// Load-generator tunables on top of the pool's own config.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub pool: PoolConfig,
+    /// Closed-loop client threads (0 = 2× workers).
+    pub clients: usize,
+    /// Total requests to push through the pool.
+    pub requests: usize,
+}
+
+/// One benchmark run's results.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub mode: &'static str,
+    pub workers: usize,
+    pub requests: u64,
+    pub wall_secs: f64,
+    pub requests_per_sec: f64,
+    pub p50_micros: u64,
+    pub p99_micros: u64,
+    pub mean_micros: f64,
+    /// Total multiplications across all requests (selection + forward).
+    pub total_mults: u64,
+    pub mults_per_request: f64,
+    /// Mean micro-batch size the workers actually formed.
+    pub mean_batch: f64,
+    /// Classification accuracy over the request stream (labels supplied
+    /// by the caller).
+    pub accuracy: f32,
+}
+
+/// Nearest-rank percentile. `sorted` MUST be sorted ascending — indexing
+/// is by rank, so an unsorted sample returns garbage. (Kept as a plain
+/// slice rather than sorting internally so the caller can take several
+/// percentiles off one sort.)
+pub fn percentile_micros(sorted: &[u64], p: f64) -> u64 {
+    debug_assert!(sorted.windows(2).all(|w| w[0] <= w[1]), "input must be sorted ascending");
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil().max(1.0) as usize;
+    sorted[rank.min(sorted.len()) - 1]
+}
+
+/// Run one closed-loop benchmark: `cfg.requests` requests drawn
+/// round-robin from `xs`, answered by a fresh pool, latencies measured at
+/// the client. Returns aggregate stats; the pool is shut down before
+/// returning.
+pub fn run_closed_loop(
+    engine: &SparseInferenceEngine,
+    xs: &[Vec<f32>],
+    ys: &[u32],
+    cfg: &BenchConfig,
+) -> BenchResult {
+    assert!(!xs.is_empty(), "need at least one request vector");
+    assert_eq!(xs.len(), ys.len());
+    let clients = if cfg.clients == 0 { (cfg.pool.workers * 2).max(1) } else { cfg.clients };
+    let pool = ServePool::start(engine.clone(), cfg.pool);
+    let t0 = Instant::now();
+    // Each client owns a disjoint request-id range; ids index into xs
+    // modulo the dataset, so every mode serves the identical stream.
+    let per_client = cfg.requests / clients;
+    let remainder = cfg.requests % clients;
+    let mut all_latencies: Vec<u64> = Vec::with_capacity(cfg.requests);
+    let mut correct = 0u64;
+    std::thread::scope(|s| {
+        let mut joins = Vec::with_capacity(clients);
+        let mut next_id = 0u64;
+        for c in 0..clients {
+            let n = per_client + usize::from(c < remainder);
+            let first_id = next_id;
+            next_id += n as u64;
+            let handle = pool.handle();
+            joins.push(s.spawn(move || {
+                let (tx, rx) = channel();
+                let mut latencies = Vec::with_capacity(n);
+                let mut correct = 0u64;
+                for id in first_id..first_id + n as u64 {
+                    let i = (id as usize) % xs.len();
+                    let sent = Instant::now();
+                    if !handle.submit(id, xs[i].clone(), tx.clone()) {
+                        break;
+                    }
+                    let resp = rx.recv().expect("pool dropped a request");
+                    latencies.push(sent.elapsed().as_micros() as u64);
+                    correct += (resp.pred == ys[i]) as u64;
+                }
+                (latencies, correct)
+            }));
+        }
+        for j in joins {
+            let (lat, c) = j.join().expect("client thread panicked");
+            all_latencies.extend(lat);
+            correct += c;
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    let stats = pool.shutdown();
+    all_latencies.sort_unstable();
+    let n = all_latencies.len().max(1) as f64;
+    BenchResult {
+        mode: if cfg.pool.sparse { "sparse" } else { "dense" },
+        workers: cfg.pool.workers,
+        requests: stats.requests,
+        wall_secs: wall,
+        requests_per_sec: stats.requests as f64 / wall,
+        p50_micros: percentile_micros(&all_latencies, 50.0),
+        p99_micros: percentile_micros(&all_latencies, 99.0),
+        mean_micros: all_latencies.iter().sum::<u64>() as f64 / n,
+        total_mults: stats.mults,
+        mults_per_request: stats.mults as f64 / stats.requests.max(1) as f64,
+        mean_batch: stats.mean_batch(),
+        accuracy: correct as f32 / stats.requests.max(1) as f32,
+    }
+}
+
+/// Serialize results to the `BENCH_serve.json` schema: run metadata, one
+/// entry per (mode, workers) case, and the headline derived ratios —
+/// sparse mult fraction vs dense and throughput scaling across worker
+/// counts per mode.
+pub fn write_bench_json(
+    path: &Path,
+    network: &str,
+    sparsity: f32,
+    dense_mults_per_request: u64,
+    results: &[BenchResult],
+) -> io::Result<()> {
+    let mut cases = String::new();
+    for (i, r) in results.iter().enumerate() {
+        let _ = write!(
+            cases,
+            "    {{\"mode\": \"{}\", \"workers\": {}, \"requests\": {}, \
+             \"requests_per_sec\": {:.1}, \"p50_micros\": {}, \"p99_micros\": {}, \
+             \"mean_micros\": {:.1}, \"total_mults\": {}, \"mults_per_request\": {:.1}, \
+             \"mult_fraction_of_dense\": {:.4}, \"mean_batch\": {:.2}, \"accuracy\": {:.4}}}{}",
+            r.mode,
+            r.workers,
+            r.requests,
+            r.requests_per_sec,
+            r.p50_micros,
+            r.p99_micros,
+            r.mean_micros,
+            r.total_mults,
+            r.mults_per_request,
+            r.mults_per_request / dense_mults_per_request.max(1) as f64,
+            r.mean_batch,
+            r.accuracy,
+            if i + 1 < results.len() { ",\n" } else { "" }
+        );
+    }
+    let sparse_frac = mult_fraction(results, dense_mults_per_request);
+    // Scaling entries only for modes that actually ran — a fabricated
+    // 1.0 for an absent mode would be indistinguishable from a real run
+    // that failed to scale.
+    let ran: Vec<&str> =
+        ["dense", "sparse"].into_iter().filter(|m| results.iter().any(|r| r.mode == *m)).collect();
+    let mut scaling = String::new();
+    for (i, mode) in ran.iter().copied().enumerate() {
+        let _ = write!(
+            scaling,
+            "    {{\"mode\": \"{}\", \"throughput_scaling\": {:.3}}}{}",
+            mode,
+            throughput_scaling(results, mode),
+            if i + 1 < ran.len() { ",\n" } else { "" }
+        );
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"serve\",\n  \"network\": \"{network}\",\n  \
+         \"sparsity\": {sparsity},\n  \"dense_mults_per_request\": {dense_mults_per_request},\n  \
+         \"sparse_mult_fraction\": {sparse_frac:.4},\n  \"cases\": [\n{cases}\n  ],\n  \
+         \"scaling\": [\n{scaling}\n  ]\n}}\n"
+    );
+    std::fs::write(path, json)
+}
+
+/// Sparse multiplications per request as a fraction of the dense budget
+/// (mean over sparse cases; 0 if none ran).
+pub fn mult_fraction(results: &[BenchResult], dense_mults_per_request: u64) -> f64 {
+    let sparse: Vec<&BenchResult> = results.iter().filter(|r| r.mode == "sparse").collect();
+    if sparse.is_empty() || dense_mults_per_request == 0 {
+        return 0.0;
+    }
+    sparse.iter().map(|r| r.mults_per_request).sum::<f64>()
+        / (sparse.len() as f64 * dense_mults_per_request as f64)
+}
+
+/// Throughput at the largest worker count divided by throughput at the
+/// smallest, within one mode (1.0 if fewer than two worker counts ran).
+pub fn throughput_scaling(results: &[BenchResult], mode: &str) -> f64 {
+    let mut of_mode: Vec<&BenchResult> = results.iter().filter(|r| r.mode == mode).collect();
+    of_mode.sort_by_key(|r| r.workers);
+    match (of_mode.first(), of_mode.last()) {
+        (Some(lo), Some(hi)) if lo.workers < hi.workers && lo.requests_per_sec > 0.0 => {
+            hi.requests_per_sec / lo.requests_per_sec
+        }
+        _ => 1.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::activation::Activation;
+    use crate::nn::network::{Network, NetworkConfig};
+    use crate::sampling::{Method, SamplerConfig};
+    use crate::serve::snapshot::ModelSnapshot;
+    use crate::util::rng::Pcg64;
+    use std::time::Duration;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile_micros(&v, 50.0), 50);
+        assert_eq!(percentile_micros(&v, 99.0), 99);
+        assert_eq!(percentile_micros(&v, 100.0), 100);
+        assert_eq!(percentile_micros(&[7], 99.0), 7);
+        assert_eq!(percentile_micros(&[], 50.0), 0);
+    }
+
+    #[test]
+    fn closed_loop_serves_full_request_count() {
+        let cfg = NetworkConfig { n_in: 8, hidden: vec![24], n_out: 2, act: Activation::ReLU };
+        let net = Network::new(&cfg, &mut Pcg64::seeded(17));
+        let engine = SparseInferenceEngine::from_snapshot(ModelSnapshot::without_tables(
+            net,
+            SamplerConfig::with_method(Method::Lsh, 0.25),
+            17,
+        ));
+        let mut rng = Pcg64::seeded(18);
+        let xs: Vec<Vec<f32>> =
+            (0..16).map(|_| (0..8).map(|_| rng.gaussian()).collect()).collect();
+        let ys: Vec<u32> = (0..16).map(|i| i % 2).collect();
+        let bench = BenchConfig {
+            pool: PoolConfig {
+                workers: 2,
+                max_batch: 4,
+                batch_deadline: Duration::from_micros(100),
+                ..Default::default()
+            },
+            clients: 3,
+            requests: 64,
+        };
+        let r = run_closed_loop(&engine, &xs, &ys, &bench);
+        assert_eq!(r.requests, 64);
+        assert!(r.requests_per_sec > 0.0);
+        assert!(r.p50_micros <= r.p99_micros);
+        assert!(r.total_mults > 0);
+        assert!((0.0..=1.0).contains(&r.accuracy));
+    }
+
+    #[test]
+    fn scaling_and_fraction_helpers() {
+        let mk = |mode: &'static str, workers: usize, rps: f64, mpr: f64| BenchResult {
+            mode,
+            workers,
+            requests: 100,
+            wall_secs: 1.0,
+            requests_per_sec: rps,
+            p50_micros: 10,
+            p99_micros: 20,
+            mean_micros: 12.0,
+            total_mults: (mpr * 100.0) as u64,
+            mults_per_request: mpr,
+            mean_batch: 2.0,
+            accuracy: 0.9,
+        };
+        let results = vec![
+            mk("dense", 1, 100.0, 1000.0),
+            mk("dense", 4, 350.0, 1000.0),
+            mk("sparse", 1, 400.0, 100.0),
+            mk("sparse", 4, 1400.0, 100.0),
+        ];
+        assert!((throughput_scaling(&results, "dense") - 3.5).abs() < 1e-9);
+        assert!((throughput_scaling(&results, "sparse") - 3.5).abs() < 1e-9);
+        assert!((mult_fraction(&results, 1000) - 0.1).abs() < 1e-9);
+        let path = std::env::temp_dir().join(format!("hashdl_bench_{}.json", std::process::id()));
+        write_bench_json(&path, "8-24-2", 0.25, 1000, &results).unwrap();
+        let s = std::fs::read_to_string(&path).unwrap();
+        assert!(s.contains("\"sparse_mult_fraction\": 0.1000"));
+        assert!(s.contains("\"scaling\""));
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,317 @@
+//! The frozen-model sparse inference engine.
+//!
+//! A [`SparseInferenceEngine`] is a cheap `Clone` handle over `Arc`-shared
+//! read-only state (weights + frozen LSH tables); every serving worker
+//! clones the handle and owns a private [`InferenceWorkspace`] holding all
+//! mutable per-request buffers. Inference is therefore lock-free and
+//! deterministic: the same input produces bit-identical active sets and
+//! logits on any worker (see `lsh::frozen` for the RNG derivation that
+//! makes crowded-bucket sampling worker-independent).
+//!
+//! Cost accounting mirrors training: hidden layers pay K·L hashing +
+//! |AS_out|·|AS_in| sparse-forward multiplications (plus the optional §5.4
+//! re-rank), the output layer is fully dense over the last sparse
+//! activation — all summed into the same [`MultCounters`] the trainer
+//! reports, so sparse-vs-dense serving savings are directly comparable to
+//! the paper's training numbers.
+
+use crate::lsh::frozen::{FrozenLayerTables, FrozenQueryScratch};
+use crate::nn::network::Network;
+use crate::nn::sparse::{LayerInput, SparseVec};
+use crate::sampling::{budget, rerank_exact};
+use crate::serve::snapshot::ModelSnapshot;
+use crate::train::metrics::MultCounters;
+use std::sync::Arc;
+
+/// Immutable state shared by every worker.
+pub struct EngineShared {
+    pub net: Network,
+    /// One frozen table stack per hidden layer.
+    pub tables: Vec<FrozenLayerTables>,
+    /// Active-node fraction per hidden layer (the serving top-k knob).
+    pub sparsity: f32,
+    /// §5.4 cheap re-rank factor carried over from the training sampler
+    /// (0/1 = disabled).
+    pub rerank_factor: usize,
+}
+
+/// Cheap-to-clone engine handle (`Arc` under the hood).
+#[derive(Clone)]
+pub struct SparseInferenceEngine {
+    shared: Arc<EngineShared>,
+}
+
+/// Per-worker mutable buffers, reused across requests — steady-state
+/// inference allocates nothing.
+pub struct InferenceWorkspace {
+    scratch: FrozenQueryScratch,
+    /// Hidden-layer sparse activations, one slot per hidden layer.
+    pub acts: Vec<SparseVec>,
+    /// Active set under construction for the current layer.
+    active: Vec<u32>,
+    /// Densified query for table hashing (sparse upper-layer inputs).
+    dense_q: Vec<f32>,
+    /// Re-rank scoring buffer.
+    scored: Vec<(f32, u32)>,
+    /// Final logits of the last request.
+    pub logits: Vec<f32>,
+}
+
+impl InferenceWorkspace {
+    pub fn new(engine: &SparseInferenceEngine) -> Self {
+        let n_hidden = engine.shared.net.n_hidden();
+        InferenceWorkspace {
+            scratch: FrozenQueryScratch::new(),
+            acts: (0..n_hidden).map(|_| SparseVec::new()).collect(),
+            active: Vec::new(),
+            dense_q: Vec::new(),
+            scored: Vec::new(),
+            logits: Vec::new(),
+        }
+    }
+}
+
+/// Outcome of one request: predicted class + exact multiplication counts.
+/// Logits and per-layer active sets stay in the workspace (`ws.logits`,
+/// `ws.acts`) for callers that need them.
+#[derive(Clone, Copy, Debug)]
+pub struct Inference {
+    pub pred: u32,
+    pub mults: MultCounters,
+}
+
+impl SparseInferenceEngine {
+    /// Build from a snapshot, rebuilding tables deterministically if the
+    /// file did not ship them.
+    pub fn from_snapshot(mut snap: ModelSnapshot) -> Self {
+        snap.ensure_tables();
+        let ModelSnapshot { net, sampler, tables, .. } = snap;
+        SparseInferenceEngine {
+            shared: Arc::new(EngineShared {
+                net,
+                tables: tables.expect("ensure_tables populated"),
+                sparsity: sampler.sparsity,
+                rerank_factor: sampler.lsh.rerank_factor,
+            }),
+        }
+    }
+
+    /// Build directly from parts (tests, ad-hoc serving of a live net).
+    pub fn from_parts(net: Network, tables: Vec<FrozenLayerTables>, sparsity: f32) -> Self {
+        assert_eq!(tables.len(), net.n_hidden(), "one table stack per hidden layer");
+        SparseInferenceEngine {
+            shared: Arc::new(EngineShared { net, tables, sparsity, rerank_factor: 0 }),
+        }
+    }
+
+    pub fn shared(&self) -> &EngineShared {
+        &self.shared
+    }
+
+    pub fn net(&self) -> &Network {
+        &self.shared.net
+    }
+
+    /// Dense multiplications one forward pass would spend — the 100%
+    /// budget sparse serving is measured against.
+    pub fn dense_mults_per_request(&self) -> u64 {
+        self.shared.net.dense_mults_per_example()
+    }
+
+    /// Sparse inference: LSH-select the active set per hidden layer, fire
+    /// only those neurons, finish with the dense output layer.
+    pub fn infer(&self, x: &[f32], ws: &mut InferenceWorkspace) -> Inference {
+        let sh = &*self.shared;
+        debug_assert_eq!(x.len(), sh.net.n_in());
+        let n_hidden = sh.net.n_hidden();
+        let mut mults = MultCounters::default();
+        for l in 0..n_hidden {
+            let layer = &sh.net.layers[l];
+            let (prev, rest) = ws.acts.split_at_mut(l);
+            let input = if l == 0 {
+                LayerInput::Dense(x)
+            } else {
+                LayerInput::Sparse(&prev[l - 1])
+            };
+            // Densify the query for the hash functions (layer 0 is already
+            // dense; upper layers densify the previous sparse activation).
+            let q: &[f32] = match input {
+                LayerInput::Dense(d) => d,
+                LayerInput::Sparse(s) => {
+                    ws.dense_q.clear();
+                    ws.dense_q.resize(layer.n_in(), 0.0);
+                    for (i, v) in s.iter() {
+                        ws.dense_q[i as usize] = v;
+                    }
+                    &ws.dense_q
+                }
+            };
+            let b = budget(layer.n_out(), sh.sparsity);
+            let tables = &sh.tables[l];
+            if sh.rerank_factor > 1 {
+                // §5.4 cheap re-rank: over-collect, score exactly, keep
+                // the top b — the same `rerank_exact` the trainer uses.
+                mults.selection +=
+                    tables.query(q, b * sh.rerank_factor, &mut ws.scratch, &mut ws.active);
+                mults.selection += rerank_exact(layer, q, b, &mut ws.active, &mut ws.scored);
+            } else {
+                mults.selection += tables.query(q, b, &mut ws.scratch, &mut ws.active);
+            }
+            mults.forward += layer.forward_sparse(input, &ws.active, &mut rest[0]);
+        }
+        // Output layer: dense over all classes from the last sparse
+        // activation (the paper never hashes the output layer).
+        let out_layer = sh.net.layers.last().expect("empty network");
+        let input = if n_hidden == 0 {
+            LayerInput::Dense(x)
+        } else {
+            LayerInput::Sparse(&ws.acts[n_hidden - 1])
+        };
+        mults.forward += out_layer.forward_all(input, &mut ws.logits);
+        Inference { pred: crate::tensor::vecops::argmax(&ws.logits) as u32, mults }
+    }
+
+    /// Dense reference inference through the same workspace (the serving
+    /// pool's dense mode — identical numbers to [`Network::forward_dense`]).
+    pub fn infer_dense(&self, x: &[f32], ws: &mut InferenceWorkspace) -> Inference {
+        let mut mults = MultCounters::default();
+        mults.forward += self.shared.net.forward_dense(x, &mut ws.logits);
+        Inference { pred: crate::tensor::vecops::argmax(&ws.logits) as u32, mults }
+    }
+
+    /// Evaluate a labelled set sparsely: (mean loss, accuracy, summed
+    /// counters, mean hidden active fraction).
+    pub fn evaluate(
+        &self,
+        xs: &[Vec<f32>],
+        ys: &[u32],
+        ws: &mut InferenceWorkspace,
+    ) -> EvalSummary {
+        assert_eq!(xs.len(), ys.len());
+        let n_hidden = self.shared.net.n_hidden();
+        let hidden_width: usize =
+            self.shared.net.layers.iter().take(n_hidden).map(|l| l.n_out()).sum();
+        let mut mults = MultCounters::default();
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0usize;
+        let mut active_sum = 0.0f64;
+        for (x, &y) in xs.iter().zip(ys) {
+            let inf = self.infer(x, ws);
+            mults.add(&inf.mults);
+            let (loss, _) = crate::nn::loss::softmax_xent(&ws.logits, y);
+            loss_sum += loss as f64;
+            correct += (inf.pred == y) as usize;
+            if hidden_width > 0 {
+                let active: usize = ws.acts.iter().map(|a| a.len()).sum();
+                active_sum += active as f64 / hidden_width as f64;
+            }
+        }
+        EvalSummary {
+            loss: (loss_sum / xs.len().max(1) as f64) as f32,
+            acc: correct as f32 / xs.len().max(1) as f32,
+            mults,
+            active_fraction: (active_sum / xs.len().max(1) as f64) as f32,
+        }
+    }
+
+    /// Dense evaluation with the same counter accounting (for mult-fraction
+    /// reporting; numerically identical to [`Network::evaluate`]).
+    pub fn evaluate_dense(
+        &self,
+        xs: &[Vec<f32>],
+        ys: &[u32],
+        ws: &mut InferenceWorkspace,
+    ) -> EvalSummary {
+        assert_eq!(xs.len(), ys.len());
+        let mut mults = MultCounters::default();
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0usize;
+        for (x, &y) in xs.iter().zip(ys) {
+            let inf = self.infer_dense(x, ws);
+            mults.add(&inf.mults);
+            let (loss, _) = crate::nn::loss::softmax_xent(&ws.logits, y);
+            loss_sum += loss as f64;
+            correct += (inf.pred == y) as usize;
+        }
+        EvalSummary {
+            loss: (loss_sum / xs.len().max(1) as f64) as f32,
+            acc: correct as f32 / xs.len().max(1) as f32,
+            mults,
+            active_fraction: 1.0,
+        }
+    }
+}
+
+/// Aggregate evaluation result.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalSummary {
+    pub loss: f32,
+    pub acc: f32,
+    pub mults: MultCounters,
+    pub active_fraction: f32,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::activation::Activation;
+    use crate::nn::network::NetworkConfig;
+    use crate::sampling::{Method, SamplerConfig};
+    use crate::util::rng::Pcg64;
+
+    fn engine(seed: u64) -> SparseInferenceEngine {
+        let cfg =
+            NetworkConfig { n_in: 16, hidden: vec![60, 60], n_out: 4, act: Activation::ReLU };
+        let net = Network::new(&cfg, &mut Pcg64::seeded(seed));
+        let snap =
+            ModelSnapshot::without_tables(net, SamplerConfig::with_method(Method::Lsh, 0.2), seed);
+        SparseInferenceEngine::from_snapshot(snap)
+    }
+
+    #[test]
+    fn sparse_inference_is_deterministic() {
+        let e = engine(5);
+        let mut ws1 = InferenceWorkspace::new(&e);
+        let mut ws2 = InferenceWorkspace::new(&e);
+        let x: Vec<f32> = (0..16).map(|i| (i as f32 * 0.4).sin()).collect();
+        let a = e.infer(&x, &mut ws1);
+        // Run unrelated traffic through ws2 first; same answer required.
+        let noise: Vec<f32> = (0..16).map(|i| (i as f32 * 0.9).cos()).collect();
+        e.infer(&noise, &mut ws2);
+        let b = e.infer(&x, &mut ws2);
+        assert_eq!(a.pred, b.pred);
+        assert_eq!(ws1.logits, ws2.logits);
+        for (u, v) in ws1.acts.iter().zip(&ws2.acts) {
+            assert_eq!(u.idx, v.idx);
+            assert_eq!(u.val, v.val);
+        }
+        assert_eq!(a.mults.total(), b.mults.total());
+    }
+
+    #[test]
+    fn sparse_uses_fraction_of_dense_mults() {
+        let e = engine(7);
+        let mut ws = InferenceWorkspace::new(&e);
+        let x: Vec<f32> = (0..16).map(|i| (i as f32 * 0.17).cos()).collect();
+        let inf = e.infer(&x, &mut ws);
+        let dense = e.dense_mults_per_request();
+        assert!(
+            inf.mults.total() < dense,
+            "sparse {} should undercut dense {dense}",
+            inf.mults.total()
+        );
+        let d = e.infer_dense(&x, &mut ws);
+        assert_eq!(d.mults.total(), dense);
+    }
+
+    #[test]
+    fn dense_path_matches_network_forward() {
+        let e = engine(9);
+        let mut ws = InferenceWorkspace::new(&e);
+        let x: Vec<f32> = (0..16).map(|i| 0.1 * i as f32).collect();
+        e.infer_dense(&x, &mut ws);
+        let mut reference = Vec::new();
+        e.net().forward_dense(&x, &mut reference);
+        assert_eq!(ws.logits, reference);
+    }
+}

@@ -1,0 +1,27 @@
+//! Sparse inference serving: the test-time half of the paper's claim
+//! ("reduces the computational cost of forward and back-propagation" —
+//! §1 covers *testing* too, and SLIDE showed the serving path is where
+//! hash-based sparsity pays most).
+//!
+//! Four pieces:
+//! * [`snapshot`] — frozen model files: weights + sampler config +
+//!   prehashed LSH tables, versioned and backward compatible with legacy
+//!   weights-only checkpoints.
+//! * [`engine`] — [`engine::SparseInferenceEngine`]: `Arc`-shared
+//!   read-only weights/tables, per-thread workspaces, deterministic
+//!   active-set selection, exact multiplication accounting.
+//! * [`pool`] — bounded MPSC request queue + worker threads with dynamic
+//!   micro-batching (size cap or deadline, whichever closes first).
+//! * [`bench`] — closed-loop load generator reporting requests/sec,
+//!   p50/p99 latency and sparse-vs-dense mult fractions
+//!   (`BENCH_serve.json`).
+
+pub mod bench;
+pub mod engine;
+pub mod pool;
+pub mod snapshot;
+
+pub use bench::{run_closed_loop, BenchConfig, BenchResult};
+pub use engine::{EvalSummary, Inference, InferenceWorkspace, SparseInferenceEngine};
+pub use pool::{PoolConfig, PoolHandle, PoolStats, Request, RequestQueue, Response, ServePool};
+pub use snapshot::{load_snapshot, save_snapshot, ModelSnapshot};

@@ -1,0 +1,398 @@
+//! Multi-threaded serving pool with dynamic micro-batching.
+//!
+//! Architecture (SLIDE-style throughput serving):
+//!
+//! ```text
+//! clients --submit--> [bounded MPSC queue] --pop_batch--> worker 0..N-1
+//!                      (Mutex<VecDeque> +                  each: engine
+//!                       two Condvars)                      handle + private
+//!                                                          workspace
+//! ```
+//!
+//! Workers drain the queue in **micro-batches closed by whichever comes
+//! first**: a size cap (`max_batch`) or a deadline measured from the
+//! moment the batch's first request was claimed (`batch_deadline`). Under
+//! load a worker wakes once per `max_batch` requests — queue
+//! synchronization amortizes across the batch exactly like LSH
+//! maintenance amortizes across a training minibatch. At low offered load
+//! the deadline bounds the latency a lone request can lose waiting for
+//! company.
+//!
+//! Because the engine is deterministic per request (`lsh::frozen`), the
+//! worker count and batching layout change *when* a request is answered,
+//! never *what* the answer is — pinned by `tests/serve.rs`.
+
+use crate::serve::engine::{InferenceWorkspace, SparseInferenceEngine};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One inference request travelling through the queue.
+pub struct Request {
+    pub id: u64,
+    pub x: Vec<f32>,
+    pub enqueued: Instant,
+    /// Where the worker sends the answer (closed-loop clients block on
+    /// the paired receiver).
+    pub reply: Sender<Response>,
+}
+
+/// The answer a worker sends back.
+#[derive(Clone, Copy, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub pred: u32,
+    /// Total multiplications this request cost (selection + forward).
+    pub mults: u64,
+    /// Queue wait in microseconds (enqueue → claimed by a worker).
+    pub queue_micros: u64,
+    /// Size of the micro-batch this request rode in.
+    pub batch_size: u32,
+}
+
+struct QueueInner {
+    items: VecDeque<Request>,
+    closed: bool,
+}
+
+/// Bounded MPSC request queue. `push` blocks while the queue is at
+/// capacity (closed-loop backpressure); `pop_batch` blocks for the first
+/// request then applies the micro-batching policy.
+pub struct RequestQueue {
+    inner: Mutex<QueueInner>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+}
+
+impl RequestQueue {
+    pub fn new(cap: usize) -> Self {
+        RequestQueue {
+            inner: Mutex::new(QueueInner { items: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Enqueue, blocking while full. Returns `false` (request dropped) if
+    /// the queue has been closed.
+    pub fn push(&self, req: Request) -> bool {
+        let mut g = self.inner.lock().expect("queue poisoned");
+        while g.items.len() >= self.cap && !g.closed {
+            g = self.not_full.wait(g).expect("queue poisoned");
+        }
+        if g.closed {
+            return false;
+        }
+        g.items.push_back(req);
+        drop(g);
+        self.not_empty.notify_one();
+        true
+    }
+
+    /// Claim the next micro-batch into `out` (cleared first). Blocks until
+    /// at least one request is available, then keeps collecting until the
+    /// size cap is hit or `deadline` elapses from the first claim. Returns
+    /// `false` when the queue is closed and drained (worker should exit).
+    pub fn pop_batch(&self, max_batch: usize, deadline: Duration, out: &mut Vec<Request>) -> bool {
+        out.clear();
+        let max_batch = max_batch.max(1);
+        let mut g = self.inner.lock().expect("queue poisoned");
+        loop {
+            if let Some(req) = g.items.pop_front() {
+                out.push(req);
+                // Wake a blocked producer *now*, not after the batch
+                // closes: with a small queue_cap the only requests that
+                // can extend this batch are held by producers blocked in
+                // push(), and they get their slot the moment we wait on
+                // not_empty (which releases the lock) — otherwise the
+                // worker would idle out the whole deadline.
+                self.not_full.notify_one();
+                break;
+            }
+            if g.closed {
+                return false;
+            }
+            g = self.not_empty.wait(g).expect("queue poisoned");
+        }
+        let close_at = Instant::now() + deadline;
+        while out.len() < max_batch {
+            if let Some(req) = g.items.pop_front() {
+                out.push(req);
+                self.not_full.notify_one();
+                continue;
+            }
+            if g.closed {
+                break;
+            }
+            let now = Instant::now();
+            if now >= close_at {
+                break;
+            }
+            let (guard, timeout) = self
+                .not_empty
+                .wait_timeout(g, close_at - now)
+                .expect("queue poisoned");
+            g = guard;
+            if timeout.timed_out() && g.items.is_empty() {
+                break;
+            }
+        }
+        drop(g);
+        // Catch-all: make sure no producer stays parked (notify_one above
+        // wakes exactly one per freed slot; a racing close() or spurious
+        // wake pattern could still leave waiters).
+        self.not_full.notify_all();
+        true
+    }
+
+    /// Close the queue: producers get `false`, workers drain and exit.
+    pub fn close(&self) {
+        self.inner.lock().expect("queue poisoned").closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("queue poisoned").items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Pool tunables.
+#[derive(Clone, Copy, Debug)]
+pub struct PoolConfig {
+    pub workers: usize,
+    /// Bounded queue capacity (backpressure point).
+    pub queue_cap: usize,
+    /// Micro-batch size cap.
+    pub max_batch: usize,
+    /// Micro-batch close deadline from first claimed request.
+    pub batch_deadline: Duration,
+    /// Serve sparsely (LSH active sets) or densely (baseline).
+    pub sparse: bool,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig {
+            workers: 1,
+            queue_cap: 1024,
+            max_batch: 32,
+            batch_deadline: Duration::from_micros(200),
+            sparse: true,
+        }
+    }
+}
+
+/// Aggregate counters across all workers (relaxed atomics — monitoring
+/// only, never condition control flow on them mid-run).
+#[derive(Default)]
+pub struct PoolCounters {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub mults: AtomicU64,
+}
+
+/// A running pool: N worker threads + the shared queue.
+pub struct ServePool {
+    queue: Arc<RequestQueue>,
+    counters: Arc<PoolCounters>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// Cloneable submission handle.
+#[derive(Clone)]
+pub struct PoolHandle {
+    queue: Arc<RequestQueue>,
+}
+
+impl PoolHandle {
+    /// Submit one request. Blocks on backpressure; `false` = pool closed.
+    pub fn submit(&self, id: u64, x: Vec<f32>, reply: Sender<Response>) -> bool {
+        self.queue.push(Request { id, x, enqueued: Instant::now(), reply })
+    }
+}
+
+/// Final pool statistics, returned by [`ServePool::shutdown`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub mults: u64,
+}
+
+impl PoolStats {
+    /// Mean requests per micro-batch (batching effectiveness).
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+}
+
+impl ServePool {
+    /// Spawn `cfg.workers` threads serving `engine`.
+    pub fn start(engine: SparseInferenceEngine, cfg: PoolConfig) -> Self {
+        assert!(cfg.workers >= 1, "pool needs at least one worker");
+        let queue = Arc::new(RequestQueue::new(cfg.queue_cap));
+        let counters = Arc::new(PoolCounters::default());
+        let handles = (0..cfg.workers)
+            .map(|w| {
+                let queue = Arc::clone(&queue);
+                let counters = Arc::clone(&counters);
+                let engine = engine.clone();
+                std::thread::Builder::new()
+                    .name(format!("hashdl-serve-{w}"))
+                    .spawn(move || worker_loop(&engine, &queue, &counters, cfg))
+                    .expect("spawn serve worker")
+            })
+            .collect();
+        ServePool { queue, counters, handles }
+    }
+
+    pub fn handle(&self) -> PoolHandle {
+        PoolHandle { queue: Arc::clone(&self.queue) }
+    }
+
+    /// Close the queue, join every worker, return aggregate stats. Requests
+    /// already queued are still answered before workers exit.
+    pub fn shutdown(self) -> PoolStats {
+        self.queue.close();
+        for h in self.handles {
+            let _ = h.join();
+        }
+        PoolStats {
+            requests: self.counters.requests.load(Ordering::Relaxed),
+            batches: self.counters.batches.load(Ordering::Relaxed),
+            mults: self.counters.mults.load(Ordering::Relaxed),
+        }
+    }
+}
+
+fn worker_loop(
+    engine: &SparseInferenceEngine,
+    queue: &RequestQueue,
+    counters: &PoolCounters,
+    cfg: PoolConfig,
+) {
+    let mut ws = InferenceWorkspace::new(engine);
+    let mut batch: Vec<Request> = Vec::with_capacity(cfg.max_batch);
+    while queue.pop_batch(cfg.max_batch, cfg.batch_deadline, &mut batch) {
+        let bsz = batch.len() as u32;
+        let claimed = Instant::now();
+        for req in batch.drain(..) {
+            let inf = if cfg.sparse {
+                engine.infer(&req.x, &mut ws)
+            } else {
+                engine.infer_dense(&req.x, &mut ws)
+            };
+            let mults = inf.mults.total();
+            counters.requests.fetch_add(1, Ordering::Relaxed);
+            counters.mults.fetch_add(mults, Ordering::Relaxed);
+            // Client may have given up (dropped receiver) — ignore.
+            let _ = req.reply.send(Response {
+                id: req.id,
+                pred: inf.pred,
+                mults,
+                queue_micros: claimed.duration_since(req.enqueued).as_micros() as u64,
+                batch_size: bsz,
+            });
+        }
+        counters.batches.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::activation::Activation;
+    use crate::nn::network::{Network, NetworkConfig};
+    use crate::sampling::{Method, SamplerConfig};
+    use crate::serve::snapshot::ModelSnapshot;
+    use crate::util::rng::Pcg64;
+    use std::sync::mpsc::channel;
+
+    fn tiny_engine() -> SparseInferenceEngine {
+        let cfg = NetworkConfig { n_in: 8, hidden: vec![32], n_out: 3, act: Activation::ReLU };
+        let net = Network::new(&cfg, &mut Pcg64::seeded(3));
+        SparseInferenceEngine::from_snapshot(ModelSnapshot::without_tables(
+            net,
+            SamplerConfig::with_method(Method::Lsh, 0.25),
+            3,
+        ))
+    }
+
+    #[test]
+    fn queue_batches_respect_size_cap() {
+        let q = RequestQueue::new(64);
+        let (tx, _rx) = channel();
+        for id in 0..10u64 {
+            assert!(q.push(Request {
+                id,
+                x: vec![0.0; 4],
+                enqueued: Instant::now(),
+                reply: tx.clone(),
+            }));
+        }
+        let mut batch = Vec::new();
+        assert!(q.pop_batch(4, Duration::from_millis(5), &mut batch));
+        assert_eq!(batch.len(), 4, "size cap closes the batch");
+        assert_eq!(batch[0].id, 0, "FIFO order");
+        assert!(q.pop_batch(16, Duration::from_millis(1), &mut batch));
+        assert_eq!(batch.len(), 6, "deadline closes an under-full batch");
+    }
+
+    #[test]
+    fn closed_queue_rejects_producers_and_releases_workers() {
+        let q = RequestQueue::new(4);
+        q.close();
+        let (tx, _rx) = channel();
+        assert!(!q.push(Request { id: 0, x: vec![], enqueued: Instant::now(), reply: tx }));
+        let mut batch = Vec::new();
+        assert!(!q.pop_batch(8, Duration::from_millis(1), &mut batch));
+    }
+
+    #[test]
+    fn pool_answers_every_request() {
+        let engine = tiny_engine();
+        let pool = ServePool::start(
+            engine.clone(),
+            PoolConfig { workers: 2, max_batch: 8, ..Default::default() },
+        );
+        let handle = pool.handle();
+        let (tx, rx) = channel();
+        let n = 50u64;
+        for id in 0..n {
+            let x: Vec<f32> = (0..8).map(|j| ((id * 8 + j) as f32 * 0.13).sin()).collect();
+            assert!(handle.submit(id, x, tx.clone()));
+        }
+        drop(tx);
+        let mut seen = vec![false; n as usize];
+        let mut reference_ws = InferenceWorkspace::new(&engine);
+        for _ in 0..n {
+            let resp = rx.recv().expect("response");
+            assert!(!seen[resp.id as usize], "duplicate response");
+            seen[resp.id as usize] = true;
+            assert!(resp.batch_size >= 1 && resp.batch_size <= 8);
+            // Answer must match a direct engine call (determinism).
+            let x: Vec<f32> =
+                (0..8).map(|j| ((resp.id * 8 + j) as f32 * 0.13).sin()).collect();
+            let direct = engine.infer(&x, &mut reference_ws);
+            assert_eq!(resp.pred, direct.pred, "request {}", resp.id);
+            assert_eq!(resp.mults, direct.mults.total());
+        }
+        let stats = pool.shutdown();
+        assert_eq!(stats.requests, n);
+        assert!(stats.batches >= 1);
+        assert!(stats.mean_batch() >= 1.0);
+    }
+}

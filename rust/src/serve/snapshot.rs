@@ -1,0 +1,328 @@
+//! Frozen model snapshots: weights + sampler config + prehashed LSH
+//! tables in one versioned binary file (`HDLMODL2`).
+//!
+//! The paper's serving story needs the hash tables *at* the weights they
+//! were built over — rebuilding them on every process start costs a full
+//! K·L hash pass over every neuron and, worse, uses fresh random
+//! projections, so two replicas would disagree on active sets. A snapshot
+//! ships the exact tables training ended with; replicas loading the same
+//! file serve bit-identical answers.
+//!
+//! **Backward compatibility:** legacy v1 `model.bin` files (weights only)
+//! still load; [`ModelSnapshot::ensure_tables`] then rebuilds tables
+//! *deterministically* from the weights + stored sampler config + seed
+//! (per-layer RNG streams derived from the seed), so a table-less file
+//! also yields identical tables on every load — just not the ones
+//! training used.
+
+use crate::data::io::{
+    invalid, read_f32, read_f32s, read_network_body, read_str, read_u32, read_u32s, read_u64,
+    write_f32, write_f32s, write_network_body, write_str, write_u32, write_u32s, write_u64,
+    MODEL_MAGIC, SNAPSHOT_MAGIC,
+};
+use crate::lsh::alsh::AlshMips;
+use crate::lsh::family::LshFamily;
+use crate::lsh::frozen::FrozenLayerTables;
+use crate::lsh::layered::{LayerTables, LshConfig};
+use crate::lsh::srp::SrpHash;
+use crate::lsh::table::HashTable;
+use crate::sampling::{Method, SamplerConfig};
+use crate::tensor::matrix::Matrix;
+use crate::util::rng::Pcg64;
+use std::io::{self, Read, Write};
+use std::path::Path;
+
+/// RNG stream tag for deterministic table rebuilds (one stream per hidden
+/// layer: `TABLE_STREAM + layer_index`).
+const TABLE_STREAM: u64 = 0x7AB1_E000;
+
+/// A frozen trained model: everything the serving engine needs to answer
+/// queries, with no training-time state.
+pub struct ModelSnapshot {
+    pub net: crate::nn::network::Network,
+    /// Selection policy the model was trained with — the serving engine
+    /// reads `sparsity` and the LSH operating point from here.
+    pub sampler: SamplerConfig,
+    /// Run seed, kept so table-less files rebuild identically everywhere.
+    pub seed: u64,
+    /// One frozen table stack per hidden layer (`None` = not shipped;
+    /// call [`ModelSnapshot::ensure_tables`]).
+    pub tables: Option<Vec<FrozenLayerTables>>,
+}
+
+impl ModelSnapshot {
+    /// Wrap a bare network (no tables yet) — the legacy-load and
+    /// non-LSH-training paths.
+    pub fn without_tables(
+        net: crate::nn::network::Network,
+        sampler: SamplerConfig,
+        seed: u64,
+    ) -> Self {
+        ModelSnapshot { net, sampler, seed, tables: None }
+    }
+
+    /// Guarantee `tables` is populated: keep shipped tables, else rebuild
+    /// deterministically from the weights. Each hidden layer gets its own
+    /// RNG stream derived from the stored seed, so repeated loads of the
+    /// same file — on any machine — produce identical projections and
+    /// bucket contents.
+    pub fn ensure_tables(&mut self) -> &[FrozenLayerTables] {
+        if self.tables.is_none() {
+            let cfg = self.sampler.lsh;
+            let built: Vec<FrozenLayerTables> = self
+                .net
+                .layers
+                .iter()
+                .take(self.net.n_hidden())
+                .enumerate()
+                .map(|(l, layer)| {
+                    let mut rng = Pcg64::new(self.seed, TABLE_STREAM + l as u64);
+                    FrozenLayerTables::freeze(&LayerTables::build(&layer.w, cfg, &mut rng))
+                })
+                .collect();
+            self.tables = Some(built);
+        }
+        self.tables.as_deref().expect("just populated")
+    }
+}
+
+/// Write a v2 snapshot. Layout (all little-endian):
+///
+/// ```text
+/// "HDLMODL2"
+/// network body            (identical to v1 — old readers stop here)
+/// sampler: method str, f32 sparsity, u32 {k, l, probes, crowded, rerank},
+///          f32 rehash_prob, u32 rebuild_every_epochs
+/// u64 seed
+/// u32 table-set count     (0 = none shipped, else = hidden layer count)
+/// per table set:
+///   u32 n_nodes, u32 dim, f32 max_norm (ALSH scaling constant M)
+///   u32 proj_rows, u32 proj_cols, f32s projections
+///   per table (L of them):
+///     u32s node_fp [n_nodes]
+///     per bucket (2^K): u32 len, u32s ids
+/// ```
+pub fn save_snapshot(snap: &ModelSnapshot, path: &Path) -> io::Result<()> {
+    let mut w = io::BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(SNAPSHOT_MAGIC)?;
+    write_network_body(&mut w, &snap.net)?;
+    let s = &snap.sampler;
+    write_str(&mut w, s.method.name())?;
+    write_f32(&mut w, s.sparsity)?;
+    write_u32(&mut w, s.lsh.k as u32)?;
+    write_u32(&mut w, s.lsh.l as u32)?;
+    write_u32(&mut w, s.lsh.probes_per_table as u32)?;
+    write_u32(&mut w, s.lsh.crowded_limit as u32)?;
+    write_u32(&mut w, s.lsh.rerank_factor as u32)?;
+    write_f32(&mut w, s.lsh.rehash_probability)?;
+    write_u32(&mut w, s.rebuild_every_epochs as u32)?;
+    write_u64(&mut w, snap.seed)?;
+    match &snap.tables {
+        None => write_u32(&mut w, 0)?,
+        Some(sets) => {
+            write_u32(&mut w, sets.len() as u32)?;
+            for t in sets {
+                write_table_set(&mut w, t)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn write_table_set(w: &mut impl Write, t: &FrozenLayerTables) -> io::Result<()> {
+    let family = t.family();
+    let proj = family.srp().projections();
+    write_u32(w, t.n_nodes() as u32)?;
+    write_u32(w, family.dim() as u32)?;
+    write_f32(w, family.max_norm())?;
+    write_u32(w, proj.rows() as u32)?;
+    write_u32(w, proj.cols() as u32)?;
+    write_f32s(w, proj.as_slice())?;
+    for table in t.tables() {
+        write_u32s(w, table.node_fingerprints())?;
+        for bucket in table.buckets() {
+            write_u32(w, bucket.len() as u32)?;
+            write_u32s(w, bucket)?;
+        }
+    }
+    Ok(())
+}
+
+fn read_table_set(r: &mut impl Read, cfg: LshConfig) -> io::Result<FrozenLayerTables> {
+    let n_nodes = read_u32(r)? as usize;
+    let dim = read_u32(r)? as usize;
+    let max_norm = read_f32(r)?;
+    let proj_rows = read_u32(r)? as usize;
+    let proj_cols = read_u32(r)? as usize;
+    if proj_rows != cfg.k * cfg.l || proj_cols != dim + 1 {
+        return Err(invalid(format!(
+            "projection shape {proj_rows}x{proj_cols} inconsistent with K={} L={} dim={dim}",
+            cfg.k, cfg.l
+        )));
+    }
+    let proj = Matrix::from_vec(proj_rows, proj_cols, read_f32s(r, proj_rows * proj_cols)?);
+    let srp = SrpHash::from_projections(dim + 1, cfg.k, cfg.l, proj);
+    let family = AlshMips::from_parts(dim, max_norm, srp).map_err(invalid)?;
+    let mut tables = Vec::with_capacity(cfg.l);
+    for _ in 0..cfg.l {
+        let node_fp = read_u32s(r, n_nodes)?;
+        let mut buckets = Vec::with_capacity(1 << cfg.k);
+        for _ in 0..(1usize << cfg.k) {
+            let len = read_u32(r)? as usize;
+            if len > n_nodes {
+                return Err(invalid(format!("bucket of {len} ids exceeds {n_nodes} nodes")));
+            }
+            buckets.push(read_u32s(r, len)?);
+        }
+        tables.push(HashTable::from_parts(cfg.k, node_fp, buckets).map_err(invalid)?);
+    }
+    FrozenLayerTables::from_parts(cfg, family, tables, n_nodes).map_err(invalid)
+}
+
+/// Load either model format. v1 files come back as a table-less snapshot
+/// with the default sampler config (LSH @ 5%) and seed 42 — enough for
+/// [`ModelSnapshot::ensure_tables`] to rebuild deterministically.
+pub fn load_snapshot(path: &Path) -> io::Result<ModelSnapshot> {
+    let mut r = io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic == MODEL_MAGIC {
+        let net = read_network_body(&mut r)?;
+        return Ok(ModelSnapshot::without_tables(net, SamplerConfig::default(), 42));
+    }
+    if &magic != SNAPSHOT_MAGIC {
+        return Err(invalid("not a hashdl model file"));
+    }
+    let net = read_network_body(&mut r)?;
+    let method = Method::parse(&read_str(&mut r)?).map_err(invalid)?;
+    let sparsity = read_f32(&mut r)?;
+    let lsh = LshConfig {
+        k: read_u32(&mut r)? as usize,
+        l: read_u32(&mut r)? as usize,
+        probes_per_table: read_u32(&mut r)? as usize,
+        crowded_limit: read_u32(&mut r)? as usize,
+        rerank_factor: read_u32(&mut r)? as usize,
+        rehash_probability: read_f32(&mut r)?,
+    };
+    if lsh.k == 0 || lsh.k > 16 || lsh.l == 0 {
+        return Err(invalid(format!("snapshot LSH config K={} L={} out of range", lsh.k, lsh.l)));
+    }
+    let rebuild_every_epochs = read_u32(&mut r)? as usize;
+    let sampler = SamplerConfig {
+        method,
+        sparsity,
+        lsh,
+        rebuild_every_epochs,
+        ..SamplerConfig::default()
+    };
+    let seed = read_u64(&mut r)?;
+    let n_sets = read_u32(&mut r)? as usize;
+    let tables = if n_sets == 0 {
+        None
+    } else {
+        if n_sets != net.n_hidden() {
+            return Err(invalid(format!(
+                "snapshot has {n_sets} table sets for {} hidden layers",
+                net.n_hidden()
+            )));
+        }
+        let mut sets = Vec::with_capacity(n_sets);
+        for l in 0..n_sets {
+            let set = read_table_set(&mut r, lsh)?;
+            if set.n_nodes() != net.layers[l].n_out() {
+                return Err(invalid(format!(
+                    "table set {l} covers {} nodes, layer has {}",
+                    set.n_nodes(),
+                    net.layers[l].n_out()
+                )));
+            }
+            sets.push(set);
+        }
+        Some(sets)
+    };
+    Ok(ModelSnapshot { net, sampler, seed, tables })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::activation::Activation;
+    use crate::nn::network::{Network, NetworkConfig};
+
+    fn tiny_net(seed: u64) -> Network {
+        let cfg = NetworkConfig { n_in: 12, hidden: vec![40, 40], n_out: 3, act: Activation::ReLU };
+        Network::new(&cfg, &mut Pcg64::seeded(seed))
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("hashdl_snap_{name}_{}.bin", std::process::id()))
+    }
+
+    #[test]
+    fn snapshot_roundtrip_with_tables() {
+        let net = tiny_net(1);
+        let mut snap = ModelSnapshot::without_tables(net, SamplerConfig::default(), 7);
+        snap.ensure_tables();
+        let path = tmp("rt");
+        save_snapshot(&snap, &path).unwrap();
+        let back = load_snapshot(&path).unwrap();
+        assert_eq!(back.seed, 7);
+        assert_eq!(back.sampler.method, Method::Lsh);
+        for (a, b) in back.net.layers.iter().zip(&snap.net.layers) {
+            assert_eq!(a.w, b.w);
+            assert_eq!(a.b, b.b);
+        }
+        let (ta, tb) = (back.tables.as_ref().unwrap(), snap.tables.as_ref().unwrap());
+        assert_eq!(ta.len(), tb.len());
+        for (a, b) in ta.iter().zip(tb.iter()) {
+            assert_eq!(a.tables(), b.tables(), "bucket contents must round-trip bitwise");
+            assert_eq!(a.family().max_norm(), b.family().max_norm());
+            assert_eq!(
+                a.family().srp().projections(),
+                b.family().srp().projections(),
+                "projections must round-trip bitwise"
+            );
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn tableless_rebuild_is_deterministic() {
+        let mut a = ModelSnapshot::without_tables(tiny_net(2), SamplerConfig::default(), 99);
+        let mut b = ModelSnapshot::without_tables(tiny_net(2), SamplerConfig::default(), 99);
+        a.ensure_tables();
+        b.ensure_tables();
+        for (x, y) in a.tables.as_ref().unwrap().iter().zip(b.tables.as_ref().unwrap()) {
+            assert_eq!(x.tables(), y.tables());
+            assert_eq!(x.family().srp().projections(), y.family().srp().projections());
+        }
+    }
+
+    #[test]
+    fn legacy_v1_file_loads_as_tableless_snapshot() {
+        let net = tiny_net(3);
+        let path = tmp("v1");
+        crate::data::io::save_network(&net, &path).unwrap();
+        let mut snap = load_snapshot(&path).unwrap();
+        assert!(snap.tables.is_none());
+        for (a, b) in snap.net.layers.iter().zip(&net.layers) {
+            assert_eq!(a.w, b.w);
+        }
+        assert_eq!(snap.ensure_tables().len(), net.n_hidden());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn v2_file_loads_through_plain_load_network() {
+        let mut snap = ModelSnapshot::without_tables(tiny_net(4), SamplerConfig::default(), 5);
+        snap.ensure_tables();
+        let path = tmp("compat");
+        save_snapshot(&snap, &path).unwrap();
+        let net = crate::data::io::load_network(&path).unwrap();
+        for (a, b) in net.layers.iter().zip(&snap.net.layers) {
+            assert_eq!(a.w, b.w);
+            assert_eq!(a.b, b.b);
+        }
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -643,6 +643,27 @@ impl Trainer {
         record
     }
 
+    /// Freeze the trained model into a serving snapshot. When every hidden
+    /// layer's selector maintains LSH tables (method = LSH), the snapshot
+    /// ships the *live* tables — the exact buckets training ended with, so
+    /// serving replicas select the same active sets training would have.
+    /// Other methods emit a table-less snapshot that
+    /// [`crate::serve::ModelSnapshot::ensure_tables`] rebuilds
+    /// deterministically from the weights on load.
+    pub fn snapshot(&self) -> crate::serve::ModelSnapshot {
+        let frozen: Vec<crate::lsh::frozen::FrozenLayerTables> = self
+            .selectors
+            .iter()
+            .filter_map(|s| s.lsh_tables().map(crate::lsh::frozen::FrozenLayerTables::freeze))
+            .collect();
+        crate::serve::ModelSnapshot {
+            net: self.net.clone(),
+            sampler: self.cfg.sampler,
+            seed: self.cfg.seed,
+            tables: if frozen.len() == self.net.n_hidden() { Some(frozen) } else { None },
+        }
+    }
+
     /// One epoch over shuffled training data + evaluation.
     pub fn run_epoch(&mut self, epoch: usize, train: &Dataset, test: &Dataset) -> EpochRecord {
         let t0 = Instant::now();
@@ -815,6 +836,38 @@ mod tests {
         let first = rec.epochs.first().unwrap().train_loss;
         let last = rec.epochs.last().unwrap().train_loss;
         assert!(last < first, "loss should fall: {first} -> {last}");
+    }
+
+    #[test]
+    fn snapshot_ships_live_tables_for_lsh_only() {
+        let (train, test) = blob_dataset(120, 16, 9);
+        let mut t = Trainer::new(
+            net(16, 32),
+            TrainConfig {
+                epochs: 1,
+                sampler: SamplerConfig::with_method(Method::Lsh, 0.25),
+                ..Default::default()
+            },
+        );
+        t.run(&train, &test);
+        let snap = t.snapshot();
+        let tables = snap.tables.as_ref().expect("LSH trainer must ship tables");
+        assert_eq!(tables.len(), snap.net.n_hidden());
+        for (l, ft) in tables.iter().enumerate() {
+            assert_eq!(ft.n_nodes(), snap.net.layers[l].n_out());
+            // The frozen buckets are the live selector's buckets.
+            assert_eq!(ft.tables(), t.selectors[l].lsh_tables().unwrap().tables());
+        }
+        let mut t2 = Trainer::new(
+            net(16, 32),
+            TrainConfig {
+                epochs: 1,
+                sampler: SamplerConfig::with_method(Method::Standard, 1.0),
+                ..Default::default()
+            },
+        );
+        t2.run(&train, &test);
+        assert!(t2.snapshot().tables.is_none(), "non-LSH methods have no tables to ship");
     }
 
     #[test]
