@@ -1,13 +1,17 @@
 //! Binary (de)serialization for datasets and model checkpoints — a small
 //! versioned little-endian format (no serde in the offline crate set).
 //!
-//! Two model formats coexist:
+//! Three model formats coexist:
 //! * **v1** (`HDLMODL1`) — weights only, written by [`save_network`].
 //! * **v2** (`HDLMODL2`) — the frozen serving snapshot: weights + sampler
 //!   config + prehashed LSH tables, implemented in
 //!   [`crate::serve::snapshot`] on top of the primitive helpers exported
-//!   here. [`load_network`] accepts both, so every old call site keeps
-//!   working on new files (the table payload is simply dropped).
+//!   here.
+//! * **v3** (`HDLMODL3`) — v2 with bit-packed per-table fingerprints
+//!   (K bits each instead of 32); the current default writer.
+//!
+//! [`load_network`] accepts all three, so every old weights-only call
+//! site keeps working on new files (the table payload is simply dropped).
 
 use crate::data::dataset::Dataset;
 use crate::nn::activation::Activation;
@@ -20,6 +24,7 @@ use std::path::Path;
 const DATASET_MAGIC: &[u8; 8] = b"HDLDATA1";
 pub(crate) const MODEL_MAGIC: &[u8; 8] = b"HDLMODL1";
 pub(crate) const SNAPSHOT_MAGIC: &[u8; 8] = b"HDLMODL2";
+pub(crate) const SNAPSHOT3_MAGIC: &[u8; 8] = b"HDLMODL3";
 
 pub(crate) fn write_u32(w: &mut impl Write, v: u32) -> io::Result<()> {
     w.write_all(&v.to_le_bytes())
@@ -168,14 +173,16 @@ pub(crate) fn read_network_body(r: &mut impl Read) -> io::Result<Network> {
     Ok(Network { layers })
 }
 
-/// Load the network weights from either model format: legacy v1 files or
-/// v2 serving snapshots (whose table payload is ignored here — use
-/// [`crate::serve::snapshot::load_snapshot`] to keep it).
+/// Load the network weights from any model format: legacy v1 files, v2
+/// serving snapshots, or v3 bit-packed snapshots (the table payload is
+/// ignored here — use [`crate::serve::snapshot::load_snapshot`] to keep
+/// it). All three formats put the network body right after the magic, so
+/// old weight-only readers keep working on new files.
 pub fn load_network(path: &Path) -> io::Result<Network> {
     let mut r = io::BufReader::new(std::fs::File::open(path)?);
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)?;
-    if &magic != MODEL_MAGIC && &magic != SNAPSHOT_MAGIC {
+    if &magic != MODEL_MAGIC && &magic != SNAPSHOT_MAGIC && &magic != SNAPSHOT3_MAGIC {
         return Err(invalid("not a hashdl model file"));
     }
     read_network_body(&mut r)

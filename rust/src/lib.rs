@@ -20,6 +20,7 @@ pub mod data;
 pub mod lsh;
 pub mod nn;
 pub mod optim;
+pub mod publish;
 pub mod runtime;
 pub mod sampling;
 pub mod serve;
@@ -33,6 +34,7 @@ pub mod prelude {
     pub use crate::lsh::{LayerTables, LshConfig};
     pub use crate::nn::{Activation, Network, NetworkConfig};
     pub use crate::optim::{OptimConfig, OptimizerKind};
+    pub use crate::publish::{ModelParts, PublishedModel, TablePublisher, TableReader};
     pub use crate::sampling::{Method, SamplerConfig};
     pub use crate::serve::{
         load_snapshot, save_snapshot, InferenceWorkspace, ModelSnapshot, PoolConfig, ServePool,

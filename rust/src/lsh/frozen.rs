@@ -26,7 +26,10 @@ use crate::util::rng::{splitmix64, Pcg64};
 
 /// Immutable per-layer (K, L) table stack. All fields are plain data, so
 /// the struct is `Send + Sync` and can be shared across worker threads
-/// behind an `Arc` without locks.
+/// behind an `Arc` without locks. `Clone` exists for the publication path
+/// (`publish::ModelParts` re-publishes table stacks wholesale); queries
+/// never clone.
+#[derive(Clone)]
 pub struct FrozenLayerTables {
     cfg: LshConfig,
     family: AlshMips,

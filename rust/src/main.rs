@@ -3,8 +3,12 @@
 //! Subcommands:
 //!   gen-data     synthesize a benchmark dataset to a binary file
 //!   train        train one configuration (sequential or ASGD)
+//!   train-serve  train and serve from one process: the trainer publishes
+//!                epoch snapshots through the lock-free publish slot while
+//!                a ServePool answers live traffic
 //!   eval         evaluate a saved model on a dataset (dense or --sparse)
-//!   serve-bench  closed-loop serving benchmark (dense vs sparse, 1..N workers)
+//!   serve-bench  serving benchmark (closed or open loop, dense vs sparse,
+//!                1..N workers, optional train-while-serve scenario)
 //!   experiment   regenerate a paper table/figure (table3|fig4|fig5|fig6|fig7|fig8)
 //!   std-pjrt     run the dense STD baseline through the PJRT artifacts
 
@@ -13,12 +17,14 @@ use hashdl::data::synth::Benchmark;
 use hashdl::nn::activation::Activation;
 use hashdl::nn::network::{Network, NetworkConfig};
 use hashdl::optim::{OptimConfig, OptimizerKind};
+use hashdl::publish::{ModelParts, TablePublisher};
 use hashdl::sampling::{Method, SamplerConfig};
 use hashdl::serve::bench::{mult_fraction, throughput_scaling, write_bench_json, BenchConfig};
 use hashdl::serve::pool::PoolConfig;
 use hashdl::serve::{
-    load_snapshot, run_closed_loop, save_snapshot, InferenceWorkspace, ModelSnapshot,
-    SparseInferenceEngine,
+    drive_clients_while, load_snapshot, run_closed_loop, run_open_loop, run_train_while_serve,
+    save_snapshot, InferenceWorkspace, ModelSnapshot, ServePool, SparseInferenceEngine,
+    TrainServeConfig,
 };
 use hashdl::train::asgd::{run_asgd, AsgdConfig};
 use hashdl::train::trainer::{TrainConfig, Trainer};
@@ -26,7 +32,7 @@ use hashdl::util::argparse::{Args, Parser};
 use hashdl::util::config::Config;
 use hashdl::util::rng::Pcg64;
 use std::path::{Path, PathBuf};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Effective option value with three-layer precedence: an explicit CLI
 /// flag wins, then a `[train]` config-file key, then the flag's declared
@@ -63,6 +69,7 @@ fn main() {
     let code = match cmd.as_str() {
         "gen-data" => cmd_gen_data(args),
         "train" => cmd_train(args),
+        "train-serve" => cmd_train_serve(args),
         "eval" => cmd_eval(args),
         "serve-bench" => cmd_serve_bench(args),
         "experiment" => cmd_experiment(args),
@@ -89,18 +96,23 @@ USAGE: hashdl <subcommand> [flags]
               [--hidden <h>] [--depth <d>] [--config <file.conf>]
               [--lr <f>] [--optimizer <sgd|momentum|adagrad|momentum-adagrad>]
               [--k <bits>] [--tables <L>] [--save <model.bin>]
+  train-serve --dataset <..> [--epochs e] [--batch-size B] [--sparsity f]
+              [--publish-every <batches>] [--workers w] [--clients c]
+              [--out BENCH_train_serve.json]   (train + serve, one process)
   eval        --model <model.bin> --dataset <..> [--n <N>] [--batch-size <B>]
               [--sparse]   (serve through the snapshot's frozen LSH tables)
   serve-bench [--dataset <..>] [--model <snap.bin>] [--requests <N>]
               [--workers 1,4] [--modes dense,sparse] [--batch-cap <B>]
-              [--deadline-us <t>] [--sparsity <f>] [--out BENCH_serve.json]
+              [--deadline-us <t>] [--sparsity <f>] [--arrival-rate <r>]
+              [--train-serve] [--out BENCH_serve.json]
   experiment  <table3|fig4|fig5|fig6|fig7|fig8> [--scale quick|medium|paper]
               [--datasets a,b] [--out-dir results/]
   std-pjrt    --variant <tiny|mnist|norb|convex|rectangles> [--epochs e] [--lr f]
               [--artifacts dir]
 
-`train --save` writes a v2 serving snapshot (weights + frozen LSH tables);
-`eval` and `serve-bench` load both v2 snapshots and legacy v1 model files.
+`train --save` writes a v3 serving snapshot (weights + bit-packed frozen
+LSH tables; ASGD runs rebuild tables from the merged weights at join);
+`eval` and `serve-bench` load v3/v2 snapshots and legacy v1 model files.
 Run any subcommand with --help for full flags.";
 
 fn parse_benchmark(name: &str) -> Benchmark {
@@ -251,9 +263,10 @@ fn cmd_train(rest: Vec<String>) -> i32 {
             },
         );
         // ASGD workers each own per-thread tables over the shared weights;
-        // none is canonical, so ship a table-less snapshot that rebuilds
-        // deterministically on load.
-        let snap = saving.then(|| ModelSnapshot::without_tables(out.net, sampler, seed));
+        // none is canonical, so rebuild tables once from the merged
+        // weights at join — the snapshot ships real trained-weight tables
+        // instead of a table-less file (ROADMAP: ASGD snapshot fidelity).
+        let snap = saving.then(|| ModelSnapshot::with_rebuilt_tables(out.net, sampler, seed));
         (out.record, snap)
     } else {
         let mut t = Trainer::new(
@@ -286,9 +299,184 @@ fn cmd_train(rest: Vec<String>) -> i32 {
     0
 }
 
+/// Train-while-serve: one process runs the trainer on the main thread
+/// publishing epoch (and optionally every-N-batch) snapshots through the
+/// lock-free publish slot, while a [`ServePool`] answers a closed-loop
+/// client stream from the same model. Demonstrates the paper's
+/// "asynchronous and parallel" systems claim end to end: serving latency
+/// is unaffected by publication because the swap is one atomic pointer
+/// exchange and workers re-pin between micro-batches.
+fn cmd_train_serve(rest: Vec<String>) -> i32 {
+    let p = Parser::new("hashdl train-serve", "train while serving live traffic (one process)")
+        .opt_req("dataset", "benchmark name")
+        .opt("method", "lsh", "node selection (must maintain live tables: lsh)")
+        .opt("sparsity", "0.05", "target active-node fraction")
+        .opt("batch-size", "16", "minibatch size")
+        .opt("epochs", "3", "training epochs")
+        .opt("hidden", "256", "hidden layer width")
+        .opt("depth", "2", "number of hidden layers")
+        .opt("train-size", "0", "training samples (0 = dataset default)")
+        .opt("test-size", "0", "test samples (0 = dataset default)")
+        .opt("lr", "0.01", "learning rate")
+        .opt("k", "6", "LSH bits per table")
+        .opt("tables", "5", "LSH tables per layer")
+        .opt("probes", "10", "multiprobe buckets per table")
+        .opt("rerank", "0", "re-rank factor (0=off)")
+        .opt("rehash-prob", "1.0", "probability of rehashing each updated row")
+        .opt("seed", "42", "run seed")
+        .opt("eval-cap", "1000", "max test examples per evaluation")
+        .opt("publish-every", "0", "also publish every N minibatches (0 = epochs only)")
+        .opt("workers", "2", "serving worker threads")
+        .opt("clients", "0", "closed-loop client threads (0 = 2x workers)")
+        .opt("batch-cap", "32", "micro-batch size cap")
+        .opt("deadline-us", "200", "micro-batch close deadline (microseconds)")
+        .opt("queue-cap", "1024", "bounded request-queue capacity")
+        .opt("out", "BENCH_train_serve.json", "JSON output path")
+        .flag("quiet", "suppress per-epoch logging");
+    let a = p.parse_rest(rest);
+
+    let method = Method::parse(a.get_or("method", "lsh")).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2)
+    });
+    if method != Method::Lsh {
+        eprintln!("train-serve requires --method lsh: serving reads live LSH tables");
+        return 2;
+    }
+    let b = parse_benchmark(a.get("dataset").unwrap_or_default());
+    let (dtr, dte) = b.default_sizes();
+    let n_tr = match a.parse_or("train-size", 0usize) {
+        0 => dtr,
+        n => n,
+    };
+    let n_te = match a.parse_or("test-size", 0usize) {
+        0 => dte,
+        n => n,
+    };
+    let seed = a.parse_or("seed", 42u64);
+    eprintln!("generating {} train / {} test samples of {}...", n_tr, n_te, b.name());
+    let (train, test) = b.generate(n_tr, n_te, seed);
+
+    let mut sampler = SamplerConfig::with_method(method, a.parse_or("sparsity", 0.05f32));
+    sampler.lsh.k = a.parse_or("k", 6usize);
+    sampler.lsh.l = a.parse_or("tables", 5usize);
+    sampler.lsh.probes_per_table = a.parse_or("probes", 10usize);
+    sampler.lsh.rerank_factor = a.parse_or("rerank", 0usize);
+    sampler.lsh.rehash_probability = a.parse_or("rehash-prob", 1.0f32);
+    let optim = OptimConfig { lr: a.parse_or("lr", 0.01f32), ..Default::default() };
+    let net = Network::new(
+        &NetworkConfig {
+            n_in: b.dim(),
+            hidden: vec![a.parse_or("hidden", 256usize); a.parse_or("depth", 2usize)],
+            n_out: b.n_classes(),
+            act: Activation::ReLU,
+        },
+        &mut Pcg64::seeded(seed),
+    );
+    let net_desc: String = {
+        let mut dims = vec![net.n_in().to_string()];
+        dims.extend(net.layers.iter().map(|l| l.n_out().to_string()));
+        dims.join("-")
+    };
+
+    let mut trainer = Trainer::new(
+        net,
+        TrainConfig {
+            epochs: a.parse_or("epochs", 3usize).max(1),
+            batch_size: a.parse_or("batch-size", 16usize).max(1),
+            optim,
+            sampler,
+            seed,
+            eval_cap: a.parse_or("eval-cap", 1000usize),
+            verbose: !a.has("quiet"),
+        },
+    );
+    let publish_every = a.parse_or("publish-every", 0usize);
+    let parts = trainer.model_parts().expect("LSH trainer always has tables");
+    let (publisher, reader) = TablePublisher::start(parts);
+    trainer.attach_publisher(publisher, publish_every);
+    let engine = SparseInferenceEngine::live(reader);
+
+    let workers = a.parse_or("workers", 2usize).max(1);
+    let clients = match a.parse_or("clients", 0usize) {
+        0 => (workers * 2).max(1),
+        c => c,
+    };
+    let pool = ServePool::start(
+        engine.clone(),
+        PoolConfig {
+            workers,
+            queue_cap: a.parse_or("queue-cap", 1024usize).max(1),
+            max_batch: a.parse_or("batch-cap", 32usize).max(1),
+            batch_deadline: Duration::from_micros(a.parse_or("deadline-us", 200u64)),
+            sparse: true,
+        },
+    );
+
+    // Clients hammer the live model closed-loop until training completes;
+    // the trainer publishes new versions underneath them the whole time.
+    // The measurement pipeline is serve::bench's — one implementation.
+    let t0 = Instant::now();
+    let (samples, record) =
+        drive_clients_while(&pool, clients, &test.xs, &test.ys, || trainer.run(&train, &test));
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    let stats = pool.shutdown();
+    let versions_published = trainer.published_versions();
+
+    let served = samples.served();
+    println!(
+        "train-serve: {} requests served @ {:.0} req/s while training | p50 {}us p99 {}us \
+         | {} versions published, {} distinct served, {} worker re-pins, dropped {} \
+         | serve acc {:.3} | final train acc {:.3}",
+        served,
+        served as f64 / wall,
+        samples.p50_micros(),
+        samples.p99_micros(),
+        versions_published,
+        samples.versions.len(),
+        stats.version_switches,
+        samples.dropped,
+        samples.accuracy(),
+        record.final_acc(),
+    );
+    let json = format!(
+        "{{\n  \"bench\": \"train_serve\",\n  \"dataset\": \"{}\",\n  \"network\": \"{}\",\n  \
+         \"epochs\": {},\n  \"publish_every_batches\": {},\n  \"workers\": {},\n  \
+         \"clients\": {},\n  \"requests\": {},\n  \"requests_per_sec\": {:.1},\n  \
+         \"p50_micros\": {},\n  \"p99_micros\": {},\n  \"mean_micros\": {:.1},\n  \
+         \"versions_published\": {},\n  \"distinct_versions_served\": {},\n  \
+         \"version_switches\": {},\n  \"dropped\": {},\n  \"serve_accuracy\": {:.4},\n  \
+         \"final_train_accuracy\": {:.4}\n}}\n",
+        b.name(),
+        net_desc,
+        trainer.cfg.epochs,
+        publish_every,
+        workers,
+        clients,
+        served,
+        served as f64 / wall,
+        samples.p50_micros(),
+        samples.p99_micros(),
+        samples.mean_micros(),
+        versions_published,
+        samples.versions.len(),
+        stats.version_switches,
+        samples.dropped,
+        samples.accuracy(),
+        record.final_acc(),
+    );
+    let out = PathBuf::from(a.get_or("out", "BENCH_train_serve.json"));
+    if let Err(e) = std::fs::write(&out, json) {
+        eprintln!("error writing {}: {e}", out.display());
+        return 1;
+    }
+    println!("wrote {}", out.display());
+    0
+}
+
 fn cmd_eval(rest: Vec<String>) -> i32 {
     let p = Parser::new("hashdl eval", "evaluate a saved model")
-        .opt_req("model", "model path (v1 weights or v2 serving snapshot)")
+        .opt_req("model", "model path (v1 weights or v2/v3 serving snapshot)")
         .opt_req("dataset", "benchmark name")
         .opt("n", "2000", "test samples to generate")
         .opt("seed", "43", "generator seed")
@@ -349,6 +537,10 @@ fn cmd_serve_bench(rest: Vec<String>) -> i32 {
         .opt("deadline-us", "200", "micro-batch close deadline (microseconds)")
         .opt("queue-cap", "1024", "bounded request-queue capacity")
         .opt("modes", "dense,sparse", "comma-separated modes to run")
+        .opt("arrival-rate", "0", "open-loop Poisson arrivals per second (0 = closed loop)")
+        .flag("train-serve", "also run the train-while-serve scenario (publish during traffic)")
+        .opt("publish-every-ms", "50", "train-serve: gap between background publications")
+        .opt("publishes", "8", "train-serve: background publications to attempt")
         .opt("seed", "42", "run seed")
         .opt("out", "BENCH_serve.json", "JSON output path");
     let a = p.parse_rest(rest);
@@ -406,13 +598,25 @@ fn cmd_serve_bench(rest: Vec<String>) -> i32 {
     if a.set_explicitly("sparsity") {
         snap.sampler.sparsity = sparsity;
     }
-    let engine = SparseInferenceEngine::from_snapshot(snap);
+    // Parts are the publishable form; the sweep serves them frozen and the
+    // optional train-serve scenario re-publishes them live. Only keep a
+    // copy when that scenario will actually run — the clone is a full
+    // weights + table-stack duplication.
+    let parts = ModelParts::from_snapshot(snap);
+    let train_serve_enabled = a.has("train-serve");
+    let (engine, scenario_parts) = if train_serve_enabled {
+        (SparseInferenceEngine::frozen(parts.clone()), Some(parts))
+    } else {
+        (SparseInferenceEngine::frozen(parts), None)
+    };
+    let model = engine.current();
     let net_desc: String = {
-        let mut dims = vec![engine.net().n_in().to_string()];
-        dims.extend(engine.net().layers.iter().map(|l| l.n_out().to_string()));
+        let mut dims = vec![model.net.n_in().to_string()];
+        dims.extend(model.net.layers.iter().map(|l| l.n_out().to_string()));
         dims.join("-")
     };
     let dense_per_req = engine.dense_mults_per_request();
+    let arrival_rate = a.parse_or("arrival-rate", 0.0f64);
 
     let worker_counts: Vec<usize> =
         a.list("workers").iter().map(|w| w.parse().unwrap_or(1).max(1)).collect();
@@ -444,10 +648,14 @@ fn cmd_serve_bench(rest: Vec<String>) -> i32 {
                 clients: a.parse_or("clients", 0usize),
                 requests: n_requests,
             };
-            let r = run_closed_loop(&engine, &stream.xs, &stream.ys, &cfg);
+            let r = if arrival_rate > 0.0 {
+                run_open_loop(&engine, &stream.xs, &stream.ys, &cfg, arrival_rate, seed)
+            } else {
+                run_closed_loop(&engine, &stream.xs, &stream.ys, &cfg)
+            };
             println!(
                 "{:>6} w={:<2} {:>9.0} req/s  p50 {:>6}us  p99 {:>6}us  \
-                 {:>10.0} mults/req ({:>5.1}% of dense)  batch {:>5.2}  acc {:.3}",
+                 {:>10.0} mults/req ({:>5.1}% of dense)  batch {:>5.2}  acc {:.3}{}",
                 r.mode,
                 r.workers,
                 r.requests_per_sec,
@@ -457,6 +665,11 @@ fn cmd_serve_bench(rest: Vec<String>) -> i32 {
                 100.0 * r.mults_per_request / dense_per_req.max(1) as f64,
                 r.mean_batch,
                 r.accuracy,
+                if r.open_loop {
+                    format!("  (open loop @ {:.0}/s, dropped {})", r.offered_rate, r.dropped)
+                } else {
+                    String::new()
+                },
             );
             results.push(r);
         }
@@ -473,8 +686,55 @@ fn cmd_serve_bench(rest: Vec<String>) -> i32 {
             throughput_scaling(&results, "sparse"),
         );
     }
+    // Train-while-serve scenario: the same closed-loop workload with a
+    // background thread publishing fresh model versions mid-traffic.
+    let train_serve = train_serve_enabled.then(|| {
+        let workers = worker_counts.iter().copied().max().unwrap_or(1);
+        let cfg = BenchConfig {
+            pool: PoolConfig {
+                workers,
+                queue_cap: a.parse_or("queue-cap", 1024usize).max(1),
+                max_batch: a.parse_or("batch-cap", 32usize).max(1),
+                batch_deadline: Duration::from_micros(a.parse_or("deadline-us", 200u64)),
+                sparse: true,
+            },
+            clients: a.parse_or("clients", 0usize),
+            requests: n_requests,
+        };
+        let ts = TrainServeConfig {
+            publish_every: Duration::from_millis(a.parse_or("publish-every-ms", 50u64)),
+            publishes: a.parse_or("publishes", 8usize),
+            table_seed: seed ^ 0x9_0B,
+        };
+        let report = run_train_while_serve(
+            scenario_parts.expect("parts kept when the scenario is enabled"),
+            &stream.xs,
+            &stream.ys,
+            &cfg,
+            &ts,
+        );
+        println!(
+            "train-serve w={workers}: baseline p50 {}us p99 {}us | live p50 {}us p99 {}us \
+             | {} versions published, {} distinct versions served, dropped {}",
+            report.baseline.p50_micros,
+            report.baseline.p99_micros,
+            report.live.p50_micros,
+            report.live.p99_micros,
+            report.versions_published,
+            report.live.distinct_versions,
+            report.live.dropped,
+        );
+        report
+    });
     let out = PathBuf::from(a.get_or("out", "BENCH_serve.json"));
-    match write_bench_json(&out, &net_desc, engine.shared().sparsity, dense_per_req, &results) {
+    match write_bench_json(
+        &out,
+        &net_desc,
+        model.sparsity,
+        dense_per_req,
+        &results,
+        train_serve.as_ref(),
+    ) {
         Ok(()) => println!("wrote {}", out.display()),
         Err(e) => {
             eprintln!("error writing {}: {e}", out.display());

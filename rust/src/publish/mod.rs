@@ -1,0 +1,263 @@
+//! Live table publication: one ownership model for LSH tables across
+//! training and serving.
+//!
+//! Before this module the repo had two parallel owners of hash tables: the
+//! trainer's mutable [`crate::lsh::layered::LayerTables`] and the serving
+//! engine's fixed `Arc` of frozen state loaded from a snapshot file. A
+//! trainer that wants to keep learning *while* workers keep serving needs
+//! a third thing: a channel through which the trainer can re-publish its
+//! tables (and weights) without ever blocking a reader mid-request.
+//!
+//! The pieces:
+//! * [`PublishedModel`] — one immutable, version-stamped epoch snapshot:
+//!   weights copy + frozen table stack + serving config. Everything a
+//!   worker needs to answer a request, and nothing mutable.
+//! * [`TablePublisher`] / [`TableReader`] — the write and read halves of a
+//!   lock-free publication slot ([`slot::Slot`], an RCU cell). The
+//!   publisher freezes a new `PublishedModel` at its leisure and installs
+//!   it with one atomic pointer swap; readers snapshot the current model
+//!   with three atomic ops and then run entirely on their private `Arc`.
+//!   A frozen-snapshot deployment is just a publisher that publishes
+//!   exactly once and drops.
+//!
+//! **Versioning contract:** versions are assigned by the publisher,
+//! strictly increasing from 0 (the model `TablePublisher::start` was given).
+//! Readers observe versions monotonically, and every response served from
+//! version `v` is bit-for-bit reproducible against the `PublishedModel`
+//! stamped `v` — pinned by `tests/publish_stress.rs`.
+
+pub mod slot;
+
+use crate::lsh::frozen::FrozenLayerTables;
+use crate::nn::network::Network;
+use crate::serve::snapshot::ModelSnapshot;
+use slot::Slot;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// One immutable published epoch of the model: the unit of exchange
+/// between a trainer and its serving workers. Cheap to share (`Arc`),
+/// impossible to observe half-updated (readers get whole versions or
+/// nothing).
+pub struct PublishedModel {
+    pub net: Network,
+    /// One frozen table stack per hidden layer.
+    pub tables: Vec<FrozenLayerTables>,
+    /// Active-node fraction per hidden layer (the serving top-k knob).
+    pub sparsity: f32,
+    /// §5.4 cheap re-rank factor carried from training (0/1 = disabled).
+    pub rerank_factor: usize,
+    /// Monotonic publication stamp; every [`crate::serve::pool::Response`]
+    /// carries the version it was served from.
+    pub version: u64,
+}
+
+/// The ingredients of a publication, before a version is stamped on them.
+/// Building parts is the expensive half (weights clone + table freeze) and
+/// happens on the publisher's thread; the swap itself is atomic.
+#[derive(Clone)]
+pub struct ModelParts {
+    pub net: Network,
+    pub tables: Vec<FrozenLayerTables>,
+    pub sparsity: f32,
+    pub rerank_factor: usize,
+}
+
+impl ModelParts {
+    /// Extract publishable parts from a loaded snapshot, rebuilding tables
+    /// deterministically if the file did not ship them.
+    pub fn from_snapshot(mut snap: ModelSnapshot) -> Self {
+        snap.ensure_tables();
+        let ModelSnapshot { net, sampler, tables, .. } = snap;
+        ModelParts {
+            net,
+            tables: tables.expect("ensure_tables populated"),
+            sparsity: sampler.sparsity,
+            rerank_factor: sampler.lsh.rerank_factor,
+        }
+    }
+
+    fn into_model(self, version: u64) -> PublishedModel {
+        assert_eq!(
+            self.tables.len(),
+            self.net.n_hidden(),
+            "one frozen table stack per hidden layer"
+        );
+        for (l, t) in self.tables.iter().enumerate() {
+            assert_eq!(
+                t.n_nodes(),
+                self.net.layers[l].n_out(),
+                "table stack {l} does not cover its layer"
+            );
+        }
+        PublishedModel {
+            net: self.net,
+            tables: self.tables,
+            sparsity: self.sparsity,
+            rerank_factor: self.rerank_factor,
+            version,
+        }
+    }
+}
+
+/// State shared between the publisher and every reader handle.
+struct Shared {
+    slot: Slot<PublishedModel>,
+    /// Mirror of the newest published version — lets readers check
+    /// staleness with one relaxed-ish load instead of pinning the slot.
+    latest: AtomicU64,
+}
+
+/// The write half: owned by whoever trains (or by a loader that publishes
+/// once). Not `Clone` — one publisher per slot, so versions are strictly
+/// increasing without coordination.
+pub struct TablePublisher {
+    shared: Arc<Shared>,
+    next: u64,
+}
+
+/// The read half: cheap to clone, one per serving engine. Never blocks.
+#[derive(Clone)]
+pub struct TableReader {
+    shared: Arc<Shared>,
+}
+
+impl TablePublisher {
+    /// Open a publication channel seeded with `parts` as version 0.
+    pub fn start(parts: ModelParts) -> (TablePublisher, TableReader) {
+        let shared = Arc::new(Shared {
+            slot: Slot::new(Arc::new(parts.into_model(0))),
+            latest: AtomicU64::new(0),
+        });
+        (TablePublisher { shared: Arc::clone(&shared), next: 1 }, TableReader { shared })
+    }
+
+    /// Publish a new epoch: stamps the next version, installs it with one
+    /// atomic swap, returns the stamped version. Readers pick it up at
+    /// their next [`TableReader::latest_version`] check; in-flight requests
+    /// finish on the version they started on.
+    pub fn publish(&mut self, parts: ModelParts) -> u64 {
+        let v = self.next;
+        self.next += 1;
+        self.shared.slot.store(Arc::new(parts.into_model(v)));
+        // Ordering: the slot swap (SeqCst) precedes this Release store, so
+        // a reader that observes `latest == v` is guaranteed to load a
+        // model with version >= v from the slot.
+        self.shared.latest.store(v, Ordering::Release);
+        v
+    }
+
+    /// Newest version published so far (0 = only the starting model).
+    pub fn version(&self) -> u64 {
+        self.next - 1
+    }
+
+    /// Another read handle onto this publisher's slot.
+    pub fn reader(&self) -> TableReader {
+        TableReader { shared: Arc::clone(&self.shared) }
+    }
+}
+
+impl TableReader {
+    /// Newest published version — the cheap staleness probe workers run
+    /// between micro-batches.
+    pub fn latest_version(&self) -> u64 {
+        self.shared.latest.load(Ordering::Acquire)
+    }
+
+    /// Identity of the publication slot this reader follows. Two readers
+    /// (or a reader and a publisher) share a slot iff these match — used
+    /// by the serving engine to assert that a workspace is answered by
+    /// the engine it was pinned from.
+    pub fn slot_id(&self) -> usize {
+        Arc::as_ptr(&self.shared) as usize
+    }
+
+    /// Snapshot the current model (lock-free; see [`slot::Slot::load`]).
+    /// The returned version is `>= latest_version()` at the time of the
+    /// call — never older.
+    pub fn current(&self) -> Arc<PublishedModel> {
+        self.shared.slot.load()
+    }
+}
+
+/// Freeze a one-shot reader over `parts`: the frozen-snapshot serving
+/// path, expressed as a publisher that publishes exactly once (version 0)
+/// and drops.
+pub fn publish_once(parts: ModelParts) -> TableReader {
+    let (_publisher, reader) = TablePublisher::start(parts);
+    reader
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lsh::layered::{LayerTables, LshConfig};
+    use crate::nn::activation::Activation;
+    use crate::nn::network::NetworkConfig;
+    use crate::sampling::SamplerConfig;
+    use crate::util::rng::Pcg64;
+
+    fn parts(seed: u64) -> ModelParts {
+        let cfg = NetworkConfig { n_in: 8, hidden: vec![24], n_out: 3, act: Activation::ReLU };
+        let net = Network::new(&cfg, &mut Pcg64::seeded(seed));
+        let mut rng = Pcg64::new(seed, 0x7AB);
+        let tables = vec![FrozenLayerTables::freeze(&LayerTables::build(
+            &net.layers[0].w,
+            LshConfig::default(),
+            &mut rng,
+        ))];
+        ModelParts { net, tables, sparsity: 0.25, rerank_factor: 0 }
+    }
+
+    #[test]
+    fn versions_are_monotone_and_stamped() {
+        let (mut publisher, reader) = TablePublisher::start(parts(1));
+        assert_eq!(reader.latest_version(), 0);
+        assert_eq!(reader.current().version, 0);
+        assert_eq!(publisher.publish(parts(2)), 1);
+        assert_eq!(publisher.publish(parts(3)), 2);
+        assert_eq!(publisher.version(), 2);
+        assert_eq!(reader.latest_version(), 2);
+        assert_eq!(reader.current().version, 2);
+    }
+
+    #[test]
+    fn readers_keep_old_versions_alive() {
+        let (mut publisher, reader) = TablePublisher::start(parts(4));
+        let pinned = reader.current();
+        publisher.publish(parts(5));
+        // The pinned epoch is still whole and still version 0.
+        assert_eq!(pinned.version, 0);
+        assert_eq!(pinned.tables.len(), pinned.net.n_hidden());
+        // A fresh snapshot sees the new epoch.
+        assert_eq!(reader.current().version, 1);
+    }
+
+    #[test]
+    fn publish_once_serves_a_frozen_model() {
+        let reader = publish_once(parts(6));
+        assert_eq!(reader.latest_version(), 0);
+        let a = reader.current();
+        let b = reader.current();
+        assert!(Arc::ptr_eq(&a, &b), "one-shot slot hands out the same epoch");
+    }
+
+    #[test]
+    fn snapshot_parts_rebuild_tables_when_missing() {
+        let cfg = NetworkConfig { n_in: 8, hidden: vec![20], n_out: 2, act: Activation::ReLU };
+        let net = Network::new(&cfg, &mut Pcg64::seeded(9));
+        let snap = ModelSnapshot::without_tables(net, SamplerConfig::default(), 9);
+        let p = ModelParts::from_snapshot(snap);
+        assert_eq!(p.tables.len(), 1);
+        assert_eq!(p.tables[0].n_nodes(), 20);
+    }
+
+    #[test]
+    #[should_panic(expected = "one frozen table stack per hidden layer")]
+    fn mismatched_parts_are_rejected() {
+        let mut p = parts(7);
+        p.tables.clear();
+        TablePublisher::start(p);
+    }
+}

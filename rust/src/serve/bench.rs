@@ -1,18 +1,40 @@
-//! Closed-loop serving benchmark: drive a [`ServePool`] with N client
-//! threads, each submitting its next request only after the previous
-//! answer arrives (classic closed-loop load generation — offered load
-//! scales with worker speed, so throughput comparisons between dense and
-//! sparse modes are fair), then report requests/sec, latency percentiles
-//! (measured client-side, submit → response) and exact multiplication
-//! counts.
+//! Serving load generators and the `BENCH_serve.json` reporter.
+//!
+//! Three scenarios:
+//! * **Closed loop** ([`run_closed_loop`]): N client threads, each
+//!   submitting its next request only after the previous answer arrives —
+//!   offered load scales with worker speed, so throughput comparisons
+//!   between dense and sparse modes are fair.
+//! * **Open loop** ([`run_open_loop`]): requests arrive on a Poisson
+//!   schedule (deterministic Pcg64 inter-arrival draws) *regardless* of
+//!   how fast the pool answers. Latency is measured from the scheduled
+//!   arrival instant, so queueing delay — including time the generator
+//!   spends blocked on backpressure — lands in the tail percentiles
+//!   instead of being coordinated-omitted away. This is where the
+//!   deadline-closed micro-batch policy actually bites.
+//! * **Train-while-serve** ([`run_train_while_serve`]): one closed-loop
+//!   run against an idle publisher (baseline) and one with a background
+//!   thread freezing + publishing new model versions on a fixed cadence.
+//!   Publication is an atomic pointer swap, so the live p50/p99 must sit
+//!   within noise of the baseline — the headline claim of the `publish`
+//!   subsystem, asserted over real traffic.
+//!
+//! All scenarios report requests/sec, latency percentiles, exact
+//! multiplication counts and the number of distinct published versions
+//! the responses were served from.
 
+use crate::lsh::frozen::FrozenLayerTables;
+use crate::lsh::layered::LayerTables;
+use crate::publish::{ModelParts, TablePublisher};
 use crate::serve::engine::SparseInferenceEngine;
 use crate::serve::pool::{PoolConfig, ServePool};
+use crate::util::rng::Pcg64;
 use std::fmt::Write as _;
 use std::io;
 use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::channel;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Load-generator tunables on top of the pool's own config.
 #[derive(Clone, Copy, Debug)]
@@ -43,7 +65,21 @@ pub struct BenchResult {
     /// Classification accuracy over the request stream (labels supplied
     /// by the caller).
     pub accuracy: f32,
+    /// Distinct published model versions observed in the responses
+    /// (1 for a frozen snapshot; >1 under concurrent publishing).
+    pub distinct_versions: u64,
+    /// Requests rejected because the pool closed underneath the generator
+    /// (0 in every healthy run).
+    pub dropped: u64,
+    /// `true` when this case ran the Poisson open-loop generator.
+    pub open_loop: bool,
+    /// Offered arrival rate in requests/sec (0 for closed-loop cases).
+    pub offered_rate: f64,
 }
+
+/// RNG stream tag for open-loop arrival schedules (one stream per run so
+/// the Poisson process is a pure function of the bench seed).
+const OPEN_LOOP_STREAM: u64 = 0x09E4_100B;
 
 /// Nearest-rank percentile. `sorted` MUST be sorted ascending — indexing
 /// is by rank, so an unsorted sample returns garbage. (Kept as a plain
@@ -56,6 +92,13 @@ pub fn percentile_micros(sorted: &[u64], p: f64) -> u64 {
     }
     let rank = ((p / 100.0) * sorted.len() as f64).ceil().max(1.0) as usize;
     sorted[rank.min(sorted.len()) - 1]
+}
+
+/// Count distinct values (sorts + dedups in place).
+fn distinct(mut versions: Vec<u64>) -> u64 {
+    versions.sort_unstable();
+    versions.dedup();
+    versions.len() as u64
 }
 
 /// Run one closed-loop benchmark: `cfg.requests` requests drawn
@@ -78,6 +121,7 @@ pub fn run_closed_loop(
     let per_client = cfg.requests / clients;
     let remainder = cfg.requests % clients;
     let mut all_latencies: Vec<u64> = Vec::with_capacity(cfg.requests);
+    let mut versions: Vec<u64> = Vec::with_capacity(cfg.requests);
     let mut correct = 0u64;
     std::thread::scope(|s| {
         let mut joins = Vec::with_capacity(clients);
@@ -90,6 +134,7 @@ pub fn run_closed_loop(
             joins.push(s.spawn(move || {
                 let (tx, rx) = channel();
                 let mut latencies = Vec::with_capacity(n);
+                let mut versions = Vec::with_capacity(n);
                 let mut correct = 0u64;
                 for id in first_id..first_id + n as u64 {
                     let i = (id as usize) % xs.len();
@@ -99,14 +144,16 @@ pub fn run_closed_loop(
                     }
                     let resp = rx.recv().expect("pool dropped a request");
                     latencies.push(sent.elapsed().as_micros() as u64);
+                    versions.push(resp.version);
                     correct += (resp.pred == ys[i]) as u64;
                 }
-                (latencies, correct)
+                (latencies, versions, correct)
             }));
         }
         for j in joins {
-            let (lat, c) = j.join().expect("client thread panicked");
+            let (lat, ver, c) = j.join().expect("client thread panicked");
             all_latencies.extend(lat);
+            versions.extend(ver);
             correct += c;
         }
     });
@@ -127,40 +174,345 @@ pub fn run_closed_loop(
         mults_per_request: stats.mults as f64 / stats.requests.max(1) as f64,
         mean_batch: stats.mean_batch(),
         accuracy: correct as f32 / stats.requests.max(1) as f32,
+        distinct_versions: distinct(versions),
+        dropped: 0,
+        open_loop: false,
+        offered_rate: 0.0,
+    }
+}
+
+/// Client-side samples from [`drive_clients_while`].
+pub struct ClientSamples {
+    /// Sorted submit→response latencies in microseconds.
+    pub latencies: Vec<u64>,
+    /// Distinct published versions observed, ascending.
+    pub versions: Vec<u64>,
+    pub correct: u64,
+    /// Requests rejected because the pool closed mid-run.
+    pub dropped: u64,
+}
+
+impl ClientSamples {
+    pub fn served(&self) -> u64 {
+        self.latencies.len() as u64
+    }
+
+    pub fn p50_micros(&self) -> u64 {
+        percentile_micros(&self.latencies, 50.0)
+    }
+
+    pub fn p99_micros(&self) -> u64 {
+        percentile_micros(&self.latencies, 99.0)
+    }
+
+    pub fn mean_micros(&self) -> f64 {
+        self.latencies.iter().sum::<u64>() as f64 / self.latencies.len().max(1) as f64
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        self.correct as f64 / self.served().max(1) as f64
+    }
+}
+
+/// Drive `clients` closed-loop client threads against an already-running
+/// pool while `work` runs on the calling thread; when `work` returns, the
+/// clients wind down (each finishes its in-flight request) and their
+/// samples are aggregated. The open-ended sibling of [`run_closed_loop`]
+/// — `train-serve` serves from this while the trainer publishes — kept
+/// here so the measurement pipeline (latency, versions, accuracy, drops)
+/// has exactly one implementation.
+pub fn drive_clients_while<T>(
+    pool: &ServePool,
+    clients: usize,
+    xs: &[Vec<f32>],
+    ys: &[u32],
+    work: impl FnOnce() -> T,
+) -> (ClientSamples, T) {
+    assert!(!xs.is_empty(), "need at least one request vector");
+    assert_eq!(xs.len(), ys.len());
+    let clients = clients.max(1);
+    let stop = AtomicBool::new(false);
+    let mut latencies: Vec<u64> = Vec::new();
+    let mut versions: Vec<u64> = Vec::new();
+    let mut correct = 0u64;
+    let mut dropped = 0u64;
+    let mut out = None;
+    std::thread::scope(|s| {
+        let stop = &stop;
+        let mut joins = Vec::with_capacity(clients);
+        for c in 0..clients {
+            let handle = pool.handle();
+            joins.push(s.spawn(move || {
+                let (tx, rx) = channel();
+                let mut lat: Vec<u64> = Vec::new();
+                let mut vers: Vec<u64> = Vec::new();
+                let mut correct = 0u64;
+                let mut dropped = 0u64;
+                // Clients stride the request stream so they cover
+                // different samples; ids stay globally unique.
+                let mut id = c as u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let i = (id as usize) % xs.len();
+                    let sent = Instant::now();
+                    if !handle.submit(id, xs[i].clone(), tx.clone()) {
+                        dropped += 1;
+                        break;
+                    }
+                    match rx.recv() {
+                        Ok(resp) => {
+                            lat.push(sent.elapsed().as_micros() as u64);
+                            vers.push(resp.version);
+                            correct += (resp.pred == ys[i]) as u64;
+                        }
+                        Err(_) => break,
+                    }
+                    id += clients as u64;
+                }
+                (lat, vers, correct, dropped)
+            }));
+        }
+        out = Some(work());
+        stop.store(true, Ordering::Relaxed);
+        for j in joins {
+            let (lat, vers, c, d) = j.join().expect("client thread panicked");
+            latencies.extend(lat);
+            versions.extend(vers);
+            correct += c;
+            dropped += d;
+        }
+    });
+    latencies.sort_unstable();
+    versions.sort_unstable();
+    versions.dedup();
+    (ClientSamples { latencies, versions, correct, dropped }, out.expect("work ran"))
+}
+
+/// Run one open-loop benchmark: `cfg.requests` requests arriving on a
+/// Poisson schedule at `rate_per_sec`, submitted by one generator thread
+/// on that schedule no matter how the pool is doing. Latency for request
+/// `i` is measured from its *scheduled* arrival instant — a generator
+/// running late (overloaded pool, full queue) charges the delay to the
+/// requests, which is exactly the tail behaviour closed-loop hides.
+pub fn run_open_loop(
+    engine: &SparseInferenceEngine,
+    xs: &[Vec<f32>],
+    ys: &[u32],
+    cfg: &BenchConfig,
+    rate_per_sec: f64,
+    seed: u64,
+) -> BenchResult {
+    assert!(!xs.is_empty(), "need at least one request vector");
+    assert_eq!(xs.len(), ys.len());
+    assert!(rate_per_sec > 0.0, "open loop needs a positive arrival rate");
+    let n = cfg.requests;
+    // Deterministic Poisson process: exponential inter-arrival gaps from
+    // the shared Pcg64, prefix-summed to offsets from t0.
+    let mut rng = Pcg64::new(seed, OPEN_LOOP_STREAM);
+    let mut offsets: Vec<Duration> = Vec::with_capacity(n);
+    let mut t = 0.0f64;
+    for _ in 0..n {
+        let u = rng.next_f64();
+        t += -(1.0 - u).ln() / rate_per_sec;
+        offsets.push(Duration::from_secs_f64(t));
+    }
+    let pool = ServePool::start(engine.clone(), cfg.pool);
+    let handle = pool.handle();
+    let t0 = Instant::now();
+    let mut latencies: Vec<u64> = Vec::with_capacity(n);
+    let mut versions: Vec<u64> = Vec::with_capacity(n);
+    let mut correct = 0u64;
+    let mut dropped = 0u64;
+    std::thread::scope(|s| {
+        let offsets = &offsets;
+        // Generator owns the tx and submits on schedule; the collector
+        // (this thread) drains rx until the channel closes.
+        let (tx, rx) = channel();
+        let gen = s.spawn(move || {
+            // Coarse sleep, then spin the last stretch: thread::sleep
+            // overshoots by tens of µs up to ~1ms, which would otherwise
+            // put a constant scheduler-wake floor under every reported
+            // percentile (latency is measured from the scheduled instant).
+            const SPIN_SLACK: Duration = Duration::from_micros(200);
+            let mut dropped = 0u64;
+            for (id, off) in offsets.iter().enumerate() {
+                let due = t0 + *off;
+                let now = Instant::now();
+                if due > now + SPIN_SLACK {
+                    std::thread::sleep(due - now - SPIN_SLACK);
+                }
+                while Instant::now() < due {
+                    std::hint::spin_loop();
+                }
+                let i = id % xs.len();
+                if !handle.submit(id as u64, xs[i].clone(), tx.clone()) {
+                    dropped += 1;
+                }
+            }
+            drop(tx);
+            dropped
+        });
+        while let Ok(resp) = rx.recv() {
+            let due = t0 + offsets[resp.id as usize];
+            latencies.push(due.elapsed().as_micros() as u64);
+            versions.push(resp.version);
+            correct += (resp.pred == ys[resp.id as usize % ys.len()]) as u64;
+        }
+        dropped = gen.join().expect("generator thread panicked");
+    });
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    let stats = pool.shutdown();
+    latencies.sort_unstable();
+    let answered = latencies.len().max(1) as f64;
+    BenchResult {
+        mode: if cfg.pool.sparse { "sparse" } else { "dense" },
+        workers: cfg.pool.workers,
+        requests: stats.requests,
+        wall_secs: wall,
+        requests_per_sec: stats.requests as f64 / wall,
+        p50_micros: percentile_micros(&latencies, 50.0),
+        p99_micros: percentile_micros(&latencies, 99.0),
+        mean_micros: latencies.iter().sum::<u64>() as f64 / answered,
+        total_mults: stats.mults,
+        mults_per_request: stats.mults as f64 / stats.requests.max(1) as f64,
+        mean_batch: stats.mean_batch(),
+        accuracy: correct as f32 / stats.requests.max(1) as f32,
+        distinct_versions: distinct(versions),
+        dropped,
+        open_loop: true,
+        offered_rate: rate_per_sec,
+    }
+}
+
+/// Train-while-serve scenario knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainServeConfig {
+    /// Gap between publications on the background publisher thread.
+    pub publish_every: Duration,
+    /// Publications to attempt during the live run.
+    pub publishes: usize,
+    /// Seed for the per-version table rebuilds.
+    pub table_seed: u64,
+}
+
+impl Default for TrainServeConfig {
+    fn default() -> Self {
+        TrainServeConfig {
+            publish_every: Duration::from_millis(50),
+            publishes: 8,
+            table_seed: 0x7AB1E,
+        }
+    }
+}
+
+/// Result of [`run_train_while_serve`]: the same closed-loop workload with
+/// an idle publisher vs. a publisher installing fresh versions mid-run.
+#[derive(Clone, Debug)]
+pub struct TrainServeReport {
+    pub baseline: BenchResult,
+    pub live: BenchResult,
+    /// Versions the background publisher actually installed.
+    pub versions_published: u64,
+}
+
+/// Benchmark the cost of concurrent publication on serving latency.
+///
+/// The background publisher does the *full* realistic payload per version —
+/// weights clone + per-layer table rebuild + freeze — off the serving
+/// path, then installs it with one atomic swap. The report's claim: `live`
+/// p50/p99 within noise of `baseline`, and `live.distinct_versions > 1`
+/// proving the swaps actually landed mid-traffic.
+pub fn run_train_while_serve(
+    parts: ModelParts,
+    xs: &[Vec<f32>],
+    ys: &[u32],
+    cfg: &BenchConfig,
+    ts: &TrainServeConfig,
+) -> TrainServeReport {
+    // Keep what the publisher thread needs before the slot consumes parts.
+    let net = parts.net.clone();
+    let table_cfgs: Vec<_> = parts.tables.iter().map(|t| t.config()).collect();
+    let sparsity = parts.sparsity;
+    let rerank_factor = parts.rerank_factor;
+
+    let (publisher, reader) = TablePublisher::start(parts);
+    let engine = SparseInferenceEngine::live(reader);
+
+    let baseline = run_closed_loop(&engine, xs, ys, cfg);
+
+    let stop = AtomicBool::new(false);
+    let mut live = None;
+    let versions_published = std::thread::scope(|s| {
+        let stop = &stop;
+        let net = &net;
+        let table_cfgs = &table_cfgs;
+        let seed = ts.table_seed;
+        let every = ts.publish_every;
+        let publishes = ts.publishes;
+        let mut publisher = publisher;
+        let pub_thread = s.spawn(move || {
+            for v in 0..publishes {
+                std::thread::sleep(every);
+                // Always land at least one publish (so the report's
+                // version counters are meaningful even if the workload
+                // finishes inside the first gap); stop early otherwise.
+                if v > 0 && stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                // Realistic publish payload: rebuild every layer's tables
+                // from the current weights with a fresh per-version RNG
+                // stream, freeze, clone the weights, publish.
+                let tables: Vec<FrozenLayerTables> = net
+                    .layers
+                    .iter()
+                    .take(net.n_hidden())
+                    .enumerate()
+                    .map(|(l, layer)| {
+                        let mut rng = Pcg64::new(seed ^ (v as u64 + 1), 0x9_0B + l as u64);
+                        FrozenLayerTables::freeze(&LayerTables::build(
+                            &layer.w,
+                            table_cfgs[l],
+                            &mut rng,
+                        ))
+                    })
+                    .collect();
+                publisher.publish(ModelParts {
+                    net: net.clone(),
+                    tables,
+                    sparsity,
+                    rerank_factor,
+                });
+            }
+            publisher.version()
+        });
+        live = Some(run_closed_loop(&engine, xs, ys, cfg));
+        stop.store(true, Ordering::Relaxed);
+        pub_thread.join().expect("publisher thread panicked")
+    });
+    TrainServeReport {
+        baseline,
+        live: live.expect("live run completed"),
+        versions_published,
     }
 }
 
 /// Serialize results to the `BENCH_serve.json` schema: run metadata, one
-/// entry per (mode, workers) case, and the headline derived ratios —
-/// sparse mult fraction vs dense and throughput scaling across worker
-/// counts per mode.
+/// entry per case, the headline derived ratios — sparse mult fraction vs
+/// dense and per-mode throughput scaling across worker counts — and, when
+/// the train-while-serve scenario ran, its baseline-vs-live comparison.
 pub fn write_bench_json(
     path: &Path,
     network: &str,
     sparsity: f32,
     dense_mults_per_request: u64,
     results: &[BenchResult],
+    train_serve: Option<&TrainServeReport>,
 ) -> io::Result<()> {
     let mut cases = String::new();
     for (i, r) in results.iter().enumerate() {
         let _ = write!(
             cases,
-            "    {{\"mode\": \"{}\", \"workers\": {}, \"requests\": {}, \
-             \"requests_per_sec\": {:.1}, \"p50_micros\": {}, \"p99_micros\": {}, \
-             \"mean_micros\": {:.1}, \"total_mults\": {}, \"mults_per_request\": {:.1}, \
-             \"mult_fraction_of_dense\": {:.4}, \"mean_batch\": {:.2}, \"accuracy\": {:.4}}}{}",
-            r.mode,
-            r.workers,
-            r.requests,
-            r.requests_per_sec,
-            r.p50_micros,
-            r.p99_micros,
-            r.mean_micros,
-            r.total_mults,
-            r.mults_per_request,
-            r.mults_per_request / dense_mults_per_request.max(1) as f64,
-            r.mean_batch,
-            r.accuracy,
+            "    {}{}",
+            case_json(r, dense_mults_per_request),
             if i + 1 < results.len() { ",\n" } else { "" }
         );
     }
@@ -180,13 +532,53 @@ pub fn write_bench_json(
             if i + 1 < ran.len() { ",\n" } else { "" }
         );
     }
+    let ts_section = match train_serve {
+        None => String::new(),
+        Some(ts) => format!(
+            ",\n  \"train_serve\": {{\n    \"versions_published\": {},\n    \
+             \"distinct_versions_served\": {},\n    \"baseline\": {},\n    \
+             \"live\": {}\n  }}",
+            ts.versions_published,
+            ts.live.distinct_versions,
+            case_json(&ts.baseline, dense_mults_per_request),
+            case_json(&ts.live, dense_mults_per_request),
+        ),
+    };
     let json = format!(
         "{{\n  \"bench\": \"serve\",\n  \"network\": \"{network}\",\n  \
          \"sparsity\": {sparsity},\n  \"dense_mults_per_request\": {dense_mults_per_request},\n  \
          \"sparse_mult_fraction\": {sparse_frac:.4},\n  \"cases\": [\n{cases}\n  ],\n  \
-         \"scaling\": [\n{scaling}\n  ]\n}}\n"
+         \"scaling\": [\n{scaling}\n  ]{ts_section}\n}}\n"
     );
     std::fs::write(path, json)
+}
+
+/// One case's JSON object (shared by the case list and the train-serve
+/// section so the schemas cannot drift).
+fn case_json(r: &BenchResult, dense_mults_per_request: u64) -> String {
+    format!(
+        "{{\"mode\": \"{}\", \"workers\": {}, \"requests\": {}, \
+         \"requests_per_sec\": {:.1}, \"p50_micros\": {}, \"p99_micros\": {}, \
+         \"mean_micros\": {:.1}, \"total_mults\": {}, \"mults_per_request\": {:.1}, \
+         \"mult_fraction_of_dense\": {:.4}, \"mean_batch\": {:.2}, \"accuracy\": {:.4}, \
+         \"distinct_versions\": {}, \"dropped\": {}, \"open_loop\": {}, \"offered_rate\": {:.1}}}",
+        r.mode,
+        r.workers,
+        r.requests,
+        r.requests_per_sec,
+        r.p50_micros,
+        r.p99_micros,
+        r.mean_micros,
+        r.total_mults,
+        r.mults_per_request,
+        r.mults_per_request / dense_mults_per_request.max(1) as f64,
+        r.mean_batch,
+        r.accuracy,
+        r.distinct_versions,
+        r.dropped,
+        r.open_loop,
+        r.offered_rate,
+    )
 }
 
 /// Sparse multiplications per request as a fraction of the dense budget
@@ -220,8 +612,24 @@ mod tests {
     use crate::nn::network::{Network, NetworkConfig};
     use crate::sampling::{Method, SamplerConfig};
     use crate::serve::snapshot::ModelSnapshot;
-    use crate::util::rng::Pcg64;
-    use std::time::Duration;
+
+    fn tiny_engine(seed: u64) -> SparseInferenceEngine {
+        let cfg = NetworkConfig { n_in: 8, hidden: vec![24], n_out: 2, act: Activation::ReLU };
+        let net = Network::new(&cfg, &mut Pcg64::seeded(seed));
+        SparseInferenceEngine::from_snapshot(ModelSnapshot::without_tables(
+            net,
+            SamplerConfig::with_method(Method::Lsh, 0.25),
+            seed,
+        ))
+    }
+
+    fn tiny_stream(seed: u64) -> (Vec<Vec<f32>>, Vec<u32>) {
+        let mut rng = Pcg64::seeded(seed);
+        let xs: Vec<Vec<f32>> =
+            (0..16).map(|_| (0..8).map(|_| rng.gaussian()).collect()).collect();
+        let ys: Vec<u32> = (0..16).map(|i| i % 2).collect();
+        (xs, ys)
+    }
 
     #[test]
     fn percentile_nearest_rank() {
@@ -235,17 +643,8 @@ mod tests {
 
     #[test]
     fn closed_loop_serves_full_request_count() {
-        let cfg = NetworkConfig { n_in: 8, hidden: vec![24], n_out: 2, act: Activation::ReLU };
-        let net = Network::new(&cfg, &mut Pcg64::seeded(17));
-        let engine = SparseInferenceEngine::from_snapshot(ModelSnapshot::without_tables(
-            net,
-            SamplerConfig::with_method(Method::Lsh, 0.25),
-            17,
-        ));
-        let mut rng = Pcg64::seeded(18);
-        let xs: Vec<Vec<f32>> =
-            (0..16).map(|_| (0..8).map(|_| rng.gaussian()).collect()).collect();
-        let ys: Vec<u32> = (0..16).map(|i| i % 2).collect();
+        let engine = tiny_engine(17);
+        let (xs, ys) = tiny_stream(18);
         let bench = BenchConfig {
             pool: PoolConfig {
                 workers: 2,
@@ -262,6 +661,108 @@ mod tests {
         assert!(r.p50_micros <= r.p99_micros);
         assert!(r.total_mults > 0);
         assert!((0.0..=1.0).contains(&r.accuracy));
+        assert_eq!(r.distinct_versions, 1, "frozen engine = one version");
+        assert_eq!(r.dropped, 0);
+        assert!(!r.open_loop);
+    }
+
+    #[test]
+    fn drive_clients_while_serves_until_work_completes() {
+        let engine = tiny_engine(29);
+        let (xs, ys) = tiny_stream(30);
+        let pool =
+            ServePool::start(engine.clone(), PoolConfig { workers: 2, ..Default::default() });
+        let (samples, value) = drive_clients_while(&pool, 3, &xs, &ys, || {
+            std::thread::sleep(Duration::from_millis(5));
+            42
+        });
+        pool.shutdown();
+        assert_eq!(value, 42, "work's result is returned");
+        assert!(samples.served() >= 1, "clients must have been answered meanwhile");
+        assert_eq!(samples.dropped, 0);
+        assert_eq!(samples.versions, vec![0], "frozen engine = one version");
+        assert!(samples.p50_micros() <= samples.p99_micros());
+        assert!((0.0..=1.0).contains(&samples.accuracy()));
+    }
+
+    #[test]
+    fn open_loop_answers_everything_and_measures_from_schedule() {
+        let engine = tiny_engine(19);
+        let (xs, ys) = tiny_stream(20);
+        let bench = BenchConfig {
+            pool: PoolConfig {
+                workers: 2,
+                max_batch: 4,
+                batch_deadline: Duration::from_micros(100),
+                ..Default::default()
+            },
+            clients: 0,
+            requests: 48,
+        };
+        // 8k req/s on a tiny model: finishes in ~6ms of schedule.
+        let r = run_open_loop(&engine, &xs, &ys, &bench, 8_000.0, 99);
+        assert_eq!(r.requests, 48, "every arrival must be answered");
+        assert_eq!(r.dropped, 0);
+        assert!(r.open_loop);
+        assert!((r.offered_rate - 8_000.0).abs() < f64::EPSILON);
+        assert!(r.p50_micros <= r.p99_micros);
+        assert!((0.0..=1.0).contains(&r.accuracy));
+    }
+
+    #[test]
+    fn open_loop_arrivals_are_deterministic_for_a_seed() {
+        // The arrival schedule (the randomness) must be a pure function of
+        // the seed; wall-clock latencies of course differ run to run.
+        let rate = 5_000.0;
+        let draw = |seed: u64| {
+            let mut rng = Pcg64::new(seed, OPEN_LOOP_STREAM);
+            (0..32)
+                .map(|_| {
+                    let u = rng.next_f64();
+                    -(1.0 - u).ln() / rate
+                })
+                .collect::<Vec<f64>>()
+        };
+        assert_eq!(draw(7), draw(7));
+        assert_ne!(draw(7), draw(8));
+    }
+
+    #[test]
+    fn train_while_serve_publishes_without_dropping() {
+        let cfg = NetworkConfig { n_in: 8, hidden: vec![24], n_out: 2, act: Activation::ReLU };
+        let net = Network::new(&cfg, &mut Pcg64::seeded(23));
+        let parts = ModelParts::from_snapshot(ModelSnapshot::without_tables(
+            net,
+            SamplerConfig::with_method(Method::Lsh, 0.25),
+            23,
+        ));
+        let (xs, ys) = tiny_stream(24);
+        let bench = BenchConfig {
+            pool: PoolConfig { workers: 2, max_batch: 4, ..Default::default() },
+            clients: 2,
+            requests: 400,
+        };
+        let ts = TrainServeConfig {
+            publish_every: Duration::from_millis(1),
+            publishes: 4,
+            table_seed: 1,
+        };
+        let report = run_train_while_serve(parts, &xs, &ys, &bench, &ts);
+        assert_eq!(report.baseline.requests, 400);
+        assert_eq!(report.live.requests, 400, "publishing must not drop requests");
+        assert_eq!(report.baseline.distinct_versions, 1);
+        assert!(report.versions_published >= 1, "publisher must land at least one version");
+        // Interleaving guarantees (live run observing >1 version) are
+        // pinned deterministically in tests/publish_stress.rs and the pool
+        // pickup test; here wall-clock overlap is best-effort, so only
+        // bound the observation.
+        let d = report.live.distinct_versions;
+        assert!(
+            (1..=report.versions_published + 1).contains(&d),
+            "live run saw {d} versions with {} published",
+            report.versions_published
+        );
+        assert_eq!(report.live.dropped, 0);
     }
 
     #[test]
@@ -279,6 +780,10 @@ mod tests {
             mults_per_request: mpr,
             mean_batch: 2.0,
             accuracy: 0.9,
+            distinct_versions: 1,
+            dropped: 0,
+            open_loop: false,
+            offered_rate: 0.0,
         };
         let results = vec![
             mk("dense", 1, 100.0, 1000.0),
@@ -289,11 +794,19 @@ mod tests {
         assert!((throughput_scaling(&results, "dense") - 3.5).abs() < 1e-9);
         assert!((throughput_scaling(&results, "sparse") - 3.5).abs() < 1e-9);
         assert!((mult_fraction(&results, 1000) - 0.1).abs() < 1e-9);
+        let report = TrainServeReport {
+            baseline: mk("sparse", 4, 1400.0, 100.0),
+            live: BenchResult { distinct_versions: 5, ..mk("sparse", 4, 1380.0, 100.0) },
+            versions_published: 6,
+        };
         let path = std::env::temp_dir().join(format!("hashdl_bench_{}.json", std::process::id()));
-        write_bench_json(&path, "8-24-2", 0.25, 1000, &results).unwrap();
+        write_bench_json(&path, "8-24-2", 0.25, 1000, &results, Some(&report)).unwrap();
         let s = std::fs::read_to_string(&path).unwrap();
         assert!(s.contains("\"sparse_mult_fraction\": 0.1000"));
         assert!(s.contains("\"scaling\""));
+        assert!(s.contains("\"train_serve\""));
+        assert!(s.contains("\"versions_published\": 6"));
+        assert!(s.contains("\"distinct_versions_served\": 5"));
         std::fs::remove_file(path).ok();
     }
 }

@@ -1,12 +1,24 @@
-//! The frozen-model sparse inference engine.
+//! The sparse inference engine, resolved through a live publication slot.
 //!
-//! A [`SparseInferenceEngine`] is a cheap `Clone` handle over `Arc`-shared
-//! read-only state (weights + frozen LSH tables); every serving worker
-//! clones the handle and owns a private [`InferenceWorkspace`] holding all
-//! mutable per-request buffers. Inference is therefore lock-free and
-//! deterministic: the same input produces bit-identical active sets and
-//! logits on any worker (see `lsh::frozen` for the RNG derivation that
-//! makes crowded-bucket sampling worker-independent).
+//! A [`SparseInferenceEngine`] is a cheap `Clone` handle over a
+//! [`TableReader`] — the read half of the `publish` subsystem's lock-free
+//! epoch slot. Every serving worker clones the handle and owns a private
+//! [`InferenceWorkspace`] holding all mutable per-request buffers *plus a
+//! pinned [`PublishedModel`]*: the immutable, version-stamped epoch
+//! (weights copy + frozen LSH tables) every request in the current
+//! micro-batch is answered from. Workers re-pin between micro-batches via
+//! [`InferenceWorkspace::sync`]; a trainer publishing a new epoch never
+//! blocks them and they never observe a half-updated model.
+//!
+//! The frozen-snapshot path is the same machinery with a publisher that
+//! published exactly once — there is one ownership model for tables, not
+//! two.
+//!
+//! Inference is lock-free and deterministic **per version**: the same
+//! input served from the same published version produces bit-identical
+//! active sets and logits on any worker (see `lsh::frozen` for the RNG
+//! derivation that makes crowded-bucket sampling worker-independent, and
+//! `tests/publish_stress.rs` for the concurrent-publish replay pin).
 //!
 //! Cost accounting mirrors training: hidden layers pay K·L hashing +
 //! |AS_out|·|AS_in| sparse-forward multiplications (plus the optional §5.4
@@ -18,32 +30,30 @@
 use crate::lsh::frozen::{FrozenLayerTables, FrozenQueryScratch};
 use crate::nn::network::Network;
 use crate::nn::sparse::{LayerInput, SparseVec};
+use crate::publish::{publish_once, ModelParts, PublishedModel, TableReader};
 use crate::sampling::{budget, rerank_exact};
 use crate::serve::snapshot::ModelSnapshot;
 use crate::train::metrics::MultCounters;
 use std::sync::Arc;
 
-/// Immutable state shared by every worker.
-pub struct EngineShared {
-    pub net: Network,
-    /// One frozen table stack per hidden layer.
-    pub tables: Vec<FrozenLayerTables>,
-    /// Active-node fraction per hidden layer (the serving top-k knob).
-    pub sparsity: f32,
-    /// §5.4 cheap re-rank factor carried over from the training sampler
-    /// (0/1 = disabled).
-    pub rerank_factor: usize,
-}
-
-/// Cheap-to-clone engine handle (`Arc` under the hood).
+/// Cheap-to-clone engine handle (a [`TableReader`] under the hood).
 #[derive(Clone)]
 pub struct SparseInferenceEngine {
-    shared: Arc<EngineShared>,
+    reader: TableReader,
 }
 
 /// Per-worker mutable buffers, reused across requests — steady-state
-/// inference allocates nothing.
+/// inference allocates nothing — plus the pinned model epoch all requests
+/// between two [`InferenceWorkspace::sync`] calls are served from.
 pub struct InferenceWorkspace {
+    /// The published epoch this workspace currently serves. Immutable and
+    /// wholly owned until the next `sync`.
+    pub model: Arc<PublishedModel>,
+    /// Identity of the publication slot `model` was pinned from — lets
+    /// `infer` assert that a workspace is only ever answered by the
+    /// engine it belongs to (serving from a mismatched engine would
+    /// silently use the wrong model).
+    slot_id: usize,
     scratch: FrozenQueryScratch,
     /// Hidden-layer sparse activations, one slot per hidden layer.
     pub acts: Vec<SparseVec>,
@@ -58,9 +68,13 @@ pub struct InferenceWorkspace {
 }
 
 impl InferenceWorkspace {
+    /// Pin the engine's current epoch and size the buffers for it.
     pub fn new(engine: &SparseInferenceEngine) -> Self {
-        let n_hidden = engine.shared.net.n_hidden();
+        let model = engine.current();
+        let n_hidden = model.net.n_hidden();
         InferenceWorkspace {
+            model,
+            slot_id: engine.slot_id(),
             scratch: FrozenQueryScratch::new(),
             acts: (0..n_hidden).map(|_| SparseVec::new()).collect(),
             active: Vec::new(),
@@ -69,65 +83,114 @@ impl InferenceWorkspace {
             logits: Vec::new(),
         }
     }
+
+    /// Version of the pinned epoch.
+    pub fn version(&self) -> u64 {
+        self.model.version
+    }
+
+    /// Re-pin to the newest published epoch if this workspace is stale.
+    /// Returns `true` when the pinned model changed. Cost when current:
+    /// one atomic load. Pool workers call this between micro-batches, so a
+    /// publish is picked up within one batch and never mid-request.
+    /// Syncing against a *different* engine re-targets the workspace to
+    /// that engine's slot.
+    pub fn sync(&mut self, engine: &SparseInferenceEngine) -> bool {
+        let slot = engine.slot_id();
+        let same_slot = self.slot_id == slot;
+        if same_slot && engine.latest_version() == self.model.version {
+            return false;
+        }
+        // Report a switch only if the pinned model really changed: a
+        // workspace can pin the slot's new model in the nanosecond window
+        // before the publisher updates the `latest` mirror, in which case
+        // the re-pin here lands on the identical version.
+        let old_version = self.model.version;
+        self.slot_id = slot;
+        self.model = engine.current();
+        let n_hidden = self.model.net.n_hidden();
+        if self.acts.len() != n_hidden {
+            self.acts.resize_with(n_hidden, SparseVec::new);
+        }
+        !same_slot || self.model.version != old_version
+    }
 }
 
-/// Outcome of one request: predicted class + exact multiplication counts.
-/// Logits and per-layer active sets stay in the workspace (`ws.logits`,
-/// `ws.acts`) for callers that need them.
+/// Outcome of one request: predicted class + exact multiplication counts +
+/// the published version it was served from. Logits and per-layer active
+/// sets stay in the workspace (`ws.logits`, `ws.acts`) for callers that
+/// need them.
 #[derive(Clone, Copy, Debug)]
 pub struct Inference {
     pub pred: u32,
     pub mults: MultCounters,
+    /// [`PublishedModel::version`] of the epoch that answered this request.
+    pub version: u64,
 }
 
 impl SparseInferenceEngine {
+    /// Serve a live publication slot: the engine follows whatever the
+    /// publisher installs (train-while-serve).
+    pub fn live(reader: TableReader) -> Self {
+        SparseInferenceEngine { reader }
+    }
+
+    /// Freeze `parts` as the only epoch this engine will ever serve
+    /// (a publisher that publishes exactly once).
+    pub fn frozen(parts: ModelParts) -> Self {
+        SparseInferenceEngine { reader: publish_once(parts) }
+    }
+
     /// Build from a snapshot, rebuilding tables deterministically if the
     /// file did not ship them.
-    pub fn from_snapshot(mut snap: ModelSnapshot) -> Self {
-        snap.ensure_tables();
-        let ModelSnapshot { net, sampler, tables, .. } = snap;
-        SparseInferenceEngine {
-            shared: Arc::new(EngineShared {
-                net,
-                tables: tables.expect("ensure_tables populated"),
-                sparsity: sampler.sparsity,
-                rerank_factor: sampler.lsh.rerank_factor,
-            }),
-        }
+    pub fn from_snapshot(snap: ModelSnapshot) -> Self {
+        Self::frozen(ModelParts::from_snapshot(snap))
     }
 
-    /// Build directly from parts (tests, ad-hoc serving of a live net).
+    /// Build directly from bare parts (tests, ad-hoc serving of a live net).
     pub fn from_parts(net: Network, tables: Vec<FrozenLayerTables>, sparsity: f32) -> Self {
-        assert_eq!(tables.len(), net.n_hidden(), "one table stack per hidden layer");
-        SparseInferenceEngine {
-            shared: Arc::new(EngineShared { net, tables, sparsity, rerank_factor: 0 }),
-        }
+        Self::frozen(ModelParts { net, tables, sparsity, rerank_factor: 0 })
     }
 
-    pub fn shared(&self) -> &EngineShared {
-        &self.shared
+    /// Snapshot the newest published epoch (lock-free).
+    pub fn current(&self) -> Arc<PublishedModel> {
+        self.reader.current()
     }
 
-    pub fn net(&self) -> &Network {
-        &self.shared.net
+    /// Newest published version (the staleness probe `sync` uses).
+    pub fn latest_version(&self) -> u64 {
+        self.reader.latest_version()
     }
 
-    /// Dense multiplications one forward pass would spend — the 100%
-    /// budget sparse serving is measured against.
+    /// Identity of the publication slot this engine serves from (clones of
+    /// one engine share it; distinct engines differ).
+    fn slot_id(&self) -> usize {
+        self.reader.slot_id()
+    }
+
+    /// Dense multiplications one forward pass of the *current* epoch would
+    /// spend — the 100% budget sparse serving is measured against.
     pub fn dense_mults_per_request(&self) -> u64 {
-        self.shared.net.dense_mults_per_example()
+        self.current().net.dense_mults_per_example()
     }
 
-    /// Sparse inference: LSH-select the active set per hidden layer, fire
-    /// only those neurons, finish with the dense output layer.
+    /// Sparse inference against the workspace's pinned epoch: LSH-select
+    /// the active set per hidden layer, fire only those neurons, finish
+    /// with the dense output layer.
     pub fn infer(&self, x: &[f32], ws: &mut InferenceWorkspace) -> Inference {
-        let sh = &*self.shared;
+        debug_assert_eq!(
+            ws.slot_id,
+            self.slot_id(),
+            "workspace is pinned to a different engine's publication slot"
+        );
+        let InferenceWorkspace { model, scratch, acts, active, dense_q, scored, logits, .. } = ws;
+        let sh: &PublishedModel = &**model;
         debug_assert_eq!(x.len(), sh.net.n_in());
         let n_hidden = sh.net.n_hidden();
         let mut mults = MultCounters::default();
         for l in 0..n_hidden {
             let layer = &sh.net.layers[l];
-            let (prev, rest) = ws.acts.split_at_mut(l);
+            let (prev, rest) = acts.split_at_mut(l);
             let input = if l == 0 {
                 LayerInput::Dense(x)
             } else {
@@ -138,12 +201,12 @@ impl SparseInferenceEngine {
             let q: &[f32] = match input {
                 LayerInput::Dense(d) => d,
                 LayerInput::Sparse(s) => {
-                    ws.dense_q.clear();
-                    ws.dense_q.resize(layer.n_in(), 0.0);
+                    dense_q.clear();
+                    dense_q.resize(layer.n_in(), 0.0);
                     for (i, v) in s.iter() {
-                        ws.dense_q[i as usize] = v;
+                        dense_q[i as usize] = v;
                     }
-                    &ws.dense_q
+                    dense_q
                 }
             };
             let b = budget(layer.n_out(), sh.sparsity);
@@ -151,13 +214,12 @@ impl SparseInferenceEngine {
             if sh.rerank_factor > 1 {
                 // §5.4 cheap re-rank: over-collect, score exactly, keep
                 // the top b — the same `rerank_exact` the trainer uses.
-                mults.selection +=
-                    tables.query(q, b * sh.rerank_factor, &mut ws.scratch, &mut ws.active);
-                mults.selection += rerank_exact(layer, q, b, &mut ws.active, &mut ws.scored);
+                mults.selection += tables.query(q, b * sh.rerank_factor, scratch, active);
+                mults.selection += rerank_exact(layer, q, b, active, scored);
             } else {
-                mults.selection += tables.query(q, b, &mut ws.scratch, &mut ws.active);
+                mults.selection += tables.query(q, b, scratch, active);
             }
-            mults.forward += layer.forward_sparse(input, &ws.active, &mut rest[0]);
+            mults.forward += layer.forward_sparse(input, active, &mut rest[0]);
         }
         // Output layer: dense over all classes from the last sparse
         // activation (the paper never hashes the output layer).
@@ -165,22 +227,37 @@ impl SparseInferenceEngine {
         let input = if n_hidden == 0 {
             LayerInput::Dense(x)
         } else {
-            LayerInput::Sparse(&ws.acts[n_hidden - 1])
+            LayerInput::Sparse(&acts[n_hidden - 1])
         };
-        mults.forward += out_layer.forward_all(input, &mut ws.logits);
-        Inference { pred: crate::tensor::vecops::argmax(&ws.logits) as u32, mults }
+        mults.forward += out_layer.forward_all(input, logits);
+        Inference {
+            pred: crate::tensor::vecops::argmax(logits) as u32,
+            mults,
+            version: sh.version,
+        }
     }
 
     /// Dense reference inference through the same workspace (the serving
     /// pool's dense mode — identical numbers to [`Network::forward_dense`]).
     pub fn infer_dense(&self, x: &[f32], ws: &mut InferenceWorkspace) -> Inference {
+        debug_assert_eq!(
+            ws.slot_id,
+            self.slot_id(),
+            "workspace is pinned to a different engine's publication slot"
+        );
+        let InferenceWorkspace { model, logits, .. } = ws;
         let mut mults = MultCounters::default();
-        mults.forward += self.shared.net.forward_dense(x, &mut ws.logits);
-        Inference { pred: crate::tensor::vecops::argmax(&ws.logits) as u32, mults }
+        mults.forward += model.net.forward_dense(x, logits);
+        Inference {
+            pred: crate::tensor::vecops::argmax(logits) as u32,
+            mults,
+            version: model.version,
+        }
     }
 
     /// Evaluate a labelled set sparsely: (mean loss, accuracy, summed
-    /// counters, mean hidden active fraction).
+    /// counters, mean hidden active fraction). Runs entirely on the
+    /// workspace's pinned epoch.
     pub fn evaluate(
         &self,
         xs: &[Vec<f32>],
@@ -188,9 +265,9 @@ impl SparseInferenceEngine {
         ws: &mut InferenceWorkspace,
     ) -> EvalSummary {
         assert_eq!(xs.len(), ys.len());
-        let n_hidden = self.shared.net.n_hidden();
+        let n_hidden = ws.model.net.n_hidden();
         let hidden_width: usize =
-            self.shared.net.layers.iter().take(n_hidden).map(|l| l.n_out()).sum();
+            ws.model.net.layers.iter().take(n_hidden).map(|l| l.n_out()).sum();
         let mut mults = MultCounters::default();
         let mut loss_sum = 0.0f64;
         let mut correct = 0usize;
@@ -256,6 +333,7 @@ mod tests {
     use super::*;
     use crate::nn::activation::Activation;
     use crate::nn::network::NetworkConfig;
+    use crate::publish::TablePublisher;
     use crate::sampling::{Method, SamplerConfig};
     use crate::util::rng::Pcg64;
 
@@ -266,6 +344,15 @@ mod tests {
         let snap =
             ModelSnapshot::without_tables(net, SamplerConfig::with_method(Method::Lsh, 0.2), seed);
         SparseInferenceEngine::from_snapshot(snap)
+    }
+
+    fn parts(seed: u64) -> ModelParts {
+        let cfg =
+            NetworkConfig { n_in: 16, hidden: vec![60, 60], n_out: 4, act: Activation::ReLU };
+        let net = Network::new(&cfg, &mut Pcg64::seeded(seed));
+        let snap =
+            ModelSnapshot::without_tables(net, SamplerConfig::with_method(Method::Lsh, 0.2), seed);
+        ModelParts::from_snapshot(snap)
     }
 
     #[test]
@@ -286,6 +373,8 @@ mod tests {
             assert_eq!(u.val, v.val);
         }
         assert_eq!(a.mults.total(), b.mults.total());
+        assert_eq!(a.version, 0, "frozen engines serve version 0");
+        assert_eq!(b.version, 0);
     }
 
     #[test]
@@ -311,7 +400,33 @@ mod tests {
         let x: Vec<f32> = (0..16).map(|i| 0.1 * i as f32).collect();
         e.infer_dense(&x, &mut ws);
         let mut reference = Vec::new();
-        e.net().forward_dense(&x, &mut reference);
+        e.current().net.forward_dense(&x, &mut reference);
         assert_eq!(ws.logits, reference);
+    }
+
+    #[test]
+    fn workspace_pins_until_sync() {
+        let (mut publisher, reader) = TablePublisher::start(parts(11));
+        let e = SparseInferenceEngine::live(reader);
+        let mut ws = InferenceWorkspace::new(&e);
+        let x: Vec<f32> = (0..16).map(|i| (i as f32 * 0.23).sin()).collect();
+        let v0 = e.infer(&x, &mut ws);
+        assert_eq!(v0.version, 0);
+        let logits_v0 = ws.logits.clone();
+
+        // Publish a *different* model: the pinned workspace must keep
+        // serving version 0 until it syncs.
+        publisher.publish(parts(12));
+        assert_eq!(InferenceWorkspace::new(&e).version(), 1, "fresh workspaces pin the new epoch");
+        let still_v0 = e.infer(&x, &mut ws);
+        assert_eq!(still_v0.version, 0, "no mid-batch model switches");
+        assert_eq!(ws.logits, logits_v0);
+
+        assert!(ws.sync(&e), "sync must pick up the new epoch");
+        let v1 = e.infer(&x, &mut ws);
+        assert_eq!(v1.version, 1);
+        assert!(!ws.sync(&e), "second sync is a no-op");
+        // Different weights ⇒ different logits (overwhelmingly).
+        assert_ne!(ws.logits, logits_v0, "new epoch must actually be served");
     }
 }

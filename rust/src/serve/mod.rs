@@ -5,23 +5,30 @@
 //!
 //! Four pieces:
 //! * [`snapshot`] — frozen model files: weights + sampler config +
-//!   prehashed LSH tables, versioned and backward compatible with legacy
-//!   weights-only checkpoints.
-//! * [`engine`] — [`engine::SparseInferenceEngine`]: `Arc`-shared
-//!   read-only weights/tables, per-thread workspaces, deterministic
-//!   active-set selection, exact multiplication accounting.
+//!   prehashed LSH tables, versioned (v3 bit-packs fingerprints) and
+//!   backward compatible with legacy weights-only checkpoints.
+//! * [`engine`] — [`engine::SparseInferenceEngine`]: a handle over the
+//!   `publish` subsystem's lock-free epoch slot. Workers pin one
+//!   version-stamped [`crate::publish::PublishedModel`] per micro-batch,
+//!   select active sets deterministically, and count multiplications
+//!   exactly. A frozen snapshot is the publish-once special case.
 //! * [`pool`] — bounded MPSC request queue + worker threads with dynamic
-//!   micro-batching (size cap or deadline, whichever closes first).
-//! * [`bench`] — closed-loop load generator reporting requests/sec,
-//!   p50/p99 latency and sparse-vs-dense mult fractions
-//!   (`BENCH_serve.json`).
+//!   micro-batching (size cap or deadline, whichever closes first);
+//!   workers pick up newly published model versions between micro-batches
+//!   and stamp every [`pool::Response`] with the version that served it.
+//! * [`bench`] — load generators: closed-loop, open-loop (Poisson
+//!   arrivals) and the train-while-serve scenario comparing latency with
+//!   and without concurrent publication (`BENCH_serve.json`).
 
 pub mod bench;
 pub mod engine;
 pub mod pool;
 pub mod snapshot;
 
-pub use bench::{run_closed_loop, BenchConfig, BenchResult};
+pub use bench::{
+    drive_clients_while, run_closed_loop, run_open_loop, run_train_while_serve, BenchConfig,
+    BenchResult, ClientSamples, TrainServeConfig, TrainServeReport,
+};
 pub use engine::{EvalSummary, Inference, InferenceWorkspace, SparseInferenceEngine};
 pub use pool::{PoolConfig, PoolHandle, PoolStats, Request, RequestQueue, Response, ServePool};
-pub use snapshot::{load_snapshot, save_snapshot, ModelSnapshot};
+pub use snapshot::{load_snapshot, save_snapshot, save_snapshot_v2, ModelSnapshot};

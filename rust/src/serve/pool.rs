@@ -21,6 +21,13 @@
 //! Because the engine is deterministic per request (`lsh::frozen`), the
 //! worker count and batching layout change *when* a request is answered,
 //! never *what* the answer is — pinned by `tests/serve.rs`.
+//!
+//! **Live publication:** each worker's workspace pins one published model
+//! version per micro-batch and re-checks for a newer version between
+//! batches (`InferenceWorkspace::sync` — one atomic load when current).
+//! Every [`Response`] carries the version it was served from, so a
+//! train-while-serve deployment can attribute any answer to the exact
+//! epoch that produced it (pinned by `tests/publish_stress.rs`).
 
 use crate::serve::engine::{InferenceWorkspace, SparseInferenceEngine};
 use std::collections::VecDeque;
@@ -44,6 +51,9 @@ pub struct Request {
 pub struct Response {
     pub id: u64,
     pub pred: u32,
+    /// Published model version this request was served from (workers pin a
+    /// version per micro-batch; see `publish`).
+    pub version: u64,
     /// Total multiplications this request cost (selection + forward).
     pub mults: u64,
     /// Queue wait in microseconds (enqueue → claimed by a worker).
@@ -198,6 +208,9 @@ pub struct PoolCounters {
     pub requests: AtomicU64,
     pub batches: AtomicU64,
     pub mults: AtomicU64,
+    /// Times a worker re-pinned to a newer published model between
+    /// micro-batches (0 when nothing publishes mid-run).
+    pub version_switches: AtomicU64,
 }
 
 /// A running pool: N worker threads + the shared queue.
@@ -226,6 +239,8 @@ pub struct PoolStats {
     pub requests: u64,
     pub batches: u64,
     pub mults: u64,
+    /// Worker re-pins to newer published versions (see [`PoolCounters`]).
+    pub version_switches: u64,
 }
 
 impl PoolStats {
@@ -274,6 +289,7 @@ impl ServePool {
             requests: self.counters.requests.load(Ordering::Relaxed),
             batches: self.counters.batches.load(Ordering::Relaxed),
             mults: self.counters.mults.load(Ordering::Relaxed),
+            version_switches: self.counters.version_switches.load(Ordering::Relaxed),
         }
     }
 }
@@ -287,6 +303,13 @@ fn worker_loop(
     let mut ws = InferenceWorkspace::new(engine);
     let mut batch: Vec<Request> = Vec::with_capacity(cfg.max_batch);
     while queue.pop_batch(cfg.max_batch, cfg.batch_deadline, &mut batch) {
+        // Pick up a newly published model *between* micro-batches: every
+        // request in this batch is answered from one pinned version, and a
+        // concurrent publish costs this worker one atomic load, never a
+        // lock or a stall.
+        if ws.sync(engine) {
+            counters.version_switches.fetch_add(1, Ordering::Relaxed);
+        }
         let bsz = batch.len() as u32;
         let claimed = Instant::now();
         for req in batch.drain(..) {
@@ -302,6 +325,7 @@ fn worker_loop(
             let _ = req.reply.send(Response {
                 id: req.id,
                 pred: inf.pred,
+                version: inf.version,
                 mults,
                 queue_micros: claimed.duration_since(req.enqueued).as_micros() as u64,
                 batch_size: bsz,
@@ -383,6 +407,7 @@ mod tests {
             assert!(!seen[resp.id as usize], "duplicate response");
             seen[resp.id as usize] = true;
             assert!(resp.batch_size >= 1 && resp.batch_size <= 8);
+            assert_eq!(resp.version, 0, "frozen engine serves version 0 only");
             // Answer must match a direct engine call (determinism).
             let x: Vec<f32> =
                 (0..8).map(|j| ((resp.id * 8 + j) as f32 * 0.13).sin()).collect();
@@ -394,5 +419,44 @@ mod tests {
         assert_eq!(stats.requests, n);
         assert!(stats.batches >= 1);
         assert!(stats.mean_batch() >= 1.0);
+        assert_eq!(stats.version_switches, 0, "nothing published mid-run");
+    }
+
+    #[test]
+    fn workers_pick_up_published_versions_between_batches() {
+        use crate::publish::{ModelParts, TablePublisher};
+
+        let mk_parts = |seed: u64| {
+            let cfg =
+                NetworkConfig { n_in: 8, hidden: vec![32], n_out: 3, act: Activation::ReLU };
+            let net = Network::new(&cfg, &mut Pcg64::seeded(seed));
+            ModelParts::from_snapshot(ModelSnapshot::without_tables(
+                net,
+                SamplerConfig::with_method(Method::Lsh, 0.25),
+                seed,
+            ))
+        };
+        let (mut publisher, reader) = TablePublisher::start(mk_parts(3));
+        let engine = SparseInferenceEngine::live(reader);
+        let pool = ServePool::start(engine.clone(), PoolConfig::default());
+        let handle = pool.handle();
+        let x: Vec<f32> = (0..8).map(|j| (j as f32 * 0.3).sin()).collect();
+
+        // Round 1: served from version 0. Wait for the answer so no worker
+        // still holds an unclaimed batch when we publish.
+        let (tx, rx) = channel();
+        assert!(handle.submit(0, x.clone(), tx.clone()));
+        assert_eq!(rx.recv().unwrap().version, 0);
+
+        // Publish happens-before the next submit, and workers sync before
+        // serving the batch that contains it — so the pickup is
+        // deterministic, not a race.
+        publisher.publish(mk_parts(4));
+        assert!(handle.submit(1, x, tx.clone()));
+        assert_eq!(rx.recv().unwrap().version, 1, "new epoch within one micro-batch");
+
+        drop(tx);
+        let stats = pool.shutdown();
+        assert!(stats.version_switches >= 1, "a worker must have re-pinned");
     }
 }

@@ -1,5 +1,5 @@
 //! Frozen model snapshots: weights + sampler config + prehashed LSH
-//! tables in one versioned binary file (`HDLMODL2`).
+//! tables in one versioned binary file (`HDLMODL3`; v2/v1 still load).
 //!
 //! The paper's serving story needs the hash tables *at* the weights they
 //! were built over — rebuilding them on every process start costs a full
@@ -14,12 +14,20 @@
 //! (per-layer RNG streams derived from the seed), so a table-less file
 //! also yields identical tables on every load — just not the ones
 //! training used.
+//!
+//! **Compaction (v3):** per-table node fingerprints are K-bit values
+//! (K ≤ 16) but v2 stored them as full `u32`s. The v3 writer bit-packs
+//! them — a presence bitmap (1 bit/node) plus a dense K-bit stream — for
+//! a 32/(K+1)× shrink of the fingerprint payload. `load_snapshot` reads
+//! v1, v2 and v3; [`save_snapshot`] writes v3, [`save_snapshot_v2`] keeps
+//! the old encoding for tooling that needs it.
 
 use crate::data::io::{
     invalid, read_f32, read_f32s, read_network_body, read_str, read_u32, read_u32s, read_u64,
     write_f32, write_f32s, write_network_body, write_str, write_u32, write_u32s, write_u64,
-    MODEL_MAGIC, SNAPSHOT_MAGIC,
+    MODEL_MAGIC, SNAPSHOT3_MAGIC, SNAPSHOT_MAGIC,
 };
+use crate::util::bitpack::{pack_u32s, packed_words, unpack_u32s};
 use crate::lsh::alsh::AlshMips;
 use crate::lsh::family::LshFamily;
 use crate::lsh::frozen::FrozenLayerTables;
@@ -61,6 +69,22 @@ impl ModelSnapshot {
         ModelSnapshot { net, sampler, seed, tables: None }
     }
 
+    /// Wrap a network and rebuild its tables *now*, from these weights —
+    /// the ASGD save path. Hogwild workers each maintain private tables
+    /// over the shared parameters, so no worker's tables are canonical;
+    /// rebuilding once from the merged weights (deterministically, per
+    /// [`ModelSnapshot::ensure_tables`]) ships a snapshot whose tables
+    /// genuinely index the trained weights instead of a table-less file.
+    pub fn with_rebuilt_tables(
+        net: crate::nn::network::Network,
+        sampler: SamplerConfig,
+        seed: u64,
+    ) -> Self {
+        let mut snap = Self::without_tables(net, sampler, seed);
+        snap.ensure_tables();
+        snap
+    }
+
     /// Guarantee `tables` is populated: keep shipped tables, else rebuild
     /// deterministically from the weights. Each hidden layer gets its own
     /// RNG stream derived from the stored seed, so repeated loads of the
@@ -86,10 +110,11 @@ impl ModelSnapshot {
     }
 }
 
-/// Write a v2 snapshot. Layout (all little-endian):
+/// Write a snapshot in the current (v3, bit-packed) format. Layout (all
+/// little-endian):
 ///
 /// ```text
-/// "HDLMODL2"
+/// "HDLMODL3"
 /// network body            (identical to v1 — old readers stop here)
 /// sampler: method str, f32 sparsity, u32 {k, l, probes, crowded, rerank},
 ///          f32 rehash_prob, u32 rebuild_every_epochs
@@ -99,12 +124,26 @@ impl ModelSnapshot {
 ///   u32 n_nodes, u32 dim, f32 max_norm (ALSH scaling constant M)
 ///   u32 proj_rows, u32 proj_cols, f32s projections
 ///   per table (L of them):
-///     u32s node_fp [n_nodes]
+///     u32s presence bitmap   [ceil(n_nodes/32) words, LSB-first]
+///     u32s packed K-bit fps  [ceil(n_nodes*K/32) words, LSB-first]
 ///     per bucket (2^K): u32 len, u32s ids
 /// ```
+///
+/// v2 (`HDLMODL2`) differs only in storing each fingerprint as a full
+/// `u32` (with `u32::MAX` = absent) instead of the bitmap + packed pair.
 pub fn save_snapshot(snap: &ModelSnapshot, path: &Path) -> io::Result<()> {
+    save_snapshot_versioned(snap, path, true)
+}
+
+/// Write the legacy v2 (unpacked-fingerprint) encoding — kept for tooling
+/// pinned to the old format and for size-comparison tests.
+pub fn save_snapshot_v2(snap: &ModelSnapshot, path: &Path) -> io::Result<()> {
+    save_snapshot_versioned(snap, path, false)
+}
+
+fn save_snapshot_versioned(snap: &ModelSnapshot, path: &Path, packed: bool) -> io::Result<()> {
     let mut w = io::BufWriter::new(std::fs::File::create(path)?);
-    w.write_all(SNAPSHOT_MAGIC)?;
+    w.write_all(if packed { SNAPSHOT3_MAGIC } else { SNAPSHOT_MAGIC })?;
     write_network_body(&mut w, &snap.net)?;
     let s = &snap.sampler;
     write_str(&mut w, s.method.name())?;
@@ -122,16 +161,17 @@ pub fn save_snapshot(snap: &ModelSnapshot, path: &Path) -> io::Result<()> {
         Some(sets) => {
             write_u32(&mut w, sets.len() as u32)?;
             for t in sets {
-                write_table_set(&mut w, t)?;
+                write_table_set(&mut w, t, packed)?;
             }
         }
     }
     Ok(())
 }
 
-fn write_table_set(w: &mut impl Write, t: &FrozenLayerTables) -> io::Result<()> {
+fn write_table_set(w: &mut impl Write, t: &FrozenLayerTables, packed: bool) -> io::Result<()> {
     let family = t.family();
     let proj = family.srp().projections();
+    let k = t.config().k;
     write_u32(w, t.n_nodes() as u32)?;
     write_u32(w, family.dim() as u32)?;
     write_f32(w, family.max_norm())?;
@@ -139,7 +179,33 @@ fn write_table_set(w: &mut impl Write, t: &FrozenLayerTables) -> io::Result<()> 
     write_u32(w, proj.cols() as u32)?;
     write_f32s(w, proj.as_slice())?;
     for table in t.tables() {
-        write_u32s(w, table.node_fingerprints())?;
+        let fps = table.node_fingerprints();
+        if packed {
+            // Presence bitmap + dense K-bit fingerprint stream. SRP
+            // fingerprints are K packed sign bits, so K bits are lossless;
+            // anything wider would be a corrupted table — fail the save
+            // rather than truncate silently.
+            let mut present = Vec::with_capacity(fps.len());
+            let mut kbit = Vec::with_capacity(fps.len());
+            for &fp in fps {
+                if fp == u32::MAX {
+                    present.push(0);
+                    kbit.push(0);
+                } else {
+                    if k < 32 && fp >= (1u32 << k) {
+                        return Err(invalid(format!(
+                            "fingerprint {fp:#x} does not fit in K={k} bits"
+                        )));
+                    }
+                    present.push(1);
+                    kbit.push(fp);
+                }
+            }
+            write_u32s(w, &pack_u32s(&present, 1))?;
+            write_u32s(w, &pack_u32s(&kbit, k))?;
+        } else {
+            write_u32s(w, fps)?;
+        }
         for bucket in table.buckets() {
             write_u32(w, bucket.len() as u32)?;
             write_u32s(w, bucket)?;
@@ -148,7 +214,11 @@ fn write_table_set(w: &mut impl Write, t: &FrozenLayerTables) -> io::Result<()> 
     Ok(())
 }
 
-fn read_table_set(r: &mut impl Read, cfg: LshConfig) -> io::Result<FrozenLayerTables> {
+fn read_table_set(
+    r: &mut impl Read,
+    cfg: LshConfig,
+    packed: bool,
+) -> io::Result<FrozenLayerTables> {
     let n_nodes = read_u32(r)? as usize;
     let dim = read_u32(r)? as usize;
     let max_norm = read_f32(r)?;
@@ -165,7 +235,19 @@ fn read_table_set(r: &mut impl Read, cfg: LshConfig) -> io::Result<FrozenLayerTa
     let family = AlshMips::from_parts(dim, max_norm, srp).map_err(invalid)?;
     let mut tables = Vec::with_capacity(cfg.l);
     for _ in 0..cfg.l {
-        let node_fp = read_u32s(r, n_nodes)?;
+        let node_fp = if packed {
+            let present =
+                unpack_u32s(&read_u32s(r, packed_words(n_nodes, 1))?, 1, n_nodes);
+            let kbit =
+                unpack_u32s(&read_u32s(r, packed_words(n_nodes, cfg.k))?, cfg.k, n_nodes);
+            present
+                .iter()
+                .zip(&kbit)
+                .map(|(&p, &fp)| if p == 1 { fp } else { u32::MAX })
+                .collect()
+        } else {
+            read_u32s(r, n_nodes)?
+        };
         let mut buckets = Vec::with_capacity(1 << cfg.k);
         for _ in 0..(1usize << cfg.k) {
             let len = read_u32(r)? as usize;
@@ -179,9 +261,10 @@ fn read_table_set(r: &mut impl Read, cfg: LshConfig) -> io::Result<FrozenLayerTa
     FrozenLayerTables::from_parts(cfg, family, tables, n_nodes).map_err(invalid)
 }
 
-/// Load either model format. v1 files come back as a table-less snapshot
-/// with the default sampler config (LSH @ 5%) and seed 42 — enough for
-/// [`ModelSnapshot::ensure_tables`] to rebuild deterministically.
+/// Load any model format (v1/v2/v3). v1 files come back as a table-less
+/// snapshot with the default sampler config (LSH @ 5%) and seed 42 —
+/// enough for [`ModelSnapshot::ensure_tables`] to rebuild
+/// deterministically.
 pub fn load_snapshot(path: &Path) -> io::Result<ModelSnapshot> {
     let mut r = io::BufReader::new(std::fs::File::open(path)?);
     let mut magic = [0u8; 8];
@@ -190,9 +273,11 @@ pub fn load_snapshot(path: &Path) -> io::Result<ModelSnapshot> {
         let net = read_network_body(&mut r)?;
         return Ok(ModelSnapshot::without_tables(net, SamplerConfig::default(), 42));
     }
-    if &magic != SNAPSHOT_MAGIC {
-        return Err(invalid("not a hashdl model file"));
-    }
+    let packed = match &magic {
+        m if m == SNAPSHOT3_MAGIC => true,
+        m if m == SNAPSHOT_MAGIC => false,
+        _ => return Err(invalid("not a hashdl model file")),
+    };
     let net = read_network_body(&mut r)?;
     let method = Method::parse(&read_str(&mut r)?).map_err(invalid)?;
     let sparsity = read_f32(&mut r)?;
@@ -228,7 +313,7 @@ pub fn load_snapshot(path: &Path) -> io::Result<ModelSnapshot> {
         }
         let mut sets = Vec::with_capacity(n_sets);
         for l in 0..n_sets {
-            let set = read_table_set(&mut r, lsh)?;
+            let set = read_table_set(&mut r, lsh, packed)?;
             if set.n_nodes() != net.layers[l].n_out() {
                 return Err(invalid(format!(
                     "table set {l} covers {} nodes, layer has {}",
@@ -313,16 +398,64 @@ mod tests {
     }
 
     #[test]
-    fn v2_file_loads_through_plain_load_network() {
+    fn v3_and_v2_files_load_through_plain_load_network() {
         let mut snap = ModelSnapshot::without_tables(tiny_net(4), SamplerConfig::default(), 5);
         snap.ensure_tables();
-        let path = tmp("compat");
-        save_snapshot(&snap, &path).unwrap();
-        let net = crate::data::io::load_network(&path).unwrap();
-        for (a, b) in net.layers.iter().zip(&snap.net.layers) {
-            assert_eq!(a.w, b.w);
-            assert_eq!(a.b, b.b);
+        type Writer = fn(&ModelSnapshot, &std::path::Path) -> io::Result<()>;
+        let writers: [(&str, Writer); 2] =
+            [("compat3", save_snapshot), ("compat2", save_snapshot_v2)];
+        for (name, save) in writers {
+            let path = tmp(name);
+            save(&snap, &path).unwrap();
+            let net = crate::data::io::load_network(&path).unwrap();
+            for (a, b) in net.layers.iter().zip(&snap.net.layers) {
+                assert_eq!(a.w, b.w);
+                assert_eq!(a.b, b.b);
+            }
+            std::fs::remove_file(path).ok();
         }
-        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn v3_packing_roundtrips_bitwise_and_shrinks_by_the_exact_packed_delta() {
+        let net = tiny_net(6);
+        let mut snap = ModelSnapshot::without_tables(net, SamplerConfig::default(), 13);
+        snap.ensure_tables();
+        let (p2, p3) = (tmp("size_v2"), tmp("size_v3"));
+        save_snapshot_v2(&snap, &p2).unwrap();
+        save_snapshot(&snap, &p3).unwrap();
+
+        // Bitwise-identical tables through both formats.
+        let (b2, b3) = (load_snapshot(&p2).unwrap(), load_snapshot(&p3).unwrap());
+        for (a, b) in b2.tables.as_ref().unwrap().iter().zip(b3.tables.as_ref().unwrap()) {
+            assert_eq!(a.tables(), b.tables(), "packed fingerprints must round-trip bitwise");
+            assert_eq!(a.family().srp().projections(), b.family().srp().projections());
+        }
+
+        // Size win is exactly the fingerprint-payload delta: per table,
+        // 4·n bytes of u32 fingerprints become a 1-bit presence bitmap
+        // plus an n·K-bit packed stream.
+        let expected_saving: u64 = snap
+            .tables
+            .as_ref()
+            .unwrap()
+            .iter()
+            .map(|set| {
+                let n = set.n_nodes();
+                let k = set.config().k;
+                let per_table = 4 * n as u64
+                    - 4 * (crate::util::bitpack::packed_words(n, 1)
+                        + crate::util::bitpack::packed_words(n, k)) as u64;
+                per_table * set.config().l as u64
+            })
+            .sum();
+        let (s2, s3) = (
+            std::fs::metadata(&p2).unwrap().len(),
+            std::fs::metadata(&p3).unwrap().len(),
+        );
+        assert!(expected_saving > 0, "packing must actually save bytes at K=6");
+        assert_eq!(s2 - s3, expected_saving, "v2 {s2} vs v3 {s3}");
+        std::fs::remove_file(p2).ok();
+        std::fs::remove_file(p3).ok();
     }
 }

@@ -20,11 +20,13 @@
 //! once per touched coordinate per batch.
 
 use crate::data::dataset::Dataset;
+use crate::lsh::frozen::FrozenLayerTables;
 use crate::nn::layer::Layer;
 use crate::nn::loss::softmax_xent_grad;
 use crate::nn::network::Network;
 use crate::nn::sparse::{LayerInput, SparseVec};
 use crate::optim::{OptimConfig, Optimizer};
+use crate::publish::{ModelParts, TablePublisher};
 use crate::sampling::{make_selector, NodeSelector, SamplerConfig};
 use crate::tensor::batch::BatchPlane;
 use crate::train::metrics::{EpochRecord, MultCounters, RunRecord};
@@ -591,6 +593,39 @@ impl Default for TrainConfig {
     }
 }
 
+/// Live-publication hook: while training runs, the trainer freezes its
+/// current weights + tables into [`ModelParts`] and pushes them through
+/// the attached [`TablePublisher`] — at every epoch boundary, plus every
+/// `every_batches` minibatches when that is nonzero. Serving workers on
+/// the paired `TableReader` pick each version up between micro-batches
+/// without ever blocking (see `publish`).
+pub struct PublishHook {
+    publisher: TablePublisher,
+    /// Also publish every N minibatches (0 = epoch boundaries only).
+    every_batches: usize,
+    batches_seen: u64,
+}
+
+/// Freeze live trainer state into publishable parts. `None` when the
+/// selection method maintains no LSH tables (publication serves through
+/// frozen tables, so it requires method = LSH).
+fn freeze_model_parts(
+    net: &Network,
+    selectors: &[Box<dyn NodeSelector>],
+    sampler: &SamplerConfig,
+) -> Option<ModelParts> {
+    let frozen: Vec<FrozenLayerTables> = selectors
+        .iter()
+        .filter_map(|s| s.lsh_tables().map(FrozenLayerTables::freeze))
+        .collect();
+    (frozen.len() == net.n_hidden()).then(|| ModelParts {
+        net: net.clone(),
+        tables: frozen,
+        sparsity: sampler.sparsity,
+        rerank_factor: sampler.lsh.rerank_factor,
+    })
+}
+
 /// Sequential trainer owning network + selectors + optimizer.
 pub struct Trainer {
     pub net: Network,
@@ -599,6 +634,7 @@ pub struct Trainer {
     pub cfg: TrainConfig,
     ws: BatchWorkspace,
     rng: Pcg64,
+    hook: Option<PublishHook>,
 }
 
 impl Trainer {
@@ -609,7 +645,39 @@ impl Trainer {
             .collect();
         let opt = Optimizer::for_network(cfg.optim, &net);
         let ws = BatchWorkspace::for_network(&net);
-        Trainer { net, selectors, opt, cfg, ws, rng }
+        Trainer { net, selectors, opt, cfg, ws, rng, hook: None }
+    }
+
+    /// Freeze the current live state into publishable parts ([`None`] for
+    /// non-LSH methods — see [`freeze_model_parts`]). This is how a
+    /// train-while-serve deployment seeds its [`TablePublisher`] before
+    /// attaching it.
+    pub fn model_parts(&self) -> Option<ModelParts> {
+        freeze_model_parts(&self.net, &self.selectors, &self.cfg.sampler)
+    }
+
+    /// Attach a publisher: [`Trainer::run`] will publish at every epoch
+    /// boundary and, when `every_batches > 0`, every that-many
+    /// minibatches mid-epoch.
+    pub fn attach_publisher(&mut self, publisher: TablePublisher, every_batches: usize) {
+        self.hook = Some(PublishHook { publisher, every_batches, batches_seen: 0 });
+    }
+
+    /// Publish the current state immediately through the attached
+    /// publisher. `None` when no publisher is attached or the method
+    /// ships no tables; otherwise the stamped version.
+    pub fn publish_now(&mut self) -> Option<u64> {
+        // Check for a hook before freezing: the freeze clones the full
+        // network, which would be pure waste with nowhere to publish.
+        self.hook.as_ref()?;
+        let parts = freeze_model_parts(&self.net, &self.selectors, &self.cfg.sampler)?;
+        self.hook.as_mut().map(|h| h.publisher.publish(parts))
+    }
+
+    /// Versions published through the attached hook (0 = none attached or
+    /// nothing published beyond the publisher's starting model).
+    pub fn published_versions(&self) -> u64 {
+        self.hook.as_ref().map_or(0, |h| h.publisher.version())
     }
 
     /// Train for `cfg.epochs`, evaluating after each epoch.
@@ -693,9 +761,30 @@ impl Trainer {
             loss_sum += r.loss as f64 * chunk.len() as f64;
             active_sum += r.active_fraction as f64 * chunk.len() as f64;
             mults.add(&r.mults);
+            // Mid-epoch publication: freeze the *post-update* weights and
+            // tables every N batches. The freeze runs on this (trainer)
+            // thread; serving workers only ever see the atomic swap.
+            if let Some(hook) = self.hook.as_mut() {
+                hook.batches_seen += 1;
+                if hook.every_batches > 0 && hook.batches_seen % hook.every_batches as u64 == 0 {
+                    if let Some(parts) =
+                        freeze_model_parts(&self.net, &self.selectors, &self.cfg.sampler)
+                    {
+                        hook.publisher.publish(parts);
+                    }
+                }
+            }
         }
         for (l, sel) in self.selectors.iter_mut().enumerate() {
             sel.on_epoch_end(&self.net.layers[l], epoch, &mut self.rng);
+        }
+        // Epoch-boundary publication ships the freshly rebuilt tables.
+        if let Some(hook) = self.hook.as_mut() {
+            if let Some(parts) =
+                freeze_model_parts(&self.net, &self.selectors, &self.cfg.sampler)
+            {
+                hook.publisher.publish(parts);
+            }
         }
         let wall = t0.elapsed().as_secs_f64();
         let cap = if self.cfg.eval_cap == 0 { test.len() } else { self.cfg.eval_cap.min(test.len()) };
@@ -868,6 +957,64 @@ mod tests {
         );
         t2.run(&train, &test);
         assert!(t2.snapshot().tables.is_none(), "non-LSH methods have no tables to ship");
+    }
+
+    #[test]
+    fn publish_hook_publishes_each_epoch_and_every_n_batches() {
+        use crate::publish::TablePublisher;
+        use crate::serve::{InferenceWorkspace, SparseInferenceEngine};
+
+        let (train, test) = blob_dataset(64, 16, 13);
+        let mut t = Trainer::new(
+            net(16, 32),
+            TrainConfig {
+                epochs: 2,
+                batch_size: 8,
+                sampler: SamplerConfig::with_method(Method::Lsh, 0.25),
+                ..Default::default()
+            },
+        );
+        let parts = t.model_parts().expect("LSH trainer has tables from construction");
+        let (publisher, reader) = TablePublisher::start(parts);
+        // 64 samples / batch 8 = 8 batches per epoch, cumulative counter:
+        // mid-epoch publishes land at batches 3, 6 (epoch 0) and 9, 12, 15
+        // (epoch 1) = 5, plus one per epoch boundary = 7 total.
+        t.attach_publisher(publisher, 3);
+        t.run(&train, &test);
+        assert_eq!(t.published_versions(), 7);
+        assert_eq!(reader.latest_version(), 7);
+        // On-demand publication stamps the next version.
+        assert_eq!(t.publish_now(), Some(8));
+        assert_eq!(reader.latest_version(), 8);
+
+        // The last published epoch is the trainer's current state: same
+        // buckets as the live selectors, weights serve identically.
+        let current = reader.current();
+        for (l, ft) in current.tables.iter().enumerate() {
+            assert_eq!(ft.tables(), t.selectors[l].lsh_tables().unwrap().tables());
+        }
+        let engine = SparseInferenceEngine::live(reader);
+        let mut ws = InferenceWorkspace::new(&engine);
+        let inf = engine.infer(&train.xs[0], &mut ws);
+        assert_eq!(inf.version, 8);
+        let mut reference = Vec::new();
+        // Sparse serving logits come from the same weights the trainer holds.
+        current.net.forward_dense(&train.xs[0], &mut reference);
+        t.net.forward_dense(&train.xs[0], &mut ws.logits);
+        assert_eq!(ws.logits, reference, "published weights == live trainer weights");
+    }
+
+    #[test]
+    fn non_lsh_trainer_has_no_parts_to_publish() {
+        let mut t = Trainer::new(
+            net(16, 32),
+            TrainConfig {
+                sampler: SamplerConfig::with_method(Method::Standard, 1.0),
+                ..Default::default()
+            },
+        );
+        assert!(t.model_parts().is_none(), "standard method keeps no tables");
+        assert!(t.publish_now().is_none(), "no hook attached, nothing to publish");
     }
 
     #[test]

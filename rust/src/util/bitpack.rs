@@ -42,6 +42,51 @@ pub fn num_buckets(k: usize) -> usize {
     1usize << k
 }
 
+/// Pack `values` (each `< 2^bits`) into a dense LSB-first `u32` word
+/// stream: value `i` occupies bits `[i*bits, (i+1)*bits)` of the stream,
+/// low bits in low words. This is the v3 snapshot's fingerprint encoding
+/// (K ≤ 16 bits per stored fingerprint instead of 32).
+pub fn pack_u32s(values: &[u32], bits: usize) -> Vec<u32> {
+    assert!((1..=32).contains(&bits), "bit width {bits} out of range");
+    let total = values.len() * bits;
+    let mut words = vec![0u32; total.div_ceil(32)];
+    for (i, &v) in values.iter().enumerate() {
+        debug_assert!(bits == 32 || v < (1u32 << bits), "value {v} exceeds {bits} bits");
+        let start = i * bits;
+        let (w, off) = (start / 32, start % 32);
+        words[w] |= v << off;
+        if off + bits > 32 {
+            // The value straddles a word boundary; spill the high part.
+            words[w + 1] |= v >> (32 - off);
+        }
+    }
+    words
+}
+
+/// Inverse of [`pack_u32s`]: extract `n` values of `bits` width.
+pub fn unpack_u32s(words: &[u32], bits: usize, n: usize) -> Vec<u32> {
+    assert!((1..=32).contains(&bits), "bit width {bits} out of range");
+    let mask = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
+    (0..n)
+        .map(|i| {
+            let start = i * bits;
+            let (w, off) = (start / 32, start % 32);
+            let mut v = words[w] >> off;
+            if off + bits > 32 {
+                v |= words[w + 1] << (32 - off);
+            }
+            v & mask
+        })
+        .collect()
+}
+
+/// Words [`pack_u32s`] emits for `n` values of `bits` width (the snapshot
+/// reader sizes its reads with this).
+#[inline]
+pub fn packed_words(n: usize, bits: usize) -> usize {
+    (n * bits).div_ceil(32)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -86,5 +131,36 @@ mod tests {
     fn bucket_counts() {
         assert_eq!(num_buckets(6), 64);
         assert_eq!(num_buckets(0), 1);
+    }
+
+    #[test]
+    fn pack_unpack_u32s_roundtrip_all_widths() {
+        for bits in 1..=32usize {
+            let mask = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
+            // Patterned values exercising straddled word boundaries.
+            let values: Vec<u32> =
+                (0..100u32).map(|i| (i.wrapping_mul(0x9E37_79B9)) & mask).collect();
+            let words = pack_u32s(&values, bits);
+            assert_eq!(words.len(), packed_words(values.len(), bits), "width {bits}");
+            assert_eq!(unpack_u32s(&words, bits, values.len()), values, "width {bits}");
+        }
+    }
+
+    #[test]
+    fn pack_u32s_is_dense() {
+        // 100 six-bit values = 600 bits = 19 words, vs 100 words unpacked.
+        assert_eq!(packed_words(100, 6), 19);
+        assert_eq!(pack_u32s(&[0b111111; 100], 6).len(), 19);
+        assert_eq!(packed_words(0, 6), 0);
+        assert!(pack_u32s(&[], 6).is_empty());
+    }
+
+    #[test]
+    fn one_bit_packing_is_a_bitmap() {
+        let bits: Vec<u32> = (0..40).map(|i| (i % 3 == 0) as u32).collect();
+        let words = pack_u32s(&bits, 1);
+        assert_eq!(words.len(), 2);
+        assert_eq!(unpack_u32s(&words, 1, 40), bits);
+        assert_eq!(words[0] & 1, 1, "value 0 lives in bit 0 of word 0");
     }
 }

@@ -214,6 +214,58 @@ fn one_worker_and_n_workers_agree_with_direct_inference() {
 }
 
 #[test]
+fn asgd_snapshot_ships_rebuilt_tables() {
+    // ROADMAP "ASGD snapshot fidelity": Hogwild workers own private
+    // tables, so the save path rebuilds once from the merged weights —
+    // the file must carry real tables over the trained parameters, load
+    // back bitwise, and serve deterministically.
+    use hashdl::train::asgd::{run_asgd, AsgdConfig};
+
+    let (train, test) = blob_dataset(200, 16, 41);
+    let net = Network::new(
+        &NetworkConfig { n_in: 16, hidden: vec![40], n_out: 2, act: Activation::ReLU },
+        &mut Pcg64::seeded(41),
+    );
+    let sampler = SamplerConfig::with_method(Method::Lsh, 0.25);
+    let out = run_asgd(
+        net,
+        &train,
+        &test,
+        &AsgdConfig {
+            threads: 3,
+            epochs: 2,
+            sampler,
+            optim: OptimConfig { lr: 0.05, ..Default::default() },
+            seed: 41,
+            ..Default::default()
+        },
+    );
+    // What `train --threads 3 --save` now ships:
+    let snap = ModelSnapshot::with_rebuilt_tables(out.net, sampler, 41);
+    let tables = snap.tables.as_ref().expect("ASGD snapshot must carry tables");
+    assert_eq!(tables.len(), snap.net.n_hidden());
+    for (l, t) in tables.iter().enumerate() {
+        assert_eq!(t.n_nodes(), snap.net.layers[l].n_out());
+    }
+    // The rebuild is the deterministic recipe: a second rebuild from the
+    // same weights + seed produces identical buckets.
+    let again = ModelSnapshot::with_rebuilt_tables(snap.net.clone(), sampler, 41);
+    for (a, b) in tables.iter().zip(again.tables.as_ref().unwrap()) {
+        assert_eq!(a.tables(), b.tables());
+        assert_eq!(a.family().srp().projections(), b.family().srp().projections());
+    }
+    // And the file round-trips them.
+    let path = tmp("asgd_tables");
+    save_snapshot(&snap, &path).unwrap();
+    let back = load_snapshot(&path).unwrap();
+    let bt = back.tables.as_ref().expect("tables survive the file");
+    for (a, b) in tables.iter().zip(bt) {
+        assert_eq!(a.tables(), b.tables(), "trained-weight tables must ship bitwise");
+    }
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
 fn sparse_eval_tracks_dense_on_mnist_like_at_5pct() {
     // Train a paper-shaped (but narrow) LSH model on the procedural MNIST
     // stand-in, then compare frozen sparse serving against dense serving
