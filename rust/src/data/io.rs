@@ -25,6 +25,7 @@ const DATASET_MAGIC: &[u8; 8] = b"HDLDATA1";
 pub(crate) const MODEL_MAGIC: &[u8; 8] = b"HDLMODL1";
 pub(crate) const SNAPSHOT_MAGIC: &[u8; 8] = b"HDLMODL2";
 pub(crate) const SNAPSHOT3_MAGIC: &[u8; 8] = b"HDLMODL3";
+pub(crate) const SNAPSHOT4_MAGIC: &[u8; 8] = b"HDLMODL4";
 
 pub(crate) fn write_u32(w: &mut impl Write, v: u32) -> io::Result<()> {
     w.write_all(&v.to_le_bytes())
@@ -174,15 +175,20 @@ pub(crate) fn read_network_body(r: &mut impl Read) -> io::Result<Network> {
 }
 
 /// Load the network weights from any model format: legacy v1 files, v2
-/// serving snapshots, or v3 bit-packed snapshots (the table payload is
-/// ignored here — use [`crate::serve::snapshot::load_snapshot`] to keep
-/// it). All three formats put the network body right after the magic, so
-/// old weight-only readers keep working on new files.
+/// serving snapshots, v3 bit-packed snapshots or v4 delta-coded snapshots
+/// (the table payload is ignored here — use
+/// [`crate::serve::snapshot::load_snapshot`] to keep it). All formats put
+/// the network body right after the magic, so old weight-only readers
+/// keep working on new files.
 pub fn load_network(path: &Path) -> io::Result<Network> {
     let mut r = io::BufReader::new(std::fs::File::open(path)?);
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)?;
-    if &magic != MODEL_MAGIC && &magic != SNAPSHOT_MAGIC && &magic != SNAPSHOT3_MAGIC {
+    if &magic != MODEL_MAGIC
+        && &magic != SNAPSHOT_MAGIC
+        && &magic != SNAPSHOT3_MAGIC
+        && &magic != SNAPSHOT4_MAGIC
+    {
         return Err(invalid("not a hashdl model file"));
     }
     read_network_body(&mut r)

@@ -21,6 +21,7 @@ pub mod lsh;
 pub mod nn;
 pub mod optim;
 pub mod publish;
+pub mod router;
 pub mod runtime;
 pub mod sampling;
 pub mod serve;
@@ -35,6 +36,10 @@ pub mod prelude {
     pub use crate::nn::{Activation, Network, NetworkConfig};
     pub use crate::optim::{OptimConfig, OptimizerKind};
     pub use crate::publish::{ModelParts, PublishedModel, TablePublisher, TableReader};
+    pub use crate::router::{
+        policy::RoutePolicy, registry::ModelRegistry, stats::RouterStats, RouteOutcome,
+        RoutedRequest, Router,
+    };
     pub use crate::sampling::{Method, SamplerConfig};
     pub use crate::serve::{
         load_snapshot, save_snapshot, InferenceWorkspace, ModelSnapshot, PoolConfig, ServePool,

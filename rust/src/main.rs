@@ -9,6 +9,8 @@
 //!   eval         evaluate a saved model on a dataset (dense or --sparse)
 //!   serve-bench  serving benchmark (closed or open loop, dense vs sparse,
 //!                1..N workers, optional train-while-serve scenario)
+//!   serve-fleet  multi-model fleet behind the router: per-model pools,
+//!                canary split, overload shedding (writes BENCH_router.json)
 //!   experiment   regenerate a paper table/figure (table3|fig4|fig5|fig6|fig7|fig8)
 //!   std-pjrt     run the dense STD baseline through the PJRT artifacts
 
@@ -22,11 +24,12 @@ use hashdl::sampling::{Method, SamplerConfig};
 use hashdl::serve::bench::{mult_fraction, throughput_scaling, write_bench_json, BenchConfig};
 use hashdl::serve::pool::PoolConfig;
 use hashdl::serve::{
-    drive_clients_while, load_snapshot, run_closed_loop, run_open_loop, run_train_while_serve,
-    save_snapshot, InferenceWorkspace, ModelSnapshot, ServePool, SparseInferenceEngine,
+    drive_clients_while, load_snapshot, run_closed_loop, run_open_loop, run_route_bench,
+    run_train_while_serve, save_snapshot, write_router_bench_json, FleetModel,
+    InferenceWorkspace, ModelSnapshot, RouteBenchConfig, ServePool, SparseInferenceEngine,
     TrainServeConfig,
 };
-use hashdl::train::asgd::{run_asgd, AsgdConfig};
+use hashdl::train::asgd::{run_asgd, run_asgd_published, AsgdConfig};
 use hashdl::train::trainer::{TrainConfig, Trainer};
 use hashdl::util::argparse::{Args, Parser};
 use hashdl::util::config::Config;
@@ -72,6 +75,7 @@ fn main() {
         "train-serve" => cmd_train_serve(args),
         "eval" => cmd_eval(args),
         "serve-bench" => cmd_serve_bench(args),
+        "serve-fleet" => cmd_serve_fleet(args),
         "experiment" => cmd_experiment(args),
         "std-pjrt" => cmd_std_pjrt(args),
         "--help" | "-h" | "help" => {
@@ -105,14 +109,19 @@ USAGE: hashdl <subcommand> [flags]
               [--workers 1,4] [--modes dense,sparse] [--batch-cap <B>]
               [--deadline-us <t>] [--sparsity <f>] [--arrival-rate <r>]
               [--train-serve] [--out BENCH_serve.json]
+  serve-fleet [--config fleet.conf | --models <N>] [--dataset <..>]
+              [--workers w] [--requests <N>] [--canary <f>]
+              [--out BENCH_router.json]   (router + per-model pools)
   experiment  <table3|fig4|fig5|fig6|fig7|fig8> [--scale quick|medium|paper]
               [--datasets a,b] [--out-dir results/]
   std-pjrt    --variant <tiny|mnist|norb|convex|rectangles> [--epochs e] [--lr f]
               [--artifacts dir]
 
-`train --save` writes a v3 serving snapshot (weights + bit-packed frozen
-LSH tables; ASGD runs rebuild tables from the merged weights at join);
-`eval` and `serve-bench` load v3/v2 snapshots and legacy v1 model files.
+`train --save` writes a v4 serving snapshot (weights + bit-packed frozen
+LSH tables with delta-coded buckets; ASGD runs rebuild tables from the
+merged weights at join); `eval`, `serve-bench` and `serve-fleet` load
+v4/v3/v2 snapshots and legacy v1 model files. `train --threads N --serve`
+serves live traffic while Hogwild-training, publishing every epoch.
 Run any subcommand with --help for full flags.";
 
 fn parse_benchmark(name: &str) -> Benchmark {
@@ -169,6 +178,9 @@ fn cmd_train(rest: Vec<String>) -> i32 {
         .opt("seed", "42", "run seed")
         .opt("eval-cap", "2000", "max test examples per evaluation")
         .opt("save", "", "save trained model to this path")
+        .flag("serve", "serve live traffic while Hogwild-training (requires --threads > 1)")
+        .opt("serve-workers", "2", "serving worker threads (with --serve)")
+        .opt("serve-clients", "0", "closed-loop client threads (0 = 2x serve workers)")
         .flag("quiet", "suppress per-epoch logging");
     let a = p.parse_rest(rest);
 
@@ -245,23 +257,71 @@ fn cmd_train(rest: Vec<String>) -> i32 {
     // Snapshots clone the net (and freeze tables), so only build one when
     // the run actually saves.
     let saving = a.get("save").filter(|s| !s.is_empty()).is_some();
+    let serving = a.has("serve");
+    if serving && threads <= 1 {
+        eprintln!("--serve needs --threads > 1 (Hogwild); use `train-serve` for the sequential trainer");
+        return 2;
+    }
+    if serving && method != Method::Lsh {
+        eprintln!("--serve requires --method lsh: serving reads frozen LSH tables");
+        return 2;
+    }
     let (record, snapshot) = if threads > 1 {
-        let out = run_asgd(
-            net,
-            &train,
-            &test,
-            &AsgdConfig {
-                threads,
-                epochs,
-                batch_size,
-                optim,
-                sampler,
-                seed,
-                eval_cap,
-                verbose,
-                ..Default::default()
-            },
-        );
+        let asgd_cfg = AsgdConfig {
+            threads,
+            epochs,
+            batch_size,
+            optim,
+            sampler,
+            seed,
+            eval_cap,
+            verbose,
+            ..Default::default()
+        };
+        let out = if serving {
+            // ASGD live publication: version 0 is the untrained net with
+            // deterministically rebuilt tables; each epoch boundary
+            // publishes the quiescent merged weights while the pool keeps
+            // answering closed-loop traffic from the newest epoch.
+            let parts =
+                ModelParts::from_snapshot(ModelSnapshot::with_rebuilt_tables(net.clone(), sampler, seed));
+            let (publisher, reader) = TablePublisher::start(parts);
+            let serve_workers = a.parse_or("serve-workers", 2usize).max(1);
+            let pool = ServePool::start(
+                SparseInferenceEngine::live(reader),
+                PoolConfig { workers: serve_workers, ..Default::default() },
+            );
+            let clients = match a.parse_or("serve-clients", 0usize) {
+                0 => (serve_workers * 2).max(1),
+                c => c,
+            };
+            let t0 = Instant::now();
+            let (train_ref, test_ref) = (&train, &test);
+            let asgd_ref = &asgd_cfg;
+            let (samples, out) =
+                drive_clients_while(&pool, clients, &test.xs, &test.ys, move || {
+                    run_asgd_published(net, train_ref, test_ref, asgd_ref, Some(publisher))
+                });
+            let wall = t0.elapsed().as_secs_f64().max(1e-9);
+            let stats = pool.shutdown();
+            println!(
+                "asgd-serve: {} requests @ {:.0} req/s while training | p50 {}us p99 {}us \
+                 | {} versions published, {} distinct served, {} worker re-pins, dropped {} \
+                 | serve acc {:.3}",
+                samples.served(),
+                samples.served() as f64 / wall,
+                samples.p50_micros(),
+                samples.p99_micros(),
+                out.versions_published,
+                samples.versions.len(),
+                stats.version_switches,
+                samples.dropped,
+                samples.accuracy(),
+            );
+            out
+        } else {
+            run_asgd(net, &train, &test, &asgd_cfg)
+        };
         // ASGD workers each own per-thread tables over the shared weights;
         // none is canonical, so rebuild tables once from the merged
         // weights at join — the snapshot ships real trained-weight tables
@@ -742,6 +802,249 @@ fn cmd_serve_bench(rest: Vec<String>) -> i32 {
         }
     }
     0
+}
+
+/// Multi-model fleet serving: register N models (quick-trained or loaded
+/// from snapshots, per a config file's model list), put the router in
+/// front, and run the route-bench scenarios — per-fleet-size baselines,
+/// the deterministic canary split, and the overload shed curve — emitting
+/// `BENCH_router.json`.
+///
+/// Config file shape (all keys optional except `fleet.models`):
+///
+/// ```text
+/// [fleet]
+/// models = alpha,beta        # registration order = scenario order
+/// [model.alpha]
+/// snapshot = alpha.bin       # serve this file (else quick-train)
+/// workers  = 4               # per-model pool override
+/// seed     = 7               # per-model quick-train seed
+/// [model.beta]
+/// workers  = 1
+/// ```
+fn cmd_serve_fleet(rest: Vec<String>) -> i32 {
+    let p = Parser::new(
+        "hashdl serve-fleet",
+        "serve a fleet of models behind the router (writes BENCH_router.json)",
+    )
+    .opt("config", "", "fleet config file ([fleet] models = a,b + [model.<name>] sections)")
+    .opt("models", "2", "models to quick-train when no config is given (named m0..)")
+    .opt("dataset", "mnist", "benchmark supplying the request stream and quick-train data")
+    .opt("train-size", "2000", "quick-train samples per model")
+    .opt("epochs", "1", "quick-train epochs per model")
+    .opt("hidden", "256", "hidden width for quick-trained models")
+    .opt("depth", "1", "hidden layers for quick-trained models")
+    .opt("lr", "0.01", "quick-train learning rate")
+    .opt("sparsity", "0.05", "active-node fraction")
+    .opt("workers", "2", "worker threads per model pool (per-model config overrides)")
+    .opt("queue-cap", "1024", "bounded per-model queue capacity")
+    .opt("batch-cap", "32", "micro-batch size cap")
+    .opt("deadline-us", "200", "micro-batch close deadline (microseconds)")
+    .opt("requests", "12000", "requests per scenario")
+    .opt("clients", "0", "closed-loop client threads (0 = 2x workers)")
+    .opt("canary", "0.1", "canary fraction (the 90/10 scenario at the default)")
+    .opt("overload-queue-cap", "8", "queue capacity forced in the overload scenario")
+    .opt("overload-bursts", "256,1024,4096", "burst sizes for the overload shed curve")
+    .opt("seed", "42", "run seed")
+    .opt("out", "BENCH_router.json", "JSON output path");
+    let a = p.parse_rest(rest);
+
+    let b = parse_benchmark(a.get("dataset").unwrap_or_default());
+    let seed = a.parse_or("seed", 42u64);
+    let requests = a.parse_or("requests", 12_000usize).max(1);
+    let sparsity = a.parse_or("sparsity", 0.05f32);
+    let stream_len = requests.min(2000);
+    let (qtrain, stream) =
+        b.generate(a.parse_or("train-size", 2000usize), stream_len, seed);
+
+    let file_cfg = match a.get("config").filter(|s| !s.is_empty()) {
+        Some(path) => match Config::load(Path::new(path)) {
+            Ok(c) => Some(c),
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 2;
+            }
+        },
+        None => None,
+    };
+    let model_names: Vec<String> = match &file_cfg {
+        Some(c) => {
+            let names = c.get_list("fleet.models");
+            if names.len() < 2 {
+                eprintln!("fleet config must list at least two models (fleet.models = a,b)");
+                return 2;
+            }
+            names
+        }
+        None => {
+            let n = a.parse_or("models", 2usize).max(2);
+            (0..n).map(|i| format!("m{i}")).collect()
+        }
+    };
+    // Reject duplicates up front: the registry would refuse the second
+    // registration anyway, but only after minutes of quick-training —
+    // operator typos must fail before the expensive part.
+    {
+        let mut seen = std::collections::BTreeSet::new();
+        for name in &model_names {
+            if !seen.insert(name.as_str()) {
+                eprintln!("duplicate model name {name:?} in the fleet list");
+                return 2;
+            }
+        }
+    }
+
+    let pool_default = PoolConfig {
+        workers: a.parse_or("workers", 2usize).max(1),
+        queue_cap: a.parse_or("queue-cap", 1024usize).max(1),
+        max_batch: a.parse_or("batch-cap", 32usize).max(1),
+        batch_deadline: Duration::from_micros(a.parse_or("deadline-us", 200u64)),
+        sparse: true,
+    };
+
+    let mut models: Vec<FleetModel> = Vec::with_capacity(model_names.len());
+    for (i, name) in model_names.iter().enumerate() {
+        let key = |k: &str| format!("model.{name}.{k}");
+        let mseed = file_cfg
+            .as_ref()
+            .and_then(|c| c.get_parsed::<u64>(&key("seed")).ok().flatten())
+            .unwrap_or(seed.wrapping_add(i as u64));
+        let snapshot_path = file_cfg
+            .as_ref()
+            .and_then(|c| c.get(&key("snapshot")))
+            .filter(|s| !s.is_empty())
+            .map(str::to_string);
+        let mut snap = match snapshot_path {
+            Some(path) => match load_snapshot(Path::new(&path)) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("error loading model {name:?} from {path}: {e}");
+                    return 1;
+                }
+            },
+            None => {
+                // Quick-train a distinct model per name (seed differs, so
+                // canary/shadow comparisons are between real variants).
+                let net = Network::new(
+                    &NetworkConfig {
+                        n_in: b.dim(),
+                        hidden: vec![
+                            a.parse_or("hidden", 256usize);
+                            a.parse_or("depth", 1usize).max(1)
+                        ],
+                        n_out: b.n_classes(),
+                        act: Activation::ReLU,
+                    },
+                    &mut Pcg64::seeded(mseed),
+                );
+                eprintln!(
+                    "quick-training fleet model {name:?} ({} params, seed {mseed})...",
+                    net.n_params()
+                );
+                let mut t = Trainer::new(
+                    net,
+                    TrainConfig {
+                        epochs: a.parse_or("epochs", 1usize).max(1),
+                        batch_size: 32,
+                        optim: OptimConfig {
+                            lr: a.parse_or("lr", 0.01f32),
+                            ..Default::default()
+                        },
+                        sampler: SamplerConfig::with_method(Method::Lsh, sparsity),
+                        seed: mseed,
+                        eval_cap: 500,
+                        verbose: false,
+                    },
+                );
+                t.run(&qtrain, &stream);
+                t.snapshot()
+            }
+        };
+        if a.set_explicitly("sparsity") {
+            snap.sampler.sparsity = sparsity;
+        }
+        let workers = file_cfg
+            .as_ref()
+            .and_then(|c| c.get_parsed::<usize>(&key("workers")).ok().flatten())
+            .unwrap_or(pool_default.workers)
+            .max(1);
+        models.push(FleetModel {
+            name: name.clone(),
+            parts: ModelParts::from_snapshot(snap),
+            pool: PoolConfig { workers, ..pool_default },
+        });
+    }
+
+    // Validate the burst list up front: a typo'd entry must fail fast,
+    // not silently drop the overload curve from the report.
+    let mut overload_bursts = Vec::new();
+    for s in a.list("overload-bursts") {
+        match s.parse::<usize>() {
+            Ok(v) if v > 0 => overload_bursts.push(v),
+            _ => {
+                eprintln!("bad --overload-bursts entry {s:?} (want positive integers, e.g. 256,1024)");
+                return 2;
+            }
+        }
+    }
+    let rb_cfg = RouteBenchConfig {
+        requests,
+        clients: a.parse_or("clients", 0usize),
+        canary_fraction: a.parse_or("canary", 0.1f64),
+        overload_queue_cap: a.parse_or("overload-queue-cap", 8usize).max(1),
+        overload_bursts,
+    };
+    let report = run_route_bench(&models, &stream.xs, &rb_cfg);
+
+    for case in &report.cases {
+        println!(
+            "{:>8}: {} answered @ {:>8.0} req/s  p50 {:>6}us  p99 {:>6}us  shed {}  errors {}",
+            case.scenario,
+            case.answered,
+            case.req_per_sec,
+            case.p50_micros,
+            case.p99_micros,
+            case.shed,
+            case.errors,
+        );
+        for m in &case.per_model {
+            println!(
+                "          {:>12}: {} served  p50 {}us  p99 {}us  shed rate {:.4}  v{}",
+                m.name,
+                m.served,
+                m.p50_micros,
+                m.p99_micros,
+                m.shed_rate(),
+                m.latest_version,
+            );
+        }
+    }
+    println!(
+        "canary  : requested {:.4} realized {:.4} over {} requests ({} to canary, shed {})",
+        report.canary_fraction,
+        report.canary.realized_canary_fraction,
+        report.canary.answered,
+        report.canary.to_canary,
+        report.canary.shed,
+    );
+    for pt in &report.overload {
+        println!(
+            "overload: burst {:>6} (queue cap {}) -> accepted {:>6}, shed {:>6}, answered {:>6}",
+            pt.burst, report.overload_queue_cap, pt.accepted, pt.shed, pt.answered,
+        );
+    }
+
+    let out = PathBuf::from(a.get_or("out", "BENCH_router.json"));
+    match write_router_bench_json(&out, &report) {
+        Ok(()) => {
+            println!("wrote {}", out.display());
+            0
+        }
+        Err(e) => {
+            eprintln!("error writing {}: {e}", out.display());
+            1
+        }
+    }
 }
 
 fn cmd_experiment(mut rest: Vec<String>) -> i32 {

@@ -77,6 +77,31 @@ impl ModelParts {
         }
     }
 
+    /// Check that these parts are publishable — one frozen table stack per
+    /// hidden layer, each covering its layer — *without* panicking. The
+    /// fleet registry validates operator-supplied parts through this
+    /// before starting a pool, so a malformed model registration comes
+    /// back as an `Err` instead of tearing the process down.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.tables.len() != self.net.n_hidden() {
+            return Err(format!(
+                "{} frozen table stacks for {} hidden layers (need one per layer)",
+                self.tables.len(),
+                self.net.n_hidden()
+            ));
+        }
+        for (l, t) in self.tables.iter().enumerate() {
+            if t.n_nodes() != self.net.layers[l].n_out() {
+                return Err(format!(
+                    "table stack {l} covers {} nodes, layer has {}",
+                    t.n_nodes(),
+                    self.net.layers[l].n_out()
+                ));
+            }
+        }
+        Ok(())
+    }
+
     fn into_model(self, version: u64) -> PublishedModel {
         assert_eq!(
             self.tables.len(),
@@ -259,5 +284,17 @@ mod tests {
         let mut p = parts(7);
         p.tables.clear();
         TablePublisher::start(p);
+    }
+
+    #[test]
+    fn validate_reports_mismatches_without_panicking() {
+        assert!(parts(8).validate().is_ok());
+        let mut missing = parts(8);
+        missing.tables.clear();
+        assert!(missing.validate().unwrap_err().contains("0 frozen table stacks"));
+        let mut doubled = parts(8);
+        let extra = doubled.tables[0].clone();
+        doubled.tables.push(extra);
+        assert!(doubled.validate().is_err());
     }
 }

@@ -1,0 +1,535 @@
+//! Multi-model serving router: the fleet front door.
+//!
+//! PR 2–3 built the single-model serving path — frozen snapshots, a
+//! micro-batching [`crate::serve::ServePool`] and lock-free live
+//! publication. This subsystem puts the missing front end on it: one
+//! process serving **many** models, each behind its own pool, with the
+//! routing, admission-control and telemetry glue a fleet needs (the
+//! SLIDE-style "smart algorithms on commodity CPUs" argument only pays at
+//! fleet scale if one box can host the whole fleet).
+//!
+//! Pieces:
+//! * [`registry::ModelRegistry`] — name → {[`crate::publish::TableReader`],
+//!   [`crate::serve::ServePool`], per-model [`crate::serve::PoolConfig`]}
+//!   with runtime add/remove. Per-model hot-reload falls out of the
+//!   publish slot: a trainer publishes into its registered model while
+//!   every other model serves frozen snapshots.
+//! * [`policy::RoutePolicy`] — exact-name, deterministic canary split
+//!   (pure function of the request id → replays reproduce), and shadow
+//!   mirroring with divergence recording.
+//! * [`Router`] — resolves [`RoutedRequest`]s through the policy and the
+//!   registry, shedding at each model's bounded queue instead of
+//!   blocking ([`RouteOutcome::Shed`]), and aggregates
+//!   [`stats::RouterStats`]: per-model p50/p99, req/s, shed rate and the
+//!   version-age histogram (`Response.version` vs the reader's
+//!   `latest_version`).
+//!
+//! The routing hot path costs one registry read-lock (an Arc clone), one
+//! hash for canary policies, one bounded-queue try-push, and one small
+//! String allocation for the outcome's realized model name (how canary
+//! splits are observed). Shadow mode adds a relay hop for primary
+//! responses — the price of observing them — and is meant for validation
+//! windows, not steady state.
+
+pub mod policy;
+pub mod registry;
+pub mod stats;
+
+use crate::serve::pool::{Response, SubmitOutcome};
+use policy::{canary_assignment, RoutePolicy};
+use registry::ModelRegistry;
+use stats::{ModelStatus, RouterStats, ShadowStats};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, RwLock};
+
+/// One request addressed to the fleet: a model name plus the payload.
+#[derive(Clone, Debug)]
+pub struct RoutedRequest {
+    pub id: u64,
+    pub model: String,
+    pub x: Vec<f32>,
+}
+
+/// What the router did with a request. `Enqueued.model` reports the model
+/// that will actually answer — under a canary policy that is how the
+/// realized split is observed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RouteOutcome {
+    /// Admitted; the reply channel will receive the response from `model`.
+    Enqueued { model: String },
+    /// Shed at `model`'s bounded queue — rejected immediately, never
+    /// queued unboundedly. No response will come.
+    Shed { model: String },
+    /// The request named a model that is not registered.
+    UnknownModel,
+    /// `model`'s pool is shutting down (deregistration race).
+    Closed { model: String },
+}
+
+impl RouteOutcome {
+    pub fn is_enqueued(&self) -> bool {
+        matches!(self, RouteOutcome::Enqueued { .. })
+    }
+}
+
+/// A primary/shadow pair mid-flight. Entries live in
+/// [`ShadowShared::pending`] from admission until both responses arrive
+/// (or the pair is abandoned on a failed submission). Keyed by a
+/// router-internal serial — NOT the caller's request id, which the caller
+/// is free to reuse while an earlier shadowed request is still in flight.
+struct Pending {
+    client: Sender<Response>,
+    /// The caller's request id, restored on the forwarded response (the
+    /// pools see the internal key instead).
+    original_id: u64,
+    /// Whether a shadow duplicate was actually admitted (false once the
+    /// shadow queue sheds it — the primary then forwards immediately).
+    expect_shadow: bool,
+    primary: Option<Response>,
+    shadow: Option<Response>,
+}
+
+/// State shared between the router and its two shadow drainer threads.
+#[derive(Default)]
+struct ShadowShared {
+    pending: Mutex<HashMap<u64, Pending>>,
+    tally: Mutex<ShadowStats>,
+    /// Internal pending-map key source (collision-free even when callers
+    /// reuse request ids).
+    next_key: AtomicU64,
+}
+
+impl ShadowShared {
+    /// Record one compared pair into the tally.
+    fn record_pair(&self, primary: &Response, shadow: &Response) {
+        let mut t = self.tally.lock().expect("shadow tally poisoned");
+        t.compared += 1;
+        t.pred_mismatches += u64::from(primary.pred != shadow.pred);
+        match (&primary.logits, &shadow.logits) {
+            (Some(a), Some(b)) if a.len() == b.len() => {
+                let d = a
+                    .iter()
+                    .zip(b)
+                    .map(|(x, y)| (x - y).abs())
+                    .fold(0.0f32, f32::max);
+                if d > t.max_abs_logit_diff {
+                    t.max_abs_logit_diff = d;
+                }
+            }
+            // Shape mismatch (models with different output widths) is a
+            // divergence by definition.
+            _ => {
+                t.pred_mismatches += u64::from(primary.pred == shadow.pred);
+                t.max_abs_logit_diff = f32::INFINITY;
+            }
+        }
+    }
+
+    fn note_unpaired(&self) {
+        self.tally.lock().expect("shadow tally poisoned").unpaired += 1;
+    }
+
+    fn note_shadow_shed(&self) {
+        self.tally.lock().expect("shadow tally poisoned").shadow_shed += 1;
+    }
+}
+
+/// Drain primary responses: forward each to its client (logits stripped —
+/// they were requested for divergence scoring, not for the client), then
+/// pair-and-record or park depending on the shadow's progress.
+fn primary_drainer(shared: Arc<ShadowShared>, rx: Receiver<Response>) {
+    while let Ok(resp) = rx.recv() {
+        let mut pending = shared.pending.lock().expect("shadow pending poisoned");
+        let Some(entry) = pending.get_mut(&resp.id) else {
+            drop(pending);
+            shared.note_unpaired();
+            continue;
+        };
+        let forwarded = Response {
+            id: entry.original_id,
+            pred: resp.pred,
+            version: resp.version,
+            mults: resp.mults,
+            queue_micros: resp.queue_micros,
+            batch_size: resp.batch_size,
+            logits: None,
+        };
+        // Client may have given up (dropped receiver) — divergence is
+        // still worth recording.
+        let _ = entry.client.send(forwarded);
+        if !entry.expect_shadow {
+            pending.remove(&resp.id);
+        } else if entry.shadow.is_some() {
+            let entry = pending.remove(&resp.id).expect("entry just read");
+            let shadow = entry.shadow.expect("checked above");
+            drop(pending);
+            shared.record_pair(&resp, &shadow);
+        } else {
+            entry.primary = Some(resp);
+        }
+    }
+}
+
+/// Drain shadow responses: never forwarded anywhere — compared against
+/// the primary's answer and dropped.
+fn shadow_drainer(shared: Arc<ShadowShared>, rx: Receiver<Response>) {
+    while let Ok(resp) = rx.recv() {
+        let mut pending = shared.pending.lock().expect("shadow pending poisoned");
+        let Some(entry) = pending.get_mut(&resp.id) else {
+            drop(pending);
+            shared.note_unpaired();
+            continue;
+        };
+        if entry.primary.is_some() {
+            let entry = pending.remove(&resp.id).expect("entry just read");
+            let primary = entry.primary.expect("checked above");
+            drop(pending);
+            shared.record_pair(&primary, &resp);
+        } else {
+            entry.shadow = Some(resp);
+        }
+    }
+}
+
+/// The fleet front-end. Cheap reads on the hot path; policy swaps and
+/// registry changes take effect on the next route call.
+pub struct Router {
+    registry: Arc<ModelRegistry>,
+    policy: RwLock<RoutePolicy>,
+    shadow: Arc<ShadowShared>,
+    primary_tx: Sender<Response>,
+    shadow_tx: Sender<Response>,
+    drainers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Router {
+    /// Front a registry with the [`RoutePolicy::Exact`] policy. The two
+    /// shadow drainer threads start parked on empty channels; they cost
+    /// nothing until a shadow policy routes traffic through them.
+    pub fn new(registry: Arc<ModelRegistry>) -> Router {
+        let shared = Arc::new(ShadowShared::default());
+        let (primary_tx, primary_rx) = channel();
+        let (shadow_tx, shadow_rx) = channel();
+        let drainers = vec![
+            {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name("hashdl-shadow-primary".into())
+                    .spawn(move || primary_drainer(shared, primary_rx))
+                    .expect("spawn shadow primary drainer")
+            },
+            {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name("hashdl-shadow-shadow".into())
+                    .spawn(move || shadow_drainer(shared, shadow_rx))
+                    .expect("spawn shadow drainer")
+            },
+        ];
+        Router {
+            registry,
+            policy: RwLock::new(RoutePolicy::Exact),
+            shadow: shared,
+            primary_tx,
+            shadow_tx,
+            drainers,
+        }
+    }
+
+    /// The registry this router fronts.
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
+    }
+
+    /// Swap the routing policy (next route call sees it).
+    pub fn set_policy(&self, policy: RoutePolicy) {
+        *self.policy.write().expect("policy poisoned") = policy;
+    }
+
+    pub fn policy(&self) -> RoutePolicy {
+        self.policy.read().expect("policy poisoned").clone()
+    }
+
+    /// Route one request. On [`RouteOutcome::Enqueued`] the `reply`
+    /// channel receives exactly one [`Response`]; every other outcome
+    /// means no response will come — the caller owns the retry/drop
+    /// decision.
+    ///
+    /// Resolution happens under the policy read-lock without cloning the
+    /// policy — beyond the queue entry, the only allocation is the
+    /// outcome's realized model name; the shadow path additionally clones
+    /// its two target names so the lock can be released before the double
+    /// submission.
+    pub fn route(&self, req: RoutedRequest, reply: &Sender<Response>) -> RouteOutcome {
+        let policy = self.policy.read().expect("policy poisoned");
+        match &*policy {
+            RoutePolicy::Exact => self.submit(&req.model, req.id, req.x, false, reply.clone()),
+            RoutePolicy::Canary { primary, canary, canary_fraction } => {
+                let target: &str = if req.model == *primary
+                    && canary_assignment(req.id, *canary_fraction)
+                {
+                    canary
+                } else {
+                    &req.model
+                };
+                self.submit(target, req.id, req.x, false, reply.clone())
+            }
+            RoutePolicy::Shadow { primary, shadow } => {
+                if req.model != *primary {
+                    return self.submit(&req.model, req.id, req.x, false, reply.clone());
+                }
+                let (primary, shadow) = (primary.clone(), shadow.clone());
+                drop(policy);
+                self.route_shadowed(&primary, &shadow, req, reply)
+            }
+        }
+    }
+
+    /// Shadow-mode admission: pending entry first (so no response can
+    /// outrun its bookkeeping), then the shadow duplicate, then the
+    /// primary. The primary's outcome is the client's outcome; the
+    /// shadow's failures only dent the divergence sample.
+    ///
+    /// Both submissions travel under a router-internal serial key instead
+    /// of the caller's id — callers may legally reuse ids while an
+    /// earlier shadowed request is in flight, and a pending-map collision
+    /// would cross-deliver answers. The forwarded response restores the
+    /// caller's id.
+    fn route_shadowed(
+        &self,
+        primary: &str,
+        shadow: &str,
+        req: RoutedRequest,
+        reply: &Sender<Response>,
+    ) -> RouteOutcome {
+        let key = self.shadow.next_key.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut pending = self.shadow.pending.lock().expect("shadow pending poisoned");
+            pending.insert(
+                key,
+                Pending {
+                    client: reply.clone(),
+                    original_id: req.id,
+                    expect_shadow: true,
+                    primary: None,
+                    shadow: None,
+                },
+            );
+        }
+        let shadow_out = self.submit(shadow, key, req.x.clone(), true, self.shadow_tx.clone());
+        if !shadow_out.is_enqueued() {
+            self.shadow.note_shadow_shed();
+            if let Some(entry) = self
+                .shadow
+                .pending
+                .lock()
+                .expect("shadow pending poisoned")
+                .get_mut(&key)
+            {
+                entry.expect_shadow = false;
+            }
+        }
+        let primary_out = self.submit(primary, key, req.x, true, self.primary_tx.clone());
+        if !primary_out.is_enqueued() {
+            // No primary response will come; abandon the pair. A shadow
+            // response that already landed in the entry dies with it.
+            self.shadow.pending.lock().expect("shadow pending poisoned").remove(&key);
+        }
+        primary_out
+    }
+
+    /// Admission-controlled submission to one named model.
+    fn submit(
+        &self,
+        model: &str,
+        id: u64,
+        x: Vec<f32>,
+        want_logits: bool,
+        reply: Sender<Response>,
+    ) -> RouteOutcome {
+        let Some(entry) = self.registry.get(model) else {
+            return RouteOutcome::UnknownModel;
+        };
+        match entry.handle().try_submit(id, x, want_logits, reply) {
+            SubmitOutcome::Enqueued => {
+                entry.accepted.fetch_add(1, Ordering::Relaxed);
+                RouteOutcome::Enqueued { model: model.to_string() }
+            }
+            SubmitOutcome::QueueFull => {
+                entry.shed.fetch_add(1, Ordering::Relaxed);
+                RouteOutcome::Shed { model: model.to_string() }
+            }
+            SubmitOutcome::Closed => RouteOutcome::Closed { model: model.to_string() },
+        }
+    }
+
+    /// Fleet snapshot: per-model status (name order) + shadow tally.
+    pub fn stats(&self) -> RouterStats {
+        RouterStats {
+            policy: self.policy.read().expect("policy poisoned").name(),
+            models: self.registry.entries().iter().map(|e| ModelStatus::of(e)).collect(),
+            shadow: *self.shadow.tally.lock().expect("shadow tally poisoned"),
+        }
+    }
+
+    /// Shadow divergence tally so far.
+    pub fn shadow_stats(&self) -> ShadowStats {
+        *self.shadow.tally.lock().expect("shadow tally poisoned")
+    }
+
+    /// Tear down the shadow drainers and return the final divergence
+    /// tally. Joins wait for in-flight shadowed requests, so drain or
+    /// shut down the registry's pools first if traffic may still be
+    /// queued. The registry itself is left running — it may outlive the
+    /// router (e.g. a policy-object swap).
+    pub fn shutdown(self) -> ShadowStats {
+        let Router { shadow, drainers, primary_tx, shadow_tx, .. } = self;
+        drop(primary_tx);
+        drop(shadow_tx);
+        for d in drainers {
+            let _ = d.join();
+        }
+        let tally = *shadow.tally.lock().expect("shadow tally poisoned");
+        tally
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::activation::Activation;
+    use crate::nn::network::{Network, NetworkConfig};
+    use crate::publish::ModelParts;
+    use crate::sampling::{Method, SamplerConfig};
+    use crate::serve::pool::PoolConfig;
+    use crate::serve::snapshot::ModelSnapshot;
+    use crate::util::rng::Pcg64;
+
+    fn parts(seed: u64) -> ModelParts {
+        let cfg = NetworkConfig { n_in: 8, hidden: vec![24], n_out: 3, act: Activation::ReLU };
+        let net = Network::new(&cfg, &mut Pcg64::seeded(seed));
+        ModelParts::from_snapshot(ModelSnapshot::without_tables(
+            net,
+            SamplerConfig::with_method(Method::Lsh, 0.25),
+            seed,
+        ))
+    }
+
+    fn two_model_fleet() -> (Arc<ModelRegistry>, Router) {
+        let reg = Arc::new(ModelRegistry::new());
+        reg.register_frozen("a", parts(1), PoolConfig::default()).unwrap();
+        reg.register_frozen("b", parts(2), PoolConfig::default()).unwrap();
+        let router = Router::new(Arc::clone(&reg));
+        (reg, router)
+    }
+
+    fn x(i: u64) -> Vec<f32> {
+        (0..8).map(|j| ((i * 8 + j) as f32 * 0.17).sin()).collect()
+    }
+
+    #[test]
+    fn exact_policy_routes_by_name_and_rejects_unknown() {
+        let (reg, router) = two_model_fleet();
+        let (tx, rx) = channel();
+        let out = router.route(RoutedRequest { id: 0, model: "a".into(), x: x(0) }, &tx);
+        assert_eq!(out, RouteOutcome::Enqueued { model: "a".into() });
+        assert_eq!(rx.recv().unwrap().id, 0);
+        let out = router.route(RoutedRequest { id: 1, model: "nope".into(), x: x(1) }, &tx);
+        assert_eq!(out, RouteOutcome::UnknownModel);
+        let stats = router.stats();
+        assert_eq!(stats.model("a").unwrap().accepted, 1);
+        assert_eq!(stats.model("b").unwrap().accepted, 0);
+        reg.shutdown_all();
+        router.shutdown();
+    }
+
+    #[test]
+    fn canary_policy_splits_only_primary_traffic() {
+        let (reg, router) = two_model_fleet();
+        router.set_policy(RoutePolicy::Canary {
+            primary: "a".into(),
+            canary: "b".into(),
+            canary_fraction: 0.5,
+        });
+        let (tx, rx) = channel();
+        let n = 400u64;
+        let mut to_canary = 0u64;
+        for id in 0..n {
+            match router.route(RoutedRequest { id, model: "a".into(), x: x(id) }, &tx) {
+                RouteOutcome::Enqueued { model } => to_canary += u64::from(model == "b"),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        // Requests naming the canary directly stay exact.
+        let out = router.route(RoutedRequest { id: n, model: "b".into(), x: x(n) }, &tx);
+        assert_eq!(out, RouteOutcome::Enqueued { model: "b".into() });
+        drop(tx);
+        assert_eq!(rx.iter().count() as u64, n + 1, "every admitted request answered");
+        assert!(
+            (to_canary as f64 / n as f64 - 0.5).abs() < 0.15,
+            "50% split, saw {to_canary}/{n}"
+        );
+        // The split is the pure hash function — verify against it.
+        let expected: u64 =
+            (0..n).filter(|&id| canary_assignment(id, 0.5)).count() as u64;
+        assert_eq!(to_canary, expected, "assignment must be the deterministic hash");
+        reg.shutdown_all();
+        router.shutdown();
+    }
+
+    #[test]
+    fn deregistration_yields_unknown_via_route_and_closed_via_held_handles() {
+        use crate::serve::pool::SubmitOutcome;
+
+        let (reg, router) = two_model_fleet();
+        // Hold the entry (as a mid-route lookup would) so its handle
+        // outlives deregistration.
+        let held = reg.get("a").unwrap();
+        let (tx, _rx) = channel();
+        reg.deregister("a").unwrap();
+        // New routes can no longer resolve the name at all...
+        let out = router.route(RoutedRequest { id: 0, model: "a".into(), x: x(0) }, &tx);
+        assert_eq!(out, RouteOutcome::UnknownModel, "deregistered = unknown");
+        // ...while a submission racing through an already-resolved entry
+        // sees the closed queue — the SubmitOutcome route() maps to
+        // RouteOutcome::Closed.
+        assert_eq!(
+            held.handle().try_submit(1, x(1), false, tx.clone()),
+            SubmitOutcome::Closed,
+            "held handle must report the closed pool, not enqueue into the void"
+        );
+        reg.shutdown_all();
+        router.shutdown();
+    }
+
+    #[test]
+    fn shadow_policy_discards_shadow_responses_and_tallies() {
+        let reg = Arc::new(ModelRegistry::new());
+        // Identical parts: divergence must be exactly zero.
+        reg.register_frozen("prim", parts(9), PoolConfig::default()).unwrap();
+        reg.register_frozen("shad", parts(9), PoolConfig::default()).unwrap();
+        let router = Router::new(Arc::clone(&reg));
+        router.set_policy(RoutePolicy::Shadow {
+            primary: "prim".into(),
+            shadow: "shad".into(),
+        });
+        let (tx, rx) = channel();
+        let n = 50u64;
+        for id in 0..n {
+            let out = router.route(RoutedRequest { id, model: "prim".into(), x: x(id) }, &tx);
+            assert_eq!(out, RouteOutcome::Enqueued { model: "prim".into() });
+            let resp = rx.recv().expect("primary response relayed to client");
+            assert_eq!(resp.id, id);
+            assert!(resp.logits.is_none(), "relay strips the divergence logits");
+        }
+        reg.shutdown_all();
+        let tally = router.shutdown();
+        assert_eq!(tally.compared, n, "every pair compared");
+        assert_eq!(tally.pred_mismatches, 0);
+        assert_eq!(tally.max_abs_logit_diff, 0.0, "identical snapshots diverge by nothing");
+        assert_eq!(tally.shadow_shed, 0);
+        assert_eq!(tally.unpaired, 0);
+    }
+}

@@ -1,0 +1,131 @@
+//! Routing policies: how a [`crate::router::RoutedRequest`]'s model name
+//! resolves to the model that actually serves it.
+//!
+//! Three policies, deliberately small and composable at the deployment
+//! layer rather than inside the router:
+//!
+//! * **Exact** — the request's model name is the model. The fleet
+//!   baseline; anything unrecognized is `UnknownModel`, never a guess.
+//! * **Canary** — requests addressed to `primary` split between `primary`
+//!   and `canary` by a *deterministic* hash of the request id. No RNG, no
+//!   per-connection state: the same id lands on the same side on every
+//!   router, every restart, every replay — so a bad canary's traffic can
+//!   be re-run bit-for-bit against the primary after the fact (the same
+//!   replayability contract `Response.version` gives publications).
+//! * **Shadow** — requests addressed to `primary` are served by it *and*
+//!   duplicated to `shadow`; the shadow's responses are discarded after
+//!   divergence (argmax mismatch, max |Δlogit|) is recorded. Zero client
+//!   impact, full-traffic validation of a new snapshot.
+//!
+//! Requests naming any *other* registered model are always routed exactly,
+//! whatever the policy — canary/shadow scope to their primary only.
+
+use crate::util::rng::splitmix64;
+
+/// Fixed salt folded into the canary hash so the split is independent of
+/// any other id-derived randomization in the system.
+const CANARY_SALT: u64 = 0xCA4A_97E5_11D5_0B6C;
+
+/// How the router resolves model names. See the module docs.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RoutePolicy {
+    /// Route every request to the model it names.
+    Exact,
+    /// Split traffic addressed to `primary`: a deterministic
+    /// `canary_fraction` of request ids go to `canary` instead.
+    Canary { primary: String, canary: String, canary_fraction: f64 },
+    /// Serve traffic addressed to `primary` from it, and duplicate every
+    /// such request to `shadow`, recording divergence.
+    Shadow { primary: String, shadow: String },
+}
+
+impl RoutePolicy {
+    /// Human-readable policy name (stats / JSON).
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutePolicy::Exact => "exact",
+            RoutePolicy::Canary { .. } => "canary",
+            RoutePolicy::Shadow { .. } => "shadow",
+        }
+    }
+}
+
+/// Deterministic canary assignment: `true` = route id to the canary.
+///
+/// The id is mixed through SplitMix64 and the top 53 bits compared
+/// against `fraction` — a pure function, so replays and multi-router
+/// deployments agree, and over any large id set the realized split
+/// concentrates tightly around `fraction` (binomial: ±0.3% at 10k
+/// requests for a 10% canary).
+pub fn canary_assignment(id: u64, fraction: f64) -> bool {
+    if fraction <= 0.0 {
+        return false;
+    }
+    if fraction >= 1.0 {
+        return true;
+    }
+    let mut state = id ^ CANARY_SALT;
+    let h = splitmix64(&mut state);
+    // Top 53 bits → uniform in [0, 1) at full f64 precision.
+    let u = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+    u < fraction
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assignment_is_a_pure_function_of_id() {
+        for id in 0..1000u64 {
+            assert_eq!(canary_assignment(id, 0.1), canary_assignment(id, 0.1));
+        }
+    }
+
+    #[test]
+    fn realized_fraction_concentrates() {
+        let n = 100_000u64;
+        let hits = (0..n).filter(|&id| canary_assignment(id, 0.1)).count() as f64;
+        let realized = hits / n as f64;
+        assert!(
+            (realized - 0.1).abs() < 0.005,
+            "realized {realized} should sit within 0.5% of 10% over {n} ids"
+        );
+    }
+
+    #[test]
+    fn edge_fractions_are_total() {
+        assert!(!canary_assignment(7, 0.0));
+        assert!(!canary_assignment(7, -1.0));
+        assert!(canary_assignment(7, 1.0));
+        assert!(canary_assignment(7, 2.0));
+    }
+
+    #[test]
+    fn monotone_in_fraction_per_id() {
+        // The same id flips from primary to canary at exactly one
+        // threshold — raising the fraction never un-assigns a canary id
+        // (safe ramp-ups: 5% → 10% only *adds* canary traffic).
+        for id in 0..200u64 {
+            let mut was = false;
+            for f in [0.01, 0.05, 0.1, 0.3, 0.7, 0.99] {
+                let now = canary_assignment(id, f);
+                assert!(now || !was, "id {id} left the canary when fraction rose to {f}");
+                was = now;
+            }
+        }
+    }
+
+    #[test]
+    fn policy_names() {
+        assert_eq!(RoutePolicy::Exact.name(), "exact");
+        let c = RoutePolicy::Canary {
+            primary: "a".into(),
+            canary: "b".into(),
+            canary_fraction: 0.1,
+        };
+        assert_eq!(c.name(), "canary");
+        let s = RoutePolicy::Shadow { primary: "a".into(), shadow: "b".into() };
+        assert_eq!(s.name(), "shadow");
+    }
+}

@@ -1,0 +1,298 @@
+//! The model registry: named per-model serving pools with runtime
+//! add / remove / hot-reload.
+//!
+//! Each registered model owns the full single-model serving stack PR 2–3
+//! built — a [`TableReader`] (the read half of a publication slot), a
+//! [`SparseInferenceEngine`] resolving through it, and a [`ServePool`]
+//! with its *own* [`PoolConfig`] (a canary can run 1 worker while the
+//! primary runs 8). Hot-reload needs no registry involvement at all:
+//! whoever holds the paired `TablePublisher` publishes, and the model's
+//! pool picks the new epoch up between micro-batches exactly as in the
+//! single-model path. Registering a model frozen from a snapshot is the
+//! publish-once special case.
+//!
+//! The registry map is a name → `Arc<ModelEntry>` table behind an
+//! `RwLock`: the routing hot path takes a read lock for one clone of the
+//! entry Arc (no allocation, no pool contact); add/remove take the write
+//! lock briefly. A removed model's pool is drained before
+//! [`ModelRegistry::deregister`] returns — every request already admitted
+//! is answered; only *new* routes see `UnknownModel`.
+
+use crate::publish::{publish_once, ModelParts, TableReader};
+use crate::serve::engine::SparseInferenceEngine;
+use crate::serve::pool::{PoolConfig, PoolHandle, PoolStats, ServePool};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
+
+/// One registered model: the serving stack plus the router-side admission
+/// counters.
+pub struct ModelEntry {
+    name: String,
+    reader: TableReader,
+    engine: SparseInferenceEngine,
+    handle: PoolHandle,
+    /// The running pool. `Mutex<Option<..>>` because shutdown consumes the
+    /// pool; `None` only transiently during deregistration.
+    pool: Mutex<Option<ServePool>>,
+    cfg: PoolConfig,
+    /// Requests the router admitted into this model's queue.
+    pub(crate) accepted: AtomicU64,
+    /// Requests shed at this model's bounded queue (admission control).
+    pub(crate) shed: AtomicU64,
+    registered_at: Instant,
+}
+
+impl ModelEntry {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Newest version published into this model's slot (hot-reload probe).
+    pub fn latest_version(&self) -> u64 {
+        self.reader.latest_version()
+    }
+
+    /// The model's input dimensionality (request validation / debugging).
+    pub fn n_in(&self) -> usize {
+        self.engine.current().net.n_in()
+    }
+
+    /// Cloneable submission handle onto this model's pool.
+    pub fn handle(&self) -> &PoolHandle {
+        &self.handle
+    }
+
+    /// Per-model pool configuration this entry was registered with.
+    pub fn pool_config(&self) -> PoolConfig {
+        self.cfg
+    }
+
+    /// Live pool statistics (empty default if the pool is mid-shutdown).
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool
+            .lock()
+            .expect("registry entry poisoned")
+            .as_ref()
+            .map(|p| p.stats())
+            .unwrap_or_default()
+    }
+
+    pub fn accepted(&self) -> u64 {
+        self.accepted.load(Ordering::Relaxed)
+    }
+
+    pub fn shed(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    /// Seconds since this model was registered (per-model req/s basis).
+    pub fn age_secs(&self) -> f64 {
+        self.registered_at.elapsed().as_secs_f64().max(1e-9)
+    }
+}
+
+/// Name → model map with runtime registration. Share behind an `Arc`:
+/// the router holds one handle, the operator (CLI / trainer) another.
+#[derive(Default)]
+pub struct ModelRegistry {
+    models: RwLock<BTreeMap<String, Arc<ModelEntry>>>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a model following a live publication slot: the entry
+    /// serves whatever the paired `TablePublisher` installs (train-serve
+    /// feeding a fleet). Fails on duplicate names — replacing a model is
+    /// an explicit deregister + register, so an operator can never
+    /// silently orphan a running pool.
+    pub fn register(
+        &self,
+        name: &str,
+        reader: TableReader,
+        cfg: PoolConfig,
+    ) -> Result<Arc<ModelEntry>, String> {
+        if name.is_empty() {
+            return Err("model name must be non-empty".into());
+        }
+        let engine = SparseInferenceEngine::live(reader.clone());
+        let pool = ServePool::start(engine.clone(), cfg);
+        let entry = Arc::new(ModelEntry {
+            name: name.to_string(),
+            reader,
+            engine,
+            handle: pool.handle(),
+            pool: Mutex::new(Some(pool)),
+            cfg,
+            accepted: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            registered_at: Instant::now(),
+        });
+        let mut map = self.models.write().expect("registry poisoned");
+        if map.contains_key(name) {
+            // The freshly started pool must not leak its worker threads.
+            let pool = entry.pool.lock().expect("registry entry poisoned").take();
+            drop(map);
+            if let Some(p) = pool {
+                p.shutdown();
+            }
+            return Err(format!("model {name:?} is already registered"));
+        }
+        map.insert(name.to_string(), Arc::clone(&entry));
+        Ok(entry)
+    }
+
+    /// Register a frozen model (snapshot parts): a publisher that
+    /// publishes exactly once and drops — the entry serves version 0
+    /// forever. Malformed parts (table/layer mismatch) come back as
+    /// `Err`, not a panic — this is the operator-input path.
+    pub fn register_frozen(
+        &self,
+        name: &str,
+        parts: ModelParts,
+        cfg: PoolConfig,
+    ) -> Result<Arc<ModelEntry>, String> {
+        parts.validate().map_err(|e| format!("model {name:?}: {e}"))?;
+        self.register(name, publish_once(parts), cfg)
+    }
+
+    /// Remove a model: new routes see `UnknownModel` immediately, then the
+    /// pool is drained (every admitted request answered) and its final
+    /// stats returned. `None` if the name was not registered.
+    pub fn deregister(&self, name: &str) -> Option<PoolStats> {
+        let entry = self.models.write().expect("registry poisoned").remove(name)?;
+        let pool = entry.pool.lock().expect("registry entry poisoned").take();
+        pool.map(|p| p.shutdown())
+    }
+
+    /// Deregister every model (shutdown path), returning final stats in
+    /// name order.
+    pub fn shutdown_all(&self) -> Vec<(String, PoolStats)> {
+        let names = self.names();
+        names
+            .into_iter()
+            .filter_map(|n| self.deregister(&n).map(|s| (n, s)))
+            .collect()
+    }
+
+    /// Look up a model (one read lock + Arc clone — the routing hot path).
+    pub fn get(&self, name: &str) -> Option<Arc<ModelEntry>> {
+        self.models.read().expect("registry poisoned").get(name).cloned()
+    }
+
+    /// Registered model names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.models.read().expect("registry poisoned").keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.read().expect("registry poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot of every entry, sorted by name (stats aggregation).
+    pub fn entries(&self) -> Vec<Arc<ModelEntry>> {
+        self.models.read().expect("registry poisoned").values().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::activation::Activation;
+    use crate::nn::network::{Network, NetworkConfig};
+    use crate::publish::TablePublisher;
+    use crate::sampling::{Method, SamplerConfig};
+    use crate::serve::snapshot::ModelSnapshot;
+    use crate::util::rng::Pcg64;
+    use std::sync::mpsc::channel;
+
+    fn parts(seed: u64) -> ModelParts {
+        let cfg = NetworkConfig { n_in: 8, hidden: vec![24], n_out: 3, act: Activation::ReLU };
+        let net = Network::new(&cfg, &mut Pcg64::seeded(seed));
+        ModelParts::from_snapshot(ModelSnapshot::without_tables(
+            net,
+            SamplerConfig::with_method(Method::Lsh, 0.25),
+            seed,
+        ))
+    }
+
+    #[test]
+    fn register_get_deregister_lifecycle() {
+        let reg = ModelRegistry::new();
+        assert!(reg.is_empty());
+        reg.register_frozen("alpha", parts(1), PoolConfig::default()).unwrap();
+        reg.register_frozen("beta", parts(2), PoolConfig { workers: 2, ..Default::default() })
+            .unwrap();
+        assert_eq!(reg.names(), vec!["alpha".to_string(), "beta".to_string()]);
+        assert_eq!(reg.get("alpha").unwrap().name(), "alpha");
+        assert_eq!(reg.get("beta").unwrap().pool_config().workers, 2);
+        assert!(reg.get("gamma").is_none());
+
+        let stats = reg.deregister("alpha").expect("was registered");
+        assert_eq!(stats.requests, 0, "no traffic sent");
+        assert!(reg.get("alpha").is_none());
+        assert_eq!(reg.len(), 1);
+        assert!(reg.deregister("alpha").is_none(), "double deregister is a no-op");
+        assert_eq!(reg.shutdown_all().len(), 1);
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn duplicate_names_are_rejected_without_leaking_pools() {
+        let reg = ModelRegistry::new();
+        reg.register_frozen("m", parts(3), PoolConfig::default()).unwrap();
+        let err = reg.register_frozen("m", parts(4), PoolConfig::default()).unwrap_err();
+        assert!(err.contains("already registered"), "{err}");
+        // The survivor still serves.
+        let entry = reg.get("m").unwrap();
+        let (tx, rx) = channel();
+        let x: Vec<f32> = (0..8).map(|j| (j as f32 * 0.3).sin()).collect();
+        assert!(entry.handle().submit(0, x, tx));
+        assert_eq!(rx.recv().unwrap().version, 0);
+        reg.shutdown_all();
+    }
+
+    #[test]
+    fn deregistered_pool_drains_admitted_requests() {
+        let reg = ModelRegistry::new();
+        let entry = reg.register_frozen("m", parts(5), PoolConfig::default()).unwrap();
+        let (tx, rx) = channel();
+        let x: Vec<f32> = (0..8).map(|j| (j as f32 * 0.7).cos()).collect();
+        for id in 0..20u64 {
+            assert!(entry.handle().submit(id, x.clone(), tx.clone()));
+        }
+        drop(tx);
+        let stats = reg.deregister("m").unwrap();
+        assert_eq!(stats.requests, 20, "every admitted request answered before teardown");
+        assert_eq!(rx.iter().count(), 20);
+    }
+
+    #[test]
+    fn malformed_parts_are_rejected_as_err_not_panic() {
+        let reg = ModelRegistry::new();
+        let mut bad = parts(8);
+        bad.tables.clear();
+        let err = reg.register_frozen("bad", bad, PoolConfig::default()).unwrap_err();
+        assert!(err.contains("\"bad\""), "{err}");
+        assert!(reg.is_empty(), "nothing half-registered");
+    }
+
+    #[test]
+    fn live_entry_follows_its_publisher() {
+        let reg = ModelRegistry::new();
+        let (mut publisher, reader) = TablePublisher::start(parts(6));
+        let entry = reg.register("live", reader, PoolConfig::default()).unwrap();
+        assert_eq!(entry.latest_version(), 0);
+        publisher.publish(parts(7));
+        assert_eq!(entry.latest_version(), 1, "hot-reload falls out of the publish slot");
+        reg.shutdown_all();
+    }
+}

@@ -1,0 +1,233 @@
+//! Fleet telemetry: the per-model and shadow-divergence snapshots the
+//! router aggregates from pool counters and admission counts.
+//!
+//! Everything here is plain data copied out of lock-free counters —
+//! calling [`crate::router::Router::stats`] mid-traffic costs relaxed
+//! atomic loads per model, never a queue lock.
+
+use crate::router::registry::ModelEntry;
+use crate::serve::stats::VersionAgeSnapshot;
+use std::fmt::Write as _;
+
+/// Escape a string for embedding in a JSON string literal. Model names
+/// come from operator config files, so quotes/backslashes/control bytes
+/// must not be interpolated raw into `BENCH_router.json`.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// One model's view at a snapshot instant.
+#[derive(Clone, Debug)]
+pub struct ModelStatus {
+    pub name: String,
+    /// Newest version published into the model's slot.
+    pub latest_version: u64,
+    /// Requests the router admitted into the model's queue.
+    pub accepted: u64,
+    /// Requests shed at the model's bounded queue.
+    pub shed: u64,
+    /// Responses the pool has completed (≤ accepted while in flight).
+    pub served: u64,
+    /// Served responses per second since registration.
+    pub req_per_sec: f64,
+    /// In-pool latency percentiles (conservative octave upper bounds).
+    pub p50_micros: u64,
+    pub p99_micros: u64,
+    /// Mean micro-batch size the pool's workers formed.
+    pub mean_batch: f64,
+    /// Worker re-pins to newer published versions.
+    pub version_switches: u64,
+    /// Staleness histogram: one sample per micro-batch of
+    /// `latest_version − served_version`.
+    pub version_age: VersionAgeSnapshot,
+}
+
+impl ModelStatus {
+    /// Snapshot one registry entry (pool stats + admission counters).
+    pub fn of(entry: &ModelEntry) -> ModelStatus {
+        let pool = entry.pool_stats();
+        ModelStatus {
+            name: entry.name().to_string(),
+            latest_version: entry.latest_version(),
+            accepted: entry.accepted(),
+            shed: entry.shed(),
+            served: pool.requests,
+            req_per_sec: pool.requests as f64 / entry.age_secs(),
+            p50_micros: pool.p50_micros(),
+            p99_micros: pool.p99_micros(),
+            mean_batch: pool.mean_batch(),
+            version_switches: pool.version_switches,
+            version_age: pool.version_age,
+        }
+    }
+
+    /// Fraction of offered requests shed at this model's queue.
+    pub fn shed_rate(&self) -> f64 {
+        let offered = self.accepted + self.shed;
+        if offered == 0 {
+            0.0
+        } else {
+            self.shed as f64 / offered as f64
+        }
+    }
+
+    /// JSON object literal (the shape shared by `Router::stats` dumps and
+    /// `BENCH_router.json`).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"name\": \"{}\", \"latest_version\": {}, \"accepted\": {}, \"shed\": {}, \
+             \"shed_rate\": {:.4}, \"served\": {}, \"req_per_sec\": {:.1}, \
+             \"p50_micros\": {}, \"p99_micros\": {}, \"mean_batch\": {:.2}, \
+             \"version_switches\": {}, \"version_age\": {}}}",
+            json_escape(&self.name),
+            self.latest_version,
+            self.accepted,
+            self.shed,
+            self.shed_rate(),
+            self.served,
+            self.req_per_sec,
+            self.p50_micros,
+            self.p99_micros,
+            self.mean_batch,
+            self.version_switches,
+            self.version_age.to_json_array(),
+        )
+    }
+}
+
+/// Shadow-mode divergence tally (see `router::shadow`).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ShadowStats {
+    /// Primary/shadow response pairs compared.
+    pub compared: u64,
+    /// Pairs whose argmax predictions disagreed.
+    pub pred_mismatches: u64,
+    /// Largest |primary_logit − shadow_logit| seen across all pairs.
+    pub max_abs_logit_diff: f32,
+    /// Shadow duplicates shed at the shadow's queue (primary unaffected).
+    pub shadow_shed: u64,
+    /// Responses that arrived with no pending entry (late shadow answers
+    /// after their pair was abandoned; 0 in healthy runs).
+    pub unpaired: u64,
+}
+
+impl ShadowStats {
+    /// Fraction of compared pairs whose predictions disagreed.
+    pub fn mismatch_rate(&self) -> f64 {
+        if self.compared == 0 {
+            0.0
+        } else {
+            self.pred_mismatches as f64 / self.compared as f64
+        }
+    }
+
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"compared\": {}, \"pred_mismatches\": {}, \"mismatch_rate\": {:.4}, \
+             \"max_abs_logit_diff\": {:.6}, \"shadow_shed\": {}, \"unpaired\": {}}}",
+            self.compared,
+            self.pred_mismatches,
+            self.mismatch_rate(),
+            self.max_abs_logit_diff,
+            self.shadow_shed,
+            self.unpaired,
+        )
+    }
+}
+
+/// Whole-fleet snapshot: one [`ModelStatus`] per registered model (name
+/// order) plus the shadow tally and the active policy name.
+#[derive(Clone, Debug)]
+pub struct RouterStats {
+    pub policy: &'static str,
+    pub models: Vec<ModelStatus>,
+    pub shadow: ShadowStats,
+}
+
+impl RouterStats {
+    pub fn model(&self, name: &str) -> Option<&ModelStatus> {
+        self.models.iter().find(|m| m.name == name)
+    }
+
+    /// Total requests shed across the fleet.
+    pub fn total_shed(&self) -> u64 {
+        self.models.iter().map(|m| m.shed).sum()
+    }
+
+    /// Total responses served across the fleet.
+    pub fn total_served(&self) -> u64 {
+        self.models.iter().map(|m| m.served).sum()
+    }
+
+    pub fn to_json(&self) -> String {
+        let models: Vec<String> = self.models.iter().map(|m| m.to_json()).collect();
+        format!(
+            "{{\"policy\": \"{}\", \"models\": [{}], \"shadow\": {}}}",
+            self.policy,
+            models.join(", "),
+            self.shadow.to_json(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shed_rate_and_mismatch_rate_handle_zero() {
+        let m = ModelStatus {
+            name: "m".into(),
+            latest_version: 0,
+            accepted: 0,
+            shed: 0,
+            served: 0,
+            req_per_sec: 0.0,
+            p50_micros: 0,
+            p99_micros: 0,
+            mean_batch: 0.0,
+            version_switches: 0,
+            version_age: VersionAgeSnapshot::default(),
+        };
+        assert_eq!(m.shed_rate(), 0.0);
+        assert_eq!(ShadowStats::default().mismatch_rate(), 0.0);
+        let m2 = ModelStatus { accepted: 90, shed: 10, ..m };
+        assert!((m2.shed_rate() - 0.1).abs() < 1e-12);
+        let json = m2.to_json();
+        assert!(json.contains("\"shed_rate\": 0.1000"), "{json}");
+        assert!(json.contains("\"version_age\": [0, 0, 0, 0, 0, 0, 0, 0]"), "{json}");
+    }
+
+    #[test]
+    fn model_names_are_json_escaped() {
+        assert_eq!(json_escape("plain"), "plain");
+        assert_eq!(json_escape("a\"b"), "a\\\"b");
+        assert_eq!(json_escape("a\\b"), "a\\\\b");
+        assert_eq!(json_escape("a\nb"), "a\\u000ab");
+        let named = ModelStatus {
+            name: "we\"ird".into(),
+            latest_version: 0,
+            accepted: 0,
+            shed: 0,
+            served: 0,
+            req_per_sec: 0.0,
+            p50_micros: 0,
+            p99_micros: 0,
+            mean_batch: 0.0,
+            version_switches: 0,
+            version_age: VersionAgeSnapshot::default(),
+        };
+        assert!(named.to_json().contains("\"name\": \"we\\\"ird\""));
+    }
+}

@@ -19,6 +19,13 @@
 //!   within noise of the baseline — the headline claim of the `publish`
 //!   subsystem, asserted over real traffic.
 //!
+//! * **route-bench** ([`run_route_bench`]): fleet scenarios through the
+//!   multi-model [`crate::router::Router`] — single-model baseline vs
+//!   2/4-model fleets under identical load, a deterministic canary split,
+//!   and a bounded-queue overload burst whose overflow is *shed* (counted)
+//!   instead of queued unboundedly. Emits `BENCH_router.json` with
+//!   per-model p50/p99, shed rate and version-age histograms.
+//!
 //! All scenarios report requests/sec, latency percentiles, exact
 //! multiplication counts and the number of distinct published versions
 //! the responses were served from.
@@ -26,6 +33,10 @@
 use crate::lsh::frozen::FrozenLayerTables;
 use crate::lsh::layered::LayerTables;
 use crate::publish::{ModelParts, TablePublisher};
+use crate::router::policy::RoutePolicy;
+use crate::router::registry::ModelRegistry;
+use crate::router::stats::ModelStatus;
+use crate::router::{RouteOutcome, RoutedRequest, Router};
 use crate::serve::engine::SparseInferenceEngine;
 use crate::serve::pool::{PoolConfig, ServePool};
 use crate::util::rng::Pcg64;
@@ -34,6 +45,7 @@ use std::io;
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::channel;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Load-generator tunables on top of the pool's own config.
@@ -605,6 +617,390 @@ pub fn throughput_scaling(results: &[BenchResult], mode: &str) -> f64 {
     }
 }
 
+// ---------------------------------------------------------------------------
+// route-bench: fleet scenarios through the multi-model router
+// ---------------------------------------------------------------------------
+
+/// One model of a benchmark fleet: name + publishable parts + its own
+/// pool configuration.
+pub struct FleetModel {
+    pub name: String,
+    pub parts: ModelParts,
+    pub pool: PoolConfig,
+}
+
+/// route-bench tunables.
+#[derive(Clone, Debug)]
+pub struct RouteBenchConfig {
+    /// Requests per fleet/canary scenario.
+    pub requests: usize,
+    /// Closed-loop client threads (0 = 2× the widest model pool).
+    pub clients: usize,
+    /// Canary split for the canary scenario (fraction routed to model 1).
+    pub canary_fraction: f64,
+    /// Queue capacity forced onto the overload scenario's single model.
+    pub overload_queue_cap: usize,
+    /// Burst sizes for the overload shed curve (submitted back-to-back
+    /// with no waiting — offered load far above service rate).
+    pub overload_bursts: Vec<usize>,
+}
+
+impl Default for RouteBenchConfig {
+    fn default() -> Self {
+        RouteBenchConfig {
+            requests: 12_000,
+            clients: 0,
+            canary_fraction: 0.1,
+            overload_queue_cap: 8,
+            overload_bursts: vec![256, 1024, 4096],
+        }
+    }
+}
+
+/// Aggregated client-side samples from one routed scenario.
+pub struct RouterDriveSamples {
+    /// Sorted route→response latencies (microseconds), answered requests.
+    pub latencies: Vec<u64>,
+    /// Requests the router admitted (Enqueued outcomes) — the denominator
+    /// for realized routing fractions.
+    pub enqueued: u64,
+    /// Requests shed at a bounded queue.
+    pub shed: u64,
+    /// Requests the router admitted to the watched canary model.
+    pub to_canary: u64,
+    /// UnknownModel / Closed / dropped-reply outcomes (0 in healthy runs).
+    pub errors: u64,
+}
+
+/// One scenario's results: whole-fleet numbers plus the per-model status
+/// rows the router's telemetry reported at completion.
+pub struct FleetCase {
+    pub scenario: String,
+    pub models: usize,
+    /// Requests answered (client side).
+    pub answered: u64,
+    pub shed: u64,
+    pub errors: u64,
+    pub wall_secs: f64,
+    pub req_per_sec: f64,
+    pub p50_micros: u64,
+    pub p99_micros: u64,
+    pub mean_micros: f64,
+    /// Requests routed to the canary (canary scenario only, else 0).
+    pub to_canary: u64,
+    /// Realized canary fraction over admitted requests (0 outside the
+    /// canary scenario).
+    pub realized_canary_fraction: f64,
+    pub per_model: Vec<ModelStatus>,
+}
+
+/// One point of the overload shed curve.
+#[derive(Clone, Copy, Debug)]
+pub struct OverloadPoint {
+    /// Requests submitted back-to-back.
+    pub burst: usize,
+    pub accepted: u64,
+    pub shed: u64,
+    /// Responses actually received for the accepted requests.
+    pub answered: u64,
+}
+
+/// Everything `BENCH_router.json` reports.
+pub struct RouteBenchReport {
+    /// Exact-policy fleets of increasing size (round-robin traffic):
+    /// `fleet-1` is the single-model baseline.
+    pub cases: Vec<FleetCase>,
+    /// The canary split scenario (all traffic addressed to model 0).
+    pub canary: FleetCase,
+    pub canary_fraction: f64,
+    pub overload_queue_cap: usize,
+    pub overload: Vec<OverloadPoint>,
+}
+
+/// Drive `requests` closed-loop requests through a router: targets are
+/// taken round-robin from `targets` by request id, payloads round-robin
+/// from `xs`. Shed requests are counted and *not* retried — admission
+/// control is the thing under test.
+pub fn drive_router_closed_loop(
+    router: &Router,
+    targets: &[String],
+    canary: Option<&str>,
+    xs: &[Vec<f32>],
+    requests: usize,
+    clients: usize,
+) -> RouterDriveSamples {
+    assert!(!targets.is_empty() && !xs.is_empty());
+    let clients = clients.max(1);
+    let per_client = requests / clients;
+    let remainder = requests % clients;
+    let mut latencies: Vec<u64> = Vec::with_capacity(requests);
+    let mut enqueued = 0u64;
+    let mut shed = 0u64;
+    let mut to_canary = 0u64;
+    let mut errors = 0u64;
+    std::thread::scope(|s| {
+        let mut joins = Vec::with_capacity(clients);
+        let mut next_id = 0u64;
+        for c in 0..clients {
+            let n = per_client + usize::from(c < remainder);
+            let first_id = next_id;
+            next_id += n as u64;
+            joins.push(s.spawn(move || {
+                let (tx, rx) = channel();
+                let mut lat = Vec::with_capacity(n);
+                let mut enqueued = 0u64;
+                let mut shed = 0u64;
+                let mut to_canary = 0u64;
+                let mut errors = 0u64;
+                for id in first_id..first_id + n as u64 {
+                    let model = targets[(id as usize) % targets.len()].clone();
+                    let x = xs[(id as usize) % xs.len()].clone();
+                    let sent = Instant::now();
+                    match router.route(RoutedRequest { id, model, x }, &tx) {
+                        RouteOutcome::Enqueued { model } => {
+                            enqueued += 1;
+                            if canary == Some(model.as_str()) {
+                                to_canary += 1;
+                            }
+                            match rx.recv() {
+                                Ok(_) => lat.push(sent.elapsed().as_micros() as u64),
+                                Err(_) => errors += 1,
+                            }
+                        }
+                        RouteOutcome::Shed { .. } => shed += 1,
+                        RouteOutcome::UnknownModel | RouteOutcome::Closed { .. } => errors += 1,
+                    }
+                }
+                (lat, enqueued, shed, to_canary, errors)
+            }));
+        }
+        for j in joins {
+            let (lat, en, sh, tc, er) = j.join().expect("router client panicked");
+            latencies.extend(lat);
+            enqueued += en;
+            shed += sh;
+            to_canary += tc;
+            errors += er;
+        }
+    });
+    latencies.sort_unstable();
+    RouterDriveSamples { latencies, enqueued, shed, to_canary, errors }
+}
+
+/// Build a fresh registry + router over the first `n` fleet models.
+fn fleet_router(models: &[FleetModel], n: usize) -> (Arc<ModelRegistry>, Router, Vec<String>) {
+    let registry = Arc::new(ModelRegistry::new());
+    let mut names = Vec::with_capacity(n);
+    for m in &models[..n] {
+        registry
+            .register_frozen(&m.name, m.parts.clone(), m.pool)
+            .expect("fresh registry cannot have duplicates");
+        names.push(m.name.clone());
+    }
+    let router = Router::new(Arc::clone(&registry));
+    (registry, router, names)
+}
+
+fn fleet_case(
+    scenario: String,
+    n_models: usize,
+    samples: &RouterDriveSamples,
+    wall: f64,
+    per_model: Vec<ModelStatus>,
+) -> FleetCase {
+    let answered = samples.latencies.len() as u64;
+    let admitted = samples.enqueued;
+    FleetCase {
+        scenario,
+        models: n_models,
+        answered,
+        shed: samples.shed,
+        errors: samples.errors,
+        wall_secs: wall,
+        req_per_sec: answered as f64 / wall.max(1e-9),
+        p50_micros: percentile_micros(&samples.latencies, 50.0),
+        p99_micros: percentile_micros(&samples.latencies, 99.0),
+        mean_micros: samples.latencies.iter().sum::<u64>() as f64
+            / samples.latencies.len().max(1) as f64,
+        to_canary: samples.to_canary,
+        realized_canary_fraction: if admitted == 0 {
+            0.0
+        } else {
+            samples.to_canary as f64 / admitted as f64
+        },
+        per_model,
+    }
+}
+
+/// Run the fleet scenarios: exact-policy fleets of 1, 2, (4, …) models
+/// under identical closed-loop load, a deterministic canary split over
+/// the same request ids, and a bounded-queue overload shed curve.
+///
+/// `models` supplies at least two distinct models; fleet sizes are capped
+/// at what is available. The canary scenario addresses every request to
+/// `models[0]` and splits `cfg.canary_fraction` of ids to `models[1]` —
+/// the realized fraction is a pure function of the id set, so re-running
+/// with the same ids reproduces the exact split.
+pub fn run_route_bench(
+    models: &[FleetModel],
+    xs: &[Vec<f32>],
+    cfg: &RouteBenchConfig,
+) -> RouteBenchReport {
+    assert!(models.len() >= 2, "route-bench needs at least two models");
+    assert!(!xs.is_empty());
+    let clients = if cfg.clients == 0 {
+        2 * models.iter().map(|m| m.pool.workers).max().unwrap_or(1)
+    } else {
+        cfg.clients
+    };
+    let mut sizes: Vec<usize> = [1usize, 2, 4]
+        .into_iter()
+        .filter(|&n| n <= models.len())
+        .collect();
+    if !sizes.contains(&models.len()) {
+        sizes.push(models.len());
+    }
+
+    let mut cases = Vec::with_capacity(sizes.len());
+    for &n in &sizes {
+        let (registry, router, names) = fleet_router(models, n);
+        let t0 = Instant::now();
+        let samples =
+            drive_router_closed_loop(&router, &names, None, xs, cfg.requests, clients);
+        let wall = t0.elapsed().as_secs_f64();
+        let per_model = router.stats().models;
+        registry.shutdown_all();
+        router.shutdown();
+        cases.push(fleet_case(format!("fleet-{n}"), n, &samples, wall, per_model));
+    }
+
+    // Canary: all traffic addressed to model 0, split deterministically.
+    let canary = {
+        let (registry, router, names) = fleet_router(models, 2);
+        router.set_policy(RoutePolicy::Canary {
+            primary: names[0].clone(),
+            canary: names[1].clone(),
+            canary_fraction: cfg.canary_fraction,
+        });
+        let t0 = Instant::now();
+        let samples = drive_router_closed_loop(
+            &router,
+            &names[..1],
+            Some(names[1].as_str()),
+            xs,
+            cfg.requests,
+            clients,
+        );
+        let wall = t0.elapsed().as_secs_f64();
+        let per_model = router.stats().models;
+        registry.shutdown_all();
+        router.shutdown();
+        fleet_case("canary".to_string(), 2, &samples, wall, per_model)
+    };
+
+    // Overload: one model, tiny bounded queue, one worker; bursts are
+    // submitted with no pacing and no per-request waiting. The curve's
+    // claim: overflow is shed (counted, bounded memory), never queued
+    // unboundedly, and every *accepted* request is still answered.
+    let mut overload = Vec::with_capacity(cfg.overload_bursts.len());
+    for &burst in &cfg.overload_bursts {
+        let overload_model = FleetModel {
+            name: models[0].name.clone(),
+            parts: models[0].parts.clone(),
+            pool: PoolConfig {
+                workers: 1,
+                queue_cap: cfg.overload_queue_cap,
+                ..models[0].pool
+            },
+        };
+        let single = [overload_model];
+        let (registry, router, names) = fleet_router(&single, 1);
+        let (tx, rx) = channel();
+        let mut accepted = 0u64;
+        let mut shed = 0u64;
+        for id in 0..burst as u64 {
+            let x = xs[(id as usize) % xs.len()].clone();
+            match router.route(RoutedRequest { id, model: names[0].clone(), x }, &tx) {
+                RouteOutcome::Enqueued { .. } => accepted += 1,
+                RouteOutcome::Shed { .. } => shed += 1,
+                other => panic!("overload burst hit {other:?}"),
+            }
+        }
+        drop(tx);
+        let answered = rx.iter().count() as u64;
+        registry.shutdown_all();
+        router.shutdown();
+        overload.push(OverloadPoint { burst, accepted, shed, answered });
+    }
+
+    RouteBenchReport {
+        cases,
+        canary,
+        canary_fraction: cfg.canary_fraction,
+        overload_queue_cap: cfg.overload_queue_cap,
+        overload,
+    }
+}
+
+fn fleet_case_json(c: &FleetCase) -> String {
+    let per_model: Vec<String> = c.per_model.iter().map(|m| m.to_json()).collect();
+    format!(
+        "{{\"scenario\": \"{}\", \"models\": {}, \"answered\": {}, \"shed\": {}, \
+         \"errors\": {}, \"wall_secs\": {:.3}, \"req_per_sec\": {:.1}, \"p50_micros\": {}, \
+         \"p99_micros\": {}, \"mean_micros\": {:.1}, \"to_canary\": {}, \
+         \"realized_canary_fraction\": {:.4}, \"per_model\": [{}]}}",
+        c.scenario,
+        c.models,
+        c.answered,
+        c.shed,
+        c.errors,
+        c.wall_secs,
+        c.req_per_sec,
+        c.p50_micros,
+        c.p99_micros,
+        c.mean_micros,
+        c.to_canary,
+        c.realized_canary_fraction,
+        per_model.join(", "),
+    )
+}
+
+/// Serialize a [`RouteBenchReport`] to the `BENCH_router.json` schema.
+pub fn write_router_bench_json(path: &Path, report: &RouteBenchReport) -> io::Result<()> {
+    let mut cases = String::new();
+    for (i, c) in report.cases.iter().enumerate() {
+        let _ = write!(
+            cases,
+            "    {}{}",
+            fleet_case_json(c),
+            if i + 1 < report.cases.len() { ",\n" } else { "" }
+        );
+    }
+    let mut points = String::new();
+    for (i, p) in report.overload.iter().enumerate() {
+        let _ = write!(
+            points,
+            "      {{\"burst\": {}, \"accepted\": {}, \"shed\": {}, \"answered\": {}}}{}",
+            p.burst,
+            p.accepted,
+            p.shed,
+            p.answered,
+            if i + 1 < report.overload.len() { ",\n" } else { "" }
+        );
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"router\",\n  \"canary_fraction\": {},\n  \"cases\": [\n{}\n  ],\n  \
+         \"canary\": {},\n  \"overload\": {{\n    \"queue_cap\": {},\n    \"points\": [\n{}\n    \
+         ]\n  }}\n}}\n",
+        report.canary_fraction,
+        cases,
+        fleet_case_json(&report.canary),
+        report.overload_queue_cap,
+        points,
+    );
+    std::fs::write(path, json)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -763,6 +1159,76 @@ mod tests {
             report.versions_published
         );
         assert_eq!(report.live.dropped, 0);
+    }
+
+    #[test]
+    fn route_bench_runs_all_scenarios_on_a_tiny_fleet() {
+        let mk_parts = |seed: u64| {
+            let cfg = NetworkConfig { n_in: 8, hidden: vec![24], n_out: 2, act: Activation::ReLU };
+            let net = Network::new(&cfg, &mut Pcg64::seeded(seed));
+            ModelParts::from_snapshot(ModelSnapshot::without_tables(
+                net,
+                SamplerConfig::with_method(Method::Lsh, 0.25),
+                seed,
+            ))
+        };
+        let models: Vec<FleetModel> = (0..2)
+            .map(|i| FleetModel {
+                name: format!("m{i}"),
+                parts: mk_parts(40 + i as u64),
+                pool: PoolConfig { workers: 1, ..Default::default() },
+            })
+            .collect();
+        let (xs, _) = tiny_stream(41);
+        let cfg = RouteBenchConfig {
+            requests: 300,
+            clients: 2,
+            canary_fraction: 0.2,
+            overload_queue_cap: 4,
+            overload_bursts: vec![64],
+        };
+        let report = run_route_bench(&models, &xs, &cfg);
+
+        assert_eq!(report.cases.len(), 2, "fleet-1 and fleet-2");
+        for case in &report.cases {
+            assert_eq!(case.answered, 300, "closed loop never sheds: {}", case.scenario);
+            assert_eq!(case.shed + case.errors, 0, "{}", case.scenario);
+            assert!(case.p50_micros <= case.p99_micros);
+            let served: u64 = case.per_model.iter().map(|m| m.served).sum();
+            assert_eq!(served, 300, "{}", case.scenario);
+        }
+        // fleet-2 round-robins: both models served half the traffic.
+        let f2 = &report.cases[1];
+        assert_eq!(f2.per_model.len(), 2);
+        assert_eq!(f2.per_model[0].served, 150);
+        assert_eq!(f2.per_model[1].served, 150);
+
+        // Canary: realized split equals the pure hash over ids 0..300.
+        let expected = (0..300u64)
+            .filter(|&id| crate::router::policy::canary_assignment(id, 0.2))
+            .count() as u64;
+        assert_eq!(report.canary.to_canary, expected, "deterministic split");
+        assert_eq!(report.canary.answered, 300);
+        let realized = report.canary.realized_canary_fraction;
+        assert!((realized - expected as f64 / 300.0).abs() < 1e-9);
+
+        // Overload: everything offered is either accepted or shed, and
+        // every accepted request was answered.
+        assert_eq!(report.overload.len(), 1);
+        let p = report.overload[0];
+        assert_eq!(p.accepted + p.shed, 64);
+        assert_eq!(p.answered, p.accepted, "accepted requests are never dropped");
+
+        let path =
+            std::env::temp_dir().join(format!("hashdl_router_{}.json", std::process::id()));
+        write_router_bench_json(&path, &report).unwrap();
+        let s = std::fs::read_to_string(&path).unwrap();
+        assert!(s.contains("\"bench\": \"router\""));
+        assert!(s.contains("\"scenario\": \"fleet-2\""));
+        assert!(s.contains("\"realized_canary_fraction\""));
+        assert!(s.contains("\"version_age\""));
+        assert!(s.contains("\"queue_cap\": 4"));
+        std::fs::remove_file(path).ok();
     }
 
     #[test]

@@ -3,10 +3,11 @@
 //! §1 covers *testing* too, and SLIDE showed the serving path is where
 //! hash-based sparsity pays most).
 //!
-//! Four pieces:
+//! Five pieces:
 //! * [`snapshot`] — frozen model files: weights + sampler config +
-//!   prehashed LSH tables, versioned (v3 bit-packs fingerprints) and
-//!   backward compatible with legacy weights-only checkpoints.
+//!   prehashed LSH tables, versioned (v3 bit-packs fingerprints, v4
+//!   delta-codes bucket id lists) and backward compatible with legacy
+//!   weights-only checkpoints.
 //! * [`engine`] — [`engine::SparseInferenceEngine`]: a handle over the
 //!   `publish` subsystem's lock-free epoch slot. Workers pin one
 //!   version-stamped [`crate::publish::PublishedModel`] per micro-batch,
@@ -16,19 +17,30 @@
 //!   micro-batching (size cap or deadline, whichever closes first);
 //!   workers pick up newly published model versions between micro-batches
 //!   and stamp every [`pool::Response`] with the version that served it.
+//! * [`stats`] — lock-free telemetry primitives: log₂-bucketed latency
+//!   histogram (p50/p99 without storing samples) and the version-age
+//!   histogram shared by the pool, the fleet router and the future
+//!   adaptive publish cadence.
 //! * [`bench`] — load generators: closed-loop, open-loop (Poisson
-//!   arrivals) and the train-while-serve scenario comparing latency with
-//!   and without concurrent publication (`BENCH_serve.json`).
+//!   arrivals), the train-while-serve scenario comparing latency with
+//!   and without concurrent publication (`BENCH_serve.json`), and the
+//!   route-bench fleet scenarios (`BENCH_router.json`).
 
 pub mod bench;
 pub mod engine;
 pub mod pool;
 pub mod snapshot;
+pub mod stats;
 
 pub use bench::{
-    drive_clients_while, run_closed_loop, run_open_loop, run_train_while_serve, BenchConfig,
-    BenchResult, ClientSamples, TrainServeConfig, TrainServeReport,
+    drive_clients_while, drive_router_closed_loop, run_closed_loop, run_open_loop,
+    run_route_bench, run_train_while_serve, write_router_bench_json, BenchConfig, BenchResult,
+    ClientSamples, FleetCase, FleetModel, OverloadPoint, RouteBenchConfig, RouteBenchReport,
+    RouterDriveSamples, TrainServeConfig, TrainServeReport,
 };
 pub use engine::{EvalSummary, Inference, InferenceWorkspace, SparseInferenceEngine};
-pub use pool::{PoolConfig, PoolHandle, PoolStats, Request, RequestQueue, Response, ServePool};
-pub use snapshot::{load_snapshot, save_snapshot, save_snapshot_v2, ModelSnapshot};
+pub use pool::{
+    PoolConfig, PoolHandle, PoolStats, Request, RequestQueue, Response, ServePool, SubmitOutcome,
+};
+pub use snapshot::{load_snapshot, save_snapshot, save_snapshot_v2, save_snapshot_v3, ModelSnapshot};
+pub use stats::{LatencyHistogram, LatencySnapshot, VersionAgeHistogram, VersionAgeSnapshot};

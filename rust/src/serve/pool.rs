@@ -28,8 +28,19 @@
 //! Every [`Response`] carries the version it was served from, so a
 //! train-while-serve deployment can attribute any answer to the exact
 //! epoch that produced it (pinned by `tests/publish_stress.rs`).
+//!
+//! **Per-response accounting:** workers record every response's in-pool
+//! latency into a lock-free log₂ histogram and one version-age sample per
+//! micro-batch ([`crate::serve::stats`]); [`ServePool::stats`] snapshots
+//! them live, which is how the fleet router derives per-model p50/p99 and
+//! staleness without touching the request path. [`PoolHandle::try_submit`]
+//! is the non-blocking admission point: a full bounded queue *sheds* the
+//! request (counted by the caller) instead of parking the producer.
 
 use crate::serve::engine::{InferenceWorkspace, SparseInferenceEngine};
+use crate::serve::stats::{
+    LatencyHistogram, LatencySnapshot, VersionAgeHistogram, VersionAgeSnapshot,
+};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
@@ -41,13 +52,17 @@ pub struct Request {
     pub id: u64,
     pub x: Vec<f32>,
     pub enqueued: Instant,
+    /// Attach the full output logits to the [`Response`] (one Vec clone
+    /// per response). The fleet router's shadow mode sets this to score
+    /// divergence between two models; plain serving leaves it off.
+    pub want_logits: bool,
     /// Where the worker sends the answer (closed-loop clients block on
     /// the paired receiver).
     pub reply: Sender<Response>,
 }
 
 /// The answer a worker sends back.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct Response {
     pub id: u64,
     pub pred: u32,
@@ -60,6 +75,22 @@ pub struct Response {
     pub queue_micros: u64,
     /// Size of the micro-batch this request rode in.
     pub batch_size: u32,
+    /// Full output logits, present iff the request set
+    /// [`Request::want_logits`].
+    pub logits: Option<Vec<f32>>,
+}
+
+/// Outcome of a non-blocking submission ([`PoolHandle::try_submit`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitOutcome {
+    /// Accepted; the reply channel will receive a [`Response`].
+    Enqueued,
+    /// Bounded queue at capacity — the request was shed, not queued. The
+    /// caller decides whether to retry, reroute or drop (admission
+    /// control lives above the pool).
+    QueueFull,
+    /// Pool shut down; no response will ever come.
+    Closed,
 }
 
 struct QueueInner {
@@ -101,6 +132,25 @@ impl RequestQueue {
         drop(g);
         self.not_empty.notify_one();
         true
+    }
+
+    /// Non-blocking enqueue: a full queue returns
+    /// [`SubmitOutcome::QueueFull`] immediately instead of parking the
+    /// producer. This is the load-shedding admission point the fleet
+    /// router builds on — under overload the queue stays bounded and the
+    /// overflow is *counted*, never silently absorbed as latency.
+    pub fn try_push(&self, req: Request) -> SubmitOutcome {
+        let mut g = self.inner.lock().expect("queue poisoned");
+        if g.closed {
+            return SubmitOutcome::Closed;
+        }
+        if g.items.len() >= self.cap {
+            return SubmitOutcome::QueueFull;
+        }
+        g.items.push_back(req);
+        drop(g);
+        self.not_empty.notify_one();
+        SubmitOutcome::Enqueued
     }
 
     /// Claim the next micro-batch into `out` (cleared first). Blocks until
@@ -211,6 +261,14 @@ pub struct PoolCounters {
     /// Times a worker re-pinned to a newer published model between
     /// micro-batches (0 when nothing publishes mid-run).
     pub version_switches: AtomicU64,
+    /// Per-response in-pool latency (enqueue → response sent), log₂
+    /// microsecond buckets. This is the per-response accounting the fleet
+    /// router reads live for per-model p50/p99.
+    pub latency: LatencyHistogram,
+    /// One sample per micro-batch: `latest_version − pinned_version` at
+    /// batch completion. 0 everywhere unless a publisher outran the
+    /// worker's between-batch re-pin.
+    pub version_age: VersionAgeHistogram,
 }
 
 /// A running pool: N worker threads + the shared queue.
@@ -229,11 +287,25 @@ pub struct PoolHandle {
 impl PoolHandle {
     /// Submit one request. Blocks on backpressure; `false` = pool closed.
     pub fn submit(&self, id: u64, x: Vec<f32>, reply: Sender<Response>) -> bool {
-        self.queue.push(Request { id, x, enqueued: Instant::now(), reply })
+        self.queue.push(Request { id, x, enqueued: Instant::now(), want_logits: false, reply })
+    }
+
+    /// Non-blocking submission with load shedding: a full queue is
+    /// reported, not waited out. `want_logits` asks the worker to attach
+    /// the full logits to the response (shadow-divergence scoring).
+    pub fn try_submit(
+        &self,
+        id: u64,
+        x: Vec<f32>,
+        want_logits: bool,
+        reply: Sender<Response>,
+    ) -> SubmitOutcome {
+        self.queue.try_push(Request { id, x, enqueued: Instant::now(), want_logits, reply })
     }
 }
 
-/// Final pool statistics, returned by [`ServePool::shutdown`].
+/// Pool statistics: final (from [`ServePool::shutdown`]) or live (from
+/// [`ServePool::stats`] — the router polls these while traffic flows).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct PoolStats {
     pub requests: u64,
@@ -241,6 +313,10 @@ pub struct PoolStats {
     pub mults: u64,
     /// Worker re-pins to newer published versions (see [`PoolCounters`]).
     pub version_switches: u64,
+    /// In-pool latency histogram (enqueue → response sent).
+    pub latency: LatencySnapshot,
+    /// Version-age histogram, one sample per micro-batch.
+    pub version_age: VersionAgeSnapshot,
 }
 
 impl PoolStats {
@@ -251,6 +327,16 @@ impl PoolStats {
         } else {
             self.requests as f64 / self.batches as f64
         }
+    }
+
+    /// In-pool p50 latency (conservative octave upper bound).
+    pub fn p50_micros(&self) -> u64 {
+        self.latency.p50_micros()
+    }
+
+    /// In-pool p99 latency (conservative octave upper bound).
+    pub fn p99_micros(&self) -> u64 {
+        self.latency.p99_micros()
     }
 }
 
@@ -278,6 +364,17 @@ impl ServePool {
         PoolHandle { queue: Arc::clone(&self.queue) }
     }
 
+    /// Live statistics snapshot — safe to call while workers run (relaxed
+    /// counter reads; the router polls this per model).
+    pub fn stats(&self) -> PoolStats {
+        Self::collect(&self.counters)
+    }
+
+    /// Requests currently waiting in the bounded queue.
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
     /// Close the queue, join every worker, return aggregate stats. Requests
     /// already queued are still answered before workers exit.
     pub fn shutdown(self) -> PoolStats {
@@ -285,11 +382,17 @@ impl ServePool {
         for h in self.handles {
             let _ = h.join();
         }
+        Self::collect(&self.counters)
+    }
+
+    fn collect(counters: &PoolCounters) -> PoolStats {
         PoolStats {
-            requests: self.counters.requests.load(Ordering::Relaxed),
-            batches: self.counters.batches.load(Ordering::Relaxed),
-            mults: self.counters.mults.load(Ordering::Relaxed),
-            version_switches: self.counters.version_switches.load(Ordering::Relaxed),
+            requests: counters.requests.load(Ordering::Relaxed),
+            batches: counters.batches.load(Ordering::Relaxed),
+            mults: counters.mults.load(Ordering::Relaxed),
+            version_switches: counters.version_switches.load(Ordering::Relaxed),
+            latency: counters.latency.snapshot(),
+            version_age: counters.version_age.snapshot(),
         }
     }
 }
@@ -321,6 +424,10 @@ fn worker_loop(
             let mults = inf.mults.total();
             counters.requests.fetch_add(1, Ordering::Relaxed);
             counters.mults.fetch_add(mults, Ordering::Relaxed);
+            let logits = req.want_logits.then(|| ws.logits.clone());
+            // Per-response accounting: enqueue → response sent, so queue
+            // wait and service both land in the histogram the router reads.
+            counters.latency.record(req.enqueued.elapsed().as_micros() as u64);
             // Client may have given up (dropped receiver) — ignore.
             let _ = req.reply.send(Response {
                 id: req.id,
@@ -329,8 +436,13 @@ fn worker_loop(
                 mults,
                 queue_micros: claimed.duration_since(req.enqueued).as_micros() as u64,
                 batch_size: bsz,
+                logits,
             });
         }
+        // Staleness sample: how many versions the epoch this batch was
+        // answered from trails the newest publication, measured at batch
+        // completion (the next sync() will close the gap).
+        counters.version_age.record(engine.latest_version().saturating_sub(ws.version()));
         counters.batches.fetch_add(1, Ordering::Relaxed);
     }
 }
@@ -364,6 +476,7 @@ mod tests {
                 id,
                 x: vec![0.0; 4],
                 enqueued: Instant::now(),
+                want_logits: false,
                 reply: tx.clone(),
             }));
         }
@@ -380,9 +493,49 @@ mod tests {
         let q = RequestQueue::new(4);
         q.close();
         let (tx, _rx) = channel();
-        assert!(!q.push(Request { id: 0, x: vec![], enqueued: Instant::now(), reply: tx }));
+        assert!(!q.push(Request {
+            id: 0,
+            x: vec![],
+            enqueued: Instant::now(),
+            want_logits: false,
+            reply: tx.clone(),
+        }));
         let mut batch = Vec::new();
         assert!(!q.pop_batch(8, Duration::from_millis(1), &mut batch));
+        assert_eq!(
+            q.try_push(Request {
+                id: 1,
+                x: vec![],
+                enqueued: Instant::now(),
+                want_logits: false,
+                reply: tx,
+            }),
+            SubmitOutcome::Closed
+        );
+    }
+
+    #[test]
+    fn try_push_sheds_on_overflow_without_blocking() {
+        let q = RequestQueue::new(2);
+        let (tx, _rx) = channel();
+        let mk = |id| Request {
+            id,
+            x: vec![],
+            enqueued: Instant::now(),
+            want_logits: false,
+            reply: tx.clone(),
+        };
+        assert_eq!(q.try_push(mk(0)), SubmitOutcome::Enqueued);
+        assert_eq!(q.try_push(mk(1)), SubmitOutcome::Enqueued);
+        // Queue at capacity: the third request is rejected immediately —
+        // this call would deadlock this single-threaded test if try_push
+        // blocked like push does.
+        assert_eq!(q.try_push(mk(2)), SubmitOutcome::QueueFull);
+        assert_eq!(q.len(), 2, "shed request must not occupy a slot");
+        // Draining one slot re-opens admission.
+        let mut batch = Vec::new();
+        assert!(q.pop_batch(1, Duration::from_millis(1), &mut batch));
+        assert_eq!(q.try_push(mk(3)), SubmitOutcome::Enqueued);
     }
 
     #[test]
@@ -420,6 +573,38 @@ mod tests {
         assert!(stats.batches >= 1);
         assert!(stats.mean_batch() >= 1.0);
         assert_eq!(stats.version_switches, 0, "nothing published mid-run");
+        assert_eq!(stats.latency.count(), n, "one latency sample per response");
+        assert!(stats.p50_micros() <= stats.p99_micros());
+        assert_eq!(
+            stats.version_age.count(),
+            stats.batches,
+            "one staleness sample per micro-batch"
+        );
+        assert_eq!(
+            stats.version_age.current_fraction(),
+            1.0,
+            "frozen engine is never stale"
+        );
+    }
+
+    #[test]
+    fn try_submit_returns_logits_only_when_asked() {
+        let engine = tiny_engine();
+        let pool = ServePool::start(engine.clone(), PoolConfig::default());
+        let handle = pool.handle();
+        let (tx, rx) = channel();
+        let x: Vec<f32> = (0..8).map(|j| (j as f32 * 0.21).cos()).collect();
+        assert_eq!(handle.try_submit(0, x.clone(), true, tx.clone()), SubmitOutcome::Enqueued);
+        let with = rx.recv().expect("response");
+        assert_eq!(handle.try_submit(1, x.clone(), false, tx.clone()), SubmitOutcome::Enqueued);
+        let without = rx.recv().expect("response");
+        drop(tx);
+        let mut ws = InferenceWorkspace::new(&engine);
+        engine.infer(&x, &mut ws);
+        assert_eq!(with.logits.as_deref(), Some(ws.logits.as_slice()));
+        assert_eq!(with.pred, without.pred, "same input, same answer");
+        assert!(without.logits.is_none(), "logits cost a clone; only ship on request");
+        pool.shutdown();
     }
 
     #[test]

@@ -1,5 +1,5 @@
 //! Frozen model snapshots: weights + sampler config + prehashed LSH
-//! tables in one versioned binary file (`HDLMODL3`; v2/v1 still load).
+//! tables in one versioned binary file (`HDLMODL4`; v3/v2/v1 still load).
 //!
 //! The paper's serving story needs the hash tables *at* the weights they
 //! were built over — rebuilding them on every process start costs a full
@@ -18,16 +18,28 @@
 //! **Compaction (v3):** per-table node fingerprints are K-bit values
 //! (K ≤ 16) but v2 stored them as full `u32`s. The v3 writer bit-packs
 //! them — a presence bitmap (1 bit/node) plus a dense K-bit stream — for
-//! a 32/(K+1)× shrink of the fingerprint payload. `load_snapshot` reads
-//! v1, v2 and v3; [`save_snapshot`] writes v3, [`save_snapshot_v2`] keeps
-//! the old encoding for tooling that needs it.
+//! a 32/(K+1)× shrink of the fingerprint payload.
+//!
+//! **Compaction (v4):** bucket id lists were still raw `u32`s (4 + 4·len
+//! bytes per bucket). The v4 writer delta-codes each bucket: a varint
+//! length followed by zigzag(id − previous id) varints. Neighbouring ids
+//! in a bucket are near each other often enough (build order is node
+//! order; rehashing perturbs it only locally) that most deltas fit one
+//! byte — roughly a 4× shrink of the bucket payload. The id *order* is
+//! preserved exactly: probe order feeds the crowded-bucket determinism
+//! contract, so the encoding must be lossless in sequence, not just in
+//! set. `load_snapshot` reads v1–v4; [`save_snapshot`] writes v4,
+//! [`save_snapshot_v3`]/[`save_snapshot_v2`] keep the older encodings for
+//! tooling pinned to them (and for the exact-size-win tests).
 
 use crate::data::io::{
     invalid, read_f32, read_f32s, read_network_body, read_str, read_u32, read_u32s, read_u64,
     write_f32, write_f32s, write_network_body, write_str, write_u32, write_u32s, write_u64,
-    MODEL_MAGIC, SNAPSHOT3_MAGIC, SNAPSHOT_MAGIC,
+    MODEL_MAGIC, SNAPSHOT3_MAGIC, SNAPSHOT4_MAGIC, SNAPSHOT_MAGIC,
 };
-use crate::util::bitpack::{pack_u32s, packed_words, unpack_u32s};
+use crate::util::bitpack::{
+    pack_u32s, packed_words, read_varint, unpack_u32s, unzigzag, write_varint, zigzag,
+};
 use crate::lsh::alsh::AlshMips;
 use crate::lsh::family::LshFamily;
 use crate::lsh::frozen::FrozenLayerTables;
@@ -110,11 +122,38 @@ impl ModelSnapshot {
     }
 }
 
-/// Write a snapshot in the current (v3, bit-packed) format. Layout (all
+/// On-disk encoding generation. Fingerprints are bit-packed from v3 on;
+/// bucket id lists are delta + varint coded from v4 on.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum SnapFormat {
+    V2,
+    V3,
+    V4,
+}
+
+impl SnapFormat {
+    fn magic(self) -> &'static [u8; 8] {
+        match self {
+            SnapFormat::V2 => SNAPSHOT_MAGIC,
+            SnapFormat::V3 => SNAPSHOT3_MAGIC,
+            SnapFormat::V4 => SNAPSHOT4_MAGIC,
+        }
+    }
+
+    fn packed_fps(self) -> bool {
+        !matches!(self, SnapFormat::V2)
+    }
+
+    fn delta_buckets(self) -> bool {
+        matches!(self, SnapFormat::V4)
+    }
+}
+
+/// Write a snapshot in the current (v4, delta-coded) format. Layout (all
 /// little-endian):
 ///
 /// ```text
-/// "HDLMODL3"
+/// "HDLMODL4"
 /// network body            (identical to v1 — old readers stop here)
 /// sampler: method str, f32 sparsity, u32 {k, l, probes, crowded, rerank},
 ///          f32 rehash_prob, u32 rebuild_every_epochs
@@ -126,24 +165,32 @@ impl ModelSnapshot {
 ///   per table (L of them):
 ///     u32s presence bitmap   [ceil(n_nodes/32) words, LSB-first]
 ///     u32s packed K-bit fps  [ceil(n_nodes*K/32) words, LSB-first]
-///     per bucket (2^K): u32 len, u32s ids
+///     per bucket (2^K): varint len, then len varints of
+///                       zigzag(id[i] − id[i−1]) with id[−1] = 0
 /// ```
 ///
-/// v2 (`HDLMODL2`) differs only in storing each fingerprint as a full
-/// `u32` (with `u32::MAX` = absent) instead of the bitmap + packed pair.
+/// v3 (`HDLMODL3`) stores each bucket as `u32 len, u32s ids`; v2
+/// (`HDLMODL2`) additionally stores each fingerprint as a full `u32`
+/// (with `u32::MAX` = absent) instead of the bitmap + packed pair.
 pub fn save_snapshot(snap: &ModelSnapshot, path: &Path) -> io::Result<()> {
-    save_snapshot_versioned(snap, path, true)
+    save_snapshot_versioned(snap, path, SnapFormat::V4)
+}
+
+/// Write the v3 (packed fingerprints, raw bucket ids) encoding — kept for
+/// tooling pinned to the old format and for size-comparison tests.
+pub fn save_snapshot_v3(snap: &ModelSnapshot, path: &Path) -> io::Result<()> {
+    save_snapshot_versioned(snap, path, SnapFormat::V3)
 }
 
 /// Write the legacy v2 (unpacked-fingerprint) encoding — kept for tooling
 /// pinned to the old format and for size-comparison tests.
 pub fn save_snapshot_v2(snap: &ModelSnapshot, path: &Path) -> io::Result<()> {
-    save_snapshot_versioned(snap, path, false)
+    save_snapshot_versioned(snap, path, SnapFormat::V2)
 }
 
-fn save_snapshot_versioned(snap: &ModelSnapshot, path: &Path, packed: bool) -> io::Result<()> {
+fn save_snapshot_versioned(snap: &ModelSnapshot, path: &Path, fmt: SnapFormat) -> io::Result<()> {
     let mut w = io::BufWriter::new(std::fs::File::create(path)?);
-    w.write_all(if packed { SNAPSHOT3_MAGIC } else { SNAPSHOT_MAGIC })?;
+    w.write_all(fmt.magic())?;
     write_network_body(&mut w, &snap.net)?;
     let s = &snap.sampler;
     write_str(&mut w, s.method.name())?;
@@ -161,14 +208,14 @@ fn save_snapshot_versioned(snap: &ModelSnapshot, path: &Path, packed: bool) -> i
         Some(sets) => {
             write_u32(&mut w, sets.len() as u32)?;
             for t in sets {
-                write_table_set(&mut w, t, packed)?;
+                write_table_set(&mut w, t, fmt)?;
             }
         }
     }
     Ok(())
 }
 
-fn write_table_set(w: &mut impl Write, t: &FrozenLayerTables, packed: bool) -> io::Result<()> {
+fn write_table_set(w: &mut impl Write, t: &FrozenLayerTables, fmt: SnapFormat) -> io::Result<()> {
     let family = t.family();
     let proj = family.srp().projections();
     let k = t.config().k;
@@ -180,7 +227,7 @@ fn write_table_set(w: &mut impl Write, t: &FrozenLayerTables, packed: bool) -> i
     write_f32s(w, proj.as_slice())?;
     for table in t.tables() {
         let fps = table.node_fingerprints();
-        if packed {
+        if fmt.packed_fps() {
             // Presence bitmap + dense K-bit fingerprint stream. SRP
             // fingerprints are K packed sign bits, so K bits are lossless;
             // anything wider would be a corrupted table — fail the save
@@ -207,17 +254,55 @@ fn write_table_set(w: &mut impl Write, t: &FrozenLayerTables, packed: bool) -> i
             write_u32s(w, fps)?;
         }
         for bucket in table.buckets() {
-            write_u32(w, bucket.len() as u32)?;
-            write_u32s(w, bucket)?;
+            if fmt.delta_buckets() {
+                write_bucket_delta(w, bucket)?;
+            } else {
+                write_u32(w, bucket.len() as u32)?;
+                write_u32s(w, bucket)?;
+            }
         }
     }
     Ok(())
 }
 
+/// v4 bucket encoding: varint length, then each id as a zigzag varint
+/// delta from its predecessor (predecessor of the first id is 0). Order
+/// is preserved exactly — see the module docs.
+fn write_bucket_delta(w: &mut impl Write, ids: &[u32]) -> io::Result<()> {
+    write_varint(w, ids.len() as u64)?;
+    let mut prev = 0i64;
+    for &id in ids {
+        write_varint(w, zigzag(id as i64 - prev))?;
+        prev = id as i64;
+    }
+    Ok(())
+}
+
+/// Inverse of [`write_bucket_delta`], validating every decoded id against
+/// the node count.
+fn read_bucket_delta(r: &mut impl Read, n_nodes: usize) -> io::Result<Vec<u32>> {
+    let len = read_varint(r)? as usize;
+    if len > n_nodes {
+        return Err(invalid(format!("bucket of {len} ids exceeds {n_nodes} nodes")));
+    }
+    let mut ids = Vec::with_capacity(len);
+    let mut prev = 0i64;
+    for _ in 0..len {
+        prev = prev
+            .checked_add(unzigzag(read_varint(r)?))
+            .ok_or_else(|| invalid("bucket id delta overflows"))?;
+        if prev < 0 || prev >= n_nodes as i64 {
+            return Err(invalid(format!("bucket id {prev} out of range (n={n_nodes})")));
+        }
+        ids.push(prev as u32);
+    }
+    Ok(ids)
+}
+
 fn read_table_set(
     r: &mut impl Read,
     cfg: LshConfig,
-    packed: bool,
+    fmt: SnapFormat,
 ) -> io::Result<FrozenLayerTables> {
     let n_nodes = read_u32(r)? as usize;
     let dim = read_u32(r)? as usize;
@@ -235,7 +320,7 @@ fn read_table_set(
     let family = AlshMips::from_parts(dim, max_norm, srp).map_err(invalid)?;
     let mut tables = Vec::with_capacity(cfg.l);
     for _ in 0..cfg.l {
-        let node_fp = if packed {
+        let node_fp = if fmt.packed_fps() {
             let present =
                 unpack_u32s(&read_u32s(r, packed_words(n_nodes, 1))?, 1, n_nodes);
             let kbit =
@@ -250,18 +335,22 @@ fn read_table_set(
         };
         let mut buckets = Vec::with_capacity(1 << cfg.k);
         for _ in 0..(1usize << cfg.k) {
-            let len = read_u32(r)? as usize;
-            if len > n_nodes {
-                return Err(invalid(format!("bucket of {len} ids exceeds {n_nodes} nodes")));
+            if fmt.delta_buckets() {
+                buckets.push(read_bucket_delta(r, n_nodes)?);
+            } else {
+                let len = read_u32(r)? as usize;
+                if len > n_nodes {
+                    return Err(invalid(format!("bucket of {len} ids exceeds {n_nodes} nodes")));
+                }
+                buckets.push(read_u32s(r, len)?);
             }
-            buckets.push(read_u32s(r, len)?);
         }
         tables.push(HashTable::from_parts(cfg.k, node_fp, buckets).map_err(invalid)?);
     }
     FrozenLayerTables::from_parts(cfg, family, tables, n_nodes).map_err(invalid)
 }
 
-/// Load any model format (v1/v2/v3). v1 files come back as a table-less
+/// Load any model format (v1–v4). v1 files come back as a table-less
 /// snapshot with the default sampler config (LSH @ 5%) and seed 42 —
 /// enough for [`ModelSnapshot::ensure_tables`] to rebuild
 /// deterministically.
@@ -273,9 +362,10 @@ pub fn load_snapshot(path: &Path) -> io::Result<ModelSnapshot> {
         let net = read_network_body(&mut r)?;
         return Ok(ModelSnapshot::without_tables(net, SamplerConfig::default(), 42));
     }
-    let packed = match &magic {
-        m if m == SNAPSHOT3_MAGIC => true,
-        m if m == SNAPSHOT_MAGIC => false,
+    let fmt = match &magic {
+        m if m == SNAPSHOT4_MAGIC => SnapFormat::V4,
+        m if m == SNAPSHOT3_MAGIC => SnapFormat::V3,
+        m if m == SNAPSHOT_MAGIC => SnapFormat::V2,
         _ => return Err(invalid("not a hashdl model file")),
     };
     let net = read_network_body(&mut r)?;
@@ -313,7 +403,7 @@ pub fn load_snapshot(path: &Path) -> io::Result<ModelSnapshot> {
         }
         let mut sets = Vec::with_capacity(n_sets);
         for l in 0..n_sets {
-            let set = read_table_set(&mut r, lsh, packed)?;
+            let set = read_table_set(&mut r, lsh, fmt)?;
             if set.n_nodes() != net.layers[l].n_out() {
                 return Err(invalid(format!(
                     "table set {l} covers {} nodes, layer has {}",
@@ -398,12 +488,12 @@ mod tests {
     }
 
     #[test]
-    fn v3_and_v2_files_load_through_plain_load_network() {
+    fn all_snapshot_formats_load_through_plain_load_network() {
         let mut snap = ModelSnapshot::without_tables(tiny_net(4), SamplerConfig::default(), 5);
         snap.ensure_tables();
         type Writer = fn(&ModelSnapshot, &std::path::Path) -> io::Result<()>;
-        let writers: [(&str, Writer); 2] =
-            [("compat3", save_snapshot), ("compat2", save_snapshot_v2)];
+        let writers: [(&str, Writer); 3] =
+            [("compat4", save_snapshot), ("compat3", save_snapshot_v3), ("compat2", save_snapshot_v2)];
         for (name, save) in writers {
             let path = tmp(name);
             save(&snap, &path).unwrap();
@@ -423,7 +513,7 @@ mod tests {
         snap.ensure_tables();
         let (p2, p3) = (tmp("size_v2"), tmp("size_v3"));
         save_snapshot_v2(&snap, &p2).unwrap();
-        save_snapshot(&snap, &p3).unwrap();
+        save_snapshot_v3(&snap, &p3).unwrap();
 
         // Bitwise-identical tables through both formats.
         let (b2, b3) = (load_snapshot(&p2).unwrap(), load_snapshot(&p3).unwrap());
@@ -457,5 +547,54 @@ mod tests {
         assert_eq!(s2 - s3, expected_saving, "v2 {s2} vs v3 {s3}");
         std::fs::remove_file(p2).ok();
         std::fs::remove_file(p3).ok();
+    }
+
+    #[test]
+    fn v4_delta_coding_roundtrips_bitwise_and_shrinks_by_the_exact_bucket_delta() {
+        use crate::util::bitpack::{varint_len, zigzag};
+
+        let net = tiny_net(8);
+        let mut snap = ModelSnapshot::without_tables(net, SamplerConfig::default(), 21);
+        snap.ensure_tables();
+        let (p3, p4) = (tmp("size_v3b"), tmp("size_v4"));
+        save_snapshot_v3(&snap, &p3).unwrap();
+        save_snapshot(&snap, &p4).unwrap();
+
+        // Bitwise-identical tables through both formats — bucket id
+        // *order* included (HashTable derives PartialEq over ordered ids).
+        let (b3, b4) = (load_snapshot(&p3).unwrap(), load_snapshot(&p4).unwrap());
+        for (a, b) in b3.tables.as_ref().unwrap().iter().zip(b4.tables.as_ref().unwrap()) {
+            assert_eq!(a.tables(), b.tables(), "delta coding must round-trip bitwise");
+            assert_eq!(a.family().srp().projections(), b.family().srp().projections());
+        }
+
+        // Size win is exactly the bucket-payload delta: per bucket, v3's
+        // 4 + 4·len bytes become varint(len) + Σ varint(zigzag(delta)).
+        let expected_saving: u64 = snap
+            .tables
+            .as_ref()
+            .unwrap()
+            .iter()
+            .flat_map(|set| set.tables())
+            .flat_map(|table| table.buckets())
+            .map(|bucket| {
+                let v3_bytes = 4 + 4 * bucket.len() as u64;
+                let mut v4_bytes = varint_len(bucket.len() as u64) as u64;
+                let mut prev = 0i64;
+                for &id in bucket {
+                    v4_bytes += varint_len(zigzag(id as i64 - prev)) as u64;
+                    prev = id as i64;
+                }
+                v3_bytes - v4_bytes
+            })
+            .sum();
+        let (s3, s4) = (
+            std::fs::metadata(&p3).unwrap().len(),
+            std::fs::metadata(&p4).unwrap().len(),
+        );
+        assert!(expected_saving > 0, "delta coding must actually save bytes");
+        assert_eq!(s3 - s4, expected_saving, "v3 {s3} vs v4 {s4}");
+        std::fs::remove_file(p3).ok();
+        std::fs::remove_file(p4).ok();
     }
 }

@@ -1,0 +1,277 @@
+//! Lock-free serving telemetry primitives.
+//!
+//! Serving workers must record per-response metrics without taking locks
+//! or allocating on the hot path, and the fleet router must read them
+//! live while traffic flows. Both needs are met by fixed-size histograms
+//! of relaxed atomics:
+//!
+//! * [`LatencyHistogram`] — log₂-bucketed microsecond latencies. A
+//!   percentile read returns the *upper bound* of the bucket holding the
+//!   requested rank, so p50/p99 are conservative (never under-reported)
+//!   at ≤ 2× resolution — the standard telemetry trade-off (HDR-style
+//!   histograms refine the mantissa; the paper's serving claims only need
+//!   the octave).
+//! * [`VersionAgeHistogram`] — how far behind the newest published model
+//!   the serving path runs, in whole versions. The pool records one
+//!   sample per micro-batch (`latest_version − pinned_version` at batch
+//!   completion); the router aggregates per model, and a future adaptive
+//!   publish cadence can watch the same counters (ROADMAP: bounded
+//!   staleness).
+//!
+//! Counters are monitoring-only: relaxed ordering everywhere, and control
+//! flow never branches on them mid-run (same contract as
+//! [`crate::serve::pool::PoolCounters`]).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of log₂ latency buckets: bucket `i` holds values whose bit
+/// length is `i` (bucket 0 = {0}, bucket 1 = {1}, bucket 2 = {2, 3}, …).
+/// 31 octaves of microseconds ≈ 35 minutes — far beyond any sane request
+/// latency; the last bucket absorbs everything above.
+pub const LATENCY_BUCKETS: usize = 32;
+
+/// Version-age buckets: exact counts for ages 0–6, the last bucket
+/// absorbs 7+ (an age that large means publication is outrunning serving
+/// pickup badly enough that the exact number no longer matters).
+pub const VERSION_AGE_BUCKETS: usize = 8;
+
+#[inline]
+fn latency_bucket(micros: u64) -> usize {
+    (64 - micros.leading_zeros() as usize).min(LATENCY_BUCKETS - 1)
+}
+
+/// Inclusive upper bound of latency bucket `i` (what a percentile read
+/// reports).
+#[inline]
+fn latency_bucket_upper(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else {
+        (1u64 << i) - 1
+    }
+}
+
+/// Concurrent log₂ latency histogram (microseconds). Recording is one
+/// relaxed `fetch_add`; reading snapshots all buckets.
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; LATENCY_BUCKETS],
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram { buckets: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+
+    #[inline]
+    pub fn record(&self, micros: u64) {
+        self.buckets[latency_bucket(micros)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> LatencySnapshot {
+        LatencySnapshot {
+            counts: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+        }
+    }
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Plain-data copy of a [`LatencyHistogram`] at one instant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LatencySnapshot {
+    pub counts: [u64; LATENCY_BUCKETS],
+}
+
+impl Default for LatencySnapshot {
+    fn default() -> Self {
+        LatencySnapshot { counts: [0; LATENCY_BUCKETS] }
+    }
+}
+
+impl LatencySnapshot {
+    /// Total samples recorded.
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Nearest-rank percentile, reported as the upper bound of the bucket
+    /// holding that rank (conservative: the true latency is ≤ this).
+    /// Returns 0 on an empty histogram.
+    pub fn percentile_micros(&self, p: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0) * total as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return latency_bucket_upper(i);
+            }
+        }
+        latency_bucket_upper(LATENCY_BUCKETS - 1)
+    }
+
+    pub fn p50_micros(&self) -> u64 {
+        self.percentile_micros(50.0)
+    }
+
+    pub fn p99_micros(&self) -> u64 {
+        self.percentile_micros(99.0)
+    }
+
+    /// Merge another snapshot into this one (fleet-level aggregation).
+    pub fn merge(&mut self, other: &LatencySnapshot) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+    }
+}
+
+/// Concurrent version-age histogram (whole model versions behind the
+/// newest publication).
+pub struct VersionAgeHistogram {
+    buckets: [AtomicU64; VERSION_AGE_BUCKETS],
+}
+
+impl VersionAgeHistogram {
+    pub fn new() -> Self {
+        VersionAgeHistogram { buckets: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+
+    #[inline]
+    pub fn record(&self, age: u64) {
+        let i = (age as usize).min(VERSION_AGE_BUCKETS - 1);
+        self.buckets[i].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> VersionAgeSnapshot {
+        VersionAgeSnapshot {
+            counts: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+        }
+    }
+}
+
+impl Default for VersionAgeHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Plain-data copy of a [`VersionAgeHistogram`] at one instant. Index =
+/// age in versions; the last slot counts ages ≥ `VERSION_AGE_BUCKETS − 1`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct VersionAgeSnapshot {
+    pub counts: [u64; VERSION_AGE_BUCKETS],
+}
+
+impl Default for VersionAgeSnapshot {
+    fn default() -> Self {
+        VersionAgeSnapshot { counts: [0; VERSION_AGE_BUCKETS] }
+    }
+}
+
+impl VersionAgeSnapshot {
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Fraction of samples that were perfectly current (age 0). 1.0 on an
+    /// empty histogram — no evidence of staleness.
+    pub fn current_fraction(&self) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 1.0;
+        }
+        self.counts[0] as f64 / total as f64
+    }
+
+    /// JSON array literal of the bucket counts (the shared shape used by
+    /// `BENCH_router.json` and the router stats).
+    pub fn to_json_array(&self) -> String {
+        let items: Vec<String> = self.counts.iter().map(|c| c.to_string()).collect();
+        format!("[{}]", items.join(", "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_buckets_are_octaves() {
+        assert_eq!(latency_bucket(0), 0);
+        assert_eq!(latency_bucket(1), 1);
+        assert_eq!(latency_bucket(2), 2);
+        assert_eq!(latency_bucket(3), 2);
+        assert_eq!(latency_bucket(4), 3);
+        assert_eq!(latency_bucket(1023), 10);
+        assert_eq!(latency_bucket(1024), 11);
+        assert_eq!(latency_bucket(u64::MAX), LATENCY_BUCKETS - 1);
+        assert_eq!(latency_bucket_upper(0), 0);
+        assert_eq!(latency_bucket_upper(1), 1);
+        assert_eq!(latency_bucket_upper(10), 1023);
+    }
+
+    #[test]
+    fn percentiles_are_conservative_upper_bounds() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.snapshot().percentile_micros(50.0), 0, "empty histogram");
+        // 99 samples at ~100us, 1 sample at ~10000us.
+        for _ in 0..99 {
+            h.record(100);
+        }
+        h.record(10_000);
+        let s = h.snapshot();
+        assert_eq!(s.count(), 100);
+        // 100 lives in bucket 7 (64..=127); p50 = 127.
+        assert_eq!(s.p50_micros(), 127);
+        // rank 99 still lands in the 100us bucket; p99 = 127, p100 covers
+        // the outlier's bucket 14 (8192..=16383).
+        assert_eq!(s.p99_micros(), 127);
+        assert_eq!(s.percentile_micros(100.0), 16_383);
+        // Upper bound property: reported p ≥ true value's bucket floor.
+        assert!(s.p50_micros() >= 100);
+    }
+
+    #[test]
+    fn latency_merge_adds_counts() {
+        let a = LatencyHistogram::new();
+        let b = LatencyHistogram::new();
+        a.record(10);
+        b.record(10);
+        b.record(1_000_000);
+        let mut s = a.snapshot();
+        s.merge(&b.snapshot());
+        assert_eq!(s.count(), 3);
+    }
+
+    #[test]
+    fn version_age_clamps_to_last_bucket() {
+        let h = VersionAgeHistogram::new();
+        h.record(0);
+        h.record(0);
+        h.record(1);
+        h.record(6);
+        h.record(7);
+        h.record(1_000);
+        let s = h.snapshot();
+        assert_eq!(s.counts[0], 2);
+        assert_eq!(s.counts[1], 1);
+        assert_eq!(s.counts[6], 1);
+        assert_eq!(s.counts[7], 2, "7 and 1000 share the overflow bucket");
+        assert_eq!(s.count(), 6);
+        assert!((s.current_fraction() - 2.0 / 6.0).abs() < 1e-12);
+        assert_eq!(s.to_json_array(), "[2, 1, 0, 0, 0, 0, 1, 2]");
+    }
+
+    #[test]
+    fn empty_age_histogram_reads_as_current() {
+        assert_eq!(VersionAgeSnapshot::default().current_fraction(), 1.0);
+    }
+}

@@ -13,7 +13,9 @@
 use crate::data::dataset::Dataset;
 use crate::nn::network::Network;
 use crate::optim::{OptimConfig, Optimizer};
-use crate::sampling::{make_selector, NodeSelector, SamplerConfig};
+use crate::publish::{ModelParts, TablePublisher};
+use crate::sampling::{make_selector, Method, NodeSelector, SamplerConfig};
+use crate::serve::snapshot::ModelSnapshot;
 use crate::train::metrics::{EpochRecord, MultCounters, RunRecord};
 use crate::train::trainer::{train_batch, BatchWorkspace};
 use crate::util::rng::Pcg64;
@@ -97,11 +99,46 @@ pub struct AsgdOutcome {
     pub net: Network,
     pub record: RunRecord,
     pub conflicts: ConflictStats,
+    /// Versions published through the attached publisher (0 when training
+    /// ran unpublished).
+    pub versions_published: u64,
 }
 
 /// Run Hogwild ASGD training. Workers are re-spawned per epoch (scoped
 /// threads); parameters and optimizer state persist in shared cells.
 pub fn run_asgd(net: Network, train: &Dataset, test: &Dataset, cfg: &AsgdConfig) -> AsgdOutcome {
+    run_asgd_published(net, train, test, cfg, None)
+}
+
+/// Freeze the quiescent shared network into publishable parts: tables are
+/// rebuilt *once* from the merged weights with the same deterministic
+/// per-layer RNG streams the snapshot loader uses, so the published epoch
+/// is exactly what `train --save` would ship at this instant. Hogwild
+/// workers each keep private tables over the shared weights, so none is
+/// canonical — the single quiescent rebuild is the honest choice (same
+/// argument as `ModelSnapshot::with_rebuilt_tables`; ROADMAP "ASGD
+/// snapshot fidelity"). Only LSH training publishes: serving resolves
+/// active sets through frozen tables.
+fn quiescent_parts(net: &Network, sampler: SamplerConfig, seed: u64) -> Option<ModelParts> {
+    (sampler.method == Method::Lsh).then(|| {
+        ModelParts::from_snapshot(ModelSnapshot::with_rebuilt_tables(net.clone(), sampler, seed))
+    })
+}
+
+/// [`run_asgd`] with live publication: at every epoch boundary — workers
+/// joined, the shared network quiescent — the main thread (worker 0's
+/// electorate of one) rebuilds tables once from the merged weights and
+/// publishes the epoch through `publisher`. Serving pools on the paired
+/// [`crate::publish::TableReader`] pick each version up between
+/// micro-batches, so Hogwild training feeds a registered router model
+/// exactly like the sequential `train-serve` path does.
+pub fn run_asgd_published(
+    net: Network,
+    train: &Dataset,
+    test: &Dataset,
+    cfg: &AsgdConfig,
+    mut publisher: Option<TablePublisher>,
+) -> AsgdOutcome {
     assert!(cfg.threads >= 1);
     let opt = Optimizer::for_network(cfg.optim, &net);
     let shared_net = SharedCell::new(net);
@@ -202,6 +239,14 @@ pub fn run_asgd(net: Network, train: &Dataset, test: &Dataset, cfg: &AsgdConfig)
         // inference (fresh selectors built from the current weights).
         // SAFETY: workers are joined; exclusive access again.
         let net_ref = unsafe { shared_net.get_mut_racy() };
+        // Epoch-boundary publication from the quiescent net: the rebuild +
+        // freeze runs here on the main thread; serving readers only ever
+        // see the atomic swap.
+        if let Some(p) = publisher.as_mut() {
+            if let Some(parts) = quiescent_parts(net_ref, cfg.sampler, cfg.seed) {
+                p.publish(parts);
+            }
+        }
         let cap = if cfg.eval_cap == 0 { test.len() } else { cfg.eval_cap.min(test.len()) };
         let mut eval_rng = Pcg64::new(cfg.seed ^ 0xE7A1, epoch as u64);
         let mut eval_selectors: Vec<Box<dyn NodeSelector>> = (0..net_ref.n_hidden())
@@ -236,7 +281,12 @@ pub fn run_asgd(net: Network, train: &Dataset, test: &Dataset, cfg: &AsgdConfig)
 
     let conflicts = conflict_stats(&all_samples);
     drop(shared_opt);
-    AsgdOutcome { net: shared_net.into_inner(), record, conflicts }
+    AsgdOutcome {
+        net: shared_net.into_inner(),
+        record,
+        conflicts,
+        versions_published: publisher.map_or(0, |p| p.version()),
+    }
 }
 
 /// Compute cross-sample overlap statistics from sampled active sets.
@@ -352,5 +402,47 @@ mod tests {
         let (train, test) = blob_dataset(200, 4);
         let out = run_asgd(mk_net(), &train, &test, &cfg(4, Method::Standard, 1.0));
         assert!(out.record.final_acc() > 0.6, "dense ASGD should still mostly work on blobs");
+        assert_eq!(out.versions_published, 0, "no publisher attached");
+    }
+
+    #[test]
+    fn asgd_publishes_each_epoch_from_the_quiescent_net() {
+        use crate::serve::{InferenceWorkspace, SparseInferenceEngine};
+
+        let (train, test) = blob_dataset(200, 8);
+        let c = cfg(2, Method::Lsh, 0.25);
+        let seed_parts = super::quiescent_parts(&mk_net(), c.sampler, c.seed)
+            .expect("LSH config must yield parts");
+        let (publisher, reader) = TablePublisher::start(seed_parts);
+        let out = run_asgd_published(mk_net(), &train, &test, &c, Some(publisher));
+        // One publication per epoch boundary, versions 1..=epochs.
+        assert_eq!(out.versions_published, c.epochs as u64);
+        assert_eq!(reader.latest_version(), c.epochs as u64);
+
+        // The last published epoch serves from exactly the merged weights
+        // the outcome returned: dense logits must agree bit-for-bit.
+        let engine = SparseInferenceEngine::live(reader);
+        let mut ws = InferenceWorkspace::new(&engine);
+        assert_eq!(ws.version(), c.epochs as u64);
+        let x = &train.xs[0];
+        engine.infer_dense(x, &mut ws);
+        let mut reference = Vec::new();
+        out.net.forward_dense(x, &mut reference);
+        assert_eq!(ws.logits, reference, "published weights == merged ASGD weights");
+    }
+
+    #[test]
+    fn non_lsh_asgd_publishes_nothing() {
+        let (train, test) = blob_dataset(120, 9);
+        let c = cfg(2, Method::Standard, 1.0);
+        // Seed the slot from an LSH-config'd freeze so the publisher can
+        // exist at all; the run itself (Standard method) must skip every
+        // epoch publication.
+        let lsh_cfg = cfg(1, Method::Lsh, 0.25);
+        let seed_parts = super::quiescent_parts(&mk_net(), lsh_cfg.sampler, 7).unwrap();
+        let (publisher, reader) = TablePublisher::start(seed_parts);
+        let out = run_asgd_published(mk_net(), &train, &test, &c, Some(publisher));
+        assert_eq!(out.versions_published, 0, "standard method ships no tables");
+        assert_eq!(reader.latest_version(), 0);
     }
 }

@@ -44,7 +44,7 @@ pub mod metrics;
 pub mod schedule;
 pub mod trainer;
 
-pub use asgd::{run_asgd, AsgdConfig, AsgdOutcome, ConflictStats};
+pub use asgd::{run_asgd, run_asgd_published, AsgdConfig, AsgdOutcome, ConflictStats};
 pub use metrics::{EpochRecord, MultCounters, RunRecord};
 pub use trainer::{
     train_batch, train_step, BatchResult, BatchWorkspace, StepWorkspace, TrainConfig, Trainer,

@@ -4,6 +4,8 @@
 //! low K bits of a `u32` (the paper stores "K bits together efficiently as
 //! an integer"). K ≤ 32 everywhere in the paper (K = 6 in the experiments).
 
+use std::io;
+
 /// Pack a slice of sign bits (true = 1) into the low bits of a `u32`.
 /// `bits[0]` becomes the most-significant of the K bits, matching the
 /// "h1;h2;...;hK" concatenation order in the paper's B_j(x) definition.
@@ -87,6 +89,74 @@ pub fn packed_words(n: usize, bits: usize) -> usize {
     (n * bits).div_ceil(32)
 }
 
+/// Longest legal LEB128 encoding of a `u64` (10 × 7 bits ≥ 64 bits). The
+/// reader rejects anything longer as corrupt rather than looping.
+const VARINT_MAX_BYTES: usize = 10;
+
+/// Write `v` as an LEB128 varint: 7 value bits per byte, low bits first,
+/// high bit set on every byte except the last. Small values — bucket
+/// lengths and the id deltas of the v4 snapshot encoding — cost one byte
+/// instead of four. Returns the bytes written.
+pub fn write_varint(w: &mut impl io::Write, mut v: u64) -> io::Result<usize> {
+    let mut n = 0;
+    loop {
+        let byte = (v & 0x7F) as u8;
+        v >>= 7;
+        n += 1;
+        if v == 0 {
+            w.write_all(&[byte])?;
+            return Ok(n);
+        }
+        w.write_all(&[byte | 0x80])?;
+    }
+}
+
+/// Inverse of [`write_varint`]. Fails on truncated input and on encodings
+/// longer than [`VARINT_MAX_BYTES`] (overlong/corrupt streams must error,
+/// not spin).
+pub fn read_varint(r: &mut impl io::Read) -> io::Result<u64> {
+    let mut v = 0u64;
+    let mut byte = [0u8; 1];
+    for i in 0..VARINT_MAX_BYTES {
+        r.read_exact(&mut byte)?;
+        let shift = 7 * i;
+        if shift == 63 && byte[0] & 0x7E != 0 {
+            break; // bits beyond u64::MAX
+        }
+        v |= u64::from(byte[0] & 0x7F) << shift;
+        if byte[0] & 0x80 == 0 {
+            return Ok(v);
+        }
+    }
+    Err(io::Error::new(io::ErrorKind::InvalidData, "varint longer than 10 bytes"))
+}
+
+/// Bytes [`write_varint`] emits for `v` (size accounting in tests and the
+/// snapshot writer's exact-saving pin).
+#[inline]
+pub fn varint_len(v: u64) -> usize {
+    if v == 0 {
+        1
+    } else {
+        (64 - v.leading_zeros() as usize).div_ceil(7)
+    }
+}
+
+/// Zigzag-map a signed delta onto the unsigned varint domain so small
+/// negative deltas (bucket id lists are not sorted — probe order is part
+/// of the determinism contract) stay one byte: 0, -1, 1, -2, 2, ... →
+/// 0, 1, 2, 3, 4, ...
+#[inline]
+pub fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+/// Inverse of [`zigzag`].
+#[inline]
+pub fn unzigzag(v: u64) -> i64 {
+    ((v >> 1) as i64) ^ -((v & 1) as i64)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -162,5 +232,57 @@ mod tests {
         assert_eq!(words.len(), 2);
         assert_eq!(unpack_u32s(&words, 1, 40), bits);
         assert_eq!(words[0] & 1, 1, "value 0 lives in bit 0 of word 0");
+    }
+
+    #[test]
+    fn varint_roundtrip_and_lengths() {
+        let probes: Vec<u64> = vec![
+            0,
+            1,
+            127,
+            128,
+            300,
+            16_383,
+            16_384,
+            u32::MAX as u64,
+            u64::MAX / 2,
+            u64::MAX,
+        ];
+        let mut buf = Vec::new();
+        for &v in &probes {
+            let at = buf.len();
+            let n = write_varint(&mut buf, v).unwrap();
+            assert_eq!(n, buf.len() - at);
+            assert_eq!(n, varint_len(v), "declared length for {v}");
+        }
+        let mut r = buf.as_slice();
+        for &v in &probes {
+            assert_eq!(read_varint(&mut r).unwrap(), v);
+        }
+        assert!(r.is_empty(), "every byte consumed");
+        assert_eq!(varint_len(0), 1);
+        assert_eq!(varint_len(127), 1);
+        assert_eq!(varint_len(128), 2);
+        assert_eq!(varint_len(u64::MAX), 10);
+    }
+
+    #[test]
+    fn varint_rejects_truncated_and_overlong() {
+        // Truncated: continuation bit set, stream ends.
+        assert!(read_varint(&mut [0x80u8].as_slice()).is_err());
+        // Overlong: 10 continuation bytes and more value bits than u64.
+        let bad = [0xFFu8; 11];
+        assert!(read_varint(&mut bad.as_slice()).is_err());
+    }
+
+    #[test]
+    fn zigzag_roundtrip_keeps_small_deltas_small() {
+        for v in [-5i64, -1, 0, 1, 5, i64::MIN, i64::MAX, -1_000_000, 1_000_000] {
+            assert_eq!(unzigzag(zigzag(v)), v, "{v}");
+        }
+        assert_eq!(zigzag(0), 0);
+        assert_eq!(zigzag(-1), 1);
+        assert_eq!(zigzag(1), 2);
+        assert!(varint_len(zigzag(-63)) == 1 && varint_len(zigzag(63)) == 1);
     }
 }
