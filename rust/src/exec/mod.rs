@@ -1,0 +1,700 @@
+//! The unified batched sparse execution core: **one** select/forward path
+//! shared by training and serving.
+//!
+//! Before this module the repo had two parallel implementations of
+//! "select the active sets for a batch, then fire them": the training
+//! selector's private batching (`sampling::lsh_select` densified and
+//! hashed its own `B × L` fingerprint plane) and the serving engine's
+//! per-request loop (`serve::engine` hashed and probed each request of a
+//! micro-batch independently). Both re-implemented the same three steps —
+//! densify, fingerprint-hash, probe/rank — against different table
+//! owners, and the serving side gave back a large slice of the paper's
+//! multiplication win by paying queue-amortized batching but per-request
+//! hashing. This module collapses the two paths:
+//!
+//! * [`TableView`] — the table-backend abstraction. Implemented by the
+//!   live, mutable [`LayerTables`] the trainer maintains, and by
+//!   [`FrozenTableView`] (an immutable [`FrozenLayerTables`] epoch from
+//!   the publish slot plus its per-worker scratch). The two backends keep
+//!   their historical RNG contracts: training draws crowded-bucket /
+//!   fallback randomness from the caller's RNG stream (per-example
+//!   reproducibility), serving derives it from the query's own
+//!   fingerprints (worker-order independence).
+//! * [`select_batch_into`] — one-pass selection for a whole batch:
+//!   densify every input, hash **all** `B × L` fingerprints in a single
+//!   traversal of the projection data ([`TableView::hash_batch`] — one
+//!   *fingerprint hash invocation* per layer per batch), then probe +
+//!   rank + optionally §5.4-re-rank each sample over reused buffers.
+//! * [`SparseBatchPlan`] — the product of selection: per-layer per-sample
+//!   active sets plus the deduplicated **union** of each layer's active
+//!   ids (first-touch order — the same sequence the gradient sinks touch,
+//!   which is what makes batch-amortized LSH maintenance correct).
+//! * [`BatchExecutor`] — the serving-side driver: builds the plan layer
+//!   by layer and runs the fused sparse forward over it (per-sample
+//!   multiplication attribution preserved, so a response's `mults` is
+//!   identical to what per-request execution reported).
+//!
+//! **Accounting vocabulary:** a *fingerprint hash invocation* is one call
+//! into the one-pass batched hashing routine — it covers every co-batched
+//! sample for one layer. Per-request execution of a micro-batch of `B`
+//! requests costs `B × hidden_layers` invocations; fused execution costs
+//! `hidden_layers`. The *multiplication* count per sample (K·L·(d+1)
+//! hashing + sparse forward + optional re-rank) is unchanged — the
+//! invocation count is the unit the serve bench pins, because it is what
+//! one-pass hashing actually amortizes (projection-plane traversals and
+//! their memory traffic), counted, not timed.
+//!
+//! **Equivalence contract:** for the same inputs and table state, the
+//! batched path produces bit-for-bit the active sets, activations and
+//! logits of per-sample execution, in both backends. Pinned by the unit
+//! tests below, `sampling::lsh_select` tests (training) and
+//! `tests/serve.rs` / `serve::engine` tests (serving).
+
+use crate::lsh::family::LshFamily;
+use crate::lsh::frozen::{FrozenLayerTables, FrozenQueryScratch};
+use crate::lsh::layered::{LayerTables, LshConfig};
+use crate::nn::layer::Layer;
+use crate::nn::sparse::{LayerInput, SparseVec};
+use crate::sampling::{budget, rerank_exact};
+use crate::train::metrics::MultCounters;
+use crate::util::rng::Pcg64;
+
+/// Densify a layer input into a pre-sized buffer of length `n_in`.
+pub fn densify_into(input: LayerInput<'_>, buf: &mut [f32]) {
+    match input {
+        LayerInput::Dense(x) => buf.copy_from_slice(x),
+        LayerInput::Sparse(s) => {
+            buf.iter_mut().for_each(|v| *v = 0.0);
+            for (i, v) in s.iter() {
+                buf[i as usize] = v;
+            }
+        }
+    }
+}
+
+/// One per-layer table backend the shared execution core can select
+/// through. See the module docs for the two implementations and their
+/// RNG contracts.
+pub trait TableView {
+    /// The (K, L, probes, …) operating point of this table stack.
+    fn lsh_config(&self) -> LshConfig;
+
+    /// Number of nodes (neurons) the tables index.
+    fn nodes(&self) -> usize;
+
+    /// One-pass fingerprint hashing of a whole batch: `q_plane` holds
+    /// `bsz` densified queries of width `n_in`, `fps_plane` receives
+    /// `bsz × L` fingerprints (row-major). One call = one *fingerprint
+    /// hash invocation* (the unit the serve bench counts). Returns the
+    /// per-sample hashing multiplication cost (K·L·(n_in+1), uniform
+    /// across the batch).
+    fn hash_batch(&mut self, q_plane: &[f32], n_in: usize, bsz: usize, fps_plane: &mut [u32])
+        -> u64;
+
+    /// Final active set for one prehashed sample: probe + rank, the
+    /// optional §5.4 cheap re-rank at `rerank_factor`, and the backend's
+    /// empty-result fallback. Returns the extra (re-rank)
+    /// multiplications. `rng` is consumed only by the live training
+    /// backend; the frozen backend derives its own from `fps`.
+    #[allow(clippy::too_many_arguments)]
+    fn select_prehashed(
+        &mut self,
+        layer: &Layer,
+        q: &[f32],
+        fps: &[u32],
+        budget: usize,
+        rerank_factor: usize,
+        rng: &mut Pcg64,
+        scored: &mut Vec<(f32, u32)>,
+        out: &mut Vec<u32>,
+    ) -> u64;
+}
+
+/// Live training backend: the trainer's mutable table stack. Probe
+/// randomness (crowded-bucket sub-sampling, empty-result fallback) comes
+/// from the caller's RNG in sample order — the contract the batch-of-one
+/// equivalence guarantee depends on.
+impl TableView for LayerTables {
+    fn lsh_config(&self) -> LshConfig {
+        self.config()
+    }
+
+    fn nodes(&self) -> usize {
+        self.n_nodes()
+    }
+
+    fn hash_batch(
+        &mut self,
+        q_plane: &[f32],
+        n_in: usize,
+        bsz: usize,
+        fps_plane: &mut [u32],
+    ) -> u64 {
+        debug_assert_eq!(q_plane.len(), n_in * bsz);
+        self.hash_query_batch(q_plane, bsz, fps_plane);
+        let cfg = self.config();
+        (cfg.k * cfg.l * (n_in + 1)) as u64
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn select_prehashed(
+        &mut self,
+        layer: &Layer,
+        q: &[f32],
+        fps: &[u32],
+        budget: usize,
+        rerank_factor: usize,
+        rng: &mut Pcg64,
+        scored: &mut Vec<(f32, u32)>,
+        out: &mut Vec<u32>,
+    ) -> u64 {
+        let mut extra = 0u64;
+        if rerank_factor > 1 {
+            // Cheap re-ranking (§5.4): over-collect candidates, score them
+            // exactly, keep the best `budget`.
+            self.query_prehashed(fps, budget * rerank_factor, rng, out);
+            extra += rerank_exact(layer, q, budget, out, scored);
+        } else {
+            self.query_prehashed(fps, budget, rng, out);
+        }
+        if out.is_empty() {
+            // Hash miss (rare, small layers): fall back to random nodes so
+            // training can proceed.
+            out.extend(rng.sample_indices(layer.n_out(), budget.min(4)));
+        }
+        extra
+    }
+}
+
+/// Frozen serving backend: one immutable published table stack plus the
+/// worker-private query scratch it probes through. Randomness is derived
+/// from the query fingerprints (`lsh::frozen`), so identical requests get
+/// identical active sets on any worker.
+pub struct FrozenTableView<'a> {
+    pub tables: &'a FrozenLayerTables,
+    pub scratch: &'a mut FrozenQueryScratch,
+}
+
+impl TableView for FrozenTableView<'_> {
+    fn lsh_config(&self) -> LshConfig {
+        self.tables.config()
+    }
+
+    fn nodes(&self) -> usize {
+        self.tables.n_nodes()
+    }
+
+    fn hash_batch(
+        &mut self,
+        q_plane: &[f32],
+        n_in: usize,
+        bsz: usize,
+        fps_plane: &mut [u32],
+    ) -> u64 {
+        debug_assert_eq!(n_in, self.tables.family().dim());
+        self.tables.family().hash_queries_batch(
+            q_plane,
+            bsz,
+            &mut self.scratch.embed_plane,
+            fps_plane,
+        );
+        self.tables.hash_mults()
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn select_prehashed(
+        &mut self,
+        layer: &Layer,
+        q: &[f32],
+        fps: &[u32],
+        budget: usize,
+        rerank_factor: usize,
+        _rng: &mut Pcg64,
+        scored: &mut Vec<(f32, u32)>,
+        out: &mut Vec<u32>,
+    ) -> u64 {
+        out.clear();
+        if budget == 0 || self.tables.n_nodes() == 0 {
+            return 0;
+        }
+        let mut rng = self.tables.derived_rng(fps);
+        // Over-collect when re-ranking; the frozen empty-result fallback
+        // runs inside probe_prehashed at the *collection* budget — the
+        // exact semantics the per-request engine had.
+        let collect = if rerank_factor > 1 { budget * rerank_factor } else { budget };
+        self.tables.probe_prehashed(fps, collect, &mut *self.scratch, &mut rng, out);
+        if rerank_factor > 1 {
+            rerank_exact(layer, q, budget, out, scored)
+        } else {
+            0
+        }
+    }
+}
+
+/// Reusable buffers for one [`select_batch_into`] pass: the densified
+/// query plane, the batch fingerprint plane and the re-rank scoring
+/// buffer. Grown once, reused forever.
+#[derive(Default)]
+pub struct BatchSelectScratch {
+    pub q_plane: Vec<f32>,
+    pub fps_plane: Vec<u32>,
+    pub scored: Vec<(f32, u32)>,
+}
+
+/// What one batched selection pass cost.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SelectStats {
+    /// Total selection multiplications across the batch (hashing +
+    /// optional re-rank), same accounting as per-sample selection.
+    pub selection_mults: u64,
+    /// Fingerprint hash invocations performed (always 1: the whole batch
+    /// is hashed in one pass).
+    pub hash_invocations: u64,
+}
+
+/// One-pass batched selection through any [`TableView`]: densify every
+/// input, hash all fingerprints in a single invocation, then probe +
+/// rank per sample in order. Fills `outs[s]` with sample `s`'s active
+/// set and `per_sample_mults[s]` with its exact selection cost
+/// (hashing + re-rank — the per-request attribution serving responses
+/// report). Bit-for-bit identical to per-sample selection on the same
+/// backend.
+#[allow(clippy::too_many_arguments)]
+pub fn select_batch_into<V: TableView>(
+    view: &mut V,
+    layer: &Layer,
+    inputs: &[LayerInput<'_>],
+    budget: usize,
+    rerank_factor: usize,
+    rng: &mut Pcg64,
+    scratch: &mut BatchSelectScratch,
+    per_sample_mults: &mut [u64],
+    outs: &mut [Vec<u32>],
+) -> SelectStats {
+    let n = inputs.len();
+    debug_assert_eq!(outs.len(), n);
+    debug_assert_eq!(per_sample_mults.len(), n);
+    let n_in = layer.n_in();
+    let l = view.lsh_config().l;
+    // Phase 1: densify + hash the whole batch (resize reuses the buffer;
+    // densify_into overwrites every queried cell).
+    scratch.q_plane.resize(n * n_in, 0.0);
+    for (s, input) in inputs.iter().enumerate() {
+        densify_into(*input, &mut scratch.q_plane[s * n_in..(s + 1) * n_in]);
+    }
+    scratch.fps_plane.clear();
+    scratch.fps_plane.resize(n * l, 0);
+    let hash_per_sample = view.hash_batch(&scratch.q_plane, n_in, n, &mut scratch.fps_plane);
+    // Phase 2: probe + rank each sample over the shared scratch, in
+    // sample order (the RNG-draw order the equivalence guarantee pins).
+    let mut selection_mults = 0u64;
+    for (s, out) in outs.iter_mut().enumerate() {
+        let q = &scratch.q_plane[s * n_in..(s + 1) * n_in];
+        let fps = &scratch.fps_plane[s * l..(s + 1) * l];
+        let extra = view.select_prehashed(
+            layer,
+            q,
+            fps,
+            budget,
+            rerank_factor,
+            rng,
+            &mut scratch.scored,
+            out,
+        );
+        per_sample_mults[s] = hash_per_sample + extra;
+        selection_mults += hash_per_sample + extra;
+    }
+    SelectStats { selection_mults, hash_invocations: 1 }
+}
+
+/// One hidden layer's slice of a [`SparseBatchPlan`]: the per-sample
+/// active sets plus their deduplicated union.
+#[derive(Default)]
+pub struct LayerPlan {
+    /// Per-sample active sets (index = sample; grown to the batch size,
+    /// never shrunk).
+    pub actives: Vec<Vec<u32>>,
+    /// Distinct active ids across the batch, first-touch order (sample
+    /// 0's set first). This is exactly the row sequence the trainer's
+    /// gradient sinks register, so batch-amortized LSH maintenance over
+    /// the union touches the same rows in the same order.
+    union: Vec<u32>,
+    /// Membership stamp per node (`stamp[i] == epoch` ⇒ already in the
+    /// union) — dedup without a hash set, same trick as the table
+    /// scratch.
+    stamp: Vec<u32>,
+    epoch: u32,
+}
+
+impl LayerPlan {
+    /// The union of the batch's active sets (valid after
+    /// [`LayerPlan::refresh_union`]).
+    pub fn union(&self) -> &[u32] {
+        &self.union
+    }
+
+    /// Recompute the union from `actives[..bsz]`.
+    pub fn refresh_union(&mut self, n_out: usize, bsz: usize) {
+        if self.stamp.len() < n_out {
+            self.stamp.resize(n_out, 0);
+        }
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            // Stamp wrap: reset (once per 2^32 batches). Stamps reset to
+            // 0, which the epoch counter never holds outside this branch,
+            // so a stale stamp can never collide with a future epoch.
+            self.stamp.iter_mut().for_each(|v| *v = 0);
+            self.epoch = 1;
+        }
+        self.union.clear();
+        for s in 0..bsz {
+            for &id in &self.actives[s] {
+                if self.stamp[id as usize] != self.epoch {
+                    self.stamp[id as usize] = self.epoch;
+                    self.union.push(id);
+                }
+            }
+        }
+    }
+}
+
+/// Per-layer union active sets + per-sample membership for one batch —
+/// the product of one-pass selection, consumed by the fused forward and
+/// by batch-amortized maintenance/telemetry.
+#[derive(Default)]
+pub struct SparseBatchPlan {
+    pub layers: Vec<LayerPlan>,
+}
+
+impl SparseBatchPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Grow to `n_hidden` layer plans with at least `bsz` per-sample
+    /// slots each.
+    pub fn ensure(&mut self, n_hidden: usize, bsz: usize) {
+        if self.layers.len() < n_hidden {
+            self.layers.resize_with(n_hidden, LayerPlan::default);
+        }
+        for lp in &mut self.layers[..n_hidden] {
+            if lp.actives.len() < bsz {
+                lp.actives.resize_with(bsz, Vec::new);
+            }
+        }
+    }
+}
+
+/// Telemetry from one [`BatchExecutor::forward_batch`] run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatchRunStats {
+    /// Fingerprint hash invocations this batch (= hidden layers; the
+    /// per-request count would have been `hidden layers × batch`).
+    pub hash_invocations: u64,
+    /// Total selection multiplications across the batch.
+    pub selection_mults: u64,
+    /// Σ over layers of |union of the batch's active sets|.
+    pub union_active: u64,
+    /// Σ over layers and samples of |active set| — `total_active /
+    /// union_active` is the batch's sharing factor (how much co-batched
+    /// requests overlap in the neurons they fire).
+    pub total_active: u64,
+}
+
+/// The batched sparse forward driver: builds a [`SparseBatchPlan`] layer
+/// by layer (selection must interleave with forwards — layer `l+1`'s
+/// queries are layer `l`'s activations) and runs the fused sparse
+/// forward over it, finishing with the always-dense output layer. Owns
+/// every per-batch buffer; steady-state execution allocates only the
+/// `B`-pointer `LayerInput` view vectors whose borrows change per batch.
+///
+/// Per-sample outputs: `acts[l][s]` (hidden sparse activations),
+/// `logits[s]`, `sample_mults[s]` — the exact per-request multiplication
+/// attribution per-request execution reported, so fusing a micro-batch
+/// changes *when* hashing happens, never what a response says it cost.
+#[derive(Default)]
+pub struct BatchExecutor {
+    pub plan: SparseBatchPlan,
+    scratch: BatchSelectScratch,
+    per_sample_sel: Vec<u64>,
+    /// `acts[l][s]`: sparse activations of hidden layer `l`, sample `s`.
+    pub acts: Vec<Vec<SparseVec>>,
+    /// Per-sample output logits.
+    pub logits: Vec<Vec<f32>>,
+    /// Per-sample multiplication counters (selection + forward).
+    pub sample_mults: Vec<MultCounters>,
+    /// Stats of the most recent `forward_batch` run.
+    pub last: BatchRunStats,
+}
+
+impl BatchExecutor {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn ensure_capacity(&mut self, n_hidden: usize, bsz: usize) {
+        self.plan.ensure(n_hidden, bsz);
+        if self.acts.len() != n_hidden {
+            self.acts.resize_with(n_hidden, Vec::new);
+        }
+        for per_layer in &mut self.acts {
+            if per_layer.len() < bsz {
+                per_layer.resize_with(bsz, SparseVec::new);
+            }
+        }
+        if self.logits.len() < bsz {
+            self.logits.resize_with(bsz, Vec::new);
+        }
+        if self.sample_mults.len() < bsz {
+            self.sample_mults.resize(bsz, MultCounters::default());
+        }
+        if self.per_sample_sel.len() < bsz {
+            self.per_sample_sel.resize(bsz, 0);
+        }
+    }
+
+    /// Run the fused batched sparse forward: one [`TableView`] per hidden
+    /// layer in `views`, `layers` = every network layer (hidden layers
+    /// followed by the dense output layer). `rng` feeds only live
+    /// (training-backend) views; frozen views ignore it.
+    pub fn forward_batch<V: TableView>(
+        &mut self,
+        layers: &[Layer],
+        views: &mut [V],
+        sparsity: f32,
+        rerank_factor: usize,
+        xs: &[&[f32]],
+        rng: &mut Pcg64,
+    ) {
+        let bsz = xs.len();
+        let n_hidden = views.len();
+        debug_assert_eq!(layers.len(), n_hidden + 1, "hidden layers + dense output layer");
+        self.ensure_capacity(n_hidden, bsz);
+        self.last = BatchRunStats::default();
+        for m in &mut self.sample_mults[..bsz] {
+            *m = MultCounters::default();
+        }
+        for l in 0..n_hidden {
+            let layer = &layers[l];
+            let b = budget(layer.n_out(), sparsity);
+            let (prev, rest) = self.acts.split_at_mut(l);
+            let inputs: Vec<LayerInput> = (0..bsz)
+                .map(|s| {
+                    if l == 0 {
+                        LayerInput::Dense(xs[s])
+                    } else {
+                        LayerInput::Sparse(&prev[l - 1][s])
+                    }
+                })
+                .collect();
+            let lp = &mut self.plan.layers[l];
+            let stats = select_batch_into(
+                &mut views[l],
+                layer,
+                &inputs,
+                b,
+                rerank_factor,
+                rng,
+                &mut self.scratch,
+                &mut self.per_sample_sel[..bsz],
+                &mut lp.actives[..bsz],
+            );
+            lp.refresh_union(layer.n_out(), bsz);
+            self.last.hash_invocations += stats.hash_invocations;
+            self.last.selection_mults += stats.selection_mults;
+            self.last.union_active += lp.union.len() as u64;
+            let outs = &mut rest[0];
+            for s in 0..bsz {
+                self.last.total_active += lp.actives[s].len() as u64;
+                self.sample_mults[s].selection += self.per_sample_sel[s];
+                self.sample_mults[s].forward +=
+                    layer.forward_sparse(inputs[s], &lp.actives[s], &mut outs[s]);
+            }
+        }
+        // Output layer: dense over all classes from the last sparse
+        // activation (the paper never hashes the output layer).
+        let out_layer = layers.last().expect("empty network");
+        for s in 0..bsz {
+            let input = if n_hidden == 0 {
+                LayerInput::Dense(xs[s])
+            } else {
+                LayerInput::Sparse(&self.acts[n_hidden - 1][s])
+            };
+            self.sample_mults[s].forward += out_layer.forward_all(input, &mut self.logits[s]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::activation::Activation;
+    use crate::util::rng::Pcg64;
+
+    fn layer(n_in: usize, n_out: usize, seed: u64) -> Layer {
+        let mut rng = Pcg64::seeded(seed);
+        Layer::new(n_in, n_out, Activation::ReLU, &mut rng)
+    }
+
+    fn queries(n: usize, dim: usize) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|s| (0..dim).map(|j| ((s * dim + j) as f32 * 0.19).sin()).collect())
+            .collect()
+    }
+
+    #[test]
+    fn live_batched_selection_matches_per_sample_queries() {
+        let l = layer(20, 150, 3);
+        let cfg = LshConfig { rerank_factor: 3, ..LshConfig::default() };
+        let mut rng_a = Pcg64::seeded(7);
+        let mut rng_b = Pcg64::seeded(7);
+        let mut live_a = LayerTables::build(&l.w, cfg, &mut rng_a);
+        let mut live_b = LayerTables::build(&l.w, cfg, &mut rng_b);
+        let xs = queries(6, 20);
+        let inputs: Vec<LayerInput> = xs.iter().map(|x| LayerInput::Dense(x)).collect();
+        let b = budget(150, 0.1);
+
+        let mut scratch = BatchSelectScratch::default();
+        let mut per_sample = vec![0u64; 6];
+        let mut outs: Vec<Vec<u32>> = vec![Vec::new(); 6];
+        let stats = select_batch_into(
+            &mut live_a,
+            &l,
+            &inputs,
+            b,
+            cfg.rerank_factor,
+            &mut rng_a,
+            &mut scratch,
+            &mut per_sample,
+            &mut outs,
+        );
+        assert_eq!(stats.hash_invocations, 1, "one hashing pass per batch");
+
+        // Reference: per-sample hash + select through the same trait.
+        let mut total = 0u64;
+        for (s, x) in xs.iter().enumerate() {
+            let mut fps = Vec::new();
+            live_b.hash_query_fps(x, &mut fps);
+            let mut one = Vec::new();
+            let mut scored = Vec::new();
+            let extra = live_b.select_prehashed(
+                &l,
+                x,
+                &fps,
+                b,
+                cfg.rerank_factor,
+                &mut rng_b,
+                &mut scored,
+                &mut one,
+            );
+            let hash = (cfg.k * cfg.l * 21) as u64;
+            assert_eq!(one, outs[s], "sample {s} active set");
+            assert_eq!(per_sample[s], hash + extra, "sample {s} attribution");
+            total += hash + extra;
+        }
+        assert_eq!(stats.selection_mults, total);
+    }
+
+    #[test]
+    fn frozen_view_matches_frozen_query() {
+        let l = layer(16, 120, 11);
+        let cfg = LshConfig { k: 6, l: 5, ..Default::default() };
+        let mut rng = Pcg64::seeded(12);
+        let live = LayerTables::build(&l.w, cfg, &mut rng);
+        let frozen = FrozenLayerTables::freeze(&live);
+        let xs = queries(5, 16);
+        let inputs: Vec<LayerInput> = xs.iter().map(|x| LayerInput::Dense(x)).collect();
+        let b = budget(120, 0.1);
+
+        let mut scratch_view = FrozenQueryScratch::new();
+        let mut view = FrozenTableView { tables: &frozen, scratch: &mut scratch_view };
+        let mut scratch = BatchSelectScratch::default();
+        let mut per_sample = vec![0u64; 5];
+        let mut outs: Vec<Vec<u32>> = vec![Vec::new(); 5];
+        let mut rng_unused = Pcg64::seeded(0);
+        select_batch_into(
+            &mut view,
+            &l,
+            &inputs,
+            b,
+            0,
+            &mut rng_unused,
+            &mut scratch,
+            &mut per_sample,
+            &mut outs,
+        );
+
+        let mut scratch_q = FrozenQueryScratch::new();
+        for (s, x) in xs.iter().enumerate() {
+            let mut one = Vec::new();
+            let hash = frozen.query(x, b, &mut scratch_q, &mut one);
+            assert_eq!(one, outs[s], "sample {s} must match the one-shot frozen query");
+            assert_eq!(per_sample[s], hash, "sample {s} hashing attribution");
+        }
+    }
+
+    #[test]
+    fn layer_plan_union_is_first_touch_order() {
+        let mut lp = LayerPlan::default();
+        lp.actives = vec![vec![5, 1, 9], vec![1, 7, 5], vec![2]];
+        lp.refresh_union(10, 3);
+        assert_eq!(lp.union(), &[5, 1, 9, 7, 2]);
+        // Recomputing with fewer samples shrinks the union.
+        lp.refresh_union(10, 1);
+        assert_eq!(lp.union(), &[5, 1, 9]);
+    }
+
+    #[test]
+    fn executor_matches_per_sample_frozen_inference() {
+        // Two hidden layers + dense output; the fused executor must equal
+        // a hand-rolled per-sample pass over the same frozen stacks.
+        let mut rng = Pcg64::seeded(21);
+        let l0 = layer(12, 80, 22);
+        let l1 = layer(80, 60, 23);
+        let out = layer(60, 4, 24);
+        let cfg = LshConfig::default();
+        let t0 = FrozenLayerTables::freeze(&LayerTables::build(&l0.w, cfg, &mut rng));
+        let t1 = FrozenLayerTables::freeze(&LayerTables::build(&l1.w, cfg, &mut rng));
+        let layers = [l0, l1, out];
+        let sparsity = 0.2;
+        let xs = queries(4, 12);
+        let xrefs: Vec<&[f32]> = xs.iter().map(|x| x.as_slice()).collect();
+
+        let mut exec = BatchExecutor::new();
+        let mut scratches = [FrozenQueryScratch::new(), FrozenQueryScratch::new()];
+        {
+            let mut it = scratches.iter_mut();
+            let mut views = vec![
+                FrozenTableView { tables: &t0, scratch: it.next().unwrap() },
+                FrozenTableView { tables: &t1, scratch: it.next().unwrap() },
+            ];
+            let mut rng_unused = Pcg64::seeded(0);
+            exec.forward_batch(&layers, &mut views, sparsity, 0, &xrefs, &mut rng_unused);
+        }
+        assert_eq!(exec.last.hash_invocations, 2, "one invocation per hidden layer");
+        assert!(exec.last.total_active >= exec.last.union_active);
+
+        let mut scratch = FrozenQueryScratch::new();
+        for (s, x) in xs.iter().enumerate() {
+            let mut active = Vec::new();
+            let mut a0 = SparseVec::new();
+            let mut a1 = SparseVec::new();
+            let mut logits = Vec::new();
+            let mut mults = MultCounters::default();
+            mults.selection +=
+                t0.query(x, budget(80, sparsity), &mut scratch, &mut active);
+            mults.forward += layers[0].forward_sparse(LayerInput::Dense(x), &active, &mut a0);
+            let mut q = vec![0.0f32; 80];
+            densify_into(LayerInput::Sparse(&a0), &mut q);
+            mults.selection +=
+                t1.query(&q, budget(60, sparsity), &mut scratch, &mut active);
+            mults.forward +=
+                layers[1].forward_sparse(LayerInput::Sparse(&a0), &active, &mut a1);
+            mults.forward += layers[2].forward_all(LayerInput::Sparse(&a1), &mut logits);
+
+            assert_eq!(exec.logits[s], logits, "sample {s} logits");
+            assert_eq!(exec.acts[1][s].idx, a1.idx, "sample {s} layer-1 active set");
+            assert_eq!(exec.sample_mults[s].total(), mults.total(), "sample {s} mults");
+        }
+    }
+}

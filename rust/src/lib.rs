@@ -17,6 +17,7 @@
 
 pub mod coordinator;
 pub mod data;
+pub mod exec;
 pub mod lsh;
 pub mod nn;
 pub mod optim;
@@ -32,6 +33,7 @@ pub mod util;
 /// Convenience re-exports for examples and downstream users.
 pub mod prelude {
     pub use crate::data::{Benchmark, Dataset};
+    pub use crate::exec::{BatchExecutor, SparseBatchPlan, TableView};
     pub use crate::lsh::{LayerTables, LshConfig};
     pub use crate::nn::{Activation, Network, NetworkConfig};
     pub use crate::optim::{OptimConfig, OptimizerKind};

@@ -98,6 +98,38 @@ impl AlshMips {
         out.extend(q.iter().map(|v| v * inv));
         out.push(0.0);
     }
+
+    /// One-pass batched query hashing for the shared batched execution
+    /// core: embed every query of the batch (rows of `q_plane`, each
+    /// `dim` wide) into `embed_plane` (reused scratch, `bsz × (dim+1)`),
+    /// then sweep the K·L projection rows once over all samples
+    /// ([`SrpHash::hash_batch`]). `out` receives `bsz × L` fingerprints,
+    /// row-major, bit-for-bit identical to per-sample
+    /// [`LshFamily::hash_query`].
+    pub fn hash_queries_batch(
+        &self,
+        q_plane: &[f32],
+        bsz: usize,
+        embed_plane: &mut Vec<f32>,
+        out: &mut [u32],
+    ) {
+        debug_assert_eq!(q_plane.len(), bsz * self.dim);
+        let d = self.dim;
+        let ed = d + 1;
+        embed_plane.clear();
+        embed_plane.resize(bsz * ed, 0.0);
+        for s in 0..bsz {
+            let q = &q_plane[s * d..(s + 1) * d];
+            let e = &mut embed_plane[s * ed..(s + 1) * ed];
+            let n = norm(q);
+            let inv = if n > 0.0 { 1.0 / n } else { 0.0 };
+            for (ev, qv) in e[..d].iter_mut().zip(q) {
+                *ev = qv * inv;
+            }
+            e[d] = 0.0;
+        }
+        self.srp.hash_batch(embed_plane, bsz, out);
+    }
 }
 
 impl LshFamily for AlshMips {
@@ -223,6 +255,21 @@ mod tests {
             coll[0] < coll[1] && coll[1] < coll[2],
             "collision counts should increase with inner product: {coll:?}"
         );
+    }
+
+    #[test]
+    fn batched_query_hashing_matches_per_query() {
+        let mut rng = Pcg64::seeded(11);
+        let f = AlshMips::new(12, 5, 4, 1.5, &mut rng);
+        let bsz = 6;
+        let plane: Vec<f32> = (0..bsz * 12).map(|_| rng.gaussian()).collect();
+        let mut embed = Vec::new();
+        let mut out = vec![0u32; bsz * f.l()];
+        f.hash_queries_batch(&plane, bsz, &mut embed, &mut out);
+        for s in 0..bsz {
+            let q = &plane[s * 12..(s + 1) * 12];
+            assert_eq!(&out[s * f.l()..(s + 1) * f.l()], f.query_fingerprints(q).as_slice());
+        }
     }
 
     #[test]

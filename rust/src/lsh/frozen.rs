@@ -50,6 +50,10 @@ pub struct FrozenQueryScratch {
     candidates: Vec<u32>,
     probe_scratch: Vec<u32>,
     gens: Vec<ProbeGen>,
+    /// Batched-hashing scratch (ALSH query embeddings, `B × (dim+1)`) —
+    /// used by the shared batched execution core (`exec`), which hashes a
+    /// whole micro-batch through this scratch in one pass.
+    pub(crate) embed_plane: Vec<f32>,
 }
 
 impl FrozenQueryScratch {
@@ -142,17 +146,43 @@ impl FrozenLayerTables {
             return self.hash_mults();
         }
         let mut rng = self.derived_rng(&scratch.fps);
-        // Same collect + counting-select core as the training-time
-        // `LayerTables::query_prehashed` — one implementation, so training
-        // and serving can never disagree on the ranking algorithm.
+        // Reclaim the fps buffer so probe_prehashed can borrow the rest of
+        // the scratch mutably alongside it.
+        let fps = std::mem::take(&mut scratch.fps);
+        self.probe_prehashed(&fps, budget, scratch, &mut rng, out);
+        scratch.fps = fps;
+        self.hash_mults()
+    }
+
+    /// Probe + rank a query whose fingerprints were already computed (the
+    /// shared batched execution core hashes whole micro-batches in one
+    /// pass, then probes per sample through this). Same collect +
+    /// counting-select core as the training-time
+    /// [`LayerTables::query_prehashed`] — one implementation, so training
+    /// and serving can never disagree on the ranking algorithm — followed
+    /// by the deterministic empty-result fallback (rare hash miss on small
+    /// layers; the RNG must be the fingerprint-derived one so the fallback
+    /// stays worker-order independent).
+    pub(crate) fn probe_prehashed(
+        &self,
+        fps: &[u32],
+        budget: usize,
+        scratch: &mut FrozenQueryScratch,
+        rng: &mut Pcg64,
+        out: &mut Vec<u32>,
+    ) {
+        out.clear();
+        if budget == 0 || self.n_nodes == 0 {
+            return;
+        }
         let FrozenQueryScratch {
             stamp,
             counts,
             query_epoch,
-            fps,
             candidates,
             probe_scratch,
             gens,
+            ..
         } = scratch;
         probe_and_rank(ProbeScratch {
             cfg: self.cfg,
@@ -166,21 +196,18 @@ impl FrozenLayerTables {
             gens,
             probe_scratch,
             candidates,
-            rng: &mut rng,
-            out,
+            rng: &mut *rng,
+            out: &mut *out,
         });
         if out.is_empty() {
-            // Hash miss (rare, small layers): deterministic fallback so the
-            // forward pass always has nodes to fire — mirrors the training
-            // selector's guard but stays worker-order independent.
             out.extend(rng.sample_indices(self.n_nodes, budget.min(4)));
         }
-        self.hash_mults()
     }
 
-    /// Private per-query RNG: fingerprint-derived, so identical queries get
-    /// identical sampling decisions on every worker.
-    fn derived_rng(&self, fps: &[u32]) -> Pcg64 {
+    /// Per-query RNG: fingerprint-derived, so identical queries get
+    /// identical sampling decisions on every worker (crate-visible for the
+    /// shared batched execution core's frozen backend).
+    pub(crate) fn derived_rng(&self, fps: &[u32]) -> Pcg64 {
         let mut acc = 0x5EED_F0E1_7AB1_E5u64;
         for &fp in fps {
             acc ^= fp as u64;

@@ -65,6 +65,9 @@ pub struct LayerTables {
     candidates: Vec<u32>,
     probe_scratch: Vec<u32>,
     gens: Vec<ProbeGen>,
+    /// Scratch for the batched hashing pass (ALSH query embeddings of a
+    /// whole minibatch, `B × (dim+1)`).
+    embed_scratch: Vec<f32>,
     /// Count of full rebuilds (norm overflow) — surfaced in metrics.
     pub rebuilds: usize,
     /// Hashes computed since construction (K·L per hashed vector) — the
@@ -90,6 +93,7 @@ impl LayerTables {
             candidates: Vec::new(),
             probe_scratch: Vec::new(),
             gens: Vec::new(),
+            embed_scratch: Vec::new(),
             rebuilds: 0,
             hash_ops: 0,
         };
@@ -152,6 +156,18 @@ impl LayerTables {
         fps.resize(self.cfg.l, 0);
         self.family.hash_query(q, fps);
         self.hash_ops += (self.cfg.k * self.cfg.l) as u64;
+    }
+
+    /// One-pass fingerprint hashing for a whole minibatch of densified
+    /// queries (rows of `q_plane`): all `bsz × L` fingerprints land in
+    /// `fps_plane` (row-major), bit-for-bit identical to per-sample
+    /// [`LayerTables::hash_query_fps`], while the K·L projection rows are
+    /// traversed once per batch instead of once per sample. This is the
+    /// training-side backend of `exec::TableView::hash_batch`.
+    pub fn hash_query_batch(&mut self, q_plane: &[f32], bsz: usize, fps_plane: &mut [u32]) {
+        debug_assert_eq!(fps_plane.len(), bsz * self.cfg.l);
+        self.family.hash_queries_batch(q_plane, bsz, &mut self.embed_scratch, fps_plane);
+        self.hash_ops += (bsz * self.cfg.k * self.cfg.l) as u64;
     }
 
     /// Probe + rank for a query whose fingerprints were already computed.
@@ -465,6 +481,25 @@ mod tests {
         lt_b.query_prehashed(&fps, 15, &mut rng_b, &mut out_b);
         assert_eq!(out_a, out_b, "split query path must match the one-shot path");
         assert_eq!(lt_a.hash_ops, lt_b.hash_ops);
+    }
+
+    #[test]
+    fn batched_hash_matches_per_sample_and_accounts_hash_ops() {
+        let w = weights(80, 12, 41);
+        let mut rng = Pcg64::seeded(42);
+        let cfg = LshConfig { k: 5, l: 4, ..Default::default() };
+        let mut lt = LayerTables::build(&w, cfg, &mut rng);
+        let bsz = 5;
+        let plane: Vec<f32> = (0..bsz * 12).map(|i| ((i as f32) * 0.37).sin()).collect();
+        let base = lt.hash_ops;
+        let mut fps_plane = vec![0u32; bsz * cfg.l];
+        lt.hash_query_batch(&plane, bsz, &mut fps_plane);
+        assert_eq!(lt.hash_ops, base + (bsz * cfg.k * cfg.l) as u64);
+        let mut fps = Vec::new();
+        for s in 0..bsz {
+            lt.hash_query_fps(&plane[s * 12..(s + 1) * 12], &mut fps);
+            assert_eq!(&fps_plane[s * cfg.l..(s + 1) * cfg.l], fps.as_slice(), "sample {s}");
+        }
     }
 
     #[test]

@@ -41,6 +41,32 @@ impl SrpHash {
         fp
     }
 
+    /// One-pass batched fingerprinting: hash `bsz` vectors (rows of
+    /// `x_plane`, each `dim` wide) into `out` (`bsz × L`, row-major —
+    /// `out[s*L + j]` is sample `s`'s table-`j` fingerprint). The loop is
+    /// projection-row-outer / sample-inner, so each of the K·L gaussian
+    /// directions is loaded from memory once per *batch* instead of once
+    /// per vector — the cache-amortization that makes the shared batched
+    /// execution core's single hashing pass pay. Bit-for-bit identical to
+    /// calling [`SrpHash::fingerprint`] per sample (same dots, same bit
+    /// assembly order).
+    pub fn hash_batch(&self, x_plane: &[f32], bsz: usize, out: &mut [u32]) {
+        debug_assert_eq!(x_plane.len(), bsz * self.dim);
+        debug_assert_eq!(out.len(), bsz * self.l);
+        out.iter_mut().for_each(|o| *o = 0);
+        for j in 0..self.l {
+            for i in 0..self.k {
+                let row = self.projections.row(j * self.k + i);
+                for s in 0..bsz {
+                    let x = &x_plane[s * self.dim..(s + 1) * self.dim];
+                    let bit = (dot(row, x) >= 0.0) as u32;
+                    let fp = &mut out[s * self.l + j];
+                    *fp = (*fp << 1) | bit;
+                }
+            }
+        }
+    }
+
     /// Access the raw projection directions (used by the AOT simhash
     /// artifact so python and rust hash identically).
     pub fn projections(&self) -> &Matrix {
@@ -167,5 +193,21 @@ mod tests {
     #[should_panic(expected = "K must be")]
     fn k_over_32_rejected() {
         SrpHash::new(4, 33, 1, &mut Pcg64::seeded(0));
+    }
+
+    #[test]
+    fn hash_batch_matches_per_sample_fingerprints() {
+        let f = family();
+        let mut rng = Pcg64::seeded(6);
+        let bsz = 7;
+        let plane: Vec<f32> = (0..bsz * 16).map(|_| rng.gaussian()).collect();
+        let mut out = vec![0u32; bsz * f.l()];
+        f.hash_batch(&plane, bsz, &mut out);
+        for s in 0..bsz {
+            let x = &plane[s * 16..(s + 1) * 16];
+            for j in 0..f.l() {
+                assert_eq!(out[s * f.l() + j], f.fingerprint(x, j), "sample {s} table {j}");
+            }
+        }
     }
 }

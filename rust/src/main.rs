@@ -108,7 +108,7 @@ USAGE: hashdl <subcommand> [flags]
   serve-bench [--dataset <..>] [--model <snap.bin>] [--requests <N>]
               [--workers 1,4] [--modes dense,sparse] [--batch-cap <B>]
               [--deadline-us <t>] [--sparsity <f>] [--arrival-rate <r>]
-              [--train-serve] [--out BENCH_serve.json]
+              [--fused-compare] [--train-serve] [--out BENCH_serve.json]
   serve-fleet [--config fleet.conf | --models <N>] [--dataset <..>]
               [--workers w] [--requests <N>] [--canary <f>]
               [--out BENCH_router.json]   (router + per-model pools)
@@ -598,6 +598,10 @@ fn cmd_serve_bench(rest: Vec<String>) -> i32 {
         .opt("queue-cap", "1024", "bounded request-queue capacity")
         .opt("modes", "dense,sparse", "comma-separated modes to run")
         .opt("arrival-rate", "0", "open-loop Poisson arrivals per second (0 = closed loop)")
+        .flag(
+            "fused-compare",
+            "also run the fused-vs-per-request scenario (counted hash invocations)",
+        )
         .flag("train-serve", "also run the train-while-serve scenario (publish during traffic)")
         .opt("publish-every-ms", "50", "train-serve: gap between background publications")
         .opt("publishes", "8", "train-serve: background publications to attempt")
@@ -746,6 +750,26 @@ fn cmd_serve_bench(rest: Vec<String>) -> i32 {
             throughput_scaling(&results, "sparse"),
         );
     }
+    // Fused-vs-per-request scenario: the same request stream executed
+    // request-by-request and fused through the batched execution core,
+    // hash invocations counted (not timed) and outputs compared bitwise.
+    let fused_compare = a.has("fused-compare").then(|| {
+        let batch = a.parse_or("batch-cap", 32usize).max(1);
+        let fc = hashdl::serve::run_fused_compare(&engine, &stream.xs, n_requests, batch);
+        println!(
+            "fused-compare b={}: {:.2} hash invocations/request fused vs {:.2} per-request \
+             ({} hidden layers), mults/request {:.0} vs {:.0}, sharing {:.2}x, bitwise_equal {}",
+            fc.batch,
+            fc.fused.hash_invocations_per_request,
+            fc.per_request.hash_invocations_per_request,
+            fc.hidden_layers,
+            fc.fused.mults_per_request,
+            fc.per_request.mults_per_request,
+            fc.sharing_factor,
+            fc.bitwise_equal,
+        );
+        fc
+    });
     // Train-while-serve scenario: the same closed-loop workload with a
     // background thread publishing fresh model versions mid-traffic.
     let train_serve = train_serve_enabled.then(|| {
@@ -794,6 +818,7 @@ fn cmd_serve_bench(rest: Vec<String>) -> i32 {
         dense_per_req,
         &results,
         train_serve.as_ref(),
+        fused_compare.as_ref(),
     ) {
         Ok(()) => println!("wrote {}", out.display()),
         Err(e) => {

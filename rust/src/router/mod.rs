@@ -36,7 +36,7 @@ pub mod registry;
 pub mod stats;
 
 use crate::serve::pool::{Response, SubmitOutcome};
-use policy::{canary_assignment, RoutePolicy};
+use policy::{canary_assignment, shadow_assignment, RoutePolicy};
 use registry::ModelRegistry;
 use stats::{ModelStatus, RouterStats, ShadowStats};
 use std::collections::HashMap;
@@ -276,8 +276,15 @@ impl Router {
                 };
                 self.submit(target, req.id, req.x, false, reply.clone())
             }
-            RoutePolicy::Shadow { primary, shadow } => {
+            RoutePolicy::Shadow { primary, shadow, shadow_fraction } => {
                 if req.model != *primary {
+                    return self.submit(&req.model, req.id, req.x, false, reply.clone());
+                }
+                // Deterministic shadow sampling: unsampled ids take the
+                // plain primary path — no pending entry, no logits, no
+                // second submission — so a permanent small-fraction shadow
+                // costs only its fraction of extra compute.
+                if !shadow_assignment(req.id, *shadow_fraction) {
                     return self.submit(&req.model, req.id, req.x, false, reply.clone());
                 }
                 let (primary, shadow) = (primary.clone(), shadow.clone());
@@ -304,6 +311,10 @@ impl Router {
         req: RoutedRequest,
         reply: &Sender<Response>,
     ) -> RouteOutcome {
+        // One sampled request = one tally entry, counted at admission
+        // (before either submission can fail) so `sampled` is the exact
+        // denominator for the mirror's shed/compare rates.
+        self.shadow.tally.lock().expect("shadow tally poisoned").sampled += 1;
         let key = self.shadow.next_key.fetch_add(1, Ordering::Relaxed);
         {
             let mut pending = self.shadow.pending.lock().expect("shadow pending poisoned");
@@ -514,6 +525,7 @@ mod tests {
         router.set_policy(RoutePolicy::Shadow {
             primary: "prim".into(),
             shadow: "shad".into(),
+            shadow_fraction: 1.0,
         });
         let (tx, rx) = channel();
         let n = 50u64;
@@ -526,10 +538,50 @@ mod tests {
         }
         reg.shutdown_all();
         let tally = router.shutdown();
+        assert_eq!(tally.sampled, n, "fraction 1.0 mirrors every request");
         assert_eq!(tally.compared, n, "every pair compared");
         assert_eq!(tally.pred_mismatches, 0);
         assert_eq!(tally.max_abs_logit_diff, 0.0, "identical snapshots diverge by nothing");
         assert_eq!(tally.shadow_shed, 0);
         assert_eq!(tally.unpaired, 0);
+    }
+
+    #[test]
+    fn sampled_shadow_mirrors_only_the_deterministic_subset() {
+        use crate::router::policy::shadow_assignment;
+
+        let reg = Arc::new(ModelRegistry::new());
+        reg.register_frozen("prim", parts(9), PoolConfig::default()).unwrap();
+        reg.register_frozen("shad", parts(9), PoolConfig::default()).unwrap();
+        let router = Router::new(Arc::clone(&reg));
+        let fraction = 0.3;
+        router.set_policy(RoutePolicy::Shadow {
+            primary: "prim".into(),
+            shadow: "shad".into(),
+            shadow_fraction: fraction,
+        });
+        let (tx, rx) = channel();
+        let n = 200u64;
+        for id in 0..n {
+            let out = router.route(RoutedRequest { id, model: "prim".into(), x: x(id) }, &tx);
+            assert_eq!(out, RouteOutcome::Enqueued { model: "prim".into() });
+            // Every client gets its primary answer, sampled or not.
+            assert_eq!(rx.recv().expect("primary answer").id, id);
+        }
+        let expected: u64 = (0..n).filter(|&id| shadow_assignment(id, fraction)).count() as u64;
+        let final_stats = reg.shutdown_all();
+        let tally = router.shutdown();
+        assert_eq!(tally.sampled, expected, "sample must be the pure id hash");
+        assert_eq!(tally.compared, expected, "only sampled requests are compared");
+        assert!(expected < n, "a 30% sample must not mirror everything");
+        assert_eq!(tally.pred_mismatches, 0);
+        assert_eq!(tally.unpaired, 0);
+        // The shadow pool only saw the sampled subset.
+        let shad_served = final_stats
+            .iter()
+            .find(|(name, _)| name == "shad")
+            .map(|(_, s)| s.requests)
+            .expect("shadow pool stats");
+        assert_eq!(shad_served, expected);
     }
 }

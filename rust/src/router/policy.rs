@@ -12,10 +12,16 @@
 //!   router, every restart, every replay — so a bad canary's traffic can
 //!   be re-run bit-for-bit against the primary after the fact (the same
 //!   replayability contract `Response.version` gives publications).
-//! * **Shadow** — requests addressed to `primary` are served by it *and*
-//!   duplicated to `shadow`; the shadow's responses are discarded after
-//!   divergence (argmax mismatch, max |Δlogit|) is recorded. Zero client
-//!   impact, full-traffic validation of a new snapshot.
+//! * **Shadow** — a deterministic `shadow_fraction` of requests addressed
+//!   to `primary` are served by it *and* duplicated to `shadow`; the
+//!   shadow's responses are discarded after divergence (argmax mismatch,
+//!   max |Δlogit|) is recorded. Zero client impact. The sample is the
+//!   same SplitMix64 id-hash as the canary split (under its own salt, so
+//!   the two assignments are independent): at 1.0 every request is
+//!   mirrored (full-traffic validation window), at e.g. 0.05 a permanent
+//!   always-on shadow costs 5% extra compute — affordable for heavy
+//!   fleets — while the mirrored subset is a pure function of the ids,
+//!   so replays reproduce it exactly.
 //!
 //! Requests naming any *other* registered model are always routed exactly,
 //! whatever the policy — canary/shadow scope to their primary only.
@@ -26,6 +32,10 @@ use crate::util::rng::splitmix64;
 /// any other id-derived randomization in the system.
 const CANARY_SALT: u64 = 0xCA4A_97E5_11D5_0B6C;
 
+/// Salt for the shadow sample — distinct from [`CANARY_SALT`] so whether
+/// a request is mirrored is independent of whether it would canary.
+const SHADOW_SALT: u64 = 0x5EAD_0F0E_6B2C_91D3;
+
 /// How the router resolves model names. See the module docs.
 #[derive(Clone, Debug, PartialEq)]
 pub enum RoutePolicy {
@@ -34,9 +44,10 @@ pub enum RoutePolicy {
     /// Split traffic addressed to `primary`: a deterministic
     /// `canary_fraction` of request ids go to `canary` instead.
     Canary { primary: String, canary: String, canary_fraction: f64 },
-    /// Serve traffic addressed to `primary` from it, and duplicate every
-    /// such request to `shadow`, recording divergence.
-    Shadow { primary: String, shadow: String },
+    /// Serve traffic addressed to `primary` from it, and duplicate a
+    /// deterministic `shadow_fraction` of those requests to `shadow`,
+    /// recording divergence (1.0 = mirror everything).
+    Shadow { primary: String, shadow: String, shadow_fraction: f64 },
 }
 
 impl RoutePolicy {
@@ -50,25 +61,36 @@ impl RoutePolicy {
     }
 }
 
-/// Deterministic canary assignment: `true` = route id to the canary.
-///
-/// The id is mixed through SplitMix64 and the top 53 bits compared
-/// against `fraction` — a pure function, so replays and multi-router
-/// deployments agree, and over any large id set the realized split
-/// concentrates tightly around `fraction` (binomial: ±0.3% at 10k
-/// requests for a 10% canary).
-pub fn canary_assignment(id: u64, fraction: f64) -> bool {
+/// Deterministic salted id-hash assignment: `true` = the id is in the
+/// `fraction`-sized sample. The id is mixed through SplitMix64 under
+/// `salt` and the top 53 bits compared against `fraction` — a pure
+/// function, so replays and multi-router deployments agree, and over any
+/// large id set the realized split concentrates tightly around
+/// `fraction` (binomial: ±0.3% at 10k requests for a 10% sample).
+fn hash_assignment(id: u64, fraction: f64, salt: u64) -> bool {
     if fraction <= 0.0 {
         return false;
     }
     if fraction >= 1.0 {
         return true;
     }
-    let mut state = id ^ CANARY_SALT;
+    let mut state = id ^ salt;
     let h = splitmix64(&mut state);
     // Top 53 bits → uniform in [0, 1) at full f64 precision.
     let u = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
     u < fraction
+}
+
+/// Deterministic canary assignment: `true` = route id to the canary.
+pub fn canary_assignment(id: u64, fraction: f64) -> bool {
+    hash_assignment(id, fraction, CANARY_SALT)
+}
+
+/// Deterministic shadow-sample assignment: `true` = mirror this id to the
+/// shadow model. Salted independently of [`canary_assignment`], so the
+/// mirrored subset is uncorrelated with any canary split on the same ids.
+pub fn shadow_assignment(id: u64, fraction: f64) -> bool {
+    hash_assignment(id, fraction, SHADOW_SALT)
 }
 
 #[cfg(test)]
@@ -125,7 +147,34 @@ mod tests {
             canary_fraction: 0.1,
         };
         assert_eq!(c.name(), "canary");
-        let s = RoutePolicy::Shadow { primary: "a".into(), shadow: "b".into() };
+        let s = RoutePolicy::Shadow {
+            primary: "a".into(),
+            shadow: "b".into(),
+            shadow_fraction: 1.0,
+        };
         assert_eq!(s.name(), "shadow");
+    }
+
+    #[test]
+    fn shadow_sample_is_deterministic_and_independent_of_canary() {
+        let n = 100_000u64;
+        let hits = (0..n).filter(|&id| shadow_assignment(id, 0.1)).count() as f64;
+        assert!(
+            (hits / n as f64 - 0.1).abs() < 0.005,
+            "realized shadow fraction {} should concentrate at 10%",
+            hits / n as f64
+        );
+        for id in 0..1000u64 {
+            assert_eq!(shadow_assignment(id, 0.3), shadow_assignment(id, 0.3));
+        }
+        // Independence: among canaried ids, the shadow rate stays ~10%
+        // (identical salts would make the two samples nest perfectly).
+        let canaried: Vec<u64> = (0..n).filter(|&id| canary_assignment(id, 0.5)).collect();
+        let both = canaried.iter().filter(|&&id| shadow_assignment(id, 0.1)).count() as f64;
+        let rate = both / canaried.len() as f64;
+        assert!((rate - 0.1).abs() < 0.01, "shadow|canary rate {rate} should stay ~10%");
+        // Edge fractions are total.
+        assert!(!shadow_assignment(7, 0.0));
+        assert!(shadow_assignment(7, 1.0));
     }
 }

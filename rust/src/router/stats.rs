@@ -109,6 +109,10 @@ impl ModelStatus {
 /// Shadow-mode divergence tally (see `router::shadow`).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct ShadowStats {
+    /// Requests the deterministic shadow sample selected for mirroring
+    /// (`shadow_fraction` of primary traffic; unsampled requests take the
+    /// plain primary path and appear nowhere else in this tally).
+    pub sampled: u64,
     /// Primary/shadow response pairs compared.
     pub compared: u64,
     /// Pairs whose argmax predictions disagreed.
@@ -134,8 +138,10 @@ impl ShadowStats {
 
     pub fn to_json(&self) -> String {
         format!(
-            "{{\"compared\": {}, \"pred_mismatches\": {}, \"mismatch_rate\": {:.4}, \
-             \"max_abs_logit_diff\": {:.6}, \"shadow_shed\": {}, \"unpaired\": {}}}",
+            "{{\"sampled\": {}, \"compared\": {}, \"pred_mismatches\": {}, \
+             \"mismatch_rate\": {:.4}, \"max_abs_logit_diff\": {:.6}, \"shadow_shed\": {}, \
+             \"unpaired\": {}}}",
+            self.sampled,
             self.compared,
             self.pred_mismatches,
             self.mismatch_rate(),

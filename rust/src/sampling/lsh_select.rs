@@ -2,78 +2,40 @@
 //! with the highest expected activations, in time sub-linear in the layer
 //! width. Maintains the tables across gradient updates (rehash touched
 //! rows; periodic full rebuild controls drift and norm growth).
+//!
+//! Selection itself — densify, one-pass fingerprint hashing, probe +
+//! rank + §5.4 re-rank, empty-result fallback — lives in the shared
+//! batched execution core (`crate::exec`), which serving uses through
+//! the same [`crate::exec::TableView`] trait. This module only owns the
+//! training-time *lifecycle*: table construction, post-update rehash of
+//! touched rows (batch-amortized over the union) and the epoch rebuild
+//! cadence.
 
+use crate::exec::{densify_into, select_batch_into, BatchSelectScratch, TableView};
 use crate::lsh::layered::{LayerTables, LshConfig};
 use crate::nn::layer::Layer;
 use crate::nn::sparse::LayerInput;
-use crate::sampling::{budget, rerank_exact, NodeSelector, SelectionCost};
+use crate::sampling::{budget, NodeSelector, SelectionCost};
 use crate::util::rng::Pcg64;
 
 pub struct LshSelector {
     tables: LayerTables,
     sparsity: f32,
     rebuild_every_epochs: usize,
-    /// Dense scratch for sparse-input queries (hash functions need the
+    /// Dense scratch for single-query selection (hash functions need the
     /// densified previous-layer activation vector).
     scratch_q: Vec<f32>,
-    /// Batched-selection scratch: densified queries for the whole
-    /// minibatch (`B × n_in`, row-major) and their fingerprints
-    /// (`B × L`), reused across batches.
-    q_plane: Vec<f32>,
-    fps_plane: Vec<u32>,
     fps_buf: Vec<u32>,
+    /// Re-rank scoring buffer (shared core writes into it).
+    scored: Vec<(f32, u32)>,
+    /// Batched-selection buffers (densified query plane + fingerprint
+    /// plane), reused across batches by the shared core.
+    batch_scratch: BatchSelectScratch,
+    /// Per-sample selection-cost attribution from the shared core (only
+    /// the sum feeds `SelectionCost`; serving reads the per-sample values).
+    per_sample_mults: Vec<u64>,
     /// Updates since the last rehash-triggered rebuild (diagnostics).
     pub updates_since_rebuild: u64,
-}
-
-/// Densify a layer input into a pre-sized buffer of length `n_in`.
-fn densify_into(input: LayerInput<'_>, buf: &mut [f32]) {
-    match input {
-        LayerInput::Dense(x) => buf.copy_from_slice(x),
-        LayerInput::Sparse(s) => {
-            buf.iter_mut().for_each(|v| *v = 0.0);
-            for (i, v) in s.iter() {
-                buf[i as usize] = v;
-            }
-        }
-    }
-}
-
-/// Probe + rank for one pre-hashed query: multiprobe collection through
-/// [`LayerTables::query_prehashed`], optional §5.4 cheap re-rank, and the
-/// empty-result fallback. Shared verbatim by the per-example and batched
-/// selection paths so both produce identical active sets. Returns the
-/// extra (re-rank) multiplications.
-#[allow(clippy::too_many_arguments)]
-fn rank_candidates(
-    tables: &mut LayerTables,
-    layer: &Layer,
-    q: &[f32],
-    fps: &[u32],
-    b: usize,
-    cfg: LshConfig,
-    rng: &mut Pcg64,
-    out: &mut Vec<u32>,
-) -> u64 {
-    let mut extra_mults = 0u64;
-    if cfg.rerank_factor > 1 {
-        // Cheap re-ranking (§5.4): over-collect candidates, score them
-        // exactly, keep the best `b`. Trades |C|·d extra mults for a
-        // strictly better active set. Policy shared with the serving
-        // engine through `sampling::rerank_exact`.
-        tables.query_prehashed(fps, b * cfg.rerank_factor, rng, out);
-        let mut scored = Vec::new();
-        extra_mults += rerank_exact(layer, q, b, out, &mut scored);
-    } else {
-        tables.query_prehashed(fps, b, rng, out);
-    }
-    if out.is_empty() {
-        // Hash miss (rare, small layers): fall back to random nodes so
-        // training can proceed — the paper's tables always return
-        // *something* via multiprobe, but guard anyway.
-        out.extend(rng.sample_indices(layer.n_out(), b.min(4)));
-    }
-    extra_mults
 }
 
 impl LshSelector {
@@ -89,9 +51,10 @@ impl LshSelector {
             sparsity,
             rebuild_every_epochs: rebuild_every_epochs.max(1),
             scratch_q: vec![0.0; layer.n_in()],
-            q_plane: Vec::new(),
-            fps_plane: Vec::new(),
             fps_buf: Vec::new(),
+            scored: Vec::new(),
+            batch_scratch: BatchSelectScratch::default(),
+            per_sample_mults: Vec::new(),
             updates_since_rebuild: 0,
         }
     }
@@ -114,23 +77,33 @@ impl NodeSelector for LshSelector {
         // Hashing cost: K·L inner products of dimension (n_in + 1).
         let hash_mults = (cfg.k * cfg.l * (layer.n_in() + 1)) as u64;
         // Field-level split borrow: tables (mut) + scratch buffers.
-        let Self { tables, scratch_q, fps_buf, .. } = self;
+        let Self { tables, scratch_q, fps_buf, scored, .. } = self;
         // resize is a steady-state no-op; densify_into overwrites every cell.
         scratch_q.resize(layer.n_in(), 0.0);
         densify_into(input, scratch_q);
         tables.hash_query_fps(scratch_q, fps_buf);
-        let extra_mults = rank_candidates(tables, layer, scratch_q, fps_buf, b, cfg, rng, out);
+        let extra_mults = tables.select_prehashed(
+            layer,
+            scratch_q,
+            fps_buf,
+            b,
+            cfg.rerank_factor,
+            rng,
+            scored,
+            out,
+        );
         SelectionCost { selection_mults: hash_mults + extra_mults }
     }
 
-    /// Real batched selection: densify every query and hash all `B × L`
-    /// fingerprints in one pass over the projection data, then probe and
-    /// rank each sample reusing the tables' probe buffers (no per-sample
-    /// allocation). Produces exactly the same active sets as calling
-    /// [`LshSelector::select`] per sample — required by the batch-of-one
-    /// equivalence guarantee — while the *maintenance* hashing is
-    /// amortized separately by the trainer's once-per-batch
-    /// [`NodeSelector::post_update`] over the union of touched rows.
+    /// Batched selection through the shared execution core
+    /// ([`crate::exec::select_batch_into`]): all `B × L` fingerprints are
+    /// hashed in one pass over the projection data, then each sample is
+    /// probed and ranked over reused buffers. Produces exactly the same
+    /// active sets as calling [`LshSelector::select`] per sample —
+    /// required by the batch-of-one equivalence guarantee — while the
+    /// *maintenance* hashing is amortized separately by the trainer's
+    /// once-per-batch [`NodeSelector::post_update`] over the union of
+    /// touched rows.
     fn select_batch(
         &mut self,
         layer: &Layer,
@@ -140,30 +113,22 @@ impl NodeSelector for LshSelector {
     ) -> SelectionCost {
         debug_assert_eq!(inputs.len(), outs.len());
         let b = budget(layer.n_out(), self.sparsity);
-        let cfg = self.tables.config();
-        let n_in = layer.n_in();
-        let n = inputs.len();
-        let l = cfg.l;
-        let Self { tables, q_plane, fps_plane, fps_buf, .. } = self;
-        // Phase 1: densify + hash all fingerprints for the batch (resize
-        // reuses the buffer; densify_into overwrites every queried row).
-        q_plane.resize(n * n_in, 0.0);
-        for (s, input) in inputs.iter().enumerate() {
-            densify_into(*input, &mut q_plane[s * n_in..(s + 1) * n_in]);
+        let rerank_factor = self.tables.config().rerank_factor;
+        if self.per_sample_mults.len() < inputs.len() {
+            self.per_sample_mults.resize(inputs.len(), 0);
         }
-        fps_plane.clear();
-        for s in 0..n {
-            tables.hash_query_fps(&q_plane[s * n_in..(s + 1) * n_in], fps_buf);
-            fps_plane.extend_from_slice(fps_buf);
-        }
-        // Phase 2: probe + rank each sample over the shared scratch.
-        let mut selection_mults = (n * cfg.k * l * (n_in + 1)) as u64;
-        for (s, out) in outs.iter_mut().enumerate() {
-            let q = &q_plane[s * n_in..(s + 1) * n_in];
-            let fps = &fps_plane[s * l..(s + 1) * l];
-            selection_mults += rank_candidates(tables, layer, q, fps, b, cfg, rng, out);
-        }
-        SelectionCost { selection_mults }
+        let stats = select_batch_into(
+            &mut self.tables,
+            layer,
+            inputs,
+            b,
+            rerank_factor,
+            rng,
+            &mut self.batch_scratch,
+            &mut self.per_sample_mults[..inputs.len()],
+            outs,
+        );
+        SelectionCost { selection_mults: stats.selection_mults }
     }
 
     fn post_update(&mut self, layer: &Layer, touched: &[u32], rng: &mut Pcg64) {

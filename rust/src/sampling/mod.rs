@@ -204,9 +204,10 @@ pub fn budget(n: usize, sparsity: f32) -> usize {
     ((n as f32 * sparsity).round() as usize).clamp(1, n)
 }
 
-/// Cheap re-ranking (paper §5.4), shared by training-time selection
-/// ([`lsh_select`]) and the serving engine (`serve::engine`) so the
-/// operating point and cost accounting can never drift apart: score the
+/// Cheap re-ranking (paper §5.4), shared by training-time selection and
+/// the serving engine through the batched execution core's
+/// `exec::TableView` backends, so the operating point and cost
+/// accounting can never drift apart: score the
 /// over-collected `candidates` exactly against the densified query `q`,
 /// keep the best `budget`. Returns the extra multiplications
 /// (`|candidates| · n_in`); no-op (0) when the collection fits the budget.

@@ -19,6 +19,15 @@
 //!   within noise of the baseline — the headline claim of the `publish`
 //!   subsystem, asserted over real traffic.
 //!
+//! * **Fused vs per-request** ([`run_fused_compare`]): the batched
+//!   execution core's headline numbers, *counted, not timed* — the same
+//!   request stream executed request-by-request (batch of one: one
+//!   fingerprint hash invocation per request per hidden layer) and fused
+//!   in micro-batches (one invocation per layer per batch), with bitwise
+//!   output equality asserted and exact invocation / multiplication /
+//!   sharing counters reported. Deterministic: no pool, no threads, no
+//!   clocks in the counted quantities.
+//!
 //! * **route-bench** ([`run_route_bench`]): fleet scenarios through the
 //!   multi-model [`crate::router::Router`] — single-model baseline vs
 //!   2/4-model fleets under identical load, a deterministic canary split,
@@ -33,6 +42,7 @@
 use crate::lsh::frozen::FrozenLayerTables;
 use crate::lsh::layered::LayerTables;
 use crate::publish::{ModelParts, TablePublisher};
+use crate::serve::engine::InferenceWorkspace;
 use crate::router::policy::RoutePolicy;
 use crate::router::registry::ModelRegistry;
 use crate::router::stats::ModelStatus;
@@ -511,6 +521,7 @@ pub fn run_train_while_serve(
 /// entry per case, the headline derived ratios — sparse mult fraction vs
 /// dense and per-mode throughput scaling across worker counts — and, when
 /// the train-while-serve scenario ran, its baseline-vs-live comparison.
+#[allow(clippy::too_many_arguments)]
 pub fn write_bench_json(
     path: &Path,
     network: &str,
@@ -518,6 +529,7 @@ pub fn write_bench_json(
     dense_mults_per_request: u64,
     results: &[BenchResult],
     train_serve: Option<&TrainServeReport>,
+    fused_compare: Option<&FusedCompareReport>,
 ) -> io::Result<()> {
     let mut cases = String::new();
     for (i, r) in results.iter().enumerate() {
@@ -556,11 +568,26 @@ pub fn write_bench_json(
             case_json(&ts.live, dense_mults_per_request),
         ),
     };
+    let fc_section = match fused_compare {
+        None => String::new(),
+        Some(fc) => format!(
+            ",\n  \"fused_compare\": {{\n    \"requests\": {},\n    \"batch\": {},\n    \
+             \"hidden_layers\": {},\n    \"bitwise_equal\": {},\n    \
+             \"sharing_factor\": {:.3},\n    \"per_request\": {},\n    \"fused\": {}\n  }}",
+            fc.requests,
+            fc.batch,
+            fc.hidden_layers,
+            fc.bitwise_equal,
+            fc.sharing_factor,
+            fused_side_json(&fc.per_request),
+            fused_side_json(&fc.fused),
+        ),
+    };
     let json = format!(
         "{{\n  \"bench\": \"serve\",\n  \"network\": \"{network}\",\n  \
          \"sparsity\": {sparsity},\n  \"dense_mults_per_request\": {dense_mults_per_request},\n  \
          \"sparse_mult_fraction\": {sparse_frac:.4},\n  \"cases\": [\n{cases}\n  ],\n  \
-         \"scaling\": [\n{scaling}\n  ]{ts_section}\n}}\n"
+         \"scaling\": [\n{scaling}\n  ]{ts_section}{fc_section}\n}}\n"
     );
     std::fs::write(path, json)
 }
@@ -615,6 +642,152 @@ pub fn throughput_scaling(results: &[BenchResult], mode: &str) -> f64 {
         }
         _ => 1.0,
     }
+}
+
+/// One side of the fused-vs-per-request comparison.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FusedSideReport {
+    /// Total fingerprint hash invocations over the run.
+    pub hash_invocations: u64,
+    /// Mean invocations per request (`hidden_layers` for per-request
+    /// execution, `hidden_layers / batch` for fused).
+    pub hash_invocations_per_request: f64,
+    /// Total multiplications (selection + forward), exact counts.
+    pub total_mults: u64,
+    pub mults_per_request: f64,
+    pub wall_secs: f64,
+    pub requests_per_sec: f64,
+}
+
+/// Result of [`run_fused_compare`]: the same request stream executed
+/// per-request and fused, with the counted amortization and the bitwise
+/// equality verdict.
+#[derive(Clone, Copy, Debug)]
+pub struct FusedCompareReport {
+    pub requests: u64,
+    /// Micro-batch size the fused side used.
+    pub batch: usize,
+    pub hidden_layers: usize,
+    pub per_request: FusedSideReport,
+    pub fused: FusedSideReport,
+    /// Every prediction, logit vector and per-request mult count agreed
+    /// bit-for-bit between the two executions.
+    pub bitwise_equal: bool,
+    /// Mean over fused batches of Σ|active set| / Σ|union active set| —
+    /// how much co-batched requests overlap in the neurons they fire
+    /// (1.0 = no sharing).
+    pub sharing_factor: f64,
+}
+
+/// Execute `requests` requests (round-robin over `xs`) twice against the
+/// same engine: once request-by-request (batch of one — the per-request
+/// baseline, paying one fingerprint hash invocation per request per
+/// hidden layer) and once fused in micro-batches of `batch`. Both runs
+/// use direct engine calls — no pool, no threads — so every reported
+/// number except wall time is exact and deterministic.
+///
+/// Counting (invocations, mults, bitwise comparison) happens in untimed
+/// passes; the reported `wall_secs`/`requests_per_sec` come from separate
+/// timed passes that execute inference and nothing else, so neither
+/// side's timing carries bookkeeping overhead the other side skips.
+/// Asserts nothing itself; the report carries the bitwise-equality
+/// verdict for the caller/CI to pin.
+pub fn run_fused_compare(
+    engine: &SparseInferenceEngine,
+    xs: &[Vec<f32>],
+    requests: usize,
+    batch: usize,
+) -> FusedCompareReport {
+    assert!(!xs.is_empty(), "need at least one request vector");
+    let requests = requests.max(1);
+    let batch = batch.max(1);
+    let hidden_layers = engine.current().net.n_hidden();
+    let ids: Vec<usize> = (0..requests).collect();
+
+    // --- Per-request baseline (untimed counting pass) --------------------
+    let mut ws_base = InferenceWorkspace::new(engine);
+    let mut base = FusedSideReport::default();
+    let mut base_preds: Vec<u32> = Vec::with_capacity(requests);
+    let mut base_mults: Vec<u64> = Vec::with_capacity(requests);
+    let mut base_logits: Vec<Vec<f32>> = Vec::with_capacity(requests);
+    for i in 0..requests {
+        let inf = engine.infer(&xs[i % xs.len()], &mut ws_base);
+        base.hash_invocations += ws_base.last_batch_stats().hash_invocations;
+        base.total_mults += inf.mults.total();
+        base_preds.push(inf.pred);
+        base_mults.push(inf.mults.total());
+        base_logits.push(ws_base.logits.clone());
+    }
+    base.hash_invocations_per_request = base.hash_invocations as f64 / requests as f64;
+    base.mults_per_request = base.total_mults as f64 / requests as f64;
+
+    // --- Fused (untimed counting + bitwise-comparison pass) --------------
+    let mut ws_fused = InferenceWorkspace::new(engine);
+    let mut fused = FusedSideReport::default();
+    let mut bitwise_equal = true;
+    let mut union_active = 0u64;
+    let mut total_active = 0u64;
+    for chunk in ids.chunks(batch) {
+        let xrefs: Vec<&[f32]> = chunk.iter().map(|&i| xs[i % xs.len()].as_slice()).collect();
+        engine.infer_batch(&xrefs, &mut ws_fused);
+        let stats = ws_fused.last_batch_stats();
+        fused.hash_invocations += stats.hash_invocations;
+        union_active += stats.union_active;
+        total_active += stats.total_active;
+        for (s, &i) in chunk.iter().enumerate() {
+            let inf = ws_fused.last_results()[s];
+            fused.total_mults += inf.mults.total();
+            bitwise_equal &= inf.pred == base_preds[i]
+                && inf.mults.total() == base_mults[i]
+                && ws_fused.batch_logits(s) == base_logits[i].as_slice();
+        }
+    }
+    fused.hash_invocations_per_request = fused.hash_invocations as f64 / requests as f64;
+    fused.mults_per_request = fused.total_mults as f64 / requests as f64;
+
+    // --- Timed passes: inference only, identical bookkeeping (none) ------
+    let t0 = Instant::now();
+    for i in 0..requests {
+        engine.infer(&xs[i % xs.len()], &mut ws_base);
+    }
+    base.wall_secs = t0.elapsed().as_secs_f64().max(1e-9);
+    base.requests_per_sec = requests as f64 / base.wall_secs;
+
+    let t1 = Instant::now();
+    for chunk in ids.chunks(batch) {
+        let xrefs: Vec<&[f32]> = chunk.iter().map(|&i| xs[i % xs.len()].as_slice()).collect();
+        engine.infer_batch(&xrefs, &mut ws_fused);
+    }
+    fused.wall_secs = t1.elapsed().as_secs_f64().max(1e-9);
+    fused.requests_per_sec = requests as f64 / fused.wall_secs;
+
+    FusedCompareReport {
+        requests: requests as u64,
+        batch,
+        hidden_layers,
+        per_request: base,
+        fused,
+        bitwise_equal,
+        sharing_factor: if union_active == 0 {
+            1.0
+        } else {
+            total_active as f64 / union_active as f64
+        },
+    }
+}
+
+fn fused_side_json(r: &FusedSideReport) -> String {
+    format!(
+        "{{\"hash_invocations\": {}, \"hash_invocations_per_request\": {:.4}, \
+         \"total_mults\": {}, \"mults_per_request\": {:.1}, \"wall_secs\": {:.4}, \
+         \"requests_per_sec\": {:.1}}}",
+        r.hash_invocations,
+        r.hash_invocations_per_request,
+        r.total_mults,
+        r.mults_per_request,
+        r.wall_secs,
+        r.requests_per_sec,
+    )
 }
 
 // ---------------------------------------------------------------------------
@@ -1266,13 +1439,55 @@ mod tests {
             versions_published: 6,
         };
         let path = std::env::temp_dir().join(format!("hashdl_bench_{}.json", std::process::id()));
-        write_bench_json(&path, "8-24-2", 0.25, 1000, &results, Some(&report)).unwrap();
+        write_bench_json(&path, "8-24-2", 0.25, 1000, &results, Some(&report), None).unwrap();
         let s = std::fs::read_to_string(&path).unwrap();
         assert!(s.contains("\"sparse_mult_fraction\": 0.1000"));
         assert!(s.contains("\"scaling\""));
         assert!(s.contains("\"train_serve\""));
         assert!(s.contains("\"versions_published\": 6"));
         assert!(s.contains("\"distinct_versions_served\": 5"));
+        assert!(!s.contains("\"fused_compare\""), "absent scenario must not fabricate a section");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn fused_compare_counts_strictly_fewer_invocations_and_stays_bitwise_equal() {
+        // 2 hidden layers so the invocation arithmetic is visible.
+        let cfg = NetworkConfig { n_in: 8, hidden: vec![24, 24], n_out: 2, act: Activation::ReLU };
+        let net = Network::new(&cfg, &mut Pcg64::seeded(51));
+        let engine = SparseInferenceEngine::from_snapshot(ModelSnapshot::without_tables(
+            net,
+            SamplerConfig::with_method(Method::Lsh, 0.25),
+            51,
+        ));
+        let (xs, _) = tiny_stream(52);
+        let requests = 40;
+        let batch = 8;
+        let report = run_fused_compare(&engine, &xs, requests, batch);
+
+        assert!(report.bitwise_equal, "fused execution must replay per-request bit-for-bit");
+        assert_eq!(report.hidden_layers, 2);
+        // Per-request: hidden_layers invocations per request. Fused: one
+        // per layer per chunk of `batch`.
+        assert_eq!(report.per_request.hash_invocations, (requests * 2) as u64);
+        assert_eq!(report.fused.hash_invocations, (requests.div_ceil(batch) * 2) as u64);
+        assert!(
+            report.fused.hash_invocations_per_request
+                < report.per_request.hash_invocations_per_request,
+            "fused must amortize hashing across the micro-batch"
+        );
+        // Exact mult counts are identical — fusing changes invocation
+        // counts, never the multiplication accounting.
+        assert_eq!(report.fused.total_mults, report.per_request.total_mults);
+        assert!(report.sharing_factor >= 1.0);
+
+        let path =
+            std::env::temp_dir().join(format!("hashdl_bench_fc_{}.json", std::process::id()));
+        write_bench_json(&path, "8-24-24-2", 0.25, 1000, &[], None, Some(&report)).unwrap();
+        let s = std::fs::read_to_string(&path).unwrap();
+        assert!(s.contains("\"fused_compare\""));
+        assert!(s.contains("\"bitwise_equal\": true"));
+        assert!(s.contains("\"hash_invocations\": 80"));
         std::fs::remove_file(path).ok();
     }
 }

@@ -14,11 +14,25 @@
 //! published exactly once — there is one ownership model for tables, not
 //! two.
 //!
+//! **Batched execution:** inference runs through the shared batched
+//! execution core (`crate::exec` — the same `TableView` path training
+//! selection uses). [`SparseInferenceEngine::infer_batch`] answers a
+//! whole micro-batch with **one fingerprint hash invocation per hidden
+//! layer** (all co-batched requests hashed in a single pass over the
+//! pinned epoch's projection data, probe buffers reused from the
+//! workspace's per-layer scratch), then runs the fused sparse forward
+//! over the resulting `SparseBatchPlan`. [`SparseInferenceEngine::infer`]
+//! is the batch-of-one case. Per-request execution of the same requests
+//! produces bit-identical active sets, logits and per-request
+//! multiplication counts — fusing changes how often the projection plane
+//! is traversed, never what a response says.
+//!
 //! Inference is lock-free and deterministic **per version**: the same
 //! input served from the same published version produces bit-identical
-//! active sets and logits on any worker (see `lsh::frozen` for the RNG
-//! derivation that makes crowded-bucket sampling worker-independent, and
-//! `tests/publish_stress.rs` for the concurrent-publish replay pin).
+//! active sets and logits on any worker, in any batching layout (see
+//! `lsh::frozen` for the RNG derivation that makes crowded-bucket
+//! sampling worker-independent, and `tests/publish_stress.rs` for the
+//! concurrent-publish replay pin).
 //!
 //! Cost accounting mirrors training: hidden layers pay K·L hashing +
 //! |AS_out|·|AS_in| sparse-forward multiplications (plus the optional §5.4
@@ -27,13 +41,14 @@
 //! reports, so sparse-vs-dense serving savings are directly comparable to
 //! the paper's training numbers.
 
+use crate::exec::{BatchExecutor, BatchRunStats, FrozenTableView};
 use crate::lsh::frozen::{FrozenLayerTables, FrozenQueryScratch};
 use crate::nn::network::Network;
-use crate::nn::sparse::{LayerInput, SparseVec};
+use crate::nn::sparse::SparseVec;
 use crate::publish::{publish_once, ModelParts, PublishedModel, TableReader};
-use crate::sampling::{budget, rerank_exact};
 use crate::serve::snapshot::ModelSnapshot;
 use crate::train::metrics::MultCounters;
+use crate::util::rng::Pcg64;
 use std::sync::Arc;
 
 /// Cheap-to-clone engine handle (a [`TableReader`] under the hood).
@@ -43,8 +58,9 @@ pub struct SparseInferenceEngine {
 }
 
 /// Per-worker mutable buffers, reused across requests — steady-state
-/// inference allocates nothing — plus the pinned model epoch all requests
-/// between two [`InferenceWorkspace::sync`] calls are served from.
+/// inference allocates nothing beyond the per-batch `LayerInput` view
+/// vectors — plus the pinned model epoch all requests between two
+/// [`InferenceWorkspace::sync`] calls are served from.
 pub struct InferenceWorkspace {
     /// The published epoch this workspace currently serves. Immutable and
     /// wholly owned until the next `sync`.
@@ -54,16 +70,20 @@ pub struct InferenceWorkspace {
     /// engine it belongs to (serving from a mismatched engine would
     /// silently use the wrong model).
     slot_id: usize,
-    scratch: FrozenQueryScratch,
-    /// Hidden-layer sparse activations, one slot per hidden layer.
+    /// One probe scratch per hidden layer: the pinned epoch's frozen
+    /// stacks are borrowed together with these by the batched execution
+    /// core (`FrozenTableView` per layer).
+    scratches: Vec<FrozenQueryScratch>,
+    /// The shared batched execution core: batch plan, per-sample
+    /// activations/logits/counters, reused buffers.
+    exec: BatchExecutor,
+    /// Results of the most recent `infer_batch` (one per sample).
+    results: Vec<Inference>,
+    /// Hidden-layer sparse activations of the last *single-request*
+    /// inference, one slot per hidden layer (kept for the batch-of-one
+    /// API: `evaluate`, replay tests, divergence tooling).
     pub acts: Vec<SparseVec>,
-    /// Active set under construction for the current layer.
-    active: Vec<u32>,
-    /// Densified query for table hashing (sparse upper-layer inputs).
-    dense_q: Vec<f32>,
-    /// Re-rank scoring buffer.
-    scored: Vec<(f32, u32)>,
-    /// Final logits of the last request.
+    /// Final logits of the last single-request inference.
     pub logits: Vec<f32>,
 }
 
@@ -75,11 +95,10 @@ impl InferenceWorkspace {
         InferenceWorkspace {
             model,
             slot_id: engine.slot_id(),
-            scratch: FrozenQueryScratch::new(),
+            scratches: (0..n_hidden).map(|_| FrozenQueryScratch::new()).collect(),
+            exec: BatchExecutor::new(),
+            results: Vec::new(),
             acts: (0..n_hidden).map(|_| SparseVec::new()).collect(),
-            active: Vec::new(),
-            dense_q: Vec::new(),
-            scored: Vec::new(),
             logits: Vec::new(),
         }
     }
@@ -112,14 +131,44 @@ impl InferenceWorkspace {
         if self.acts.len() != n_hidden {
             self.acts.resize_with(n_hidden, SparseVec::new);
         }
+        if self.scratches.len() != n_hidden {
+            self.scratches.resize_with(n_hidden, FrozenQueryScratch::new);
+        }
         !same_slot || self.model.version != old_version
+    }
+
+    /// Per-sample results of the most recent [`SparseInferenceEngine::infer_batch`].
+    pub fn last_results(&self) -> &[Inference] {
+        &self.results
+    }
+
+    /// Logits of sample `s` from the most recent
+    /// [`SparseInferenceEngine::infer_batch`]. Valid until the next
+    /// `infer_batch` or `infer` call — a single-request `infer` *moves*
+    /// sample 0's outputs into `ws.logits`/`ws.acts` (read them there).
+    pub fn batch_logits(&self, s: usize) -> &[f32] {
+        &self.exec.logits[s]
+    }
+
+    /// Sparse activations of hidden layer `l`, sample `s`, from the most
+    /// recent [`SparseInferenceEngine::infer_batch`]. Same validity
+    /// contract as [`InferenceWorkspace::batch_logits`].
+    pub fn batch_acts(&self, l: usize, s: usize) -> &SparseVec {
+        &self.exec.acts[l][s]
+    }
+
+    /// Execution stats of the most recent `infer_batch` (fingerprint hash
+    /// invocations, union/total active counts).
+    pub fn last_batch_stats(&self) -> BatchRunStats {
+        self.exec.last
     }
 }
 
 /// Outcome of one request: predicted class + exact multiplication counts +
 /// the published version it was served from. Logits and per-layer active
-/// sets stay in the workspace (`ws.logits`, `ws.acts`) for callers that
-/// need them.
+/// sets stay in the workspace (`ws.logits`, `ws.acts` after single-request
+/// `infer`; `ws.batch_logits`/`ws.batch_acts` after `infer_batch`) for
+/// callers that need them.
 #[derive(Clone, Copy, Debug)]
 pub struct Inference {
     pub pred: u32,
@@ -174,67 +223,69 @@ impl SparseInferenceEngine {
         self.current().net.dense_mults_per_example()
     }
 
-    /// Sparse inference against the workspace's pinned epoch: LSH-select
-    /// the active set per hidden layer, fire only those neurons, finish
-    /// with the dense output layer.
-    pub fn infer(&self, x: &[f32], ws: &mut InferenceWorkspace) -> Inference {
+    /// Fused sparse inference for a whole micro-batch against the
+    /// workspace's pinned epoch: every hidden layer hashes **all**
+    /// co-batched requests in one pass (one fingerprint hash invocation
+    /// per layer), selects each request's active set from the shared
+    /// plan, fires only those neurons, and finishes each request with the
+    /// dense output layer. Results land in `ws.last_results()` (one
+    /// [`Inference`] per request, per-request multiplication attribution
+    /// identical to per-request execution); per-sample logits and active
+    /// sets stay readable through `ws.batch_logits` / `ws.batch_acts`.
+    pub fn infer_batch(&self, xs: &[&[f32]], ws: &mut InferenceWorkspace) {
         debug_assert_eq!(
             ws.slot_id,
             self.slot_id(),
             "workspace is pinned to a different engine's publication slot"
         );
-        let InferenceWorkspace { model, scratch, acts, active, dense_q, scored, logits, .. } = ws;
+        let InferenceWorkspace { model, scratches, exec, results, .. } = ws;
         let sh: &PublishedModel = &**model;
-        debug_assert_eq!(x.len(), sh.net.n_in());
         let n_hidden = sh.net.n_hidden();
-        let mut mults = MultCounters::default();
+        debug_assert_eq!(scratches.len(), n_hidden);
+        debug_assert!(xs.iter().all(|x| x.len() == sh.net.n_in()));
+        results.clear();
+        if xs.is_empty() {
+            exec.last = BatchRunStats::default();
+            return;
+        }
+        let mut views: Vec<FrozenTableView> = sh
+            .tables
+            .iter()
+            .zip(scratches.iter_mut())
+            .map(|(tables, scratch)| FrozenTableView { tables, scratch })
+            .collect();
+        // The frozen backend derives all randomness from the query
+        // fingerprints; this stream is never drawn from.
+        let mut unused_rng = Pcg64::new(0, 0);
+        exec.forward_batch(
+            &sh.net.layers,
+            &mut views,
+            sh.sparsity,
+            sh.rerank_factor,
+            xs,
+            &mut unused_rng,
+        );
+        for s in 0..xs.len() {
+            results.push(Inference {
+                pred: crate::tensor::vecops::argmax(&exec.logits[s]) as u32,
+                mults: exec.sample_mults[s],
+                version: sh.version,
+            });
+        }
+    }
+
+    /// Sparse inference for one request — the batch-of-one case of
+    /// [`SparseInferenceEngine::infer_batch`]. The request's logits and
+    /// per-layer active sets are additionally swapped into `ws.logits` /
+    /// `ws.acts` for the single-request API.
+    pub fn infer(&self, x: &[f32], ws: &mut InferenceWorkspace) -> Inference {
+        self.infer_batch(&[x], ws);
+        let n_hidden = ws.model.net.n_hidden();
+        std::mem::swap(&mut ws.logits, &mut ws.exec.logits[0]);
         for l in 0..n_hidden {
-            let layer = &sh.net.layers[l];
-            let (prev, rest) = acts.split_at_mut(l);
-            let input = if l == 0 {
-                LayerInput::Dense(x)
-            } else {
-                LayerInput::Sparse(&prev[l - 1])
-            };
-            // Densify the query for the hash functions (layer 0 is already
-            // dense; upper layers densify the previous sparse activation).
-            let q: &[f32] = match input {
-                LayerInput::Dense(d) => d,
-                LayerInput::Sparse(s) => {
-                    dense_q.clear();
-                    dense_q.resize(layer.n_in(), 0.0);
-                    for (i, v) in s.iter() {
-                        dense_q[i as usize] = v;
-                    }
-                    dense_q
-                }
-            };
-            let b = budget(layer.n_out(), sh.sparsity);
-            let tables = &sh.tables[l];
-            if sh.rerank_factor > 1 {
-                // §5.4 cheap re-rank: over-collect, score exactly, keep
-                // the top b — the same `rerank_exact` the trainer uses.
-                mults.selection += tables.query(q, b * sh.rerank_factor, scratch, active);
-                mults.selection += rerank_exact(layer, q, b, active, scored);
-            } else {
-                mults.selection += tables.query(q, b, scratch, active);
-            }
-            mults.forward += layer.forward_sparse(input, active, &mut rest[0]);
+            std::mem::swap(&mut ws.acts[l], &mut ws.exec.acts[l][0]);
         }
-        // Output layer: dense over all classes from the last sparse
-        // activation (the paper never hashes the output layer).
-        let out_layer = sh.net.layers.last().expect("empty network");
-        let input = if n_hidden == 0 {
-            LayerInput::Dense(x)
-        } else {
-            LayerInput::Sparse(&acts[n_hidden - 1])
-        };
-        mults.forward += out_layer.forward_all(input, logits);
-        Inference {
-            pred: crate::tensor::vecops::argmax(logits) as u32,
-            mults,
-            version: sh.version,
-        }
+        ws.results[0]
     }
 
     /// Dense reference inference through the same workspace (the serving
@@ -375,6 +426,46 @@ mod tests {
         assert_eq!(a.mults.total(), b.mults.total());
         assert_eq!(a.version, 0, "frozen engines serve version 0");
         assert_eq!(b.version, 0);
+    }
+
+    #[test]
+    fn fused_batch_matches_per_request_inference_bitwise() {
+        // The tentpole equivalence pin: a co-batched micro-batch must
+        // produce the same active sets, logits, predictions and
+        // per-request mult counts as serving each request alone — while
+        // spending one fingerprint hash invocation per layer instead of
+        // one per request per layer.
+        let e = engine(31);
+        let xs: Vec<Vec<f32>> = (0..9)
+            .map(|s| (0..16).map(|j| ((s * 16 + j) as f32 * 0.21).sin()).collect())
+            .collect();
+        let xrefs: Vec<&[f32]> = xs.iter().map(|x| x.as_slice()).collect();
+
+        let mut ws_fused = InferenceWorkspace::new(&e);
+        e.infer_batch(&xrefs, &mut ws_fused);
+        let stats = ws_fused.last_batch_stats();
+        assert_eq!(stats.hash_invocations, 2, "one invocation per hidden layer");
+        assert!(stats.total_active >= stats.union_active);
+
+        let mut ws_single = InferenceWorkspace::new(&e);
+        for (s, x) in xs.iter().enumerate() {
+            let direct = e.infer(x, &mut ws_single);
+            let fused = ws_fused.last_results()[s];
+            assert_eq!(fused.pred, direct.pred, "request {s} pred");
+            assert_eq!(fused.mults.total(), direct.mults.total(), "request {s} mults");
+            assert_eq!(fused.mults.selection, direct.mults.selection, "request {s} selection");
+            assert_eq!(ws_fused.batch_logits(s), ws_single.logits.as_slice(), "request {s}");
+            for l in 0..2 {
+                assert_eq!(
+                    ws_fused.batch_acts(l, s).idx,
+                    ws_single.acts[l].idx,
+                    "request {s} layer {l} active set"
+                );
+            }
+        }
+        // Per-request execution = batch-of-one: hidden_layers invocations
+        // per request, 9x the fused total for this batch.
+        assert_eq!(ws_single.last_batch_stats().hash_invocations, 2);
     }
 
     #[test]

@@ -10,13 +10,17 @@
 //!   weights-only checkpoints.
 //! * [`engine`] — [`engine::SparseInferenceEngine`]: a handle over the
 //!   `publish` subsystem's lock-free epoch slot. Workers pin one
-//!   version-stamped [`crate::publish::PublishedModel`] per micro-batch,
-//!   select active sets deterministically, and count multiplications
-//!   exactly. A frozen snapshot is the publish-once special case.
+//!   version-stamped [`crate::publish::PublishedModel`] per micro-batch
+//!   and answer it through the shared batched execution core
+//!   (`crate::exec`): one fingerprint hash invocation per hidden layer
+//!   for the whole co-batched micro-batch, deterministic active sets,
+//!   exact per-request multiplication counts. A frozen snapshot is the
+//!   publish-once special case.
 //! * [`pool`] — bounded MPSC request queue + worker threads with dynamic
 //!   micro-batching (size cap or deadline, whichever closes first);
-//!   workers pick up newly published model versions between micro-batches
-//!   and stamp every [`pool::Response`] with the version that served it.
+//!   workers fuse each micro-batch through one batched inference call,
+//!   pick up newly published model versions between micro-batches and
+//!   stamp every [`pool::Response`] with the version that served it.
 //! * [`stats`] — lock-free telemetry primitives: log₂-bucketed latency
 //!   histogram (p50/p99 without storing samples) and the version-age
 //!   histogram shared by the pool, the fleet router and the future
@@ -33,10 +37,11 @@ pub mod snapshot;
 pub mod stats;
 
 pub use bench::{
-    drive_clients_while, drive_router_closed_loop, run_closed_loop, run_open_loop,
-    run_route_bench, run_train_while_serve, write_router_bench_json, BenchConfig, BenchResult,
-    ClientSamples, FleetCase, FleetModel, OverloadPoint, RouteBenchConfig, RouteBenchReport,
-    RouterDriveSamples, TrainServeConfig, TrainServeReport,
+    drive_clients_while, drive_router_closed_loop, run_closed_loop, run_fused_compare,
+    run_open_loop, run_route_bench, run_train_while_serve, write_router_bench_json, BenchConfig,
+    BenchResult, ClientSamples, FleetCase, FleetModel, FusedCompareReport, FusedSideReport,
+    OverloadPoint, RouteBenchConfig, RouteBenchReport, RouterDriveSamples, TrainServeConfig,
+    TrainServeReport,
 };
 pub use engine::{EvalSummary, Inference, InferenceWorkspace, SparseInferenceEngine};
 pub use pool::{

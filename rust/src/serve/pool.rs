@@ -18,6 +18,16 @@
 //! the deadline bounds the latency a lone request can lose waiting for
 //! company.
 //!
+//! **Fused execution:** a sparse worker answers its whole micro-batch
+//! with one [`SparseInferenceEngine::infer_batch`] call — every hidden
+//! layer hashes all co-batched requests in a single pass over the pinned
+//! epoch's projection data (`crate::exec`), so fingerprint hash
+//! invocations per request fall as `1/batch` while every response stays
+//! bit-identical to per-request execution (pinned by
+//! `pool_answers_every_request` below against direct engine calls).
+//! [`PoolCounters::hash_invocations`] counts the invocations so the
+//! amortization is observable, not just claimed.
+//!
 //! Because the engine is deterministic per request (`lsh::frozen`), the
 //! worker count and batching layout change *when* a request is answered,
 //! never *what* the answer is — pinned by `tests/serve.rs`.
@@ -258,12 +268,18 @@ pub struct PoolCounters {
     pub requests: AtomicU64,
     pub batches: AtomicU64,
     pub mults: AtomicU64,
+    /// Fingerprint hash invocations performed by the fused sparse path
+    /// (one per hidden layer per micro-batch; 0 in dense mode). The
+    /// per-request ratio against `requests` is the batching win the
+    /// serve bench pins.
+    pub hash_invocations: AtomicU64,
     /// Times a worker re-pinned to a newer published model between
     /// micro-batches (0 when nothing publishes mid-run).
     pub version_switches: AtomicU64,
-    /// Per-response in-pool latency (enqueue → response sent), log₂
-    /// microsecond buckets. This is the per-response accounting the fleet
-    /// router reads live for per-model p50/p99.
+    /// Per-response in-pool latency (enqueue → response sent), HDR-style
+    /// log₂ microsecond buckets with 2 mantissa sub-bucket bits. This is
+    /// the per-response accounting the fleet router reads live for
+    /// per-model p50/p99.
     pub latency: LatencyHistogram,
     /// One sample per micro-batch: `latest_version − pinned_version` at
     /// batch completion. 0 everywhere unless a publisher outran the
@@ -311,6 +327,9 @@ pub struct PoolStats {
     pub requests: u64,
     pub batches: u64,
     pub mults: u64,
+    /// Fingerprint hash invocations across all micro-batches (see
+    /// [`PoolCounters::hash_invocations`]).
+    pub hash_invocations: u64,
     /// Worker re-pins to newer published versions (see [`PoolCounters`]).
     pub version_switches: u64,
     /// In-pool latency histogram (enqueue → response sent).
@@ -326,6 +345,17 @@ impl PoolStats {
             0.0
         } else {
             self.requests as f64 / self.batches as f64
+        }
+    }
+
+    /// Mean fingerprint hash invocations per request — `hidden_layers /
+    /// mean_batch` for the fused sparse path (per-request execution would
+    /// sit at `hidden_layers`).
+    pub fn hash_invocations_per_request(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.hash_invocations as f64 / self.requests as f64
         }
     }
 
@@ -390,11 +420,44 @@ impl ServePool {
             requests: counters.requests.load(Ordering::Relaxed),
             batches: counters.batches.load(Ordering::Relaxed),
             mults: counters.mults.load(Ordering::Relaxed),
+            hash_invocations: counters.hash_invocations.load(Ordering::Relaxed),
             version_switches: counters.version_switches.load(Ordering::Relaxed),
             latency: counters.latency.snapshot(),
             version_age: counters.version_age.snapshot(),
         }
     }
+}
+
+/// Account one answered request (request/mult counters + the latency
+/// histogram the router reads) and send its [`Response`] — the one
+/// per-response epilogue shared by the fused-sparse and dense worker
+/// branches, so their accounting can never diverge.
+#[allow(clippy::too_many_arguments)]
+fn send_response(
+    counters: &PoolCounters,
+    req: Request,
+    pred: u32,
+    version: u64,
+    mults: u64,
+    logits: Option<Vec<f32>>,
+    claimed: Instant,
+    bsz: u32,
+) {
+    counters.requests.fetch_add(1, Ordering::Relaxed);
+    counters.mults.fetch_add(mults, Ordering::Relaxed);
+    // Per-response accounting: enqueue → response sent, so queue wait and
+    // service both land in the histogram the router reads.
+    counters.latency.record(req.enqueued.elapsed().as_micros() as u64);
+    // Client may have given up (dropped receiver) — ignore.
+    let _ = req.reply.send(Response {
+        id: req.id,
+        pred,
+        version,
+        mults,
+        queue_micros: claimed.duration_since(req.enqueued).as_micros() as u64,
+        batch_size: bsz,
+        logits,
+    });
 }
 
 fn worker_loop(
@@ -415,29 +478,48 @@ fn worker_loop(
         }
         let bsz = batch.len() as u32;
         let claimed = Instant::now();
-        for req in batch.drain(..) {
-            let inf = if cfg.sparse {
-                engine.infer(&req.x, &mut ws)
-            } else {
-                engine.infer_dense(&req.x, &mut ws)
-            };
-            let mults = inf.mults.total();
-            counters.requests.fetch_add(1, Ordering::Relaxed);
-            counters.mults.fetch_add(mults, Ordering::Relaxed);
-            let logits = req.want_logits.then(|| ws.logits.clone());
-            // Per-response accounting: enqueue → response sent, so queue
-            // wait and service both land in the histogram the router reads.
-            counters.latency.record(req.enqueued.elapsed().as_micros() as u64);
-            // Client may have given up (dropped receiver) — ignore.
-            let _ = req.reply.send(Response {
-                id: req.id,
-                pred: inf.pred,
-                version: inf.version,
-                mults,
-                queue_micros: claimed.duration_since(req.enqueued).as_micros() as u64,
-                batch_size: bsz,
-                logits,
-            });
+        if cfg.sparse {
+            // Fused execution: the whole micro-batch goes through one
+            // batched inference call — one fingerprint hash invocation
+            // per hidden layer for every co-batched request, bit-identical
+            // responses to per-request execution. The view vector borrows
+            // `batch`, so it is rebuilt per batch and dropped before the
+            // drain below.
+            let xs: Vec<&[f32]> = batch.iter().map(|req| req.x.as_slice()).collect();
+            engine.infer_batch(&xs, &mut ws);
+            drop(xs);
+            counters
+                .hash_invocations
+                .fetch_add(ws.last_batch_stats().hash_invocations, Ordering::Relaxed);
+            for (s, req) in batch.drain(..).enumerate() {
+                let inf = ws.last_results()[s];
+                let logits = req.want_logits.then(|| ws.batch_logits(s).to_vec());
+                send_response(
+                    counters,
+                    req,
+                    inf.pred,
+                    inf.version,
+                    inf.mults.total(),
+                    logits,
+                    claimed,
+                    bsz,
+                );
+            }
+        } else {
+            for req in batch.drain(..) {
+                let inf = engine.infer_dense(&req.x, &mut ws);
+                let logits = req.want_logits.then(|| ws.logits.clone());
+                send_response(
+                    counters,
+                    req,
+                    inf.pred,
+                    inf.version,
+                    inf.mults.total(),
+                    logits,
+                    claimed,
+                    bsz,
+                );
+            }
         }
         // Staleness sample: how many versions the epoch this batch was
         // answered from trails the newest publication, measured at batch
@@ -572,6 +654,13 @@ mod tests {
         assert_eq!(stats.requests, n);
         assert!(stats.batches >= 1);
         assert!(stats.mean_batch() >= 1.0);
+        // Fused execution: one fingerprint hash invocation per hidden
+        // layer (= 1 for this engine) per micro-batch, NOT per request.
+        assert_eq!(stats.hash_invocations, stats.batches, "one invocation per batch per layer");
+        assert!(
+            stats.hash_invocations_per_request() <= 1.0,
+            "fused hashing must not exceed the per-request rate"
+        );
         assert_eq!(stats.version_switches, 0, "nothing published mid-run");
         assert_eq!(stats.latency.count(), n, "one latency sample per response");
         assert!(stats.p50_micros() <= stats.p99_micros());

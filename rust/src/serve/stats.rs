@@ -5,12 +5,13 @@
 //! live while traffic flows. Both needs are met by fixed-size histograms
 //! of relaxed atomics:
 //!
-//! * [`LatencyHistogram`] — log₂-bucketed microsecond latencies. A
-//!   percentile read returns the *upper bound* of the bucket holding the
-//!   requested rank, so p50/p99 are conservative (never under-reported)
-//!   at ≤ 2× resolution — the standard telemetry trade-off (HDR-style
-//!   histograms refine the mantissa; the paper's serving claims only need
-//!   the octave).
+//! * [`LatencyHistogram`] — HDR-style microsecond latencies: log₂
+//!   octaves refined by [`LATENCY_SUB_BITS`] mantissa bits (4 sub-buckets
+//!   per octave). A percentile read returns the *upper bound* of the
+//!   sub-bucket holding the requested rank, so p50/p99 are conservative
+//!   (never under-reported) at ≤ 25% relative resolution — tight enough
+//!   for fleet p99 comparisons, still a fixed array of relaxed `u64`
+//!   counters (~1 KB, one `fetch_add` per record).
 //! * [`VersionAgeHistogram`] — how far behind the newest published model
 //!   the serving path runs, in whole versions. The pool records one
 //!   sample per micro-batch (`latest_version − pinned_version` at batch
@@ -24,11 +25,24 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
-/// Number of log₂ latency buckets: bucket `i` holds values whose bit
-/// length is `i` (bucket 0 = {0}, bucket 1 = {1}, bucket 2 = {2, 3}, …).
-/// 31 octaves of microseconds ≈ 35 minutes — far beyond any sane request
-/// latency; the last bucket absorbs everything above.
-pub const LATENCY_BUCKETS: usize = 32;
+/// Mantissa sub-bucket bits per octave (HDR-style refinement): each log₂
+/// octave splits into `2^LATENCY_SUB_BITS` equal-width sub-buckets, so a
+/// reported percentile upper bound overshoots the true value by at most
+/// `1/2^LATENCY_SUB_BITS` of it (25% at 2 bits, vs 100% for bare
+/// octaves).
+pub const LATENCY_SUB_BITS: usize = 2;
+
+const LATENCY_SUBS: usize = 1 << LATENCY_SUB_BITS; // 4 sub-buckets/octave
+
+/// Highest octave covered exactly: values of bit length 32 (≈ 71 minutes
+/// of microseconds) and above all land in the final sub-bucket — far
+/// beyond any sane request latency.
+const LATENCY_MAX_OCTAVE: usize = 31;
+
+/// Total latency buckets: values 0..=3 get exact singleton buckets
+/// (indices 0..=3, standing in for the sub-4 octaves), then 4 sub-buckets
+/// for every octave `o` in 2..=31 at indices `4(o−1)..4(o−1)+3`.
+pub const LATENCY_BUCKETS: usize = LATENCY_SUBS * LATENCY_MAX_OCTAVE; // 124
 
 /// Version-age buckets: exact counts for ages 0–6, the last bucket
 /// absorbs 7+ (an age that large means publication is outrunning serving
@@ -37,18 +51,30 @@ pub const VERSION_AGE_BUCKETS: usize = 8;
 
 #[inline]
 fn latency_bucket(micros: u64) -> usize {
-    (64 - micros.leading_zeros() as usize).min(LATENCY_BUCKETS - 1)
+    if micros < LATENCY_SUBS as u64 {
+        return micros as usize;
+    }
+    // Octave = floor(log2(v)) ≥ 2; the two bits below the leading one
+    // pick the sub-bucket.
+    let octave = 63 - micros.leading_zeros() as usize;
+    if octave > LATENCY_MAX_OCTAVE {
+        return LATENCY_BUCKETS - 1;
+    }
+    let sub = ((micros >> (octave - LATENCY_SUB_BITS)) as usize) & (LATENCY_SUBS - 1);
+    LATENCY_SUBS * (octave - 1) + sub
 }
 
 /// Inclusive upper bound of latency bucket `i` (what a percentile read
 /// reports).
 #[inline]
 fn latency_bucket_upper(i: usize) -> u64 {
-    if i == 0 {
-        0
-    } else {
-        (1u64 << i) - 1
+    if i < LATENCY_SUBS {
+        return i as u64;
     }
+    let octave = i / LATENCY_SUBS + 1;
+    let sub = (i % LATENCY_SUBS) as u64;
+    // Bucket (octave, sub) covers [(4+sub)·2^(o−2), (5+sub)·2^(o−2) − 1].
+    ((LATENCY_SUBS as u64 + sub + 1) << (octave - LATENCY_SUB_BITS)) - 1
 }
 
 /// Concurrent log₂ latency histogram (microseconds). Recording is one
@@ -204,18 +230,50 @@ mod tests {
     use super::*;
 
     #[test]
-    fn latency_buckets_are_octaves() {
-        assert_eq!(latency_bucket(0), 0);
-        assert_eq!(latency_bucket(1), 1);
-        assert_eq!(latency_bucket(2), 2);
-        assert_eq!(latency_bucket(3), 2);
-        assert_eq!(latency_bucket(4), 3);
-        assert_eq!(latency_bucket(1023), 10);
-        assert_eq!(latency_bucket(1024), 11);
+    fn latency_buckets_are_subdivided_octaves() {
+        // Exact singleton buckets below 4.
+        for v in 0..4u64 {
+            assert_eq!(latency_bucket(v), v as usize);
+            assert_eq!(latency_bucket_upper(v as usize), v);
+        }
+        // Octave 2 (4..=7): one value per sub-bucket.
+        assert_eq!(latency_bucket(4), 4);
+        assert_eq!(latency_bucket(7), 7);
+        // Octave 3 (8..=15): two values per sub-bucket.
+        assert_eq!(latency_bucket(8), 8);
+        assert_eq!(latency_bucket(9), 8);
+        assert_eq!(latency_bucket(10), 9);
+        assert_eq!(latency_bucket_upper(8), 9);
+        // 1023 = octave 9, top sub-bucket; 1024 opens octave 10.
+        assert_eq!(latency_bucket(1023), LATENCY_SUBS * 8 + 3);
+        assert_eq!(latency_bucket(1024), LATENCY_SUBS * 9);
         assert_eq!(latency_bucket(u64::MAX), LATENCY_BUCKETS - 1);
-        assert_eq!(latency_bucket_upper(0), 0);
-        assert_eq!(latency_bucket_upper(1), 1);
-        assert_eq!(latency_bucket_upper(10), 1023);
+        assert_eq!(latency_bucket_upper(LATENCY_BUCKETS - 1), u32::MAX as u64);
+        // Every bucket's upper bound maps back into that bucket, and
+        // bounds are strictly increasing (exhaustive over the layout).
+        let mut prev = None;
+        for i in 0..LATENCY_BUCKETS {
+            let up = latency_bucket_upper(i);
+            assert_eq!(latency_bucket(up), i, "upper({i}) = {up} must stay in bucket {i}");
+            if let Some(p) = prev {
+                assert!(up > p, "bucket bounds must increase: {p} then {up}");
+            }
+            prev = Some(up);
+        }
+    }
+
+    #[test]
+    fn sub_buckets_bound_relative_error_by_25_percent() {
+        // The HDR refinement claim: reported upper bound ≤ 1.25 × true
+        // value for every representable latency above the exact range.
+        for v in [4u64, 5, 63, 64, 100, 127, 1000, 4096, 5000, 1_000_000, 123_456_789] {
+            let up = latency_bucket_upper(latency_bucket(v));
+            assert!(up >= v, "upper bound must not under-report {v}");
+            assert!(
+                (up as f64) < v as f64 * 1.25,
+                "{v} reported as {up} — over the 25% sub-bucket bound"
+            );
+        }
     }
 
     #[test]
@@ -229,12 +287,13 @@ mod tests {
         h.record(10_000);
         let s = h.snapshot();
         assert_eq!(s.count(), 100);
-        // 100 lives in bucket 7 (64..=127); p50 = 127.
-        assert_eq!(s.p50_micros(), 127);
-        // rank 99 still lands in the 100us bucket; p99 = 127, p100 covers
-        // the outlier's bucket 14 (8192..=16383).
-        assert_eq!(s.p99_micros(), 127);
-        assert_eq!(s.percentile_micros(100.0), 16_383);
+        // 100 lives in sub-bucket [96, 111] of octave 6; p50 = 111 (the
+        // bare-octave histogram reported 127).
+        assert_eq!(s.p50_micros(), 111);
+        // rank 99 still lands in the 100us sub-bucket; p100 covers the
+        // outlier's sub-bucket [8192, 10239] of octave 13.
+        assert_eq!(s.p99_micros(), 111);
+        assert_eq!(s.percentile_micros(100.0), 10_239);
         // Upper bound property: reported p ≥ true value's bucket floor.
         assert!(s.p50_micros() >= 100);
     }

@@ -9,6 +9,13 @@
 //! update in their own tables and all tables are rebuilt from the shared
 //! weights at epoch boundaries (drift control, same cadence as the
 //! sequential trainer).
+//!
+//! Each worker consumes its shard in minibatches through
+//! [`train_batch`], so per-shard selection builds the same
+//! [`crate::exec::SparseBatchPlan`] (one-pass fingerprint hashing per
+//! layer per chunk, union-amortized maintenance) as the sequential
+//! trainer and the serving engine — there is no ASGD-private selection
+//! path.
 
 use crate::data::dataset::Dataset;
 use crate::nn::network::Network;

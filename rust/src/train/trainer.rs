@@ -20,6 +20,7 @@
 //! once per touched coordinate per batch.
 
 use crate::data::dataset::Dataset;
+use crate::exec::SparseBatchPlan;
 use crate::lsh::frozen::FrozenLayerTables;
 use crate::nn::layer::Layer;
 use crate::nn::loss::softmax_xent_grad;
@@ -205,8 +206,13 @@ impl GradSink {
 pub struct BatchWorkspace {
     /// `acts[l][s]`: sparse activations of hidden layer `l`, sample `s`.
     pub acts: Vec<Vec<SparseVec>>,
-    /// Per-sample active-set buffers for the current layer's selection.
-    actives: Vec<Vec<u32>>,
+    /// The batch's selection product: per-layer per-sample active sets +
+    /// per-layer union, shared with the serving engine through the
+    /// batched execution core (`crate::exec`). The union is exactly the
+    /// row sequence the gradient sinks will touch (asserted in debug
+    /// builds), which is what makes once-per-batch LSH maintenance over
+    /// the touched rows equivalent to per-layer union maintenance.
+    pub plan: SparseBatchPlan,
     /// Per-sample output-layer activations (logit values).
     pub out_sparse: Vec<SparseVec>,
     /// `d_hidden[l]`: `B × width(l)` plane of dL/da.
@@ -238,7 +244,7 @@ impl BatchWorkspace {
             .collect();
         BatchWorkspace {
             acts: (0..n_hidden).map(|_| Vec::new()).collect(),
-            actives: Vec::new(),
+            plan: SparseBatchPlan::new(),
             out_sparse: Vec::new(),
             d_hidden: (0..n_hidden).map(|_| BatchPlane::new()).collect(),
             d_logits: Vec::new(),
@@ -251,14 +257,13 @@ impl BatchWorkspace {
 
     /// Grow per-sample buffers to hold `bsz` items (never shrinks).
     fn ensure_capacity(&mut self, bsz: usize) {
+        let n_hidden = self.acts.len();
         for per_layer in &mut self.acts {
             if per_layer.len() < bsz {
                 per_layer.resize_with(bsz, SparseVec::new);
             }
         }
-        if self.actives.len() < bsz {
-            self.actives.resize_with(bsz, Vec::new);
-        }
+        self.plan.ensure(n_hidden, bsz);
         if self.out_sparse.len() < bsz {
             self.out_sparse.resize_with(bsz, SparseVec::new);
         }
@@ -319,7 +324,8 @@ pub fn train_batch(
     let mut mults = MultCounters::default();
     let mut active_fraction = 0.0f32;
 
-    // ---- Forward: batched selection + sparse forward per layer ----------
+    // ---- Forward: batched selection (one-pass hashing through the shared
+    // exec core) + sparse forward per layer, building the batch plan -----
     for l in 0..n_hidden {
         let layer = &net.layers[l];
         let (prev_acts, rest) = ws.acts.split_at_mut(l);
@@ -333,9 +339,18 @@ pub fn train_batch(
                 }
             })
             .collect();
-        let cost = selectors[l].select_batch(layer, &inputs, rng, &mut ws.actives[..bsz]);
+        let lp = &mut ws.plan.layers[l];
+        let cost = selectors[l].select_batch(layer, &inputs, rng, &mut lp.actives[..bsz]);
+        // The union's only training-side consumer today is the
+        // debug-build invariant check against the gradient sinks below
+        // (maintenance runs off `GradSink::touched_rows`, which is the
+        // same sequence), so skip the dedup work in release builds.
+        // Serving's executor always refreshes it — telemetry reads it.
+        if cfg!(debug_assertions) {
+            lp.refresh_union(layer.n_out(), bsz);
+        }
         mults.selection += cost.selection_mults;
-        mults.forward += layer.forward_sparse_batch(&inputs, &ws.actives[..bsz], outs);
+        mults.forward += layer.forward_sparse_batch(&inputs, &lp.actives[..bsz], outs);
         for out in outs.iter() {
             active_fraction += out.len() as f32 / layer.n_out() as f32;
         }
@@ -462,6 +477,14 @@ pub fn train_batch(
     mults.update +=
         ws.grads[out_layer_idx].apply(out_layer_idx, &mut net.layers[out_layer_idx], opt, inv_b);
     for l in (0..n_hidden).rev() {
+        // The rows the sink accumulated are exactly the batch plan's union
+        // for this layer, in the same first-touch order — the invariant
+        // that lets maintenance run once per batch over the union.
+        debug_assert_eq!(
+            ws.grads[l].touched_rows(),
+            ws.plan.layers[l].union(),
+            "layer {l}: gradient-sink rows must equal the batch plan union"
+        );
         let layer = &mut net.layers[l];
         mults.update += ws.grads[l].apply(l, layer, opt, inv_b);
         selectors[l].post_update(layer, ws.grads[l].touched_rows(), rng);

@@ -122,7 +122,11 @@ fn shadow_divergence_is_zero_for_identical_snapshots() {
     reg.register_frozen("prod", parts(5), PoolConfig::default()).unwrap();
     reg.register_frozen("next", parts(5), PoolConfig::default()).unwrap();
     let router = Router::new(Arc::clone(&reg));
-    router.set_policy(RoutePolicy::Shadow { primary: "prod".into(), shadow: "next".into() });
+    router.set_policy(RoutePolicy::Shadow {
+        primary: "prod".into(),
+        shadow: "next".into(),
+        shadow_fraction: 1.0,
+    });
 
     let (tx, rx) = channel();
     let n = 200u64;
@@ -153,7 +157,11 @@ fn shadow_divergence_detects_a_different_model() {
     reg.register_frozen("prod", parts(5), PoolConfig::default()).unwrap();
     reg.register_frozen("next", parts(6), PoolConfig::default()).unwrap();
     let router = Router::new(Arc::clone(&reg));
-    router.set_policy(RoutePolicy::Shadow { primary: "prod".into(), shadow: "next".into() });
+    router.set_policy(RoutePolicy::Shadow {
+        primary: "prod".into(),
+        shadow: "next".into(),
+        shadow_fraction: 1.0,
+    });
     let (tx, rx) = channel();
     let n = 100u64;
     for id in 0..n {

@@ -117,6 +117,72 @@ fn snapshot_roundtrip_is_bitwise_identical() {
 }
 
 #[test]
+fn fused_pool_batches_replay_per_request_inference_bitwise() {
+    // The unified execution core's serving pin: a ServePool that co-batches
+    // requests (fused selection — one fingerprint hash invocation per
+    // hidden layer per micro-batch) must answer every request with exactly
+    // the prediction, logits and mult count that per-request execution
+    // produces, and the pool's invocation counter must show the
+    // amortization actually happened.
+    let (snap, test) = trained_lsh_snapshot(33);
+    let n_hidden = snap.net.n_hidden() as u64;
+    let engine = SparseInferenceEngine::from_snapshot(snap);
+    let pool = ServePool::start(
+        engine.clone(),
+        PoolConfig {
+            workers: 1,
+            max_batch: 16,
+            batch_deadline: std::time::Duration::from_millis(20),
+            ..Default::default()
+        },
+    );
+    let handle = pool.handle();
+    let (tx, rx) = channel();
+    let n = 48usize;
+    // Submit everything up front so the single worker forms real batches.
+    for id in 0..n as u64 {
+        assert_eq!(
+            handle.try_submit(id, test.xs[id as usize % test.xs.len()].clone(), true, tx.clone()),
+            hashdl::serve::SubmitOutcome::Enqueued
+        );
+    }
+    drop(tx);
+    let mut responses: Vec<Option<hashdl::serve::Response>> = (0..n).map(|_| None).collect();
+    for _ in 0..n {
+        let resp = rx.recv().expect("pooled response");
+        responses[resp.id as usize] = Some(resp);
+    }
+    let stats = pool.shutdown();
+    assert_eq!(stats.requests, n as u64);
+
+    // Bit-for-bit against direct per-request inference.
+    let mut ws = InferenceWorkspace::new(&engine);
+    let mut batched = 0u64;
+    for (id, resp) in responses.iter().enumerate() {
+        let resp = resp.as_ref().expect("every request answered");
+        let direct = engine.infer(&test.xs[id % test.xs.len()], &mut ws);
+        assert_eq!(resp.pred, direct.pred, "request {id} pred");
+        assert_eq!(resp.mults, direct.mults.total(), "request {id} mults");
+        assert_eq!(
+            resp.logits.as_deref(),
+            Some(ws.logits.as_slice()),
+            "request {id} logits must replay bit-for-bit through the fused batch"
+        );
+        batched += u64::from(resp.batch_size > 1);
+    }
+    assert!(batched > 0, "the pool must have actually co-batched requests");
+    // Counted amortization: invocations = hidden_layers × batches, which
+    // must undercut the per-request rate (hidden_layers × requests).
+    assert_eq!(stats.hash_invocations, n_hidden * stats.batches);
+    assert!(
+        stats.hash_invocations < n_hidden * stats.requests,
+        "fused hashing must beat per-request hashing: {} vs {}",
+        stats.hash_invocations,
+        n_hidden * stats.requests
+    );
+}
+
+#[test]
 fn legacy_model_bin_still_loads_and_rebuilds_deterministically() {
     let net = Network::new(
         &NetworkConfig { n_in: 12, hidden: vec![30], n_out: 3, act: Activation::ReLU },

@@ -1,0 +1,117 @@
+//! Snapshot cross-version compatibility matrix (ISSUE 5 satellite).
+//!
+//! Every on-disk model generation — v1 `HDLMODEL` (weights only), v2
+//! `HDLMODL2` (raw fingerprints + raw buckets), v3 `HDLMODL3` (bit-packed
+//! fingerprints), v4 `HDLMODL4` (delta/varint bucket ids) — must load
+//! into **bitwise-identical** weights and LSH tables in one table-driven
+//! sweep, not just each version in isolation. The model is authored with
+//! the v1 loader's implied defaults (default sampler config, seed 42) and
+//! deterministically rebuilt tables, so even the table-less v1 file
+//! reconstructs the exact same buckets via `ensure_tables` — which is the
+//! contract that lets a fleet mix replicas restored from any archive
+//! generation and still serve bit-identical answers.
+
+use hashdl::data::io::save_network;
+use hashdl::nn::activation::Activation;
+use hashdl::nn::network::{Network, NetworkConfig};
+use hashdl::sampling::SamplerConfig;
+use hashdl::serve::{
+    load_snapshot, save_snapshot, save_snapshot_v2, save_snapshot_v3, ModelSnapshot,
+    SparseInferenceEngine,
+};
+use hashdl::util::rng::Pcg64;
+use std::io;
+use std::path::{Path, PathBuf};
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("hashdl_snapmatrix_{name}_{}.bin", std::process::id()))
+}
+
+/// The reference model every format writes: default sampler + seed 42 so
+/// the v1 loader's implied configuration matches exactly, tables built
+/// via the deterministic `ensure_tables` streams.
+fn reference_snapshot() -> ModelSnapshot {
+    let cfg = NetworkConfig { n_in: 14, hidden: vec![48, 36], n_out: 5, act: Activation::ReLU };
+    let net = Network::new(&cfg, &mut Pcg64::seeded(20260731));
+    let mut snap = ModelSnapshot::without_tables(net, SamplerConfig::default(), 42);
+    snap.ensure_tables();
+    snap
+}
+
+fn assert_tables_identical(label: &str, got: &ModelSnapshot, want: &ModelSnapshot) {
+    let (gt, wt) = (got.tables.as_ref().unwrap(), want.tables.as_ref().unwrap());
+    assert_eq!(gt.len(), wt.len(), "{label}: table-stack count");
+    for (l, (a, b)) in gt.iter().zip(wt.iter()).enumerate() {
+        assert_eq!(a.n_nodes(), b.n_nodes(), "{label}: layer {l} node count");
+        assert_eq!(a.tables(), b.tables(), "{label}: layer {l} buckets must be bitwise equal");
+        assert_eq!(
+            a.family().max_norm(),
+            b.family().max_norm(),
+            "{label}: layer {l} ALSH scaling constant"
+        );
+        assert_eq!(
+            a.family().srp().projections(),
+            b.family().srp().projections(),
+            "{label}: layer {l} projections must be bitwise equal"
+        );
+    }
+}
+
+#[test]
+fn every_snapshot_generation_loads_bitwise_identical() {
+    let reference = reference_snapshot();
+
+    // Table-driven writer matrix: v1 ships weights only (tables rebuilt on
+    // load), v2–v4 ship the tables in three different encodings.
+    type Writer = fn(&ModelSnapshot, &Path) -> io::Result<()>;
+    let matrix: [(&str, bool, Writer); 4] = [
+        ("v1", false, |snap, path| save_network(&snap.net, path)),
+        ("v2", true, save_snapshot_v2),
+        ("v3", true, save_snapshot_v3),
+        ("v4", true, save_snapshot),
+    ];
+
+    let x: Vec<f32> = (0..14).map(|j| (j as f32 * 0.29).sin()).collect();
+    let mut reference_logits: Option<Vec<f32>> = None;
+
+    for (version, ships_tables, write) in matrix {
+        let path = tmp(version);
+        write(&reference, &path).unwrap();
+        let mut loaded = load_snapshot(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+
+        // Weights: bitwise equal in every generation.
+        assert_eq!(loaded.net.layers.len(), reference.net.layers.len(), "{version}");
+        for (l, (a, b)) in loaded.net.layers.iter().zip(&reference.net.layers).enumerate() {
+            assert_eq!(a.w, b.w, "{version}: layer {l} weights must be bitwise equal");
+            assert_eq!(a.b, b.b, "{version}: layer {l} biases must be bitwise equal");
+        }
+
+        // Sampler metadata rides along from v2 on; v1 falls back to the
+        // defaults the reference was deliberately authored with.
+        assert_eq!(loaded.seed, reference.seed, "{version}: seed");
+        assert_eq!(loaded.sampler.method, reference.sampler.method, "{version}: method");
+        assert_eq!(loaded.sampler.sparsity, reference.sampler.sparsity, "{version}: sparsity");
+        assert_eq!(loaded.sampler.lsh.k, reference.sampler.lsh.k, "{version}: K");
+        assert_eq!(loaded.sampler.lsh.l, reference.sampler.lsh.l, "{version}: L");
+
+        // Tables: shipped generations must round-trip bitwise; the
+        // table-less v1 must *rebuild* the identical tables from weights +
+        // seed via the deterministic per-layer RNG streams.
+        assert_eq!(loaded.tables.is_some(), ships_tables, "{version}: tables shipped?");
+        loaded.ensure_tables();
+        assert_tables_identical(version, &loaded, &reference);
+
+        // End to end: identical logits for the same request from every
+        // generation (the serving-replica interchangeability contract).
+        let engine = SparseInferenceEngine::from_snapshot(loaded);
+        let mut ws = hashdl::serve::InferenceWorkspace::new(&engine);
+        engine.infer(&x, &mut ws);
+        match &reference_logits {
+            None => reference_logits = Some(ws.logits.clone()),
+            Some(want) => {
+                assert_eq!(&ws.logits, want, "{version}: serving logits must be bitwise equal");
+            }
+        }
+    }
+}
