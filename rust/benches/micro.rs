@@ -16,6 +16,8 @@ use hashdl::nn::sparse::{LayerInput, SparseVec};
 use hashdl::optim::{OptimConfig, Optimizer};
 use hashdl::sampling::lsh_select::LshSelector;
 use hashdl::sampling::{make_selector, Method, NodeSelector, SamplerConfig};
+use hashdl::exec::{forward_union_major, LayerPlan};
+use hashdl::tensor::kernels;
 use hashdl::tensor::matrix::Matrix;
 use hashdl::tensor::vecops::{dot, top_k_indices};
 use hashdl::train::trainer::{train_batch, BatchWorkspace};
@@ -140,14 +142,134 @@ fn main() {
         raw_hits as f64 / (trials * 50) as f64
     );
 
-    bench_batched_engine();
+    let kernel_rows = bench_kernels();
+    let fused_section = bench_fused_forward();
+    bench_batched_engine(&kernel_rows, &fused_section);
+}
+
+/// kernel-bench: dispatched kernels (SIMD when `--features simd` on an
+/// AVX2 CPU) vs the scalar reference at representative hot-path lengths.
+/// Outputs are bit-identical by construction; only the clock differs.
+fn bench_kernels() -> Vec<String> {
+    header(&format!(
+        "kernel-bench: scalar vs dispatched (simd_active = {})",
+        kernels::simd_active()
+    ));
+    let mut rng = Pcg64::seeded(77);
+    let mut rows = Vec::new();
+    for &n in &[256usize, 1024] {
+        let a: Vec<f32> = (0..n).map(|_| rng.gaussian()).collect();
+        let b: Vec<f32> = (0..n).map(|_| rng.gaussian()).collect();
+        let s_sc = bench_loop(500, 5_000, || kernels::dot_scalar(&a, &b));
+        let s_dp = bench_loop(500, 5_000, || kernels::dot(&a, &b));
+        println!(
+            "dot({n:>4}):        scalar {:>8.1}ns  dispatched {:>8.1}ns  ({:.2}x)",
+            s_sc.min() * 1e9,
+            s_dp.min() * 1e9,
+            s_sc.min() / s_dp.min().max(1e-12)
+        );
+        rows.push(format!(
+            "    {{\"kernel\": \"dot\", \"n\": {n}, \"scalar_ns\": {:.1}, \
+             \"dispatch_ns\": {:.1}}}",
+            s_sc.min() * 1e9,
+            s_dp.min() * 1e9
+        ));
+        // Gather dot at 5% density of the row's width — the union-gather
+        // inner loop shape for sparse hidden inputs.
+        let k = (n / 20).max(8);
+        let idx: Vec<u32> = rng.sample_indices(n, k);
+        let val: Vec<f32> = (0..k).map(|_| rng.gaussian()).collect();
+        let s_sc = bench_loop(500, 5_000, || kernels::sparse_dot_scalar(&a, &idx, &val));
+        let s_dp = bench_loop(500, 5_000, || kernels::sparse_dot(&a, &idx, &val));
+        println!(
+            "sparse_dot({k:>3}/{n:>4}): scalar {:>6.1}ns  dispatched {:>8.1}ns  ({:.2}x)",
+            s_sc.min() * 1e9,
+            s_dp.min() * 1e9,
+            s_sc.min() / s_dp.min().max(1e-12)
+        );
+        rows.push(format!(
+            "    {{\"kernel\": \"sparse_dot\", \"n\": {k}, \"scalar_ns\": {:.1}, \
+             \"dispatch_ns\": {:.1}}}",
+            s_sc.min() * 1e9,
+            s_dp.min() * 1e9
+        ));
+    }
+    rows
+}
+
+/// Union-major gather vs the legacy sample-major forward on a layer big
+/// enough (4096×1024 ≈ 16 MB of weights) that row reuse is a memory-
+/// traffic question, not a cache accident. Same active sets, same
+/// multiplications, bit-identical outputs — the only degree of freedom is
+/// loop order. Returns the `fused_forward` JSON section; the
+/// `union_vs_sample_speedup` field is the number CI pins ≥ 1.0.
+fn bench_fused_forward() -> String {
+    header("fused-forward: union-major gather vs sample-major (4096x1024, B=64, 5%)");
+    let n_in = 1024usize;
+    let n_out = 4096usize;
+    let bsz = 64usize;
+    let active_per_sample = n_out / 20;
+    let mut rng = Pcg64::seeded(91);
+    let layer = Layer::new(n_in, n_out, Activation::ReLU, &mut rng);
+    let xs: Vec<Vec<f32>> =
+        (0..bsz).map(|_| (0..n_in).map(|_| rng.gaussian()).collect()).collect();
+    let inputs: Vec<LayerInput> = xs.iter().map(|x| LayerInput::Dense(x)).collect();
+
+    let mut lp = LayerPlan::default();
+    lp.actives = (0..bsz).map(|_| rng.sample_indices(n_out, active_per_sample)).collect();
+    lp.refresh_union(n_out, bsz);
+    let union = lp.union().len();
+    let total_active = bsz * active_per_sample;
+    let sharing = total_active as f64 / union.max(1) as f64;
+
+    let mut outs_sm = vec![SparseVec::new(); bsz];
+    let mut outs_um = vec![SparseVec::new(); bsz];
+    let mults = layer.forward_sparse_batch(&inputs, &lp.actives, &mut outs_sm);
+    assert_eq!(mults, forward_union_major(&layer, &inputs, &lp, &mut outs_um));
+    for (a, b) in outs_sm.iter().zip(&outs_um) {
+        assert_eq!(a.idx, b.idx);
+        assert!(a.val.iter().zip(&b.val).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    let s_sm =
+        bench_loop(3, 30, || layer.forward_sparse_batch(&inputs, &lp.actives, &mut outs_sm));
+    let s_um = bench_loop(3, 30, || forward_union_major(&layer, &inputs, &lp, &mut outs_um));
+    let speedup = s_sm.min() / s_um.min().max(1e-12);
+    let sm_bytes = (total_active * n_in * 4) as u64;
+    let um_bytes = (union * n_in * 4) as u64;
+    let sm_rate = mults as f64 / s_sm.min().max(1e-12);
+    let um_rate = mults as f64 / s_um.min().max(1e-12);
+    println!(
+        "sample-major: {:.3e} mults/s  {:.2} bytes/mult\n\
+         union-major:  {:.3e} mults/s  {:.2} bytes/mult\n\
+         sharing {:.2}x  ->  union-major speedup {:.2}x",
+        sm_rate,
+        sm_bytes as f64 / mults as f64,
+        um_rate,
+        um_bytes as f64 / mults as f64,
+        sharing,
+        speedup
+    );
+    format!(
+        "  \"fused_forward\": {{\n    \"layer\": \"{n_in}x{n_out}\",\n    \"batch\": {bsz},\n    \
+         \"active_per_sample\": {active_per_sample},\n    \"union\": {union},\n    \
+         \"sharing_factor\": {sharing:.3},\n    \"simd\": {},\n    \
+         \"sample_major\": {{\"mults_per_sec\": {sm_rate:.4e}, \"bytes_per_mult\": {:.3}}},\n    \
+         \"union_major\": {{\"mults_per_sec\": {um_rate:.4e}, \"bytes_per_mult\": {:.3}}},\n    \
+         \"union_vs_sample_speedup\": {speedup:.3}\n  }}",
+        kernels::simd_active(),
+        sm_bytes as f64 / mults as f64,
+        um_bytes as f64 / mults as f64,
+    )
 }
 
 /// Batched-vs-per-example throughput at sparsity 0.05 (the PR-tracking
 /// benchmark): full `train_batch` steps on a 256-512-512-2 LSH network,
 /// plus selection-level hash-computation accounting showing the
-/// once-per-batch maintenance amortization. Emits BENCH_batch.json.
-fn bench_batched_engine() {
+/// once-per-batch maintenance amortization. Emits BENCH_batch.json,
+/// folding in the kernel-bench rows and the fused-forward section so the
+/// whole perf trajectory lives in one artifact.
+fn bench_batched_engine(kernel_rows: &[String], fused_section: &str) {
     header("batched sparse engine: minibatch vs per-example (LSH @ 5%)");
     let dim = 256;
     let n_train = 256usize;
@@ -244,9 +366,12 @@ fn bench_batched_engine() {
     let json = format!(
         "{{\n  \"bench\": \"batch\",\n  \"network\": \"{dim}-{hidden}-{hidden}-2\",\n  \
          \"method\": \"lsh\",\n  \"sparsity\": 0.05,\n  \"samples\": {n_train},\n  \
-         \"throughput\": [\n{}\n  ],\n  \"selection_hash_ops\": [\n{}\n  ]\n}}\n",
+         \"throughput\": [\n{}\n  ],\n  \"selection_hash_ops\": [\n{}\n  ],\n  \
+         \"kernel_bench\": [\n{}\n  ],\n{}\n}}\n",
         throughput.join(",\n"),
         hash_cases.join(",\n"),
+        kernel_rows.join(",\n"),
+        fused_section,
     );
     match std::fs::write("BENCH_batch.json", &json) {
         Ok(()) => println!("wrote BENCH_batch.json"),

@@ -308,7 +308,10 @@ pub fn select_batch_into<V: TableView>(
 }
 
 /// One hidden layer's slice of a [`SparseBatchPlan`]: the per-sample
-/// active sets plus their deduplicated union.
+/// active sets, their deduplicated union, and the inverted (CSR) index
+/// over the union that drives the union-major gather. Every buffer here
+/// is reused across batches — `refresh_union` allocates only while a
+/// batch is larger than any batch seen before.
 #[derive(Default)]
 pub struct LayerPlan {
     /// Per-sample active sets (index = sample; grown to the batch size,
@@ -323,7 +326,17 @@ pub struct LayerPlan {
     /// union) — dedup without a hash set, same trick as the table
     /// scratch.
     stamp: Vec<u32>,
+    /// Union slot of node `i` (valid only when `stamp[i] == epoch`).
+    slot: Vec<u32>,
     epoch: u32,
+    /// CSR inverted index over the union: the batch members of union
+    /// slot `u` are `members[row_starts[u]..row_starts[u + 1]]`, each
+    /// packed as `(sample << 32) | position`, in (sample, position)
+    /// order — so a row's first member is that node's first touch.
+    row_starts: Vec<u32>,
+    members: Vec<u64>,
+    /// Fill cursor scratch for the CSR counting sort.
+    cursor: Vec<u32>,
 }
 
 impl LayerPlan {
@@ -333,10 +346,11 @@ impl LayerPlan {
         &self.union
     }
 
-    /// Recompute the union from `actives[..bsz]`.
+    /// Recompute the union and its inverted index from `actives[..bsz]`.
     pub fn refresh_union(&mut self, n_out: usize, bsz: usize) {
         if self.stamp.len() < n_out {
             self.stamp.resize(n_out, 0);
+            self.slot.resize(n_out, 0);
         }
         self.epoch = self.epoch.wrapping_add(1);
         if self.epoch == 0 {
@@ -347,15 +361,102 @@ impl LayerPlan {
             self.epoch = 1;
         }
         self.union.clear();
+        let mut total = 0usize;
         for s in 0..bsz {
+            total += self.actives[s].len();
             for &id in &self.actives[s] {
                 if self.stamp[id as usize] != self.epoch {
                     self.stamp[id as usize] = self.epoch;
+                    self.slot[id as usize] = self.union.len() as u32;
                     self.union.push(id);
                 }
             }
         }
+        // Inverted index: count members per union row, prefix-sum into
+        // row starts, then fill in (sample, position) order.
+        let u = self.union.len();
+        self.row_starts.clear();
+        self.row_starts.resize(u + 1, 0);
+        for s in 0..bsz {
+            for &id in &self.actives[s] {
+                self.row_starts[self.slot[id as usize] as usize + 1] += 1;
+            }
+        }
+        for k in 0..u {
+            self.row_starts[k + 1] += self.row_starts[k];
+        }
+        self.cursor.clear();
+        self.cursor.extend_from_slice(&self.row_starts[..u]);
+        self.members.clear();
+        self.members.resize(total, 0);
+        for s in 0..bsz {
+            for (p, &id) in self.actives[s].iter().enumerate() {
+                let slot = self.slot[id as usize] as usize;
+                let c = self.cursor[slot] as usize;
+                self.members[c] = ((s as u64) << 32) | p as u64;
+                self.cursor[slot] = (c + 1) as u32;
+            }
+        }
+        // First-touch stability: union slot `u` must hold the id found at
+        // its own first (sample, position) member — the ordering contract
+        // both the union-major gather (which writes through these
+        // positions) and the trainer's gradient-sink row registration
+        // depend on.
+        #[cfg(debug_assertions)]
+        for (u_slot, &id) in self.union.iter().enumerate() {
+            let m = self.members[self.row_starts[u_slot] as usize];
+            let (s, p) = ((m >> 32) as usize, (m & 0xFFFF_FFFF) as usize);
+            debug_assert_eq!(
+                self.actives[s][p], id,
+                "union slot {u_slot} is not first-touch stable"
+            );
+        }
     }
+}
+
+/// Union-major fused sparse forward for one hidden layer: iterate the
+/// batch union once, load each weight row a single time, and dot it
+/// against every batch member whose active set contains it — writing
+/// each result at the member's ranked-selection position, so per-sample
+/// outputs are ordered exactly as [`Layer::forward_sparse`] orders them.
+///
+/// Bit-for-bit identical to the sample-major pass over the same active
+/// sets: every output is the same `act(dot_row(w[id]) + b[id])` computed
+/// by the same kernels; only the loop order — and therefore the
+/// weight-plane traffic, `|union|` row loads instead of `Σ|active|` —
+/// changes. Returns total forward multiplications across the batch
+/// (identical accounting to the sample-major pass).
+pub fn forward_union_major(
+    layer: &Layer,
+    inputs: &[LayerInput<'_>],
+    lp: &LayerPlan,
+    outs: &mut [SparseVec],
+) -> u64 {
+    let bsz = inputs.len();
+    debug_assert!(lp.actives.len() >= bsz && outs.len() >= bsz);
+    // Pre-shape every output: idx = the sample's ranked active set; val
+    // is filled positionally by the gather below.
+    let mut mults = 0u64;
+    for s in 0..bsz {
+        let out = &mut outs[s];
+        out.idx.clear();
+        out.idx.extend_from_slice(&lp.actives[s]);
+        out.val.clear();
+        out.val.resize(lp.actives[s].len(), 0.0);
+        mults += (lp.actives[s].len() * inputs[s].active_len()) as u64;
+    }
+    for (u, &id) in lp.union.iter().enumerate() {
+        let row = layer.w.row(id as usize);
+        let bias = layer.b[id as usize];
+        let lo = lp.row_starts[u] as usize;
+        let hi = lp.row_starts[u + 1] as usize;
+        for &m in &lp.members[lo..hi] {
+            let (s, p) = ((m >> 32) as usize, (m & 0xFFFF_FFFF) as usize);
+            let z = inputs[s].dot_row(row) + bias;
+            outs[s].val[p] = layer.act.apply(z);
+        }
+    }
+    mults
 }
 
 /// Per-layer union active sets + per-sample membership for one batch —
@@ -399,6 +500,29 @@ pub struct BatchRunStats {
     /// union_active` is the batch's sharing factor (how much co-batched
     /// requests overlap in the neurons they fire).
     pub total_active: u64,
+    /// Total forward multiplications across the batch (hidden layers +
+    /// dense output layer). Identical between union-major and
+    /// sample-major execution — the loop order changes, the arithmetic
+    /// does not.
+    pub forward_mults: u64,
+    /// Modeled weight-plane traffic: each weight row load costs its full
+    /// width (`n_in × 4` bytes), counted once per load. Sample-major
+    /// loads `Σ|active|` rows per hidden layer; union-major loads
+    /// `|union|` — so `weight_bytes / forward_mults` drops by the
+    /// sharing factor on the hidden layers when the gather is on.
+    pub weight_bytes: u64,
+}
+
+impl BatchRunStats {
+    /// Modeled weight bytes per forward multiplication (lower = more
+    /// row reuse).
+    pub fn bytes_per_mult(&self) -> f64 {
+        if self.forward_mults == 0 {
+            0.0
+        } else {
+            self.weight_bytes as f64 / self.forward_mults as f64
+        }
+    }
 }
 
 /// The batched sparse forward driver: builds a [`SparseBatchPlan`] layer
@@ -425,6 +549,12 @@ pub struct BatchExecutor {
     pub sample_mults: Vec<MultCounters>,
     /// Stats of the most recent `forward_batch` run.
     pub last: BatchRunStats,
+    /// Execution order for the hidden sparse forwards. `false` (default)
+    /// = union-major gather (each weight row loaded once per batch);
+    /// `true` = legacy sample-major loop (each sample re-walks its own
+    /// rows). Outputs are bit-identical either way — the toggle exists
+    /// for the equivalence tests and the kernel bench.
+    pub sample_major: bool,
 }
 
 impl BatchExecutor {
@@ -504,11 +634,29 @@ impl BatchExecutor {
             self.last.selection_mults += stats.selection_mults;
             self.last.union_active += lp.union.len() as u64;
             let outs = &mut rest[0];
+            let fwd = if self.sample_major {
+                let mut total = 0u64;
+                for s in 0..bsz {
+                    total += layer.forward_sparse(inputs[s], &lp.actives[s], &mut outs[s]);
+                }
+                total
+            } else {
+                forward_union_major(layer, &inputs, lp, &mut outs[..bsz])
+            };
+            self.last.forward_mults += fwd;
+            let rows_loaded = if self.sample_major {
+                lp.actives[..bsz].iter().map(|a| a.len() as u64).sum::<u64>()
+            } else {
+                lp.union.len() as u64
+            };
+            self.last.weight_bytes += rows_loaded * layer.n_in() as u64 * 4;
             for s in 0..bsz {
                 self.last.total_active += lp.actives[s].len() as u64;
                 self.sample_mults[s].selection += self.per_sample_sel[s];
+                // Per-request forward attribution: same formula
+                // `forward_sparse` returns, independent of loop order.
                 self.sample_mults[s].forward +=
-                    layer.forward_sparse(inputs[s], &lp.actives[s], &mut outs[s]);
+                    (lp.actives[s].len() * inputs[s].active_len()) as u64;
             }
         }
         // Output layer: dense over all classes from the last sparse
@@ -520,8 +668,12 @@ impl BatchExecutor {
             } else {
                 LayerInput::Sparse(&self.acts[n_hidden - 1][s])
             };
-            self.sample_mults[s].forward += out_layer.forward_all(input, &mut self.logits[s]);
+            let m = out_layer.forward_all(input, &mut self.logits[s]);
+            self.sample_mults[s].forward += m;
+            self.last.forward_mults += m;
         }
+        self.last.weight_bytes +=
+            (bsz * out_layer.n_out() * out_layer.n_in()) as u64 * 4;
     }
 }
 
@@ -642,6 +794,91 @@ mod tests {
         // Recomputing with fewer samples shrinks the union.
         lp.refresh_union(10, 1);
         assert_eq!(lp.union(), &[5, 1, 9]);
+    }
+
+    #[test]
+    fn union_major_gather_matches_sample_major_bitwise() {
+        // Dense and sparse inputs, overlapping active sets with ragged
+        // sizes: the gather must reproduce forward_sparse bit-for-bit,
+        // including output ordering and mult accounting.
+        let l = layer(20, 150, 31);
+        let mut rng = Pcg64::seeded(32);
+        let xs = queries(5, 20);
+        let sparse_in: Vec<SparseVec> = xs
+            .iter()
+            .map(|x| {
+                let mut sv = SparseVec::new();
+                for (j, &v) in x.iter().enumerate().step_by(2) {
+                    sv.push(j as u32, v);
+                }
+                sv
+            })
+            .collect();
+        for dense in [true, false] {
+            let inputs: Vec<LayerInput> = if dense {
+                xs.iter().map(|x| LayerInput::Dense(x)).collect()
+            } else {
+                sparse_in.iter().map(LayerInput::Sparse).collect()
+            };
+            let mut lp = LayerPlan::default();
+            lp.actives = (0..5).map(|s| rng.sample_indices(150, 10 + 7 * s)).collect();
+            lp.refresh_union(150, 5);
+
+            let mut want = vec![SparseVec::new(); 5];
+            let mut want_mults = 0u64;
+            for s in 0..5 {
+                want_mults += l.forward_sparse(inputs[s], &lp.actives[s], &mut want[s]);
+            }
+            let mut got = vec![SparseVec::new(); 5];
+            let got_mults = forward_union_major(&l, &inputs, &lp, &mut got);
+            assert_eq!(got_mults, want_mults, "dense={dense} mult accounting");
+            for s in 0..5 {
+                assert_eq!(got[s].idx, want[s].idx, "dense={dense} sample {s} order");
+                let gb: Vec<u32> = got[s].val.iter().map(|v| v.to_bits()).collect();
+                let wb: Vec<u32> = want[s].val.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(gb, wb, "dense={dense} sample {s} values");
+            }
+        }
+    }
+
+    #[test]
+    fn executor_sample_major_toggle_is_bitwise_identical() {
+        let mut rng = Pcg64::seeded(41);
+        let l0 = layer(12, 80, 42);
+        let l1 = layer(80, 60, 43);
+        let out = layer(60, 4, 44);
+        let cfg = LshConfig::default();
+        let t0 = FrozenLayerTables::freeze(&LayerTables::build(&l0.w, cfg, &mut rng));
+        let t1 = FrozenLayerTables::freeze(&LayerTables::build(&l1.w, cfg, &mut rng));
+        let layers = [l0, l1, out];
+        let xs = queries(6, 12);
+        let xrefs: Vec<&[f32]> = xs.iter().map(|x| x.as_slice()).collect();
+
+        let mut run = |sample_major: bool| {
+            let mut exec = BatchExecutor::new();
+            exec.sample_major = sample_major;
+            let mut scratches = [FrozenQueryScratch::new(), FrozenQueryScratch::new()];
+            let mut it = scratches.iter_mut();
+            let mut views = vec![
+                FrozenTableView { tables: &t0, scratch: it.next().unwrap() },
+                FrozenTableView { tables: &t1, scratch: it.next().unwrap() },
+            ];
+            let mut rng_unused = Pcg64::seeded(0);
+            exec.forward_batch(&layers, &mut views, 0.2, 0, &xrefs, &mut rng_unused);
+            exec
+        };
+        let fused = run(false);
+        let legacy = run(true);
+        for s in 0..6 {
+            let fb: Vec<u32> = fused.logits[s].iter().map(|v| v.to_bits()).collect();
+            let lb: Vec<u32> = legacy.logits[s].iter().map(|v| v.to_bits()).collect();
+            assert_eq!(fb, lb, "sample {s} logits");
+            assert_eq!(fused.sample_mults[s], legacy.sample_mults[s], "sample {s} mults");
+        }
+        assert_eq!(fused.last.forward_mults, legacy.last.forward_mults);
+        // Union-major never loads more weight rows than sample-major.
+        assert!(fused.last.weight_bytes <= legacy.last.weight_bytes);
+        assert!(fused.last.bytes_per_mult() <= legacy.last.bytes_per_mult());
     }
 
     #[test]

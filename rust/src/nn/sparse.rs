@@ -92,13 +92,10 @@ impl<'a> LayerInput<'a> {
     pub fn dot_row(&self, row: &[f32]) -> f32 {
         match self {
             LayerInput::Dense(x) => crate::tensor::vecops::dot(row, x),
-            LayerInput::Sparse(s) => {
-                let mut acc = 0.0f32;
-                for (&j, &v) in s.idx.iter().zip(&s.val) {
-                    acc += row[j as usize] * v;
-                }
-                acc
-            }
+            // Shared gather kernel: the same routine (and therefore the
+            // same rounding) whether a row is dotted per-sample or inside
+            // the union-major fused gather.
+            LayerInput::Sparse(s) => crate::tensor::kernels::sparse_dot(row, &s.idx, &s.val),
         }
     }
 }

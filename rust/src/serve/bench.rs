@@ -49,6 +49,7 @@ use crate::router::stats::ModelStatus;
 use crate::router::{RouteOutcome, RoutedRequest, Router};
 use crate::serve::engine::SparseInferenceEngine;
 use crate::serve::pool::{PoolConfig, ServePool};
+use crate::train::metrics::MultRates;
 use crate::util::rng::Pcg64;
 use std::fmt::Write as _;
 use std::io;
@@ -657,6 +658,20 @@ pub struct FusedSideReport {
     pub mults_per_request: f64,
     pub wall_secs: f64,
     pub requests_per_sec: f64,
+    /// Forward multiplications only (the weight-plane work the kernel
+    /// rates below are measured over); exact count from the untimed pass.
+    pub forward_mults: u64,
+    /// Modeled weight-plane traffic of the forward passes (see
+    /// [`crate::exec::BatchRunStats::weight_bytes`]); exact count from
+    /// the untimed pass.
+    pub weight_bytes: u64,
+    /// Forward multiplications per wall-clock second (counted forward
+    /// mults over the timed pass).
+    pub mults_per_sec: f64,
+    /// `weight_bytes / forward_mults` — per-request execution pays the
+    /// full per-sample row traffic, the fused side divides the
+    /// hidden-layer term by the batch's sharing factor.
+    pub bytes_per_mult: f64,
 }
 
 /// Result of [`run_fused_compare`]: the same request stream executed
@@ -712,7 +727,10 @@ pub fn run_fused_compare(
     let mut base_logits: Vec<Vec<f32>> = Vec::with_capacity(requests);
     for i in 0..requests {
         let inf = engine.infer(&xs[i % xs.len()], &mut ws_base);
-        base.hash_invocations += ws_base.last_batch_stats().hash_invocations;
+        let stats = ws_base.last_batch_stats();
+        base.hash_invocations += stats.hash_invocations;
+        base.forward_mults += stats.forward_mults;
+        base.weight_bytes += stats.weight_bytes;
         base.total_mults += inf.mults.total();
         base_preds.push(inf.pred);
         base_mults.push(inf.mults.total());
@@ -732,6 +750,8 @@ pub fn run_fused_compare(
         engine.infer_batch(&xrefs, &mut ws_fused);
         let stats = ws_fused.last_batch_stats();
         fused.hash_invocations += stats.hash_invocations;
+        fused.forward_mults += stats.forward_mults;
+        fused.weight_bytes += stats.weight_bytes;
         union_active += stats.union_active;
         total_active += stats.total_active;
         for (s, &i) in chunk.iter().enumerate() {
@@ -752,6 +772,9 @@ pub fn run_fused_compare(
     }
     base.wall_secs = t0.elapsed().as_secs_f64().max(1e-9);
     base.requests_per_sec = requests as f64 / base.wall_secs;
+    let base_rates = MultRates::from_run(base.forward_mults, base.weight_bytes, base.wall_secs);
+    base.mults_per_sec = base_rates.mults_per_sec;
+    base.bytes_per_mult = base_rates.bytes_per_mult;
 
     let t1 = Instant::now();
     for chunk in ids.chunks(batch) {
@@ -760,6 +783,9 @@ pub fn run_fused_compare(
     }
     fused.wall_secs = t1.elapsed().as_secs_f64().max(1e-9);
     fused.requests_per_sec = requests as f64 / fused.wall_secs;
+    let fused_rates = MultRates::from_run(fused.forward_mults, fused.weight_bytes, fused.wall_secs);
+    fused.mults_per_sec = fused_rates.mults_per_sec;
+    fused.bytes_per_mult = fused_rates.bytes_per_mult;
 
     FusedCompareReport {
         requests: requests as u64,
@@ -780,13 +806,18 @@ fn fused_side_json(r: &FusedSideReport) -> String {
     format!(
         "{{\"hash_invocations\": {}, \"hash_invocations_per_request\": {:.4}, \
          \"total_mults\": {}, \"mults_per_request\": {:.1}, \"wall_secs\": {:.4}, \
-         \"requests_per_sec\": {:.1}}}",
+         \"requests_per_sec\": {:.1}, \"forward_mults\": {}, \"weight_bytes\": {}, \
+         \"mults_per_sec\": {:.1}, \"bytes_per_mult\": {:.3}}}",
         r.hash_invocations,
         r.hash_invocations_per_request,
         r.total_mults,
         r.mults_per_request,
         r.wall_secs,
         r.requests_per_sec,
+        r.forward_mults,
+        r.weight_bytes,
+        r.mults_per_sec,
+        r.bytes_per_mult,
     )
 }
 
@@ -1479,6 +1510,12 @@ mod tests {
         // Exact mult counts are identical — fusing changes invocation
         // counts, never the multiplication accounting.
         assert_eq!(report.fused.total_mults, report.per_request.total_mults);
+        assert_eq!(report.fused.forward_mults, report.per_request.forward_mults);
+        // Same multiplications, fewer weight-row loads: the union-major
+        // gather never re-reads a row another co-batched request already
+        // paid for.
+        assert!(report.fused.weight_bytes <= report.per_request.weight_bytes);
+        assert!(report.fused.bytes_per_mult <= report.per_request.bytes_per_mult);
         assert!(report.sharing_factor >= 1.0);
 
         let path =

@@ -47,6 +47,7 @@ use crate::nn::network::Network;
 use crate::nn::sparse::SparseVec;
 use crate::publish::{publish_once, ModelParts, PublishedModel, TableReader};
 use crate::serve::snapshot::ModelSnapshot;
+use crate::tensor::{Batch, BatchPlane};
 use crate::train::metrics::MultCounters;
 use crate::util::rng::Pcg64;
 use std::sync::Arc;
@@ -79,6 +80,11 @@ pub struct InferenceWorkspace {
     exec: BatchExecutor,
     /// Results of the most recent `infer_batch` (one per sample).
     results: Vec<Inference>,
+    /// Activation planes for the batched dense path (`infer_dense_batch`);
+    /// after a run the final logits live in `dense_cur`, one row per
+    /// sample.
+    dense_cur: BatchPlane,
+    dense_next: BatchPlane,
     /// Hidden-layer sparse activations of the last *single-request*
     /// inference, one slot per hidden layer (kept for the batch-of-one
     /// API: `evaluate`, replay tests, divergence tooling).
@@ -98,6 +104,8 @@ impl InferenceWorkspace {
             scratches: (0..n_hidden).map(|_| FrozenQueryScratch::new()).collect(),
             exec: BatchExecutor::new(),
             results: Vec::new(),
+            dense_cur: BatchPlane::new(),
+            dense_next: BatchPlane::new(),
             acts: (0..n_hidden).map(|_| SparseVec::new()).collect(),
             logits: Vec::new(),
         }
@@ -158,9 +166,17 @@ impl InferenceWorkspace {
     }
 
     /// Execution stats of the most recent `infer_batch` (fingerprint hash
-    /// invocations, union/total active counts).
+    /// invocations, union/total active counts, forward mults and modeled
+    /// weight-plane bytes).
     pub fn last_batch_stats(&self) -> BatchRunStats {
         self.exec.last
+    }
+
+    /// Logits of sample `s` from the most recent
+    /// [`SparseInferenceEngine::infer_dense_batch`]. Valid until the next
+    /// dense-batch call.
+    pub fn batch_dense_logits(&self, s: usize) -> &[f32] {
+        self.dense_cur.row(s)
     }
 }
 
@@ -303,6 +319,38 @@ impl SparseInferenceEngine {
             pred: crate::tensor::vecops::argmax(logits) as u32,
             mults,
             version: model.version,
+        }
+    }
+
+    /// Batched dense inference: the whole micro-batch runs through
+    /// [`Network::forward_dense_batch`] (row-outer, sample-inner — each
+    /// weight row is loaded once per batch, the dense analogue of the
+    /// sparse union-major gather), producing per-sample results bitwise
+    /// identical to [`SparseInferenceEngine::infer_dense`]. Results land
+    /// in `ws.last_results()`; per-sample logits stay readable through
+    /// [`InferenceWorkspace::batch_dense_logits`].
+    pub fn infer_dense_batch(&self, xs: &[&[f32]], ws: &mut InferenceWorkspace) {
+        debug_assert_eq!(
+            ws.slot_id,
+            self.slot_id(),
+            "workspace is pinned to a different engine's publication slot"
+        );
+        let InferenceWorkspace { model, dense_cur, dense_next, results, .. } = ws;
+        results.clear();
+        if xs.is_empty() {
+            return;
+        }
+        let batch = Batch::from_rows(xs);
+        let total = model.net.forward_dense_batch(&batch, dense_cur, dense_next);
+        // Dense cost is input-independent, so the batch total divides
+        // exactly into the same per-request count `infer_dense` reports.
+        let per_request = total / xs.len() as u64;
+        for s in 0..xs.len() {
+            results.push(Inference {
+                pred: crate::tensor::vecops::argmax(dense_cur.row(s)) as u32,
+                mults: MultCounters { forward: per_request, ..MultCounters::default() },
+                version: model.version,
+            });
         }
     }
 
@@ -493,6 +541,32 @@ mod tests {
         let mut reference = Vec::new();
         e.current().net.forward_dense(&x, &mut reference);
         assert_eq!(ws.logits, reference);
+    }
+
+    #[test]
+    fn dense_batch_matches_per_request_dense_bitwise() {
+        let e = engine(17);
+        let xs: Vec<Vec<f32>> = (0..7)
+            .map(|s| (0..16).map(|j| ((s * 16 + j) as f32 * 0.13).cos()).collect())
+            .collect();
+        let xrefs: Vec<&[f32]> = xs.iter().map(|x| x.as_slice()).collect();
+
+        let mut ws_batch = InferenceWorkspace::new(&e);
+        e.infer_dense_batch(&xrefs, &mut ws_batch);
+        assert_eq!(ws_batch.last_results().len(), 7);
+
+        let mut ws_single = InferenceWorkspace::new(&e);
+        for (s, x) in xs.iter().enumerate() {
+            let direct = e.infer_dense(x, &mut ws_single);
+            let batched = ws_batch.last_results()[s];
+            assert_eq!(batched.pred, direct.pred, "request {s} pred");
+            assert_eq!(batched.mults.total(), direct.mults.total(), "request {s} mults");
+            assert_eq!(
+                ws_batch.batch_dense_logits(s),
+                ws_single.logits.as_slice(),
+                "request {s} logits"
+            );
+        }
     }
 
     #[test]

@@ -506,9 +506,16 @@ fn worker_loop(
                 );
             }
         } else {
-            for req in batch.drain(..) {
-                let inf = engine.infer_dense(&req.x, &mut ws);
-                let logits = req.want_logits.then(|| ws.logits.clone());
+            // Batched dense execution: the whole micro-batch goes through
+            // the shared weight pass (each weight row loaded once per
+            // batch — apples-to-apples with the fused sparse path),
+            // bit-identical responses to per-request `infer_dense`.
+            let xs: Vec<&[f32]> = batch.iter().map(|req| req.x.as_slice()).collect();
+            engine.infer_dense_batch(&xs, &mut ws);
+            drop(xs);
+            for (s, req) in batch.drain(..).enumerate() {
+                let inf = ws.last_results()[s];
+                let logits = req.want_logits.then(|| ws.batch_dense_logits(s).to_vec());
                 send_response(
                     counters,
                     req,

@@ -1,0 +1,129 @@
+//! 32-byte-aligned f32 storage for weight and projection planes.
+//!
+//! `AVec` is a std-only aligned buffer: the backing store is a `Vec` of
+//! 32-byte `Lane`s (eight `f32`s each), so element 0 of the logical slice
+//! always sits on a 32-byte boundary — the alignment AVX2 loads prefer
+//! and a cache-line-friendly base for the row-major weight planes the
+//! union-major gather streams over. Rows inside a plane start aligned
+//! whenever the row width is a multiple of 8; the SIMD kernels use
+//! unaligned loads, so alignment here is a performance property, never a
+//! correctness requirement.
+
+/// One 32-byte-aligned block of eight f32s. `repr(C)` with size equal to
+/// alignment, so a `Vec<Lane>` is a gap-free run of f32s.
+#[derive(Clone, Copy)]
+#[repr(C, align(32))]
+struct Lane([f32; 8]);
+
+const LANE: usize = 8;
+
+/// Aligned f32 buffer exposing a plain `&[f32]` of its logical length.
+/// Storage is whole lanes; the logical length is tracked separately.
+#[derive(Clone, Default)]
+pub struct AVec {
+    lanes: Vec<Lane>,
+    len: usize,
+}
+
+impl AVec {
+    pub fn new() -> Self {
+        AVec::default()
+    }
+
+    /// Zero-filled buffer of logical length `n`.
+    pub fn zeros(n: usize) -> Self {
+        AVec { lanes: vec![Lane([0.0; LANE]); n.div_ceil(LANE)], len: n }
+    }
+
+    pub fn from_slice(x: &[f32]) -> Self {
+        let mut v = AVec::zeros(x.len());
+        v.as_mut_slice().copy_from_slice(x);
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        // SAFETY: `Lane` is `repr(C)` with no padding (8 × 4 bytes = 32
+        // bytes = its alignment), so the lane storage is a contiguous run
+        // of `lanes.len() * 8` initialized f32s; the first `len` of them
+        // are the logical contents. For an empty Vec, `as_ptr` is a
+        // well-aligned dangling pointer, which is valid for a zero-length
+        // slice.
+        unsafe { std::slice::from_raw_parts(self.lanes.as_ptr().cast::<f32>(), self.len) }
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        // SAFETY: as in `as_slice`; `&mut self` guarantees uniqueness.
+        unsafe { std::slice::from_raw_parts_mut(self.lanes.as_mut_ptr().cast::<f32>(), self.len) }
+    }
+}
+
+impl std::ops::Deref for AVec {
+    type Target = [f32];
+    #[inline]
+    fn deref(&self) -> &[f32] {
+        self.as_slice()
+    }
+}
+
+impl std::ops::DerefMut for AVec {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut [f32] {
+        self.as_mut_slice()
+    }
+}
+
+impl PartialEq for AVec {
+    fn eq(&self, other: &AVec) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl std::fmt::Debug for AVec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        std::fmt::Debug::fmt(self.as_slice(), f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base_pointer_is_32_byte_aligned() {
+        for n in [1usize, 7, 8, 9, 100] {
+            let v = AVec::zeros(n);
+            assert_eq!(v.as_slice().as_ptr() as usize % 32, 0, "n={n}");
+            assert_eq!(v.len(), n);
+            assert!(v.iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn from_slice_roundtrips_ragged_lengths() {
+        for n in 0usize..20 {
+            let src: Vec<f32> = (0..n).map(|i| i as f32 - 3.5).collect();
+            let v = AVec::from_slice(&src);
+            assert_eq!(v.as_slice(), src.as_slice());
+        }
+    }
+
+    #[test]
+    fn mutation_and_equality_use_logical_contents() {
+        let mut a = AVec::from_slice(&[1.0, 2.0, 3.0]);
+        let b = AVec::from_slice(&[1.0, 9.0, 3.0]);
+        assert_ne!(a, b);
+        a.as_mut_slice()[1] = 9.0;
+        assert_eq!(a, b);
+        assert!(AVec::new().is_empty());
+    }
+}

@@ -1,0 +1,333 @@
+//! Explicit-width vector kernels for the sparse hot path.
+//!
+//! Every kernel has exactly one arithmetic definition: eight independent
+//! f32 accumulators filled in 8-wide blocks, combined by the fixed
+//! reduction tree in [`reduce8`], with a scalar tail in element order.
+//! The `*_scalar` functions below *are* that definition — they replace
+//! the older 4-way-unrolled `vecops::dot` and the single-accumulator
+//! sparse dot so the whole crate (dense forward, sparse forward,
+//! union-major gather, SRP/ALSH hash projections via `vecops::dot`)
+//! rounds identically through one schedule.
+//!
+//! The AVX2 implementations (behind the off-by-default `simd` cargo
+//! feature, dispatched at runtime only when the CPU reports AVX2)
+//! execute the same schedule with 256-bit vectors: multiply-then-add,
+//! never FMA (a fused multiply-add rounds once where the scalar schedule
+//! rounds twice), and a horizontal reduction whose add order matches
+//! [`reduce8`] exactly. Scalar and SIMD builds therefore produce
+//! bit-identical floats for every input — pinned per-kernel by
+//! `tests/kernel_parity.rs` and end-to-end by running the existing
+//! batch-equivalence and serve replay suites under `--features simd` in
+//! the CI feature matrix.
+
+/// Fixed 8-accumulator reduction tree — the scalar mirror of the AVX2
+/// horizontal sum (`vextractf128` + `movhlps` + `shufps`), which pairs
+/// lanes as (0,4), (2,6), (1,5), (3,7) before the final two adds. Both
+/// builds must reduce in exactly this order for bit-identical dots.
+#[inline(always)]
+fn reduce8(s: [f32; 8]) -> f32 {
+    ((s[0] + s[4]) + (s[2] + s[6])) + ((s[1] + s[5]) + (s[3] + s[7]))
+}
+
+/// Dense dot product — the reference schedule.
+#[inline]
+pub fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let split = n - n % 8;
+    let mut s = [0.0f32; 8];
+    for (aa, bb) in a[..split].chunks_exact(8).zip(b[..split].chunks_exact(8)) {
+        for ((acc, &av), &bv) in s.iter_mut().zip(aa).zip(bb) {
+            *acc += av * bv;
+        }
+    }
+    let mut acc = reduce8(s);
+    for (&av, &bv) in a[split..].iter().zip(&b[split..]) {
+        acc += av * bv;
+    }
+    acc
+}
+
+/// Gather dot: `Σ_k row[idx[k]] * val[k]` — the union-gather inner loop
+/// and the sparse arm of `LayerInput::dot_row`. Same 8-accumulator
+/// schedule and reduction as [`dot_scalar`].
+#[inline]
+pub fn sparse_dot_scalar(row: &[f32], idx: &[u32], val: &[f32]) -> f32 {
+    debug_assert_eq!(idx.len(), val.len());
+    let n = idx.len();
+    let split = n - n % 8;
+    let mut s = [0.0f32; 8];
+    for (ii, vv) in idx[..split].chunks_exact(8).zip(val[..split].chunks_exact(8)) {
+        for ((acc, &i), &v) in s.iter_mut().zip(ii).zip(vv) {
+            *acc += row[i as usize] * v;
+        }
+    }
+    let mut acc = reduce8(s);
+    for (&i, &v) in idx[split..].iter().zip(&val[split..]) {
+        acc += row[i as usize] * v;
+    }
+    acc
+}
+
+/// `y += alpha * x`, elementwise. Elementwise ops have no reduction, so
+/// scalar/SIMD bit-identity only requires multiply-then-add (no FMA).
+#[inline]
+pub fn axpy_scalar(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yv, &xv) in y.iter_mut().zip(x) {
+        *yv += alpha * xv;
+    }
+}
+
+/// Scatter-accumulate: `y[idx[k]] += alpha * val[k]`. There is no AVX2
+/// scatter, so the dispatched [`axpy_at`] is always this scalar loop.
+#[inline]
+pub fn axpy_at_scalar(alpha: f32, idx: &[u32], val: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(idx.len(), val.len());
+    for (&i, &v) in idx.iter().zip(val) {
+        y[i as usize] += alpha * v;
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// AVX2 horizontal sum matching `super::reduce8` exactly:
+    /// low+high 128-bit halves pair lanes (0,4)(1,5)(2,6)(3,7), `movehl`
+    /// pairs those pairs, and the final `add_ss` joins the two halves of
+    /// the tree.
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum256(v: __m256) -> f32 {
+        let hi = _mm256_extractf128_ps(v, 1);
+        let lo = _mm256_castps256_ps128(v);
+        let q = _mm_add_ps(lo, hi);
+        let h = _mm_add_ps(q, _mm_movehl_ps(q, q));
+        let s = _mm_add_ss(h, _mm_shuffle_ps(h, h, 0b01));
+        _mm_cvtss_f32(s)
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let split = n - n % 8;
+        let mut acc = _mm256_setzero_ps();
+        let mut j = 0;
+        while j < split {
+            let va = _mm256_loadu_ps(a.as_ptr().add(j));
+            let vb = _mm256_loadu_ps(b.as_ptr().add(j));
+            // mul + add, NOT fmadd: FMA would break scalar/SIMD
+            // bit-identity.
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+            j += 8;
+        }
+        let mut s = hsum256(acc);
+        for (&av, &bv) in a[split..].iter().zip(&b[split..]) {
+            s += av * bv;
+        }
+        s
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sparse_dot(row: &[f32], idx: &[u32], val: &[f32]) -> f32 {
+        debug_assert_eq!(idx.len(), val.len());
+        let n = idx.len();
+        let split = n - n % 8;
+        let mut acc = _mm256_setzero_ps();
+        let mut g = [0.0f32; 8];
+        let mut j = 0;
+        while j < split {
+            // Manual gather through a stack buffer (bounds-checked), not
+            // `_mm256_i32gather_ps`: same rounding, no unchecked loads,
+            // and the scalar gather pipelines well against the vector
+            // multiply.
+            for (gv, &i) in g.iter_mut().zip(&idx[j..j + 8]) {
+                *gv = row[i as usize];
+            }
+            let vg = _mm256_loadu_ps(g.as_ptr());
+            let vv = _mm256_loadu_ps(val.as_ptr().add(j));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(vg, vv));
+            j += 8;
+        }
+        let mut s = hsum256(acc);
+        for (&i, &v) in idx[split..].iter().zip(&val[split..]) {
+            s += row[i as usize] * v;
+        }
+        s
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let split = n - n % 8;
+        let va = _mm256_set1_ps(alpha);
+        let mut j = 0;
+        while j < split {
+            let vx = _mm256_loadu_ps(x.as_ptr().add(j));
+            let vy = _mm256_loadu_ps(y.as_ptr().add(j));
+            _mm256_storeu_ps(y.as_mut_ptr().add(j), _mm256_add_ps(vy, _mm256_mul_ps(va, vx)));
+            j += 8;
+        }
+        for (yv, &xv) in y[split..].iter_mut().zip(&x[split..]) {
+            *yv += alpha * xv;
+        }
+    }
+}
+
+/// Runtime AVX2 check, cached after the first call.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[inline]
+fn use_avx2() -> bool {
+    use std::sync::atomic::{AtomicU8, Ordering};
+    static STATE: AtomicU8 = AtomicU8::new(0);
+    match STATE.load(Ordering::Relaxed) {
+        1 => true,
+        2 => false,
+        _ => {
+            let yes = std::is_x86_feature_detected!("avx2");
+            STATE.store(if yes { 1 } else { 2 }, Ordering::Relaxed);
+            yes
+        }
+    }
+}
+
+/// True when the dispatched kernels are currently routed to AVX2
+/// (`simd` feature compiled in AND the CPU reports AVX2). Benches report
+/// this so BENCH_batch.json records which path was measured.
+pub fn simd_active() -> bool {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        use_avx2()
+    }
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    {
+        false
+    }
+}
+
+/// Dense dot product (dispatched). Bit-identical to [`dot_scalar`].
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if use_avx2() {
+        // SAFETY: AVX2 support verified at runtime.
+        return unsafe { avx2::dot(a, b) };
+    }
+    dot_scalar(a, b)
+}
+
+/// Gather dot (dispatched). Bit-identical to [`sparse_dot_scalar`].
+/// Every `idx[k]` must be `< row.len()`.
+#[inline]
+pub fn sparse_dot(row: &[f32], idx: &[u32], val: &[f32]) -> f32 {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if use_avx2() {
+        // SAFETY: AVX2 support verified at runtime.
+        return unsafe { avx2::sparse_dot(row, idx, val) };
+    }
+    sparse_dot_scalar(row, idx, val)
+}
+
+/// `y += alpha * x` (dispatched). Bit-identical to [`axpy_scalar`].
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if use_avx2() {
+        // SAFETY: AVX2 support verified at runtime.
+        unsafe { avx2::axpy(alpha, x, y) };
+        return;
+    }
+    axpy_scalar(alpha, x, y);
+}
+
+/// Scatter-accumulate (dispatched; always the scalar loop — no AVX2
+/// scatter exists). Every `idx[k]` must be `< y.len()`.
+#[inline]
+pub fn axpy_at(alpha: f32, idx: &[u32], val: &[f32], y: &mut [f32]) {
+    axpy_at_scalar(alpha, idx, val, y);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn dot_matches_f64_reference() {
+        let mut rng = Pcg64::seeded(11);
+        for n in [0usize, 1, 7, 8, 9, 31, 64, 100, 1023] {
+            let a: Vec<f32> = (0..n).map(|_| rng.gaussian()).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.gaussian()).collect();
+            let exact: f64 =
+                a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+            let got = dot(&a, &b) as f64;
+            assert!(
+                (got - exact).abs() <= 1e-4 * (1.0 + exact.abs()),
+                "n={n} got={got} exact={exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn sparse_dot_matches_dense_dot_on_scattered_rows() {
+        let mut rng = Pcg64::seeded(12);
+        let row: Vec<f32> = (0..256).map(|_| rng.gaussian()).collect();
+        for n in [0usize, 1, 5, 8, 13, 40, 64] {
+            let idx: Vec<u32> = (0..n).map(|_| (rng.next_u64() % 256) as u32).collect();
+            let val: Vec<f32> = (0..n).map(|_| rng.gaussian()).collect();
+            // Same arithmetic as gathering into a dense pair and dotting.
+            let gathered: Vec<f32> = idx.iter().map(|&i| row[i as usize]).collect();
+            let want = dot_scalar(&gathered, &val);
+            assert_eq!(sparse_dot(&row, &idx, &val).to_bits(), want.to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn axpy_accumulates() {
+        let x = [1.0f32, -2.0, 0.5, 4.0, 1.0, 1.0, 1.0, 1.0, 3.0];
+        let mut y = [10.0f32; 9];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y[0], 12.0);
+        assert_eq!(y[1], 6.0);
+        assert_eq!(y[8], 16.0);
+    }
+
+    #[test]
+    fn axpy_at_scatters() {
+        let mut y = [0.0f32; 6];
+        axpy_at(3.0, &[5, 0, 5], &[1.0, 2.0, 1.0], &mut y);
+        assert_eq!(y, [6.0, 0.0, 0.0, 0.0, 0.0, 6.0]);
+    }
+
+    #[test]
+    fn dispatched_kernels_match_scalar_bitwise() {
+        // Redundant with tests/kernel_parity.rs but cheap: guards the
+        // in-crate callers even when integration tests are filtered out.
+        let mut rng = Pcg64::seeded(13);
+        let a: Vec<f32> = (0..777).map(|_| rng.gaussian()).collect();
+        let b: Vec<f32> = (0..777).map(|_| rng.gaussian()).collect();
+        assert_eq!(dot(&a, &b).to_bits(), dot_scalar(&a, &b).to_bits());
+        let idx: Vec<u32> = (0..300).map(|_| (rng.next_u64() % 777) as u32).collect();
+        let val: Vec<f32> = (0..300).map(|_| rng.gaussian()).collect();
+        assert_eq!(
+            sparse_dot(&a, &idx, &val).to_bits(),
+            sparse_dot_scalar(&a, &idx, &val).to_bits()
+        );
+        let mut y1 = b.clone();
+        let mut y2 = b.clone();
+        axpy(0.37, &a, &mut y1);
+        axpy_scalar(0.37, &a, &mut y2);
+        assert!(y1.iter().zip(&y2).all(|(p, q)| p.to_bits() == q.to_bits()));
+    }
+}

@@ -1,7 +1,10 @@
 //! Row-major f32 matrix. Weight matrices store one *row per output neuron*
 //! so that a neuron's weight vector — the thing LSH indexes and the sparse
-//! pass dots against — is a contiguous slice.
+//! pass dots against — is a contiguous slice. Storage is a 32-byte-aligned
+//! [`AVec`] plane, so row 0 (and every row when `cols % 8 == 0`, the
+//! common case for hidden layers) starts on an AVX2-friendly boundary.
 
+use crate::tensor::aligned::AVec;
 use crate::tensor::vecops;
 use crate::util::rng::Pcg64;
 
@@ -9,33 +12,36 @@ use crate::util::rng::Pcg64;
 pub struct Matrix {
     rows: usize,
     cols: usize,
-    data: Vec<f32>,
+    data: AVec,
 }
 
 impl Matrix {
     pub fn zeros(rows: usize, cols: usize) -> Self {
-        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+        Matrix { rows, cols, data: AVec::zeros(rows * cols) }
     }
 
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
         assert_eq!(data.len(), rows * cols, "shape mismatch");
-        Matrix { rows, cols, data }
+        Matrix { rows, cols, data: AVec::from_slice(&data) }
     }
 
     pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
-        let mut data = Vec::with_capacity(rows * cols);
+        let mut m = Matrix::zeros(rows, cols);
         for r in 0..rows {
             for c in 0..cols {
-                data.push(f(r, c));
+                m.set(r, c, f(r, c));
             }
         }
-        Matrix { rows, cols, data }
+        m
     }
 
     /// Gaussian-filled matrix (used for LSH projection directions).
     pub fn randn(rows: usize, cols: usize, rng: &mut Pcg64) -> Self {
-        let data = (0..rows * cols).map(|_| rng.gaussian()).collect();
-        Matrix { rows, cols, data }
+        let mut m = Matrix::zeros(rows, cols);
+        for v in m.data.as_mut_slice() {
+            *v = rng.gaussian();
+        }
+        m
     }
 
     pub fn rows(&self) -> usize {
@@ -66,11 +72,11 @@ impl Matrix {
     }
 
     pub fn as_slice(&self) -> &[f32] {
-        &self.data
+        self.data.as_slice()
     }
 
     pub fn as_mut_slice(&mut self) -> &mut [f32] {
-        &mut self.data
+        self.data.as_mut_slice()
     }
 
     /// y = A x  (dense gemv; the STD-baseline inner loop when not using the
@@ -154,6 +160,14 @@ mod tests {
         let a = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
         assert_eq!(a.transpose().transpose(), a);
         assert_eq!(a.transpose().get(2, 1), 6.0);
+    }
+
+    #[test]
+    fn rows_are_aligned_when_width_is_lane_multiple() {
+        let m = Matrix::zeros(4, 16);
+        for r in 0..4 {
+            assert_eq!(m.row(r).as_ptr() as usize % 32, 0, "row {r}");
+        }
     }
 
     #[test]

@@ -2,9 +2,12 @@
 //! primitives that form the sparse hot path, and the minibatch view used
 //! by the batched execution engine.
 
+pub mod aligned;
 pub mod batch;
+pub mod kernels;
 pub mod matrix;
 pub mod vecops;
 
+pub use aligned::AVec;
 pub use batch::{Batch, BatchPlane};
 pub use matrix::Matrix;

@@ -1,38 +1,26 @@
 //! Vector primitives used on the sparse hot path. These are the innermost
 //! loops of the whole system — `dot` is the per-active-node activation
 //! computation the paper counts as "multiplications".
+//!
+//! The arithmetic lives in [`crate::tensor::kernels`]: one 8-lane
+//! schedule shared by the scalar build and the `simd`-feature AVX2 build
+//! so every caller — dense gemv, sparse forward, union-major gather,
+//! SRP/ALSH hash projections — rounds identically on either path.
 
-/// Dense dot product. Manually 4-way unrolled: rustc does not auto-vectorize
-/// a naive fold with strict float semantics, and this loop dominates the
-/// sparse forward pass.
+use crate::tensor::kernels;
+
+/// Dense dot product (8-lane kernel; AVX2 under `--features simd` on
+/// supporting CPUs, bit-identical either way). This loop dominates the
+/// sparse forward pass and the batched hash projections.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-    for i in 0..chunks {
-        let j = i * 4;
-        // SAFETY-free: bounds are guaranteed by chunks*4 <= n; use slices.
-        s0 += a[j] * b[j];
-        s1 += a[j + 1] * b[j + 1];
-        s2 += a[j + 2] * b[j + 2];
-        s3 += a[j + 3] * b[j + 3];
-    }
-    let mut s = (s0 + s1) + (s2 + s3);
-    for j in chunks * 4..n {
-        s += a[j] * b[j];
-    }
-    s
+    kernels::dot(a, b)
 }
 
 /// y += alpha * x (the sparse gradient update kernel).
 #[inline]
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
-    debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
-    }
+    kernels::axpy(alpha, x, y)
 }
 
 /// y[idx[k]] += alpha * val[k] — scatter-accumulate over an active-column
@@ -40,10 +28,7 @@ pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
 /// variant lives in `train::trainer::GradSink`).
 #[inline]
 pub fn axpy_at(alpha: f32, idx: &[u32], val: &[f32], y: &mut [f32]) {
-    debug_assert_eq!(idx.len(), val.len());
-    for (&j, &v) in idx.iter().zip(val) {
-        y[j as usize] += alpha * v;
-    }
+    kernels::axpy_at(alpha, idx, val, y)
 }
 
 /// Squared L2 norm.

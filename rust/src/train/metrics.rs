@@ -30,6 +30,29 @@ impl MultCounters {
     }
 }
 
+/// Hardware-efficiency rates derived from a counted *and* timed run. The
+/// paper's sustainability metric counts multiplications; these put the
+/// count in wall-clock terms (mults/sec — how fast the surviving
+/// multiplications execute) and in memory terms (modeled weight-plane
+/// bytes per multiplication — how much row traffic each one costs; lower
+/// means more reuse, and the union-major gather divides the hidden-layer
+/// term by the batch's sharing factor). Reported by `BENCH_batch.json`
+/// and `serve-bench --fused-compare`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MultRates {
+    pub mults_per_sec: f64,
+    pub bytes_per_mult: f64,
+}
+
+impl MultRates {
+    pub fn from_run(mults: u64, weight_bytes: u64, wall_secs: f64) -> Self {
+        MultRates {
+            mults_per_sec: if wall_secs > 0.0 { mults as f64 / wall_secs } else { 0.0 },
+            bytes_per_mult: if mults == 0 { 0.0 } else { weight_bytes as f64 / mults as f64 },
+        }
+    }
+}
+
 /// Record for one training epoch.
 #[derive(Clone, Debug)]
 pub struct EpochRecord {
@@ -130,6 +153,14 @@ mod tests {
         assert_eq!(a.total(), 10);
         a.add(&a.clone());
         assert_eq!(a.total(), 20);
+    }
+
+    #[test]
+    fn mult_rates_from_run() {
+        let r = MultRates::from_run(1_000_000, 4_000_000, 0.5);
+        assert!((r.mults_per_sec - 2e6).abs() < 1e-3);
+        assert!((r.bytes_per_mult - 4.0).abs() < 1e-9);
+        assert_eq!(MultRates::from_run(0, 0, 0.0), MultRates::default());
     }
 
     #[test]

@@ -45,7 +45,7 @@ pub mod schedule;
 pub mod trainer;
 
 pub use asgd::{run_asgd, run_asgd_published, AsgdConfig, AsgdOutcome, ConflictStats};
-pub use metrics::{EpochRecord, MultCounters, RunRecord};
+pub use metrics::{EpochRecord, MultCounters, MultRates, RunRecord};
 pub use trainer::{
     train_batch, train_step, BatchResult, BatchWorkspace, StepWorkspace, TrainConfig, Trainer,
 };

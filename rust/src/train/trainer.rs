@@ -341,16 +341,14 @@ pub fn train_batch(
             .collect();
         let lp = &mut ws.plan.layers[l];
         let cost = selectors[l].select_batch(layer, &inputs, rng, &mut lp.actives[..bsz]);
-        // The union's only training-side consumer today is the
-        // debug-build invariant check against the gradient sinks below
-        // (maintenance runs off `GradSink::touched_rows`, which is the
-        // same sequence), so skip the dedup work in release builds.
-        // Serving's executor always refreshes it — telemetry reads it.
-        if cfg!(debug_assertions) {
-            lp.refresh_union(layer.n_out(), bsz);
-        }
+        // The union (and its inverted index) now has a release-mode
+        // consumer: the union-major fused forward below, which loads each
+        // weight row once per batch instead of once per member sample.
+        // Debug builds additionally cross-check the union's first-touch
+        // order against the gradient sinks (`GradSink::touched_rows`).
+        lp.refresh_union(layer.n_out(), bsz);
         mults.selection += cost.selection_mults;
-        mults.forward += layer.forward_sparse_batch(&inputs, &lp.actives[..bsz], outs);
+        mults.forward += crate::exec::forward_union_major(layer, &inputs, lp, outs);
         for out in outs.iter() {
             active_fraction += out.len() as f32 / layer.n_out() as f32;
         }

@@ -1,0 +1,148 @@
+//! Kernel parity pins.
+//!
+//! The dispatched kernels (AVX2 under `--features simd` on supporting
+//! CPUs, scalar otherwise) must match the scalar reference **bit for
+//! bit** for every length 0..=64 plus ragged tails — and the union-major
+//! gather must match the sample-major forward bitwise. Running this
+//! suite under both cargo configurations in CI is what keeps the
+//! intrinsics path honest: a single rounding divergence (e.g. an FMA
+//! sneaking into the AVX2 dot) fails here before it can silently split
+//! the scalar and SIMD builds' training trajectories.
+
+use hashdl::exec::{forward_union_major, LayerPlan};
+use hashdl::nn::activation::Activation;
+use hashdl::nn::layer::Layer;
+use hashdl::nn::sparse::{LayerInput, SparseVec};
+use hashdl::tensor::kernels;
+use hashdl::util::rng::Pcg64;
+
+/// Every length 0..=64 (all tail shapes around the 8-lane blocks) plus
+/// larger ragged sizes representative of real layer widths.
+fn lengths() -> Vec<usize> {
+    let mut ls: Vec<usize> = (0..=64).collect();
+    ls.extend([65, 100, 127, 255, 1000, 1023, 4096]);
+    ls
+}
+
+/// Mixed-magnitude values so reduction-order differences would actually
+/// change the rounded result (uniform values can mask them).
+fn vec_of(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+    (0..n)
+        .map(|i| {
+            let scale = [1.0f32, 1e-4, 1e4, -1.0][i % 4];
+            rng.gaussian() * scale
+        })
+        .collect()
+}
+
+#[test]
+fn dot_dispatch_matches_scalar_bitwise_all_lengths() {
+    let mut rng = Pcg64::seeded(1);
+    for n in lengths() {
+        let a = vec_of(&mut rng, n);
+        let b = vec_of(&mut rng, n);
+        assert_eq!(
+            kernels::dot(&a, &b).to_bits(),
+            kernels::dot_scalar(&a, &b).to_bits(),
+            "dot length {n} (simd_active={})",
+            kernels::simd_active()
+        );
+    }
+}
+
+#[test]
+fn sparse_dot_dispatch_matches_scalar_bitwise_all_lengths() {
+    let mut rng = Pcg64::seeded(2);
+    let row = vec_of(&mut rng, 4096);
+    for n in lengths() {
+        let idx: Vec<u32> = (0..n).map(|_| (rng.next_u64() % 4096) as u32).collect();
+        let val = vec_of(&mut rng, n);
+        assert_eq!(
+            kernels::sparse_dot(&row, &idx, &val).to_bits(),
+            kernels::sparse_dot_scalar(&row, &idx, &val).to_bits(),
+            "sparse_dot length {n} (simd_active={})",
+            kernels::simd_active()
+        );
+    }
+}
+
+#[test]
+fn axpy_dispatch_matches_scalar_bitwise_all_lengths() {
+    let mut rng = Pcg64::seeded(3);
+    for n in lengths() {
+        let x = vec_of(&mut rng, n);
+        let base = vec_of(&mut rng, n);
+        let alpha = rng.gaussian();
+        let mut y1 = base.clone();
+        let mut y2 = base.clone();
+        kernels::axpy(alpha, &x, &mut y1);
+        kernels::axpy_scalar(alpha, &x, &mut y2);
+        let b1: Vec<u32> = y1.iter().map(|v| v.to_bits()).collect();
+        let b2: Vec<u32> = y2.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(b1, b2, "axpy length {n} (simd_active={})", kernels::simd_active());
+    }
+}
+
+#[test]
+fn axpy_at_dispatch_matches_scalar_bitwise() {
+    let mut rng = Pcg64::seeded(4);
+    for n in lengths() {
+        let idx: Vec<u32> = (0..n).map(|_| (rng.next_u64() % 512) as u32).collect();
+        let val = vec_of(&mut rng, n);
+        let base = vec_of(&mut rng, 512);
+        let alpha = rng.gaussian();
+        let mut y1 = base.clone();
+        let mut y2 = base.clone();
+        kernels::axpy_at(alpha, &idx, &val, &mut y1);
+        kernels::axpy_at_scalar(alpha, &idx, &val, &mut y2);
+        let b1: Vec<u32> = y1.iter().map(|v| v.to_bits()).collect();
+        let b2: Vec<u32> = y2.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(b1, b2, "axpy_at length {n}");
+    }
+}
+
+#[test]
+fn union_major_gather_matches_sample_major_bitwise() {
+    // End-to-end shape of the tentpole: overlapping ragged active sets,
+    // dense and sparse inputs, through the public layer-forward APIs.
+    let mut rng = Pcg64::seeded(5);
+    let layer = Layer::new(96, 300, Activation::ReLU, &mut rng);
+    let bsz = 11usize;
+    let dense: Vec<Vec<f32>> = (0..bsz).map(|_| vec_of(&mut rng, 96)).collect();
+    let sparse: Vec<SparseVec> = dense
+        .iter()
+        .map(|x| {
+            let mut sv = SparseVec::new();
+            for (j, &v) in x.iter().enumerate() {
+                if j % 3 == 0 {
+                    sv.push(j as u32, v);
+                }
+            }
+            sv
+        })
+        .collect();
+    for use_dense in [true, false] {
+        let inputs: Vec<LayerInput> = if use_dense {
+            dense.iter().map(|x| LayerInput::Dense(x)).collect()
+        } else {
+            sparse.iter().map(LayerInput::Sparse).collect()
+        };
+        let mut lp = LayerPlan::default();
+        lp.actives = (0..bsz).map(|s| rng.sample_indices(300, 5 + 13 * s)).collect();
+        lp.refresh_union(300, bsz);
+
+        let mut want = vec![SparseVec::new(); bsz];
+        let mut want_mults = 0u64;
+        for s in 0..bsz {
+            want_mults += layer.forward_sparse(inputs[s], &lp.actives[s], &mut want[s]);
+        }
+        let mut got = vec![SparseVec::new(); bsz];
+        assert_eq!(forward_union_major(&layer, &inputs, &lp, &mut got), want_mults);
+        for s in 0..bsz {
+            assert_eq!(got[s].idx, want[s].idx, "sample {s} ranked order (dense={use_dense})");
+            let gb: Vec<u32> = got[s].val.iter().map(|v| v.to_bits()).collect();
+            let wb: Vec<u32> = want[s].val.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(gb, wb, "sample {s} values (dense={use_dense})");
+        }
+    }
+}
