@@ -55,6 +55,8 @@ use crate::lsh::frozen::{FrozenLayerTables, FrozenQueryScratch};
 use crate::lsh::layered::{LayerTables, LshConfig};
 use crate::nn::layer::Layer;
 use crate::nn::sparse::{LayerInput, SparseVec};
+use crate::obs;
+use crate::obs::{HealthTally, Stage};
 use crate::sampling::{budget, rerank_exact};
 use crate::train::metrics::MultCounters;
 use crate::util::rng::Pcg64;
@@ -108,6 +110,13 @@ pub trait TableView {
         scored: &mut Vec<(f32, u32)>,
         out: &mut Vec<u32>,
     ) -> u64;
+
+    /// The backend's table-health tally, if it keeps one. The shared
+    /// selection path folds per-batch activation counts in through this
+    /// — monitoring only, never consulted by selection itself.
+    fn health(&self) -> Option<&HealthTally> {
+        None
+    }
 }
 
 /// Live training backend: the trainer's mutable table stack. Probe
@@ -163,6 +172,10 @@ impl TableView for LayerTables {
             out.extend(rng.sample_indices(layer.n_out(), budget.min(4)));
         }
         extra
+    }
+
+    fn health(&self) -> Option<&HealthTally> {
+        Some(self.health_tally())
     }
 }
 
@@ -229,6 +242,10 @@ impl TableView for FrozenTableView<'_> {
             0
         }
     }
+
+    fn health(&self) -> Option<&HealthTally> {
+        Some(self.tables.health_tally())
+    }
 }
 
 /// Reusable buffers for one [`select_batch_into`] pass: the densified
@@ -278,15 +295,20 @@ pub fn select_batch_into<V: TableView>(
     let l = view.lsh_config().l;
     // Phase 1: densify + hash the whole batch (resize reuses the buffer;
     // densify_into overwrites every queried cell).
+    let span = obs::begin(Stage::Densify);
     scratch.q_plane.resize(n * n_in, 0.0);
     for (s, input) in inputs.iter().enumerate() {
         densify_into(*input, &mut scratch.q_plane[s * n_in..(s + 1) * n_in]);
     }
+    obs::end(span);
+    let span = obs::begin(Stage::HashFp);
     scratch.fps_plane.clear();
     scratch.fps_plane.resize(n * l, 0);
     let hash_per_sample = view.hash_batch(&scratch.q_plane, n_in, n, &mut scratch.fps_plane);
+    obs::end(span);
     // Phase 2: probe + rank each sample over the shared scratch, in
     // sample order (the RNG-draw order the equivalence guarantee pins).
+    let span = obs::begin(Stage::ProbeRank);
     let mut selection_mults = 0u64;
     for (s, out) in outs.iter_mut().enumerate() {
         let q = &scratch.q_plane[s * n_in..(s + 1) * n_in];
@@ -303,6 +325,17 @@ pub fn select_batch_into<V: TableView>(
         );
         per_sample_mults[s] = hash_per_sample + extra;
         selection_mults += hash_per_sample + extra;
+    }
+    obs::end(span);
+    // Table-health fold-in: pure reads of the just-computed active sets
+    // plus relaxed counter writes — never feeds back into selection.
+    if obs::enabled() {
+        if let Some(h) = view.health() {
+            h.note_batch(&*outs);
+            if n > 0 && obs::recall_due() {
+                obs::recall_probe(layer, &scratch.q_plane[..n_in], &outs[0], h);
+            }
+        }
     }
     SelectStats { selection_mults, hash_invocations: 1 }
 }
@@ -634,6 +667,7 @@ impl BatchExecutor {
             self.last.selection_mults += stats.selection_mults;
             self.last.union_active += lp.union.len() as u64;
             let outs = &mut rest[0];
+            let span = obs::begin(Stage::Gather);
             let fwd = if self.sample_major {
                 let mut total = 0u64;
                 for s in 0..bsz {
@@ -643,6 +677,7 @@ impl BatchExecutor {
             } else {
                 forward_union_major(layer, &inputs, lp, &mut outs[..bsz])
             };
+            obs::end(span);
             self.last.forward_mults += fwd;
             let rows_loaded = if self.sample_major {
                 lp.actives[..bsz].iter().map(|a| a.len() as u64).sum::<u64>()
@@ -661,6 +696,7 @@ impl BatchExecutor {
         }
         // Output layer: dense over all classes from the last sparse
         // activation (the paper never hashes the output layer).
+        let span = obs::begin(Stage::Output);
         let out_layer = layers.last().expect("empty network");
         for s in 0..bsz {
             let input = if n_hidden == 0 {
@@ -672,8 +708,10 @@ impl BatchExecutor {
             self.sample_mults[s].forward += m;
             self.last.forward_mults += m;
         }
+        obs::end(span);
         self.last.weight_bytes +=
             (bsz * out_layer.n_out() * out_layer.n_in()) as u64 * 4;
+        obs::note_batch();
     }
 }
 

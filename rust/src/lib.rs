@@ -20,6 +20,7 @@ pub mod data;
 pub mod exec;
 pub mod lsh;
 pub mod nn;
+pub mod obs;
 pub mod optim;
 pub mod publish;
 pub mod router;
@@ -36,6 +37,7 @@ pub mod prelude {
     pub use crate::exec::{BatchExecutor, SparseBatchPlan, TableView};
     pub use crate::lsh::{LayerTables, LshConfig};
     pub use crate::nn::{Activation, Network, NetworkConfig};
+    pub use crate::obs::{MetricsRegistry, MetricsSnapshot, TableHealth};
     pub use crate::optim::{OptimConfig, OptimizerKind};
     pub use crate::publish::{ModelParts, PublishedModel, TablePublisher, TableReader};
     pub use crate::router::{

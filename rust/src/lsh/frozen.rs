@@ -22,7 +22,9 @@ use crate::lsh::family::LshFamily;
 use crate::lsh::layered::{probe_and_rank, LayerTables, LshConfig, ProbeScratch};
 use crate::lsh::multiprobe::ProbeGen;
 use crate::lsh::table::HashTable;
+use crate::obs::health::{HealthTally, TableHealth};
 use crate::util::rng::{splitmix64, Pcg64};
+use std::sync::Arc;
 
 /// Immutable per-layer (K, L) table stack. All fields are plain data, so
 /// the struct is `Send + Sync` and can be shared across worker threads
@@ -35,6 +37,10 @@ pub struct FrozenLayerTables {
     family: AlshMips,
     tables: Vec<HashTable>,
     n_nodes: usize,
+    /// Table-health accounting, shared across clones (publication clones
+    /// table stacks wholesale; the health story of an epoch's tables is
+    /// one story, however many handles exist) and across serve workers.
+    health: Arc<HealthTally>,
 }
 
 /// Per-thread query workspace: fingerprints, membership stamps, collision
@@ -76,6 +82,7 @@ impl FrozenLayerTables {
             family: live.family().clone(),
             tables: live.tables().to_vec(),
             n_nodes: live.n_nodes(),
+            health: Arc::new(HealthTally::new(live.n_nodes())),
         }
     }
 
@@ -101,7 +108,8 @@ impl FrozenLayerTables {
                 ));
             }
         }
-        Ok(FrozenLayerTables { cfg, family, tables, n_nodes })
+        let health = Arc::new(HealthTally::new(n_nodes));
+        Ok(FrozenLayerTables { cfg, family, tables, n_nodes, health })
     }
 
     pub fn config(&self) -> LshConfig {
@@ -118,6 +126,18 @@ impl FrozenLayerTables {
 
     pub fn tables(&self) -> &[HashTable] {
         &self.tables
+    }
+
+    /// The running health counters (shared across clones and workers).
+    pub fn health_tally(&self) -> &HealthTally {
+        &self.health
+    }
+
+    /// Computed health snapshot for this frozen epoch's tables.
+    pub fn health_snapshot(&self) -> TableHealth {
+        let sizes: Vec<Vec<usize>> = self.tables.iter().map(|t| t.bucket_sizes()).collect();
+        // Frozen stacks never rebuild in place — a new epoch is a new stack.
+        TableHealth::compute(&sizes, 0, &self.health)
     }
 
     /// Multiplications one query spends on hashing: K·L inner products of

@@ -7,6 +7,7 @@ use crate::lsh::alsh::{max_row_norm, AlshMips};
 use crate::lsh::family::LshFamily;
 use crate::lsh::multiprobe::ProbeGen;
 use crate::lsh::table::{HashTable, DEFAULT_CROWDED_LIMIT};
+use crate::obs::health::{HealthTally, TableHealth};
 use crate::tensor::matrix::Matrix;
 use crate::tensor::vecops::norm;
 use crate::util::rng::Pcg64;
@@ -73,6 +74,9 @@ pub struct LayerTables {
     /// Hashes computed since construction (K·L per hashed vector) — the
     /// paper's "30 hash computations" accounting.
     pub hash_ops: u64,
+    /// Table-health accounting (activation counters, rebuild age, recall
+    /// samples) — fed by the selection path when telemetry is on.
+    health: HealthTally,
 }
 
 impl LayerTables {
@@ -96,6 +100,7 @@ impl LayerTables {
             embed_scratch: Vec::new(),
             rebuilds: 0,
             hash_ops: 0,
+            health: HealthTally::new(n_nodes),
         };
         lt.insert_all(weights);
         lt
@@ -242,6 +247,7 @@ impl LayerTables {
         self.tables = (0..self.cfg.l).map(|_| HashTable::new(self.cfg.k, self.n_nodes)).collect();
         self.insert_all(weights);
         self.rebuilds += 1;
+        self.health.reset_rebuild_age();
     }
 
     /// Diagnostics: per-table occupancy histograms.
@@ -258,6 +264,17 @@ impl LayerTables {
     /// serving view and snapshot serialization consume.
     pub fn tables(&self) -> &[HashTable] {
         &self.tables
+    }
+
+    /// The running health counters (selection-time fold-in target).
+    pub fn health_tally(&self) -> &HealthTally {
+        &self.health
+    }
+
+    /// Computed health snapshot: occupancy stats read live from the
+    /// buckets, combined with the running tally.
+    pub fn health_snapshot(&self) -> TableHealth {
+        TableHealth::compute(&self.bucket_sizes(), self.rebuilds as u64, &self.health)
     }
 }
 

@@ -16,6 +16,7 @@
 
 use hashdl::coordinator::experiment::{self, ExperimentScale};
 use hashdl::data::synth::Benchmark;
+use hashdl::obs;
 use hashdl::nn::activation::Activation;
 use hashdl::nn::network::{Network, NetworkConfig};
 use hashdl::optim::{OptimConfig, OptimizerKind};
@@ -33,8 +34,10 @@ use hashdl::train::asgd::{run_asgd, run_asgd_published, AsgdConfig};
 use hashdl::train::trainer::{TrainConfig, Trainer};
 use hashdl::util::argparse::{Args, Parser};
 use hashdl::util::config::Config;
+use hashdl::util::json::{JsonArray, JsonObject};
 use hashdl::util::rng::Pcg64;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::{Duration, Instant};
 
 /// Effective option value with three-layer precedence: an explicit CLI
@@ -60,6 +63,53 @@ fn opt_layered<T: std::str::FromStr>(
         }
     }
     a.parse_or(flag, default)
+}
+
+/// Register the telemetry flags shared by the serving subcommands
+/// (train-serve, serve-bench, serve-fleet).
+fn telemetry_opts(p: Parser) -> Parser {
+    p.opt("telemetry", "on", "master telemetry switch (on|off)")
+        .opt("trace-sample", "0", "print every Nth micro-batch's span tree to stderr (0 = off)")
+        .opt("recall-sample", "64", "run the selection-recall probe every Nth selection batch (0 = off)")
+        .opt("metrics-out", "", "write a Prometheus metrics snapshot (+ .json twin) after the run")
+}
+
+/// Apply the shared telemetry flags; returns the `--metrics-out` path if
+/// one was given so the subcommand can dump a snapshot after its run.
+fn apply_telemetry_flags(a: &Args) -> Option<PathBuf> {
+    match a.get_or("telemetry", "on") {
+        "on" => obs::set_enabled(true),
+        "off" => obs::set_enabled(false),
+        other => {
+            eprintln!("bad --telemetry value {other:?} (want on|off)");
+            std::process::exit(2);
+        }
+    }
+    obs::set_trace_every(a.parse_or("trace-sample", 0u64));
+    obs::set_recall_every(a.parse_or("recall-sample", 64u64));
+    // Touch the stage registry up front so an exported snapshot names
+    // every pipeline stage even before (or without) any traffic.
+    obs::stages();
+    a.get("metrics-out").filter(|s| !s.is_empty()).map(PathBuf::from)
+}
+
+/// Dump the global metrics registry: Prometheus text at `path` plus a
+/// JSON twin at `path`.json.
+fn write_metrics_snapshot(path: &Path) -> i32 {
+    let snap = obs::global().snapshot();
+    if let Err(e) = std::fs::write(path, snap.to_prometheus()) {
+        eprintln!("error writing {}: {e}", path.display());
+        return 1;
+    }
+    let mut json_path = path.as_os_str().to_os_string();
+    json_path.push(".json");
+    let json_path = PathBuf::from(json_path);
+    if let Err(e) = std::fs::write(&json_path, snap.to_json() + "\n") {
+        eprintln!("error writing {}: {e}", json_path.display());
+        return 1;
+    }
+    println!("wrote {} (+ {})", path.display(), json_path.display());
+    0
 }
 
 fn main() {
@@ -111,6 +161,7 @@ USAGE: hashdl <subcommand> [flags]
               [--fused-compare] [--train-serve] [--out BENCH_serve.json]
   serve-fleet [--config fleet.conf | --models <N>] [--dataset <..>]
               [--workers w] [--requests <N>] [--canary <f>]
+              [--stats-every <secs>]
               [--out BENCH_router.json]   (router + per-model pools)
   experiment  <table3|fig4|fig5|fig6|fig7|fig8> [--scale quick|medium|paper]
               [--datasets a,b] [--out-dir results/]
@@ -122,6 +173,12 @@ LSH tables with delta-coded buckets; ASGD runs rebuild tables from the
 merged weights at join); `eval`, `serve-bench` and `serve-fleet` load
 v4/v3/v2 snapshots and legacy v1 model files. `train --threads N --serve`
 serves live traffic while Hogwild-training, publishing every epoch.
+
+train-serve, serve-bench and serve-fleet share the telemetry flags
+[--telemetry on|off] [--trace-sample N] [--metrics-out metrics.prom]:
+stage timers and table-health counters feed one metrics registry, dumped
+as Prometheus text (+ .json twin) via --metrics-out; --trace-sample N
+prints every Nth micro-batch's span tree to stderr.
 Run any subcommand with --help for full flags.";
 
 fn parse_benchmark(name: &str) -> Benchmark {
@@ -393,7 +450,9 @@ fn cmd_train_serve(rest: Vec<String>) -> i32 {
         .opt("queue-cap", "1024", "bounded request-queue capacity")
         .opt("out", "BENCH_train_serve.json", "JSON output path")
         .flag("quiet", "suppress per-epoch logging");
+    let p = telemetry_opts(p);
     let a = p.parse_rest(rest);
+    let metrics_out = apply_telemetry_flags(&a);
 
     let method = Method::parse(a.get_or("method", "lsh")).unwrap_or_else(|e| {
         eprintln!("{e}");
@@ -499,38 +558,50 @@ fn cmd_train_serve(rest: Vec<String>) -> i32 {
         samples.accuracy(),
         record.final_acc(),
     );
-    let json = format!(
-        "{{\n  \"bench\": \"train_serve\",\n  \"dataset\": \"{}\",\n  \"network\": \"{}\",\n  \
-         \"epochs\": {},\n  \"publish_every_batches\": {},\n  \"workers\": {},\n  \
-         \"clients\": {},\n  \"requests\": {},\n  \"requests_per_sec\": {:.1},\n  \
-         \"p50_micros\": {},\n  \"p99_micros\": {},\n  \"mean_micros\": {:.1},\n  \
-         \"versions_published\": {},\n  \"distinct_versions_served\": {},\n  \
-         \"version_switches\": {},\n  \"dropped\": {},\n  \"serve_accuracy\": {:.4},\n  \
-         \"final_train_accuracy\": {:.4}\n}}\n",
-        b.name(),
-        net_desc,
-        trainer.cfg.epochs,
-        publish_every,
-        workers,
-        clients,
-        served,
-        served as f64 / wall,
-        samples.p50_micros(),
-        samples.p99_micros(),
-        samples.mean_micros(),
-        versions_published,
-        samples.versions.len(),
-        stats.version_switches,
-        samples.dropped,
-        samples.accuracy(),
-        record.final_acc(),
-    );
+    // Table health: one inner array per epoch, one object per hidden
+    // layer, snapshotted by the trainer right after table maintenance.
+    let mut health_epochs = JsonArray::new();
+    for per_epoch in &trainer.health_log {
+        let mut layers = JsonArray::new();
+        for h in per_epoch {
+            layers.push_raw(&h.to_json());
+        }
+        health_epochs.push_raw(&layers.finish());
+    }
+    let stage_breakdown = obs::MetricsSnapshot::stages_to_json(&obs::stages().all());
+    let json = JsonObject::new()
+        .str("bench", "train_serve")
+        .str("dataset", b.name())
+        .str("network", &net_desc)
+        .usize("epochs", trainer.cfg.epochs)
+        .usize("publish_every_batches", publish_every)
+        .usize("workers", workers)
+        .usize("clients", clients)
+        .u64("requests", served)
+        .fixed("requests_per_sec", served as f64 / wall, 1)
+        .u64("p50_micros", samples.p50_micros())
+        .u64("p99_micros", samples.p99_micros())
+        .fixed("mean_micros", samples.mean_micros(), 1)
+        .u64("versions_published", versions_published)
+        .usize("distinct_versions_served", samples.versions.len())
+        .u64("version_switches", stats.version_switches)
+        .u64("dropped", samples.dropped)
+        .fixed("serve_accuracy", samples.accuracy(), 4)
+        .fixed("final_train_accuracy", record.final_acc() as f64, 4)
+        .bool("telemetry", obs::enabled())
+        .raw("table_health", &health_epochs.finish())
+        .raw("stage_breakdown", &stage_breakdown)
+        .finish()
+        + "\n";
     let out = PathBuf::from(a.get_or("out", "BENCH_train_serve.json"));
     if let Err(e) = std::fs::write(&out, json) {
         eprintln!("error writing {}: {e}", out.display());
         return 1;
     }
     println!("wrote {}", out.display());
+    if let Some(path) = metrics_out {
+        return write_metrics_snapshot(&path);
+    }
     0
 }
 
@@ -607,7 +678,9 @@ fn cmd_serve_bench(rest: Vec<String>) -> i32 {
         .opt("publishes", "8", "train-serve: background publications to attempt")
         .opt("seed", "42", "run seed")
         .opt("out", "BENCH_serve.json", "JSON output path");
+    let p = telemetry_opts(p);
     let a = p.parse_rest(rest);
+    let metrics_out = apply_telemetry_flags(&a);
     let b = parse_benchmark(a.get("dataset").unwrap_or_default());
     let seed = a.parse_or("seed", 42u64);
     let n_requests = a.parse_or("requests", 2000usize).max(1);
@@ -655,7 +728,13 @@ fn cmd_serve_bench(rest: Vec<String>) -> i32 {
                     verbose: false,
                 },
             );
+            // Quick-training shares the process-global stage histograms
+            // with the benchmark proper; mute telemetry while it runs so
+            // the reported breakdown reflects serving traffic only.
+            let was_on = obs::enabled();
+            obs::set_enabled(false);
             t.run(&train, &stream);
+            obs::set_enabled(was_on);
             t.snapshot()
         }
     };
@@ -826,6 +905,9 @@ fn cmd_serve_bench(rest: Vec<String>) -> i32 {
             return 1;
         }
     }
+    if let Some(path) = metrics_out {
+        return write_metrics_snapshot(&path);
+    }
     0
 }
 
@@ -871,8 +953,11 @@ fn cmd_serve_fleet(rest: Vec<String>) -> i32 {
     .opt("overload-queue-cap", "8", "queue capacity forced in the overload scenario")
     .opt("overload-bursts", "256,1024,4096", "burst sizes for the overload shed curve")
     .opt("seed", "42", "run seed")
+    .opt("stats-every", "0", "print a fleet + telemetry snapshot every N seconds (0 = off)")
     .opt("out", "BENCH_router.json", "JSON output path");
+    let p = telemetry_opts(p);
     let a = p.parse_rest(rest);
+    let metrics_out = apply_telemetry_flags(&a);
 
     let b = parse_benchmark(a.get("dataset").unwrap_or_default());
     let seed = a.parse_or("seed", 42u64);
@@ -981,7 +1066,13 @@ fn cmd_serve_fleet(rest: Vec<String>) -> i32 {
                         verbose: false,
                     },
                 );
+                // Mute telemetry during quick-training (same reasoning as
+                // serve-bench): keep the exported stage breakdown about
+                // the serving scenarios, not model prep.
+                let was_on = obs::enabled();
+                obs::set_enabled(false);
                 t.run(&qtrain, &stream);
+                obs::set_enabled(was_on);
                 t.snapshot()
             }
         };
@@ -1019,7 +1110,35 @@ fn cmd_serve_fleet(rest: Vec<String>) -> i32 {
         overload_queue_cap: a.parse_or("overload-queue-cap", 8usize).max(1),
         overload_bursts,
     };
-    let report = run_route_bench(&models, &stream.xs, &rb_cfg);
+    // --stats-every: a background ticker prints the one-line JSON
+    // snapshot of the global metrics registry to stderr while the
+    // scenarios run — the same exporter feed Prometheus would scrape.
+    let stats_every = a.parse_or("stats-every", 0u64);
+    let report = if stats_every > 0 {
+        let stop = AtomicBool::new(false);
+        let mut report = None;
+        std::thread::scope(|s| {
+            let stop = &stop;
+            s.spawn(move || {
+                // Sleep in short slices so the ticker exits promptly once
+                // the bench finishes, whatever the interval.
+                let mut elapsed_ms = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    std::thread::sleep(Duration::from_millis(100));
+                    elapsed_ms += 100;
+                    if elapsed_ms >= stats_every.saturating_mul(1000) {
+                        elapsed_ms = 0;
+                        eprintln!("[stats] {}", obs::global().snapshot().to_json());
+                    }
+                }
+            });
+            report = Some(run_route_bench(&models, &stream.xs, &rb_cfg));
+            stop.store(true, Ordering::Relaxed);
+        });
+        report.expect("route bench ran inside the scope")
+    } else {
+        run_route_bench(&models, &stream.xs, &rb_cfg)
+    };
 
     for case in &report.cases {
         println!(
@@ -1061,15 +1180,16 @@ fn cmd_serve_fleet(rest: Vec<String>) -> i32 {
 
     let out = PathBuf::from(a.get_or("out", "BENCH_router.json"));
     match write_router_bench_json(&out, &report) {
-        Ok(()) => {
-            println!("wrote {}", out.display());
-            0
-        }
+        Ok(()) => println!("wrote {}", out.display()),
         Err(e) => {
             eprintln!("error writing {}: {e}", out.display());
-            1
+            return 1;
         }
     }
+    if let Some(path) = metrics_out {
+        return write_metrics_snapshot(&path);
+    }
+    0
 }
 
 fn cmd_experiment(mut rest: Vec<String>) -> i32 {

@@ -1,0 +1,285 @@
+//! One metrics registry, two output formats.
+//!
+//! Everything the stack measures — stage histograms, pool counters,
+//! router stats, table health — registers a named *reader closure*
+//! here; a snapshot walks the readers and renders Prometheus text
+//! exposition or JSON. The registry holds closures, not values, so the
+//! hot paths keep writing their own relaxed atomics and pay nothing for
+//! being exported; the `Mutex` is touched only on register/snapshot.
+
+use crate::serve::stats::LatencySnapshot;
+use crate::util::json::{JsonArray, JsonObject};
+use std::sync::{Mutex, OnceLock};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricKind {
+    Counter,
+    Gauge,
+}
+
+impl MetricKind {
+    fn prom(self) -> &'static str {
+        match self {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+        }
+    }
+}
+
+type ReadScalar = Box<dyn Fn() -> f64 + Send + Sync>;
+type ReadHist = Box<dyn Fn() -> LatencySnapshot + Send + Sync>;
+
+/// Named counters/gauges/histograms, read lazily at snapshot time.
+/// Re-registering a name replaces the reader (pools come and go in
+/// benches; the latest owner of a name wins).
+#[derive(Default)]
+pub struct MetricsRegistry {
+    scalars: Mutex<Vec<(String, MetricKind, ReadScalar)>>,
+    hists: Mutex<Vec<(String, ReadHist)>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn register_scalar(
+        &self,
+        name: &str,
+        kind: MetricKind,
+        read: impl Fn() -> f64 + Send + Sync + 'static,
+    ) {
+        let mut v = self.scalars.lock().unwrap();
+        if let Some(slot) = v.iter_mut().find(|(n, _, _)| n == name) {
+            slot.1 = kind;
+            slot.2 = Box::new(read);
+        } else {
+            v.push((name.to_string(), kind, Box::new(read)));
+        }
+    }
+
+    pub fn register_counter(&self, name: &str, read: impl Fn() -> f64 + Send + Sync + 'static) {
+        self.register_scalar(name, MetricKind::Counter, read);
+    }
+
+    pub fn register_gauge(&self, name: &str, read: impl Fn() -> f64 + Send + Sync + 'static) {
+        self.register_scalar(name, MetricKind::Gauge, read);
+    }
+
+    pub fn register_histogram(
+        &self,
+        name: &str,
+        read: impl Fn() -> LatencySnapshot + Send + Sync + 'static,
+    ) {
+        let mut v = self.hists.lock().unwrap();
+        if let Some(slot) = v.iter_mut().find(|(n, _)| n == name) {
+            slot.1 = Box::new(read);
+        } else {
+            v.push((name.to_string(), Box::new(read)));
+        }
+    }
+
+    /// Read every registered metric once.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let scalars = self
+            .scalars
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(n, k, f)| (n.clone(), *k, f()))
+            .collect();
+        let hists =
+            self.hists.lock().unwrap().iter().map(|(n, f)| (n.clone(), f())).collect();
+        MetricsSnapshot { scalars, hists }
+    }
+}
+
+/// A point-in-time reading of every registered metric.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSnapshot {
+    pub scalars: Vec<(String, MetricKind, f64)>,
+    pub hists: Vec<(String, LatencySnapshot)>,
+}
+
+impl MetricsSnapshot {
+    /// Prometheus text exposition format. Histograms render cumulative
+    /// `_bucket{le=...}` series (only the occupied bounds plus `+Inf`),
+    /// `_sum` and `_count`.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, kind, v) in &self.scalars {
+            out.push_str(&format!("# TYPE {name} {}\n", kind.prom()));
+            if *v == v.trunc() && v.abs() < 9.0e15 {
+                out.push_str(&format!("{name} {}\n", *v as i64));
+            } else {
+                out.push_str(&format!("{name} {v}\n"));
+            }
+        }
+        for (name, snap) in &self.hists {
+            out.push_str(&format!("# TYPE {name} histogram\n"));
+            let mut cum = 0u64;
+            for (i, &c) in snap.counts.iter().enumerate() {
+                if c == 0 {
+                    continue;
+                }
+                cum += c;
+                out.push_str(&format!(
+                    "{name}_bucket{{le=\"{}\"}} {cum}\n",
+                    LatencySnapshot::bucket_upper(i)
+                ));
+            }
+            out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", snap.count()));
+            out.push_str(&format!("{name}_sum {}\n", snap.sum_micros));
+            out.push_str(&format!("{name}_count {}\n", snap.count()));
+        }
+        out
+    }
+
+    /// JSON rendering: scalars verbatim, histograms summarised
+    /// (count/sum/mean/p50/p99).
+    pub fn to_json(&self) -> String {
+        let mut counters = JsonObject::new();
+        let mut gauges = JsonObject::new();
+        for (name, kind, v) in &self.scalars {
+            match kind {
+                MetricKind::Counter => counters.f64(name, *v),
+                MetricKind::Gauge => gauges.f64(name, *v),
+            };
+        }
+        let mut hists = JsonObject::new();
+        for (name, snap) in &self.hists {
+            let mut h = JsonObject::new();
+            h.u64("count", snap.count())
+                .u64("sum_micros", snap.sum_micros)
+                .fixed("mean_micros", snap.mean_micros(), 1)
+                .u64("p50_micros", snap.percentile_micros(50.0))
+                .u64("p99_micros", snap.percentile_micros(99.0));
+            hists.raw(name, &h.finish());
+        }
+        let mut o = JsonObject::new();
+        o.raw("counters", &counters.finish())
+            .raw("gauges", &gauges.finish())
+            .raw("histograms", &hists.finish());
+        o.finish()
+    }
+
+    /// Names of every metric in the snapshot (scalar and histogram).
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.scalars.iter().map(|(n, _, _)| n.clone()).collect();
+        v.extend(self.hists.iter().map(|(n, _)| n.clone()));
+        v
+    }
+
+    /// Render per-stage histogram summaries as a JSON array (used by
+    /// serve-bench's `stage_breakdown`).
+    pub fn stages_to_json(stages: &[(&'static str, LatencySnapshot)]) -> String {
+        let mut arr = JsonArray::new();
+        for (name, snap) in stages {
+            let mut o = JsonObject::new();
+            o.str("stage", name)
+                .u64("count", snap.count())
+                .u64("sum_micros", snap.sum_micros)
+                .fixed("mean_micros", snap.mean_micros(), 1)
+                .u64("p50_micros", snap.percentile_micros(50.0))
+                .u64("p99_micros", snap.percentile_micros(99.0));
+            arr.push_raw(&o.finish());
+        }
+        arr.finish()
+    }
+}
+
+static GLOBAL: OnceLock<MetricsRegistry> = OnceLock::new();
+
+/// The process-wide registry every subsystem registers into and every
+/// exporter consumer snapshots.
+pub fn global() -> &'static MetricsRegistry {
+    GLOBAL.get_or_init(MetricsRegistry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::stats::LatencyHistogram;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn scalar_reader_sees_live_value() {
+        let reg = MetricsRegistry::new();
+        let c = Arc::new(AtomicU64::new(0));
+        let c2 = Arc::clone(&c);
+        reg.register_counter("hashdl_test_total", move || c2.load(Ordering::Relaxed) as f64);
+        c.store(41, Ordering::Relaxed);
+        let snap = reg.snapshot();
+        assert_eq!(snap.scalars.len(), 1);
+        assert_eq!(snap.scalars[0].2, 41.0);
+        c.store(42, Ordering::Relaxed);
+        assert_eq!(reg.snapshot().scalars[0].2, 42.0);
+    }
+
+    #[test]
+    fn reregistering_a_name_replaces_not_duplicates() {
+        let reg = MetricsRegistry::new();
+        reg.register_gauge("g", || 1.0);
+        reg.register_gauge("g", || 2.0);
+        let snap = reg.snapshot();
+        assert_eq!(snap.scalars.len(), 1);
+        assert_eq!(snap.scalars[0].2, 2.0);
+    }
+
+    #[test]
+    fn prometheus_histogram_is_cumulative_and_parses() {
+        let reg = MetricsRegistry::new();
+        let h = Arc::new(LatencyHistogram::new());
+        h.record(3);
+        h.record(3);
+        h.record(1000);
+        let h2 = Arc::clone(&h);
+        reg.register_histogram("hashdl_lat_micros", move || h2.snapshot());
+        reg.register_counter("hashdl_reqs_total", || 3.0);
+        let text = reg.snapshot().to_prometheus();
+        assert!(text.contains("# TYPE hashdl_reqs_total counter"));
+        assert!(text.contains("hashdl_reqs_total 3"));
+        assert!(text.contains("# TYPE hashdl_lat_micros histogram"));
+        assert!(text.contains("hashdl_lat_micros_count 3"));
+        assert!(text.contains("hashdl_lat_micros_sum 1006"));
+        assert!(text.contains("le=\"+Inf\"} 3"));
+        // cumulative: the last finite bucket must already hold all 3
+        let inf_line = text.lines().find(|l| l.contains("+Inf")).unwrap();
+        assert!(inf_line.ends_with(" 3"));
+        // every non-comment line is "name value" or "name{labels} value"
+        for line in text.lines() {
+            if line.starts_with('#') || line.is_empty() {
+                continue;
+            }
+            let mut parts = line.rsplitn(2, ' ');
+            let val = parts.next().unwrap();
+            assert!(val.parse::<f64>().is_ok(), "unparsable value in: {line}");
+        }
+    }
+
+    #[test]
+    fn json_snapshot_shape() {
+        let reg = MetricsRegistry::new();
+        reg.register_counter("c_total", || 5.0);
+        reg.register_gauge("g_now", || 0.5);
+        let h = LatencyHistogram::new();
+        h.record(10);
+        let snap_h = h.snapshot();
+        reg.register_histogram("h_micros", move || snap_h.clone());
+        let js = reg.snapshot().to_json();
+        assert!(js.contains("\"counters\": {\"c_total\": 5}"));
+        assert!(js.contains("\"g_now\": 0.5"));
+        assert!(js.contains("\"h_micros\": {\"count\": 1"));
+    }
+
+    #[test]
+    fn names_cover_both_kinds() {
+        let reg = MetricsRegistry::new();
+        reg.register_counter("a", || 0.0);
+        reg.register_histogram("b", LatencySnapshot::default);
+        let names = reg.snapshot().names();
+        assert!(names.contains(&"a".to_string()));
+        assert!(names.contains(&"b".to_string()));
+    }
+}

@@ -1,0 +1,349 @@
+//! LSH table-health accounting: are the tables still any good?
+//!
+//! Selection quality drifts as weights move away from the tables that
+//! indexed them (the SLIDE rebuild-cadence problem). This module gives
+//! every `LayerTables`/`FrozenLayerTables` a [`HealthTally`] — per-node
+//! activation counters folded in at selection time plus rebuild-age and
+//! sampled-recall accumulators — and a [`TableHealth`] snapshot that
+//! combines the tally with bucket-occupancy statistics read straight
+//! from the tables.
+//!
+//! Everything here is relaxed atomics on the write path and pure reads
+//! on the probe path, so enabling it cannot perturb model output (the
+//! bitwise test in `tests/telemetry.rs` pins that).
+
+use crate::nn::layer::Layer;
+use crate::tensor::vecops::{dot, top_k_indices};
+use crate::util::json::JsonObject;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Per-table mutable health counters. Lives inside the table structs;
+/// all writes are relaxed atomics so shared (`Arc`) frozen tables can
+/// tally from many serve workers concurrently.
+#[derive(Debug)]
+pub struct HealthTally {
+    /// Per-node selection counts ("running activations").
+    counts: Vec<AtomicU64>,
+    /// Total node selections folded in (sum over counts).
+    selections: AtomicU64,
+    /// Micro-batches folded in since creation.
+    batches: AtomicU64,
+    /// Micro-batches folded in since the last rebuild.
+    since_rebuild: AtomicU64,
+    /// Sampled-recall accumulators: candidates checked / found in the
+    /// dense top-k.
+    recall_possible: AtomicU64,
+    recall_hits: AtomicU64,
+    recall_trials: AtomicU64,
+}
+
+impl HealthTally {
+    pub fn new(n_nodes: usize) -> Self {
+        let mut counts = Vec::with_capacity(n_nodes);
+        counts.resize_with(n_nodes, || AtomicU64::new(0));
+        HealthTally {
+            counts,
+            selections: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            since_rebuild: AtomicU64::new(0),
+            recall_possible: AtomicU64::new(0),
+            recall_hits: AtomicU64::new(0),
+            recall_trials: AtomicU64::new(0),
+        }
+    }
+
+    /// Fold one micro-batch of per-sample selections in. `outs` holds
+    /// the selected node ids per sample, exactly as `select_batch_into`
+    /// produced them.
+    pub fn note_batch(&self, outs: &[Vec<u32>]) {
+        let mut total = 0u64;
+        for sel in outs {
+            for &id in sel {
+                if let Some(c) = self.counts.get(id as usize) {
+                    c.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            total += sel.len() as u64;
+        }
+        self.selections.fetch_add(total, Ordering::Relaxed);
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.since_rebuild.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Fold one sampled-recall trial in (`hits` of `possible` selected
+    /// ids appeared in the dense top-k).
+    pub fn note_recall(&self, hits: u64, possible: u64) {
+        self.recall_hits.fetch_add(hits, Ordering::Relaxed);
+        self.recall_possible.fetch_add(possible, Ordering::Relaxed);
+        self.recall_trials.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Called on table rebuild: the activation counters keep running,
+    /// but the staleness clock restarts.
+    pub fn reset_rebuild_age(&self) {
+        self.since_rebuild.store(0, Ordering::Relaxed);
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+
+    pub fn selections(&self) -> u64 {
+        self.selections.load(Ordering::Relaxed)
+    }
+
+    pub fn node_count(&self, id: usize) -> u64 {
+        self.counts[id].load(Ordering::Relaxed)
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.counts.len()
+    }
+}
+
+/// A computed health snapshot for one layer's tables — the thing that
+/// lands in BENCH_train_serve.json per epoch and in the exporter.
+#[derive(Clone, Debug, Default)]
+pub struct TableHealth {
+    pub nodes: usize,
+    pub tables: usize,
+    /// Largest single bucket across all tables.
+    pub max_bucket: usize,
+    /// Mean size of *occupied* buckets.
+    pub mean_occupied_bucket: f64,
+    /// Fraction of buckets (over all tables) holding zero nodes.
+    pub empty_bucket_fraction: f64,
+    /// max_bucket / mean_occupied_bucket — 1.0 is perfectly even.
+    pub occupancy_skew: f64,
+    pub rebuilds: u64,
+    /// Micro-batches since the last rebuild (staleness clock).
+    pub rebuild_age_batches: u64,
+    pub selection_batches: u64,
+    pub selections: u64,
+    /// Nodes selected at least once since creation.
+    pub active_nodes: usize,
+    pub never_active_fraction: f64,
+    pub max_node_activations: u64,
+    pub mean_node_activations: f64,
+    /// Sampled overlap between LSH-selected ids and the dense top-k by
+    /// activation; meaningless (0.0) when `recall_trials == 0`.
+    pub recall_estimate: f64,
+    pub recall_trials: u64,
+}
+
+impl TableHealth {
+    /// Combine live bucket sizes (one `Vec<usize>` per table, empty
+    /// buckets included) with the running tally.
+    pub fn compute(bucket_sizes: &[Vec<usize>], rebuilds: u64, tally: &HealthTally) -> Self {
+        let mut max_bucket = 0usize;
+        let mut occupied = 0usize;
+        let mut occupied_sum = 0usize;
+        let mut total_buckets = 0usize;
+        for table in bucket_sizes {
+            total_buckets += table.len();
+            for &sz in table {
+                if sz > 0 {
+                    occupied += 1;
+                    occupied_sum += sz;
+                    max_bucket = max_bucket.max(sz);
+                }
+            }
+        }
+        let mean_occupied_bucket =
+            if occupied > 0 { occupied_sum as f64 / occupied as f64 } else { 0.0 };
+        let empty_bucket_fraction = if total_buckets > 0 {
+            (total_buckets - occupied) as f64 / total_buckets as f64
+        } else {
+            0.0
+        };
+        let occupancy_skew =
+            if mean_occupied_bucket > 0.0 { max_bucket as f64 / mean_occupied_bucket } else { 0.0 };
+
+        let nodes = tally.n_nodes();
+        let mut active_nodes = 0usize;
+        let mut max_act = 0u64;
+        let mut act_sum = 0u64;
+        for c in &tally.counts {
+            let v = c.load(Ordering::Relaxed);
+            if v > 0 {
+                active_nodes += 1;
+            }
+            max_act = max_act.max(v);
+            act_sum += v;
+        }
+        let never_active_fraction =
+            if nodes > 0 { (nodes - active_nodes) as f64 / nodes as f64 } else { 0.0 };
+        let mean_node_activations = if nodes > 0 { act_sum as f64 / nodes as f64 } else { 0.0 };
+
+        let possible = tally.recall_possible.load(Ordering::Relaxed);
+        let hits = tally.recall_hits.load(Ordering::Relaxed);
+        let recall_estimate = if possible > 0 { hits as f64 / possible as f64 } else { 0.0 };
+
+        TableHealth {
+            nodes,
+            tables: bucket_sizes.len(),
+            max_bucket,
+            mean_occupied_bucket,
+            empty_bucket_fraction,
+            occupancy_skew,
+            rebuilds,
+            rebuild_age_batches: tally.since_rebuild.load(Ordering::Relaxed),
+            selection_batches: tally.batches(),
+            selections: tally.selections(),
+            active_nodes,
+            never_active_fraction,
+            max_node_activations: max_act,
+            mean_node_activations,
+            recall_estimate,
+            recall_trials: tally.recall_trials.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut o = JsonObject::new();
+        o.usize("nodes", self.nodes)
+            .usize("tables", self.tables)
+            .usize("max_bucket", self.max_bucket)
+            .fixed("mean_occupied_bucket", self.mean_occupied_bucket, 2)
+            .fixed("empty_bucket_fraction", self.empty_bucket_fraction, 4)
+            .fixed("occupancy_skew", self.occupancy_skew, 2)
+            .u64("rebuilds", self.rebuilds)
+            .u64("rebuild_age_batches", self.rebuild_age_batches)
+            .u64("selection_batches", self.selection_batches)
+            .u64("selections", self.selections)
+            .usize("active_nodes", self.active_nodes)
+            .fixed("never_active_fraction", self.never_active_fraction, 4)
+            .u64("max_node_activations", self.max_node_activations)
+            .fixed("mean_node_activations", self.mean_node_activations, 2)
+            .fixed("recall_estimate", self.recall_estimate, 4)
+            .u64("recall_trials", self.recall_trials);
+        o.finish()
+    }
+}
+
+/// Dense-score every node of `layer` against query `q` and tally how
+/// many of the LSH-`selected` ids land in the true top-|selected| by
+/// activation. Pure reads — runs on a sampled batch, never touches the
+/// forward path.
+pub fn recall_probe(layer: &Layer, q: &[f32], selected: &[u32], tally: &HealthTally) {
+    let k = selected.len();
+    let n_out = layer.n_out();
+    if k == 0 || n_out == 0 || layer.n_in() != q.len() {
+        return;
+    }
+    let z: Vec<f32> = (0..n_out).map(|i| dot(layer.w.row(i), q) + layer.b[i]).collect();
+    let top = top_k_indices(&z, k);
+    let mut mark = vec![false; n_out];
+    for id in top {
+        mark[id as usize] = true;
+    }
+    let hits = selected.iter().filter(|&&id| (id as usize) < n_out && mark[id as usize]).count();
+    tally.note_recall(hits as u64, k as u64);
+}
+
+// --- sampling cadence -------------------------------------------------
+
+static RECALL_EVERY: AtomicU64 = AtomicU64::new(64);
+static RECALL_TICK: AtomicU64 = AtomicU64::new(0);
+
+/// Run the recall probe on every `n`th selection batch (0 disables;
+/// default 64). The first eligible batch always probes, so even short
+/// smoke runs produce at least one trial.
+pub fn set_recall_every(n: u64) {
+    RECALL_EVERY.store(n, Ordering::Relaxed);
+}
+
+/// Should this selection batch run the recall probe? Increments the
+/// global tick.
+pub fn recall_due() -> bool {
+    let n = RECALL_EVERY.load(Ordering::Relaxed);
+    if n == 0 {
+        return false;
+    }
+    RECALL_TICK.fetch_add(1, Ordering::Relaxed) % n == 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tally_counts_are_exact() {
+        let t = HealthTally::new(4);
+        t.note_batch(&[vec![0, 2], vec![2, 3]]);
+        t.note_batch(&[vec![2]]);
+        assert_eq!(t.node_count(0), 1);
+        assert_eq!(t.node_count(1), 0);
+        assert_eq!(t.node_count(2), 3);
+        assert_eq!(t.node_count(3), 1);
+        assert_eq!(t.selections(), 5);
+        assert_eq!(t.batches(), 2);
+    }
+
+    #[test]
+    fn rebuild_resets_age_not_counts() {
+        let t = HealthTally::new(2);
+        t.note_batch(&[vec![0]]);
+        t.reset_rebuild_age();
+        t.note_batch(&[vec![1]]);
+        let h = TableHealth::compute(&[vec![1, 1]], 1, &t);
+        assert_eq!(h.rebuild_age_batches, 1);
+        assert_eq!(h.selection_batches, 2);
+        assert_eq!(h.rebuilds, 1);
+    }
+
+    #[test]
+    fn occupancy_stats_on_hand_built_buckets() {
+        // two tables of 4 buckets: sizes [3,0,1,0] and [0,0,2,2].
+        let bs = vec![vec![3, 0, 1, 0], vec![0, 0, 2, 2]];
+        let t = HealthTally::new(8);
+        let h = TableHealth::compute(&bs, 0, &t);
+        assert_eq!(h.tables, 2);
+        assert_eq!(h.max_bucket, 3);
+        assert!((h.mean_occupied_bucket - 2.0).abs() < 1e-12); // (3+1+2+2)/4
+        assert!((h.empty_bucket_fraction - 0.5).abs() < 1e-12); // 4 of 8
+        assert!((h.occupancy_skew - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn recall_accumulates_as_ratio() {
+        let t = HealthTally::new(4);
+        t.note_recall(1, 2);
+        t.note_recall(2, 2);
+        let h = TableHealth::compute(&[], 0, &t);
+        assert_eq!(h.recall_trials, 2);
+        assert!((h.recall_estimate - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_everything_is_zero_not_nan() {
+        let t = HealthTally::new(0);
+        let h = TableHealth::compute(&[], 0, &t);
+        assert_eq!(h.occupancy_skew, 0.0);
+        assert_eq!(h.mean_node_activations, 0.0);
+        assert_eq!(h.recall_estimate, 0.0);
+        assert!(h.to_json().starts_with('{'));
+    }
+
+    #[test]
+    fn recall_probe_perfect_on_identity_layer() {
+        use crate::nn::activation::Activation;
+        use crate::tensor::matrix::Matrix;
+        // 3 nodes over 3 inputs, w = I, b = 0: activations == q.
+        let mut w = Matrix::zeros(3, 3);
+        for i in 0..3 {
+            w.row_mut(i)[i] = 1.0;
+        }
+        let layer = Layer { w, b: vec![0.0; 3], act: Activation::ReLU };
+        let t = HealthTally::new(3);
+        // q favours node 2 then 0; selecting exactly those two is 100%.
+        recall_probe(&layer, &[0.5, -1.0, 2.0], &[2, 0], &t);
+        let h = TableHealth::compute(&[], 0, &t);
+        assert_eq!(h.recall_trials, 1);
+        assert!((h.recall_estimate - 1.0).abs() < 1e-12);
+        // Selecting the worst node instead is 50%.
+        recall_probe(&layer, &[0.5, -1.0, 2.0], &[2, 1], &t);
+        let h = TableHealth::compute(&[], 0, &t);
+        assert!((h.recall_estimate - 0.75).abs() < 1e-12);
+    }
+}

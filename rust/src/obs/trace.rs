@@ -1,0 +1,234 @@
+//! Stage vocabulary and per-request span trees.
+//!
+//! Every unit of work on the request path is attributed to one [`Stage`].
+//! The global per-stage histograms (`crate::obs::stages`) aggregate all
+//! of them; on top of that, `--trace-sample N` activates a thread-local
+//! trace for every Nth micro-batch, capturing each stage's start offset,
+//! duration and nesting depth as a [`Trace`] the worker emits whole.
+//!
+//! The thread-local is the trick that keeps tracing free when idle: the
+//! scoped timers in `crate::obs` consult it with one `RefCell` borrow
+//! only after the cheap enabled check, and when no trace is active the
+//! borrow finds `None` and returns immediately.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// One stage of the request path (training adds the backward stages).
+/// The order here is pipeline order — reports iterate [`STAGES`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Request sat in the pool's bounded queue (enqueue → batch claim).
+    Queue,
+    /// Worker re-pinned its workspace to the newest published epoch.
+    EpochPin,
+    /// Layer inputs densified into the query plane.
+    Densify,
+    /// One-pass fingerprint hashing of the whole batch.
+    HashFp,
+    /// Multi-probe bucket collection + multiplicity ranking (+ §5.4
+    /// re-rank) per sample.
+    ProbeRank,
+    /// Fused union-major (or sample-major) sparse forward gather.
+    Gather,
+    /// Dense output layer over all classes.
+    Output,
+    /// Backward pass + gradient application (training only).
+    Backprop,
+}
+
+pub const N_STAGES: usize = 8;
+
+/// All stages in pipeline order.
+pub const STAGES: [Stage; N_STAGES] = [
+    Stage::Queue,
+    Stage::EpochPin,
+    Stage::Densify,
+    Stage::HashFp,
+    Stage::ProbeRank,
+    Stage::Gather,
+    Stage::Output,
+    Stage::Backprop,
+];
+
+impl Stage {
+    /// Stable metric-name component (`hashdl_stage_<name>_micros`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Queue => "queue",
+            Stage::EpochPin => "epoch_pin",
+            Stage::Densify => "densify",
+            Stage::HashFp => "hash",
+            Stage::ProbeRank => "probe_rank",
+            Stage::Gather => "gather",
+            Stage::Output => "output",
+            Stage::Backprop => "backprop",
+        }
+    }
+
+    #[inline]
+    pub fn index(self) -> usize {
+        self as usize
+    }
+}
+
+/// One completed span inside a trace.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceEvent {
+    pub stage: Stage,
+    /// Nesting depth at the time the span opened (0 = top level).
+    pub depth: usize,
+    /// Offset from the trace start, microseconds.
+    pub start_micros: u64,
+    pub dur_micros: u64,
+}
+
+/// A full span tree for one sampled micro-batch, events in start order.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    pub id: u64,
+    pub events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    /// Indented one-line-per-span rendering (what `--trace-sample` emits
+    /// to stderr).
+    pub fn render(&self) -> String {
+        let mut s = format!("[trace {}] {} spans", self.id, self.events.len());
+        for e in &self.events {
+            s.push('\n');
+            for _ in 0..=e.depth {
+                s.push_str("  ");
+            }
+            s.push_str(&format!(
+                "{:<10} +{:>6}us {:>6}us",
+                e.stage.name(),
+                e.start_micros,
+                e.dur_micros
+            ));
+        }
+        s
+    }
+}
+
+struct TraceState {
+    id: u64,
+    t0: Instant,
+    open: Vec<Stage>,
+    events: Vec<TraceEvent>,
+}
+
+thread_local! {
+    static ACTIVE: RefCell<Option<TraceState>> = const { RefCell::new(None) };
+}
+
+/// Begin collecting a span tree on this thread (replaces any active one).
+pub fn trace_begin(id: u64) {
+    ACTIVE.with(|a| {
+        *a.borrow_mut() =
+            Some(TraceState { id, t0: Instant::now(), open: Vec::new(), events: Vec::new() })
+    });
+}
+
+/// Finish the active trace and return it (events sorted into start
+/// order); `None` if no trace was active on this thread.
+pub fn trace_end() -> Option<Trace> {
+    ACTIVE.with(|a| a.borrow_mut().take()).map(|st| {
+        let mut events = st.events;
+        events.sort_by_key(|e| (e.start_micros, e.depth));
+        Trace { id: st.id, events }
+    })
+}
+
+pub fn trace_active() -> bool {
+    ACTIVE.with(|a| a.borrow().is_some())
+}
+
+/// Called by the scoped timers when a span opens.
+pub(crate) fn note_open(stage: Stage) {
+    ACTIVE.with(|a| {
+        if let Some(st) = a.borrow_mut().as_mut() {
+            st.open.push(stage);
+        }
+    });
+}
+
+/// Called by the scoped timers when a span closes. A span that opened
+/// before the trace began (stale stack top) is recorded at the current
+/// depth with its start clamped to the trace origin.
+pub(crate) fn note_close(stage: Stage, start: Instant, dur_micros: u64) {
+    ACTIVE.with(|a| {
+        if let Some(st) = a.borrow_mut().as_mut() {
+            if st.open.last() == Some(&stage) {
+                st.open.pop();
+            }
+            let depth = st.open.len();
+            let start_micros = start.saturating_duration_since(st.t0).as_micros() as u64;
+            st.events.push(TraceEvent { stage, depth, start_micros, dur_micros });
+        }
+    });
+}
+
+// --- sampling cadence -------------------------------------------------
+
+static TRACE_EVERY: AtomicU64 = AtomicU64::new(0);
+static TRACE_TICK: AtomicU64 = AtomicU64::new(0);
+
+/// Emit a full span tree for every `n`th micro-batch (0 disables —
+/// the default).
+pub fn set_trace_every(n: u64) {
+    TRACE_EVERY.store(n, Ordering::Relaxed);
+}
+
+/// Should the next micro-batch be traced? Increments the global tick.
+pub fn trace_due() -> bool {
+    let n = TRACE_EVERY.load(Ordering::Relaxed);
+    if n == 0 {
+        return false;
+    }
+    TRACE_TICK.fetch_add(1, Ordering::Relaxed) % n == 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_indices_match_pipeline_order() {
+        for (i, s) in STAGES.iter().enumerate() {
+            assert_eq!(s.index(), i);
+        }
+        let mut names: Vec<&str> = STAGES.iter().map(|s| s.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), N_STAGES, "stage names must be distinct");
+    }
+
+    #[test]
+    fn trace_due_fires_every_nth() {
+        // The tick is global; only relative behaviour is assertable.
+        set_trace_every(0);
+        assert!(!trace_due());
+        set_trace_every(1);
+        assert!(trace_due());
+        assert!(trace_due());
+        set_trace_every(0);
+        assert!(!trace_due());
+    }
+
+    #[test]
+    fn render_mentions_every_span() {
+        let t = Trace {
+            id: 7,
+            events: vec![
+                TraceEvent { stage: Stage::HashFp, depth: 0, start_micros: 0, dur_micros: 5 },
+                TraceEvent { stage: Stage::Gather, depth: 1, start_micros: 6, dur_micros: 2 },
+            ],
+        };
+        let r = t.render();
+        assert!(r.contains("trace 7"));
+        assert!(r.contains("hash"));
+        assert!(r.contains("gather"));
+    }
+}

@@ -7,25 +7,13 @@
 
 use crate::router::registry::ModelEntry;
 use crate::serve::stats::VersionAgeSnapshot;
-use std::fmt::Write as _;
+use crate::util::json::JsonObject;
 
-/// Escape a string for embedding in a JSON string literal. Model names
-/// come from operator config files, so quotes/backslashes/control bytes
-/// must not be interpolated raw into `BENCH_router.json`.
-pub fn json_escape(s: &str) -> String {
-    let mut out = String::with_capacity(s.len());
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            c if (c as u32) < 0x20 => {
-                let _ = write!(out, "\\u{:04x}", c as u32);
-            }
-            c => out.push(c),
-        }
-    }
-    out
-}
+/// Escape a string for embedding in a JSON string literal (re-exported
+/// from the shared JSON writer — model names come from operator config
+/// files, so quotes/backslashes/control bytes must not be interpolated
+/// raw into `BENCH_router.json`).
+pub use crate::util::json::escape as json_escape;
 
 /// One model's view at a snapshot instant.
 #[derive(Clone, Debug)]
@@ -85,24 +73,20 @@ impl ModelStatus {
     /// JSON object literal (the shape shared by `Router::stats` dumps and
     /// `BENCH_router.json`).
     pub fn to_json(&self) -> String {
-        format!(
-            "{{\"name\": \"{}\", \"latest_version\": {}, \"accepted\": {}, \"shed\": {}, \
-             \"shed_rate\": {:.4}, \"served\": {}, \"req_per_sec\": {:.1}, \
-             \"p50_micros\": {}, \"p99_micros\": {}, \"mean_batch\": {:.2}, \
-             \"version_switches\": {}, \"version_age\": {}}}",
-            json_escape(&self.name),
-            self.latest_version,
-            self.accepted,
-            self.shed,
-            self.shed_rate(),
-            self.served,
-            self.req_per_sec,
-            self.p50_micros,
-            self.p99_micros,
-            self.mean_batch,
-            self.version_switches,
-            self.version_age.to_json_array(),
-        )
+        JsonObject::new()
+            .str("name", &self.name)
+            .u64("latest_version", self.latest_version)
+            .u64("accepted", self.accepted)
+            .u64("shed", self.shed)
+            .fixed("shed_rate", self.shed_rate(), 4)
+            .u64("served", self.served)
+            .fixed("req_per_sec", self.req_per_sec, 1)
+            .u64("p50_micros", self.p50_micros)
+            .u64("p99_micros", self.p99_micros)
+            .fixed("mean_batch", self.mean_batch, 2)
+            .u64("version_switches", self.version_switches)
+            .raw("version_age", &self.version_age.to_json_array())
+            .finish()
     }
 }
 
@@ -137,18 +121,15 @@ impl ShadowStats {
     }
 
     pub fn to_json(&self) -> String {
-        format!(
-            "{{\"sampled\": {}, \"compared\": {}, \"pred_mismatches\": {}, \
-             \"mismatch_rate\": {:.4}, \"max_abs_logit_diff\": {:.6}, \"shadow_shed\": {}, \
-             \"unpaired\": {}}}",
-            self.sampled,
-            self.compared,
-            self.pred_mismatches,
-            self.mismatch_rate(),
-            self.max_abs_logit_diff,
-            self.shadow_shed,
-            self.unpaired,
-        )
+        JsonObject::new()
+            .u64("sampled", self.sampled)
+            .u64("compared", self.compared)
+            .u64("pred_mismatches", self.pred_mismatches)
+            .fixed("mismatch_rate", self.mismatch_rate(), 4)
+            .fixed("max_abs_logit_diff", self.max_abs_logit_diff as f64, 6)
+            .u64("shadow_shed", self.shadow_shed)
+            .u64("unpaired", self.unpaired)
+            .finish()
     }
 }
 
@@ -177,13 +158,15 @@ impl RouterStats {
     }
 
     pub fn to_json(&self) -> String {
-        let models: Vec<String> = self.models.iter().map(|m| m.to_json()).collect();
-        format!(
-            "{{\"policy\": \"{}\", \"models\": [{}], \"shadow\": {}}}",
-            self.policy,
-            models.join(", "),
-            self.shadow.to_json(),
-        )
+        let mut models = crate::util::json::JsonArray::new();
+        for m in &self.models {
+            models.push_raw(&m.to_json());
+        }
+        JsonObject::new()
+            .str("policy", self.policy)
+            .raw("models", &models.finish())
+            .raw("shadow", &self.shadow.to_json())
+            .finish()
     }
 }
 

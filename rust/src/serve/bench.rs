@@ -113,6 +113,9 @@ pub fn percentile_micros(sorted: &[u64], p: f64) -> u64 {
     if sorted.is_empty() {
         return 0;
     }
+    // Same out-of-range policy as LatencySnapshot::percentile_micros: NaN
+    // reads as the max, everything else clamps into [0, 100].
+    let p = if p.is_nan() { 100.0 } else { p.clamp(0.0, 100.0) };
     let rank = ((p / 100.0) * sorted.len() as f64).ceil().max(1.0) as usize;
     sorted[rank.min(sorted.len()) - 1]
 }
@@ -584,10 +587,16 @@ pub fn write_bench_json(
             fused_side_json(&fc.fused),
         ),
     };
+    // Per-stage latency breakdown (queue → epoch pin → densify → hash →
+    // probe/rank → gather → output → backprop) from the process-global
+    // telemetry histograms — everything this process ran contributes.
+    let stage_breakdown = crate::obs::MetricsSnapshot::stages_to_json(&crate::obs::stages().all());
+    let telemetry = crate::obs::enabled();
     let json = format!(
         "{{\n  \"bench\": \"serve\",\n  \"network\": \"{network}\",\n  \
          \"sparsity\": {sparsity},\n  \"dense_mults_per_request\": {dense_mults_per_request},\n  \
-         \"sparse_mult_fraction\": {sparse_frac:.4},\n  \"cases\": [\n{cases}\n  ],\n  \
+         \"sparse_mult_fraction\": {sparse_frac:.4},\n  \"telemetry\": {telemetry},\n  \
+         \"stage_breakdown\": {stage_breakdown},\n  \"cases\": [\n{cases}\n  ],\n  \
          \"scaling\": [\n{scaling}\n  ]{ts_section}{fc_section}\n}}\n"
     );
     std::fs::write(path, json)

@@ -47,6 +47,8 @@
 //! is the non-blocking admission point: a full bounded queue *sheds* the
 //! request (counted by the caller) instead of parking the producer.
 
+use crate::obs;
+use crate::obs::Stage;
 use crate::serve::engine::{InferenceWorkspace, SparseInferenceEngine};
 use crate::serve::stats::{
     LatencyHistogram, LatencySnapshot, VersionAgeHistogram, VersionAgeSnapshot,
@@ -448,13 +450,17 @@ fn send_response(
     // Per-response accounting: enqueue → response sent, so queue wait and
     // service both land in the histogram the router reads.
     counters.latency.record(req.enqueued.elapsed().as_micros() as u64);
+    let queue_micros = claimed.duration_since(req.enqueued).as_micros() as u64;
+    // Queue wait as a telemetry stage: start predates the worker claiming
+    // the request, so it is recorded externally rather than spanned.
+    obs::record_stage(Stage::Queue, req.enqueued, queue_micros);
     // Client may have given up (dropped receiver) — ignore.
     let _ = req.reply.send(Response {
         id: req.id,
         pred,
         version,
         mults,
-        queue_micros: claimed.duration_since(req.enqueued).as_micros() as u64,
+        queue_micros,
         batch_size: bsz,
         logits,
     });
@@ -469,13 +475,21 @@ fn worker_loop(
     let mut ws = InferenceWorkspace::new(engine);
     let mut batch: Vec<Request> = Vec::with_capacity(cfg.max_batch);
     while queue.pop_batch(cfg.max_batch, cfg.batch_deadline, &mut batch) {
+        // Sampled request tracing: every Nth micro-batch (--trace-sample N)
+        // captures its full span tree, identified by its first request id.
+        let tracing = obs::enabled() && obs::trace_due();
+        if tracing {
+            obs::trace_begin(batch[0].id);
+        }
         // Pick up a newly published model *between* micro-batches: every
         // request in this batch is answered from one pinned version, and a
         // concurrent publish costs this worker one atomic load, never a
         // lock or a stall.
+        let pin_span = obs::begin(Stage::EpochPin);
         if ws.sync(engine) {
             counters.version_switches.fetch_add(1, Ordering::Relaxed);
         }
+        obs::end(pin_span);
         let bsz = batch.len() as u32;
         let claimed = Instant::now();
         if cfg.sparse {
@@ -533,6 +547,12 @@ fn worker_loop(
         // completion (the next sync() will close the gap).
         counters.version_age.record(engine.latest_version().saturating_sub(ws.version()));
         counters.batches.fetch_add(1, Ordering::Relaxed);
+        if tracing {
+            if let Some(tr) = obs::trace_end() {
+                eprintln!("{}", tr.render());
+                obs::note_trace();
+            }
+        }
     }
 }
 

@@ -81,21 +81,29 @@ fn latency_bucket_upper(i: usize) -> u64 {
 /// relaxed `fetch_add`; reading snapshots all buckets.
 pub struct LatencyHistogram {
     buckets: [AtomicU64; LATENCY_BUCKETS],
+    /// Exact sum of recorded values — means and Prometheus `_sum` read
+    /// this instead of approximating from bucket bounds.
+    sum: AtomicU64,
 }
 
 impl LatencyHistogram {
     pub fn new() -> Self {
-        LatencyHistogram { buckets: std::array::from_fn(|_| AtomicU64::new(0)) }
+        LatencyHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+        }
     }
 
     #[inline]
     pub fn record(&self, micros: u64) {
         self.buckets[latency_bucket(micros)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(micros, Ordering::Relaxed);
     }
 
     pub fn snapshot(&self) -> LatencySnapshot {
         LatencySnapshot {
             counts: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+            sum_micros: self.sum.load(Ordering::Relaxed),
         }
     }
 }
@@ -110,11 +118,13 @@ impl Default for LatencyHistogram {
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct LatencySnapshot {
     pub counts: [u64; LATENCY_BUCKETS],
+    /// Exact sum of the recorded values (microseconds).
+    pub sum_micros: u64,
 }
 
 impl Default for LatencySnapshot {
     fn default() -> Self {
-        LatencySnapshot { counts: [0; LATENCY_BUCKETS] }
+        LatencySnapshot { counts: [0; LATENCY_BUCKETS], sum_micros: 0 }
     }
 }
 
@@ -124,14 +134,34 @@ impl LatencySnapshot {
         self.counts.iter().sum()
     }
 
+    /// Exact mean of the recorded values; 0 on an empty histogram.
+    pub fn mean_micros(&self) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            0.0
+        } else {
+            self.sum_micros as f64 / total as f64
+        }
+    }
+
+    /// Inclusive upper bound of bucket `i` — the value a percentile read
+    /// reports for ranks landing there. Exposed for exporters that need
+    /// the bucket layout (Prometheus `le` labels).
+    pub fn bucket_upper(i: usize) -> u64 {
+        latency_bucket_upper(i.min(LATENCY_BUCKETS - 1))
+    }
+
     /// Nearest-rank percentile, reported as the upper bound of the bucket
     /// holding that rank (conservative: the true latency is ≤ this).
-    /// Returns 0 on an empty histogram.
+    /// Returns 0 on an empty histogram. `p` is a percent and is clamped
+    /// into [0, 100] — out-of-range requests read as p0/p100 instead of
+    /// indexing garbage ranks.
     pub fn percentile_micros(&self, p: f64) -> u64 {
         let total = self.count();
         if total == 0 {
             return 0;
         }
+        let p = if p.is_nan() { 100.0 } else { p.clamp(0.0, 100.0) };
         let rank = ((p / 100.0) * total as f64).ceil().max(1.0) as u64;
         let mut cum = 0u64;
         for (i, &c) in self.counts.iter().enumerate() {
@@ -156,6 +186,7 @@ impl LatencySnapshot {
         for (a, b) in self.counts.iter_mut().zip(&other.counts) {
             *a += b;
         }
+        self.sum_micros += other.sum_micros;
     }
 }
 
@@ -332,5 +363,44 @@ mod tests {
     #[test]
     fn empty_age_histogram_reads_as_current() {
         assert_eq!(VersionAgeSnapshot::default().current_fraction(), 1.0);
+    }
+
+    #[test]
+    fn percentile_clamps_out_of_range_p() {
+        let h = LatencyHistogram::new();
+        for v in [10u64, 20, 30] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.percentile_micros(-5.0), s.percentile_micros(0.0));
+        assert_eq!(s.percentile_micros(250.0), s.percentile_micros(100.0));
+        assert_eq!(s.percentile_micros(f64::NAN), s.percentile_micros(100.0));
+        assert_eq!(LatencySnapshot::default().percentile_micros(150.0), 0);
+        assert_eq!(LatencySnapshot::default().percentile_micros(-1.0), 0);
+    }
+
+    #[test]
+    fn sum_and_mean_are_exact() {
+        let h = LatencyHistogram::new();
+        for v in [100u64, 200, 300] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.sum_micros, 600);
+        assert!((s.mean_micros() - 200.0).abs() < 1e-12);
+        assert_eq!(LatencySnapshot::default().mean_micros(), 0.0);
+        let mut m = s;
+        m.merge(&s);
+        assert_eq!(m.sum_micros, 1200);
+        assert_eq!(m.count(), 6);
+    }
+
+    #[test]
+    fn bucket_upper_is_public_and_clamped() {
+        assert_eq!(LatencySnapshot::bucket_upper(0), 0);
+        assert_eq!(
+            LatencySnapshot::bucket_upper(LATENCY_BUCKETS + 50),
+            LatencySnapshot::bucket_upper(LATENCY_BUCKETS - 1)
+        );
     }
 }

@@ -26,6 +26,8 @@ use crate::nn::layer::Layer;
 use crate::nn::loss::softmax_xent_grad;
 use crate::nn::network::Network;
 use crate::nn::sparse::{LayerInput, SparseVec};
+use crate::obs;
+use crate::obs::{Stage, TableHealth};
 use crate::optim::{OptimConfig, Optimizer};
 use crate::publish::{ModelParts, TablePublisher};
 use crate::sampling::{make_selector, NodeSelector, SamplerConfig};
@@ -348,7 +350,9 @@ pub fn train_batch(
         // order against the gradient sinks (`GradSink::touched_rows`).
         lp.refresh_union(layer.n_out(), bsz);
         mults.selection += cost.selection_mults;
+        let gather = obs::begin(Stage::Gather);
         mults.forward += crate::exec::forward_union_major(layer, &inputs, lp, outs);
+        obs::end(gather);
         for out in outs.iter() {
             active_fraction += out.len() as f32 / layer.n_out() as f32;
         }
@@ -357,6 +361,7 @@ pub fn train_batch(
     // ---- Output layer: dense over all classes, every sample -------------
     let out_layer_idx = n_hidden;
     {
+        let output_span = obs::begin(Stage::Output);
         let layer = &net.layers[out_layer_idx];
         for s in 0..bsz {
             let input = if n_hidden == 0 {
@@ -366,6 +371,7 @@ pub fn train_batch(
             };
             mults.forward += layer.forward_sparse(input, &ws.all_out, &mut ws.out_sparse[s]);
         }
+        obs::end(output_span);
     }
 
     // ---- Loss ------------------------------------------------------------
@@ -381,6 +387,7 @@ pub fn train_batch(
     }
 
     // ---- Backward (layer-major) + gradient accumulation ------------------
+    let backprop_span = obs::begin(Stage::Backprop);
     {
         let layer = &net.layers[out_layer_idx];
         if n_hidden > 0 {
@@ -487,6 +494,8 @@ pub fn train_batch(
         mults.update += ws.grads[l].apply(l, layer, opt, inv_b);
         selectors[l].post_update(layer, ws.grads[l].touched_rows(), rng);
     }
+    obs::end(backprop_span);
+    obs::note_batch();
 
     BatchResult {
         loss: (loss_sum / bsz as f64) as f32,
@@ -653,6 +662,10 @@ pub struct Trainer {
     pub selectors: Vec<Box<dyn NodeSelector>>,
     pub opt: Optimizer,
     pub cfg: TrainConfig,
+    /// Per-epoch LSH table-health snapshots (one inner entry per hidden
+    /// layer), captured right after each epoch's table maintenance. Empty
+    /// for methods that keep no tables.
+    pub health_log: Vec<Vec<TableHealth>>,
     ws: BatchWorkspace,
     rng: Pcg64,
     hook: Option<PublishHook>,
@@ -666,7 +679,7 @@ impl Trainer {
             .collect();
         let opt = Optimizer::for_network(cfg.optim, &net);
         let ws = BatchWorkspace::for_network(&net);
-        Trainer { net, selectors, opt, cfg, ws, rng, hook: None }
+        Trainer { net, selectors, opt, cfg, health_log: Vec::new(), ws, rng, hook: None }
     }
 
     /// Freeze the current live state into publishable parts ([`None`] for
@@ -798,6 +811,16 @@ impl Trainer {
         }
         for (l, sel) in self.selectors.iter_mut().enumerate() {
             sel.on_epoch_end(&self.net.layers[l], epoch, &mut self.rng);
+        }
+        // Table health right after maintenance: occupancy reflects the
+        // freshly rebuilt buckets, activation counters cover the epoch.
+        let health: Vec<TableHealth> = self
+            .selectors
+            .iter()
+            .filter_map(|s| s.lsh_tables().map(|t| t.health_snapshot()))
+            .collect();
+        if health.len() == self.net.n_hidden() {
+            self.health_log.push(health);
         }
         // Epoch-boundary publication ships the freshly rebuilt tables.
         if let Some(hook) = self.hook.as_mut() {

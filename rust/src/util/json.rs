@@ -1,0 +1,211 @@
+//! Shared hand-rolled JSON writer (the offline crate set has no serde).
+//!
+//! Before this module every JSON emitter in the tree — `router/stats.rs`,
+//! `serve/bench.rs`, the train-serve report in `main.rs` — re-implemented
+//! escaping and object assembly with its own `format!` blocks. This is
+//! the one writer they now share, and the one the telemetry exporter
+//! (`crate::obs::export`) is built on.
+//!
+//! Output conventions (pinned by the router stats tests and the CI
+//! python asserts that parse the BENCH artifacts): objects render as
+//! `{"k": v, "k2": v2}` — a space after each colon and `", "` between
+//! fields — and arrays as `[a, b, c]`.
+
+use std::fmt::Write as _;
+
+/// Escape a string for embedding in a JSON string literal. Model names
+/// and dataset names come from operator config files, so quotes,
+/// backslashes and control bytes must not be interpolated raw.
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Incremental JSON object builder. Field order is insertion order.
+///
+/// ```
+/// use hashdl::util::json::JsonObject;
+/// let mut o = JsonObject::new();
+/// o.str("name", "a").u64("served", 3).fixed("rate", 0.5, 4);
+/// assert_eq!(o.finish(), r#"{"name": "a", "served": 3, "rate": 0.5000}"#);
+/// ```
+#[derive(Default)]
+pub struct JsonObject {
+    buf: String,
+    first: bool,
+}
+
+impl JsonObject {
+    pub fn new() -> Self {
+        JsonObject { buf: String::from("{"), first: true }
+    }
+
+    fn key(&mut self, k: &str) {
+        if !self.first {
+            self.buf.push_str(", ");
+        }
+        self.first = false;
+        let _ = write!(self.buf, "\"{}\": ", escape(k));
+    }
+
+    /// String field (value is escaped).
+    pub fn str(&mut self, k: &str, v: &str) -> &mut Self {
+        self.key(k);
+        let _ = write!(self.buf, "\"{}\"", escape(v));
+        self
+    }
+
+    pub fn u64(&mut self, k: &str, v: u64) -> &mut Self {
+        self.key(k);
+        let _ = write!(self.buf, "{v}");
+        self
+    }
+
+    pub fn usize(&mut self, k: &str, v: usize) -> &mut Self {
+        self.u64(k, v as u64)
+    }
+
+    pub fn bool(&mut self, k: &str, v: bool) -> &mut Self {
+        self.key(k);
+        self.buf.push_str(if v { "true" } else { "false" });
+        self
+    }
+
+    /// f64 with `{}` formatting (integral values print without a point —
+    /// still valid JSON).
+    pub fn f64(&mut self, k: &str, v: f64) -> &mut Self {
+        self.key(k);
+        let _ = write!(self.buf, "{v}");
+        self
+    }
+
+    /// f64 with a fixed number of decimals (the shape the existing
+    /// emitters pin: `{:.4}` shed rates, `{:.1}` req/s, …).
+    pub fn fixed(&mut self, k: &str, v: f64, decimals: usize) -> &mut Self {
+        self.key(k);
+        let _ = write!(self.buf, "{v:.decimals$}");
+        self
+    }
+
+    /// Pre-rendered JSON value (nested object/array) — embedded verbatim.
+    pub fn raw(&mut self, k: &str, v: &str) -> &mut Self {
+        self.key(k);
+        self.buf.push_str(v);
+        self
+    }
+
+    pub fn finish(&mut self) -> String {
+        let mut buf = std::mem::take(&mut self.buf);
+        if buf.is_empty() {
+            buf.push('{');
+        }
+        buf.push('}');
+        buf
+    }
+}
+
+/// Incremental JSON array builder, rendering as `[a, b, c]`.
+#[derive(Default)]
+pub struct JsonArray {
+    buf: String,
+    first: bool,
+}
+
+impl JsonArray {
+    pub fn new() -> Self {
+        JsonArray { buf: String::from("["), first: true }
+    }
+
+    fn sep(&mut self) {
+        if !self.first {
+            self.buf.push_str(", ");
+        }
+        self.first = false;
+    }
+
+    pub fn push_raw(&mut self, v: &str) -> &mut Self {
+        self.sep();
+        self.buf.push_str(v);
+        self
+    }
+
+    pub fn push_str(&mut self, v: &str) -> &mut Self {
+        self.sep();
+        let _ = write!(self.buf, "\"{}\"", escape(v));
+        self
+    }
+
+    pub fn push_u64(&mut self, v: u64) -> &mut Self {
+        self.sep();
+        let _ = write!(self.buf, "{v}");
+        self
+    }
+
+    pub fn push_f64(&mut self, v: f64) -> &mut Self {
+        self.sep();
+        let _ = write!(self.buf, "{v}");
+        self
+    }
+
+    pub fn finish(&mut self) -> String {
+        let mut buf = std::mem::take(&mut self.buf);
+        if buf.is_empty() {
+            buf.push('[');
+        }
+        buf.push(']');
+        buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escaping_matches_the_router_contract() {
+        assert_eq!(escape("plain"), "plain");
+        assert_eq!(escape("a\"b"), "a\\\"b");
+        assert_eq!(escape("a\\b"), "a\\\\b");
+        assert_eq!(escape("a\nb"), "a\\u000ab");
+    }
+
+    #[test]
+    fn object_shape_is_space_separated() {
+        let mut o = JsonObject::new();
+        o.str("name", "we\"ird").u64("n", 3).bool("ok", true).fixed("r", 0.1, 4);
+        let s = o.finish();
+        assert_eq!(s, "{\"name\": \"we\\\"ird\", \"n\": 3, \"ok\": true, \"r\": 0.1000}");
+    }
+
+    #[test]
+    fn empty_object_and_array() {
+        assert_eq!(JsonObject::new().finish(), "{}");
+        assert_eq!(JsonArray::new().finish(), "[]");
+    }
+
+    #[test]
+    fn nested_raw_values_compose() {
+        let mut inner = JsonArray::new();
+        inner.push_u64(1).push_u64(2);
+        let mut o = JsonObject::new();
+        o.raw("xs", &inner.finish()).f64("v", 2.5);
+        assert_eq!(o.finish(), "{\"xs\": [1, 2], \"v\": 2.5}");
+    }
+
+    #[test]
+    fn integral_f64_prints_as_integer_and_parses() {
+        let mut o = JsonObject::new();
+        o.f64("c", 1234.0);
+        assert_eq!(o.finish(), "{\"c\": 1234}");
+    }
+}

@@ -6,6 +6,7 @@
 pub mod argparse;
 pub mod bitpack;
 pub mod config;
+pub mod json;
 pub mod proptesting;
 pub mod rng;
 pub mod timer;

@@ -1,0 +1,387 @@
+//! Telemetry contract suite.
+//!
+//! The obs layer's switches (master enable, trace/recall cadence) are
+//! process-global, so every test that touches them runs under one mutex
+//! and restores the defaults on exit — this file is the designated home
+//! for flag-flipping tests (the in-crate obs tests only assert
+//! additively).
+//!
+//! The headline guarantee is the first test: telemetry must be bitwise
+//! invisible to model output. Recording is relaxed atomics, the recall
+//! probe is pure reads, and nothing in obs draws from an RNG — so two
+//! identical training runs, one fully instrumented and one with
+//! telemetry off, must produce identical weights and logits.
+
+use hashdl::data::dataset::Dataset;
+use hashdl::lsh::layered::LshConfig;
+use hashdl::nn::activation::Activation;
+use hashdl::nn::layer::Layer;
+use hashdl::nn::network::{Network, NetworkConfig};
+use hashdl::nn::sparse::LayerInput;
+use hashdl::obs;
+use hashdl::obs::Stage;
+use hashdl::optim::OptimConfig;
+use hashdl::sampling::lsh_select::LshSelector;
+use hashdl::sampling::{Method, NodeSelector, SamplerConfig};
+use hashdl::serve::stats::{LatencyHistogram, LatencySnapshot};
+use hashdl::train::trainer::{TrainConfig, Trainer};
+use hashdl::util::proptesting::check;
+use hashdl::util::rng::Pcg64;
+use std::sync::Mutex;
+
+static OBS_LOCK: Mutex<()> = Mutex::new(());
+
+/// Serialise access to the process-global obs switches and restore the
+/// defaults when the test finishes (even on panic).
+struct ObsGuard<'a>(#[allow(dead_code)] std::sync::MutexGuard<'a, ()>);
+
+fn obs_guard() -> ObsGuard<'static> {
+    let g = OBS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    ObsGuard(g)
+}
+
+impl Drop for ObsGuard<'_> {
+    fn drop(&mut self) {
+        obs::set_enabled(true);
+        obs::set_trace_every(0);
+        obs::set_recall_every(64);
+    }
+}
+
+fn blob_dataset(n: usize, dim: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg64::seeded(seed);
+    let mut ds = Dataset::new("blobs", dim, 2);
+    for i in 0..n {
+        let y = (i % 2) as u32;
+        let c = if y == 0 { 0.6 } else { -0.6 };
+        ds.push((0..dim).map(|_| c + 0.4 * rng.gaussian()).collect(), y);
+    }
+    ds
+}
+
+fn max_weight_diff(a: &Network, b: &Network) -> f32 {
+    let mut max = 0.0f32;
+    for (la, lb) in a.layers.iter().zip(&b.layers) {
+        for (wa, wb) in la.w.as_slice().iter().zip(lb.w.as_slice()) {
+            max = max.max((wa - wb).abs());
+        }
+        for (ba, bb) in la.b.iter().zip(&lb.b) {
+            max = max.max((ba - bb).abs());
+        }
+    }
+    max
+}
+
+/// One deterministic LSH training run; returns the trainer and the dense
+/// logits over the test split.
+fn train_once() -> (Trainer, Vec<Vec<f32>>) {
+    let train = blob_dataset(96, 10, 5);
+    let test = blob_dataset(24, 10, 6);
+    let net = Network::new(
+        &NetworkConfig { n_in: 10, hidden: vec![20, 20], n_out: 2, act: Activation::ReLU },
+        &mut Pcg64::seeded(17),
+    );
+    let mut t = Trainer::new(
+        net,
+        TrainConfig {
+            epochs: 2,
+            batch_size: 8,
+            sampler: SamplerConfig::with_method(Method::Lsh, 0.3),
+            optim: OptimConfig { lr: 0.02, ..Default::default() },
+            seed: 99,
+            ..Default::default()
+        },
+    );
+    t.run(&train, &test);
+    let mut logits = Vec::new();
+    let all: Vec<Vec<f32>> = test
+        .xs
+        .iter()
+        .map(|x| {
+            t.net.forward_dense(x, &mut logits);
+            logits.clone()
+        })
+        .collect();
+    (t, all)
+}
+
+/// Telemetry on (with the most intrusive cadences: recall probe every
+/// batch, trace tick every batch) vs telemetry off must be bitwise
+/// identical in weights and logits.
+#[test]
+fn telemetry_toggle_is_bitwise_invisible() {
+    let _g = obs_guard();
+    obs::set_enabled(true);
+    obs::set_recall_every(1);
+    obs::set_trace_every(1);
+    let (t_on, logits_on) = train_once();
+    obs::set_enabled(false);
+    let (t_off, logits_off) = train_once();
+
+    let diff = max_weight_diff(&t_on.net, &t_off.net);
+    assert!(diff == 0.0, "telemetry changed weights (max |Δw| = {diff})");
+    for (s, (a, b)) in logits_on.iter().zip(&logits_off).enumerate() {
+        assert_eq!(a, b, "sample {s}: logits diverged under telemetry");
+    }
+
+    // Sanity: the instrumented run really tallied (health snapshots are
+    // collected per epoch either way, but only the on-run counts).
+    assert_eq!(t_on.health_log.len(), 2);
+    assert_eq!(t_off.health_log.len(), 2);
+    assert!(t_on.health_log[0].iter().all(|h| h.selections > 0 && h.recall_trials > 0));
+    assert!(t_off.health_log[0].iter().all(|h| h.selections == 0));
+}
+
+/// The health tally must be an exact histogram of the active sets the
+/// selector produced — node by node.
+#[test]
+fn health_tally_matches_selection_outputs_exactly() {
+    let _g = obs_guard();
+    obs::set_enabled(true);
+    obs::set_recall_every(0); // keep the tally purely selection-driven
+    let n_out = 48usize;
+    let cfg = LshConfig::default();
+    let layer = Layer::new(16, n_out, Activation::ReLU, &mut Pcg64::seeded(31));
+    let mut rng = Pcg64::seeded(32);
+    let mut sel = LshSelector::new(&layer, cfg, 0.25, 1, &mut rng);
+    let xs: Vec<Vec<f32>> = (0..6)
+        .map(|s| (0..16).map(|j| ((s * 16 + j) as f32 * 0.31).cos()).collect())
+        .collect();
+    let inputs: Vec<LayerInput> = xs.iter().map(|x| LayerInput::Dense(x)).collect();
+    let mut outs: Vec<Vec<u32>> = vec![Vec::new(); 6];
+    sel.select_batch(&layer, &inputs, &mut rng, &mut outs);
+
+    let mut expected = vec![0u64; n_out];
+    let mut total = 0u64;
+    for o in &outs {
+        for &i in o {
+            expected[i as usize] += 1;
+            total += 1;
+        }
+    }
+    assert!(total > 0, "selection produced empty active sets");
+    let tally = sel.tables().health_tally();
+    for (i, &e) in expected.iter().enumerate() {
+        assert_eq!(tally.node_count(i), e, "node {i} activation count");
+    }
+    assert_eq!(tally.selections(), total);
+    assert_eq!(tally.batches(), 1);
+
+    let h = sel.tables().health_snapshot();
+    assert_eq!(h.nodes, n_out);
+    assert_eq!(h.tables, cfg.l);
+    assert_eq!(h.selections, total);
+    assert_eq!(h.selection_batches, 1);
+    assert_eq!(h.active_nodes, expected.iter().filter(|&&e| e > 0).count());
+    assert_eq!(h.max_node_activations, *expected.iter().max().unwrap());
+    assert!((h.mean_node_activations - total as f64 / n_out as f64).abs() < 1e-12);
+    assert_eq!(h.rebuilds, 0);
+    assert_eq!(h.rebuild_age_batches, 1);
+
+    // A second batch advances both batch clocks and keeps the tally exact.
+    sel.select_batch(&layer, &inputs, &mut rng, &mut outs);
+    let total2: u64 = outs.iter().map(|o| o.len() as u64).sum();
+    let h2 = sel.tables().health_snapshot();
+    assert_eq!(h2.selection_batches, 2);
+    assert_eq!(h2.rebuild_age_batches, 2);
+    assert_eq!(h2.selections, total + total2);
+}
+
+/// End-to-end on a hand-built 2-hidden-layer net: the trainer folds
+/// exactly one tally batch per layer per minibatch, and the per-epoch
+/// health log snapshots the cumulative clocks.
+#[test]
+fn two_layer_trainer_health_log_counts_batches_exactly() {
+    let _g = obs_guard();
+    obs::set_enabled(true);
+    obs::set_recall_every(0);
+    let train = blob_dataset(64, 10, 7);
+    let test = blob_dataset(16, 10, 8);
+    let net = Network::new(
+        &NetworkConfig { n_in: 10, hidden: vec![20, 20], n_out: 2, act: Activation::ReLU },
+        &mut Pcg64::seeded(19),
+    );
+    let mut t = Trainer::new(
+        net,
+        TrainConfig {
+            epochs: 3,
+            batch_size: 16,
+            sampler: SamplerConfig::with_method(Method::Lsh, 0.3),
+            optim: OptimConfig { lr: 0.02, ..Default::default() },
+            seed: 7,
+            ..Default::default()
+        },
+    );
+    t.run(&train, &test);
+
+    // 64 samples / batch 16 = 4 minibatches per epoch; the log holds one
+    // cumulative snapshot per epoch, one entry per hidden layer.
+    assert_eq!(t.health_log.len(), 3);
+    for (e, per_layer) in t.health_log.iter().enumerate() {
+        assert_eq!(per_layer.len(), 2, "epoch {e}: one snapshot per hidden layer");
+        for h in per_layer {
+            assert_eq!(h.selection_batches as usize, 4 * (e + 1), "epoch {e}");
+            assert_eq!(h.nodes, 20);
+            assert!(h.selections > 0);
+            assert!(h.active_nodes <= h.nodes);
+            // Internal consistency: the mean is selections spread over nodes.
+            let implied = h.mean_node_activations * h.nodes as f64;
+            assert!((implied - h.selections as f64).abs() < 1e-6, "epoch {e}");
+            assert!(h.max_bucket > 0, "built tables cannot be empty");
+        }
+    }
+}
+
+/// Span-tree invariants: events sorted by start, nesting depths correct,
+/// sibling order preserved, disabled spans never leak in, render names
+/// every stage.
+#[test]
+fn trace_spans_nest_and_sort() {
+    let _g = obs_guard();
+    obs::set_enabled(true);
+    obs::trace_begin(9);
+    let q = obs::begin(Stage::Queue);
+    obs::end(q);
+    let outer = obs::begin(Stage::ProbeRank);
+    let inner = obs::begin(Stage::Gather);
+    obs::end(inner);
+    let second = obs::begin(Stage::Output);
+    obs::end(second);
+    obs::end(outer);
+    // A span taken while telemetry is off must not enter the trace.
+    obs::set_enabled(false);
+    let ghost = obs::begin(Stage::Backprop);
+    obs::end(ghost);
+    obs::set_enabled(true);
+
+    let tr = obs::trace_end().expect("trace was active");
+    assert!(!obs::trace_active());
+    assert_eq!(tr.id, 9);
+    assert_eq!(tr.events.len(), 4);
+    assert!(tr.events.iter().all(|e| e.stage != Stage::Backprop), "disabled span leaked");
+    for w in tr.events.windows(2) {
+        assert!(w[0].start_micros <= w[1].start_micros, "events must sort by start");
+    }
+    let depth = |s: Stage| tr.events.iter().find(|e| e.stage == s).unwrap().depth;
+    assert_eq!(depth(Stage::Queue), 0);
+    assert_eq!(depth(Stage::ProbeRank), 0);
+    assert_eq!(depth(Stage::Gather), 1, "inner span nests under ProbeRank");
+    assert_eq!(depth(Stage::Output), 1, "second child nests under ProbeRank");
+    let pos = |s: Stage| tr.events.iter().position(|e| e.stage == s).unwrap();
+    assert!(pos(Stage::Gather) < pos(Stage::Output), "siblings keep open order");
+
+    let r = tr.render();
+    for s in [Stage::Queue, Stage::ProbeRank, Stage::Gather, Stage::Output] {
+        assert!(r.contains(s.name()), "render missing {}", s.name());
+    }
+}
+
+/// Histogram properties over random inputs: exact count and sum,
+/// monotone percentiles, p100 bounds the true max from above within one
+/// bucket's resolution, and out-of-range/NaN percent requests clamp.
+#[test]
+fn latency_histogram_properties() {
+    check(
+        60,
+        |g| {
+            let n = g.size(300);
+            (0..n).map(|_| g.rng.below(2_000_000) as u64).collect::<Vec<u64>>()
+        },
+        |vals| {
+            let h = LatencyHistogram::new();
+            for &v in vals {
+                h.record(v);
+            }
+            let s = h.snapshot();
+            if s.count() != vals.len() as u64 {
+                return Err(format!("count {} != {}", s.count(), vals.len()));
+            }
+            let sum: u64 = vals.iter().sum();
+            if s.sum_micros != sum {
+                return Err(format!("sum {} != {sum}", s.sum_micros));
+            }
+            let max = *vals.iter().max().unwrap();
+            let p100 = s.percentile_micros(100.0);
+            if p100 < max {
+                return Err(format!("p100 {p100} below true max {max}"));
+            }
+            if p100 > max.saturating_mul(2).max(4) {
+                return Err(format!("p100 {p100} looser than one octave above max {max}"));
+            }
+            let mut prev = 0u64;
+            for p in [0.0, 10.0, 50.0, 90.0, 99.0, 100.0] {
+                let v = s.percentile_micros(p);
+                if v < prev {
+                    return Err(format!("percentiles not monotone at p{p}: {v} < {prev}"));
+                }
+                prev = v;
+            }
+            if s.percentile_micros(-3.0) != s.percentile_micros(0.0) {
+                return Err("negative percent must clamp to p0".into());
+            }
+            if s.percentile_micros(400.0) != s.percentile_micros(100.0) {
+                return Err("over-100 percent must clamp to p100".into());
+            }
+            if s.percentile_micros(f64::NAN) != s.percentile_micros(100.0) {
+                return Err("NaN percent must read as p100".into());
+            }
+            let mut merged = LatencySnapshot::default();
+            merged.merge(&s);
+            merged.merge(&s);
+            if merged.count() != 2 * s.count() || merged.sum_micros != 2 * s.sum_micros {
+                return Err("merge must add counts and sums".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The hardened empty-histogram behaviour: every percentile reads 0, no
+/// percent value panics.
+#[test]
+fn empty_snapshot_percentiles_are_zero() {
+    let s = LatencySnapshot::default();
+    assert_eq!(s.count(), 0);
+    assert_eq!(s.mean_micros(), 0.0);
+    for p in [-1.0, 0.0, 50.0, 99.9, 1000.0, f64::NAN] {
+        assert_eq!(s.percentile_micros(p), 0, "p{p}");
+    }
+}
+
+/// The global exporter names every stage histogram and the obs totals,
+/// and the totals behave as monotone counters.
+#[test]
+fn global_export_covers_stages_and_counters_are_monotone() {
+    let _g = obs_guard();
+    obs::set_enabled(true);
+    obs::stages();
+    let read = |name: &str| -> f64 {
+        obs::global()
+            .snapshot()
+            .scalars
+            .iter()
+            .find(|(n, _, _)| n == name)
+            .map(|t| t.2)
+            .unwrap_or(-1.0)
+    };
+    let before_spans = read("hashdl_obs_spans_total");
+    let before_batches = read("hashdl_obs_batches_total");
+    assert!(before_spans >= 0.0, "hashdl_obs_spans_total not registered");
+    assert!(before_batches >= 0.0, "hashdl_obs_batches_total not registered");
+
+    let tok = obs::begin(Stage::HashFp);
+    obs::end(tok);
+    obs::note_batch();
+    assert!(read("hashdl_obs_spans_total") >= before_spans + 1.0);
+    assert!(read("hashdl_obs_batches_total") >= before_batches + 1.0);
+
+    let text = obs::global().snapshot().to_prometheus();
+    for st in obs::STAGES {
+        let want = format!("# TYPE hashdl_stage_{}_micros histogram", st.name());
+        assert!(text.contains(&want), "prometheus output missing {want}");
+    }
+    let js = obs::global().snapshot().to_json();
+    assert!(js.starts_with('{'));
+    assert!(js.contains("hashdl_stage_hash_micros"));
+    assert!(js.contains("hashdl_obs_traces_total"));
+}
