@@ -26,6 +26,7 @@ pub(crate) const MODEL_MAGIC: &[u8; 8] = b"HDLMODL1";
 pub(crate) const SNAPSHOT_MAGIC: &[u8; 8] = b"HDLMODL2";
 pub(crate) const SNAPSHOT3_MAGIC: &[u8; 8] = b"HDLMODL3";
 pub(crate) const SNAPSHOT4_MAGIC: &[u8; 8] = b"HDLMODL4";
+pub(crate) const SNAPSHOT5_MAGIC: &[u8; 8] = b"HDLMODL5";
 
 pub(crate) fn write_u32(w: &mut impl Write, v: u32) -> io::Result<()> {
     w.write_all(&v.to_le_bytes())
@@ -188,6 +189,7 @@ pub fn load_network(path: &Path) -> io::Result<Network> {
         && &magic != SNAPSHOT_MAGIC
         && &magic != SNAPSHOT3_MAGIC
         && &magic != SNAPSHOT4_MAGIC
+        && &magic != SNAPSHOT5_MAGIC
     {
         return Err(invalid("not a hashdl model file"));
     }

@@ -1,0 +1,170 @@
+//! Amazon-670K-like generator: the extreme-classification regime the
+//! sharded wide layers exist for (Bakhtiary et al. 2015; SLIDE's headline
+//! dataset). Real Amazon-670K is bag-of-words product text with ~670k
+//! long-tail labels; this synthetic stand-in reproduces the two properties
+//! that matter for the sparse core:
+//!
+//! * **Long-tail label skew** — labels are drawn from a Zipf(0.7)
+//!   distribution, so a handful of head classes dominate while most of the
+//!   label space is rare (the occupancy pattern that stresses per-shard
+//!   LSH table health).
+//! * **Sparse TF-IDF-flavoured features** — each class owns a fixed sparse
+//!   prototype (16 of 128 dims, non-negative weights, derived from the
+//!   label alone so train/test splits generated with different seeds share
+//!   one class structure); a sample is its prototype under a random
+//!   document-length scale, per-term jitter and a few spurious terms.
+//!
+//! The feature dimension stays small (128) on purpose: the extreme
+//! dimension of this workload lives in the *wide hidden layer* of the
+//! model trained on it (10⁵–10⁶ nodes — see the `shard-bench` scenario),
+//! not in the input. 512 label classes keep the always-dense output layer
+//! affordable while still exercising long-tail structure.
+
+use crate::data::dataset::Dataset;
+use crate::util::rng::Pcg64;
+
+/// Feature dimension (dense storage, sparse-ish content).
+pub const DIM: usize = 128;
+/// Label-space size.
+pub const N_CLASSES: usize = 512;
+/// Non-zero prototype terms per class.
+const PROTO_TERMS: usize = 16;
+/// Zipf exponent for the label long tail.
+const ZIPF_S: f64 = 0.7;
+
+/// Class prototypes are a pure function of the label (own fixed RNG
+/// stream), never of the dataset seed — train and test sets generated
+/// with different seeds must describe the same classification problem.
+fn prototype(label: u32) -> Vec<f32> {
+    let mut rng = Pcg64::new(0xA92_0670 ^ label as u64, 0x670C);
+    let mut p = vec![0.0f32; DIM];
+    for _ in 0..PROTO_TERMS {
+        // Collisions just merge terms; the prototype stays ≥ 0 (TF-IDF).
+        let d = rng.below(DIM as u32) as usize;
+        p[d] += 0.4 + rng.gaussian().abs();
+    }
+    p
+}
+
+/// Cumulative Zipf(0.7) label weights for inverse-CDF sampling.
+fn zipf_cdf() -> Vec<f64> {
+    let mut cdf = Vec::with_capacity(N_CLASSES);
+    let mut acc = 0.0f64;
+    for c in 0..N_CLASSES {
+        acc += 1.0 / ((c + 1) as f64).powf(ZIPF_S);
+        cdf.push(acc);
+    }
+    let total = *cdf.last().expect("N_CLASSES > 0");
+    for v in &mut cdf {
+        *v /= total;
+    }
+    cdf
+}
+
+/// Draw one label from the long-tail distribution.
+fn sample_label(cdf: &[f64], rng: &mut Pcg64) -> u32 {
+    let u = rng.next_f64();
+    cdf.partition_point(|&c| c < u).min(N_CLASSES - 1) as u32
+}
+
+/// Render one document for `label`.
+fn render_doc(proto: &[f32], rng: &mut Pcg64) -> Vec<f32> {
+    // Document-length scale, then per-term jitter on the prototype terms.
+    let len_scale = rng.range_f32(0.6, 1.4);
+    let mut x: Vec<f32> = proto
+        .iter()
+        .map(|&p| if p > 0.0 { (p * len_scale * (1.0 + 0.2 * rng.gaussian())).max(0.0) } else { 0.0 })
+        .collect();
+    // A few spurious terms (vocabulary noise shared across classes).
+    for _ in 0..8 {
+        let d = rng.below(DIM as u32) as usize;
+        x[d] += 0.25 * rng.gaussian().abs();
+    }
+    x
+}
+
+/// Generate `n` samples with Zipf-skewed labels. Deterministic given
+/// `seed`; streams are disjoint from every other generator's.
+pub fn generate(n: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg64::new(seed, 0x670F);
+    let cdf = zipf_cdf();
+    let protos: Vec<Vec<f32>> = (0..N_CLASSES as u32).map(prototype).collect();
+    let mut ds = Dataset::new("amazon670k-like", DIM, N_CLASSES);
+    for _ in 0..n {
+        let label = sample_label(&cdf, &mut rng);
+        ds.push(render_doc(&protos[label as usize], &mut rng), label);
+    }
+    ds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_determinism() {
+        let a = generate(200, 9);
+        assert_eq!(a.len(), 200);
+        assert_eq!(a.dim, DIM);
+        assert_eq!(a.n_classes, N_CLASSES);
+        let b = generate(200, 9);
+        assert_eq!(a.xs, b.xs);
+        assert_eq!(a.ys, b.ys);
+        assert_ne!(a.xs, generate(200, 10).xs, "seed must matter");
+    }
+
+    #[test]
+    fn features_are_nonnegative_and_sparse_ish() {
+        let ds = generate(50, 3);
+        for x in &ds.xs {
+            assert!(x.iter().all(|&v| v >= 0.0));
+            let nz = x.iter().filter(|&&v| v > 0.0).count();
+            assert!(nz >= PROTO_TERMS / 2, "too few active terms: {nz}");
+            assert!(nz < DIM / 2, "documents should not be dense: {nz}");
+        }
+    }
+
+    #[test]
+    fn labels_follow_a_long_tail() {
+        let ds = generate(5000, 4);
+        let h = ds.class_histogram();
+        let head: usize = h[..8].iter().sum();
+        let tail: usize = h[N_CLASSES - 256..].iter().sum();
+        assert!(
+            head > tail,
+            "head classes ({head}) must dominate the deep tail ({tail})"
+        );
+        assert!(h[0] > h[N_CLASSES / 2].max(1), "class 0 must outweigh the median class");
+        // The tail is still populated — it is a long tail, not a cutoff.
+        assert!(h[64..].iter().sum::<usize>() > 0);
+    }
+
+    #[test]
+    fn class_structure_is_shared_across_seeds() {
+        // Train/test are generated with different seeds; a sample must
+        // still sit closer to a same-class sample from the *other* seed
+        // than to different-class ones — otherwise the split is unlearnable.
+        let tr = generate(400, 11);
+        let te = generate(400, 12);
+        let dist = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| (x - y).powi(2)).sum::<f32>()
+        };
+        let (mut intra, mut intra_n, mut inter, mut inter_n) = (0.0f64, 0u32, 0.0f64, 0u32);
+        for i in 0..tr.len() {
+            for j in 0..te.len() {
+                let d = dist(&tr.xs[i], &te.xs[j]) as f64;
+                if tr.ys[i] == te.ys[j] {
+                    intra += d;
+                    intra_n += 1;
+                } else {
+                    inter += d;
+                    inter_n += 1;
+                }
+            }
+        }
+        assert!(intra_n > 0, "zipf head guarantees cross-seed class overlap");
+        let intra = intra / intra_n as f64;
+        let inter = inter / inter_n as f64;
+        assert!(inter > intra, "inter {inter:.3} must exceed intra {intra:.3}");
+    }
+}

@@ -3,6 +3,7 @@
 //! rationale). All are deterministic given a seed and stream balanced
 //! classes.
 
+pub mod amazon670k_like;
 pub mod convex;
 pub mod mnist_like;
 pub mod norb_like;
@@ -11,13 +12,19 @@ pub mod strokes;
 
 use crate::data::dataset::Dataset;
 
-/// The paper's four benchmarks (Table/Fig 3).
+/// The paper's four benchmarks (Table/Fig 3), plus the extreme-
+/// classification workload ([`Benchmark::Amazon670k`]) the sharded wide
+/// layers are proven on.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Benchmark {
     Mnist8m,
     Norb,
     Convex,
     Rectangles,
+    /// Amazon-670K-like long-tail workload (`shard-bench`'s dataset). Not
+    /// part of [`Benchmark::all`]: the paper's experiment sweep stays the
+    /// original four.
+    Amazon670k,
 }
 
 impl Benchmark {
@@ -27,7 +34,10 @@ impl Benchmark {
             "norb" => Ok(Benchmark::Norb),
             "convex" => Ok(Benchmark::Convex),
             "rectangles" | "rect" => Ok(Benchmark::Rectangles),
-            other => Err(format!("unknown dataset {other:?} (mnist|norb|convex|rectangles)")),
+            "amazon670k" | "amazon" => Ok(Benchmark::Amazon670k),
+            other => {
+                Err(format!("unknown dataset {other:?} (mnist|norb|convex|rectangles|amazon670k)"))
+            }
         }
     }
 
@@ -37,9 +47,12 @@ impl Benchmark {
             Benchmark::Norb => "NORB",
             Benchmark::Convex => "Convex",
             Benchmark::Rectangles => "Rectangles",
+            Benchmark::Amazon670k => "Amazon670k",
         }
     }
 
+    /// The paper's benchmark sweep (Amazon670k is reachable by name only —
+    /// it is the sharding workload, not part of the paper's Fig 3 grid).
     pub fn all() -> [Benchmark; 4] {
         [Benchmark::Mnist8m, Benchmark::Norb, Benchmark::Convex, Benchmark::Rectangles]
     }
@@ -53,6 +66,8 @@ impl Benchmark {
             Benchmark::Norb => (24_300, 24_300),
             Benchmark::Convex => (8_000, 50_000),
             Benchmark::Rectangles => (12_000, 50_000),
+            // Amazon-670K's real split (Bhatia XML repository).
+            Benchmark::Amazon670k => (490_449, 153_025),
         }
     }
 
@@ -65,12 +80,14 @@ impl Benchmark {
             Benchmark::Norb => (6_000, 2_000),
             Benchmark::Convex => (4_000, 2_000),
             Benchmark::Rectangles => (4_000, 2_000),
+            Benchmark::Amazon670k => (8_000, 2_000),
         }
     }
 
     pub fn dim(&self) -> usize {
         match self {
             Benchmark::Norb => 2048,
+            Benchmark::Amazon670k => amazon670k_like::DIM,
             _ => 784,
         }
     }
@@ -79,6 +96,7 @@ impl Benchmark {
         match self {
             Benchmark::Mnist8m => 10,
             Benchmark::Norb => 5,
+            Benchmark::Amazon670k => amazon670k_like::N_CLASSES,
             _ => 2,
         }
     }
@@ -90,6 +108,7 @@ impl Benchmark {
             Benchmark::Norb => norb_like::generate(n, s),
             Benchmark::Convex => convex::generate(n, s),
             Benchmark::Rectangles => rectangles::generate(n, s),
+            Benchmark::Amazon670k => amazon670k_like::generate(n, s),
         };
         (gen(n_train, seed), gen(n_test, seed ^ 0x7E57_7E57))
     }
@@ -105,6 +124,18 @@ mod tests {
             assert_eq!(Benchmark::parse(b.name()).unwrap(), b);
         }
         assert!(Benchmark::parse("imagenet").is_err());
+    }
+
+    #[test]
+    fn amazon670k_is_reachable_by_name_but_outside_the_sweep() {
+        let b = Benchmark::parse("amazon670k").unwrap();
+        assert_eq!(b, Benchmark::Amazon670k);
+        assert_eq!(Benchmark::parse(b.name()).unwrap(), b);
+        assert!(!Benchmark::all().contains(&b));
+        let (tr, te) = b.generate(20, 10, 7);
+        assert_eq!(tr.dim, b.dim());
+        assert_eq!(tr.n_classes, b.n_classes());
+        assert_eq!((tr.len(), te.len()), (20, 10));
     }
 
     #[test]

@@ -53,6 +53,7 @@
 use crate::lsh::family::LshFamily;
 use crate::lsh::frozen::{FrozenLayerTables, FrozenQueryScratch};
 use crate::lsh::layered::{LayerTables, LshConfig};
+use crate::lsh::sharded::{ShardedFrozenTables, ShardedLayerTables};
 use crate::nn::layer::Layer;
 use crate::nn::sparse::{LayerInput, SparseVec};
 use crate::obs;
@@ -83,6 +84,14 @@ pub trait TableView {
 
     /// Number of nodes (neurons) the tables index.
     fn nodes(&self) -> usize;
+
+    /// Fingerprint words per sample in the batch fingerprint plane.
+    /// `L` for a single table stack; sharded backends interleave one
+    /// `L`-wide group per shard (`S × L`), since every shard hashes with
+    /// its own family.
+    fn fps_width(&self) -> usize {
+        self.lsh_config().l
+    }
 
     /// One-pass fingerprint hashing of a whole batch: `q_plane` holds
     /// `bsz` densified queries of width `n_in`, `fps_plane` receives
@@ -248,6 +257,242 @@ impl TableView for FrozenTableView<'_> {
     }
 }
 
+/// Live sharded training backend: per-shard table stacks over the
+/// mirror of one wide layer. Hashes the batch once per shard (each
+/// shard's own family), probes/ranks per shard under a proportional
+/// budget split, and merges to global ids. Caller RNG is consumed in
+/// shard order — at `S = 1` every call reduces bit-for-bit to the
+/// unsharded [`LayerTables`] backend.
+impl TableView for ShardedLayerTables {
+    fn lsh_config(&self) -> LshConfig {
+        self.config()
+    }
+
+    fn nodes(&self) -> usize {
+        self.n_nodes()
+    }
+
+    fn fps_width(&self) -> usize {
+        self.shard_count() * self.config().l
+    }
+
+    fn hash_batch(
+        &mut self,
+        q_plane: &[f32],
+        n_in: usize,
+        bsz: usize,
+        fps_plane: &mut [u32],
+    ) -> u64 {
+        debug_assert_eq!(q_plane.len(), n_in * bsz);
+        self.hash_batch_sharded(q_plane, bsz, fps_plane);
+        let cfg = self.config();
+        (self.shard_count() * cfg.k * cfg.l * (n_in + 1)) as u64
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn select_prehashed(
+        &mut self,
+        layer: &Layer,
+        q: &[f32],
+        fps: &[u32],
+        budget: usize,
+        rerank_factor: usize,
+        rng: &mut Pcg64,
+        scored: &mut Vec<(f32, u32)>,
+        out: &mut Vec<u32>,
+    ) -> u64 {
+        let collect = if rerank_factor > 1 { rerank_factor } else { 1 };
+        self.probe_prehashed_sharded(fps, budget, collect, rng, out);
+        let mut extra = 0u64;
+        if rerank_factor > 1 {
+            // Global §5.4 re-rank over the merged candidates: the top
+            // `budget` is picked across shards, not within them.
+            extra += rerank_exact(layer, q, budget, out, scored);
+        }
+        if out.is_empty() {
+            // Global hash-miss fallback, same as the unsharded backend.
+            out.extend(rng.sample_indices(layer.n_out(), budget.min(4)));
+        }
+        extra
+    }
+
+    fn health(&self) -> Option<&HealthTally> {
+        Some(self.health_tally())
+    }
+}
+
+/// Frozen sharded serving backend: one immutable sharded stack plus one
+/// per-shard query scratch. Randomness derives from the full
+/// concatenated fingerprints (all shards), so at `S = 1` the derivation
+/// — and everything after it — is exactly [`FrozenTableView`]'s.
+pub struct ShardedFrozenView<'a> {
+    stack: &'a ShardedFrozenTables,
+    scratches: &'a mut [FrozenQueryScratch],
+    budget_split: Vec<usize>,
+}
+
+impl<'a> ShardedFrozenView<'a> {
+    /// `scratches` must hold exactly one scratch per shard.
+    pub fn new(stack: &'a ShardedFrozenTables, scratches: &'a mut [FrozenQueryScratch]) -> Self {
+        debug_assert_eq!(scratches.len(), stack.shard_count());
+        ShardedFrozenView { stack, scratches, budget_split: Vec::new() }
+    }
+}
+
+impl TableView for ShardedFrozenView<'_> {
+    fn lsh_config(&self) -> LshConfig {
+        self.stack.config()
+    }
+
+    fn nodes(&self) -> usize {
+        self.stack.n_nodes()
+    }
+
+    fn fps_width(&self) -> usize {
+        self.stack.shard_count() * self.stack.config().l
+    }
+
+    fn hash_batch(
+        &mut self,
+        q_plane: &[f32],
+        n_in: usize,
+        bsz: usize,
+        fps_plane: &mut [u32],
+    ) -> u64 {
+        let l = self.stack.config().l;
+        let s_count = self.stack.shard_count();
+        debug_assert_eq!(fps_plane.len(), bsz * l * s_count);
+        for (s, shard) in self.stack.shards().iter().enumerate() {
+            debug_assert_eq!(n_in, shard.family().dim());
+            let scratch = &mut self.scratches[s];
+            scratch.fps_batch.clear();
+            scratch.fps_batch.resize(bsz * l, 0);
+            shard.family().hash_queries_batch(
+                q_plane,
+                bsz,
+                &mut scratch.embed_plane,
+                &mut scratch.fps_batch,
+            );
+            for b in 0..bsz {
+                let dst = (b * s_count + s) * l;
+                fps_plane[dst..dst + l].copy_from_slice(&scratch.fps_batch[b * l..(b + 1) * l]);
+            }
+        }
+        self.stack.hash_mults()
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn select_prehashed(
+        &mut self,
+        layer: &Layer,
+        q: &[f32],
+        fps: &[u32],
+        budget: usize,
+        rerank_factor: usize,
+        _rng: &mut Pcg64,
+        scored: &mut Vec<(f32, u32)>,
+        out: &mut Vec<u32>,
+    ) -> u64 {
+        out.clear();
+        if budget == 0 || self.stack.n_nodes() == 0 {
+            return 0;
+        }
+        let mut rng = self.stack.shards()[0].derived_rng(fps);
+        let collect = if rerank_factor > 1 { rerank_factor } else { 1 };
+        self.stack.probe_prehashed_sharded(
+            fps,
+            budget,
+            collect,
+            self.scratches,
+            &mut self.budget_split,
+            &mut rng,
+            out,
+        );
+        if rerank_factor > 1 {
+            rerank_exact(layer, q, budget, out, scored)
+        } else {
+            0
+        }
+    }
+
+    fn health(&self) -> Option<&HealthTally> {
+        Some(self.stack.health_tally())
+    }
+}
+
+/// Either frozen backend, dispatched from a
+/// [`crate::lsh::LayerTableStack`] — what the serving engine builds per
+/// hidden layer so one executor call can mix sharded and single layers.
+pub enum AnyFrozenView<'a> {
+    Single(FrozenTableView<'a>),
+    Sharded(ShardedFrozenView<'a>),
+}
+
+impl TableView for AnyFrozenView<'_> {
+    fn lsh_config(&self) -> LshConfig {
+        match self {
+            AnyFrozenView::Single(v) => v.lsh_config(),
+            AnyFrozenView::Sharded(v) => v.lsh_config(),
+        }
+    }
+
+    fn nodes(&self) -> usize {
+        match self {
+            AnyFrozenView::Single(v) => v.nodes(),
+            AnyFrozenView::Sharded(v) => v.nodes(),
+        }
+    }
+
+    fn fps_width(&self) -> usize {
+        match self {
+            AnyFrozenView::Single(v) => v.fps_width(),
+            AnyFrozenView::Sharded(v) => v.fps_width(),
+        }
+    }
+
+    fn hash_batch(
+        &mut self,
+        q_plane: &[f32],
+        n_in: usize,
+        bsz: usize,
+        fps_plane: &mut [u32],
+    ) -> u64 {
+        match self {
+            AnyFrozenView::Single(v) => v.hash_batch(q_plane, n_in, bsz, fps_plane),
+            AnyFrozenView::Sharded(v) => v.hash_batch(q_plane, n_in, bsz, fps_plane),
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn select_prehashed(
+        &mut self,
+        layer: &Layer,
+        q: &[f32],
+        fps: &[u32],
+        budget: usize,
+        rerank_factor: usize,
+        rng: &mut Pcg64,
+        scored: &mut Vec<(f32, u32)>,
+        out: &mut Vec<u32>,
+    ) -> u64 {
+        match self {
+            AnyFrozenView::Single(v) => {
+                v.select_prehashed(layer, q, fps, budget, rerank_factor, rng, scored, out)
+            }
+            AnyFrozenView::Sharded(v) => {
+                v.select_prehashed(layer, q, fps, budget, rerank_factor, rng, scored, out)
+            }
+        }
+    }
+
+    fn health(&self) -> Option<&HealthTally> {
+        match self {
+            AnyFrozenView::Single(v) => v.health(),
+            AnyFrozenView::Sharded(v) => v.health(),
+        }
+    }
+}
+
 /// Reusable buffers for one [`select_batch_into`] pass: the densified
 /// query plane, the batch fingerprint plane and the re-rank scoring
 /// buffer. Grown once, reused forever.
@@ -292,7 +537,7 @@ pub fn select_batch_into<V: TableView>(
     debug_assert_eq!(outs.len(), n);
     debug_assert_eq!(per_sample_mults.len(), n);
     let n_in = layer.n_in();
-    let l = view.lsh_config().l;
+    let l = view.fps_width();
     // Phase 1: densify + hash the whole batch (resize reuses the buffer;
     // densify_into overwrites every queried cell).
     let span = obs::begin(Stage::Densify);
@@ -479,6 +724,19 @@ pub fn forward_union_major(
         mults += (lp.actives[s].len() * inputs[s].active_len()) as u64;
     }
     for (u, &id) in lp.union.iter().enumerate() {
+        // Software prefetch of the next union row: active ids are spread
+        // over a wide weight plane, so the hardware prefetcher cannot
+        // predict the row sequence. A prefetch is purely a cache hint —
+        // it cannot change any computed value, so the bit-for-bit
+        // contract holds by construction.
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        if u + 1 < lp.union.len() {
+            unsafe {
+                std::arch::x86_64::_mm_prefetch::<{ std::arch::x86_64::_MM_HINT_T0 }>(
+                    layer.w.row(lp.union[u + 1] as usize).as_ptr() as *const i8,
+                );
+            }
+        }
         let row = layer.w.row(id as usize);
         let bias = layer.b[id as usize];
         let lo = lp.row_starts[u] as usize;
@@ -970,6 +1228,150 @@ mod tests {
             assert_eq!(exec.logits[s], logits, "sample {s} logits");
             assert_eq!(exec.acts[1][s].idx, a1.idx, "sample {s} layer-1 active set");
             assert_eq!(exec.sample_mults[s].total(), mults.total(), "sample {s} mults");
+        }
+    }
+
+    #[test]
+    fn sharded_live_backend_at_s1_matches_unsharded_bitwise() {
+        // The tentpole parity contract at the exec layer: one shard must
+        // reproduce the unsharded backend's active sets, attribution and
+        // RNG stream exactly.
+        let l = layer(18, 130, 51);
+        let cfg = LshConfig { rerank_factor: 2, ..LshConfig::default() };
+        let mut rng_a = Pcg64::seeded(52);
+        let mut rng_b = Pcg64::seeded(52);
+        let mut unsharded = LayerTables::build(&l.w, cfg, &mut rng_a);
+        let mut sharded = ShardedLayerTables::build(&l.w, cfg, 1, &mut rng_b);
+        assert_eq!(TableView::fps_width(&sharded), cfg.l);
+        let xs = queries(5, 18);
+        let inputs: Vec<LayerInput> = xs.iter().map(|x| LayerInput::Dense(x)).collect();
+        let b = budget(130, 0.1);
+        let mut scratch = BatchSelectScratch::default();
+        let mut per_a = vec![0u64; 5];
+        let mut outs_a: Vec<Vec<u32>> = vec![Vec::new(); 5];
+        let stats_a = select_batch_into(
+            &mut unsharded,
+            &l,
+            &inputs,
+            b,
+            cfg.rerank_factor,
+            &mut rng_a,
+            &mut scratch,
+            &mut per_a,
+            &mut outs_a,
+        );
+        let mut per_b = vec![0u64; 5];
+        let mut outs_b: Vec<Vec<u32>> = vec![Vec::new(); 5];
+        let stats_b = select_batch_into(
+            &mut sharded,
+            &l,
+            &inputs,
+            b,
+            cfg.rerank_factor,
+            &mut rng_b,
+            &mut scratch,
+            &mut per_b,
+            &mut outs_b,
+        );
+        assert_eq!(outs_a, outs_b, "S=1 active sets must be bit-identical");
+        assert_eq!(per_a, per_b, "S=1 per-sample attribution");
+        assert_eq!(stats_a.selection_mults, stats_b.selection_mults);
+        assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "RNG streams must stay in lock-step");
+    }
+
+    #[test]
+    fn sharded_frozen_view_at_s1_matches_single_frozen_view() {
+        let l = layer(14, 110, 61);
+        let cfg = LshConfig { k: 5, l: 4, ..Default::default() };
+        let mut rng_a = Pcg64::seeded(62);
+        let mut rng_b = Pcg64::seeded(62);
+        let single = FrozenLayerTables::freeze(&LayerTables::build(&l.w, cfg, &mut rng_a));
+        let sharded = crate::lsh::sharded::ShardedFrozenTables::freeze(
+            &ShardedLayerTables::build(&l.w, cfg, 1, &mut rng_b),
+        );
+        let xs = queries(4, 14);
+        let inputs: Vec<LayerInput> = xs.iter().map(|x| LayerInput::Dense(x)).collect();
+        let b = budget(110, 0.1);
+        let mut scratch = BatchSelectScratch::default();
+        let mut rng_unused = Pcg64::seeded(0);
+        let mut s_scratch = FrozenQueryScratch::new();
+        let mut view_a = FrozenTableView { tables: &single, scratch: &mut s_scratch };
+        let mut per_a = vec![0u64; 4];
+        let mut outs_a: Vec<Vec<u32>> = vec![Vec::new(); 4];
+        select_batch_into(
+            &mut view_a,
+            &l,
+            &inputs,
+            b,
+            0,
+            &mut rng_unused,
+            &mut scratch,
+            &mut per_a,
+            &mut outs_a,
+        );
+        let mut scratches = vec![FrozenQueryScratch::new()];
+        let mut view_b = ShardedFrozenView::new(&sharded, &mut scratches);
+        let mut per_b = vec![0u64; 4];
+        let mut outs_b: Vec<Vec<u32>> = vec![Vec::new(); 4];
+        select_batch_into(
+            &mut view_b,
+            &l,
+            &inputs,
+            b,
+            0,
+            &mut rng_unused,
+            &mut scratch,
+            &mut per_b,
+            &mut outs_b,
+        );
+        assert_eq!(outs_a, outs_b, "frozen S=1 active sets");
+        assert_eq!(per_a, per_b, "frozen S=1 attribution");
+    }
+
+    #[test]
+    fn sharded_batch_selection_matches_batch_of_one() {
+        // The general batching contract holds for S > 1 too: co-batching
+        // samples changes when hashing happens, never what is selected.
+        let l = layer(16, 120, 71);
+        let cfg = LshConfig { k: 4, l: 3, ..Default::default() };
+        let mut rng_a = Pcg64::seeded(72);
+        let mut rng_b = Pcg64::seeded(72);
+        let mut batch_view = ShardedLayerTables::build(&l.w, cfg, 4, &mut rng_a);
+        let mut one_view = ShardedLayerTables::build(&l.w, cfg, 4, &mut rng_b);
+        let xs = queries(6, 16);
+        let inputs: Vec<LayerInput> = xs.iter().map(|x| LayerInput::Dense(x)).collect();
+        let b = budget(120, 0.15);
+        let mut scratch = BatchSelectScratch::default();
+        let mut per_sample = vec![0u64; 6];
+        let mut outs: Vec<Vec<u32>> = vec![Vec::new(); 6];
+        select_batch_into(
+            &mut batch_view,
+            &l,
+            &inputs,
+            b,
+            0,
+            &mut rng_a,
+            &mut scratch,
+            &mut per_sample,
+            &mut outs,
+        );
+        for (s, input) in inputs.iter().enumerate() {
+            let mut one_scratch = BatchSelectScratch::default();
+            let mut one_mults = [0u64];
+            let mut one_out = vec![Vec::new()];
+            select_batch_into(
+                &mut one_view,
+                &l,
+                &[*input],
+                b,
+                0,
+                &mut rng_b,
+                &mut one_scratch,
+                &mut one_mults,
+                &mut one_out,
+            );
+            assert_eq!(one_out[0], outs[s], "sample {s} active set");
+            assert_eq!(one_mults[0], per_sample[s], "sample {s} attribution");
         }
     }
 }

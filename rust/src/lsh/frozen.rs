@@ -60,6 +60,13 @@ pub struct FrozenQueryScratch {
     /// used by the shared batched execution core (`exec`), which hashes a
     /// whole micro-batch through this scratch in one pass.
     pub(crate) embed_plane: Vec<f32>,
+    /// Batched-fingerprint staging for the sharded serving view (each
+    /// shard hashes the batch with its own family into here before the
+    /// fingerprints scatter into the interleaved per-sample layout).
+    pub(crate) fps_batch: Vec<u32>,
+    /// Per-shard local-id staging for the sharded serving view (merged
+    /// into global ids with the shard's base offset).
+    pub(crate) sub_out: Vec<u32>,
 }
 
 impl FrozenQueryScratch {

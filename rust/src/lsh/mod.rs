@@ -8,6 +8,7 @@ pub mod family;
 pub mod frozen;
 pub mod layered;
 pub mod multiprobe;
+pub mod sharded;
 pub mod sparse_proj;
 pub mod srp;
 pub mod table;
@@ -16,6 +17,7 @@ pub use alsh::AlshMips;
 pub use family::LshFamily;
 pub use frozen::{FrozenLayerTables, FrozenQueryScratch};
 pub use layered::{LayerTables, LshConfig};
+pub use sharded::{LayerTableStack, ShardedFrozenTables, ShardedLayerTables};
 pub use sparse_proj::SparseSrpHash;
 pub use srp::SrpHash;
 pub use table::HashTable;

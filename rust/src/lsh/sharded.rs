@@ -1,0 +1,633 @@
+//! Per-shard LSH table stacks for sharded wide layers.
+//!
+//! A wide layer (10⁵–10⁶ nodes) is indexed as `S` independent
+//! [`LayerTables`], one per block-contiguous shard of the
+//! [`ShardedPlane`] mirror. Each shard owns its own ALSH family,
+//! buckets, rebuild clock and weight-plane slice, so probe working sets
+//! stay cache-resident and shard owners never touch each other's memory.
+//! Selection hashes a batch once per shard, probes and ranks per shard
+//! under a proportional budget split, and merges candidates back to
+//! global ids with a single offset add (block layout makes a shard's id
+//! range an interval).
+//!
+//! **S=1 parity contract:** with one shard, every code path here reduces
+//! to the unsharded call sequence on a bit-identical weight copy — same
+//! RNG draws in the same order (build, rehash, rebuild, fallback), same
+//! fingerprints, same candidates. Pinned by the tests below and
+//! `tests/sharding.rs`.
+
+use crate::lsh::frozen::{FrozenLayerTables, FrozenQueryScratch};
+use crate::lsh::layered::{LayerTables, LshConfig};
+use crate::obs::health::{HealthTally, TableHealth};
+use crate::tensor::matrix::Matrix;
+use crate::tensor::sharded::{ShardMap, ShardedPlane};
+use crate::util::rng::Pcg64;
+use std::sync::Arc;
+
+/// Split a layer budget across shards proportionally to the rows each
+/// shard owns (floor division, remainder dealt one-per-shard from shard
+/// 0). `S = 1` always yields `[budget]` — the parity-critical case.
+pub fn split_budget(map: &ShardMap, budget: usize, out: &mut Vec<usize>) {
+    out.clear();
+    let n = map.n_rows();
+    if n == 0 {
+        out.resize(map.shards(), 0);
+        return;
+    }
+    let mut used = 0usize;
+    for s in 0..map.shards() {
+        let share = budget * map.rows_in(s) / n;
+        out.push(share);
+        used += share;
+    }
+    let mut rem = budget - used;
+    let mut s = 0usize;
+    while rem > 0 {
+        out[s] += 1;
+        rem -= 1;
+        s = (s + 1) % map.shards();
+    }
+}
+
+/// Live (training-side) sharded table stack: `S` independent
+/// [`LayerTables`] over the shard planes of a [`ShardedPlane`] mirror of
+/// the layer's weight matrix. The mirror is synced row-wise from the
+/// live weights on every `post_update` (the trainer hands the selector
+/// the exact touched union per batch) and shard-wise before a rebuild,
+/// so under Hogwild a shard's tables are never staler than one epoch
+/// with respect to other workers' updates — the same staleness class as
+/// `rehash_probability < 1`.
+pub struct ShardedLayerTables {
+    cfg: LshConfig,
+    mirror: ShardedPlane,
+    shards: Vec<LayerTables>,
+    /// Stack-level health tally over *global* ids — the selection path
+    /// folds merged active sets in here; per-shard rows slice it by the
+    /// shard's id range.
+    health: HealthTally,
+    // Reusable scratch (selection allocates nothing in steady state).
+    budget_split: Vec<usize>,
+    fps_tmp: Vec<u32>,
+    sub_out: Vec<u32>,
+    rehash_subset: Vec<u32>,
+    local_ids: Vec<Vec<u32>>,
+}
+
+impl ShardedLayerTables {
+    /// Build per-shard tables over the rows of `weights`. Shards are
+    /// built in shard order from one RNG stream; at `S = 1` this
+    /// consumes `rng` exactly like [`LayerTables::build`] on `weights`.
+    pub fn build(weights: &Matrix, cfg: LshConfig, shards: usize, rng: &mut Pcg64) -> Self {
+        let mirror = ShardedPlane::from_matrix(weights, shards);
+        let built: Vec<LayerTables> =
+            (0..mirror.shards()).map(|s| LayerTables::build(mirror.plane(s), cfg, rng)).collect();
+        let local_ids = vec![Vec::new(); mirror.shards()];
+        ShardedLayerTables {
+            cfg,
+            health: HealthTally::new(mirror.n_rows()),
+            budget_split: Vec::new(),
+            fps_tmp: Vec::new(),
+            sub_out: Vec::new(),
+            rehash_subset: Vec::new(),
+            local_ids,
+            mirror,
+            shards: built,
+        }
+    }
+
+    pub fn config(&self) -> LshConfig {
+        self.cfg
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.mirror.n_rows()
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn map(&self) -> &ShardMap {
+        self.mirror.map()
+    }
+
+    pub fn shard(&self, s: usize) -> &LayerTables {
+        &self.shards[s]
+    }
+
+    /// Stack-level (global-id) health counters.
+    pub fn health_tally(&self) -> &HealthTally {
+        &self.health
+    }
+
+    /// Total full rebuilds across all shards.
+    pub fn rebuilds(&self) -> u64 {
+        self.shards.iter().map(|t| t.rebuilds as u64).sum()
+    }
+
+    /// Total hash operations across all shards.
+    pub fn hash_ops(&self) -> u64 {
+        self.shards.iter().map(|t| t.hash_ops).sum()
+    }
+
+    /// One health row per shard: that shard's bucket occupancy and
+    /// rebuild count, node statistics sliced from the stack tally by the
+    /// shard's global-id range (O(active + shard buckets) each).
+    pub fn health_rows(&self) -> Vec<TableHealth> {
+        (0..self.shards.len())
+            .map(|s| {
+                TableHealth::compute_subset(
+                    &self.shards[s].bucket_sizes(),
+                    self.shards[s].rebuilds as u64,
+                    &self.health,
+                    self.mirror.map().range(s),
+                )
+            })
+            .collect()
+    }
+
+    /// One-pass batched fingerprint hashing, one invocation per shard.
+    /// Per-sample fingerprint layout in `fps_plane`:
+    /// `[shard 0's L fps | shard 1's L fps | …]` (each shard hashes with
+    /// its own ALSH family). At `S = 1` the layout and bits are exactly
+    /// [`LayerTables::hash_query_batch`]'s.
+    pub fn hash_batch_sharded(&mut self, q_plane: &[f32], bsz: usize, fps_plane: &mut [u32]) {
+        let l = self.cfg.l;
+        let s_count = self.shards.len();
+        debug_assert_eq!(fps_plane.len(), bsz * l * s_count);
+        let Self { shards, fps_tmp, .. } = self;
+        for (s, shard) in shards.iter_mut().enumerate() {
+            fps_tmp.clear();
+            fps_tmp.resize(bsz * l, 0);
+            shard.hash_query_batch(q_plane, bsz, fps_tmp);
+            for b in 0..bsz {
+                let dst = (b * s_count + s) * l;
+                fps_plane[dst..dst + l].copy_from_slice(&fps_tmp[b * l..(b + 1) * l]);
+            }
+        }
+    }
+
+    /// Probe + rank one prehashed sample: split `budget` across shards,
+    /// probe each shard at `share × collect_factor` (over-collection for
+    /// §5.4 re-ranking happens per shard), and merge local ids back to
+    /// global with the shard's base offset. Shards consume `rng` in
+    /// shard order — at `S = 1` this is exactly one
+    /// [`LayerTables::query_prehashed`] call at `budget × collect_factor`.
+    ///
+    /// Re-ranking and the global empty-result fallback are the caller's
+    /// job (the `exec` backend), mirroring the unsharded live backend.
+    pub fn probe_prehashed_sharded(
+        &mut self,
+        fps: &[u32],
+        budget: usize,
+        collect_factor: usize,
+        rng: &mut Pcg64,
+        out: &mut Vec<u32>,
+    ) {
+        out.clear();
+        let l = self.cfg.l;
+        debug_assert_eq!(fps.len(), l * self.shards.len());
+        let Self { mirror, shards, budget_split, sub_out, .. } = self;
+        split_budget(mirror.map(), budget, budget_split);
+        for (s, shard) in shards.iter_mut().enumerate() {
+            let share = budget_split[s] * collect_factor.max(1);
+            if share == 0 {
+                continue;
+            }
+            shard.query_prehashed(&fps[s * l..(s + 1) * l], share, rng, sub_out);
+            let base = mirror.map().base(s) as u32;
+            out.extend(sub_out.iter().map(|&id| id + base));
+        }
+    }
+
+    /// Post-gradient maintenance: sync the touched rows into the mirror,
+    /// draw the `rehash_probability` subset **in touched order** (one
+    /// global RNG stream — at `S = 1` the exact draws the unsharded
+    /// selector makes), partition it by owning shard and rehash each
+    /// shard against its own plane in shard order.
+    pub fn post_update(&mut self, weights: &Matrix, touched: &[u32], rng: &mut Pcg64) {
+        if touched.is_empty() {
+            return;
+        }
+        let Self { cfg, mirror, shards, rehash_subset, local_ids, .. } = self;
+        mirror.sync_rows(weights, touched);
+        rehash_subset.clear();
+        let p = cfg.rehash_probability;
+        if p >= 1.0 {
+            rehash_subset.extend_from_slice(touched);
+        } else {
+            for &id in touched {
+                if rng.bernoulli(p) {
+                    rehash_subset.push(id);
+                }
+            }
+        }
+        if rehash_subset.is_empty() {
+            return;
+        }
+        for ids in local_ids.iter_mut() {
+            ids.clear();
+        }
+        for &g in rehash_subset.iter() {
+            let (s, local) = mirror.map().locate(g as usize);
+            local_ids[s].push(local as u32);
+        }
+        for (s, (shard, ids)) in shards.iter_mut().zip(local_ids.iter()).enumerate() {
+            if !ids.is_empty() {
+                shard.rehash_nodes(mirror.plane(s), ids, rng);
+            }
+        }
+    }
+
+    /// Epoch-cadence rebuild, staggered per shard: shard `s` rebuilds
+    /// when `(epoch + 1 + s) % rebuild_every == 0`, so the per-epoch
+    /// rebuild cost is spread across shards instead of spiking. The
+    /// shard's mirror slice is fully re-synced first (Hogwild staleness
+    /// bound). At `S = 1` the cadence and RNG consumption are exactly
+    /// the unsharded selector's.
+    pub fn on_epoch_end(
+        &mut self,
+        weights: &Matrix,
+        epoch: usize,
+        rebuild_every: usize,
+        rng: &mut Pcg64,
+    ) {
+        let Self { mirror, shards, .. } = self;
+        for (s, shard) in shards.iter_mut().enumerate() {
+            if (epoch + 1 + s) % rebuild_every == 0 {
+                mirror.sync_shard(weights, s);
+                shard.rebuild(mirror.plane(s), rng);
+            }
+        }
+    }
+}
+
+/// Immutable sharded table stack for serving: one [`FrozenLayerTables`]
+/// per shard plus a stack-level global-id health tally (shared across
+/// clones, like the single-stack one).
+#[derive(Clone)]
+pub struct ShardedFrozenTables {
+    map: ShardMap,
+    shards: Vec<FrozenLayerTables>,
+    health: Arc<HealthTally>,
+}
+
+impl ShardedFrozenTables {
+    pub fn freeze(live: &ShardedLayerTables) -> Self {
+        ShardedFrozenTables {
+            map: *live.map(),
+            shards: live.shards.iter().map(FrozenLayerTables::freeze).collect(),
+            health: Arc::new(HealthTally::new(live.n_nodes())),
+        }
+    }
+
+    /// Reassemble from per-shard frozen stacks (snapshot load), checking
+    /// each shard's node count against the block layout for `n_nodes`.
+    pub fn from_parts(shards: Vec<FrozenLayerTables>, n_nodes: usize) -> Result<Self, String> {
+        if shards.is_empty() {
+            return Err("sharded table stack needs at least one shard".into());
+        }
+        let map = ShardMap::new(n_nodes, shards.len());
+        if map.shards() != shards.len() {
+            return Err(format!(
+                "{} shards cannot own {n_nodes} nodes (block layout caps at {})",
+                shards.len(),
+                map.shards()
+            ));
+        }
+        for (s, shard) in shards.iter().enumerate() {
+            if shard.n_nodes() != map.rows_in(s) {
+                return Err(format!(
+                    "shard {s} holds {} nodes, block layout says {}",
+                    shard.n_nodes(),
+                    map.rows_in(s)
+                ));
+            }
+        }
+        let health = Arc::new(HealthTally::new(n_nodes));
+        Ok(ShardedFrozenTables { map, shards, health })
+    }
+
+    pub fn config(&self) -> LshConfig {
+        self.shards[0].config()
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.map.n_rows()
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn map(&self) -> &ShardMap {
+        &self.map
+    }
+
+    pub fn shards(&self) -> &[FrozenLayerTables] {
+        &self.shards
+    }
+
+    /// Stack-level (global-id) health counters.
+    pub fn health_tally(&self) -> &HealthTally {
+        &self.health
+    }
+
+    /// One health row per shard (frozen stacks never rebuild in place).
+    pub fn health_rows(&self) -> Vec<TableHealth> {
+        (0..self.shards.len())
+            .map(|s| {
+                let sizes: Vec<Vec<usize>> =
+                    self.shards[s].tables().iter().map(|t| t.bucket_sizes()).collect();
+                TableHealth::compute_subset(&sizes, 0, &self.health, self.map.range(s))
+            })
+            .collect()
+    }
+
+    /// Per-sample hashing cost: every shard hashes the query with its
+    /// own family, so the costs add.
+    pub fn hash_mults(&self) -> u64 {
+        self.shards.iter().map(|t| t.hash_mults()).sum()
+    }
+
+    /// Probe + rank one prehashed sample across all shards (serving
+    /// side). `rng` must be the fingerprint-derived one (the caller
+    /// derives it from the *full* concatenated fingerprints — at `S = 1`
+    /// that is exactly the unsharded derivation). Each shard keeps its
+    /// own scratch; the per-shard empty-result fallback inside
+    /// [`FrozenLayerTables`] applies per shard.
+    pub(crate) fn probe_prehashed_sharded(
+        &self,
+        fps: &[u32],
+        budget: usize,
+        collect_factor: usize,
+        scratches: &mut [FrozenQueryScratch],
+        budget_split: &mut Vec<usize>,
+        rng: &mut Pcg64,
+        out: &mut Vec<u32>,
+    ) {
+        out.clear();
+        let l = self.config().l;
+        debug_assert_eq!(fps.len(), l * self.shards.len());
+        debug_assert_eq!(scratches.len(), self.shards.len());
+        split_budget(&self.map, budget, budget_split);
+        for (s, shard) in self.shards.iter().enumerate() {
+            let share = budget_split[s] * collect_factor.max(1);
+            if share == 0 {
+                continue;
+            }
+            let scratch = &mut scratches[s];
+            let mut tmp = std::mem::take(&mut scratch.sub_out);
+            shard.probe_prehashed(&fps[s * l..(s + 1) * l], share, scratch, rng, &mut tmp);
+            let base = self.map.base(s) as u32;
+            out.extend(tmp.iter().map(|&id| id + base));
+            scratch.sub_out = tmp;
+        }
+    }
+}
+
+/// What the publish slot carries per hidden layer: either the classic
+/// single frozen stack or a sharded one. Selection dispatches on this;
+/// everything shape-related answers through the enum so the publish /
+/// snapshot / engine plumbing never cares which it holds.
+#[derive(Clone)]
+pub enum LayerTableStack {
+    Single(FrozenLayerTables),
+    Sharded(ShardedFrozenTables),
+}
+
+impl LayerTableStack {
+    pub fn n_nodes(&self) -> usize {
+        match self {
+            LayerTableStack::Single(t) => t.n_nodes(),
+            LayerTableStack::Sharded(t) => t.n_nodes(),
+        }
+    }
+
+    pub fn config(&self) -> LshConfig {
+        match self {
+            LayerTableStack::Single(t) => t.config(),
+            LayerTableStack::Sharded(t) => t.config(),
+        }
+    }
+
+    /// 1 for a single stack, `S` for a sharded one.
+    pub fn shard_count(&self) -> usize {
+        match self {
+            LayerTableStack::Single(_) => 1,
+            LayerTableStack::Sharded(t) => t.shard_count(),
+        }
+    }
+
+    pub fn single(&self) -> Option<&FrozenLayerTables> {
+        match self {
+            LayerTableStack::Single(t) => Some(t),
+            LayerTableStack::Sharded(_) => None,
+        }
+    }
+
+    pub fn sharded(&self) -> Option<&ShardedFrozenTables> {
+        match self {
+            LayerTableStack::Single(_) => None,
+            LayerTableStack::Sharded(t) => Some(t),
+        }
+    }
+
+    /// Stack-level health counters (single: the stack's own tally).
+    pub fn health_tally(&self) -> &HealthTally {
+        match self {
+            LayerTableStack::Single(t) => t.health_tally(),
+            LayerTableStack::Sharded(t) => t.health_tally(),
+        }
+    }
+
+    /// Health rows: one for a single stack, one per shard for a sharded
+    /// one.
+    pub fn health_rows(&self) -> Vec<TableHealth> {
+        match self {
+            LayerTableStack::Single(t) => vec![t.health_snapshot()],
+            LayerTableStack::Sharded(t) => t.health_rows(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn weights(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::seeded(seed);
+        Matrix::from_fn(n, d, |_, _| rng.gaussian() * 0.3)
+    }
+
+    #[test]
+    fn split_budget_is_proportional_and_exact() {
+        let mut out = Vec::new();
+        let map = ShardMap::new(100, 4);
+        split_budget(&map, 10, &mut out);
+        assert_eq!(out.iter().sum::<usize>(), 10);
+        assert_eq!(out, vec![3, 3, 2, 2]);
+        // Uneven shards: last shard owns fewer rows, gets no more than
+        // its share plus the remainder round-robin.
+        let map = ShardMap::new(10, 3); // blocks 4, 4, 2
+        split_budget(&map, 5, &mut out);
+        assert_eq!(out.iter().sum::<usize>(), 5);
+        assert_eq!(out, vec![2, 2, 1], "floor shares over blocks 4,4,2");
+        // S=1 is the identity (the parity-critical case).
+        split_budget(&ShardMap::new(50, 1), 7, &mut out);
+        assert_eq!(out, vec![7]);
+        // Degenerate empty layer.
+        split_budget(&ShardMap::new(0, 3), 4, &mut out);
+        assert_eq!(out, vec![0]);
+    }
+
+    #[test]
+    fn single_shard_build_is_bitwise_the_unsharded_build() {
+        let w = weights(90, 12, 5);
+        let cfg = LshConfig { k: 5, l: 4, ..Default::default() };
+        let mut rng_a = Pcg64::seeded(6);
+        let mut rng_b = Pcg64::seeded(6);
+        let unsharded = LayerTables::build(&w, cfg, &mut rng_a);
+        let sharded = ShardedLayerTables::build(&w, cfg, 1, &mut rng_b);
+        assert_eq!(sharded.shard_count(), 1);
+        assert_eq!(sharded.shard(0).tables(), unsharded.tables());
+        assert_eq!(sharded.shard(0).family().max_norm(), unsharded.family().max_norm());
+        // The two RNG streams must be at the same position afterwards.
+        assert_eq!(rng_a.next_u64(), rng_b.next_u64());
+    }
+
+    #[test]
+    fn single_shard_maintenance_tracks_the_unsharded_stream() {
+        let mut w = weights(60, 8, 15);
+        let cfg = LshConfig { k: 4, l: 3, rehash_probability: 0.5, ..Default::default() };
+        let mut rng_a = Pcg64::seeded(16);
+        let mut rng_b = Pcg64::seeded(16);
+        let mut unsharded = LayerTables::build(&w, cfg, &mut rng_a);
+        let mut sharded = ShardedLayerTables::build(&w, cfg, 1, &mut rng_b);
+        // A gradient step touches some rows; both paths draw the same
+        // bernoulli subset and rehash the same nodes.
+        for &r in &[3u32, 17, 42] {
+            for v in w.row_mut(r as usize) {
+                *v = -*v;
+            }
+        }
+        let touched = [3u32, 17, 42];
+        // Unsharded reference: the selector's literal maintenance step.
+        let mut subset = Vec::new();
+        for &id in &touched {
+            if rng_a.bernoulli(cfg.rehash_probability) {
+                subset.push(id);
+            }
+        }
+        if !subset.is_empty() {
+            unsharded.rehash_nodes(&w, &subset, &mut rng_a);
+        }
+        sharded.post_update(&w, &touched, &mut rng_b);
+        assert_eq!(sharded.shard(0).tables(), unsharded.tables());
+        // Epoch-end rebuild consumes the same stream.
+        unsharded.rebuild(&w, &mut rng_a);
+        sharded.on_epoch_end(&w, 0, 1, &mut rng_b);
+        assert_eq!(sharded.shard(0).tables(), unsharded.tables());
+        assert_eq!(rng_a.next_u64(), rng_b.next_u64());
+    }
+
+    #[test]
+    fn sharded_probe_merges_valid_distinct_global_ids() {
+        let w = weights(90, 10, 25);
+        let cfg = LshConfig { k: 4, l: 3, ..Default::default() };
+        let mut rng = Pcg64::seeded(26);
+        let mut st = ShardedLayerTables::build(&w, cfg, 3, &mut rng);
+        assert_eq!(st.shard_count(), 3);
+        let q: Vec<f32> = (0..10).map(|j| (j as f32 * 0.41).sin()).collect();
+        let mut fps = vec![0u32; 3 * cfg.l];
+        st.hash_batch_sharded(&q, 1, &mut fps);
+        let mut out = Vec::new();
+        st.probe_prehashed_sharded(&fps, 30, 1, &mut rng, &mut out);
+        assert!(!out.is_empty());
+        assert!(out.len() <= 30);
+        assert!(out.iter().all(|&id| (id as usize) < 90));
+        let mut sorted = out.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), out.len(), "merged ids must be distinct");
+        // Every merged id's owner shard is the one whose range holds it.
+        for &id in &out {
+            let s = st.map().shard_of(id as usize);
+            assert!(st.map().range(s).contains(&(id as usize)));
+        }
+    }
+
+    #[test]
+    fn shard_rebuild_cadence_is_staggered() {
+        let w = weights(40, 6, 35);
+        let cfg = LshConfig { k: 3, l: 2, ..Default::default() };
+        let mut rng = Pcg64::seeded(36);
+        let mut st = ShardedLayerTables::build(&w, cfg, 4, &mut rng);
+        // rebuild_every = 4: each epoch rebuilds exactly one shard.
+        for epoch in 0..4 {
+            let before = st.rebuilds();
+            st.on_epoch_end(&w, epoch, 4, &mut rng);
+            assert_eq!(st.rebuilds(), before + 1, "epoch {epoch}");
+        }
+        // After 4 epochs every shard has rebuilt exactly once.
+        for s in 0..4 {
+            assert_eq!(st.shard(s).rebuilds, 1, "shard {s}");
+        }
+    }
+
+    #[test]
+    fn freeze_and_from_parts_round_trip() {
+        let w = weights(50, 8, 45);
+        let cfg = LshConfig { k: 4, l: 3, ..Default::default() };
+        let mut rng = Pcg64::seeded(46);
+        let live = ShardedLayerTables::build(&w, cfg, 4, &mut rng);
+        let frozen = ShardedFrozenTables::freeze(&live);
+        assert_eq!(frozen.shard_count(), 4);
+        assert_eq!(frozen.n_nodes(), 50);
+        for s in 0..4 {
+            assert_eq!(frozen.shards()[s].tables(), live.shard(s).tables());
+        }
+        let rebuilt =
+            ShardedFrozenTables::from_parts(frozen.shards().to_vec(), 50).expect("valid parts");
+        assert_eq!(rebuilt.map(), frozen.map());
+        // Wrong node count must be rejected.
+        assert!(ShardedFrozenTables::from_parts(frozen.shards().to_vec(), 49).is_err());
+        assert!(ShardedFrozenTables::from_parts(Vec::new(), 50).is_err());
+    }
+
+    #[test]
+    fn stack_enum_answers_shape_questions_for_both_variants() {
+        let w = weights(30, 6, 55);
+        let cfg = LshConfig { k: 3, l: 2, ..Default::default() };
+        let mut rng = Pcg64::seeded(56);
+        let single =
+            LayerTableStack::Single(FrozenLayerTables::freeze(&LayerTables::build(&w, cfg, &mut rng)));
+        let sharded = LayerTableStack::Sharded(ShardedFrozenTables::freeze(
+            &ShardedLayerTables::build(&w, cfg, 3, &mut rng),
+        ));
+        assert_eq!(single.n_nodes(), 30);
+        assert_eq!(sharded.n_nodes(), 30);
+        assert_eq!(single.shard_count(), 1);
+        assert_eq!(sharded.shard_count(), 3);
+        assert!(single.single().is_some() && single.sharded().is_none());
+        assert!(sharded.sharded().is_some() && sharded.single().is_none());
+        assert_eq!(single.health_rows().len(), 1);
+        assert_eq!(sharded.health_rows().len(), 3);
+        assert_eq!(sharded.health_rows().iter().map(|h| h.nodes).sum::<usize>(), 30);
+    }
+
+    #[test]
+    fn per_shard_health_rows_partition_the_stack_tally() {
+        let w = weights(20, 5, 65);
+        let cfg = LshConfig { k: 3, l: 2, ..Default::default() };
+        let mut rng = Pcg64::seeded(66);
+        let st = ShardedLayerTables::build(&w, cfg, 2, &mut rng);
+        st.health_tally().note_batch(&[vec![0, 1, 12], vec![12, 19]]);
+        let rows = st.health_rows();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].active_nodes, 2);
+        assert_eq!(rows[1].active_nodes, 2);
+        assert_eq!(rows[0].selections + rows[1].selections, 5);
+        assert_eq!(rows[1].max_node_activations, 2, "node 12 selected twice");
+    }
+}

@@ -9,6 +9,9 @@
 //!   eval         evaluate a saved model on a dataset (dense or --sparse)
 //!   serve-bench  serving benchmark (closed or open loop, dense vs sparse,
 //!                1..N workers, optional train-while-serve scenario)
+//!   shard-bench  sharded wide-layer benchmark: train + serve the
+//!                extreme-classification workload through per-shard LSH
+//!                tables (writes BENCH_shard.json)
 //!   serve-fleet  multi-model fleet behind the router: per-model pools,
 //!                canary split, overload shedding (writes BENCH_router.json)
 //!   experiment   regenerate a paper table/figure (table3|fig4|fig5|fig6|fig7|fig8)
@@ -125,6 +128,7 @@ fn main() {
         "train-serve" => cmd_train_serve(args),
         "eval" => cmd_eval(args),
         "serve-bench" => cmd_serve_bench(args),
+        "shard-bench" => cmd_shard_bench(args),
         "serve-fleet" => cmd_serve_fleet(args),
         "experiment" => cmd_experiment(args),
         "std-pjrt" => cmd_std_pjrt(args),
@@ -149,7 +153,7 @@ USAGE: hashdl <subcommand> [flags]
               [--batch-size <B>] [--threads <t>] [--epochs <e>]
               [--hidden <h>] [--depth <d>] [--config <file.conf>]
               [--lr <f>] [--optimizer <sgd|momentum|adagrad|momentum-adagrad>]
-              [--k <bits>] [--tables <L>] [--save <model.bin>]
+              [--k <bits>] [--tables <L>] [--shards <S>] [--save <model.bin>]
   train-serve --dataset <..> [--epochs e] [--batch-size B] [--sparsity f]
               [--publish-every <batches>] [--workers w] [--clients c]
               [--out BENCH_train_serve.json]   (train + serve, one process)
@@ -159,6 +163,9 @@ USAGE: hashdl <subcommand> [flags]
               [--workers 1,4] [--modes dense,sparse] [--batch-cap <B>]
               [--deadline-us <t>] [--sparsity <f>] [--arrival-rate <r>]
               [--fused-compare] [--train-serve] [--out BENCH_serve.json]
+  shard-bench [--nodes <1000000>] [--shards <4>] [--sparsity <0.001>]
+              [--train-size N] [--test-size N] [--epochs e] [--batch-size B]
+              [--out BENCH_shard.json]   (sharded wide-layer train + serve)
   serve-fleet [--config fleet.conf | --models <N>] [--dataset <..>]
               [--workers w] [--requests <N>] [--canary <f>]
               [--stats-every <secs>]
@@ -232,6 +239,7 @@ fn cmd_train(rest: Vec<String>) -> i32 {
         .opt("probes", "10", "multiprobe buckets per table")
         .opt("rerank", "0", "re-rank factor (0=off): score rerank*budget candidates exactly")
         .opt("rehash-prob", "1.0", "probability of rehashing each updated row (lazy maintenance)")
+        .opt("shards", "1", "shard each wide layer's LSH tables across S sub-planes (1 = unsharded)")
         .opt("seed", "42", "run seed")
         .opt("eval-cap", "2000", "max test examples per evaluation")
         .opt("save", "", "save trained model to this path")
@@ -281,6 +289,7 @@ fn cmd_train(rest: Vec<String>) -> i32 {
     sampler.lsh.probes_per_table = a.parse_or("probes", 10usize);
     sampler.lsh.rerank_factor = a.parse_or("rerank", 0usize);
     sampler.lsh.rehash_probability = a.parse_or("rehash-prob", 1.0f32);
+    sampler.shards = a.parse_or("shards", 1usize).max(1);
     if method == Method::AdaptiveDropout {
         sampler.ad_beta =
             hashdl::sampling::adaptive::AdaptiveDropoutSelector::beta_for_sparsity(sampler.sparsity);
@@ -907,6 +916,67 @@ fn cmd_serve_bench(rest: Vec<String>) -> i32 {
     }
     if let Some(path) = metrics_out {
         return write_metrics_snapshot(&path);
+    }
+    0
+}
+
+/// Sharded wide-layer benchmark: train and serve the extreme-
+/// classification workload (`amazon670k`-like, wide hidden layer selected
+/// through S per-shard LSH tables), then write `BENCH_shard.json` with
+/// the wide-layer mult fraction, per-shard selection timings and the S=1
+/// parity verdict. Defaults are the 1M-node acceptance scale; CI runs
+/// `--nodes 100000`.
+fn cmd_shard_bench(rest: Vec<String>) -> i32 {
+    let p = Parser::new(
+        "hashdl shard-bench",
+        "sharded wide-layer train + serve benchmark (writes BENCH_shard.json)",
+    )
+    .opt("nodes", "1000000", "wide hidden-layer width")
+    .opt("shards", "4", "LSH shards for the wide layer")
+    .opt("sparsity", "0.001", "target active-node fraction on the wide layer")
+    .opt("train-size", "2000", "training samples")
+    .opt("test-size", "400", "test samples / serve requests")
+    .opt("epochs", "2", "training epochs")
+    .opt("batch-size", "32", "minibatch size")
+    .opt("seed", "42", "run seed")
+    .opt("parity-nodes", "1536", "width of the S=1 parity cross-check model")
+    .opt("out", "BENCH_shard.json", "output JSON path");
+    let a = p.parse_rest(rest);
+    let cfg = hashdl::serve::ShardBenchConfig {
+        nodes: a.parse_or("nodes", 1_000_000usize).max(1),
+        shards: a.parse_or("shards", 4usize).max(1),
+        sparsity: a.parse_or("sparsity", 0.001f32),
+        train_samples: a.parse_or("train-size", 2_000usize).max(1),
+        test_samples: a.parse_or("test-size", 400usize).max(1),
+        epochs: a.parse_or("epochs", 2usize).max(1),
+        batch_size: a.parse_or("batch-size", 32usize).max(1),
+        seed: a.parse_or("seed", 42u64),
+        parity_nodes: a.parse_or("parity-nodes", 1_536usize).max(16),
+    };
+    let report = hashdl::serve::run_shard_bench(&cfg);
+    println!(
+        "shard-bench: {} nodes x {} shards | train {:.1}s | wide mult fraction {:.4}% \
+         (train est {:.4}%) | serve {:.0}us/req, mean active {:.0} | per-shard select us {:?} \
+         | s1_parity {}",
+        report.nodes,
+        report.shards,
+        report.train_wall_secs,
+        report.wide_mult_fraction * 100.0,
+        report.train_wide_mult_fraction * 100.0,
+        report.serve_mean_micros,
+        report.mean_active,
+        report.per_shard_select_micros.iter().map(|t| t.round()).collect::<Vec<_>>(),
+        report.s1_parity,
+    );
+    let out = PathBuf::from(a.get_or("out", "BENCH_shard.json"));
+    if let Err(e) = hashdl::serve::write_shard_bench_json(&report, &out) {
+        eprintln!("error writing {}: {e}", out.display());
+        return 1;
+    }
+    println!("wrote {}", out.display());
+    if !report.s1_parity {
+        eprintln!("shard-bench: S=1 parity FAILED");
+        return 1;
     }
     0
 }

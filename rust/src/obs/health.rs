@@ -16,6 +16,7 @@ use crate::nn::layer::Layer;
 use crate::tensor::vecops::{dot, top_k_indices};
 use crate::util::json::JsonObject;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 /// Per-table mutable health counters. Lives inside the table structs;
 /// all writes are relaxed atomics so shared (`Arc`) frozen tables can
@@ -24,6 +25,13 @@ use std::sync::atomic::{AtomicU64, Ordering};
 pub struct HealthTally {
     /// Per-node selection counts ("running activations").
     counts: Vec<AtomicU64>,
+    /// Ids whose count went 0 → 1, in first-activation order. Lets
+    /// [`TableHealth::compute`] cost O(active) instead of O(nodes) on
+    /// million-node layers; the lock is only taken when a node activates
+    /// for the first time, so the steady-state fold-in stays lock-free.
+    active: Mutex<Vec<u32>>,
+    /// Running maximum over `counts` (updated via `fetch_max`).
+    max_count: AtomicU64,
     /// Total node selections folded in (sum over counts).
     selections: AtomicU64,
     /// Micro-batches folded in since creation.
@@ -43,6 +51,8 @@ impl HealthTally {
         counts.resize_with(n_nodes, || AtomicU64::new(0));
         HealthTally {
             counts,
+            active: Mutex::new(Vec::new()),
+            max_count: AtomicU64::new(0),
             selections: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             since_rebuild: AtomicU64::new(0),
@@ -60,10 +70,17 @@ impl HealthTally {
         for sel in outs {
             for &id in sel {
                 if let Some(c) = self.counts.get(id as usize) {
-                    c.fetch_add(1, Ordering::Relaxed);
+                    let prev = c.fetch_add(1, Ordering::Relaxed);
+                    if prev == 0 {
+                        // First activation of this node: remember it so
+                        // snapshots never have to scan the full id space.
+                        // (fetch_add returns 0 to exactly one caller.)
+                        self.active.lock().expect("health lock").push(id);
+                    }
+                    self.max_count.fetch_max(prev + 1, Ordering::Relaxed);
+                    total += 1;
                 }
             }
-            total += sel.len() as u64;
         }
         self.selections.fetch_add(total, Ordering::Relaxed);
         self.batches.fetch_add(1, Ordering::Relaxed);
@@ -133,8 +150,64 @@ pub struct TableHealth {
 
 impl TableHealth {
     /// Combine live bucket sizes (one `Vec<usize>` per table, empty
-    /// buckets included) with the running tally.
+    /// buckets included) with the running tally. Cost is
+    /// O(active + buckets), never O(nodes): the per-node scan was the one
+    /// thing here that grew with layer width, and million-node layers make
+    /// it unaffordable at telemetry cadence. The tally's first-activation
+    /// list and running max replace it exactly.
     pub fn compute(bucket_sizes: &[Vec<usize>], rebuilds: u64, tally: &HealthTally) -> Self {
+        let nodes = tally.n_nodes();
+        let active_nodes = tally.active.lock().expect("health lock").len();
+        let max_act = tally.max_count.load(Ordering::Relaxed);
+        // `selections` counts exactly the ids folded into `counts`, so the
+        // running total is the sum over counts without reading any of them.
+        let act_sum = tally.selections();
+        Self::assemble(
+            bucket_sizes,
+            rebuilds,
+            tally,
+            nodes,
+            active_nodes,
+            max_act,
+            act_sum,
+        )
+    }
+
+    /// Per-shard health row: node statistics restricted to the global-id
+    /// `range` a shard owns, bucket statistics from that shard's own
+    /// tables. Cost is O(active + shard buckets) — the first-activation
+    /// list is filtered by range, never the count array scanned.
+    pub fn compute_subset(
+        bucket_sizes: &[Vec<usize>],
+        rebuilds: u64,
+        tally: &HealthTally,
+        range: std::ops::Range<usize>,
+    ) -> Self {
+        let nodes = range.len();
+        let mut active_nodes = 0usize;
+        let mut max_act = 0u64;
+        let mut act_sum = 0u64;
+        for &id in tally.active.lock().expect("health lock").iter() {
+            if range.contains(&(id as usize)) {
+                let v = tally.counts[id as usize].load(Ordering::Relaxed);
+                active_nodes += 1;
+                max_act = max_act.max(v);
+                act_sum += v;
+            }
+        }
+        Self::assemble(bucket_sizes, rebuilds, tally, nodes, active_nodes, max_act, act_sum)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn assemble(
+        bucket_sizes: &[Vec<usize>],
+        rebuilds: u64,
+        tally: &HealthTally,
+        nodes: usize,
+        active_nodes: usize,
+        max_act: u64,
+        act_sum: u64,
+    ) -> Self {
         let mut max_bucket = 0usize;
         let mut occupied = 0usize;
         let mut occupied_sum = 0usize;
@@ -159,18 +232,6 @@ impl TableHealth {
         let occupancy_skew =
             if mean_occupied_bucket > 0.0 { max_bucket as f64 / mean_occupied_bucket } else { 0.0 };
 
-        let nodes = tally.n_nodes();
-        let mut active_nodes = 0usize;
-        let mut max_act = 0u64;
-        let mut act_sum = 0u64;
-        for c in &tally.counts {
-            let v = c.load(Ordering::Relaxed);
-            if v > 0 {
-                active_nodes += 1;
-            }
-            max_act = max_act.max(v);
-            act_sum += v;
-        }
         let never_active_fraction =
             if nodes > 0 { (nodes - active_nodes) as f64 / nodes as f64 } else { 0.0 };
         let mean_node_activations = if nodes > 0 { act_sum as f64 / nodes as f64 } else { 0.0 };
@@ -189,7 +250,7 @@ impl TableHealth {
             rebuilds,
             rebuild_age_batches: tally.since_rebuild.load(Ordering::Relaxed),
             selection_batches: tally.batches(),
-            selections: tally.selections(),
+            selections: act_sum,
             active_nodes,
             never_active_fraction,
             max_node_activations: max_act,
@@ -278,6 +339,40 @@ mod tests {
         assert_eq!(t.node_count(3), 1);
         assert_eq!(t.selections(), 5);
         assert_eq!(t.batches(), 2);
+    }
+
+    #[test]
+    fn compute_matches_a_full_scan_of_the_counts() {
+        // The O(active) fast path must agree with what a per-node scan
+        // would have reported.
+        let t = HealthTally::new(6);
+        t.note_batch(&[vec![0, 5, 5], vec![2, 5]]);
+        let h = TableHealth::compute(&[vec![3, 3]], 0, &t);
+        assert_eq!(h.nodes, 6);
+        assert_eq!(h.active_nodes, 3);
+        assert_eq!(h.max_node_activations, 3);
+        assert_eq!(h.selections, 5);
+        assert!((h.mean_node_activations - 5.0 / 6.0).abs() < 1e-12);
+        assert!((h.never_active_fraction - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compute_subset_restricts_to_the_id_range() {
+        let t = HealthTally::new(8);
+        t.note_batch(&[vec![0, 1, 5, 5, 7]]);
+        // Shard owning ids [4, 8): nodes 5 (twice) and 7 (once) are active.
+        let h = TableHealth::compute_subset(&[vec![2, 1]], 3, &t, 4..8);
+        assert_eq!(h.nodes, 4);
+        assert_eq!(h.active_nodes, 2);
+        assert_eq!(h.selections, 3);
+        assert_eq!(h.max_node_activations, 2);
+        assert_eq!(h.rebuilds, 3);
+        assert!((h.never_active_fraction - 0.5).abs() < 1e-12);
+        // The other shard's row sees the complement.
+        let lo = TableHealth::compute_subset(&[vec![2, 1]], 0, &t, 0..4);
+        assert_eq!(lo.active_nodes, 2);
+        assert_eq!(lo.selections, 2);
+        assert_eq!(lo.max_node_activations, 1);
     }
 
     #[test]

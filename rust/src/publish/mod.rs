@@ -28,7 +28,7 @@
 
 pub mod slot;
 
-use crate::lsh::frozen::FrozenLayerTables;
+use crate::lsh::sharded::LayerTableStack;
 use crate::nn::network::Network;
 use crate::serve::snapshot::ModelSnapshot;
 use slot::Slot;
@@ -41,8 +41,8 @@ use std::sync::Arc;
 /// nothing).
 pub struct PublishedModel {
     pub net: Network,
-    /// One frozen table stack per hidden layer.
-    pub tables: Vec<FrozenLayerTables>,
+    /// One frozen table stack per hidden layer (single or sharded).
+    pub tables: Vec<LayerTableStack>,
     /// Active-node fraction per hidden layer (the serving top-k knob).
     pub sparsity: f32,
     /// §5.4 cheap re-rank factor carried from training (0/1 = disabled).
@@ -58,7 +58,7 @@ pub struct PublishedModel {
 #[derive(Clone)]
 pub struct ModelParts {
     pub net: Network,
-    pub tables: Vec<FrozenLayerTables>,
+    pub tables: Vec<LayerTableStack>,
     pub sparsity: f32,
     pub rerank_factor: usize,
 }
@@ -217,6 +217,7 @@ pub fn publish_once(parts: ModelParts) -> TableReader {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::lsh::frozen::FrozenLayerTables;
     use crate::lsh::layered::{LayerTables, LshConfig};
     use crate::nn::activation::Activation;
     use crate::nn::network::NetworkConfig;
@@ -227,10 +228,8 @@ mod tests {
         let cfg = NetworkConfig { n_in: 8, hidden: vec![24], n_out: 3, act: Activation::ReLU };
         let net = Network::new(&cfg, &mut Pcg64::seeded(seed));
         let mut rng = Pcg64::new(seed, 0x7AB);
-        let tables = vec![FrozenLayerTables::freeze(&LayerTables::build(
-            &net.layers[0].w,
-            LshConfig::default(),
-            &mut rng,
+        let tables = vec![LayerTableStack::Single(FrozenLayerTables::freeze(
+            &LayerTables::build(&net.layers[0].w, LshConfig::default(), &mut rng),
         ))];
         ModelParts { net, tables, sparsity: 0.25, rerank_factor: 0 }
     }

@@ -8,9 +8,12 @@ pub mod adaptive;
 pub mod dropout;
 pub mod full;
 pub mod lsh_select;
+pub mod sharded_select;
 pub mod wta;
 
 use crate::lsh::layered::LshConfig;
+use crate::lsh::sharded::LayerTableStack;
+use crate::obs::health::TableHealth;
 use crate::nn::layer::Layer;
 use crate::nn::sparse::LayerInput;
 use crate::util::rng::Pcg64;
@@ -71,6 +74,11 @@ pub struct SamplerConfig {
     pub ad_beta: f32,
     /// Rebuild LSH tables from scratch every this many epochs (drift control).
     pub rebuild_every_epochs: usize,
+    /// Shard count for wide layers (extreme classification): > 1 selects
+    /// through per-shard LSH tables over a sharded weight mirror. 1 (the
+    /// default) is the classic unsharded path; the sharded path at 1 is
+    /// bit-for-bit identical to it.
+    pub shards: usize,
 }
 
 impl Default for SamplerConfig {
@@ -82,6 +90,7 @@ impl Default for SamplerConfig {
             ad_alpha: 1.0,
             ad_beta: 0.0,
             rebuild_every_epochs: 1,
+            shards: 1,
         }
     }
 }
@@ -171,6 +180,22 @@ pub trait NodeSelector: Send {
         None
     }
 
+    /// Freeze whatever table state this selector maintains into the
+    /// serving representation. The default covers unsharded LSH (and the
+    /// no-table policies); the sharded selector overrides it to emit a
+    /// [`LayerTableStack::Sharded`].
+    fn frozen_stack(&self) -> Option<LayerTableStack> {
+        self.lsh_tables()
+            .map(|t| LayerTableStack::Single(crate::lsh::FrozenLayerTables::freeze(t)))
+    }
+
+    /// Per-table-group health rows for the telemetry exporter: exactly one
+    /// row for an unsharded selector, one per shard for a sharded one,
+    /// empty for policies without tables.
+    fn health_rows(&self) -> Vec<TableHealth> {
+        self.lsh_tables().map(|t| vec![t.health_snapshot()]).unwrap_or_default()
+    }
+
     /// Human-readable policy name.
     fn name(&self) -> &'static str;
 }
@@ -188,6 +213,14 @@ pub fn make_selector(
             Box::new(adaptive::AdaptiveDropoutSelector::new(cfg.ad_alpha, cfg.ad_beta, cfg.sparsity))
         }
         Method::Wta => Box::new(wta::WtaSelector::new(cfg.sparsity)),
+        Method::Lsh if cfg.shards > 1 => Box::new(sharded_select::ShardedLshSelector::new(
+            layer,
+            cfg.lsh,
+            cfg.shards,
+            cfg.sparsity,
+            cfg.rebuild_every_epochs,
+            rng,
+        )),
         Method::Lsh => Box::new(lsh_select::LshSelector::new(
             layer,
             cfg.lsh,

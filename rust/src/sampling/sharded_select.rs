@@ -1,0 +1,241 @@
+//! Sharded LSH selector for wide layers (extreme classification): the
+//! training-time lifecycle wrapper around
+//! [`crate::lsh::sharded::ShardedLayerTables`], mirroring
+//! [`crate::sampling::lsh_select::LshSelector`] step for step. Selection
+//! goes through the same shared execution core
+//! ([`crate::exec::select_batch_into`]); the only differences are the
+//! backend (`S` per-shard table stacks over a sharded weight mirror) and
+//! the staggered per-shard rebuild cadence.
+//!
+//! **S=1 parity contract:** with one shard every selection, rehash and
+//! rebuild this selector performs is bit-for-bit the unsharded
+//! `LshSelector`'s, consuming the RNG stream at the same positions.
+//! Pinned by the tests below and `tests/sharding.rs`.
+
+use crate::exec::{densify_into, select_batch_into, BatchSelectScratch, TableView};
+use crate::lsh::layered::LshConfig;
+use crate::lsh::sharded::{LayerTableStack, ShardedFrozenTables, ShardedLayerTables};
+use crate::nn::layer::Layer;
+use crate::nn::sparse::LayerInput;
+use crate::obs::health::TableHealth;
+use crate::sampling::{budget, NodeSelector, SelectionCost};
+use crate::util::rng::Pcg64;
+
+pub struct ShardedLshSelector {
+    tables: ShardedLayerTables,
+    sparsity: f32,
+    rebuild_every_epochs: usize,
+    /// Dense scratch for single-query selection.
+    scratch_q: Vec<f32>,
+    /// Per-sample fingerprint buffer, `S × L` wide (one `L`-group per
+    /// shard — each shard hashes with its own family).
+    fps_buf: Vec<u32>,
+    /// Re-rank scoring buffer (shared core writes into it).
+    scored: Vec<(f32, u32)>,
+    /// Batched-selection buffers, reused across batches by the shared core.
+    batch_scratch: BatchSelectScratch,
+    /// Per-sample selection-cost attribution from the shared core.
+    per_sample_mults: Vec<u64>,
+    /// Updates since the last full rebuild of *any* shard (diagnostics;
+    /// shards rebuild staggered, so this tracks the freshest shard).
+    pub updates_since_rebuild: u64,
+}
+
+impl ShardedLshSelector {
+    pub fn new(
+        layer: &Layer,
+        cfg: LshConfig,
+        shards: usize,
+        sparsity: f32,
+        rebuild_every_epochs: usize,
+        rng: &mut Pcg64,
+    ) -> Self {
+        ShardedLshSelector {
+            tables: ShardedLayerTables::build(&layer.w, cfg, shards, rng),
+            sparsity,
+            rebuild_every_epochs: rebuild_every_epochs.max(1),
+            scratch_q: vec![0.0; layer.n_in()],
+            fps_buf: Vec::new(),
+            scored: Vec::new(),
+            batch_scratch: BatchSelectScratch::default(),
+            per_sample_mults: Vec::new(),
+            updates_since_rebuild: 0,
+        }
+    }
+
+    pub fn tables(&self) -> &ShardedLayerTables {
+        &self.tables
+    }
+}
+
+impl NodeSelector for ShardedLshSelector {
+    fn select(
+        &mut self,
+        layer: &Layer,
+        input: LayerInput<'_>,
+        rng: &mut Pcg64,
+        out: &mut Vec<u32>,
+    ) -> SelectionCost {
+        let b = budget(layer.n_out(), self.sparsity);
+        let rerank_factor = self.tables.config().rerank_factor;
+        let Self { tables, scratch_q, fps_buf, scored, .. } = self;
+        scratch_q.resize(layer.n_in(), 0.0);
+        densify_into(input, scratch_q);
+        // Batch-of-one through the same TableView entry points the shared
+        // core uses, so batched and per-sample selection cannot diverge.
+        fps_buf.resize(tables.fps_width(), 0);
+        let hash_mults = tables.hash_batch(scratch_q, layer.n_in(), 1, fps_buf);
+        let extra_mults =
+            tables.select_prehashed(layer, scratch_q, fps_buf, b, rerank_factor, rng, scored, out);
+        SelectionCost { selection_mults: hash_mults + extra_mults }
+    }
+
+    fn select_batch(
+        &mut self,
+        layer: &Layer,
+        inputs: &[LayerInput<'_>],
+        rng: &mut Pcg64,
+        outs: &mut [Vec<u32>],
+    ) -> SelectionCost {
+        debug_assert_eq!(inputs.len(), outs.len());
+        let b = budget(layer.n_out(), self.sparsity);
+        let rerank_factor = self.tables.config().rerank_factor;
+        if self.per_sample_mults.len() < inputs.len() {
+            self.per_sample_mults.resize(inputs.len(), 0);
+        }
+        let stats = select_batch_into(
+            &mut self.tables,
+            layer,
+            inputs,
+            b,
+            rerank_factor,
+            rng,
+            &mut self.batch_scratch,
+            &mut self.per_sample_mults[..inputs.len()],
+            outs,
+        );
+        SelectionCost { selection_mults: stats.selection_mults }
+    }
+
+    fn post_update(&mut self, layer: &Layer, touched: &[u32], rng: &mut Pcg64) {
+        self.tables.post_update(&layer.w, touched, rng);
+        self.updates_since_rebuild += 1;
+    }
+
+    fn on_epoch_end(&mut self, layer: &Layer, epoch: usize, rng: &mut Pcg64) {
+        let before = self.tables.rebuilds();
+        self.tables.on_epoch_end(&layer.w, epoch, self.rebuild_every_epochs, rng);
+        if self.tables.rebuilds() > before {
+            self.updates_since_rebuild = 0;
+        }
+    }
+
+    fn frozen_stack(&self) -> Option<LayerTableStack> {
+        Some(LayerTableStack::Sharded(ShardedFrozenTables::freeze(&self.tables)))
+    }
+
+    fn health_rows(&self) -> Vec<TableHealth> {
+        self.tables.health_rows()
+    }
+
+    fn name(&self) -> &'static str {
+        "LSH-sharded"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::activation::Activation;
+    use crate::sampling::lsh_select::LshSelector;
+
+    fn layer(n_in: usize, n_out: usize, seed: u64) -> Layer {
+        let mut rng = Pcg64::seeded(seed);
+        Layer::new(n_in, n_out, Activation::ReLU, &mut rng)
+    }
+
+    fn batch(n_in: usize, bsz: usize) -> Vec<Vec<f32>> {
+        (0..bsz)
+            .map(|s| (0..n_in).map(|j| ((s * n_in + j) as f32 * 0.17).sin()).collect())
+            .collect()
+    }
+
+    #[test]
+    fn s1_selector_is_bitwise_the_unsharded_selector() {
+        let mut l = layer(20, 120, 71);
+        let cfg = LshConfig { k: 4, l: 3, rerank_factor: 2, rehash_probability: 0.5, ..Default::default() };
+        let mut rng_a = Pcg64::seeded(72);
+        let mut rng_b = Pcg64::seeded(72);
+        let mut plain = LshSelector::new(&l, cfg, 0.1, 2, &mut rng_a);
+        let mut sharded = ShardedLshSelector::new(&l, cfg, 1, 0.1, 2, &mut rng_b);
+        let xs = batch(20, 6);
+        let inputs: Vec<LayerInput> = xs.iter().map(|x| LayerInput::Dense(x)).collect();
+        let mut outs_a: Vec<Vec<u32>> = vec![Vec::new(); 6];
+        let mut outs_b: Vec<Vec<u32>> = vec![Vec::new(); 6];
+        let ca = plain.select_batch(&l, &inputs, &mut rng_a, &mut outs_a);
+        let cb = sharded.select_batch(&l, &inputs, &mut rng_b, &mut outs_b);
+        assert_eq!(outs_a, outs_b, "active sets must match bitwise at S=1");
+        assert_eq!(ca.selection_mults, cb.selection_mults);
+        // Maintenance consumes the same stream and lands the same tables.
+        for id in [5u32, 40, 99] {
+            for v in l.w.row_mut(id as usize) {
+                *v += 0.03;
+            }
+        }
+        plain.post_update(&l, &[5, 40, 99], &mut rng_a);
+        sharded.post_update(&l, &[5, 40, 99], &mut rng_b);
+        assert_eq!(sharded.tables().shard(0).tables(), plain.tables().tables());
+        plain.on_epoch_end(&l, 1, &mut rng_a); // (1+1) % 2 == 0 -> rebuild
+        sharded.on_epoch_end(&l, 1, &mut rng_b);
+        assert_eq!(sharded.tables().shard(0).tables(), plain.tables().tables());
+        assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "RNG streams must stay aligned");
+    }
+
+    #[test]
+    fn select_batch_matches_per_sample_select_at_s3() {
+        let l = layer(16, 150, 81);
+        let cfg = LshConfig { k: 4, l: 3, rerank_factor: 3, ..Default::default() };
+        let mut rng_a = Pcg64::seeded(82);
+        let mut rng_b = Pcg64::seeded(82);
+        let mut sel_a = ShardedLshSelector::new(&l, cfg, 3, 0.1, 1, &mut rng_a);
+        let mut sel_b = ShardedLshSelector::new(&l, cfg, 3, 0.1, 1, &mut rng_b);
+        let xs = batch(16, 7);
+        let inputs: Vec<LayerInput> = xs.iter().map(|x| LayerInput::Dense(x)).collect();
+        let mut outs: Vec<Vec<u32>> = vec![Vec::new(); 7];
+        let batch_cost = sel_a.select_batch(&l, &inputs, &mut rng_a, &mut outs);
+        let mut per_sample_cost = 0u64;
+        for (s, input) in inputs.iter().enumerate() {
+            let mut one = Vec::new();
+            per_sample_cost += sel_b.select(&l, *input, &mut rng_b, &mut one).selection_mults;
+            assert_eq!(one, outs[s], "sample {s} active set must match");
+        }
+        assert_eq!(batch_cost.selection_mults, per_sample_cost);
+    }
+
+    #[test]
+    fn frozen_stack_and_health_rows_are_sharded() {
+        let l = layer(12, 90, 91);
+        let cfg = LshConfig { k: 3, l: 2, ..Default::default() };
+        let mut rng = Pcg64::seeded(92);
+        let sel = ShardedLshSelector::new(&l, cfg, 3, 0.1, 1, &mut rng);
+        let stack = sel.frozen_stack().expect("sharded selector ships tables");
+        assert_eq!(stack.shard_count(), 3);
+        assert!(stack.sharded().is_some());
+        assert_eq!(stack.n_nodes(), 90);
+        let rows = sel.health_rows();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows.iter().map(|h| h.nodes).sum::<usize>(), 90);
+    }
+
+    #[test]
+    fn unsharded_selector_default_hooks_still_emit_single_stack() {
+        // Guards the NodeSelector default impls the trainer now relies on.
+        let l = layer(10, 60, 95);
+        let mut rng = Pcg64::seeded(96);
+        let sel = LshSelector::new(&l, LshConfig::default(), 0.1, 1, &mut rng);
+        let stack = sel.frozen_stack().expect("LSH ships tables");
+        assert_eq!(stack.shard_count(), 1);
+        assert!(stack.single().is_some());
+        assert_eq!(sel.health_rows().len(), 1);
+    }
+}

@@ -40,6 +40,7 @@
 //! the responses were served from.
 
 use crate::lsh::frozen::FrozenLayerTables;
+use crate::lsh::sharded::LayerTableStack;
 use crate::lsh::layered::LayerTables;
 use crate::publish::{ModelParts, TablePublisher};
 use crate::serve::engine::InferenceWorkspace;
@@ -487,18 +488,18 @@ pub fn run_train_while_serve(
                 // Realistic publish payload: rebuild every layer's tables
                 // from the current weights with a fresh per-version RNG
                 // stream, freeze, clone the weights, publish.
-                let tables: Vec<FrozenLayerTables> = net
+                let tables: Vec<LayerTableStack> = net
                     .layers
                     .iter()
                     .take(net.n_hidden())
                     .enumerate()
                     .map(|(l, layer)| {
                         let mut rng = Pcg64::new(seed ^ (v as u64 + 1), 0x9_0B + l as u64);
-                        FrozenLayerTables::freeze(&LayerTables::build(
+                        LayerTableStack::Single(FrozenLayerTables::freeze(&LayerTables::build(
                             &layer.w,
                             table_cfgs[l],
                             &mut rng,
-                        ))
+                        )))
                     })
                     .collect();
                 publisher.publish(ModelParts {

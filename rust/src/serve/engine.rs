@@ -41,8 +41,9 @@
 //! reports, so sparse-vs-dense serving savings are directly comparable to
 //! the paper's training numbers.
 
-use crate::exec::{BatchExecutor, BatchRunStats, FrozenTableView};
+use crate::exec::{AnyFrozenView, BatchExecutor, BatchRunStats, FrozenTableView, ShardedFrozenView};
 use crate::lsh::frozen::{FrozenLayerTables, FrozenQueryScratch};
+use crate::lsh::sharded::LayerTableStack;
 use crate::nn::network::Network;
 use crate::nn::sparse::SparseVec;
 use crate::publish::{publish_once, ModelParts, PublishedModel, TableReader};
@@ -71,10 +72,12 @@ pub struct InferenceWorkspace {
     /// engine it belongs to (serving from a mismatched engine would
     /// silently use the wrong model).
     slot_id: usize,
-    /// One probe scratch per hidden layer: the pinned epoch's frozen
-    /// stacks are borrowed together with these by the batched execution
-    /// core (`FrozenTableView` per layer).
-    scratches: Vec<FrozenQueryScratch>,
+    /// One probe-scratch group per hidden layer, one scratch per shard
+    /// of that layer's table stack (a single stack is the one-scratch
+    /// case): the pinned epoch's frozen stacks are borrowed together
+    /// with these by the batched execution core (an [`AnyFrozenView`]
+    /// per layer).
+    scratches: Vec<Vec<FrozenQueryScratch>>,
     /// The shared batched execution core: batch plan, per-sample
     /// activations/logits/counters, reused buffers.
     exec: BatchExecutor,
@@ -99,9 +102,9 @@ impl InferenceWorkspace {
         let model = engine.current();
         let n_hidden = model.net.n_hidden();
         InferenceWorkspace {
+            scratches: Self::scratch_groups(&model),
             model,
             slot_id: engine.slot_id(),
-            scratches: (0..n_hidden).map(|_| FrozenQueryScratch::new()).collect(),
             exec: BatchExecutor::new(),
             results: Vec::new(),
             dense_cur: BatchPlane::new(),
@@ -114,6 +117,16 @@ impl InferenceWorkspace {
     /// Version of the pinned epoch.
     pub fn version(&self) -> u64 {
         self.model.version
+    }
+
+    /// One scratch group per hidden layer, one scratch per shard of that
+    /// layer's table stack.
+    fn scratch_groups(model: &PublishedModel) -> Vec<Vec<FrozenQueryScratch>> {
+        model
+            .tables
+            .iter()
+            .map(|t| (0..t.shard_count()).map(|_| FrozenQueryScratch::new()).collect())
+            .collect()
     }
 
     /// Re-pin to the newest published epoch if this workspace is stale.
@@ -139,8 +152,16 @@ impl InferenceWorkspace {
         if self.acts.len() != n_hidden {
             self.acts.resize_with(n_hidden, SparseVec::new);
         }
-        if self.scratches.len() != n_hidden {
-            self.scratches.resize_with(n_hidden, FrozenQueryScratch::new);
+        // Scratch groups follow the new epoch's shard layout; reuse the
+        // existing buffers when the shape is unchanged (the steady state).
+        let shape_ok = self.scratches.len() == n_hidden
+            && self
+                .scratches
+                .iter()
+                .zip(self.model.tables.iter())
+                .all(|(group, t)| group.len() == t.shard_count());
+        if !shape_ok {
+            self.scratches = Self::scratch_groups(&self.model);
         }
         !same_slot || self.model.version != old_version
     }
@@ -214,6 +235,7 @@ impl SparseInferenceEngine {
 
     /// Build directly from bare parts (tests, ad-hoc serving of a live net).
     pub fn from_parts(net: Network, tables: Vec<FrozenLayerTables>, sparsity: f32) -> Self {
+        let tables = tables.into_iter().map(LayerTableStack::Single).collect();
         Self::frozen(ModelParts { net, tables, sparsity, rerank_factor: 0 })
     }
 
@@ -264,11 +286,18 @@ impl SparseInferenceEngine {
             exec.last = BatchRunStats::default();
             return;
         }
-        let mut views: Vec<FrozenTableView> = sh
+        let mut views: Vec<AnyFrozenView> = sh
             .tables
             .iter()
             .zip(scratches.iter_mut())
-            .map(|(tables, scratch)| FrozenTableView { tables, scratch })
+            .map(|(stack, group)| match stack {
+                LayerTableStack::Single(tables) => {
+                    AnyFrozenView::Single(FrozenTableView { tables, scratch: &mut group[0] })
+                }
+                LayerTableStack::Sharded(stack) => {
+                    AnyFrozenView::Sharded(ShardedFrozenView::new(stack, group))
+                }
+            })
             .collect();
         // The frozen backend derives all randomness from the query
         // fingerprints; this stream is never drawn from.
@@ -593,5 +622,37 @@ mod tests {
         assert!(!ws.sync(&e), "second sync is a no-op");
         // Different weights ⇒ different logits (overwhelmingly).
         assert_ne!(ws.logits, logits_v0, "new epoch must actually be served");
+    }
+
+    #[test]
+    fn sharded_model_serves_deterministically_and_batches_match_singles() {
+        let cfg =
+            NetworkConfig { n_in: 16, hidden: vec![64, 48], n_out: 4, act: Activation::ReLU };
+        let net = Network::new(&cfg, &mut Pcg64::seeded(41));
+        let sampler = SamplerConfig { shards: 4, sparsity: 0.2, ..SamplerConfig::default() };
+        let e = SparseInferenceEngine::from_snapshot(ModelSnapshot::without_tables(net, sampler, 41));
+        assert_eq!(e.current().tables[0].shard_count(), 4);
+
+        let xs: Vec<Vec<f32>> = (0..6)
+            .map(|s| (0..16).map(|j| ((s * 16 + j) as f32 * 0.29).sin()).collect())
+            .collect();
+        let xrefs: Vec<&[f32]> = xs.iter().map(|x| x.as_slice()).collect();
+        let mut ws_fused = InferenceWorkspace::new(&e);
+        e.infer_batch(&xrefs, &mut ws_fused);
+        assert_eq!(ws_fused.last_batch_stats().hash_invocations, 2);
+
+        let mut ws_single = InferenceWorkspace::new(&e);
+        for (s, x) in xs.iter().enumerate() {
+            let direct = e.infer(x, &mut ws_single);
+            let fused = ws_fused.last_results()[s];
+            assert_eq!(fused.pred, direct.pred, "request {s} pred");
+            assert_eq!(fused.mults.total(), direct.mults.total(), "request {s} mults");
+            assert_eq!(ws_fused.batch_logits(s), ws_single.logits.as_slice(), "request {s}");
+        }
+        // Determinism across workspaces (fingerprint-derived randomness).
+        let mut ws_other = InferenceWorkspace::new(&e);
+        let again = e.infer(&xs[0], &mut ws_other);
+        assert_eq!(again.pred, ws_fused.last_results()[0].pred);
+        assert_eq!(ws_other.logits, ws_fused.batch_logits(0));
     }
 }

@@ -33,6 +33,7 @@
 pub mod bench;
 pub mod engine;
 pub mod pool;
+pub mod shard_bench;
 pub mod snapshot;
 pub mod stats;
 
@@ -44,6 +45,9 @@ pub use bench::{
     TrainServeReport,
 };
 pub use engine::{EvalSummary, Inference, InferenceWorkspace, SparseInferenceEngine};
+pub use shard_bench::{
+    run_shard_bench, write_shard_bench_json, ShardBenchConfig, ShardBenchReport,
+};
 pub use pool::{
     PoolConfig, PoolHandle, PoolStats, Request, RequestQueue, Response, ServePool, SubmitOutcome,
 };

@@ -1,0 +1,379 @@
+//! Sharded wide-layer benchmark (`shard-bench`): train and serve an
+//! extreme-classification-shaped model — a ~1M-node hidden layer selected
+//! through per-shard LSH tables — and report the evidence the sharding
+//! claim rests on:
+//!
+//! * **wide-layer mult fraction** — multiplications actually spent on the
+//!   wide layer (hashing + sparse forward) as a fraction of the dense
+//!   baseline (`nodes × n_in` per sample); the acceptance bar is < 1%.
+//! * **per-shard selection time** — mean microseconds per query to hash +
+//!   probe + rank each shard's frozen tables in isolation, showing shard
+//!   cost stays balanced (ownership is contiguous row blocks).
+//! * **S=1 parity** — the sharded selector and the sharded frozen serving
+//!   path at one shard are bit-for-bit the unsharded implementations:
+//!   identical active sets, selection costs and serving logits.
+//!
+//! The workload is the synthetic [`Benchmark::Amazon670k`] generator
+//! (128-dim embedding-like inputs, 512 classes); the wide layer is the
+//! hidden layer, selected at `sparsity` (default 0.1%), and the output
+//! layer runs dense over the sparse hidden activation — the shape where
+//! randomized-hashing selection pays most. Results land in
+//! `BENCH_shard.json` (see [`write_shard_bench_json`]).
+
+use crate::data::synth::Benchmark;
+use crate::lsh::frozen::FrozenQueryScratch;
+use crate::nn::activation::Activation;
+use crate::nn::network::{Network, NetworkConfig};
+use crate::nn::sparse::LayerInput;
+use crate::obs::TableHealth;
+use crate::optim::{OptimConfig, OptimizerKind};
+use crate::publish::ModelParts;
+use crate::sampling::lsh_select::LshSelector;
+use crate::sampling::sharded_select::ShardedLshSelector;
+use crate::sampling::{budget, Method, NodeSelector, SamplerConfig};
+use crate::serve::{InferenceWorkspace, SparseInferenceEngine};
+use crate::train::trainer::{TrainConfig, Trainer};
+use crate::util::json::{JsonArray, JsonObject};
+use crate::util::rng::Pcg64;
+use std::io;
+use std::path::Path;
+use std::time::Instant;
+
+/// Knobs for one shard-bench run. The defaults are the acceptance-scale
+/// workload (1M-node wide layer); CI runs the same scenario at 100k nodes.
+#[derive(Clone, Debug)]
+pub struct ShardBenchConfig {
+    /// Wide hidden-layer width (the sharded layer).
+    pub nodes: usize,
+    /// LSH shards for the wide layer (must be >= 1).
+    pub shards: usize,
+    /// Target active-node fraction on the wide layer.
+    pub sparsity: f32,
+    pub train_samples: usize,
+    pub test_samples: usize,
+    pub epochs: usize,
+    pub batch_size: usize,
+    pub seed: u64,
+    /// Width of the (cheap) S=1 parity cross-check model.
+    pub parity_nodes: usize,
+}
+
+impl Default for ShardBenchConfig {
+    fn default() -> Self {
+        ShardBenchConfig {
+            nodes: 1_000_000,
+            shards: 4,
+            sparsity: 0.001,
+            train_samples: 2_000,
+            test_samples: 400,
+            epochs: 2,
+            batch_size: 32,
+            seed: 42,
+            parity_nodes: 1_536,
+        }
+    }
+}
+
+/// Everything `BENCH_shard.json` reports.
+#[derive(Clone, Debug)]
+pub struct ShardBenchReport {
+    pub nodes: usize,
+    pub shards: usize,
+    pub sparsity: f32,
+    pub n_in: usize,
+    pub n_out: usize,
+    pub train_samples: usize,
+    pub epochs: usize,
+    pub train_wall_secs: f64,
+    pub final_train_acc: f32,
+    /// Wide-layer (selection + sparse forward) mults over the dense
+    /// baseline during *training*, estimated from the run's counters.
+    pub train_wide_mult_fraction: f64,
+    pub serve_requests: usize,
+    pub serve_mean_micros: f64,
+    /// Exact serving-side wide-layer mult fraction: per request,
+    /// (selection + forward − output-layer part) / (nodes × n_in).
+    pub wide_mult_fraction: f64,
+    /// Mean active wide-layer nodes per served request.
+    pub mean_active: f64,
+    /// Mean microseconds per query to select through each shard's frozen
+    /// tables in isolation (hash + probe + rank at the shard's share of
+    /// the budget).
+    pub per_shard_select_micros: Vec<f64>,
+    /// Per-shard table health of the served epoch (one row per shard).
+    pub shard_health: Vec<TableHealth>,
+    /// S=1 sharded selector + frozen serving are bitwise the unsharded
+    /// implementations.
+    pub s1_parity: bool,
+}
+
+/// Selector-level and serving-level S=1 parity: run the unsharded
+/// [`LshSelector`] and a one-shard [`ShardedLshSelector`] from identical
+/// RNG streams over the same queries, then serve both frozen stacks and
+/// compare logits. Returns `true` only if every comparison is bitwise.
+fn s1_parity_check(n_in: usize, nodes: usize, n_out: usize, sparsity: f32, seed: u64) -> bool {
+    let net = Network::new(
+        &NetworkConfig { n_in, hidden: vec![nodes], n_out, act: Activation::ReLU },
+        &mut Pcg64::seeded(seed),
+    );
+    let lsh = SamplerConfig::default().lsh;
+    let mut rng_a = Pcg64::new(seed, 0xA11CE);
+    let mut rng_b = Pcg64::new(seed, 0xA11CE);
+    let mut plain = LshSelector::new(&net.layers[0], lsh, sparsity, 1, &mut rng_a);
+    let mut sharded = ShardedLshSelector::new(&net.layers[0], lsh, 1, sparsity, 1, &mut rng_b);
+
+    let queries: Vec<Vec<f32>> = (0..16)
+        .map(|q| (0..n_in).map(|j| ((q * n_in + j) as f32 * 0.23).sin()).collect())
+        .collect();
+    let inputs: Vec<LayerInput> = queries.iter().map(|x| LayerInput::Dense(x)).collect();
+    let mut outs_a: Vec<Vec<u32>> = vec![Vec::new(); inputs.len()];
+    let mut outs_b: Vec<Vec<u32>> = vec![Vec::new(); inputs.len()];
+    let ca = plain.select_batch(&net.layers[0], &inputs, &mut rng_a, &mut outs_a);
+    let cb = sharded.select_batch(&net.layers[0], &inputs, &mut rng_b, &mut outs_b);
+    let mut ok = outs_a == outs_b && ca.selection_mults == cb.selection_mults;
+
+    // Frozen serving: a one-shard sharded stack must answer exactly like
+    // the single stack it wraps.
+    let single = ModelParts {
+        net: net.clone(),
+        tables: vec![plain.frozen_stack().expect("LSH ships tables")],
+        sparsity,
+        rerank_factor: lsh.rerank_factor,
+    };
+    let wrapped = ModelParts {
+        net,
+        tables: vec![sharded.frozen_stack().expect("sharded LSH ships tables")],
+        sparsity,
+        rerank_factor: lsh.rerank_factor,
+    };
+    let e1 = SparseInferenceEngine::frozen(single);
+    let e2 = SparseInferenceEngine::frozen(wrapped);
+    let mut w1 = InferenceWorkspace::new(&e1);
+    let mut w2 = InferenceWorkspace::new(&e2);
+    for x in &queries {
+        let i1 = e1.infer(x, &mut w1);
+        let i2 = e2.infer(x, &mut w2);
+        ok &= i1.pred == i2.pred
+            && w1.logits == w2.logits
+            && i1.mults.total() == i2.mults.total();
+    }
+    ok
+}
+
+/// Train + serve the sharded wide-layer workload end to end and measure
+/// everything [`ShardBenchReport`] carries.
+pub fn run_shard_bench(cfg: &ShardBenchConfig) -> ShardBenchReport {
+    let b = Benchmark::Amazon670k;
+    let (n_in, n_out) = (b.dim(), b.n_classes());
+    eprintln!(
+        "shard-bench: generating {} train / {} test samples of {}...",
+        cfg.train_samples,
+        cfg.test_samples,
+        b.name()
+    );
+    let (train, test) = b.generate(cfg.train_samples, cfg.test_samples, cfg.seed);
+
+    let net = Network::new(
+        &NetworkConfig { n_in, hidden: vec![cfg.nodes], n_out, act: Activation::ReLU },
+        &mut Pcg64::seeded(cfg.seed),
+    );
+    eprintln!(
+        "shard-bench: {} params, wide layer {} nodes x {} shards @ sparsity {}",
+        net.n_params(),
+        cfg.nodes,
+        cfg.shards,
+        cfg.sparsity
+    );
+    let mut sampler = SamplerConfig::with_method(Method::Lsh, cfg.sparsity);
+    sampler.shards = cfg.shards.max(1);
+    // Plain SGD: at 1M nodes the adagrad/momentum planes would triple the
+    // footprint of a bench whose claim is about selection cost, not
+    // optimizer quality.
+    let optim = OptimConfig { kind: OptimizerKind::Sgd, lr: 0.01, ..Default::default() };
+
+    let t0 = Instant::now();
+    let mut trainer = Trainer::new(
+        net,
+        TrainConfig {
+            epochs: cfg.epochs,
+            batch_size: cfg.batch_size,
+            optim,
+            sampler,
+            seed: cfg.seed,
+            eval_cap: cfg.test_samples.min(200),
+            verbose: true,
+        },
+    );
+    let record = trainer.run(&train, &test);
+    let train_wall_secs = t0.elapsed().as_secs_f64();
+
+    // Training-side wide-layer fraction, from the run's own counters: the
+    // forward counter spans the wide layer (active × n_in) *and* the dense
+    // output head (n_out × active); subtract the head's share so the
+    // numerator is wide-layer work only. Backward/update scale the same
+    // way and are excluded from both sides (the dense baseline here is the
+    // forward cost `nodes × n_in`, matching the serving-side metric).
+    let trained_samples = (train.len() * cfg.epochs) as f64;
+    let mean_active_train = record.mean_active_fraction() as f64 * cfg.nodes as f64;
+    let sel_fwd: u64 =
+        record.epochs.iter().map(|e| e.mults.selection + e.mults.forward).sum();
+    let head_part = n_out as f64 * mean_active_train * trained_samples;
+    let dense_wide = cfg.nodes as f64 * n_in as f64 * trained_samples;
+    let train_wide_mult_fraction = ((sel_fwd as f64 - head_part).max(0.0)) / dense_wide;
+
+    // Serve the trained model through the frozen sharded tables — the
+    // snapshot ships the live selectors' per-shard buckets (v5 on disk).
+    let snap = trainer.snapshot();
+    drop(trainer);
+    let engine = SparseInferenceEngine::from_snapshot(snap);
+    let mut ws = InferenceWorkspace::new(&engine);
+    let mut wide_mults = 0u64;
+    let mut active_sum = 0u64;
+    let t1 = Instant::now();
+    for x in &test.xs {
+        let inf = engine.infer(x, &mut ws);
+        let active = ws.acts[0].idx.len() as u64;
+        active_sum += active;
+        wide_mults += (inf.mults.selection + inf.mults.forward) - n_out as u64 * active;
+    }
+    let serve_wall = t1.elapsed().as_secs_f64();
+    let requests = test.xs.len().max(1);
+    let dense_wide_serve = cfg.nodes as u64 * n_in as u64 * requests as u64;
+    let wide_mult_fraction = wide_mults as f64 / dense_wide_serve as f64;
+
+    // Per-shard selection cost in isolation: hash + probe + rank each
+    // shard's frozen tables at the shard's proportional budget share.
+    let model = engine.current();
+    let stack = &model.tables[0];
+    let mut per_shard_select_micros = Vec::new();
+    if let Some(sh) = stack.sharded() {
+        let mut scratch = FrozenQueryScratch::new();
+        let mut out = Vec::new();
+        for (s, shard) in sh.shards().iter().enumerate() {
+            let shard_budget = budget(sh.map().rows_in(s), cfg.sparsity);
+            let t = Instant::now();
+            for x in &test.xs {
+                shard.query(x, shard_budget, &mut scratch, &mut out);
+            }
+            per_shard_select_micros.push(t.elapsed().as_secs_f64() * 1e6 / requests as f64);
+        }
+    } else {
+        // S=1 runs land here: one "shard" = the whole stack.
+        let mut scratch = FrozenQueryScratch::new();
+        let mut out = Vec::new();
+        let single = stack.single().expect("one-shard stack");
+        let full_budget = budget(cfg.nodes, cfg.sparsity);
+        let t = Instant::now();
+        for x in &test.xs {
+            single.query(x, full_budget, &mut scratch, &mut out);
+        }
+        per_shard_select_micros.push(t.elapsed().as_secs_f64() * 1e6 / requests as f64);
+    }
+    let shard_health = stack.health_rows();
+
+    eprintln!("shard-bench: running S=1 parity cross-check ({} nodes)...", cfg.parity_nodes);
+    let s1_parity = s1_parity_check(n_in, cfg.parity_nodes, n_out, 0.05, cfg.seed);
+
+    ShardBenchReport {
+        nodes: cfg.nodes,
+        shards: cfg.shards.max(1),
+        sparsity: cfg.sparsity,
+        n_in,
+        n_out,
+        train_samples: train.len(),
+        epochs: cfg.epochs,
+        train_wall_secs,
+        final_train_acc: record.final_acc(),
+        train_wide_mult_fraction,
+        serve_requests: requests,
+        serve_mean_micros: serve_wall * 1e6 / requests as f64,
+        wide_mult_fraction,
+        mean_active: active_sum as f64 / requests as f64,
+        per_shard_select_micros,
+        shard_health,
+        s1_parity,
+    }
+}
+
+/// Serialize a [`ShardBenchReport`] to the `BENCH_shard.json` schema.
+pub fn write_shard_bench_json(report: &ShardBenchReport, path: &Path) -> io::Result<()> {
+    let mut shard_times = JsonArray::new();
+    for t in &report.per_shard_select_micros {
+        shard_times.push_raw(&format!("{t:.1}"));
+    }
+    let mut health = JsonArray::new();
+    for h in &report.shard_health {
+        health.push_raw(&h.to_json());
+    }
+    let json = JsonObject::new()
+        .str("bench", "shard")
+        .str("dataset", "Amazon670k")
+        .usize("nodes", report.nodes)
+        .usize("shards", report.shards)
+        .fixed("sparsity", report.sparsity as f64, 6)
+        .usize("n_in", report.n_in)
+        .usize("n_out", report.n_out)
+        .usize("train_samples", report.train_samples)
+        .usize("epochs", report.epochs)
+        .fixed("train_wall_secs", report.train_wall_secs, 3)
+        .fixed("final_train_accuracy", report.final_train_acc as f64, 4)
+        .fixed("train_wide_mult_fraction", report.train_wide_mult_fraction, 6)
+        .usize("serve_requests", report.serve_requests)
+        .fixed("serve_mean_micros", report.serve_mean_micros, 1)
+        .fixed("wide_mult_fraction", report.wide_mult_fraction, 6)
+        .fixed("mean_active", report.mean_active, 1)
+        .raw("per_shard_select_micros", &shard_times.finish())
+        .raw("shard_health", &health.finish())
+        .bool("s1_parity", report.s1_parity)
+        .finish()
+        + "\n";
+    std::fs::write(path, json)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn s1_parity_holds_at_bench_shapes() {
+        assert!(s1_parity_check(24, 300, 8, 0.05, 7));
+    }
+
+    #[test]
+    fn tiny_shard_bench_end_to_end() {
+        // A miniature run exercises every measurement path: sharded
+        // training, v-next snapshot serving, per-shard timings, health
+        // rows and the JSON writer.
+        let cfg = ShardBenchConfig {
+            nodes: 600,
+            shards: 3,
+            sparsity: 0.05,
+            train_samples: 96,
+            test_samples: 32,
+            epochs: 1,
+            batch_size: 16,
+            seed: 9,
+            parity_nodes: 200,
+        };
+        let report = run_shard_bench(&cfg);
+        assert_eq!(report.shards, 3);
+        assert_eq!(report.per_shard_select_micros.len(), 3);
+        assert_eq!(report.shard_health.len(), 3);
+        assert_eq!(report.shard_health.iter().map(|h| h.nodes).sum::<usize>(), 600);
+        assert!(report.s1_parity, "S=1 parity must hold");
+        assert!(report.wide_mult_fraction > 0.0);
+        assert!(
+            report.wide_mult_fraction < 1.0,
+            "sparse serving must beat dense: {}",
+            report.wide_mult_fraction
+        );
+        let path = std::env::temp_dir()
+            .join(format!("hashdl_shard_bench_{}.json", std::process::id()));
+        write_shard_bench_json(&report, &path).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert!(body.contains("\"bench\": \"shard\"") || body.contains("\"bench\":\"shard\""));
+        assert!(body.contains("s1_parity"));
+        assert!(body.contains("per_shard_select_micros"));
+    }
+}

@@ -1,5 +1,6 @@
 //! Frozen model snapshots: weights + sampler config + prehashed LSH
-//! tables in one versioned binary file (`HDLMODL4`; v3/v2/v1 still load).
+//! tables in one versioned binary file (`HDLMODL4` for unsharded models,
+//! `HDLMODL5` for sharded ones; v3/v2/v1 still load).
 //!
 //! The paper's serving story needs the hash tables *at* the weights they
 //! were built over — rebuilding them on every process start costs a full
@@ -35,7 +36,7 @@
 use crate::data::io::{
     invalid, read_f32, read_f32s, read_network_body, read_str, read_u32, read_u32s, read_u64,
     write_f32, write_f32s, write_network_body, write_str, write_u32, write_u32s, write_u64,
-    MODEL_MAGIC, SNAPSHOT3_MAGIC, SNAPSHOT4_MAGIC, SNAPSHOT_MAGIC,
+    MODEL_MAGIC, SNAPSHOT3_MAGIC, SNAPSHOT4_MAGIC, SNAPSHOT5_MAGIC, SNAPSHOT_MAGIC,
 };
 use crate::util::bitpack::{
     pack_u32s, packed_words, read_varint, unpack_u32s, unzigzag, write_varint, zigzag,
@@ -44,6 +45,7 @@ use crate::lsh::alsh::AlshMips;
 use crate::lsh::family::LshFamily;
 use crate::lsh::frozen::FrozenLayerTables;
 use crate::lsh::layered::{LayerTables, LshConfig};
+use crate::lsh::sharded::{LayerTableStack, ShardedFrozenTables, ShardedLayerTables};
 use crate::lsh::srp::SrpHash;
 use crate::lsh::table::HashTable;
 use crate::sampling::{Method, SamplerConfig};
@@ -65,9 +67,9 @@ pub struct ModelSnapshot {
     pub sampler: SamplerConfig,
     /// Run seed, kept so table-less files rebuild identically everywhere.
     pub seed: u64,
-    /// One frozen table stack per hidden layer (`None` = not shipped;
-    /// call [`ModelSnapshot::ensure_tables`]).
-    pub tables: Option<Vec<FrozenLayerTables>>,
+    /// One frozen table stack per hidden layer — single or sharded
+    /// (`None` = not shipped; call [`ModelSnapshot::ensure_tables`]).
+    pub tables: Option<Vec<LayerTableStack>>,
 }
 
 impl ModelSnapshot {
@@ -102,10 +104,11 @@ impl ModelSnapshot {
     /// RNG stream derived from the stored seed, so repeated loads of the
     /// same file — on any machine — produce identical projections and
     /// bucket contents.
-    pub fn ensure_tables(&mut self) -> &[FrozenLayerTables] {
+    pub fn ensure_tables(&mut self) -> &[LayerTableStack] {
         if self.tables.is_none() {
             let cfg = self.sampler.lsh;
-            let built: Vec<FrozenLayerTables> = self
+            let shards = self.sampler.shards.max(1);
+            let built: Vec<LayerTableStack> = self
                 .net
                 .layers
                 .iter()
@@ -113,7 +116,15 @@ impl ModelSnapshot {
                 .enumerate()
                 .map(|(l, layer)| {
                     let mut rng = Pcg64::new(self.seed, TABLE_STREAM + l as u64);
-                    FrozenLayerTables::freeze(&LayerTables::build(&layer.w, cfg, &mut rng))
+                    if shards > 1 {
+                        LayerTableStack::Sharded(ShardedFrozenTables::freeze(
+                            &ShardedLayerTables::build(&layer.w, cfg, shards, &mut rng),
+                        ))
+                    } else {
+                        LayerTableStack::Single(FrozenLayerTables::freeze(&LayerTables::build(
+                            &layer.w, cfg, &mut rng,
+                        )))
+                    }
                 })
                 .collect();
             self.tables = Some(built);
@@ -123,12 +134,15 @@ impl ModelSnapshot {
 }
 
 /// On-disk encoding generation. Fingerprints are bit-packed from v3 on;
-/// bucket id lists are delta + varint coded from v4 on.
+/// bucket id lists are delta + varint coded from v4 on; v5 adds sharded
+/// table stacks (per-shard self-contained sections) and the sampler's
+/// shard count, with v4's byte encodings for everything else.
 #[derive(Clone, Copy, PartialEq, Eq)]
 enum SnapFormat {
     V2,
     V3,
     V4,
+    V5,
 }
 
 impl SnapFormat {
@@ -137,6 +151,7 @@ impl SnapFormat {
             SnapFormat::V2 => SNAPSHOT_MAGIC,
             SnapFormat::V3 => SNAPSHOT3_MAGIC,
             SnapFormat::V4 => SNAPSHOT4_MAGIC,
+            SnapFormat::V5 => SNAPSHOT5_MAGIC,
         }
     }
 
@@ -145,7 +160,14 @@ impl SnapFormat {
     }
 
     fn delta_buckets(self) -> bool {
-        matches!(self, SnapFormat::V4)
+        matches!(self, SnapFormat::V4 | SnapFormat::V5)
+    }
+
+    /// v5 additions: u32 shard count in the sampler section, and a u32
+    /// shard count in front of every table set (whose shards are then
+    /// written as ordinary self-contained table sections).
+    fn sharded(self) -> bool {
+        matches!(self, SnapFormat::V5)
     }
 }
 
@@ -172,8 +194,20 @@ impl SnapFormat {
 /// v3 (`HDLMODL3`) stores each bucket as `u32 len, u32s ids`; v2
 /// (`HDLMODL2`) additionally stores each fingerprint as a full `u32`
 /// (with `u32::MAX` = absent) instead of the bitmap + packed pair.
+///
+/// Sharded models (any table stack with more than one shard, or a
+/// sampler shard count above 1) are written as v5 (`HDLMODL5`): the v4
+/// encodings plus `u32 shards` in the sampler section and, per table
+/// set, a `u32` shard count followed by one self-contained table section
+/// per shard — so a shard can be decoded without touching its siblings.
+/// Unsharded models keep writing byte-identical v4 files.
 pub fn save_snapshot(snap: &ModelSnapshot, path: &Path) -> io::Result<()> {
-    save_snapshot_versioned(snap, path, SnapFormat::V4)
+    let sharded = snap.sampler.shards > 1
+        || snap
+            .tables
+            .as_ref()
+            .map_or(false, |sets| sets.iter().any(|t| t.shard_count() > 1));
+    save_snapshot_versioned(snap, path, if sharded { SnapFormat::V5 } else { SnapFormat::V4 })
 }
 
 /// Write the v3 (packed fingerprints, raw bucket ids) encoding — kept for
@@ -202,17 +236,45 @@ fn save_snapshot_versioned(snap: &ModelSnapshot, path: &Path, fmt: SnapFormat) -
     write_u32(&mut w, s.lsh.rerank_factor as u32)?;
     write_f32(&mut w, s.lsh.rehash_probability)?;
     write_u32(&mut w, s.rebuild_every_epochs as u32)?;
+    if fmt.sharded() {
+        write_u32(&mut w, s.shards.max(1) as u32)?;
+    }
     write_u64(&mut w, snap.seed)?;
     match &snap.tables {
         None => write_u32(&mut w, 0)?,
         Some(sets) => {
             write_u32(&mut w, sets.len() as u32)?;
             for t in sets {
-                write_table_set(&mut w, t, fmt)?;
+                write_table_stack(&mut w, t, fmt)?;
             }
         }
     }
     Ok(())
+}
+
+/// Write one per-layer table stack. Pre-v5 formats can only represent a
+/// single stack; asking them to serialize a sharded model is an error
+/// (the default writer picks v5 for those).
+fn write_table_stack(w: &mut impl Write, t: &LayerTableStack, fmt: SnapFormat) -> io::Result<()> {
+    if !fmt.sharded() {
+        let single = t
+            .single()
+            .ok_or_else(|| invalid("sharded table stacks need the v5 snapshot format"))?;
+        return write_table_set(w, single, fmt);
+    }
+    match t {
+        LayerTableStack::Single(set) => {
+            write_u32(w, 1)?;
+            write_table_set(w, set, fmt)
+        }
+        LayerTableStack::Sharded(stack) => {
+            write_u32(w, stack.shard_count() as u32)?;
+            for set in stack.shards() {
+                write_table_set(w, set, fmt)?;
+            }
+            Ok(())
+        }
+    }
 }
 
 fn write_table_set(w: &mut impl Write, t: &FrozenLayerTables, fmt: SnapFormat) -> io::Result<()> {
@@ -363,6 +425,7 @@ pub fn load_snapshot(path: &Path) -> io::Result<ModelSnapshot> {
         return Ok(ModelSnapshot::without_tables(net, SamplerConfig::default(), 42));
     }
     let fmt = match &magic {
+        m if m == SNAPSHOT5_MAGIC => SnapFormat::V5,
         m if m == SNAPSHOT4_MAGIC => SnapFormat::V4,
         m if m == SNAPSHOT3_MAGIC => SnapFormat::V3,
         m if m == SNAPSHOT_MAGIC => SnapFormat::V2,
@@ -383,11 +446,13 @@ pub fn load_snapshot(path: &Path) -> io::Result<ModelSnapshot> {
         return Err(invalid(format!("snapshot LSH config K={} L={} out of range", lsh.k, lsh.l)));
     }
     let rebuild_every_epochs = read_u32(&mut r)? as usize;
+    let shards = if fmt.sharded() { (read_u32(&mut r)? as usize).max(1) } else { 1 };
     let sampler = SamplerConfig {
         method,
         sparsity,
         lsh,
         rebuild_every_epochs,
+        shards,
         ..SamplerConfig::default()
     };
     let seed = read_u64(&mut r)?;
@@ -403,15 +468,34 @@ pub fn load_snapshot(path: &Path) -> io::Result<ModelSnapshot> {
         }
         let mut sets = Vec::with_capacity(n_sets);
         for l in 0..n_sets {
-            let set = read_table_set(&mut r, lsh, fmt)?;
-            if set.n_nodes() != net.layers[l].n_out() {
+            let stack = if fmt.sharded() {
+                let shard_count = read_u32(&mut r)? as usize;
+                if shard_count == 0 {
+                    return Err(invalid(format!("table set {l} has zero shards")));
+                }
+                if shard_count == 1 {
+                    LayerTableStack::Single(read_table_set(&mut r, lsh, fmt)?)
+                } else {
+                    let mut parts = Vec::with_capacity(shard_count);
+                    for _ in 0..shard_count {
+                        parts.push(read_table_set(&mut r, lsh, fmt)?);
+                    }
+                    let total: usize = parts.iter().map(|p| p.n_nodes()).sum();
+                    LayerTableStack::Sharded(
+                        ShardedFrozenTables::from_parts(parts, total).map_err(invalid)?,
+                    )
+                }
+            } else {
+                LayerTableStack::Single(read_table_set(&mut r, lsh, fmt)?)
+            };
+            if stack.n_nodes() != net.layers[l].n_out() {
                 return Err(invalid(format!(
                     "table set {l} covers {} nodes, layer has {}",
-                    set.n_nodes(),
+                    stack.n_nodes(),
                     net.layers[l].n_out()
                 )));
             }
-            sets.push(set);
+            sets.push(stack);
         }
         Some(sets)
     };
@@ -450,6 +534,7 @@ mod tests {
         let (ta, tb) = (back.tables.as_ref().unwrap(), snap.tables.as_ref().unwrap());
         assert_eq!(ta.len(), tb.len());
         for (a, b) in ta.iter().zip(tb.iter()) {
+            let (a, b) = (a.single().unwrap(), b.single().unwrap());
             assert_eq!(a.tables(), b.tables(), "bucket contents must round-trip bitwise");
             assert_eq!(a.family().max_norm(), b.family().max_norm());
             assert_eq!(
@@ -468,6 +553,7 @@ mod tests {
         a.ensure_tables();
         b.ensure_tables();
         for (x, y) in a.tables.as_ref().unwrap().iter().zip(b.tables.as_ref().unwrap()) {
+            let (x, y) = (x.single().unwrap(), y.single().unwrap());
             assert_eq!(x.tables(), y.tables());
             assert_eq!(x.family().srp().projections(), y.family().srp().projections());
         }
@@ -518,6 +604,7 @@ mod tests {
         // Bitwise-identical tables through both formats.
         let (b2, b3) = (load_snapshot(&p2).unwrap(), load_snapshot(&p3).unwrap());
         for (a, b) in b2.tables.as_ref().unwrap().iter().zip(b3.tables.as_ref().unwrap()) {
+            let (a, b) = (a.single().unwrap(), b.single().unwrap());
             assert_eq!(a.tables(), b.tables(), "packed fingerprints must round-trip bitwise");
             assert_eq!(a.family().srp().projections(), b.family().srp().projections());
         }
@@ -564,6 +651,7 @@ mod tests {
         // *order* included (HashTable derives PartialEq over ordered ids).
         let (b3, b4) = (load_snapshot(&p3).unwrap(), load_snapshot(&p4).unwrap());
         for (a, b) in b3.tables.as_ref().unwrap().iter().zip(b4.tables.as_ref().unwrap()) {
+            let (a, b) = (a.single().unwrap(), b.single().unwrap());
             assert_eq!(a.tables(), b.tables(), "delta coding must round-trip bitwise");
             assert_eq!(a.family().srp().projections(), b.family().srp().projections());
         }
@@ -575,7 +663,7 @@ mod tests {
             .as_ref()
             .unwrap()
             .iter()
-            .flat_map(|set| set.tables())
+            .flat_map(|set| set.single().unwrap().tables())
             .flat_map(|table| table.buckets())
             .map(|bucket| {
                 let v3_bytes = 4 + 4 * bucket.len() as u64;
@@ -596,5 +684,76 @@ mod tests {
         assert_eq!(s3 - s4, expected_saving, "v3 {s3} vs v4 {s4}");
         std::fs::remove_file(p3).ok();
         std::fs::remove_file(p4).ok();
+    }
+
+    fn magic_of(path: &std::path::Path) -> [u8; 8] {
+        let bytes = std::fs::read(path).unwrap();
+        bytes[..8].try_into().unwrap()
+    }
+
+    #[test]
+    fn unsharded_default_writer_still_emits_v4() {
+        // The exact-byte-size pinning tests above depend on unsharded
+        // models keeping the v4 encoding; only sharded models get v5.
+        let mut snap = ModelSnapshot::without_tables(tiny_net(10), SamplerConfig::default(), 3);
+        snap.ensure_tables();
+        let path = tmp("still_v4");
+        save_snapshot(&snap, &path).unwrap();
+        assert_eq!(&magic_of(&path), b"HDLMODL4");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn v5_sharded_snapshot_roundtrips_per_shard_tables_bitwise() {
+        let sampler = SamplerConfig { shards: 4, ..SamplerConfig::default() };
+        let mut snap = ModelSnapshot::without_tables(tiny_net(11), sampler, 17);
+        snap.ensure_tables();
+        let path = tmp("v5_rt");
+        save_snapshot(&snap, &path).unwrap();
+        assert_eq!(&magic_of(&path), b"HDLMODL5");
+        let back = load_snapshot(&path).unwrap();
+        assert_eq!(back.sampler.shards, 4);
+        assert_eq!(back.seed, 17);
+        let (ta, tb) = (back.tables.as_ref().unwrap(), snap.tables.as_ref().unwrap());
+        assert_eq!(ta.len(), tb.len());
+        for (a, b) in ta.iter().zip(tb.iter()) {
+            let (a, b) = (a.sharded().unwrap(), b.sharded().unwrap());
+            assert_eq!(a.shard_count(), 4);
+            assert_eq!(a.map(), b.map());
+            for (x, y) in a.shards().iter().zip(b.shards()) {
+                assert_eq!(x.tables(), y.tables(), "per-shard buckets must round-trip bitwise");
+                assert_eq!(x.family().max_norm(), y.family().max_norm());
+                assert_eq!(x.family().srp().projections(), y.family().srp().projections());
+            }
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn pre_v5_writers_reject_sharded_stacks() {
+        let sampler = SamplerConfig { shards: 2, ..SamplerConfig::default() };
+        let mut snap = ModelSnapshot::without_tables(tiny_net(12), sampler, 19);
+        snap.ensure_tables();
+        let path = tmp("v3_sharded");
+        let err = save_snapshot_v3(&snap, &path).unwrap_err();
+        assert!(err.to_string().contains("v5"), "{err}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn v5_sharded_snapshot_loads_through_plain_load_network() {
+        // Weight-only readers keep working on v5 files: the network body
+        // still sits right after the magic.
+        let sampler = SamplerConfig { shards: 3, ..SamplerConfig::default() };
+        let mut snap = ModelSnapshot::without_tables(tiny_net(13), sampler, 23);
+        snap.ensure_tables();
+        let path = tmp("v5_weights");
+        save_snapshot(&snap, &path).unwrap();
+        let net = crate::data::io::load_network(&path).unwrap();
+        for (a, b) in net.layers.iter().zip(&snap.net.layers) {
+            assert_eq!(a.w, b.w);
+            assert_eq!(a.b, b.b);
+        }
+        std::fs::remove_file(path).ok();
     }
 }

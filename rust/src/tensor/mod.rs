@@ -6,8 +6,10 @@ pub mod aligned;
 pub mod batch;
 pub mod kernels;
 pub mod matrix;
+pub mod sharded;
 pub mod vecops;
 
 pub use aligned::AVec;
 pub use batch::{Batch, BatchPlane};
 pub use matrix::Matrix;
+pub use sharded::{ShardMap, ShardedPlane};

@@ -1,0 +1,244 @@
+//! Sharded weight planes for extreme-classification layers.
+//!
+//! A wide layer (10⁵–10⁶ output nodes) is split across `S` sub-planes so
+//! that per-shard LSH tables index a cache-resident slice of the layer and
+//! shard owners (ASGD workers, the publisher, the rebuild cadence) touch
+//! non-overlapping memory. The mapping is the simplest one that keeps a
+//! shard contiguous in node-id space: rows are dealt in blocks of
+//! `ceil(n / S)`, so global id `g` lives in shard `g / rows_per_shard` at
+//! local row `g % rows_per_shard`. Block layout (rather than round-robin)
+//! means a shard's id range is an interval — merging per-shard candidate
+//! lists back to global ids is a single offset add, and per-shard health
+//! rows slice the global activation counters by range.
+
+use crate::tensor::matrix::Matrix;
+
+/// Global-id ↔ (shard, local-row) mapping for one sharded layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardMap {
+    n_rows: usize,
+    shards: usize,
+    rows_per_shard: usize,
+}
+
+impl ShardMap {
+    /// A map of `n_rows` rows over `shards` block-contiguous shards.
+    /// `shards` is clamped to `[1, n_rows.max(1)]` — more shards than rows
+    /// would create empty shards with nothing to own.
+    pub fn new(n_rows: usize, shards: usize) -> Self {
+        let shards = shards.clamp(1, n_rows.max(1));
+        ShardMap { n_rows, shards, rows_per_shard: n_rows.div_ceil(shards) }
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// First global row id owned by shard `s`.
+    #[inline]
+    pub fn base(&self, s: usize) -> usize {
+        debug_assert!(s < self.shards);
+        (s * self.rows_per_shard).min(self.n_rows)
+    }
+
+    /// Number of rows shard `s` owns (the last shard takes the remainder).
+    #[inline]
+    pub fn rows_in(&self, s: usize) -> usize {
+        debug_assert!(s < self.shards);
+        self.n_rows.min((s + 1) * self.rows_per_shard) - self.base(s)
+    }
+
+    /// Which shard owns global row `g`.
+    #[inline]
+    pub fn shard_of(&self, g: usize) -> usize {
+        debug_assert!(g < self.n_rows);
+        g / self.rows_per_shard
+    }
+
+    /// (shard, local-row) of global row `g`.
+    #[inline]
+    pub fn locate(&self, g: usize) -> (usize, usize) {
+        (g / self.rows_per_shard, g % self.rows_per_shard)
+    }
+
+    /// Global id range `[base, base + rows_in)` owned by shard `s`.
+    pub fn range(&self, s: usize) -> std::ops::Range<usize> {
+        self.base(s)..self.base(s) + self.rows_in(s)
+    }
+}
+
+/// `S` independent row-major planes mirroring one wide layer's weight
+/// matrix, one [`Matrix`] (32-byte-aligned `AVec` storage) per shard.
+///
+/// The forward/backward paths keep indexing the layer's own contiguous
+/// `Layer::w` by global id; the sharded plane is the *LSH-side* copy the
+/// per-shard tables are built from and rehashed against, synced row-wise
+/// from the layer after each gradient update (the trainer already hands
+/// the selector the exact touched union per batch, so a sync is a
+/// cache-friendly copy of just-touched rows). Keeping the copy per shard —
+/// instead of handing every shard the whole layer — is what makes shard
+/// ownership disjoint in memory: a shard's rebuild, rehash and probe
+/// traffic never touches another shard's plane.
+#[derive(Clone, Debug)]
+pub struct ShardedPlane {
+    map: ShardMap,
+    planes: Vec<Matrix>,
+}
+
+impl ShardedPlane {
+    /// Split `src` (row per node) into `shards` block-contiguous planes.
+    pub fn from_matrix(src: &Matrix, shards: usize) -> Self {
+        let map = ShardMap::new(src.rows(), shards);
+        let planes = (0..map.shards())
+            .map(|s| {
+                let mut m = Matrix::zeros(map.rows_in(s), src.cols());
+                for local in 0..map.rows_in(s) {
+                    m.row_mut(local).copy_from_slice(src.row(map.base(s) + local));
+                }
+                m
+            })
+            .collect();
+        ShardedPlane { map, planes }
+    }
+
+    pub fn map(&self) -> &ShardMap {
+        &self.map
+    }
+
+    pub fn shards(&self) -> usize {
+        self.map.shards()
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.map.n_rows()
+    }
+
+    pub fn cols(&self) -> usize {
+        self.planes.first().map_or(0, |p| p.cols())
+    }
+
+    /// Shard `s`'s plane (rows indexed by local id).
+    pub fn plane(&self, s: usize) -> &Matrix {
+        &self.planes[s]
+    }
+
+    /// Row of global id `g`.
+    #[inline]
+    pub fn row(&self, g: usize) -> &[f32] {
+        let (s, local) = self.map.locate(g);
+        self.planes[s].row(local)
+    }
+
+    /// Re-copy the listed global rows from `src` (the layer's live weight
+    /// matrix) into their owning shard planes.
+    pub fn sync_rows(&mut self, src: &Matrix, ids: &[u32]) {
+        debug_assert_eq!(src.rows(), self.map.n_rows());
+        for &g in ids {
+            let (s, local) = self.map.locate(g as usize);
+            self.planes[s].row_mut(local).copy_from_slice(src.row(g as usize));
+        }
+    }
+
+    /// Re-copy every row shard `s` owns from `src` (rebuild preamble — the
+    /// shard must be exact before its tables are rebuilt from it).
+    pub fn sync_shard(&mut self, src: &Matrix, s: usize) {
+        debug_assert_eq!(src.rows(), self.map.n_rows());
+        let base = self.map.base(s);
+        for local in 0..self.map.rows_in(s) {
+            self.planes[s].row_mut(local).copy_from_slice(src.row(base + local));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_blocks_cover_all_rows_exactly_once() {
+        for (n, s) in [(10, 3), (12, 4), (1, 1), (7, 7), (100, 1), (5, 8)] {
+            let m = ShardMap::new(n, s);
+            let mut seen = vec![0u32; n];
+            for shard in 0..m.shards() {
+                assert_eq!(m.base(shard) + m.rows_in(shard) - m.rows_in(shard), m.base(shard));
+                for g in m.range(shard) {
+                    assert_eq!(m.shard_of(g), shard, "n={n} s={s} g={g}");
+                    assert_eq!(m.locate(g), (shard, g - m.base(shard)));
+                    seen[g] += 1;
+                }
+            }
+            assert!(seen.iter().all(|&c| c == 1), "n={n} s={s}: {seen:?}");
+        }
+    }
+
+    #[test]
+    fn map_clamps_excess_shards() {
+        let m = ShardMap::new(3, 10);
+        assert_eq!(m.shards(), 3);
+        assert_eq!((0..3).map(|s| m.rows_in(s)).sum::<usize>(), 3);
+        assert_eq!(ShardMap::new(0, 4).shards(), 1);
+    }
+
+    #[test]
+    fn single_shard_is_the_identity_map() {
+        let m = ShardMap::new(17, 1);
+        assert_eq!(m.shards(), 1);
+        assert_eq!(m.base(0), 0);
+        assert_eq!(m.rows_in(0), 17);
+        for g in 0..17 {
+            assert_eq!(m.locate(g), (0, g));
+        }
+    }
+
+    #[test]
+    fn plane_rows_match_source_by_global_id() {
+        let src = Matrix::from_fn(11, 4, |r, c| (r * 10 + c) as f32);
+        let p = ShardedPlane::from_matrix(&src, 3);
+        assert_eq!(p.shards(), 3);
+        assert_eq!(p.n_rows(), 11);
+        for g in 0..11 {
+            assert_eq!(p.row(g), src.row(g), "row {g}");
+        }
+        // Shard planes partition the rows: 4 + 4 + 3.
+        assert_eq!(p.plane(0).rows(), 4);
+        assert_eq!(p.plane(1).rows(), 4);
+        assert_eq!(p.plane(2).rows(), 3);
+    }
+
+    #[test]
+    fn single_shard_plane_equals_source() {
+        let src = Matrix::from_fn(6, 3, |r, c| (r + c) as f32 * 0.5);
+        let p = ShardedPlane::from_matrix(&src, 1);
+        assert_eq!(p.plane(0), &src, "S=1 shard 0 must be a faithful copy");
+    }
+
+    #[test]
+    fn sync_rows_tracks_source_updates() {
+        let mut src = Matrix::from_fn(9, 2, |r, c| (r + c) as f32);
+        let mut p = ShardedPlane::from_matrix(&src, 2);
+        src.row_mut(0)[1] = 42.0;
+        src.row_mut(7)[0] = -7.0;
+        assert_ne!(p.row(7), src.row(7), "stale before sync");
+        p.sync_rows(&src, &[0, 7]);
+        for g in 0..9 {
+            assert_eq!(p.row(g), src.row(g), "row {g}");
+        }
+    }
+
+    #[test]
+    fn sync_shard_refreshes_the_whole_block() {
+        let mut src = Matrix::from_fn(8, 2, |r, c| (r * 2 + c) as f32);
+        let mut p = ShardedPlane::from_matrix(&src, 2);
+        for r in 4..8 {
+            src.row_mut(r)[0] *= -1.0;
+        }
+        p.sync_shard(&src, 1);
+        for g in 0..8 {
+            assert_eq!(p.row(g), src.row(g), "row {g}");
+        }
+    }
+}

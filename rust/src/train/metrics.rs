@@ -22,11 +22,19 @@ impl MultCounters {
         self.forward + self.backward + self.selection + self.update
     }
 
+    /// Accumulate another counter set. At extreme-classification scale
+    /// (1M-node wide layers × millions of samples) these run into the
+    /// 1e19 range, so overflow is a real failure mode, not a theoretical
+    /// one — debug builds trap it instead of silently wrapping.
     pub fn add(&mut self, other: &MultCounters) {
-        self.forward += other.forward;
-        self.backward += other.backward;
-        self.selection += other.selection;
-        self.update += other.update;
+        let acc = |a: u64, b: u64| {
+            debug_assert!(a.checked_add(b).is_some(), "MultCounters overflow: {a} + {b}");
+            a.wrapping_add(b)
+        };
+        self.forward = acc(self.forward, other.forward);
+        self.backward = acc(self.backward, other.backward);
+        self.selection = acc(self.selection, other.selection);
+        self.update = acc(self.update, other.update);
     }
 }
 

@@ -21,7 +21,7 @@
 
 use crate::data::dataset::Dataset;
 use crate::exec::SparseBatchPlan;
-use crate::lsh::frozen::FrozenLayerTables;
+use crate::lsh::sharded::LayerTableStack;
 use crate::nn::layer::Layer;
 use crate::nn::loss::softmax_xent_grad;
 use crate::nn::network::Network;
@@ -644,10 +644,7 @@ fn freeze_model_parts(
     selectors: &[Box<dyn NodeSelector>],
     sampler: &SamplerConfig,
 ) -> Option<ModelParts> {
-    let frozen: Vec<FrozenLayerTables> = selectors
-        .iter()
-        .filter_map(|s| s.lsh_tables().map(FrozenLayerTables::freeze))
-        .collect();
+    let frozen: Vec<LayerTableStack> = selectors.iter().filter_map(|s| s.frozen_stack()).collect();
     (frozen.len() == net.n_hidden()).then(|| ModelParts {
         net: net.clone(),
         tables: frozen,
@@ -753,11 +750,8 @@ impl Trainer {
     /// [`crate::serve::ModelSnapshot::ensure_tables`] rebuilds
     /// deterministically from the weights on load.
     pub fn snapshot(&self) -> crate::serve::ModelSnapshot {
-        let frozen: Vec<crate::lsh::frozen::FrozenLayerTables> = self
-            .selectors
-            .iter()
-            .filter_map(|s| s.lsh_tables().map(crate::lsh::frozen::FrozenLayerTables::freeze))
-            .collect();
+        let frozen: Vec<LayerTableStack> =
+            self.selectors.iter().filter_map(|s| s.frozen_stack()).collect();
         crate::serve::ModelSnapshot {
             net: self.net.clone(),
             sampler: self.cfg.sampler,
@@ -814,13 +808,12 @@ impl Trainer {
         }
         // Table health right after maintenance: occupancy reflects the
         // freshly rebuilt buckets, activation counters cover the epoch.
-        let health: Vec<TableHealth> = self
-            .selectors
-            .iter()
-            .filter_map(|s| s.lsh_tables().map(|t| t.health_snapshot()))
-            .collect();
-        if health.len() == self.net.n_hidden() {
-            self.health_log.push(health);
+        // Unsharded selectors contribute exactly one row per layer (the
+        // historical shape); sharded selectors contribute one per shard.
+        let per_layer: Vec<Vec<TableHealth>> =
+            self.selectors.iter().map(|s| s.health_rows()).collect();
+        if per_layer.len() == self.net.n_hidden() && per_layer.iter().all(|r| !r.is_empty()) {
+            self.health_log.push(per_layer.into_iter().flatten().collect());
         }
         // Epoch-boundary publication ships the freshly rebuilt tables.
         if let Some(hook) = self.hook.as_mut() {
@@ -989,7 +982,8 @@ mod tests {
         for (l, ft) in tables.iter().enumerate() {
             assert_eq!(ft.n_nodes(), snap.net.layers[l].n_out());
             // The frozen buckets are the live selector's buckets.
-            assert_eq!(ft.tables(), t.selectors[l].lsh_tables().unwrap().tables());
+            let single = ft.single().expect("unsharded trainer ships single stacks");
+            assert_eq!(single.tables(), t.selectors[l].lsh_tables().unwrap().tables());
         }
         let mut t2 = Trainer::new(
             net(16, 32),
@@ -1035,7 +1029,8 @@ mod tests {
         // buckets as the live selectors, weights serve identically.
         let current = reader.current();
         for (l, ft) in current.tables.iter().enumerate() {
-            assert_eq!(ft.tables(), t.selectors[l].lsh_tables().unwrap().tables());
+            let single = ft.single().expect("unsharded trainer ships single stacks");
+            assert_eq!(single.tables(), t.selectors[l].lsh_tables().unwrap().tables());
         }
         let engine = SparseInferenceEngine::live(reader);
         let mut ws = InferenceWorkspace::new(&engine);

@@ -15,6 +15,7 @@
 
 use hashdl::lsh::frozen::FrozenLayerTables;
 use hashdl::lsh::layered::{LayerTables, LshConfig};
+use hashdl::lsh::sharded::LayerTableStack;
 use hashdl::nn::activation::Activation;
 use hashdl::nn::network::{Network, NetworkConfig};
 use hashdl::publish::{ModelParts, TablePublisher};
@@ -39,14 +40,16 @@ fn version_parts(v: u64) -> ModelParts {
     let cfg = NetworkConfig { n_in: 12, hidden: vec![40, 40], n_out: 3, act: Activation::ReLU };
     let net = Network::new(&cfg, &mut Pcg64::seeded(SEED ^ (v << 8)));
     let lsh = LshConfig { k: 5, l: 4, ..Default::default() };
-    let tables: Vec<FrozenLayerTables> = net
+    let tables: Vec<LayerTableStack> = net
         .layers
         .iter()
         .take(net.n_hidden())
         .enumerate()
         .map(|(l, layer)| {
             let mut rng = Pcg64::new(SEED ^ (v << 8), 0x7AB + l as u64);
-            FrozenLayerTables::freeze(&LayerTables::build(&layer.w, lsh, &mut rng))
+            LayerTableStack::Single(FrozenLayerTables::freeze(&LayerTables::build(
+                &layer.w, lsh, &mut rng,
+            )))
         })
         .collect();
     ModelParts { net, tables, sparsity: 0.25, rerank_factor: 0 }

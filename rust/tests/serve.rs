@@ -87,7 +87,8 @@ fn snapshot_roundtrip_is_bitwise_identical() {
     // Tables: identical bucket contents, fingerprints and projections.
     let (ta, tb) = (back.tables.as_ref().unwrap(), snap.tables.as_ref().unwrap());
     assert_eq!(ta.len(), tb.len());
-    for (a, b) in ta.iter().zip(tb.iter()) {
+    for (sa, sb) in ta.iter().zip(tb.iter()) {
+        let (a, b) = (sa.single().unwrap(), sb.single().unwrap());
         assert_eq!(a.tables(), b.tables(), "bucket contents must be identical");
         assert_eq!(a.family().max_norm(), b.family().max_norm());
         assert_eq!(a.family().srp().projections(), b.family().srp().projections());
@@ -203,7 +204,8 @@ fn legacy_model_bin_still_loads_and_rebuilds_deterministically() {
     // ...and table rebuild is deterministic across loads.
     s1.ensure_tables();
     s2.ensure_tables();
-    for (a, b) in s1.tables.as_ref().unwrap().iter().zip(s2.tables.as_ref().unwrap()) {
+    for (sa, sb) in s1.tables.as_ref().unwrap().iter().zip(s2.tables.as_ref().unwrap()) {
+        let (a, b) = (sa.single().unwrap(), sb.single().unwrap());
         assert_eq!(a.tables(), b.tables(), "rebuilt buckets must be identical");
         assert_eq!(a.family().srp().projections(), b.family().srp().projections());
     }
@@ -316,7 +318,8 @@ fn asgd_snapshot_ships_rebuilt_tables() {
     // The rebuild is the deterministic recipe: a second rebuild from the
     // same weights + seed produces identical buckets.
     let again = ModelSnapshot::with_rebuilt_tables(snap.net.clone(), sampler, 41);
-    for (a, b) in tables.iter().zip(again.tables.as_ref().unwrap()) {
+    for (sa, sb) in tables.iter().zip(again.tables.as_ref().unwrap()) {
+        let (a, b) = (sa.single().unwrap(), sb.single().unwrap());
         assert_eq!(a.tables(), b.tables());
         assert_eq!(a.family().srp().projections(), b.family().srp().projections());
     }
@@ -325,7 +328,8 @@ fn asgd_snapshot_ships_rebuilt_tables() {
     save_snapshot(&snap, &path).unwrap();
     let back = load_snapshot(&path).unwrap();
     let bt = back.tables.as_ref().expect("tables survive the file");
-    for (a, b) in tables.iter().zip(bt) {
+    for (sa, sb) in tables.iter().zip(bt) {
+        let (a, b) = (sa.single().unwrap(), sb.single().unwrap());
         assert_eq!(a.tables(), b.tables(), "trained-weight tables must ship bitwise");
     }
     std::fs::remove_file(path).ok();

@@ -1,0 +1,317 @@
+//! Sharded wide-layer contracts (ISSUE 8 satellite).
+//!
+//! Three guarantees pin the sharded selection path to the classic one:
+//!
+//! 1. **S=1 parity** — `ShardedLshSelector` at one shard is bit-for-bit
+//!    the unsharded `LshSelector`: same selections at the same cost, same
+//!    serving logits through the frozen engines, and — driving the real
+//!    `train_batch` step with injected selectors — identical weights
+//!    after N epochs of training.
+//! 2. **Determinism under ASGD** — the Hogwild engine with sharded
+//!    selectors (S ∈ {2, 4}) reproduces bitwise across repeat runs on one
+//!    worker (multi-worker Hogwild races by design, so the multi-thread
+//!    check asserts structure + the rebuild-from-shared-weights
+//!    determinism that epoch boundaries rely on).
+//! 3. **v5 snapshot round-trip** — a sharded trainer snapshot writes the
+//!    `HDLMODL5` format and loads back with every shard's buckets,
+//!    projections and row map bitwise intact.
+
+use hashdl::data::dataset::Dataset;
+use hashdl::lsh::sharded::ShardedLayerTables;
+use hashdl::lsh::{FrozenLayerTables, LshConfig};
+use hashdl::nn::activation::Activation;
+use hashdl::nn::network::{Network, NetworkConfig};
+use hashdl::nn::LayerInput;
+use hashdl::optim::{OptimConfig, Optimizer};
+use hashdl::publish::ModelParts;
+use hashdl::sampling::lsh_select::LshSelector;
+use hashdl::sampling::sharded_select::ShardedLshSelector;
+use hashdl::sampling::{NodeSelector, SamplerConfig};
+use hashdl::serve::{load_snapshot, save_snapshot, InferenceWorkspace, SparseInferenceEngine};
+use hashdl::train::{run_asgd, train_batch, AsgdConfig, BatchWorkspace, TrainConfig, Trainer};
+use hashdl::util::rng::Pcg64;
+use std::io::Read;
+use std::path::PathBuf;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("hashdl_sharding_{name}_{}.bin", std::process::id()))
+}
+
+/// Deterministic dense inputs (no RNG so both sides of every parity pair
+/// see literally the same bytes).
+fn queries(n: usize, dim: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|i| (0..dim).map(|j| ((i * 31 + j * 7) as f32 * 0.37).sin()).collect())
+        .collect()
+}
+
+fn dataset(name: &str, n: usize, dim: usize, n_classes: usize) -> Dataset {
+    let mut d = Dataset::new(name, dim, n_classes);
+    d.xs = queries(n, dim);
+    d.ys = (0..n).map(|i| (i % n_classes) as u32).collect();
+    d
+}
+
+fn assert_nets_bitwise_equal(a: &Network, b: &Network, what: &str) {
+    assert_eq!(a.layers.len(), b.layers.len(), "{what}: layer count");
+    for (l, (la, lb)) in a.layers.iter().zip(&b.layers).enumerate() {
+        assert_eq!(la.w, lb.w, "{what}: layer {l} weights must be bitwise equal");
+        assert_eq!(la.b, lb.b, "{what}: layer {l} biases must be bitwise equal");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 1a. S=1 parity: selection + frozen-engine logits
+// ---------------------------------------------------------------------------
+
+#[test]
+fn s1_selection_and_logits_match_unsharded() {
+    let cfg = NetworkConfig { n_in: 20, hidden: vec![240], n_out: 8, act: Activation::ReLU };
+    let net = Network::new(&cfg, &mut Pcg64::seeded(20260807));
+    let lsh = LshConfig::default();
+    let sparsity = 0.05;
+
+    // Identical RNG streams into both constructors: the S=1 sharded
+    // selector must consume the stream exactly like the classic one.
+    let mut ra = Pcg64::new(9, 0xC0FFEE);
+    let mut rb = ra.clone();
+    let mut plain = LshSelector::new(&net.layers[0], lsh, sparsity, 1, &mut ra);
+    let mut sharded = ShardedLshSelector::new(&net.layers[0], lsh, 1, sparsity, 1, &mut rb);
+
+    let xs = queries(12, cfg.n_in);
+    let inputs: Vec<LayerInput<'_>> = xs.iter().map(|x| LayerInput::Dense(x)).collect();
+    let mut outs_a: Vec<Vec<u32>> = vec![Vec::new(); xs.len()];
+    let mut outs_b: Vec<Vec<u32>> = vec![Vec::new(); xs.len()];
+
+    let mut sra = Pcg64::new(3, 0x5E1EC7);
+    let mut srb = sra.clone();
+    let ca = plain.select_batch(&net.layers[0], &inputs, &mut sra, &mut outs_a);
+    let cb = sharded.select_batch(&net.layers[0], &inputs, &mut srb, &mut outs_b);
+    assert_eq!(outs_a, outs_b, "S=1 sharded selection must equal unsharded");
+    assert_eq!(ca.selection_mults, cb.selection_mults, "selection cost must match at S=1");
+
+    // Epoch-boundary rebuild keeps the two streams locked together.
+    plain.on_epoch_end(&net.layers[0], 0, &mut sra);
+    sharded.on_epoch_end(&net.layers[0], 0, &mut srb);
+    let ca = plain.select_batch(&net.layers[0], &inputs, &mut sra, &mut outs_a);
+    let cb = sharded.select_batch(&net.layers[0], &inputs, &mut srb, &mut outs_b);
+    assert_eq!(outs_a, outs_b, "post-rebuild S=1 selection must equal unsharded");
+    assert_eq!(ca.selection_mults, cb.selection_mults);
+
+    // Frozen serving: Single stack vs Sharded(S=1) stack answer requests
+    // with identical predictions, logits and mult accounting.
+    let parts = |stack| ModelParts {
+        net: net.clone(),
+        tables: vec![stack],
+        sparsity,
+        rerank_factor: lsh.rerank_factor,
+    };
+    let ea = SparseInferenceEngine::frozen(parts(plain.frozen_stack().unwrap()));
+    let eb = SparseInferenceEngine::frozen(parts(sharded.frozen_stack().unwrap()));
+    let mut wa = InferenceWorkspace::new(&ea);
+    let mut wb = InferenceWorkspace::new(&eb);
+    for x in &xs {
+        let ia = ea.infer(x, &mut wa);
+        let ib = eb.infer(x, &mut wb);
+        assert_eq!(ia.pred, ib.pred, "S=1 frozen prediction parity");
+        assert_eq!(wa.logits, wb.logits, "S=1 frozen logits must be bitwise equal");
+        assert_eq!(ia.mults.total(), ib.mults.total(), "S=1 frozen mult accounting parity");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 1b. S=1 parity: weights after N epochs of real training steps
+// ---------------------------------------------------------------------------
+
+#[test]
+fn s1_weights_match_unsharded_after_training() {
+    let cfg = NetworkConfig { n_in: 18, hidden: vec![160], n_out: 7, act: Activation::ReLU };
+    let seed_net = Network::new(&cfg, &mut Pcg64::seeded(7_2026));
+    let mut net_a = seed_net.clone();
+    let mut net_b = seed_net;
+    let lsh = LshConfig::default();
+    let sparsity = 0.08;
+
+    let mut ra = Pcg64::new(5, 0xF00D);
+    let mut rb = ra.clone();
+    let mut sels_a: Vec<Box<dyn NodeSelector>> =
+        vec![Box::new(LshSelector::new(&net_a.layers[0], lsh, sparsity, 1, &mut ra))];
+    let mut sels_b: Vec<Box<dyn NodeSelector>> =
+        vec![Box::new(ShardedLshSelector::new(&net_b.layers[0], lsh, 1, sparsity, 1, &mut rb))];
+
+    let mut opt_a = Optimizer::for_network(OptimConfig::default(), &net_a);
+    let mut opt_b = Optimizer::for_network(OptimConfig::default(), &net_b);
+    let mut ws_a = BatchWorkspace::for_network(&net_a);
+    let mut ws_b = BatchWorkspace::for_network(&net_b);
+
+    let data = queries(48, cfg.n_in);
+    let labels: Vec<u32> = (0..data.len()).map(|i| (i % cfg.n_out) as u32).collect();
+    let mut tra = Pcg64::new(17, 0xBA7C4);
+    let mut trb = tra.clone();
+
+    for epoch in 0..3 {
+        for (chunk_x, chunk_y) in data.chunks(8).zip(labels.chunks(8)) {
+            let xr: Vec<&[f32]> = chunk_x.iter().map(|x| x.as_slice()).collect();
+            let res_a = train_batch(&mut net_a, &mut sels_a, &mut opt_a, &mut ws_a, &xr, chunk_y, &mut tra);
+            let res_b = train_batch(&mut net_b, &mut sels_b, &mut opt_b, &mut ws_b, &xr, chunk_y, &mut trb);
+            assert_eq!(res_a.loss.to_bits(), res_b.loss.to_bits(), "per-batch loss parity");
+            assert_eq!(res_a.mults, res_b.mults, "per-batch mult parity");
+        }
+        sels_a[0].on_epoch_end(&net_a.layers[0], epoch, &mut tra);
+        sels_b[0].on_epoch_end(&net_b.layers[0], epoch, &mut trb);
+    }
+
+    assert_nets_bitwise_equal(&net_a, &net_b, "after 3 epochs, S=1 vs unsharded");
+}
+
+// ---------------------------------------------------------------------------
+// 2. Determinism under ASGD at S ∈ {2, 4}
+// ---------------------------------------------------------------------------
+
+#[test]
+fn asgd_with_sharded_selectors_is_deterministic() {
+    let cfg = NetworkConfig { n_in: 16, hidden: vec![96], n_out: 6, act: Activation::ReLU };
+    let train = dataset("shard-asgd-train", 60, cfg.n_in, cfg.n_out);
+    let test = dataset("shard-asgd-test", 20, cfg.n_in, cfg.n_out);
+
+    for shards in [2usize, 4] {
+        let mut sampler = SamplerConfig::default();
+        sampler.sparsity = 0.1;
+        sampler.shards = shards;
+        // One worker: the ASGD engine (shared cell, per-worker selectors,
+        // epoch-boundary rebuilds) with no Hogwild races — repeat runs
+        // must agree bit for bit.
+        let acfg = AsgdConfig {
+            threads: 1,
+            epochs: 2,
+            batch_size: 4,
+            sampler,
+            seed: 11,
+            ..AsgdConfig::default()
+        };
+        let net = Network::new(&cfg, &mut Pcg64::seeded(404 + shards as u64));
+        let out1 = run_asgd(net.clone(), &train, &test, &acfg);
+        let out2 = run_asgd(net, &train, &test, &acfg);
+        assert_eq!(out1.record.epochs.len(), 2, "S={shards}: epoch records");
+        assert_nets_bitwise_equal(&out1.net, &out2.net, &format!("ASGD repeat runs at S={shards}"));
+        for (e1, e2) in out1.record.epochs.iter().zip(&out2.record.epochs) {
+            assert_eq!(e1.test_acc.to_bits(), e2.test_acc.to_bits(), "S={shards}: eval parity");
+            assert_eq!(e1.mults, e2.mults, "S={shards}: mult accounting parity");
+        }
+    }
+
+    // Multi-worker Hogwild races on the parameters by design, so repeat
+    // runs are not bitwise-comparable. What epoch boundaries DO rely on
+    // is that rebuilding the sharded tables from the shared weights is
+    // deterministic — pin that, plus basic structural sanity.
+    let mut sampler = SamplerConfig::default();
+    sampler.sparsity = 0.1;
+    sampler.shards = 2;
+    let acfg = AsgdConfig {
+        threads: 3,
+        epochs: 1,
+        batch_size: 4,
+        sampler,
+        seed: 23,
+        ..AsgdConfig::default()
+    };
+    let net = Network::new(&cfg, &mut Pcg64::seeded(909));
+    let out = run_asgd(net, &train, &test, &acfg);
+    assert_eq!(out.record.epochs.len(), 1);
+    for layer in &out.net.layers {
+        assert!(layer.w.as_slice().iter().all(|v| v.is_finite()), "Hogwild weights stay finite");
+    }
+    let mut r1 = Pcg64::new(31, 0xAB);
+    let mut r2 = r1.clone();
+    let t1 = ShardedLayerTables::build(&out.net.layers[0].w, LshConfig::default(), 2, &mut r1);
+    let t2 = ShardedLayerTables::build(&out.net.layers[0].w, LshConfig::default(), 2, &mut r2);
+    for s in 0..2 {
+        assert_eq!(
+            FrozenLayerTables::freeze(t1.shard(s)).tables(),
+            FrozenLayerTables::freeze(t2.shard(s)).tables(),
+            "rebuild from shared weights must be deterministic (shard {s})"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3. v5 snapshot round-trip with per-shard table contents
+// ---------------------------------------------------------------------------
+
+#[test]
+fn v5_snapshot_roundtrips_per_shard_tables() {
+    let cfg = NetworkConfig { n_in: 12, hidden: vec![90], n_out: 6, act: Activation::ReLU };
+    let net = Network::new(&cfg, &mut Pcg64::seeded(5150));
+    let train = dataset("shard-snap-train", 48, cfg.n_in, cfg.n_out);
+    let test = dataset("shard-snap-test", 16, cfg.n_in, cfg.n_out);
+
+    let mut sampler = SamplerConfig::default();
+    sampler.sparsity = 0.1;
+    sampler.shards = 3;
+    let tcfg = TrainConfig {
+        epochs: 2,
+        batch_size: 8,
+        optim: OptimConfig::default(),
+        sampler,
+        seed: 33,
+        eval_cap: 0,
+        verbose: false,
+    };
+    let mut trainer = Trainer::new(net, tcfg);
+    for e in 0..2 {
+        trainer.run_epoch(e, &train, &test);
+    }
+
+    let snap = trainer.snapshot();
+    let stacks = snap.tables.as_ref().expect("sharded trainer must ship tables");
+    assert!(stacks.iter().all(|s| s.shard_count() == 3), "live stacks carry 3 shards");
+
+    let path = tmp("v5_roundtrip");
+    save_snapshot(&snap, &path).unwrap();
+
+    // Sharded models must be written as the v5 format.
+    let mut magic = [0u8; 8];
+    std::fs::File::open(&path).unwrap().read_exact(&mut magic).unwrap();
+    assert_eq!(&magic, b"HDLMODL5", "sharded snapshot must use the v5 container");
+
+    let loaded = load_snapshot(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    assert_nets_bitwise_equal(&loaded.net, &snap.net, "v5 round-trip");
+    assert_eq!(loaded.sampler.shards, 3, "shard count rides the sampler config");
+    assert_eq!(loaded.seed, snap.seed);
+
+    let got = loaded.tables.as_ref().expect("v5 ships tables");
+    assert_eq!(got.len(), stacks.len());
+    for (l, (ga, wa)) in got.iter().zip(stacks.iter()).enumerate() {
+        let g = ga.sharded().expect("v5 stack is sharded");
+        let w = wa.sharded().expect("live stack is sharded");
+        assert_eq!(g.shard_count(), w.shard_count(), "layer {l}: shard count");
+        assert_eq!(g.n_nodes(), w.n_nodes(), "layer {l}: node count");
+        for s in 0..g.shard_count() {
+            assert_eq!(g.map().base(s), w.map().base(s), "layer {l} shard {s}: row base");
+            assert_eq!(g.map().rows_in(s), w.map().rows_in(s), "layer {l} shard {s}: row count");
+            let (gs, ws) = (&g.shards()[s], &w.shards()[s]);
+            assert_eq!(gs.tables(), ws.tables(), "layer {l} shard {s}: buckets bitwise");
+            assert_eq!(
+                gs.family().srp().projections(),
+                ws.family().srp().projections(),
+                "layer {l} shard {s}: projections bitwise"
+            );
+            assert_eq!(gs.family().max_norm(), ws.family().max_norm(), "layer {l} shard {s}: ALSH scale");
+        }
+    }
+
+    // End to end: the reloaded engine serves the same answers as one built
+    // from the live snapshot.
+    let ea = SparseInferenceEngine::from_snapshot(trainer.snapshot());
+    let eb = SparseInferenceEngine::from_snapshot(loaded);
+    let mut wa = InferenceWorkspace::new(&ea);
+    let mut wb = InferenceWorkspace::new(&eb);
+    for x in test.xs.iter().take(8) {
+        let ia = ea.infer(x, &mut wa);
+        let ib = eb.infer(x, &mut wb);
+        assert_eq!(ia.pred, ib.pred, "round-trip prediction parity");
+        assert_eq!(wa.logits, wb.logits, "round-trip logits must be bitwise equal");
+    }
+}

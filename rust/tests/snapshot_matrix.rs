@@ -41,8 +41,10 @@ fn reference_snapshot() -> ModelSnapshot {
 fn assert_tables_identical(label: &str, got: &ModelSnapshot, want: &ModelSnapshot) {
     let (gt, wt) = (got.tables.as_ref().unwrap(), want.tables.as_ref().unwrap());
     assert_eq!(gt.len(), wt.len(), "{label}: table-stack count");
-    for (l, (a, b)) in gt.iter().zip(wt.iter()).enumerate() {
-        assert_eq!(a.n_nodes(), b.n_nodes(), "{label}: layer {l} node count");
+    for (l, (sa, sb)) in gt.iter().zip(wt.iter()).enumerate() {
+        assert_eq!(sa.n_nodes(), sb.n_nodes(), "{label}: layer {l} node count");
+        let a = sa.single().expect("pre-v5 matrix ships single stacks");
+        let b = sb.single().expect("pre-v5 matrix ships single stacks");
         assert_eq!(a.tables(), b.tables(), "{label}: layer {l} buckets must be bitwise equal");
         assert_eq!(
             a.family().max_norm(),
