@@ -1,0 +1,123 @@
+//! Drifting-distribution generator for the drift observatory: Gaussian
+//! class clusters whose centroids rotate smoothly as a function of the
+//! sample index, so the *early* and *late* portions of one generated
+//! stream come from visibly different distributions. Training on it in
+//! stream order makes LSH tables built early in the run progressively
+//! stale — the injected-drift workload the health-driven rebuild policy
+//! and the CI drift smoke are exercised on. Deterministic given a seed,
+//! balanced classes.
+
+use crate::data::dataset::Dataset;
+use crate::util::rng::Pcg64;
+
+pub const DIM: usize = 64;
+pub const N_CLASSES: usize = 8;
+
+/// How many full centroid revolutions the stream sweeps through. One
+/// turn means the distribution at the end of the stream has rotated all
+/// the way back to the start; half of it is the maximally-displaced
+/// point, so a single turn already forces every table to cope with the
+/// full excursion.
+const DRIFT_TURNS: f32 = 1.0;
+
+/// Cluster radius around the (moving) centroid.
+const NOISE: f32 = 0.35;
+
+/// Per-class drift basis: the centroid of class `c` at drift phase θ is
+/// `base·cos θ + alt·sin θ`, with `base`/`alt` fixed random directions.
+struct ClassBasis {
+    base: Vec<f32>,
+    alt: Vec<f32>,
+}
+
+fn class_bases(seed: u64) -> Vec<ClassBasis> {
+    // The cluster geometry must be shared by a train stream and its test
+    // twin, which [`crate::data::synth::Benchmark::generate`] seeds with
+    // `seed ^ 0x7E57_7E57` — masking those bits out gives both streams the
+    // same world while the sample-noise RNG below still differs.
+    let mut rng = Pcg64::new(seed & !0x7E57_7E57, 0xD41F);
+    (0..N_CLASSES)
+        .map(|_| {
+            let dir = |rng: &mut Pcg64| -> Vec<f32> {
+                let v: Vec<f32> = (0..DIM).map(|_| rng.gaussian()).collect();
+                let norm = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-6);
+                v.into_iter().map(|x| 2.0 * x / norm).collect()
+            };
+            ClassBasis { base: dir(&mut rng), alt: dir(&mut rng) }
+        })
+        .collect()
+}
+
+/// Render one sample of class `label` at drift phase `theta` (radians).
+fn render(basis: &ClassBasis, theta: f32, rng: &mut Pcg64) -> Vec<f32> {
+    let (sin, cos) = theta.sin_cos();
+    (0..DIM)
+        .map(|j| basis.base[j] * cos + basis.alt[j] * sin + NOISE * rng.gaussian())
+        .collect()
+}
+
+/// Generate a balanced stream of `n` samples whose class centroids rotate
+/// `DRIFT_TURNS` revolutions across the stream.
+pub fn generate(n: usize, seed: u64) -> Dataset {
+    let bases = class_bases(seed);
+    let mut rng = Pcg64::new(seed, 0x0D1F);
+    let mut ds = Dataset::new("drifting", DIM, N_CLASSES);
+    let denom = n.max(1) as f32;
+    for i in 0..n {
+        let label = (i % N_CLASSES) as u32;
+        let theta = DRIFT_TURNS * std::f32::consts::TAU * (i as f32 / denom);
+        ds.push(render(&bases[label as usize], theta, &mut rng), label);
+    }
+    ds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_balance() {
+        let ds = generate(80, 1);
+        assert_eq!(ds.len(), 80);
+        assert_eq!(ds.dim, DIM);
+        assert_eq!(ds.n_classes, N_CLASSES);
+        assert_eq!(ds.class_histogram(), vec![10; N_CLASSES]);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = generate(24, 7);
+        let b = generate(24, 7);
+        assert_eq!(a.xs, b.xs);
+        assert_ne!(a.xs, generate(24, 8).xs);
+    }
+
+    #[test]
+    fn stream_actually_drifts() {
+        // Early and late samples of the *same class* should sit around
+        // different centroids: the gap between class-0 means taken from
+        // the first and the middle of the stream (phase ~π apart) must
+        // dwarf the within-window spread.
+        let n = 1600;
+        let ds = generate(n, 3);
+        let mean_of = |range: std::ops::Range<usize>| -> Vec<f32> {
+            let mut m = vec![0.0f32; DIM];
+            let mut cnt = 0;
+            for i in range {
+                if ds.ys[i] == 0 {
+                    for (a, b) in m.iter_mut().zip(&ds.xs[i]) {
+                        *a += b;
+                    }
+                    cnt += 1;
+                }
+            }
+            assert!(cnt > 0);
+            m.into_iter().map(|v| v / cnt as f32).collect()
+        };
+        let early = mean_of(0..n / 8);
+        let late = mean_of(n / 2..n / 2 + n / 8);
+        let gap: f32 =
+            early.iter().zip(&late).map(|(a, b)| (a - b).powi(2)).sum::<f32>().sqrt();
+        assert!(gap > 1.0, "drifted centroid gap too small: {gap}");
+    }
+}

@@ -5,6 +5,7 @@
 
 pub mod amazon670k_like;
 pub mod convex;
+pub mod drifting;
 pub mod mnist_like;
 pub mod norb_like;
 pub mod rectangles;
@@ -25,6 +26,10 @@ pub enum Benchmark {
     /// part of [`Benchmark::all`]: the paper's experiment sweep stays the
     /// original four.
     Amazon670k,
+    /// Rotating-centroid clusters: the class distribution drifts across
+    /// the sample stream (the drift observatory's injected-drift
+    /// workload). Reachable by name only, outside the paper sweep.
+    Drifting,
 }
 
 impl Benchmark {
@@ -35,9 +40,10 @@ impl Benchmark {
             "convex" => Ok(Benchmark::Convex),
             "rectangles" | "rect" => Ok(Benchmark::Rectangles),
             "amazon670k" | "amazon" => Ok(Benchmark::Amazon670k),
-            other => {
-                Err(format!("unknown dataset {other:?} (mnist|norb|convex|rectangles|amazon670k)"))
-            }
+            "drifting" | "drift" => Ok(Benchmark::Drifting),
+            other => Err(format!(
+                "unknown dataset {other:?} (mnist|norb|convex|rectangles|amazon670k|drifting)"
+            )),
         }
     }
 
@@ -48,6 +54,7 @@ impl Benchmark {
             Benchmark::Convex => "Convex",
             Benchmark::Rectangles => "Rectangles",
             Benchmark::Amazon670k => "Amazon670k",
+            Benchmark::Drifting => "Drifting",
         }
     }
 
@@ -68,6 +75,9 @@ impl Benchmark {
             Benchmark::Rectangles => (12_000, 50_000),
             // Amazon-670K's real split (Bhatia XML repository).
             Benchmark::Amazon670k => (490_449, 153_025),
+            // Synthetic drift workload: no paper counterpart; mirror the
+            // practical default scale.
+            Benchmark::Drifting => (8_000, 2_000),
         }
     }
 
@@ -81,6 +91,7 @@ impl Benchmark {
             Benchmark::Convex => (4_000, 2_000),
             Benchmark::Rectangles => (4_000, 2_000),
             Benchmark::Amazon670k => (8_000, 2_000),
+            Benchmark::Drifting => (4_000, 1_000),
         }
     }
 
@@ -88,6 +99,7 @@ impl Benchmark {
         match self {
             Benchmark::Norb => 2048,
             Benchmark::Amazon670k => amazon670k_like::DIM,
+            Benchmark::Drifting => drifting::DIM,
             _ => 784,
         }
     }
@@ -97,6 +109,7 @@ impl Benchmark {
             Benchmark::Mnist8m => 10,
             Benchmark::Norb => 5,
             Benchmark::Amazon670k => amazon670k_like::N_CLASSES,
+            Benchmark::Drifting => drifting::N_CLASSES,
             _ => 2,
         }
     }
@@ -109,6 +122,7 @@ impl Benchmark {
             Benchmark::Convex => convex::generate(n, s),
             Benchmark::Rectangles => rectangles::generate(n, s),
             Benchmark::Amazon670k => amazon670k_like::generate(n, s),
+            Benchmark::Drifting => drifting::generate(n, s),
         };
         (gen(n_train, seed), gen(n_test, seed ^ 0x7E57_7E57))
     }

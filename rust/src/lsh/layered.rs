@@ -248,6 +248,12 @@ impl LayerTables {
         self.insert_all(weights);
         self.rebuilds += 1;
         self.health.reset_rebuild_age();
+        crate::obs::events::emit(
+            crate::obs::EventKind::Rebuild,
+            "tables",
+            self.rebuilds as u64,
+            "rebuild",
+        );
     }
 
     /// Diagnostics: per-table occupancy histograms.

@@ -245,18 +245,29 @@ impl ShardedLayerTables {
     /// shard's mirror slice is fully re-synced first (Hogwild staleness
     /// bound). At `S = 1` the cadence and RNG consumption are exactly
     /// the unsharded selector's.
-    pub fn on_epoch_end(
+    ///
+    /// `force_all` (the health-driven rebuild path) rebuilds every shard
+    /// regardless of cadence, in shard order. With `force_all = false`
+    /// this is bit-for-bit the fixed staggered schedule.
+    pub fn maybe_rebuild_staggered(
         &mut self,
         weights: &Matrix,
         epoch: usize,
         rebuild_every: usize,
+        force_all: bool,
         rng: &mut Pcg64,
     ) {
         let Self { mirror, shards, .. } = self;
         for (s, shard) in shards.iter_mut().enumerate() {
-            if (epoch + 1 + s) % rebuild_every == 0 {
+            if force_all || (epoch + 1 + s) % rebuild_every == 0 {
                 mirror.sync_shard(weights, s);
                 shard.rebuild(mirror.plane(s), rng);
+                crate::obs::events::emit(
+                    crate::obs::EventKind::ShardRebuild,
+                    "shard",
+                    s as u64,
+                    if force_all { "forced" } else { "staggered" },
+                );
             }
         }
     }
@@ -526,7 +537,7 @@ mod tests {
         assert_eq!(sharded.shard(0).tables(), unsharded.tables());
         // Epoch-end rebuild consumes the same stream.
         unsharded.rebuild(&w, &mut rng_a);
-        sharded.on_epoch_end(&w, 0, 1, &mut rng_b);
+        sharded.maybe_rebuild_staggered(&w, 0, 1, false, &mut rng_b);
         assert_eq!(sharded.shard(0).tables(), unsharded.tables());
         assert_eq!(rng_a.next_u64(), rng_b.next_u64());
     }
@@ -566,7 +577,7 @@ mod tests {
         // rebuild_every = 4: each epoch rebuilds exactly one shard.
         for epoch in 0..4 {
             let before = st.rebuilds();
-            st.on_epoch_end(&w, epoch, 4, &mut rng);
+            st.maybe_rebuild_staggered(&w, epoch, 4, false, &mut rng);
             assert_eq!(st.rebuilds(), before + 1, "epoch {epoch}");
         }
         // After 4 epochs every shard has rebuilt exactly once.

@@ -74,7 +74,8 @@ fn telemetry_opts(p: Parser) -> Parser {
     p.opt("telemetry", "on", "master telemetry switch (on|off)")
         .opt("trace-sample", "0", "print every Nth micro-batch's span tree to stderr (0 = off)")
         .opt("recall-sample", "64", "run the selection-recall probe every Nth selection batch (0 = off)")
-        .opt("metrics-out", "", "write a Prometheus metrics snapshot (+ .json twin) after the run")
+        .opt("metrics-out", "", "write a Prometheus metrics snapshot (+ .json twin + .events.jsonl) after the run")
+        .opt("obs-listen", "", "serve GET /metrics /metrics.json /events /health over HTTP on this address (e.g. 127.0.0.1:9464)")
 }
 
 /// Apply the shared telemetry flags; returns the `--metrics-out` path if
@@ -93,12 +94,56 @@ fn apply_telemetry_flags(a: &Args) -> Option<PathBuf> {
     // Touch the stage registry up front so an exported snapshot names
     // every pipeline stage even before (or without) any traffic.
     obs::stages();
+    if obs::enabled() {
+        // Background drift-observatory sampler: periodic registry
+        // snapshots into the in-process time-series rings.
+        obs::series::ensure_sampler(Duration::from_millis(250));
+    }
+    if let Some(addr) = a.get("obs-listen").filter(|s| !s.is_empty()) {
+        match obs::http::serve(addr) {
+            Ok(server) => {
+                eprintln!("observability endpoint listening on http://{}", server.local_addr());
+                // The listener thread lives for the whole process; keep the
+                // handle from dropping without holding it anywhere.
+                std::mem::forget(server);
+            }
+            Err(e) => {
+                eprintln!("error binding --obs-listen {addr}: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
     a.get("metrics-out").filter(|s| !s.is_empty()).map(PathBuf::from)
 }
 
-/// Dump the global metrics registry: Prometheus text at `path` plus a
-/// JSON twin at `path`.json.
+/// Register the LSH rebuild-cadence flags shared by `train` and
+/// `train-serve`.
+fn rebuild_opts(p: Parser) -> Parser {
+    p.opt("rebuild-every", "1", "full LSH table rebuild every N epochs")
+        .opt("rebuild-policy", "fixed", "rebuild cadence: fixed | health (drift detectors may force extra rebuilds)")
+        .opt("drift-recall-drop", "0.1", "health policy: recall drop vs baseline that flags drift")
+        .opt("drift-max-age-batches", "0", "health policy: force a rebuild once tables age past N batches (0 = off)")
+}
+
+/// Apply the rebuild-cadence flags onto the sampler configuration.
+fn apply_rebuild_flags(a: &Args, sampler: &mut SamplerConfig) {
+    sampler.rebuild_every_epochs = a.parse_or("rebuild-every", 1usize).max(1);
+    let policy = a.get_or("rebuild-policy", "fixed");
+    sampler.rebuild_policy = obs::RebuildPolicy::parse(policy).unwrap_or_else(|| {
+        eprintln!("bad --rebuild-policy value {policy:?} (want fixed|health)");
+        std::process::exit(2);
+    });
+    sampler.drift.recall_drop = a.parse_or("drift-recall-drop", 0.1f64);
+    sampler.drift.max_rebuild_age_batches = a.parse_or("drift-max-age-batches", 0u64);
+}
+
+/// Dump the global metrics registry: Prometheus text at `path`, a JSON
+/// twin (with series rollups) at `path`.json, and the structured event
+/// journal at `path`.events.jsonl.
 fn write_metrics_snapshot(path: &Path) -> i32 {
+    // One final sample so the series rollups include the end-of-run state
+    // even when the background sampler has not ticked recently.
+    obs::series::sample_global_now();
     let snap = obs::global().snapshot();
     if let Err(e) = std::fs::write(path, snap.to_prometheus()) {
         eprintln!("error writing {}: {e}", path.display());
@@ -107,11 +152,25 @@ fn write_metrics_snapshot(path: &Path) -> i32 {
     let mut json_path = path.as_os_str().to_os_string();
     json_path.push(".json");
     let json_path = PathBuf::from(json_path);
-    if let Err(e) = std::fs::write(&json_path, snap.to_json() + "\n") {
+    let json = snap.to_json_with_series(&obs::series::store().rollups_to_json());
+    if let Err(e) = std::fs::write(&json_path, json + "\n") {
         eprintln!("error writing {}: {e}", json_path.display());
         return 1;
     }
-    println!("wrote {} (+ {})", path.display(), json_path.display());
+    let mut events_path = path.as_os_str().to_os_string();
+    events_path.push(".events.jsonl");
+    let events_path = PathBuf::from(events_path);
+    let jsonl = obs::events::journal().to_jsonl(usize::MAX);
+    if let Err(e) = std::fs::write(&events_path, jsonl) {
+        eprintln!("error writing {}: {e}", events_path.display());
+        return 1;
+    }
+    println!(
+        "wrote {} (+ {} + {})",
+        path.display(),
+        json_path.display(),
+        events_path.display()
+    );
     0
 }
 
@@ -156,6 +215,7 @@ USAGE: hashdl <subcommand> [flags]
               [--k <bits>] [--tables <L>] [--shards <S>] [--save <model.bin>]
   train-serve --dataset <..> [--epochs e] [--batch-size B] [--sparsity f]
               [--publish-every <batches>] [--workers w] [--clients c]
+              [--rebuild-every N] [--rebuild-policy fixed|health]
               [--out BENCH_train_serve.json]   (train + serve, one process)
   eval        --model <model.bin> --dataset <..> [--n <N>] [--batch-size <B>]
               [--sparse]   (serve through the snapshot's frozen LSH tables)
@@ -182,10 +242,16 @@ v4/v3/v2 snapshots and legacy v1 model files. `train --threads N --serve`
 serves live traffic while Hogwild-training, publishing every epoch.
 
 train-serve, serve-bench and serve-fleet share the telemetry flags
-[--telemetry on|off] [--trace-sample N] [--metrics-out metrics.prom]:
-stage timers and table-health counters feed one metrics registry, dumped
-as Prometheus text (+ .json twin) via --metrics-out; --trace-sample N
-prints every Nth micro-batch's span tree to stderr.
+[--telemetry on|off] [--trace-sample N] [--metrics-out metrics.prom]
+[--obs-listen ADDR]: stage timers, table-health and drift counters feed
+one metrics registry, dumped as Prometheus text (+ .json twin with
+series rollups + .events.jsonl event journal) via --metrics-out, or
+served live over HTTP (GET /metrics, /metrics.json, /events, /health)
+via --obs-listen. train and train-serve take [--rebuild-policy
+fixed|health] [--rebuild-every N] [--drift-recall-drop f]
+[--drift-max-age-batches N]: `health` lets the drift detectors force
+table rebuilds between the fixed cadence points; `fixed` (default) is
+bit-for-bit the historical behaviour.
 Run any subcommand with --help for full flags.";
 
 fn parse_benchmark(name: &str) -> Benchmark {
@@ -247,6 +313,7 @@ fn cmd_train(rest: Vec<String>) -> i32 {
         .opt("serve-workers", "2", "serving worker threads (with --serve)")
         .opt("serve-clients", "0", "closed-loop client threads (0 = 2x serve workers)")
         .flag("quiet", "suppress per-epoch logging");
+    let p = rebuild_opts(p);
     let a = p.parse_rest(rest);
 
     // Optional config file: `[train]` keys become defaults that explicit
@@ -290,6 +357,7 @@ fn cmd_train(rest: Vec<String>) -> i32 {
     sampler.lsh.rerank_factor = a.parse_or("rerank", 0usize);
     sampler.lsh.rehash_probability = a.parse_or("rehash-prob", 1.0f32);
     sampler.shards = a.parse_or("shards", 1usize).max(1);
+    apply_rebuild_flags(&a, &mut sampler);
     if method == Method::AdaptiveDropout {
         sampler.ad_beta =
             hashdl::sampling::adaptive::AdaptiveDropoutSelector::beta_for_sparsity(sampler.sparsity);
@@ -459,6 +527,7 @@ fn cmd_train_serve(rest: Vec<String>) -> i32 {
         .opt("queue-cap", "1024", "bounded request-queue capacity")
         .opt("out", "BENCH_train_serve.json", "JSON output path")
         .flag("quiet", "suppress per-epoch logging");
+    let p = rebuild_opts(p);
     let p = telemetry_opts(p);
     let a = p.parse_rest(rest);
     let metrics_out = apply_telemetry_flags(&a);
@@ -491,6 +560,8 @@ fn cmd_train_serve(rest: Vec<String>) -> i32 {
     sampler.lsh.probes_per_table = a.parse_or("probes", 10usize);
     sampler.lsh.rerank_factor = a.parse_or("rerank", 0usize);
     sampler.lsh.rehash_probability = a.parse_or("rehash-prob", 1.0f32);
+    apply_rebuild_flags(&a, &mut sampler);
+    let policy_name = sampler.rebuild_policy.name();
     let optim = OptimConfig { lr: a.parse_or("lr", 0.01f32), ..Default::default() };
     let net = Network::new(
         &NetworkConfig {
@@ -597,6 +668,7 @@ fn cmd_train_serve(rest: Vec<String>) -> i32 {
         .u64("dropped", samples.dropped)
         .fixed("serve_accuracy", samples.accuracy(), 4)
         .fixed("final_train_accuracy", record.final_acc() as f64, 4)
+        .str("rebuild_policy", policy_name)
         .bool("telemetry", obs::enabled())
         .raw("table_health", &health_epochs.finish())
         .raw("stage_breakdown", &stage_breakdown)

@@ -1,0 +1,490 @@
+//! Drift detection over health snapshots and metric series, and the
+//! rebuild policy it feeds.
+//!
+//! The SLIDE problem this repo keeps circling: selection quality decays
+//! as weights move away from the tables that indexed them, and a fixed
+//! `rebuild_every_epochs` either wastes rebuilds or serves stale tables.
+//! This module watches the signals PR 7 created — recall estimates,
+//! bucket-occupancy skew, empty-bucket fraction, rebuild age, serving
+//! version-age — and turns them into:
+//!
+//! * [`DriftAlert`]s, journaled as `drift_alert` events and counted in
+//!   `hashdl_drift_alerts_total`;
+//! * a rebuild verdict for [`RebuildPolicy::HealthDriven`] selectors
+//!   (consulted by `LshSelector::on_epoch_end` and
+//!   `ShardedLayerTables::maybe_rebuild_staggered`).
+//!
+//! [`RebuildPolicy::Fixed`] never consults a detector: its code path is
+//! bit-for-bit the pre-observatory cadence (pinned by
+//! `tests/observatory.rs`). Detectors draw no RNG and mutate nothing but
+//! their own windows, so even `HealthDriven` only changes *when* tables
+//! rebuild, never what a given rebuild produces.
+
+use crate::obs::events::{self, EventKind};
+use crate::obs::health::TableHealth;
+use crate::obs::series::SeriesStore;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// When do hash tables rebuild?
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RebuildPolicy {
+    /// Every `rebuild_every_epochs` epochs — the pre-observatory
+    /// behaviour, bit-for-bit.
+    #[default]
+    Fixed,
+    /// The fixed cadence still applies, but drift detectors may force an
+    /// earlier rebuild when selection quality decays.
+    HealthDriven,
+}
+
+impl RebuildPolicy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "fixed" => Some(RebuildPolicy::Fixed),
+            "health" | "health-driven" => Some(RebuildPolicy::HealthDriven),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RebuildPolicy::Fixed => "fixed",
+            RebuildPolicy::HealthDriven => "health",
+        }
+    }
+}
+
+/// Detector thresholds. All windows are in observations (one per epoch
+/// for the trainer-side detector, one per sampler tick for the series
+/// scanner).
+#[derive(Clone, Copy, Debug)]
+pub struct DriftConfig {
+    /// Observations forming the baseline (immediately before the recent
+    /// window).
+    pub baseline_window: usize,
+    /// Observations forming the "now" window.
+    pub recent_window: usize,
+    /// Alert when recent recall < baseline recall − this.
+    pub recall_drop: f64,
+    /// Alert when recent skew > baseline skew × this.
+    pub skew_growth: f64,
+    /// Alert when recent empty-bucket fraction > baseline + this.
+    pub empty_rise: f64,
+    /// Alert when the serving stale fraction (version-age > 0) exceeds
+    /// this.
+    pub stale_tail: f64,
+    /// Hard staleness backstop: alert when a table has gone this many
+    /// selection batches without a rebuild (0 disables).
+    pub max_rebuild_age_batches: u64,
+}
+
+impl Default for DriftConfig {
+    fn default() -> Self {
+        DriftConfig {
+            baseline_window: 4,
+            recent_window: 2,
+            recall_drop: 0.1,
+            skew_growth: 1.5,
+            empty_rise: 0.15,
+            stale_tail: 0.5,
+            max_rebuild_age_batches: 0,
+        }
+    }
+}
+
+/// One tripped detector.
+#[derive(Clone, Debug)]
+pub struct DriftAlert {
+    /// What was watched (`recall_estimate`, `occupancy_skew`, …,
+    /// qualified with the series key for the scanner).
+    pub metric: String,
+    pub baseline: f64,
+    pub recent: f64,
+    /// Human-readable trigger description.
+    pub reason: String,
+}
+
+impl DriftAlert {
+    fn journal(&self) {
+        let n = counters().alerts.fetch_add(1, Ordering::Relaxed) + 1;
+        events::emit(EventKind::DriftAlert, &self.metric, n, &self.reason);
+    }
+}
+
+/// What a detector pass concluded.
+#[derive(Debug, Default)]
+pub struct DriftDecision {
+    pub rebuild_due: bool,
+    pub alerts: Vec<DriftAlert>,
+}
+
+struct DriftCounters {
+    alerts: AtomicU64,
+    adaptive_rebuilds: AtomicU64,
+}
+
+/// Global alert/adaptive-rebuild counters; first call registers them
+/// into the metrics registry.
+fn counters() -> &'static DriftCounters {
+    static C: OnceLock<DriftCounters> = OnceLock::new();
+    static REG: OnceLock<()> = OnceLock::new();
+    let c: &'static DriftCounters = C.get_or_init(|| DriftCounters {
+        alerts: AtomicU64::new(0),
+        adaptive_rebuilds: AtomicU64::new(0),
+    });
+    REG.get_or_init(|| {
+        crate::obs::export::global().register_counter("hashdl_drift_alerts_total", || {
+            counters().alerts.load(Ordering::Relaxed) as f64
+        });
+        crate::obs::export::global().register_counter("hashdl_adaptive_rebuilds_total", || {
+            counters().adaptive_rebuilds.load(Ordering::Relaxed) as f64
+        });
+    });
+    c
+}
+
+pub fn drift_alerts_total() -> u64 {
+    counters().alerts.load(Ordering::Relaxed)
+}
+
+pub fn adaptive_rebuilds_total() -> u64 {
+    counters().adaptive_rebuilds.load(Ordering::Relaxed)
+}
+
+/// Record one health-driven rebuild that the fixed cadence would not
+/// have done: bumps `hashdl_adaptive_rebuilds_total` and journals a
+/// `rebuild` event with subject `"adaptive"`.
+pub fn note_adaptive_rebuild(what: &str) {
+    let n = counters().adaptive_rebuilds.fetch_add(1, Ordering::Relaxed) + 1;
+    events::emit(EventKind::Rebuild, "adaptive", n, what);
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Split a history into (baseline mean, recent mean); `None` until
+/// enough observations exist.
+fn baseline_recent(vals: &[f64], cfg: &DriftConfig) -> Option<(f64, f64)> {
+    let need = cfg.baseline_window + cfg.recent_window;
+    if vals.len() < need.max(2) {
+        return None;
+    }
+    let recent = &vals[vals.len() - cfg.recent_window..];
+    let base = &vals[vals.len() - need..vals.len() - cfg.recent_window];
+    Some((mean(base), mean(recent)))
+}
+
+fn check_recall_drop(metric: &str, vals: &[f64], cfg: &DriftConfig) -> Option<DriftAlert> {
+    let (base, recent) = baseline_recent(vals, cfg)?;
+    (recent < base - cfg.recall_drop).then(|| DriftAlert {
+        metric: metric.to_string(),
+        baseline: base,
+        recent,
+        reason: format!("recall dropped {base:.4} -> {recent:.4} (> {:.4})", cfg.recall_drop),
+    })
+}
+
+fn check_skew_growth(metric: &str, vals: &[f64], cfg: &DriftConfig) -> Option<DriftAlert> {
+    let (base, recent) = baseline_recent(vals, cfg)?;
+    (base > 0.0 && recent > base * cfg.skew_growth).then(|| DriftAlert {
+        metric: metric.to_string(),
+        baseline: base,
+        recent,
+        reason: format!("occupancy skew grew {base:.2} -> {recent:.2} (x{:.2})", cfg.skew_growth),
+    })
+}
+
+fn check_empty_rise(metric: &str, vals: &[f64], cfg: &DriftConfig) -> Option<DriftAlert> {
+    let (base, recent) = baseline_recent(vals, cfg)?;
+    (recent > base + cfg.empty_rise).then(|| DriftAlert {
+        metric: metric.to_string(),
+        baseline: base,
+        recent,
+        reason: format!(
+            "empty-bucket fraction rose {base:.4} -> {recent:.4} (+{:.4})",
+            cfg.empty_rise
+        ),
+    })
+}
+
+/// Stateful per-table detector fed one [`TableHealth`] per epoch by a
+/// `HealthDriven` selector. On a trip it journals the alerts, reports
+/// `rebuild_due`, and resets its windows so the post-rebuild state forms
+/// the next baseline.
+#[derive(Debug)]
+pub struct HealthDriftDetector {
+    cfg: DriftConfig,
+    label: String,
+    recall: Vec<f64>,
+    skew: Vec<f64>,
+    empty: Vec<f64>,
+}
+
+impl HealthDriftDetector {
+    pub fn new(label: &str, cfg: DriftConfig) -> Self {
+        counters();
+        HealthDriftDetector {
+            cfg,
+            label: label.to_string(),
+            recall: Vec::new(),
+            skew: Vec::new(),
+            empty: Vec::new(),
+        }
+    }
+
+    pub fn config(&self) -> &DriftConfig {
+        &self.cfg
+    }
+
+    /// Fold one health snapshot in and decide whether drift warrants a
+    /// rebuild now.
+    pub fn observe(&mut self, h: &TableHealth) -> DriftDecision {
+        let mut alerts = Vec::new();
+        if self.cfg.max_rebuild_age_batches > 0
+            && h.rebuild_age_batches >= self.cfg.max_rebuild_age_batches
+        {
+            alerts.push(DriftAlert {
+                metric: format!("{}/rebuild_age_batches", self.label),
+                baseline: self.cfg.max_rebuild_age_batches as f64,
+                recent: h.rebuild_age_batches as f64,
+                reason: format!(
+                    "table stale for {} selection batches (cap {})",
+                    h.rebuild_age_batches, self.cfg.max_rebuild_age_batches
+                ),
+            });
+        }
+        if h.recall_trials > 0 {
+            self.recall.push(h.recall_estimate);
+        }
+        self.skew.push(h.occupancy_skew);
+        self.empty.push(h.empty_bucket_fraction);
+
+        let recall_key = format!("{}/recall_estimate", self.label);
+        let skew_key = format!("{}/occupancy_skew", self.label);
+        let empty_key = format!("{}/empty_bucket_fraction", self.label);
+        alerts.extend(check_recall_drop(&recall_key, &self.recall, &self.cfg));
+        alerts.extend(check_skew_growth(&skew_key, &self.skew, &self.cfg));
+        alerts.extend(check_empty_rise(&empty_key, &self.empty, &self.cfg));
+
+        let rebuild_due = !alerts.is_empty();
+        if rebuild_due {
+            for a in &alerts {
+                a.journal();
+            }
+            // The rebuild the caller is about to do invalidates the old
+            // windows: post-rebuild health becomes the next baseline.
+            self.recall.clear();
+            self.skew.clear();
+            self.empty.clear();
+        }
+        DriftDecision { rebuild_due, alerts }
+    }
+}
+
+/// Stateless-per-scan series checks with a per-series cooldown: the
+/// sampler calls [`scan`](SeriesMonitor::scan) each tick; a series that
+/// alerted stays quiet until it has accumulated a fresh baseline's worth
+/// of new samples.
+pub struct SeriesMonitor {
+    cfg: DriftConfig,
+    /// (series key, ring total at last alert).
+    cooldown: Vec<(String, u64)>,
+}
+
+impl SeriesMonitor {
+    pub fn new(cfg: DriftConfig) -> Self {
+        counters();
+        SeriesMonitor { cfg, cooldown: Vec::new() }
+    }
+
+    fn in_cooldown(&self, key: &str, total: u64) -> bool {
+        self.cooldown.iter().any(|(k, at)| {
+            k == key && total < at + (self.cfg.baseline_window + self.cfg.recent_window) as u64
+        })
+    }
+
+    fn note_fired(&mut self, key: &str, total: u64) {
+        if let Some(slot) = self.cooldown.iter_mut().find(|(k, _)| k == key) {
+            slot.1 = total;
+        } else {
+            self.cooldown.push((key.to_string(), total));
+        }
+    }
+
+    /// Check every series in `store` against the detector suite, journal
+    /// and return whatever tripped.
+    pub fn scan(&mut self, store: &SeriesStore) -> Vec<DriftAlert> {
+        let mut fired = Vec::new();
+        for (key, _kind, ring) in store.all() {
+            let total = ring.total();
+            if self.in_cooldown(&key, total) {
+                continue;
+            }
+            let vals: Vec<f64> = ring.window().iter().map(|p| p.value).collect();
+            let alert = if key.contains("recall_estimate") {
+                check_recall_drop(&key, &vals, &self.cfg)
+            } else if key.contains("occupancy_skew") {
+                check_skew_growth(&key, &vals, &self.cfg)
+            } else if key.contains("empty_bucket_fraction") {
+                check_empty_rise(&key, &vals, &self.cfg)
+            } else if key.contains("stale_fraction") {
+                // Version-age tail mass: alert while the fraction of
+                // micro-batches served from a stale version exceeds the
+                // configured tail.
+                vals.last().copied().filter(|&v| v > self.cfg.stale_tail).map(|v| DriftAlert {
+                    metric: key.clone(),
+                    baseline: self.cfg.stale_tail,
+                    recent: v,
+                    reason: format!("stale-serve fraction {v:.4} above tail {:.4}", self.cfg.stale_tail),
+                })
+            } else {
+                None
+            };
+            if let Some(a) = alert {
+                a.journal();
+                self.note_fired(&key, total);
+                fired.push(a);
+            }
+        }
+        fired
+    }
+}
+
+/// Run the global series monitor over the global store (called by the
+/// background sampler each tick).
+pub fn scan_global_series() {
+    static MON: OnceLock<Mutex<SeriesMonitor>> = OnceLock::new();
+    let mon = MON.get_or_init(|| Mutex::new(SeriesMonitor::new(DriftConfig::default())));
+    if let Ok(mut m) = mon.lock() {
+        m.scan(crate::obs::series::store());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn health(recall: f64, trials: u64, skew: f64, empty: f64, age: u64) -> TableHealth {
+        TableHealth {
+            recall_estimate: recall,
+            recall_trials: trials,
+            occupancy_skew: skew,
+            empty_bucket_fraction: empty,
+            rebuild_age_batches: age,
+            ..TableHealth::default()
+        }
+    }
+
+    fn cfg() -> DriftConfig {
+        DriftConfig { baseline_window: 3, recent_window: 2, ..DriftConfig::default() }
+    }
+
+    #[test]
+    fn flat_health_never_trips() {
+        let mut d = HealthDriftDetector::new("l0", cfg());
+        for _ in 0..20 {
+            let dec = d.observe(&health(0.9, 10, 1.2, 0.3, 5));
+            assert!(!dec.rebuild_due, "flat series must stay quiet");
+        }
+    }
+
+    #[test]
+    fn recall_drop_trips_and_resets_windows() {
+        let mut d = HealthDriftDetector::new("l0", cfg());
+        for _ in 0..4 {
+            assert!(!d.observe(&health(0.9, 10, 1.2, 0.3, 5)).rebuild_due);
+        }
+        // Two decayed observations: recent mean 0.55 vs baseline 0.9.
+        assert!(!d.observe(&health(0.55, 10, 1.2, 0.3, 5)).rebuild_due, "one sample is noise");
+        let dec = d.observe(&health(0.55, 10, 1.2, 0.3, 5));
+        assert!(dec.rebuild_due, "sustained recall drop must trip");
+        assert_eq!(dec.alerts.len(), 1);
+        assert!(dec.alerts[0].metric.contains("recall_estimate"));
+        assert!(dec.alerts[0].recent < dec.alerts[0].baseline);
+        // Windows reset: the very next observation cannot re-trip.
+        assert!(!d.observe(&health(0.55, 10, 1.2, 0.3, 5)).rebuild_due);
+    }
+
+    #[test]
+    fn skew_growth_and_empty_rise_trip() {
+        let mut d = HealthDriftDetector::new("l1", cfg());
+        for _ in 0..5 {
+            d.observe(&health(0.9, 10, 1.2, 0.1, 5));
+        }
+        let dec = d.observe(&health(0.9, 10, 4.0, 0.5, 5));
+        // One hot sample may already push the 2-wide recent mean over
+        // both thresholds; a second certainly does.
+        let dec = if dec.rebuild_due { dec } else { d.observe(&health(0.9, 10, 4.0, 0.5, 5)) };
+        assert!(dec.rebuild_due);
+        let metrics: Vec<&str> = dec.alerts.iter().map(|a| a.metric.as_str()).collect();
+        assert!(metrics.iter().any(|m| m.contains("occupancy_skew")), "{metrics:?}");
+        assert!(metrics.iter().any(|m| m.contains("empty_bucket_fraction")), "{metrics:?}");
+    }
+
+    #[test]
+    fn age_backstop_trips_without_windows() {
+        let mut d = HealthDriftDetector::new(
+            "l0",
+            DriftConfig { max_rebuild_age_batches: 100, ..cfg() },
+        );
+        assert!(!d.observe(&health(0.0, 0, 1.0, 0.1, 99)).rebuild_due);
+        let dec = d.observe(&health(0.0, 0, 1.0, 0.1, 100));
+        assert!(dec.rebuild_due, "age cap is an immediate backstop");
+        assert!(dec.alerts[0].metric.contains("rebuild_age"));
+    }
+
+    #[test]
+    fn series_monitor_trips_on_drop_with_cooldown() {
+        use crate::obs::export::MetricKind;
+        use crate::obs::series::SeriesStore;
+        let store = SeriesStore::with_capacity(32);
+        let reg = crate::obs::export::MetricsRegistry::new();
+        let v = std::sync::Arc::new(Mutex::new(0.9f64));
+        let v2 = std::sync::Arc::clone(&v);
+        reg.register_labeled_gauge("hashdl_table_recall_estimate", "layer=\"0\"", move || {
+            *v2.lock().unwrap()
+        });
+        let mut mon = SeriesMonitor::new(cfg());
+        for t in 0..5u64 {
+            store.sample(&reg.snapshot(), t * 1000);
+            assert!(mon.scan(&store).is_empty(), "flat series must stay quiet");
+        }
+        *v.lock().unwrap() = 0.4;
+        store.sample(&reg.snapshot(), 6000);
+        store.sample(&reg.snapshot(), 7000);
+        let fired = mon.scan(&store);
+        assert_eq!(fired.len(), 1, "drop must fire exactly once");
+        assert!(fired[0].metric.contains("recall_estimate"));
+        // Cooldown: the same decayed window cannot re-fire immediately.
+        assert!(mon.scan(&store).is_empty());
+        let _ = MetricKind::Gauge;
+    }
+
+    #[test]
+    fn stale_fraction_threshold() {
+        let store = crate::obs::series::SeriesStore::with_capacity(8);
+        let reg = crate::obs::export::MetricsRegistry::new();
+        reg.register_gauge("hashdl_pool_version_age_stale_fraction", || 0.8);
+        store.sample(&reg.snapshot(), 100);
+        let mut mon = SeriesMonitor::new(cfg());
+        let fired = mon.scan(&store);
+        assert_eq!(fired.len(), 1);
+        assert!(fired[0].reason.contains("stale-serve"));
+    }
+
+    #[test]
+    fn policy_parses() {
+        assert_eq!(RebuildPolicy::parse("fixed"), Some(RebuildPolicy::Fixed));
+        assert_eq!(RebuildPolicy::parse("health"), Some(RebuildPolicy::HealthDriven));
+        assert_eq!(RebuildPolicy::parse("health-driven"), Some(RebuildPolicy::HealthDriven));
+        assert_eq!(RebuildPolicy::parse("sometimes"), None);
+        assert_eq!(RebuildPolicy::default(), RebuildPolicy::Fixed);
+        assert_eq!(RebuildPolicy::HealthDriven.name(), "health");
+    }
+}

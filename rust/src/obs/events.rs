@@ -1,0 +1,247 @@
+//! Bounded process-global structured event journal.
+//!
+//! Metrics answer "how much"; the journal answers "what happened when".
+//! Every discrete lifecycle action in the stack — a model publication, a
+//! hash-table rebuild (full or per-shard), a shed request, a canary
+//! divert, a drift alert — lands here as one [`Event`] with a
+//! process-monotonic sequence number. The journal is a fixed-capacity
+//! ring: old events fall off the front (counted, never silently), so a
+//! long-running server keeps a bounded recent history that `/events`
+//! and `--metrics-out` can export as JSONL.
+//!
+//! Same contract as the rest of `obs`: emitting draws no RNG and nothing
+//! branches on journal state, so the observatory cannot perturb model
+//! output (pinned by `tests/observatory.rs`). Emission respects the
+//! master telemetry switch ([`crate::obs::enabled`]).
+
+use crate::util::json::JsonObject;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// What kind of lifecycle action an event records.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// A model version entered the publication slot (`detail: "publish"`)
+    /// or a serve worker re-pinned to it (`detail: "pickup"`).
+    Publish,
+    /// A full hash-table rebuild (`lsh/layered.rs`), or — with subject
+    /// `"adaptive"` — a health-driven rebuild decision beyond the fixed
+    /// cadence.
+    Rebuild,
+    /// One shard of a sharded layer rebuilt (staggered or forced).
+    ShardRebuild,
+    /// The router shed a request at a model's full bounded queue.
+    Shed,
+    /// The router diverted a request to the canary model.
+    CanaryDecision,
+    /// A drift detector tripped (see `obs::drift`).
+    DriftAlert,
+}
+
+impl EventKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Publish => "publish",
+            EventKind::Rebuild => "rebuild",
+            EventKind::ShardRebuild => "shard_rebuild",
+            EventKind::Shed => "shed",
+            EventKind::CanaryDecision => "canary_decision",
+            EventKind::DriftAlert => "drift_alert",
+        }
+    }
+}
+
+/// One journal entry. `seq` is process-monotonic (gaps only if the
+/// journal itself is bypassed, which it never is); `t_micros` is
+/// microseconds since process start.
+#[derive(Clone, Debug)]
+pub struct Event {
+    pub seq: u64,
+    pub t_micros: u64,
+    pub kind: EventKind,
+    /// What the event is about: a model name, `"publisher"`, `"shard"`,
+    /// a drift metric name, …
+    pub subject: String,
+    /// Primary numeric payload: version, shard index, cumulative count —
+    /// whatever the kind's docs say.
+    pub value: u64,
+    /// Free-form qualifier (`"publish"` vs `"pickup"`, a drift reason, …).
+    pub detail: String,
+}
+
+impl Event {
+    pub fn to_json(&self) -> String {
+        let mut o = JsonObject::new();
+        o.u64("seq", self.seq)
+            .u64("t_micros", self.t_micros)
+            .str("kind", self.kind.name())
+            .str("subject", &self.subject)
+            .u64("value", self.value)
+            .str("detail", &self.detail);
+        o.finish()
+    }
+}
+
+/// Default capacity of the process-global journal.
+pub const DEFAULT_JOURNAL_CAP: usize = 4096;
+
+/// A bounded event ring. `emit` is a short Mutex push (events are rare
+/// next to requests); `recent` snapshots the tail without blocking
+/// writers for long.
+pub struct EventJournal {
+    cap: usize,
+    seq: AtomicU64,
+    dropped: AtomicU64,
+    ring: Mutex<VecDeque<Event>>,
+}
+
+impl EventJournal {
+    pub fn with_capacity(cap: usize) -> Self {
+        let cap = cap.max(1);
+        EventJournal {
+            cap,
+            seq: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            ring: Mutex::new(VecDeque::with_capacity(cap)),
+        }
+    }
+
+    /// Append one event; returns its sequence number. The oldest event
+    /// falls off (and is counted in `dropped`) when the ring is full.
+    pub fn emit(&self, kind: EventKind, subject: &str, value: u64, detail: &str) -> u64 {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let ev = Event {
+            seq,
+            t_micros: super::uptime_micros(),
+            kind,
+            subject: subject.to_string(),
+            value,
+            detail: detail.to_string(),
+        };
+        let mut g = self.ring.lock().expect("journal poisoned");
+        if g.len() == self.cap {
+            g.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        g.push_back(ev);
+        seq
+    }
+
+    /// Total events ever emitted (monotone, survives ring eviction).
+    pub fn total(&self) -> u64 {
+        self.seq.load(Ordering::Relaxed)
+    }
+
+    /// Events evicted from the ring so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Events currently held.
+    pub fn len(&self) -> usize {
+        self.ring.lock().expect("journal poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The newest `n` events in chronological (seq-ascending) order.
+    pub fn recent(&self, n: usize) -> Vec<Event> {
+        let g = self.ring.lock().expect("journal poisoned");
+        let skip = g.len().saturating_sub(n);
+        g.iter().skip(skip).cloned().collect()
+    }
+
+    /// The newest `n` events as JSONL (one JSON object per line, newline
+    /// terminated; empty string when the journal is empty).
+    pub fn to_jsonl(&self, n: usize) -> String {
+        let mut out = String::new();
+        for ev in self.recent(n) {
+            out.push_str(&ev.to_json());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// The process-global journal. First call registers the journal's own
+/// counters into the global metrics registry.
+pub fn journal() -> &'static EventJournal {
+    static J: OnceLock<EventJournal> = OnceLock::new();
+    static REG: OnceLock<()> = OnceLock::new();
+    let j: &'static EventJournal = J.get_or_init(|| EventJournal::with_capacity(DEFAULT_JOURNAL_CAP));
+    REG.get_or_init(|| {
+        super::export::global()
+            .register_counter("hashdl_events_total", || journal().total() as f64);
+        super::export::global()
+            .register_counter("hashdl_events_dropped_total", || journal().dropped() as f64);
+    });
+    j
+}
+
+/// Emit into the global journal, honoring the master telemetry switch
+/// (`--telemetry off` silences the journal exactly like the stage
+/// histograms).
+#[inline]
+pub fn emit(kind: EventKind, subject: &str, value: u64, detail: &str) {
+    if super::enabled() {
+        journal().emit(kind, subject, value, detail);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_is_bounded_and_keeps_the_newest() {
+        let j = EventJournal::with_capacity(4);
+        for i in 0..10u64 {
+            j.emit(EventKind::Rebuild, "t", i, "");
+        }
+        assert_eq!(j.len(), 4);
+        assert_eq!(j.total(), 10);
+        assert_eq!(j.dropped(), 6);
+        let tail = j.recent(100);
+        let seqs: Vec<u64> = tail.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9], "oldest evicted first, order kept");
+    }
+
+    #[test]
+    fn recent_n_takes_the_tail() {
+        let j = EventJournal::with_capacity(8);
+        for i in 0..5u64 {
+            j.emit(EventKind::Publish, "p", i, "publish");
+        }
+        let two = j.recent(2);
+        assert_eq!(two.len(), 2);
+        assert_eq!(two[0].seq, 3);
+        assert_eq!(two[1].seq, 4);
+    }
+
+    #[test]
+    fn jsonl_is_one_object_per_line() {
+        let j = EventJournal::with_capacity(8);
+        j.emit(EventKind::Shed, "m\"0", 1, "");
+        j.emit(EventKind::DriftAlert, "recall", 2, "0.80 -> 0.55");
+        let text = j.to_jsonl(10);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in &lines {
+            assert!(line.starts_with('{') && line.ends_with('}'), "bad line: {line}");
+        }
+        assert!(lines[0].contains("\"kind\": \"shed\""));
+        assert!(lines[0].contains("m\\\"0"), "subjects must be escaped");
+        assert!(lines[1].contains("\"kind\": \"drift_alert\""));
+    }
+
+    #[test]
+    fn global_journal_registers_its_counters() {
+        journal();
+        let names = super::super::export::global().snapshot().names();
+        assert!(names.contains(&"hashdl_events_total".to_string()));
+        assert!(names.contains(&"hashdl_events_dropped_total".to_string()));
+    }
+}

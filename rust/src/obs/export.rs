@@ -29,12 +29,31 @@ impl MetricKind {
 type ReadScalar = Box<dyn Fn() -> f64 + Send + Sync>;
 type ReadHist = Box<dyn Fn() -> LatencySnapshot + Send + Sync>;
 
+/// Render one `key="value"` label pair, sanitised for the exposition
+/// format: quotes/backslashes escaped, whitespace collapsed to `_` (the
+/// CI scrape parser splits lines on the last space, so label values must
+/// never contain one).
+pub fn label(key: &str, value: &str) -> String {
+    let mut v = String::with_capacity(value.len());
+    for c in value.chars() {
+        match c {
+            '"' => v.push_str("\\\""),
+            '\\' => v.push_str("\\\\"),
+            '\n' => v.push_str("\\n"),
+            c if c.is_whitespace() => v.push('_'),
+            c => v.push(c),
+        }
+    }
+    format!("{key}=\"{v}\"")
+}
+
 /// Named counters/gauges/histograms, read lazily at snapshot time.
-/// Re-registering a name replaces the reader (pools come and go in
-/// benches; the latest owner of a name wins).
+/// Scalars may carry a pre-rendered label set (`shard="0"`); the
+/// identity a registration replaces is (name, labels) — pools come and
+/// go in benches; the latest owner of an identity wins.
 #[derive(Default)]
 pub struct MetricsRegistry {
-    scalars: Mutex<Vec<(String, MetricKind, ReadScalar)>>,
+    scalars: Mutex<Vec<(String, String, MetricKind, ReadScalar)>>,
     hists: Mutex<Vec<(String, ReadHist)>>,
 }
 
@@ -49,12 +68,25 @@ impl MetricsRegistry {
         kind: MetricKind,
         read: impl Fn() -> f64 + Send + Sync + 'static,
     ) {
+        self.register_labeled_scalar(name, "", kind, read);
+    }
+
+    /// Register one series of a labeled family. `labels` is the
+    /// pre-rendered pair list without braces (`layer="0",shard="2"` —
+    /// build pairs with [`label`]); `""` means an unlabeled metric.
+    pub fn register_labeled_scalar(
+        &self,
+        name: &str,
+        labels: &str,
+        kind: MetricKind,
+        read: impl Fn() -> f64 + Send + Sync + 'static,
+    ) {
         let mut v = self.scalars.lock().unwrap();
-        if let Some(slot) = v.iter_mut().find(|(n, _, _)| n == name) {
-            slot.1 = kind;
-            slot.2 = Box::new(read);
+        if let Some(slot) = v.iter_mut().find(|(n, l, _, _)| n == name && l == labels) {
+            slot.2 = kind;
+            slot.3 = Box::new(read);
         } else {
-            v.push((name.to_string(), kind, Box::new(read)));
+            v.push((name.to_string(), labels.to_string(), kind, Box::new(read)));
         }
     }
 
@@ -64,6 +96,24 @@ impl MetricsRegistry {
 
     pub fn register_gauge(&self, name: &str, read: impl Fn() -> f64 + Send + Sync + 'static) {
         self.register_scalar(name, MetricKind::Gauge, read);
+    }
+
+    pub fn register_labeled_counter(
+        &self,
+        name: &str,
+        labels: &str,
+        read: impl Fn() -> f64 + Send + Sync + 'static,
+    ) {
+        self.register_labeled_scalar(name, labels, MetricKind::Counter, read);
+    }
+
+    pub fn register_labeled_gauge(
+        &self,
+        name: &str,
+        labels: &str,
+        read: impl Fn() -> f64 + Send + Sync + 'static,
+    ) {
+        self.register_labeled_scalar(name, labels, MetricKind::Gauge, read);
     }
 
     pub fn register_histogram(
@@ -86,7 +136,7 @@ impl MetricsRegistry {
             .lock()
             .unwrap()
             .iter()
-            .map(|(n, k, f)| (n.clone(), *k, f()))
+            .map(|(n, l, k, f)| (n.clone(), l.clone(), *k, f()))
             .collect();
         let hists =
             self.hists.lock().unwrap().iter().map(|(n, f)| (n.clone(), f())).collect();
@@ -94,25 +144,51 @@ impl MetricsRegistry {
     }
 }
 
-/// A point-in-time reading of every registered metric.
+/// A point-in-time reading of every registered metric. Scalar tuples are
+/// (name, labels, kind, value) with `labels == ""` for unlabeled
+/// metrics.
 #[derive(Clone, Debug, Default)]
 pub struct MetricsSnapshot {
-    pub scalars: Vec<(String, MetricKind, f64)>,
+    pub scalars: Vec<(String, String, MetricKind, f64)>,
     pub hists: Vec<(String, LatencySnapshot)>,
 }
 
 impl MetricsSnapshot {
     /// Prometheus text exposition format. Histograms render cumulative
     /// `_bucket{le=...}` series (only the occupied bounds plus `+Inf`),
-    /// `_sum` and `_count`.
+    /// `_sum` and `_count`. Labeled scalar families are grouped under
+    /// one `# TYPE` line; a registry with only unlabeled metrics renders
+    /// byte-identically to the pre-label exporter.
     pub fn to_prometheus(&self) -> String {
         let mut out = String::new();
-        for (name, kind, v) in &self.scalars {
-            out.push_str(&format!("# TYPE {name} {}\n", kind.prom()));
-            if *v == v.trunc() && v.abs() < 9.0e15 {
-                out.push_str(&format!("{name} {}\n", *v as i64));
-            } else {
-                out.push_str(&format!("{name} {v}\n"));
+        // Families in first-registration order, every series of a family
+        // contiguous under its single TYPE line.
+        let mut families: Vec<&str> = Vec::new();
+        for (name, _, _, _) in &self.scalars {
+            if !families.contains(&name.as_str()) {
+                families.push(name.as_str());
+            }
+        }
+        for family in families {
+            let mut typed = false;
+            for (name, labels, kind, v) in &self.scalars {
+                if name.as_str() != family {
+                    continue;
+                }
+                if !typed {
+                    out.push_str(&format!("# TYPE {name} {}\n", kind.prom()));
+                    typed = true;
+                }
+                let series = if labels.is_empty() {
+                    name.clone()
+                } else {
+                    format!("{name}{{{labels}}}")
+                };
+                if *v == v.trunc() && v.abs() < 9.0e15 {
+                    out.push_str(&format!("{series} {}\n", *v as i64));
+                } else {
+                    out.push_str(&format!("{series} {v}\n"));
+                }
             }
         }
         for (name, snap) in &self.hists {
@@ -135,15 +211,30 @@ impl MetricsSnapshot {
         out
     }
 
-    /// JSON rendering: scalars verbatim, histograms summarised
-    /// (count/sum/mean/p50/p99).
+    /// JSON rendering: scalars verbatim (labeled series keyed as
+    /// `name{labels}`), histograms summarised (count/sum/mean/p50/p99).
     pub fn to_json(&self) -> String {
+        self.render_json(None)
+    }
+
+    /// [`Self::to_json`] plus a `series` field holding pre-rendered
+    /// rollups (see `obs::series::SeriesStore::rollups_to_json`).
+    pub fn to_json_with_series(&self, series_json: &str) -> String {
+        self.render_json(Some(series_json))
+    }
+
+    fn render_json(&self, series_json: Option<&str>) -> String {
         let mut counters = JsonObject::new();
         let mut gauges = JsonObject::new();
-        for (name, kind, v) in &self.scalars {
+        for (name, labels, kind, v) in &self.scalars {
+            let key = if labels.is_empty() {
+                name.clone()
+            } else {
+                format!("{name}{{{labels}}}")
+            };
             match kind {
-                MetricKind::Counter => counters.f64(name, *v),
-                MetricKind::Gauge => gauges.f64(name, *v),
+                MetricKind::Counter => counters.f64(&key, *v),
+                MetricKind::Gauge => gauges.f64(&key, *v),
             };
         }
         let mut hists = JsonObject::new();
@@ -160,12 +251,26 @@ impl MetricsSnapshot {
         o.raw("counters", &counters.finish())
             .raw("gauges", &gauges.finish())
             .raw("histograms", &hists.finish());
+        if let Some(series) = series_json {
+            o.raw("series", series);
+        }
         o.finish()
     }
 
-    /// Names of every metric in the snapshot (scalar and histogram).
+    /// Qualified names of every metric in the snapshot (scalar series as
+    /// `name` or `name{labels}`, plus histograms).
     pub fn names(&self) -> Vec<String> {
-        let mut v: Vec<String> = self.scalars.iter().map(|(n, _, _)| n.clone()).collect();
+        let mut v: Vec<String> = self
+            .scalars
+            .iter()
+            .map(|(n, l, _, _)| {
+                if l.is_empty() {
+                    n.clone()
+                } else {
+                    format!("{n}{{{l}}}")
+                }
+            })
+            .collect();
         v.extend(self.hists.iter().map(|(n, _)| n.clone()));
         v
     }
@@ -212,9 +317,9 @@ mod tests {
         c.store(41, Ordering::Relaxed);
         let snap = reg.snapshot();
         assert_eq!(snap.scalars.len(), 1);
-        assert_eq!(snap.scalars[0].2, 41.0);
+        assert_eq!(snap.scalars[0].3, 41.0);
         c.store(42, Ordering::Relaxed);
-        assert_eq!(reg.snapshot().scalars[0].2, 42.0);
+        assert_eq!(reg.snapshot().scalars[0].3, 42.0);
     }
 
     #[test]
@@ -224,7 +329,58 @@ mod tests {
         reg.register_gauge("g", || 2.0);
         let snap = reg.snapshot();
         assert_eq!(snap.scalars.len(), 1);
-        assert_eq!(snap.scalars[0].2, 2.0);
+        assert_eq!(snap.scalars[0].3, 2.0);
+    }
+
+    #[test]
+    fn labeled_series_share_one_type_line_and_distinct_identities() {
+        let reg = MetricsRegistry::new();
+        reg.register_labeled_gauge("hashdl_table_skew", &label("shard", "0"), || 1.5);
+        reg.register_labeled_gauge("hashdl_table_skew", &label("shard", "1"), || 2.5);
+        // Same (name, labels) replaces; different labels coexist.
+        reg.register_labeled_gauge("hashdl_table_skew", &label("shard", "0"), || 1.25);
+        let snap = reg.snapshot();
+        assert_eq!(snap.scalars.len(), 2);
+        let text = snap.to_prometheus();
+        assert_eq!(
+            text.matches("# TYPE hashdl_table_skew gauge").count(),
+            1,
+            "one TYPE line per family:\n{text}"
+        );
+        assert!(text.contains("hashdl_table_skew{shard=\"0\"} 1.25"), "{text}");
+        assert!(text.contains("hashdl_table_skew{shard=\"1\"} 2.5"), "{text}");
+        let js = snap.to_json();
+        assert!(js.contains("\"hashdl_table_skew{shard=\\\"0\\\"}\": 1.25"), "{js}");
+    }
+
+    #[test]
+    fn unlabeled_only_output_is_unchanged_by_label_support() {
+        // The exact pre-label rendering: one TYPE line then one sample
+        // line per scalar, in registration order.
+        let reg = MetricsRegistry::new();
+        reg.register_counter("a_total", || 3.0);
+        reg.register_gauge("b_now", || 0.5);
+        assert_eq!(
+            reg.snapshot().to_prometheus(),
+            "# TYPE a_total counter\na_total 3\n# TYPE b_now gauge\nb_now 0.5\n"
+        );
+    }
+
+    #[test]
+    fn label_sanitises_hostile_values() {
+        assert_eq!(label("model", "m0"), "model=\"m0\"");
+        assert_eq!(label("model", "a b"), "model=\"a_b\"");
+        assert_eq!(label("model", "q\"uote"), "model=\"q\\\"uote\"");
+        assert_eq!(label("model", "back\\slash"), "model=\"back\\\\slash\"");
+    }
+
+    #[test]
+    fn json_with_series_appends_the_rollups() {
+        let reg = MetricsRegistry::new();
+        reg.register_counter("c_total", || 1.0);
+        let js = reg.snapshot().to_json_with_series("[{\"name\": \"c_total\"}]");
+        assert!(js.contains("\"series\": [{\"name\": \"c_total\"}]"), "{js}");
+        assert!(!reg.snapshot().to_json().contains("series"), "plain to_json stays plain");
     }
 
     #[test]

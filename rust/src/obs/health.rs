@@ -13,10 +13,12 @@
 //! bitwise test in `tests/telemetry.rs` pins that).
 
 use crate::nn::layer::Layer;
+use crate::obs::export::{label, MetricKind};
 use crate::tensor::vecops::{dot, top_k_indices};
 use crate::util::json::JsonObject;
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, OnceLock};
 
 /// Per-table mutable health counters. Lives inside the table structs;
 /// all writes are relaxed atomics so shared (`Arc`) frozen tables can
@@ -302,6 +304,61 @@ pub fn recall_probe(layer: &Layer, q: &[f32], selected: &[u32], tally: &HealthTa
     tally.note_recall(hits as u64, k as u64);
 }
 
+// --- exporter board ---------------------------------------------------
+
+/// Latest health row per (layer, shard). The trainer's selectors are
+/// mutably borrowed while training runs, so the exporter cannot hold
+/// reader closures into them; instead each epoch *pushes* its rows here
+/// and the registered gauges read the board.
+fn board() -> &'static Mutex<BTreeMap<(usize, usize), TableHealth>> {
+    static B: OnceLock<Mutex<BTreeMap<(usize, usize), TableHealth>>> = OnceLock::new();
+    B.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+fn board_read(layer: usize, shard: usize, f: fn(&TableHealth) -> f64) -> f64 {
+    board().lock().expect("health board").get(&(layer, shard)).map(f).unwrap_or(0.0)
+}
+
+/// Publish one layer's (or one shard's) health row to the global
+/// exporter: the first push of a given (layer, shard) registers a
+/// labeled series per health family — `layer="l"` alone when the layer
+/// is unsharded, `layer="l",shard="s"` when sharded — and every push
+/// updates the value the gauges read. Pure bookkeeping: no RNG, nothing
+/// reads the board on a model path.
+pub fn publish_health_row(layer: usize, shard: usize, sharded: bool, h: &TableHealth) {
+    board().lock().expect("health board").insert((layer, shard), h.clone());
+
+    static REGISTERED: OnceLock<Mutex<Vec<(usize, usize, bool)>>> = OnceLock::new();
+    let reg = REGISTERED.get_or_init(|| Mutex::new(Vec::new()));
+    {
+        let mut g = reg.lock().expect("health board registry");
+        if g.contains(&(layer, shard, sharded)) {
+            return;
+        }
+        g.push((layer, shard, sharded));
+    }
+    let labels = if sharded {
+        format!("{},{}", label("layer", &layer.to_string()), label("shard", &shard.to_string()))
+    } else {
+        label("layer", &layer.to_string())
+    };
+    type Field = (&'static str, MetricKind, fn(&TableHealth) -> f64);
+    const FIELDS: [Field; 8] = [
+        ("hashdl_table_nodes", MetricKind::Gauge, |h| h.nodes as f64),
+        ("hashdl_table_max_bucket", MetricKind::Gauge, |h| h.max_bucket as f64),
+        ("hashdl_table_empty_bucket_fraction", MetricKind::Gauge, |h| h.empty_bucket_fraction),
+        ("hashdl_table_occupancy_skew", MetricKind::Gauge, |h| h.occupancy_skew),
+        ("hashdl_table_recall_estimate", MetricKind::Gauge, |h| h.recall_estimate),
+        ("hashdl_table_recall_trials_total", MetricKind::Counter, |h| h.recall_trials as f64),
+        ("hashdl_table_rebuilds_total", MetricKind::Counter, |h| h.rebuilds as f64),
+        ("hashdl_table_rebuild_age_batches", MetricKind::Gauge, |h| h.rebuild_age_batches as f64),
+    ];
+    for (name, kind, read) in FIELDS {
+        crate::obs::export::global()
+            .register_labeled_scalar(name, &labels, kind, move || board_read(layer, shard, read));
+    }
+}
+
 // --- sampling cadence -------------------------------------------------
 
 static RECALL_EVERY: AtomicU64 = AtomicU64::new(64);
@@ -418,6 +475,25 @@ mod tests {
         assert_eq!(h.mean_node_activations, 0.0);
         assert_eq!(h.recall_estimate, 0.0);
         assert!(h.to_json().starts_with('{'));
+    }
+
+    #[test]
+    fn health_board_exports_labeled_rows() {
+        // Use high layer indices so other tests' rows cannot collide.
+        let mut h = TableHealth { occupancy_skew: 2.5, ..TableHealth::default() };
+        publish_health_row(91, 0, false, &h);
+        publish_health_row(92, 1, true, &h);
+        let text = crate::obs::export::global().snapshot().to_prometheus();
+        assert!(text.contains("hashdl_table_occupancy_skew{layer=\"91\"} 2.5"), "{text}");
+        assert!(
+            text.contains("hashdl_table_occupancy_skew{layer=\"92\",shard=\"1\"} 2.5"),
+            "{text}"
+        );
+        // A later push updates the value behind the same series.
+        h.occupancy_skew = 4.0;
+        publish_health_row(91, 0, false, &h);
+        let text = crate::obs::export::global().snapshot().to_prometheus();
+        assert!(text.contains("hashdl_table_occupancy_skew{layer=\"91\"} 4"), "{text}");
     }
 
     #[test]

@@ -1,0 +1,195 @@
+//! Std-only HTTP/1.1 observability listener (`--obs-listen ADDR`).
+//!
+//! A minimal single-purpose front door for the metrics registry and the
+//! event journal — GET only, one short-lived connection at a time,
+//! `Connection: close` on every response. Routes:
+//!
+//! | route           | body                                            |
+//! |-----------------|-------------------------------------------------|
+//! | `/metrics`      | Prometheus text exposition of the registry      |
+//! | `/metrics.json` | the same snapshot as JSON, plus series rollups  |
+//! | `/events?n=K`   | newest K journal events as JSONL (default 256)  |
+//! | `/health`       | liveness JSON (uptime, event/alert totals)      |
+//!
+//! This is deliberately not the ROADMAP's request-serving front door:
+//! no keep-alive, no pipelining, no POST — a scrape endpoint, built so
+//! the drift observatory is watchable while `train-serve`/`serve-bench`
+//! run. The acceptor thread is detached; it dies with the process.
+
+use crate::util::json::JsonObject;
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::Duration;
+
+/// How many journal events `/events` returns when `?n=` is absent.
+pub const DEFAULT_EVENT_TAIL: usize = 256;
+
+/// Handle onto a running listener (the accept loop owns the socket).
+pub struct ObsServer {
+    addr: SocketAddr,
+}
+
+impl ObsServer {
+    /// The bound address — useful with port 0 (tests bind
+    /// `127.0.0.1:0` and read the assigned port here).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+/// Bind `addr` and spawn the accept loop. Returns once the socket is
+/// bound, so a scrape immediately after `serve` succeeds.
+pub fn serve(addr: &str) -> io::Result<ObsServer> {
+    let listener = TcpListener::bind(addr)?;
+    let bound = listener.local_addr()?;
+    std::thread::Builder::new()
+        .name("hashdl-obs-http".into())
+        .spawn(move || accept_loop(&listener))
+        .map_err(|e| io::Error::new(io::ErrorKind::Other, e))?;
+    Ok(ObsServer { addr: bound })
+}
+
+fn accept_loop(listener: &TcpListener) {
+    for conn in listener.incoming() {
+        match conn {
+            Ok(stream) => {
+                // One tiny request per connection; a stalled client must
+                // not wedge the scrape endpoint forever.
+                let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+                let _ = stream.set_write_timeout(Some(Duration::from_secs(2)));
+                let _ = handle_connection(stream);
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+}
+
+fn handle_connection(mut stream: TcpStream) -> io::Result<()> {
+    let mut buf = [0u8; 4096];
+    let mut req = Vec::new();
+    // Read until the end of the request head (we ignore bodies — GET
+    // only) or the buffer limit.
+    loop {
+        let n = stream.read(&mut buf)?;
+        if n == 0 {
+            break;
+        }
+        req.extend_from_slice(&buf[..n]);
+        if req.windows(4).any(|w| w == b"\r\n\r\n") || req.len() > 16 * 1024 {
+            break;
+        }
+    }
+    let head = String::from_utf8_lossy(&req);
+    let mut parts = head.lines().next().unwrap_or("").split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let target = parts.next().unwrap_or("");
+    let (status, content_type, body) = if method != "GET" {
+        (405, "text/plain; charset=utf-8", "method not allowed\n".to_string())
+    } else {
+        respond(target)
+    };
+    let reason = match status {
+        200 => "OK",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        _ => "Error",
+    };
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+/// Route a GET target to (status, content type, body). Split out from
+/// the socket plumbing so tests exercise routing directly.
+pub fn respond(target: &str) -> (u16, &'static str, String) {
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (target, ""),
+    };
+    match path {
+        "/metrics" => (
+            200,
+            "text/plain; version=0.0.4; charset=utf-8",
+            crate::obs::global().snapshot().to_prometheus(),
+        ),
+        "/metrics.json" => {
+            crate::obs::series::sample_global_now();
+            let body = crate::obs::global()
+                .snapshot()
+                .to_json_with_series(&crate::obs::series::store().rollups_to_json());
+            (200, "application/json", body)
+        }
+        "/events" => {
+            let n = query
+                .split('&')
+                .find_map(|kv| kv.strip_prefix("n="))
+                .and_then(|v| v.parse::<usize>().ok())
+                .unwrap_or(DEFAULT_EVENT_TAIL);
+            (200, "application/x-ndjson", crate::obs::events::journal().to_jsonl(n))
+        }
+        "/health" => {
+            let mut o = JsonObject::new();
+            o.str("status", "ok")
+                .u64("uptime_micros", crate::obs::uptime_micros())
+                .u64("events_total", crate::obs::events::journal().total())
+                .u64("drift_alerts_total", crate::obs::drift::drift_alerts_total())
+                .u64("adaptive_rebuilds_total", crate::obs::drift::adaptive_rebuilds_total());
+            (200, "application/json", o.finish() + "\n")
+        }
+        _ => (404, "text/plain; charset=utf-8", "not found\n".to_string()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routes_cover_the_contract() {
+        let (code, ct, body) = respond("/health");
+        assert_eq!(code, 200);
+        assert_eq!(ct, "application/json");
+        assert!(body.contains("\"status\": \"ok\""));
+
+        let (code, ct, _) = respond("/metrics");
+        assert_eq!(code, 200);
+        assert!(ct.starts_with("text/plain"));
+
+        let (code, _, body) = respond("/metrics.json");
+        assert_eq!(code, 200);
+        assert!(body.contains("\"counters\""));
+        assert!(body.contains("\"series\""));
+
+        let (code, ct, _) = respond("/events?n=5");
+        assert_eq!(code, 200);
+        assert_eq!(ct, "application/x-ndjson");
+
+        let (code, _, _) = respond("/nope");
+        assert_eq!(code, 404);
+    }
+
+    #[test]
+    fn events_query_parses_and_defaults() {
+        crate::obs::events::journal();
+        // Unparsable / absent n falls back to the default tail.
+        let (code, _, _) = respond("/events?n=zebra");
+        assert_eq!(code, 200);
+        let (code, _, _) = respond("/events");
+        assert_eq!(code, 200);
+    }
+
+    #[test]
+    fn server_binds_and_answers_over_tcp() {
+        let srv = serve("127.0.0.1:0").expect("bind");
+        let mut conn = TcpStream::connect(srv.local_addr()).expect("connect");
+        conn.write_all(b"GET /health HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        conn.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 200 OK\r\n"), "{resp}");
+        assert!(resp.contains("\"status\": \"ok\""));
+    }
+}

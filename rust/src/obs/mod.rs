@@ -14,17 +14,32 @@
 //!   through `TableView::health`.
 //! * **Exporter** ([`export`]): a process-wide [`MetricsRegistry`] of
 //!   reader closures rendering Prometheus text and JSON.
+//! * **Drift observatory** ([`series`], [`events`], [`drift`],
+//!   [`http`]): ring time-series over the registry with a background
+//!   sampler, a bounded structured event journal, detectors that turn
+//!   health decay into `DriftAlert`s and health-driven rebuilds, and a
+//!   std-only HTTP listener serving `/metrics`, `/metrics.json`,
+//!   `/events` and `/health`.
 //!
-//! Design contract, pinned by `tests/telemetry.rs`: telemetry must not
-//! change model output. Nothing here draws from an RNG, and no forward
-//! or backward code path branches on a counter value — recording is
-//! relaxed atomics, reading is pure. The master switch [`set_enabled`]
-//! exists for overhead measurement, not correctness.
+//! Design contract, pinned by `tests/telemetry.rs` and
+//! `tests/observatory.rs`: telemetry must not change model output.
+//! Nothing here draws from an RNG, and no forward or backward code path
+//! branches on a counter value — recording is relaxed atomics, reading
+//! is pure. The master switch [`set_enabled`] exists for overhead
+//! measurement, not correctness. (`RebuildPolicy::HealthDriven` is the
+//! one deliberate exception: it changes *when* tables rebuild; the
+//! default `Fixed` policy is bit-for-bit the pre-observatory cadence.)
 
+pub mod drift;
+pub mod events;
 pub mod export;
 pub mod health;
+pub mod http;
+pub mod series;
 pub mod trace;
 
+pub use drift::{DriftAlert, DriftConfig, HealthDriftDetector, RebuildPolicy};
+pub use events::EventKind;
 pub use export::{global, MetricKind, MetricsRegistry, MetricsSnapshot};
 pub use health::{recall_due, recall_probe, set_recall_every, HealthTally, TableHealth};
 pub use trace::{
@@ -48,6 +63,14 @@ pub fn set_enabled(on: bool) {
 #[inline]
 pub fn enabled() -> bool {
     ENABLED.load(Ordering::Relaxed)
+}
+
+/// Microseconds since the process-wide observability epoch (first call
+/// to anything that needs a timestamp). Event and series timestamps
+/// share this clock so they correlate.
+pub fn uptime_micros() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64
 }
 
 /// Global per-stage latency histograms. One fixed array — all pools,

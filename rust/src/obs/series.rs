@@ -1,0 +1,363 @@
+//! Fixed-capacity ring time-series over the metrics registry.
+//!
+//! A [`SeriesRing`] holds the last N samples of one metric as
+//! `(t_micros, value)` pairs in preallocated atomic slots — the writer
+//! (one background sampler thread) publishes each sample with two
+//! relaxed stores and a release bump of the head counter; readers never
+//! block it. A [`SeriesStore`] keys one ring per registry metric
+//! (scalars verbatim, histograms as their `_count`), and
+//! [`SeriesRollup`] summarises a ring's window: last/min/max/mean, plus
+//! a counter's delta-over-time as a rate.
+//!
+//! The global store is fed by [`ensure_sampler`] — a daemon thread that
+//! snapshots [`crate::obs::global`] on a fixed interval and hands the
+//! fresh window to the drift scanner (`obs::drift`). Rollups land in the
+//! `--metrics-out` JSON twin and back the `/metrics.json` endpoint's
+//! history.
+
+use crate::obs::export::{MetricKind, MetricsSnapshot};
+use crate::util::json::{JsonArray, JsonObject};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+/// One sample of one series.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SeriesPoint {
+    pub t_micros: u64,
+    pub value: f64,
+}
+
+struct Slot {
+    t: AtomicU64,
+    bits: AtomicU64,
+}
+
+/// Lock-free fixed-capacity ring of samples. Single writer (the sampler
+/// thread), any number of readers: `push` stores the slot then bumps
+/// `head` with release ordering; `window` reads `head` before and after
+/// copying and discards any slots the writer lapped in between, so a
+/// snapshot is always a consistent suffix of the series.
+pub struct SeriesRing {
+    slots: Box<[Slot]>,
+    /// Total samples ever pushed (ring index = head % capacity).
+    head: AtomicU64,
+}
+
+impl SeriesRing {
+    pub fn with_capacity(cap: usize) -> Self {
+        let cap = cap.max(2);
+        let mut slots = Vec::with_capacity(cap);
+        slots.resize_with(cap, || Slot { t: AtomicU64::new(0), bits: AtomicU64::new(0) });
+        SeriesRing { slots: slots.into_boxed_slice(), head: AtomicU64::new(0) }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total samples ever pushed (not capped by capacity).
+    pub fn total(&self) -> u64 {
+        self.head.load(Ordering::Acquire)
+    }
+
+    /// Append one sample. Single-writer: callers must serialise pushes
+    /// (the global store's sampler thread is the only writer in
+    /// practice).
+    pub fn push(&self, t_micros: u64, value: f64) {
+        let head = self.head.load(Ordering::Relaxed);
+        let slot = &self.slots[(head % self.slots.len() as u64) as usize];
+        slot.t.store(t_micros, Ordering::Relaxed);
+        slot.bits.store(value.to_bits(), Ordering::Relaxed);
+        self.head.store(head + 1, Ordering::Release);
+    }
+
+    /// The retained window, oldest → newest. Samples overwritten while
+    /// the copy was in flight are dropped from the front.
+    pub fn window(&self) -> Vec<SeriesPoint> {
+        let cap = self.slots.len() as u64;
+        let before = self.head.load(Ordering::Acquire);
+        let held = before.min(cap);
+        let start = before - held;
+        let mut out = Vec::with_capacity(held as usize);
+        for i in start..before {
+            let slot = &self.slots[(i % cap) as usize];
+            out.push(SeriesPoint {
+                t_micros: slot.t.load(Ordering::Relaxed),
+                value: f64::from_bits(slot.bits.load(Ordering::Relaxed)),
+            });
+        }
+        let after = self.head.load(Ordering::Acquire);
+        // The writer advanced by (after - before) during the copy; that
+        // many of the oldest copied slots may hold torn/new data.
+        let lapped = (after - before).min(out.len() as u64) as usize;
+        out.drain(..lapped);
+        out
+    }
+}
+
+/// Windowed summary of one series.
+#[derive(Clone, Debug)]
+pub struct SeriesRollup {
+    pub name: String,
+    pub kind: MetricKind,
+    /// Samples in the summarised window.
+    pub samples: usize,
+    pub last: f64,
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+    /// Counters only: (last − first) / window seconds. 0 for gauges or
+    /// windows under two samples.
+    pub rate_per_sec: f64,
+}
+
+impl SeriesRollup {
+    /// Summarise a window (as produced by [`SeriesRing::window`]).
+    pub fn of(name: &str, kind: MetricKind, window: &[SeriesPoint]) -> Option<Self> {
+        let first = window.first()?;
+        let last = window.last()?;
+        let mut min = f64::INFINITY;
+        let mut max = f64::NEG_INFINITY;
+        let mut sum = 0.0;
+        for p in window {
+            min = min.min(p.value);
+            max = max.max(p.value);
+            sum += p.value;
+        }
+        let span_secs = (last.t_micros.saturating_sub(first.t_micros)) as f64 / 1e6;
+        let rate_per_sec = if kind == MetricKind::Counter && window.len() >= 2 && span_secs > 0.0
+        {
+            (last.value - first.value) / span_secs
+        } else {
+            0.0
+        };
+        Some(SeriesRollup {
+            name: name.to_string(),
+            kind,
+            samples: window.len(),
+            last: last.value,
+            min,
+            max,
+            mean: sum / window.len() as f64,
+            rate_per_sec,
+        })
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut o = JsonObject::new();
+        o.str("name", &self.name)
+            .str("kind", match self.kind {
+                MetricKind::Counter => "counter",
+                MetricKind::Gauge => "gauge",
+            })
+            .usize("samples", self.samples)
+            .f64("last", self.last)
+            .f64("min", self.min)
+            .f64("max", self.max)
+            .fixed("mean", self.mean, 3)
+            .fixed("rate_per_sec", self.rate_per_sec, 3);
+        o.finish()
+    }
+}
+
+/// Name → ring map over a metrics registry. Rings are created on first
+/// sight of a metric and shared out as `Arc` so drift detectors can hold
+/// one without locking the store.
+pub struct SeriesStore {
+    cap: usize,
+    series: Mutex<Vec<(String, MetricKind, Arc<SeriesRing>)>>,
+}
+
+impl SeriesStore {
+    pub fn with_capacity(cap: usize) -> Self {
+        SeriesStore { cap, series: Mutex::new(Vec::new()) }
+    }
+
+    /// Fold one registry snapshot in at time `t_micros`: every scalar
+    /// becomes a sample under its qualified name (`name` or
+    /// `name{labels}`), every histogram contributes its cumulative
+    /// `_count` as a counter series.
+    pub fn sample(&self, snap: &MetricsSnapshot, t_micros: u64) {
+        let mut g = self.series.lock().expect("series store poisoned");
+        for (name, labels, kind, v) in &snap.scalars {
+            let key = qualified(name, labels);
+            Self::push_locked(&mut g, self.cap, &key, *kind, t_micros, *v);
+        }
+        for (name, snap_h) in &snap.hists {
+            let key = format!("{name}_count");
+            Self::push_locked(&mut g, self.cap, &key, MetricKind::Counter, t_micros, snap_h.count() as f64);
+        }
+    }
+
+    fn push_locked(
+        g: &mut Vec<(String, MetricKind, Arc<SeriesRing>)>,
+        cap: usize,
+        key: &str,
+        kind: MetricKind,
+        t_micros: u64,
+        v: f64,
+    ) {
+        if let Some((_, _, ring)) = g.iter().find(|(n, _, _)| n == key) {
+            ring.push(t_micros, v);
+        } else {
+            let ring = Arc::new(SeriesRing::with_capacity(cap));
+            ring.push(t_micros, v);
+            g.push((key.to_string(), kind, ring));
+        }
+    }
+
+    /// The ring for a qualified metric name, if it has ever been sampled.
+    pub fn get(&self, key: &str) -> Option<Arc<SeriesRing>> {
+        self.series
+            .lock()
+            .expect("series store poisoned")
+            .iter()
+            .find(|(n, _, _)| n == key)
+            .map(|(_, _, r)| Arc::clone(r))
+    }
+
+    /// All (key, kind, ring) triples, in first-seen order.
+    pub fn all(&self) -> Vec<(String, MetricKind, Arc<SeriesRing>)> {
+        self.series
+            .lock()
+            .expect("series store poisoned")
+            .iter()
+            .map(|(n, k, r)| (n.clone(), *k, Arc::clone(r)))
+            .collect()
+    }
+
+    /// Roll every series' retained window up.
+    pub fn rollups(&self) -> Vec<SeriesRollup> {
+        self.all()
+            .into_iter()
+            .filter_map(|(n, k, r)| SeriesRollup::of(&n, k, &r.window()))
+            .collect()
+    }
+
+    /// Rollups as a JSON array (the `--metrics-out` twin's `series`
+    /// field).
+    pub fn rollups_to_json(&self) -> String {
+        let mut arr = JsonArray::new();
+        for r in self.rollups() {
+            arr.push_raw(&r.to_json());
+        }
+        arr.finish()
+    }
+}
+
+fn qualified(name: &str, labels: &str) -> String {
+    if labels.is_empty() {
+        name.to_string()
+    } else {
+        format!("{name}{{{labels}}}")
+    }
+}
+
+/// Ring capacity of the global store: at the default 250 ms sampling
+/// interval this retains ~2 minutes of history per metric.
+pub const GLOBAL_SERIES_CAP: usize = 512;
+
+/// The process-global series store (fed by [`ensure_sampler`] or
+/// explicit [`sample_global_now`] calls).
+pub fn store() -> &'static SeriesStore {
+    static S: OnceLock<SeriesStore> = OnceLock::new();
+    S.get_or_init(|| SeriesStore::with_capacity(GLOBAL_SERIES_CAP))
+}
+
+/// Take one sample of the global registry into the global store right
+/// now (the sampler does this on its interval; `--metrics-out` does it
+/// once more at exit so rollups include the final state).
+pub fn sample_global_now() {
+    store().sample(&crate::obs::global().snapshot(), crate::obs::uptime_micros());
+}
+
+/// Start the background sampler thread (idempotent — the first caller's
+/// interval wins). Each tick snapshots the global registry into the
+/// global store and lets the drift scanner look at the fresh window.
+pub fn ensure_sampler(interval: Duration) {
+    static STARTED: OnceLock<()> = OnceLock::new();
+    STARTED.get_or_init(|| {
+        std::thread::Builder::new()
+            .name("hashdl-obs-sampler".into())
+            .spawn(move || loop {
+                if crate::obs::enabled() {
+                    sample_global_now();
+                    crate::obs::drift::scan_global_series();
+                }
+                std::thread::sleep(interval);
+            })
+            .expect("spawn obs sampler");
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_keeps_a_suffix_in_order() {
+        let r = SeriesRing::with_capacity(4);
+        for i in 0..7u64 {
+            r.push(i * 10, i as f64);
+        }
+        let w = r.window();
+        assert_eq!(w.len(), 4);
+        assert_eq!(w[0], SeriesPoint { t_micros: 30, value: 3.0 });
+        assert_eq!(w[3], SeriesPoint { t_micros: 60, value: 6.0 });
+        assert_eq!(r.total(), 7);
+    }
+
+    #[test]
+    fn short_ring_window_is_everything_so_far() {
+        let r = SeriesRing::with_capacity(8);
+        r.push(5, 1.5);
+        let w = r.window();
+        assert_eq!(w.len(), 1);
+        assert_eq!(w[0].value, 1.5);
+    }
+
+    #[test]
+    fn rollup_summarises_and_rates_counters() {
+        let pts: Vec<SeriesPoint> = (0..5)
+            .map(|i| SeriesPoint { t_micros: i * 1_000_000, value: (i * 100) as f64 })
+            .collect();
+        let c = SeriesRollup::of("reqs_total", MetricKind::Counter, &pts).unwrap();
+        assert_eq!(c.samples, 5);
+        assert_eq!(c.last, 400.0);
+        assert_eq!(c.min, 0.0);
+        assert_eq!(c.max, 400.0);
+        assert!((c.mean - 200.0).abs() < 1e-9);
+        // 400 over 4 seconds.
+        assert!((c.rate_per_sec - 100.0).abs() < 1e-9, "rate {}", c.rate_per_sec);
+        let g = SeriesRollup::of("queue_len", MetricKind::Gauge, &pts).unwrap();
+        assert_eq!(g.rate_per_sec, 0.0, "gauges do not rate");
+        assert!(SeriesRollup::of("empty", MetricKind::Gauge, &[]).is_none());
+    }
+
+    #[test]
+    fn store_samples_scalars_and_hist_counts() {
+        use crate::serve::stats::LatencyHistogram;
+        let reg = crate::obs::export::MetricsRegistry::new();
+        reg.register_counter("s_total", || 7.0);
+        reg.register_labeled_gauge("s_gauge", "layer=\"0\"", || 0.25);
+        let h = LatencyHistogram::new();
+        h.record(10);
+        let hs = h.snapshot();
+        reg.register_histogram("s_lat_micros", move || hs.clone());
+        let store = SeriesStore::with_capacity(16);
+        store.sample(&reg.snapshot(), 1_000);
+        store.sample(&reg.snapshot(), 2_000);
+        let names: Vec<String> = store.all().iter().map(|(n, _, _)| n.clone()).collect();
+        assert!(names.contains(&"s_total".to_string()));
+        assert!(names.contains(&"s_gauge{layer=\"0\"}".to_string()));
+        assert!(names.contains(&"s_lat_micros_count".to_string()));
+        let ring = store.get("s_total").unwrap();
+        assert_eq!(ring.window().len(), 2);
+        let rollups = store.rollups();
+        assert_eq!(rollups.len(), 3);
+        let js = store.rollups_to_json();
+        assert!(js.starts_with('[') && js.ends_with(']'));
+        assert!(js.contains("\"name\": \"s_total\""));
+    }
+}

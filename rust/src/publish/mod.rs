@@ -154,6 +154,10 @@ impl TablePublisher {
             slot: Slot::new(Arc::new(parts.into_model(0))),
             latest: AtomicU64::new(0),
         });
+        // Version 0 is a publication too — journalling it here means the
+        // frozen / publish-once serving paths still record at least one
+        // Publish event.
+        crate::obs::events::emit(crate::obs::EventKind::Publish, "publisher", 0, "start");
         (TablePublisher { shared: Arc::clone(&shared), next: 1 }, TableReader { shared })
     }
 
@@ -169,6 +173,7 @@ impl TablePublisher {
         // a reader that observes `latest == v` is guaranteed to load a
         // model with version >= v from the slot.
         self.shared.latest.store(v, Ordering::Release);
+        crate::obs::events::emit(crate::obs::EventKind::Publish, "publisher", v, "publish");
         v
     }
 

@@ -193,12 +193,21 @@ fn shadow_drainer(shared: Arc<ShadowShared>, rx: Receiver<Response>) {
     }
 }
 
+/// Canary-split observability: how many primary-addressed requests the
+/// deterministic hash diverted vs kept (relaxed atomics, exporter-only).
+#[derive(Default)]
+struct CanaryCounters {
+    diverted: AtomicU64,
+    kept: AtomicU64,
+}
+
 /// The fleet front-end. Cheap reads on the hot path; policy swaps and
 /// registry changes take effect on the next route call.
 pub struct Router {
     registry: Arc<ModelRegistry>,
     policy: RwLock<RoutePolicy>,
     shadow: Arc<ShadowShared>,
+    canary: Arc<CanaryCounters>,
     primary_tx: Sender<Response>,
     shadow_tx: Sender<Response>,
     drainers: Vec<std::thread::JoinHandle<()>>,
@@ -228,10 +237,20 @@ impl Router {
                     .expect("spawn shadow drainer")
             },
         ];
+        let canary = Arc::new(CanaryCounters::default());
+        let c = Arc::clone(&canary);
+        crate::obs::global().register_counter("hashdl_router_canary_diverted_total", move || {
+            c.diverted.load(Ordering::Relaxed) as f64
+        });
+        let c = Arc::clone(&canary);
+        crate::obs::global().register_counter("hashdl_router_canary_kept_total", move || {
+            c.kept.load(Ordering::Relaxed) as f64
+        });
         Router {
             registry,
             policy: RwLock::new(RoutePolicy::Exact),
             shadow: shared,
+            canary,
             primary_tx,
             shadow_tx,
             drainers,
@@ -267,13 +286,22 @@ impl Router {
         match &*policy {
             RoutePolicy::Exact => self.submit(&req.model, req.id, req.x, false, reply.clone()),
             RoutePolicy::Canary { primary, canary, canary_fraction } => {
-                let target: &str = if req.model == *primary
-                    && canary_assignment(req.id, *canary_fraction)
-                {
-                    canary
-                } else {
-                    &req.model
-                };
+                let diverted =
+                    req.model == *primary && canary_assignment(req.id, *canary_fraction);
+                if req.model == *primary {
+                    if diverted {
+                        self.canary.diverted.fetch_add(1, Ordering::Relaxed);
+                        crate::obs::events::emit(
+                            crate::obs::EventKind::CanaryDecision,
+                            canary,
+                            req.id,
+                            "diverted",
+                        );
+                    } else {
+                        self.canary.kept.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                let target: &str = if diverted { canary } else { &req.model };
                 self.submit(target, req.id, req.x, false, reply.clone())
             }
             RoutePolicy::Shadow { primary, shadow, shadow_fraction } => {
@@ -369,7 +397,8 @@ impl Router {
                 RouteOutcome::Enqueued { model: model.to_string() }
             }
             SubmitOutcome::QueueFull => {
-                entry.shed.fetch_add(1, Ordering::Relaxed);
+                let n = entry.shed.fetch_add(1, Ordering::Relaxed) + 1;
+                crate::obs::events::emit(crate::obs::EventKind::Shed, model, n, "queue_full");
                 RouteOutcome::Shed { model: model.to_string() }
             }
             SubmitOutcome::Closed => RouteOutcome::Closed { model: model.to_string() },

@@ -143,6 +143,23 @@ impl ModelRegistry {
             return Err(format!("model {name:?} is already registered"));
         }
         map.insert(name.to_string(), Arc::clone(&entry));
+        drop(map);
+        // Per-model admission counters in the global exporter, labelled by
+        // model name. Re-registering the same name after a deregister
+        // replaces the readers (same name + labels key).
+        let labels = crate::obs::export::label("model", name);
+        let e = Arc::clone(&entry);
+        crate::obs::global().register_labeled_counter(
+            "hashdl_router_accepted_total",
+            &labels,
+            move || e.accepted.load(Ordering::Relaxed) as f64,
+        );
+        let e = Arc::clone(&entry);
+        crate::obs::global().register_labeled_counter(
+            "hashdl_router_shed_total",
+            &labels,
+            move || e.shed.load(Ordering::Relaxed) as f64,
+        );
         Ok(entry)
     }
 

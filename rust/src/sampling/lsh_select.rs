@@ -15,6 +15,7 @@ use crate::exec::{densify_into, select_batch_into, BatchSelectScratch, TableView
 use crate::lsh::layered::{LayerTables, LshConfig};
 use crate::nn::layer::Layer;
 use crate::nn::sparse::LayerInput;
+use crate::obs::{DriftConfig, HealthDriftDetector, RebuildPolicy};
 use crate::sampling::{budget, NodeSelector, SelectionCost};
 use crate::util::rng::Pcg64;
 
@@ -22,6 +23,10 @@ pub struct LshSelector {
     tables: LayerTables,
     sparsity: f32,
     rebuild_every_epochs: usize,
+    /// Fixed cadence (default, bit-for-bit the historical behaviour) or
+    /// health-driven (the drift detector may force extra rebuilds).
+    policy: RebuildPolicy,
+    detector: HealthDriftDetector,
     /// Dense scratch for single-query selection (hash functions need the
     /// densified previous-layer activation vector).
     scratch_q: Vec<f32>,
@@ -50,6 +55,8 @@ impl LshSelector {
             tables: LayerTables::build(&layer.w, cfg, rng),
             sparsity,
             rebuild_every_epochs: rebuild_every_epochs.max(1),
+            policy: RebuildPolicy::Fixed,
+            detector: HealthDriftDetector::new("lsh", DriftConfig::default()),
             scratch_q: vec![0.0; layer.n_in()],
             fps_buf: Vec::new(),
             scored: Vec::new(),
@@ -57,6 +64,14 @@ impl LshSelector {
             per_sample_mults: Vec::new(),
             updates_since_rebuild: 0,
         }
+    }
+
+    /// Switch the rebuild policy (and detector thresholds). Called by
+    /// [`crate::sampling::make_selector`]; under `Fixed` the detector is
+    /// never consulted and epoch-end behaviour is unchanged.
+    pub fn set_rebuild_policy(&mut self, policy: RebuildPolicy, cfg: DriftConfig) {
+        self.policy = policy;
+        self.detector = HealthDriftDetector::new("lsh", cfg);
     }
 
     pub fn tables(&self) -> &LayerTables {
@@ -153,9 +168,21 @@ impl NodeSelector for LshSelector {
     }
 
     fn on_epoch_end(&mut self, layer: &Layer, epoch: usize, rng: &mut Pcg64) {
-        if (epoch + 1) % self.rebuild_every_epochs == 0 {
+        let due = (epoch + 1) % self.rebuild_every_epochs == 0;
+        // Under Fixed the detector is never consulted — the whole epoch-end
+        // path is bit-for-bit the historical fixed cadence.
+        let forced = match self.policy {
+            RebuildPolicy::Fixed => false,
+            RebuildPolicy::HealthDriven => {
+                self.detector.observe(&self.tables.health_snapshot()).rebuild_due
+            }
+        };
+        if due || forced {
             self.tables.rebuild(&layer.w, rng);
             self.updates_since_rebuild = 0;
+            if forced && !due {
+                crate::obs::drift::note_adaptive_rebuild("lsh_selector");
+            }
         }
     }
 

@@ -14,6 +14,7 @@ pub mod wta;
 use crate::lsh::layered::LshConfig;
 use crate::lsh::sharded::LayerTableStack;
 use crate::obs::health::TableHealth;
+use crate::obs::{DriftConfig, RebuildPolicy};
 use crate::nn::layer::Layer;
 use crate::nn::sparse::LayerInput;
 use crate::util::rng::Pcg64;
@@ -79,6 +80,12 @@ pub struct SamplerConfig {
     /// default) is the classic unsharded path; the sharded path at 1 is
     /// bit-for-bit identical to it.
     pub shards: usize,
+    /// When tables rebuild: `Fixed` is the epoch cadence above, bit-for-bit
+    /// the pre-observatory behaviour; `HealthDriven` additionally rebuilds
+    /// when the drift detectors fire (see `obs::drift`).
+    pub rebuild_policy: RebuildPolicy,
+    /// Thresholds for the health-driven detectors (ignored under `Fixed`).
+    pub drift: DriftConfig,
 }
 
 impl Default for SamplerConfig {
@@ -91,6 +98,8 @@ impl Default for SamplerConfig {
             ad_beta: 0.0,
             rebuild_every_epochs: 1,
             shards: 1,
+            rebuild_policy: RebuildPolicy::Fixed,
+            drift: DriftConfig::default(),
         }
     }
 }
@@ -213,21 +222,29 @@ pub fn make_selector(
             Box::new(adaptive::AdaptiveDropoutSelector::new(cfg.ad_alpha, cfg.ad_beta, cfg.sparsity))
         }
         Method::Wta => Box::new(wta::WtaSelector::new(cfg.sparsity)),
-        Method::Lsh if cfg.shards > 1 => Box::new(sharded_select::ShardedLshSelector::new(
-            layer,
-            cfg.lsh,
-            cfg.shards,
-            cfg.sparsity,
-            cfg.rebuild_every_epochs,
-            rng,
-        )),
-        Method::Lsh => Box::new(lsh_select::LshSelector::new(
-            layer,
-            cfg.lsh,
-            cfg.sparsity,
-            cfg.rebuild_every_epochs,
-            rng,
-        )),
+        Method::Lsh if cfg.shards > 1 => {
+            let mut sel = sharded_select::ShardedLshSelector::new(
+                layer,
+                cfg.lsh,
+                cfg.shards,
+                cfg.sparsity,
+                cfg.rebuild_every_epochs,
+                rng,
+            );
+            sel.set_rebuild_policy(cfg.rebuild_policy, cfg.drift);
+            Box::new(sel)
+        }
+        Method::Lsh => {
+            let mut sel = lsh_select::LshSelector::new(
+                layer,
+                cfg.lsh,
+                cfg.sparsity,
+                cfg.rebuild_every_epochs,
+                rng,
+            );
+            sel.set_rebuild_policy(cfg.rebuild_policy, cfg.drift);
+            Box::new(sel)
+        }
     }
 }
 

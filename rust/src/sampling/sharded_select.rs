@@ -18,6 +18,7 @@ use crate::lsh::sharded::{LayerTableStack, ShardedFrozenTables, ShardedLayerTabl
 use crate::nn::layer::Layer;
 use crate::nn::sparse::LayerInput;
 use crate::obs::health::TableHealth;
+use crate::obs::{DriftConfig, HealthDriftDetector, RebuildPolicy};
 use crate::sampling::{budget, NodeSelector, SelectionCost};
 use crate::util::rng::Pcg64;
 
@@ -25,6 +26,11 @@ pub struct ShardedLshSelector {
     tables: ShardedLayerTables,
     sparsity: f32,
     rebuild_every_epochs: usize,
+    /// Fixed cadence (default, bit-for-bit the historical staggered
+    /// schedule) or health-driven (detectors may force a full rebuild).
+    policy: RebuildPolicy,
+    /// One detector per shard, watching that shard's health row.
+    detectors: Vec<HealthDriftDetector>,
     /// Dense scratch for single-query selection.
     scratch_q: Vec<f32>,
     /// Per-sample fingerprint buffer, `S × L` wide (one `L`-group per
@@ -54,6 +60,8 @@ impl ShardedLshSelector {
             tables: ShardedLayerTables::build(&layer.w, cfg, shards, rng),
             sparsity,
             rebuild_every_epochs: rebuild_every_epochs.max(1),
+            policy: RebuildPolicy::Fixed,
+            detectors: Vec::new(),
             scratch_q: vec![0.0; layer.n_in()],
             fps_buf: Vec::new(),
             scored: Vec::new(),
@@ -61,6 +69,16 @@ impl ShardedLshSelector {
             per_sample_mults: Vec::new(),
             updates_since_rebuild: 0,
         }
+    }
+
+    /// Switch the rebuild policy (and detector thresholds). Called by
+    /// [`crate::sampling::make_selector`]; under `Fixed` the detectors
+    /// are never consulted and epoch-end behaviour is unchanged.
+    pub fn set_rebuild_policy(&mut self, policy: RebuildPolicy, cfg: DriftConfig) {
+        self.policy = policy;
+        self.detectors = (0..self.tables.shard_count())
+            .map(|s| HealthDriftDetector::new(&format!("shard{s}"), cfg))
+            .collect();
     }
 
     pub fn tables(&self) -> &ShardedLayerTables {
@@ -124,7 +142,32 @@ impl NodeSelector for ShardedLshSelector {
 
     fn on_epoch_end(&mut self, layer: &Layer, epoch: usize, rng: &mut Pcg64) {
         let before = self.tables.rebuilds();
-        self.tables.on_epoch_end(&layer.w, epoch, self.rebuild_every_epochs, rng);
+        // Under Fixed the detectors are never consulted: force_all stays
+        // false and the staggered schedule is bit-for-bit the historical
+        // one.
+        let force_all = match self.policy {
+            RebuildPolicy::Fixed => false,
+            RebuildPolicy::HealthDriven => {
+                let rows = self.tables.health_rows();
+                let mut fired = false;
+                for (det, row) in self.detectors.iter_mut().zip(rows.iter()) {
+                    if det.observe(row).rebuild_due {
+                        fired = true;
+                    }
+                }
+                fired
+            }
+        };
+        self.tables.maybe_rebuild_staggered(
+            &layer.w,
+            epoch,
+            self.rebuild_every_epochs,
+            force_all,
+            rng,
+        );
+        if force_all {
+            crate::obs::drift::note_adaptive_rebuild("sharded_selector");
+        }
         if self.tables.rebuilds() > before {
             self.updates_since_rebuild = 0;
         }

@@ -378,6 +378,7 @@ impl ServePool {
         assert!(cfg.workers >= 1, "pool needs at least one worker");
         let queue = Arc::new(RequestQueue::new(cfg.queue_cap));
         let counters = Arc::new(PoolCounters::default());
+        Self::register_metrics(&counters);
         let handles = (0..cfg.workers)
             .map(|w| {
                 let queue = Arc::clone(&queue);
@@ -415,6 +416,50 @@ impl ServePool {
             let _ = h.join();
         }
         Self::collect(&self.counters)
+    }
+
+    /// Export this pool's counters through the global metrics registry:
+    /// request/batch/switch totals, the version-age distribution as
+    /// cumulative Prometheus `le` buckets, and the stale-serve fraction
+    /// gauge the drift observatory's series scanner watches. Registration
+    /// replaces by (name, labels), so when several pools run (fleet) the
+    /// most recently started one owns these families — per-model stats
+    /// stay with the router.
+    fn register_metrics(counters: &Arc<PoolCounters>) {
+        let reg = obs::global();
+        let c = Arc::clone(counters);
+        reg.register_counter("hashdl_pool_requests_total", move || {
+            c.requests.load(Ordering::Relaxed) as f64
+        });
+        let c = Arc::clone(counters);
+        reg.register_counter("hashdl_pool_batches_total", move || {
+            c.batches.load(Ordering::Relaxed) as f64
+        });
+        let c = Arc::clone(counters);
+        reg.register_counter("hashdl_pool_version_switches_total", move || {
+            c.version_switches.load(Ordering::Relaxed) as f64
+        });
+        let n_buckets = VersionAgeSnapshot::default().counts.len();
+        for i in 0..n_buckets {
+            let c = Arc::clone(counters);
+            let le = if i == n_buckets - 1 { "+Inf".to_string() } else { i.to_string() };
+            reg.register_labeled_counter(
+                "hashdl_pool_version_age_bucket",
+                &crate::obs::export::label("le", &le),
+                move || {
+                    let s = c.version_age.snapshot();
+                    s.counts[..=i].iter().sum::<u64>() as f64
+                },
+            );
+        }
+        let c = Arc::clone(counters);
+        reg.register_counter("hashdl_pool_version_age_count", move || {
+            c.version_age.snapshot().count() as f64
+        });
+        let c = Arc::clone(counters);
+        reg.register_gauge("hashdl_pool_version_age_stale_fraction", move || {
+            1.0 - c.version_age.snapshot().current_fraction()
+        });
     }
 
     fn collect(counters: &PoolCounters) -> PoolStats {
@@ -488,6 +533,7 @@ fn worker_loop(
         let pin_span = obs::begin(Stage::EpochPin);
         if ws.sync(engine) {
             counters.version_switches.fetch_add(1, Ordering::Relaxed);
+            obs::events::emit(obs::EventKind::Publish, "pool_worker", ws.version(), "pickup");
         }
         obs::end(pin_span);
         let bsz = batch.len() as u32;

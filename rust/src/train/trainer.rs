@@ -812,6 +812,15 @@ impl Trainer {
         // historical shape); sharded selectors contribute one per shard.
         let per_layer: Vec<Vec<TableHealth>> =
             self.selectors.iter().map(|s| s.health_rows()).collect();
+        // Mirror the freshest rows into the global health board so the
+        // Prometheus exporter and drift monitor see per-layer (and, when
+        // sharded, per-shard) table health without holding the trainer.
+        for (l, rows) in per_layer.iter().enumerate() {
+            let sharded = rows.len() > 1;
+            for (s, h) in rows.iter().enumerate() {
+                crate::obs::health::publish_health_row(l, s, sharded, h);
+            }
+        }
         if per_layer.len() == self.net.n_hidden() && per_layer.iter().all(|r| !r.is_empty()) {
             self.health_log.push(per_layer.into_iter().flatten().collect());
         }

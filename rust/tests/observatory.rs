@@ -1,0 +1,323 @@
+//! Drift-observatory contract suite.
+//!
+//! Three guarantees pinned here:
+//!
+//! 1. The observatory is bitwise invisible under the default `Fixed`
+//!    rebuild policy: drift thresholds, event emission and the health
+//!    board must not change weights, logits or selections.
+//! 2. `HealthDriven` is the one sanctioned exception — under injected
+//!    staleness it fires drift alerts and forces adaptive rebuilds the
+//!    fixed cadence would not have done, all journaled.
+//! 3. The HTTP endpoint serves valid Prometheus text (cumulative
+//!    `le`-bucket families monotone), well-formed JSONL events and a
+//!    health summary.
+//!
+//! Everything here flips process-global obs state, so every test runs
+//! under the same mutex discipline as `tests/telemetry.rs`.
+
+use hashdl::data::dataset::Dataset;
+use hashdl::lsh::layered::LshConfig;
+use hashdl::nn::activation::Activation;
+use hashdl::nn::layer::Layer;
+use hashdl::nn::network::{Network, NetworkConfig};
+use hashdl::obs;
+use hashdl::obs::{DriftConfig, EventKind, RebuildPolicy};
+use hashdl::optim::OptimConfig;
+use hashdl::publish::{publish_once, ModelParts};
+use hashdl::sampling::lsh_select::LshSelector;
+use hashdl::sampling::{Method, SamplerConfig};
+use hashdl::serve::pool::PoolConfig;
+use hashdl::serve::{ModelSnapshot, ServePool, SparseInferenceEngine};
+use hashdl::train::trainer::{TrainConfig, Trainer};
+use hashdl::util::rng::Pcg64;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::channel;
+use std::sync::Mutex;
+
+static OBS_LOCK: Mutex<()> = Mutex::new(());
+
+/// Serialise access to the process-global obs switches and restore the
+/// defaults when the test finishes (even on panic).
+struct ObsGuard<'a>(#[allow(dead_code)] std::sync::MutexGuard<'a, ()>);
+
+fn obs_guard() -> ObsGuard<'static> {
+    let g = OBS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    obs::set_enabled(true);
+    ObsGuard(g)
+}
+
+impl Drop for ObsGuard<'_> {
+    fn drop(&mut self) {
+        obs::set_enabled(true);
+        obs::set_trace_every(0);
+        obs::set_recall_every(64);
+    }
+}
+
+fn blob_dataset(n: usize, dim: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg64::seeded(seed);
+    let mut ds = Dataset::new("blobs", dim, 2);
+    for i in 0..n {
+        let y = (i % 2) as u32;
+        let c = if y == 0 { 0.6 } else { -0.6 };
+        ds.push((0..dim).map(|_| c + 0.4 * rng.gaussian()).collect(), y);
+    }
+    ds
+}
+
+fn max_weight_diff(a: &Network, b: &Network) -> f32 {
+    let mut max = 0.0f32;
+    for (la, lb) in a.layers.iter().zip(&b.layers) {
+        for (wa, wb) in la.w.as_slice().iter().zip(lb.w.as_slice()) {
+            max = max.max((wa - wb).abs());
+        }
+        for (ba, bb) in la.b.iter().zip(&lb.b) {
+            max = max.max((ba - bb).abs());
+        }
+    }
+    max
+}
+
+/// One deterministic LSH training run with the given sampler config;
+/// returns the trainer and the dense logits over the test split.
+fn train_with(sampler: SamplerConfig) -> (Trainer, Vec<Vec<f32>>) {
+    let train = blob_dataset(96, 10, 5);
+    let test = blob_dataset(24, 10, 6);
+    let net = Network::new(
+        &NetworkConfig { n_in: 10, hidden: vec![20, 20], n_out: 2, act: Activation::ReLU },
+        &mut Pcg64::seeded(17),
+    );
+    let mut t = Trainer::new(
+        net,
+        TrainConfig {
+            epochs: 2,
+            batch_size: 8,
+            sampler,
+            optim: OptimConfig { lr: 0.02, ..Default::default() },
+            seed: 99,
+            ..Default::default()
+        },
+    );
+    t.run(&train, &test);
+    let mut logits = Vec::new();
+    let all: Vec<Vec<f32>> = test
+        .xs
+        .iter()
+        .map(|x| {
+            t.net.forward_dense(x, &mut logits);
+            logits.clone()
+        })
+        .collect();
+    (t, all)
+}
+
+/// Under `Fixed` the drift detectors are never consulted: a run with
+/// hair-trigger drift thresholds must be bit-for-bit identical to the
+/// default configuration — weights, logits, and the per-epoch health
+/// log (which reflects the selections made).
+#[test]
+fn fixed_policy_ignores_drift_config_bitwise() {
+    let _g = obs_guard();
+    let adaptive_before = obs::drift::adaptive_rebuilds_total();
+
+    let base = SamplerConfig::with_method(Method::Lsh, 0.3);
+    let mut tripwire = base;
+    tripwire.rebuild_policy = RebuildPolicy::Fixed;
+    tripwire.drift = DriftConfig {
+        max_rebuild_age_batches: 1,
+        recall_drop: 0.0,
+        ..Default::default()
+    };
+
+    let (t_base, logits_base) = train_with(base);
+    let (t_trip, logits_trip) = train_with(tripwire);
+
+    let diff = max_weight_diff(&t_base.net, &t_trip.net);
+    assert!(diff == 0.0, "Fixed policy consulted the detectors (max |Δw| = {diff})");
+    for (s, (a, b)) in logits_base.iter().zip(&logits_trip).enumerate() {
+        assert_eq!(a, b, "sample {s}: logits diverged under Fixed + drift config");
+    }
+    // Identical selections => identical health histories.
+    assert_eq!(t_base.health_log.len(), t_trip.health_log.len());
+    for (ha, hb) in t_base.health_log.iter().flatten().zip(t_trip.health_log.iter().flatten()) {
+        assert_eq!(ha.selections, hb.selections);
+        assert_eq!(ha.rebuilds, hb.rebuilds);
+        assert_eq!(ha.rebuild_age_batches, hb.rebuild_age_batches);
+    }
+    assert_eq!(
+        obs::drift::adaptive_rebuilds_total(),
+        adaptive_before,
+        "Fixed policy must never count an adaptive rebuild"
+    );
+}
+
+/// `HealthDriven` with an aggressive staleness cap and a slack fixed
+/// cadence must rebuild anyway — and leave the audit trail: the adaptive
+/// counter moves, and the journal gains `drift_alert` + adaptive
+/// `rebuild` events in sequence order.
+#[test]
+fn health_driven_policy_forces_adaptive_rebuilds() {
+    let _g = obs_guard();
+    let seq0 = obs::events::journal().total();
+    let adaptive0 = obs::drift::adaptive_rebuilds_total();
+    let alerts0 = obs::drift::drift_alerts_total();
+
+    let mut sampler = SamplerConfig::with_method(Method::Lsh, 0.3);
+    sampler.rebuild_policy = RebuildPolicy::HealthDriven;
+    sampler.rebuild_every_epochs = 50; // the fixed cadence never fires here
+    sampler.drift = DriftConfig { max_rebuild_age_batches: 1, ..Default::default() };
+
+    let (t, _) = train_with(sampler);
+
+    assert!(
+        obs::drift::adaptive_rebuilds_total() > adaptive0,
+        "health-driven run recorded no adaptive rebuild"
+    );
+    assert!(obs::drift::drift_alerts_total() > alerts0, "no drift alert fired");
+    // Each epoch's tables were force-rebuilt despite rebuild_every = 50.
+    let last = t.health_log.last().expect("health log populated");
+    assert!(last.iter().all(|h| h.rebuilds > 0), "tables never rebuilt: {last:?}");
+
+    let new: Vec<_> =
+        obs::events::journal().recent(usize::MAX).into_iter().filter(|e| e.seq >= seq0).collect();
+    assert!(new.windows(2).all(|w| w[0].seq < w[1].seq), "journal out of order");
+    assert!(new.iter().any(|e| e.kind == EventKind::DriftAlert), "no drift_alert journaled");
+    assert!(
+        new.iter().any(|e| e.kind == EventKind::Rebuild && e.subject == "adaptive"),
+        "no adaptive rebuild journaled"
+    );
+    assert!(
+        new.iter().any(|e| e.kind == EventKind::Rebuild && e.subject == "tables"),
+        "no table rebuild journaled"
+    );
+}
+
+/// Per-shard health rows are exported with stable `layer`/`shard`
+/// labels; unsharded rows keep the label set they always had (`layer`
+/// only) so existing scrapes never change shape.
+#[test]
+fn health_rows_carry_shard_labels_only_when_sharded() {
+    let _g = obs_guard();
+    let mut rng = Pcg64::seeded(61);
+    let layer = Layer::new(8, 40, Activation::ReLU, &mut rng);
+    let sel = LshSelector::new(&layer, LshConfig::default(), 0.2, 1, &mut rng);
+    let h = sel.tables().health_snapshot();
+
+    obs::health::publish_health_row(7, 0, false, &h);
+    obs::health::publish_health_row(8, 1, true, &h);
+    let text = obs::global().snapshot().to_prometheus();
+    assert!(
+        text.contains("hashdl_table_nodes{layer=\"7\"}"),
+        "unsharded row lost its plain layer label"
+    );
+    assert!(
+        text.contains("hashdl_table_nodes{layer=\"8\",shard=\"1\"}"),
+        "sharded row missing shard label"
+    );
+}
+
+fn http_get(addr: std::net::SocketAddr, target: &str) -> String {
+    let mut s = TcpStream::connect(addr).expect("connect obs endpoint");
+    write!(s, "GET {target} HTTP/1.1\r\nHost: test\r\nConnection: close\r\n\r\n").unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).expect("read obs response");
+    out
+}
+
+fn body_of(resp: &str) -> &str {
+    resp.split_once("\r\n\r\n").map(|(_, b)| b).unwrap_or("")
+}
+
+/// End-to-end endpoint smoke: a live pool behind a publication slot, a
+/// bound listener, and real HTTP requests. /metrics must parse as
+/// Prometheus text with monotone cumulative `le` buckets, /events as
+/// JSONL including the publication, /health as a JSON summary.
+#[test]
+fn obs_endpoint_serves_metrics_events_and_health() {
+    let _g = obs_guard();
+    obs::stages(); // name every pipeline stage even before traffic
+    let cfg = NetworkConfig { n_in: 8, hidden: vec![24], n_out: 3, act: Activation::ReLU };
+    let net = Network::new(&cfg, &mut Pcg64::seeded(21));
+    let parts = ModelParts::from_snapshot(ModelSnapshot::without_tables(
+        net,
+        SamplerConfig::with_method(Method::Lsh, 0.25),
+        21,
+    ));
+    let reader = publish_once(parts);
+    let pool = ServePool::start(SparseInferenceEngine::live(reader), PoolConfig::default());
+    let (tx, rx) = channel();
+    let x: Vec<f32> = (0..8).map(|j| (j as f32 * 0.4).sin()).collect();
+    for id in 0..12u64 {
+        assert!(pool.handle().submit(id, x.clone(), tx.clone()));
+    }
+    drop(tx);
+    assert_eq!(rx.iter().count(), 12);
+
+    let server = obs::http::serve("127.0.0.1:0").expect("bind obs endpoint");
+    let addr = server.local_addr();
+
+    let metrics = http_get(addr, "/metrics");
+    assert!(metrics.starts_with("HTTP/1.1 200"), "{metrics}");
+    let body = body_of(&metrics);
+    assert!(body.contains("# TYPE hashdl_stage_queue_micros histogram"));
+    assert!(body.contains("hashdl_events_total"));
+    assert!(body.contains("hashdl_pool_requests_total"));
+    // Cumulative version-age buckets: ascending le order, monotone
+    // counts, +Inf last — the Prometheus histogram contract.
+    let buckets: Vec<&str> =
+        body.lines().filter(|l| l.starts_with("hashdl_pool_version_age_bucket{")).collect();
+    assert!(buckets.len() >= 2, "version-age buckets missing:\n{body}");
+    let mut prev = -1.0f64;
+    for line in &buckets {
+        let v: f64 = line.rsplit(' ').next().unwrap().parse().expect("bucket value");
+        assert!(v >= prev, "non-monotone cumulative bucket: {line}");
+        prev = v;
+    }
+    assert!(buckets.last().unwrap().contains("le=\"+Inf\""), "+Inf bucket must close the family");
+
+    let events = http_get(addr, "/events?n=64");
+    assert!(events.starts_with("HTTP/1.1 200"), "{events}");
+    let ev_body = body_of(&events);
+    assert!(!ev_body.is_empty(), "journal empty after a publication");
+    for line in ev_body.lines() {
+        assert!(line.starts_with('{') && line.ends_with('}'), "not JSONL: {line}");
+        assert!(line.contains("\"kind\": "), "event missing kind: {line}");
+        assert!(line.contains("\"seq\": "), "event missing seq: {line}");
+    }
+    assert!(
+        ev_body.lines().any(|l| l.contains("\"kind\": \"publish\"")),
+        "no publish event in: {ev_body}"
+    );
+
+    let health = http_get(addr, "/health");
+    assert!(health.starts_with("HTTP/1.1 200"), "{health}");
+    assert!(body_of(&health).contains("\"status\""));
+
+    let missing = http_get(addr, "/nope");
+    assert!(missing.starts_with("HTTP/1.1 404"), "{missing}");
+
+    pool.shutdown();
+}
+
+/// Journal watermark semantics: events emitted after a `total()` reading
+/// all carry sequence numbers at or above it, in order, with the kinds
+/// round-tripping through their wire names.
+#[test]
+fn event_journal_watermark_and_kinds() {
+    let _g = obs_guard();
+    let mark = obs::events::journal().total();
+    obs::events::emit(EventKind::Shed, "model-a", 1, "queue_full");
+    obs::events::emit(EventKind::CanaryDecision, "canary-b", 42, "diverted");
+    obs::events::emit(EventKind::ShardRebuild, "shard", 3, "staggered");
+    let new: Vec<_> =
+        obs::events::journal().recent(usize::MAX).into_iter().filter(|e| e.seq >= mark).collect();
+    let shed = new.iter().find(|e| e.kind == EventKind::Shed && e.subject == "model-a");
+    let canary =
+        new.iter().find(|e| e.kind == EventKind::CanaryDecision && e.subject == "canary-b");
+    let shard = new.iter().find(|e| e.kind == EventKind::ShardRebuild && e.value == 3);
+    assert!(shed.is_some() && canary.is_some() && shard.is_some(), "events lost: {new:?}");
+    assert!(new.windows(2).all(|w| w[0].seq < w[1].seq));
+    let jsonl = obs::events::journal().to_jsonl(new.len());
+    assert!(jsonl.lines().any(|l| l.contains("\"kind\": \"canary_decision\"")));
+}

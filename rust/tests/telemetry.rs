@@ -360,8 +360,8 @@ fn global_export_covers_stages_and_counters_are_monotone() {
             .snapshot()
             .scalars
             .iter()
-            .find(|(n, _, _)| n == name)
-            .map(|t| t.2)
+            .find(|(n, _, _, _)| n == name)
+            .map(|t| t.3)
             .unwrap_or(-1.0)
     };
     let before_spans = read("hashdl_obs_spans_total");
