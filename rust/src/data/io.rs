@@ -27,6 +27,12 @@ pub(crate) const SNAPSHOT_MAGIC: &[u8; 8] = b"HDLMODL2";
 pub(crate) const SNAPSHOT3_MAGIC: &[u8; 8] = b"HDLMODL3";
 pub(crate) const SNAPSHOT4_MAGIC: &[u8; 8] = b"HDLMODL4";
 pub(crate) const SNAPSHOT5_MAGIC: &[u8; 8] = b"HDLMODL5";
+/// v6 is *not* a standalone model file: it is a delta patch record (base
+/// version + touched-row payload) written by
+/// `crate::serve::snapshot::save_snapshot_delta`. It deliberately does NOT
+/// appear in [`load_network`]'s accepted list — there is no network body
+/// after the magic to read.
+pub(crate) const SNAPSHOT6_MAGIC: &[u8; 8] = b"HDLMODL6";
 
 pub(crate) fn write_u32(w: &mut impl Write, v: u32) -> io::Result<()> {
     w.write_all(&v.to_le_bytes())
@@ -155,7 +161,11 @@ pub(crate) fn write_network_body(w: &mut impl Write, net: &Network) -> io::Resul
         write_str(w, &l.act.to_string())?;
         write_u32(w, l.n_out() as u32)?;
         write_u32(w, l.n_in() as u32)?;
-        write_f32s(w, l.w.as_slice())?;
+        // Row-by-row: byte-identical to one contiguous plane write, and
+        // works for both the dense and the copy-on-write weight stores.
+        for r in 0..l.w.rows() {
+            write_f32s(w, l.w.row(r))?;
+        }
         write_f32s(w, &l.b)?;
     }
     Ok(())

@@ -41,6 +41,12 @@ pub struct FrozenLayerTables {
     /// table stacks wholesale; the health story of an epoch's tables is
     /// one story, however many handles exist) and across serve workers.
     health: Arc<HealthTally>,
+    /// The live stack's [`LayerTables::mutation_stamp`] at freeze time.
+    /// [`FrozenLayerTables::refreeze_delta`] compares this against the
+    /// live stamp to decide whether the previous epoch's frozen view is
+    /// still exact. `u64::MAX` marks a snapshot-loaded stack, which has no
+    /// live counterpart and therefore never matches.
+    frozen_stamp: u64,
 }
 
 /// Per-thread query workspace: fingerprints, membership stamps, collision
@@ -55,6 +61,7 @@ pub struct FrozenQueryScratch {
     fps: Vec<u32>,
     candidates: Vec<u32>,
     probe_scratch: Vec<u32>,
+    addrs: Vec<u32>,
     gens: Vec<ProbeGen>,
     /// Batched-hashing scratch (ALSH query embeddings, `B × (dim+1)`) —
     /// used by the shared batched execution core (`exec`), which hashes a
@@ -90,7 +97,32 @@ impl FrozenLayerTables {
             tables: live.tables().to_vec(),
             n_nodes: live.n_nodes(),
             health: Arc::new(HealthTally::new(live.n_nodes())),
+            frozen_stamp: live.mutation_stamp(),
         }
+    }
+
+    /// Delta re-freeze: if `live` has not mutated since `prev` was frozen
+    /// (mutation stamps match), the previous epoch's frozen view is still
+    /// exact — share it (tables, family *and* health tally: unchanged
+    /// tables are the same health story). Any mutation — including a full
+    /// rebuild, which bumps the stamp — falls back to a fresh
+    /// [`FrozenLayerTables::freeze`]. Either way the result is
+    /// bucket-for-bucket what `freeze(live)` would produce; note the
+    /// freeze itself is already O(touched) in deep bytes because
+    /// [`HashTable`] buckets are copy-on-write.
+    pub fn refreeze_delta(live: &LayerTables, prev: &FrozenLayerTables) -> Self {
+        debug_assert_eq!(prev.n_nodes, live.n_nodes(), "refreeze across different layers");
+        if prev.frozen_stamp == live.mutation_stamp() {
+            prev.clone()
+        } else {
+            FrozenLayerTables::freeze(live)
+        }
+    }
+
+    /// The live mutation stamp this view was frozen at (`u64::MAX` for
+    /// snapshot-loaded stacks).
+    pub fn frozen_stamp(&self) -> u64 {
+        self.frozen_stamp
     }
 
     /// Reassemble from snapshot parts, validating table count against the
@@ -116,7 +148,7 @@ impl FrozenLayerTables {
             }
         }
         let health = Arc::new(HealthTally::new(n_nodes));
-        Ok(FrozenLayerTables { cfg, family, tables, n_nodes, health })
+        Ok(FrozenLayerTables { cfg, family, tables, n_nodes, health, frozen_stamp: u64::MAX })
     }
 
     pub fn config(&self) -> LshConfig {
@@ -208,6 +240,7 @@ impl FrozenLayerTables {
             query_epoch,
             candidates,
             probe_scratch,
+            addrs,
             gens,
             ..
         } = scratch;
@@ -222,6 +255,7 @@ impl FrozenLayerTables {
             query_epoch,
             gens,
             probe_scratch,
+            addrs,
             candidates,
             rng: &mut *rng,
             out: &mut *out,
@@ -302,6 +336,30 @@ mod tests {
         assert_eq!(frozen.tables(), live.tables());
         assert_eq!(frozen.family().max_norm(), live.family().max_norm());
         assert_eq!(frozen.n_nodes(), 80);
+    }
+
+    #[test]
+    fn refreeze_delta_shares_when_unmutated_and_refreezes_after_mutation() {
+        let cfg = LshConfig { k: 5, l: 3, ..Default::default() };
+        let (mut w, mut live) = live_tables(60, 8, 17, cfg);
+        let prev = FrozenLayerTables::freeze(&live);
+        // Nothing mutated since the freeze: the delta path shares every
+        // bucket and the fingerprint blocks by Arc.
+        let again = FrozenLayerTables::refreeze_delta(&live, &prev);
+        assert_eq!(again.frozen_stamp(), prev.frozen_stamp());
+        for (a, b) in again.tables().iter().zip(prev.tables()) {
+            assert_eq!(a.shared_buckets_with(b), 1 << cfg.k);
+            assert!(a.shares_fingerprints_with(b));
+        }
+        // A rehash invalidates the base: the re-freeze is a fresh one.
+        let mut rng = Pcg64::seeded(18);
+        for v in w.row_mut(9) {
+            *v = -*v;
+        }
+        assert!(!live.rehash_nodes(&w, &[9], &mut rng));
+        let next = FrozenLayerTables::refreeze_delta(&live, &prev);
+        assert_eq!(next.tables(), live.tables());
+        assert_ne!(next.frozen_stamp(), prev.frozen_stamp());
     }
 
     #[test]

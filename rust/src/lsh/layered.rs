@@ -69,6 +69,15 @@ pub struct LayerTables {
     /// Scratch for the batched hashing pass (ALSH query embeddings of a
     /// whole minibatch, `B × (dim+1)`).
     embed_scratch: Vec<f32>,
+    /// Scratch: per-table next bucket address for the current probe depth
+    /// (u32::MAX = generator exhausted) — lets the probe loop prefetch
+    /// every table's bucket before scanning any of them.
+    addrs: Vec<u32>,
+    /// Monotonic mutation counter: bumped by every rehash that touches the
+    /// tables and by every rebuild. A frozen view records the stamp it was
+    /// taken at; delta re-freezing compares stamps to decide whether the
+    /// previous epoch's frozen tables can be reused as-is.
+    mutation_stamp: u64,
     /// Count of full rebuilds (norm overflow) — surfaced in metrics.
     pub rebuilds: usize,
     /// Hashes computed since construction (K·L per hashed vector) — the
@@ -98,6 +107,8 @@ impl LayerTables {
             probe_scratch: Vec::new(),
             gens: Vec::new(),
             embed_scratch: Vec::new(),
+            addrs: Vec::new(),
+            mutation_stamp: 0,
             rebuilds: 0,
             hash_ops: 0,
             health: HealthTally::new(n_nodes),
@@ -199,6 +210,7 @@ impl LayerTables {
             candidates,
             probe_scratch,
             gens,
+            addrs,
             ..
         } = self;
         probe_and_rank(ProbeScratch {
@@ -212,6 +224,7 @@ impl LayerTables {
             query_epoch,
             gens,
             probe_scratch,
+            addrs,
             candidates,
             rng,
             out,
@@ -229,6 +242,12 @@ impl LayerTables {
                 return true;
             }
         }
+        if ids.is_empty() {
+            return false;
+        }
+        // Even a same-bucket fingerprint refresh writes table state, so any
+        // non-empty rehash invalidates frozen views taken before it.
+        self.mutation_stamp = self.mutation_stamp.wrapping_add(1);
         let mut fps = vec![0u32; self.cfg.l];
         for &id in ids {
             self.family.hash_data(weights.row(id as usize), &mut fps);
@@ -246,6 +265,7 @@ impl LayerTables {
         self.family = AlshMips::new(weights.cols(), self.cfg.k, self.cfg.l, max_norm, rng);
         self.tables = (0..self.cfg.l).map(|_| HashTable::new(self.cfg.k, self.n_nodes)).collect();
         self.insert_all(weights);
+        self.mutation_stamp = self.mutation_stamp.wrapping_add(1);
         self.rebuilds += 1;
         self.health.reset_rebuild_age();
         crate::obs::events::emit(
@@ -270,6 +290,13 @@ impl LayerTables {
     /// serving view and snapshot serialization consume.
     pub fn tables(&self) -> &[HashTable] {
         &self.tables
+    }
+
+    /// The mutation counter a frozen view records at freeze time: if it is
+    /// unchanged at the next publish, the previous frozen tables are still
+    /// exact and can be shared instead of re-frozen.
+    pub fn mutation_stamp(&self) -> u64 {
+        self.mutation_stamp
     }
 
     /// The running health counters (selection-time fold-in target).
@@ -300,6 +327,7 @@ pub(crate) struct ProbeScratch<'a> {
     pub query_epoch: &'a mut u32,
     pub gens: &'a mut Vec<ProbeGen>,
     pub probe_scratch: &'a mut Vec<u32>,
+    pub addrs: &'a mut Vec<u32>,
     pub candidates: &'a mut Vec<u32>,
     pub rng: &'a mut Pcg64,
     pub out: &'a mut Vec<u32>,
@@ -321,6 +349,7 @@ pub(crate) fn probe_and_rank(s: ProbeScratch<'_>) {
         query_epoch,
         gens,
         probe_scratch,
+        addrs,
         candidates,
         rng,
         out,
@@ -348,10 +377,30 @@ pub(crate) fn probe_and_rank(s: ProbeScratch<'_>) {
         g.reset(fp, cfg.k, cfg.probes_per_table);
     }
     for _depth in 0..cfg.probes_per_table {
-        let mut any = false;
-        for (ti, g) in gens.iter_mut().take(fps.len()).enumerate() {
-            let Some(addr) = g.next() else { continue };
-            any = true;
+        // Pass 1: advance every generator to its next bucket address
+        // (u32::MAX = exhausted; real addresses are K ≤ 16 bits) and, with
+        // `simd`, prefetch each address's bucket id array — by the time
+        // pass 2 scans a bucket, the line is usually already in cache.
+        addrs.clear();
+        for g in gens.iter_mut().take(fps.len()) {
+            addrs.push(g.next().unwrap_or(u32::MAX));
+        }
+        if addrs.iter().all(|&a| a == u32::MAX) {
+            break;
+        }
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        for (ti, &addr) in addrs.iter().enumerate() {
+            if addr != u32::MAX {
+                tables[ti].prefetch_bucket(addr);
+            }
+        }
+        // Pass 2: probe in table order — same visit order and RNG
+        // consumption as the single-pass loop this replaces, so results
+        // are bit-identical with or without the prefetch pass.
+        for (ti, &addr) in addrs.iter().enumerate() {
+            if addr == u32::MAX {
+                continue;
+            }
             probe_scratch.clear();
             tables[ti].probe_into(addr, cfg.crowded_limit, rng, probe_scratch);
             for &id in probe_scratch.iter() {
@@ -363,9 +412,6 @@ pub(crate) fn probe_and_rank(s: ProbeScratch<'_>) {
                     counts[id as usize] = counts[id as usize].saturating_add(1);
                 }
             }
-        }
-        if !any {
-            break;
         }
     }
 

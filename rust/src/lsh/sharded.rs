@@ -292,6 +292,26 @@ impl ShardedFrozenTables {
         }
     }
 
+    /// Delta re-freeze, shard-granular: every shard whose live tables have
+    /// not mutated since `prev` was frozen (mutation stamp unchanged) is
+    /// shared from `prev` outright; only shards with touched rows — or a
+    /// rebuild, which also bumps the stamp — are re-frozen. Bucket-for-
+    /// bucket identical to [`Self::freeze`] on `live`. The stack-level
+    /// health tally is fresh, matching `freeze`.
+    pub fn refreeze_delta(live: &ShardedLayerTables, prev: &ShardedFrozenTables) -> Self {
+        debug_assert_eq!(prev.shard_count(), live.shard_count(), "refreeze across shard layouts");
+        ShardedFrozenTables {
+            map: *live.map(),
+            shards: live
+                .shards
+                .iter()
+                .zip(&prev.shards)
+                .map(|(l, p)| FrozenLayerTables::refreeze_delta(l, p))
+                .collect(),
+            health: Arc::new(HealthTally::new(live.n_nodes())),
+        }
+    }
+
     /// Reassemble from per-shard frozen stacks (snapshot load), checking
     /// each shard's node count against the block layout for `n_nodes`.
     pub fn from_parts(shards: Vec<FrozenLayerTables>, n_nodes: usize) -> Result<Self, String> {
@@ -604,6 +624,28 @@ mod tests {
         // Wrong node count must be rejected.
         assert!(ShardedFrozenTables::from_parts(frozen.shards().to_vec(), 49).is_err());
         assert!(ShardedFrozenTables::from_parts(Vec::new(), 50).is_err());
+    }
+
+    #[test]
+    fn delta_refreeze_shares_untouched_shards() {
+        let mut w = weights(80, 8, 75);
+        let cfg = LshConfig { k: 4, l: 3, ..Default::default() };
+        let mut rng = Pcg64::seeded(76);
+        let mut st = ShardedLayerTables::build(&w, cfg, 4, &mut rng);
+        let prev = ShardedFrozenTables::freeze(&st);
+        // Touch rows owned by shard 1 only (blocks of 20: rows 20..40).
+        for &r in &[21u32, 35] {
+            for v in w.row_mut(r as usize) {
+                *v = -*v;
+            }
+        }
+        st.post_update(&w, &[21, 35], &mut rng);
+        let next = ShardedFrozenTables::refreeze_delta(&st, &prev);
+        for s in 0..4 {
+            assert_eq!(next.shards()[s].tables(), st.shard(s).tables(), "shard {s} exactness");
+            let shared = next.shards()[s].frozen_stamp() == prev.shards()[s].frozen_stamp();
+            assert_eq!(shared, s != 1, "only the touched shard re-freezes (shard {s})");
+        }
     }
 
     #[test]

@@ -2,8 +2,19 @@
 //! neurons, never the weights themselves — §5.4 of the paper). Insertion is
 //! O(1) (push); deletion is O(b) via swap-remove where b is bucket size;
 //! crowded buckets can be sub-sampled at query time.
+//!
+//! Storage is copy-on-write: each bucket and the per-node fingerprint
+//! array sit behind `Arc`s, mutated through `Arc::make_mut`. While a
+//! table is uniquely owned (training steady state) `make_mut` is a
+//! refcount check and mutation stays in place — the hot path pays one
+//! predictable branch. The payoff is that *cloning* a table (what a
+//! publish-time freeze does) degenerates to Arc bumps: the frozen epoch
+//! shares every bucket with the live table, and subsequent live updates
+//! deep-copy only the buckets they actually move ids between. That is
+//! what makes epoch publication O(touched) on the table side.
 
 use crate::util::rng::Pcg64;
+use std::sync::Arc;
 
 /// Bucket occupancy beyond which a bucket is considered "crowded" and is
 /// reservoir-sub-sampled at query time instead of returned whole
@@ -15,11 +26,14 @@ pub const DEFAULT_CROWDED_LIMIT: usize = 128;
 pub struct HashTable {
     k: usize,
     /// Dense array of 2^K buckets (K ≤ 16 keeps this small; for K up to 32
-    /// a sparse map would be needed, but the paper uses K=6).
-    buckets: Vec<Vec<u32>>,
-    /// Current position of each node: slot index inside its bucket, plus
-    /// its fingerprint — makes delete O(b) without scanning all buckets.
-    node_fp: Vec<u32>,
+    /// a sparse map would be needed, but the paper uses K=6). Each bucket
+    /// is individually Arc'd so frozen clones share unmodified buckets.
+    buckets: Vec<Arc<Vec<u32>>>,
+    /// Current fingerprint of each node (`u32::MAX` = absent) — makes
+    /// delete O(b) without scanning all buckets. Arc'd as one block: it is
+    /// the O(capacity) part of the table, shared wholesale with frozen
+    /// clones and copied lazily on the first post-freeze mutation.
+    node_fp: Arc<Vec<u32>>,
     len: usize,
 }
 
@@ -30,8 +44,8 @@ impl HashTable {
         assert!(k <= 16, "dense bucket array supports K <= 16 (paper uses 6)");
         HashTable {
             k,
-            buckets: vec![Vec::new(); 1 << k],
-            node_fp: vec![u32::MAX; capacity],
+            buckets: vec![Arc::new(Vec::new()); 1 << k],
+            node_fp: Arc::new(vec![u32::MAX; capacity]),
             len: 0,
         }
     }
@@ -53,12 +67,13 @@ impl HashTable {
         (fp as usize) & ((1usize << self.k) - 1)
     }
 
-    /// Insert node `id` under fingerprint `fp`. O(1).
+    /// Insert node `id` under fingerprint `fp`. O(1) (amortized: the
+    /// first mutation after a freeze copies the shared bucket/fp block).
     pub fn insert(&mut self, id: u32, fp: u32) {
         debug_assert_eq!(self.node_fp[id as usize], u32::MAX, "node already present");
         let b = self.mask(fp);
-        self.buckets[b].push(id);
-        self.node_fp[id as usize] = fp;
+        Arc::make_mut(&mut self.buckets[b]).push(id);
+        Arc::make_mut(&mut self.node_fp)[id as usize] = fp;
         self.len += 1;
     }
 
@@ -67,10 +82,10 @@ impl HashTable {
         let fp = self.node_fp[id as usize];
         debug_assert_ne!(fp, u32::MAX, "node not present");
         let b = self.mask(fp);
-        let bucket = &mut self.buckets[b];
+        let bucket = Arc::make_mut(&mut self.buckets[b]);
         let pos = bucket.iter().position(|&x| x == id).expect("node missing from bucket");
         bucket.swap_remove(pos);
-        self.node_fp[id as usize] = u32::MAX;
+        Arc::make_mut(&mut self.node_fp)[id as usize] = u32::MAX;
         self.len -= 1;
     }
 
@@ -79,7 +94,7 @@ impl HashTable {
     pub fn update(&mut self, id: u32, new_fp: u32) {
         let old = self.node_fp[id as usize];
         if old != u32::MAX && self.mask(old) == self.mask(new_fp) {
-            self.node_fp[id as usize] = new_fp;
+            Arc::make_mut(&mut self.node_fp)[id as usize] = new_fp;
             return;
         }
         if old != u32::MAX {
@@ -129,15 +144,44 @@ impl HashTable {
         }
     }
 
+    /// Hint the hardware prefetcher at this fingerprint's bucket id array.
+    /// The probe loop calls this for every table's next address *before*
+    /// scanning any of them ([`probe_into`](Self::probe_into) walks the
+    /// bucket afterwards on warm lines). A pure hint — never changes
+    /// results, only latency.
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    #[inline]
+    pub fn prefetch_bucket(&self, fp: u32) {
+        use std::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+        let bucket: &[u32] = &self.buckets[self.mask(fp)];
+        if !bucket.is_empty() {
+            // SAFETY: prefetch is a hint; any address is permitted.
+            unsafe { _mm_prefetch::<_MM_HINT_T0>(bucket.as_ptr() as *const i8) };
+        }
+    }
+
     /// Occupancy histogram (for diagnostics / ablation benches).
     pub fn bucket_sizes(&self) -> Vec<usize> {
         self.buckets.iter().map(|b| b.len()).collect()
     }
 
     /// Read-only view of the bucket arrays (frozen-snapshot serialization
-    /// and the lock-free serving probes read these directly).
-    pub fn buckets(&self) -> &[Vec<u32>] {
+    /// and the lock-free serving probes read these directly). Each entry
+    /// deref-coerces to `&[u32]`.
+    pub fn buckets(&self) -> &[Arc<Vec<u32>>] {
         &self.buckets
+    }
+
+    /// How many of the 2^K buckets are *the same allocation* as the
+    /// matching bucket of `other` — the sharing a freeze-clone keeps, and
+    /// what "re-freeze only buckets whose member rows moved" measures.
+    pub fn shared_buckets_with(&self, other: &HashTable) -> usize {
+        self.buckets.iter().zip(&other.buckets).filter(|(a, b)| Arc::ptr_eq(a, b)).count()
+    }
+
+    /// Whether the per-node fingerprint block is shared with `other`.
+    pub fn shares_fingerprints_with(&self, other: &HashTable) -> bool {
+        Arc::ptr_eq(&self.node_fp, &other.node_fp)
     }
 
     /// Per-node stored fingerprint, `u32::MAX` = not present. Length is the
@@ -186,7 +230,12 @@ impl HashTable {
         if present != len {
             return Err(format!("{present} fingerprints but {len} bucket entries"));
         }
-        Ok(HashTable { k, buckets, node_fp, len })
+        Ok(HashTable {
+            k,
+            buckets: buckets.into_iter().map(Arc::new).collect(),
+            node_fp: Arc::new(node_fp),
+            len,
+        })
     }
 }
 
@@ -294,7 +343,7 @@ mod tests {
         let back = HashTable::from_parts(
             t.k(),
             t.node_fingerprints().to_vec(),
-            t.buckets().to_vec(),
+            t.buckets().iter().map(|b| b.as_ref().clone()).collect(),
         )
         .unwrap();
         assert_eq!(back, t);
@@ -304,11 +353,36 @@ mod tests {
     fn from_parts_rejects_inconsistencies() {
         let mut t = HashTable::new(2, 4);
         t.insert(0, 0b01);
-        let mut bad_buckets = t.buckets().to_vec();
+        let mut bad_buckets: Vec<Vec<u32>> =
+            t.buckets().iter().map(|b| b.as_ref().clone()).collect();
         bad_buckets[0].push(0); // node 0 duplicated into the wrong bucket
         assert!(HashTable::from_parts(2, t.node_fingerprints().to_vec(), bad_buckets).is_err());
         assert!(HashTable::from_parts(2, t.node_fingerprints().to_vec(), vec![Vec::new(); 3])
             .is_err());
+    }
+
+    #[test]
+    fn clone_shares_storage_until_mutation() {
+        let mut t = HashTable::new(4, 32);
+        for id in 0..20 {
+            t.insert(id, (id * 5) % 16);
+        }
+        let frozen = t.clone();
+        assert_eq!(t.shared_buckets_with(&frozen), 16, "a fresh clone shares every bucket");
+        assert!(t.shares_fingerprints_with(&frozen));
+        // Move one node between two buckets: exactly those two buckets
+        // (plus the fingerprint block) unshare; the clone is untouched.
+        t.update(4, 0b0001); // fp 4 -> fp 1: bucket 4 drains into bucket 1
+        assert_eq!(t.shared_buckets_with(&frozen), 14, "only the two moved buckets copied");
+        assert!(!t.shares_fingerprints_with(&frozen));
+        assert!(t.bucket(4).is_empty());
+        assert_eq!(frozen.bucket(4), &[4u32][..], "frozen clone immune to live mutation");
+        // Same-bucket fp refresh copies only the fingerprint block.
+        let f2 = t.clone();
+        let shared_before = t.shared_buckets_with(&f2);
+        let fp = t.fingerprint_of(7).unwrap();
+        t.update(7, fp); // same bucket
+        assert_eq!(t.shared_buckets_with(&f2), shared_before, "no bucket copied");
     }
 
     #[test]

@@ -12,6 +12,9 @@
 //!   shard-bench  sharded wide-layer benchmark: train + serve the
 //!                extreme-classification workload through per-shard LSH
 //!                tables (writes BENCH_shard.json)
+//!   publish-bench  delta vs full epoch publication: deep-copied bytes,
+//!                build times and bitwise serving equivalence at several
+//!                touched fractions (writes BENCH_publish.json)
 //!   serve-fleet  multi-model fleet behind the router: per-model pools,
 //!                canary split, overload shedding (writes BENCH_router.json)
 //!   experiment   regenerate a paper table/figure (table3|fig4|fig5|fig6|fig7|fig8)
@@ -188,6 +191,7 @@ fn main() {
         "eval" => cmd_eval(args),
         "serve-bench" => cmd_serve_bench(args),
         "shard-bench" => cmd_shard_bench(args),
+        "publish-bench" => cmd_publish_bench(args),
         "serve-fleet" => cmd_serve_fleet(args),
         "experiment" => cmd_experiment(args),
         "std-pjrt" => cmd_std_pjrt(args),
@@ -226,6 +230,9 @@ USAGE: hashdl <subcommand> [flags]
   shard-bench [--nodes <1000000>] [--shards <4>] [--sparsity <0.001>]
               [--train-size N] [--test-size N] [--epochs e] [--batch-size B]
               [--out BENCH_shard.json]   (sharded wide-layer train + serve)
+  publish-bench [--nodes <8192>] [--fractions 0.01,0.05,0.2] [--shards 1,4]
+              [--epochs <3>] [--out BENCH_publish.json]
+              (delta vs full publication cost + bitwise serving check)
   serve-fleet [--config fleet.conf | --models <N>] [--dataset <..>]
               [--workers w] [--requests <N>] [--canary <f>]
               [--stats-every <secs>]
@@ -1048,6 +1055,83 @@ fn cmd_shard_bench(rest: Vec<String>) -> i32 {
     println!("wrote {}", out.display());
     if !report.s1_parity {
         eprintln!("shard-bench: S=1 parity FAILED");
+        return 1;
+    }
+    0
+}
+
+/// Delta-publication benchmark: replay the same per-epoch weight updates
+/// through incremental delta publication and a full clone+freeze, compare
+/// deep-copied bytes and build times at several touched-row fractions
+/// (unsharded and sharded), bitwise-check the served logits, and write
+/// `BENCH_publish.json`.
+fn cmd_publish_bench(rest: Vec<String>) -> i32 {
+    let p = Parser::new(
+        "hashdl publish-bench",
+        "delta vs full epoch publication benchmark (writes BENCH_publish.json)",
+    )
+    .opt("nodes", "8192", "hidden-layer width")
+    .opt("n-in", "256", "input dimension")
+    .opt("n-out", "16", "output classes")
+    .opt("fractions", "0.01,0.05,0.2", "comma-separated touched-row fractions")
+    .opt("shards", "1,4", "comma-separated LSH shard counts to sweep")
+    .opt("epochs", "3", "publish epochs averaged per case")
+    .opt("queries", "8", "serving queries bitwise-compared per epoch")
+    .opt("seed", "42", "run seed")
+    .opt("out", "BENCH_publish.json", "output JSON path");
+    let a = p.parse_rest(rest);
+    let mut touched_fractions: Vec<f64> = a
+        .list("fractions")
+        .iter()
+        .filter_map(|f| f.parse::<f64>().ok())
+        .filter(|f| *f > 0.0 && *f <= 1.0)
+        .collect();
+    if touched_fractions.is_empty() {
+        touched_fractions = vec![0.01, 0.05, 0.2];
+    }
+    let mut shard_cases: Vec<usize> = a
+        .list("shards")
+        .iter()
+        .filter_map(|s| s.parse::<usize>().ok())
+        .filter(|s| *s >= 1)
+        .collect();
+    if shard_cases.is_empty() {
+        shard_cases = vec![1, 4];
+    }
+    let cfg = hashdl::serve::PublishBenchConfig {
+        nodes: a.parse_or("nodes", 8_192usize).max(64),
+        n_in: a.parse_or("n-in", 256usize).max(4),
+        n_out: a.parse_or("n-out", 16usize).max(2),
+        touched_fractions,
+        shard_cases,
+        epochs: a.parse_or("epochs", 3usize).max(1),
+        queries: a.parse_or("queries", 8usize).max(1),
+        seed: a.parse_or("seed", 42u64),
+    };
+    let report = hashdl::serve::run_publish_bench(&cfg);
+    for c in &report.cases {
+        println!(
+            "publish-bench: S={} touched {:.1}% | deep bytes delta/full {:.0}/{:.0} \
+             (ratio {:.3}) | shared {:.0} | build us delta/full {:.0}/{:.0} | bitwise {}",
+            c.shards,
+            c.touched_fraction * 100.0,
+            c.bytes_deep_delta,
+            c.bytes_deep_full,
+            c.deep_ratio,
+            c.bytes_shared,
+            c.delta_build_micros,
+            c.full_build_micros,
+            c.bitwise_equal,
+        );
+    }
+    let out = PathBuf::from(a.get_or("out", "BENCH_publish.json"));
+    if let Err(e) = hashdl::serve::write_publish_bench_json(&report, &out) {
+        eprintln!("error writing {}: {e}", out.display());
+        return 1;
+    }
+    println!("wrote {}", out.display());
+    if report.cases.iter().any(|c| !c.bitwise_equal) {
+        eprintln!("publish-bench: delta epoch served DIFFERENT logits than full publish");
         return 1;
     }
     0

@@ -29,11 +29,142 @@
 pub mod slot;
 
 use crate::lsh::sharded::LayerTableStack;
+use crate::nn::layer::Layer;
 use crate::nn::network::Network;
 use crate::serve::snapshot::ModelSnapshot;
+use crate::tensor::matrix::Matrix;
 use slot::Slot;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+
+/// Per-layer watermark of weight rows touched since the last publication.
+/// The trainer folds each batch's touched-row union in here (O(touched)
+/// bit sets); at publish time [`ModelParts::delta_from`] deep-copies
+/// exactly these rows and shares everything else with the previous epoch.
+#[derive(Clone, Debug, Default)]
+pub struct TouchedSet {
+    words: Vec<u64>,
+    count: usize,
+}
+
+impl TouchedSet {
+    pub fn new(rows: usize) -> Self {
+        TouchedSet { words: vec![0u64; (rows + 63) / 64], count: 0 }
+    }
+
+    pub fn insert(&mut self, row: u32) {
+        let (w, bit) = ((row / 64) as usize, 1u64 << (row % 64));
+        if self.words[w] & bit == 0 {
+            self.words[w] |= bit;
+            self.count += 1;
+        }
+    }
+
+    pub fn extend(&mut self, rows: &[u32]) {
+        for &r in rows {
+            self.insert(r);
+        }
+    }
+
+    pub fn contains(&self, row: u32) -> bool {
+        self.words.get((row / 64) as usize).map_or(false, |&w| w & (1u64 << (row % 64)) != 0)
+    }
+
+    /// Distinct rows recorded since the last [`TouchedSet::clear`].
+    pub fn len(&self) -> usize {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Reset the watermark (after the rows were published).
+    pub fn clear(&mut self) {
+        self.words.iter_mut().for_each(|w| *w = 0);
+        self.count = 0;
+    }
+
+    /// The touched rows in ascending order.
+    pub fn to_rows(&self) -> Vec<u32> {
+        let mut out = Vec::with_capacity(self.count);
+        for (wi, &word) in self.words.iter().enumerate() {
+            let mut bits = word;
+            while bits != 0 {
+                out.push((wi * 64) as u32 + bits.trailing_zeros());
+                bits &= bits - 1;
+            }
+        }
+        out
+    }
+}
+
+/// What one publication cost on the copy side — the observable difference
+/// between a full publish (every row deep-copied) and a delta publish
+/// (only touched rows). Attached to the journal's Publish events and
+/// accumulated into the `hashdl_publish_*` registry counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PublishCost {
+    /// Weight rows deep-copied into fresh allocations.
+    pub rows_copied: u64,
+    /// Bytes deep-copied: touched weight rows plus the (small, always
+    /// whole-copied) bias vectors.
+    pub bytes_deep: u64,
+    /// Weight-row bytes shared with the previous epoch by `Arc`.
+    pub bytes_shared: u64,
+    /// Microseconds spent freezing / delta-re-freezing the table stacks.
+    pub freeze_micros: u64,
+}
+
+impl PublishCost {
+    /// Journal payload, e.g.
+    /// `delta rows_copied=12 bytes_deep=3904 bytes_shared=74096 freeze_micros=85`.
+    pub fn detail_string(&self, mode: &str) -> String {
+        format!(
+            "{mode} rows_copied={} bytes_deep={} bytes_shared={} freeze_micros={}",
+            self.rows_copied, self.bytes_deep, self.bytes_shared, self.freeze_micros
+        )
+    }
+}
+
+// Process-wide publication cost counters (exported as hashdl_publish_*).
+static PUBLISHES: AtomicU64 = AtomicU64::new(0);
+static DELTA_PUBLISHES: AtomicU64 = AtomicU64::new(0);
+static ROWS_COPIED: AtomicU64 = AtomicU64::new(0);
+static BYTES_DEEP: AtomicU64 = AtomicU64::new(0);
+static BYTES_SHARED: AtomicU64 = AtomicU64::new(0);
+static FREEZE_MICROS: AtomicU64 = AtomicU64::new(0);
+
+fn note_publish(cost: &PublishCost, delta: bool) {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        let reg = crate::obs::export::global();
+        reg.register_counter("hashdl_publish_total", || PUBLISHES.load(Ordering::Relaxed) as f64);
+        reg.register_counter("hashdl_publish_delta_total", || {
+            DELTA_PUBLISHES.load(Ordering::Relaxed) as f64
+        });
+        reg.register_counter("hashdl_publish_rows_copied_total", || {
+            ROWS_COPIED.load(Ordering::Relaxed) as f64
+        });
+        reg.register_counter("hashdl_publish_bytes_deep_total", || {
+            BYTES_DEEP.load(Ordering::Relaxed) as f64
+        });
+        reg.register_counter("hashdl_publish_bytes_shared_total", || {
+            BYTES_SHARED.load(Ordering::Relaxed) as f64
+        });
+        reg.register_counter("hashdl_publish_freeze_micros_total", || {
+            FREEZE_MICROS.load(Ordering::Relaxed) as f64
+        });
+    });
+    PUBLISHES.fetch_add(1, Ordering::Relaxed);
+    if delta {
+        DELTA_PUBLISHES.fetch_add(1, Ordering::Relaxed);
+    }
+    ROWS_COPIED.fetch_add(cost.rows_copied, Ordering::Relaxed);
+    BYTES_DEEP.fetch_add(cost.bytes_deep, Ordering::Relaxed);
+    BYTES_SHARED.fetch_add(cost.bytes_shared, Ordering::Relaxed);
+    FREEZE_MICROS.fetch_add(cost.freeze_micros, Ordering::Relaxed);
+}
 
 /// One immutable published epoch of the model: the unit of exchange
 /// between a trainer and its serving workers. Cheap to share (`Arc`),
@@ -102,6 +233,57 @@ impl ModelParts {
         Ok(())
     }
 
+    /// Build the next epoch's parts in O(touched) against the previously
+    /// published model: every weight plane shares its untouched rows with
+    /// `prev` by `Arc` and deep-copies only the rows `touched` records
+    /// (per layer, accumulated by the trainer since the last publish).
+    /// Biases are O(nodes), not O(params), and are copied whole. The
+    /// table stacks are the caller's — built with
+    /// [`crate::sampling::NodeSelector::frozen_stack_delta`] against
+    /// `prev`'s stacks; add the measured freeze time to the returned
+    /// cost's `freeze_micros`.
+    ///
+    /// Correctness contract (pinned by `tests/publish_delta.rs`): the
+    /// optimizer mutates weights exclusively through rows it reports to
+    /// the gradient sink, and `touched` is the union of those reports
+    /// since `prev` was built — so every row *not* in `touched` is
+    /// bit-for-bit the row `prev` already holds, and the resulting model
+    /// is indistinguishable from a full publish.
+    pub fn delta_from(
+        prev: &PublishedModel,
+        live: &Network,
+        touched: &[TouchedSet],
+        tables: Vec<LayerTableStack>,
+        sparsity: f32,
+        rerank_factor: usize,
+    ) -> (ModelParts, PublishCost) {
+        assert_eq!(prev.net.layers.len(), live.layers.len(), "delta across architectures");
+        assert_eq!(touched.len(), live.layers.len(), "one touched set per layer");
+        let mut cost = PublishCost::default();
+        let mut layers = Vec::with_capacity(live.layers.len());
+        for ((pl, ll), t) in prev.net.layers.iter().zip(&live.layers).zip(touched) {
+            let rows = t.to_rows();
+            let w = Matrix::cow_delta(&pl.w, &ll.w, &rows);
+            cost.rows_copied += rows.len() as u64;
+            cost.bytes_deep += (rows.len() * ll.w.cols() * 4 + ll.b.len() * 4) as u64;
+            cost.bytes_shared += ((ll.w.rows() - rows.len()) * ll.w.cols() * 4) as u64;
+            layers.push(Layer { w, b: ll.b.clone(), act: ll.act });
+        }
+        (ModelParts { net: Network { layers }, tables, sparsity, rerank_factor }, cost)
+    }
+
+    /// The copy cost a full (non-delta) publication pays on the weight
+    /// side: every row deep-copied, nothing shared. The baseline
+    /// `BENCH_publish.json` compares delta publishes against.
+    pub fn full_cost(&self) -> PublishCost {
+        let mut cost = PublishCost::default();
+        for l in &self.net.layers {
+            cost.rows_copied += l.w.rows() as u64;
+            cost.bytes_deep += (l.w.rows() * l.w.cols() * 4 + l.b.len() * 4) as u64;
+        }
+        cost
+    }
+
     fn into_model(self, version: u64) -> PublishedModel {
         assert_eq!(
             self.tables.len(),
@@ -115,8 +297,18 @@ impl ModelParts {
                 "table stack {l} does not cover its layer"
             );
         }
+        let mut net = self.net;
+        // Published weight planes are always copy-on-write: a full publish
+        // deep-copies every row right here (the O(params) baseline), a
+        // delta publish arrives already CoW and passes through untouched —
+        // which is what lets the *next* delta share rows against this one.
+        for l in &mut net.layers {
+            if !l.w.is_cow() {
+                l.w = l.w.to_cow();
+            }
+        }
         PublishedModel {
-            net: self.net,
+            net,
             tables: self.tables,
             sparsity: self.sparsity,
             rerank_factor: self.rerank_factor,
@@ -150,13 +342,14 @@ pub struct TableReader {
 impl TablePublisher {
     /// Open a publication channel seeded with `parts` as version 0.
     pub fn start(parts: ModelParts) -> (TablePublisher, TableReader) {
+        // Version 0 is a publication too (a full one): account its copy
+        // cost and journal it, so the frozen / publish-once serving paths
+        // still record at least one Publish event.
+        note_publish(&parts.full_cost(), false);
         let shared = Arc::new(Shared {
             slot: Slot::new(Arc::new(parts.into_model(0))),
             latest: AtomicU64::new(0),
         });
-        // Version 0 is a publication too — journalling it here means the
-        // frozen / publish-once serving paths still record at least one
-        // Publish event.
         crate::obs::events::emit(crate::obs::EventKind::Publish, "publisher", 0, "start");
         (TablePublisher { shared: Arc::clone(&shared), next: 1 }, TableReader { shared })
     }
@@ -164,8 +357,19 @@ impl TablePublisher {
     /// Publish a new epoch: stamps the next version, installs it with one
     /// atomic swap, returns the stamped version. Readers pick it up at
     /// their next [`TableReader::latest_version`] check; in-flight requests
-    /// finish on the version they started on.
+    /// finish on the version they started on. Accounted as a full publish
+    /// (every row deep-copied) — the delta path goes through
+    /// [`TablePublisher::publish_with_cost`].
     pub fn publish(&mut self, parts: ModelParts) -> u64 {
+        let cost = parts.full_cost();
+        self.publish_with_cost(parts, cost, false)
+    }
+
+    /// Publish with an explicit copy-cost attribution: `cost` lands in the
+    /// journal's Publish event payload and the `hashdl_publish_*`
+    /// counters. `delta = true` marks a [`ModelParts::delta_from`]-built
+    /// epoch (also bumps `hashdl_publish_delta_total`).
+    pub fn publish_with_cost(&mut self, parts: ModelParts, cost: PublishCost, delta: bool) -> u64 {
         let v = self.next;
         self.next += 1;
         self.shared.slot.store(Arc::new(parts.into_model(v)));
@@ -173,8 +377,20 @@ impl TablePublisher {
         // a reader that observes `latest == v` is guaranteed to load a
         // model with version >= v from the slot.
         self.shared.latest.store(v, Ordering::Release);
-        crate::obs::events::emit(crate::obs::EventKind::Publish, "publisher", v, "publish");
+        note_publish(&cost, delta);
+        crate::obs::events::emit(
+            crate::obs::EventKind::Publish,
+            "publisher",
+            v,
+            &cost.detail_string(if delta { "delta" } else { "full" }),
+        );
         v
+    }
+
+    /// The model currently in the slot — the base the next
+    /// [`ModelParts::delta_from`] shares rows against.
+    pub fn current(&self) -> Arc<PublishedModel> {
+        self.shared.slot.load()
     }
 
     /// Newest version published so far (0 = only the starting model).
@@ -288,6 +504,68 @@ mod tests {
         let mut p = parts(7);
         p.tables.clear();
         TablePublisher::start(p);
+    }
+
+    #[test]
+    fn touched_set_records_distinct_rows_in_order() {
+        let mut t = TouchedSet::new(200);
+        assert!(t.is_empty());
+        t.extend(&[130, 7, 64, 7, 0]);
+        assert_eq!(t.len(), 4, "duplicates collapse");
+        assert!(t.contains(64) && !t.contains(65));
+        assert_eq!(t.to_rows(), vec![0, 7, 64, 130]);
+        t.clear();
+        assert!(t.is_empty() && t.to_rows().is_empty());
+    }
+
+    #[test]
+    fn published_models_are_cow_backed() {
+        let (_publisher, reader) = TablePublisher::start(parts(10));
+        for l in &reader.current().net.layers {
+            assert!(l.w.is_cow(), "full publishes must freeze to CoW planes");
+        }
+    }
+
+    #[test]
+    fn delta_publish_shares_untouched_rows_and_costs_only_touched_bytes() {
+        // parts(11): net 8 -> [24] -> 3, so layer 0 is 24x8, layer 1 is 3x24.
+        let p = parts(11);
+        let mut live = p.net.clone();
+        let (sparsity, rerank, tables) = (p.sparsity, p.rerank_factor, p.tables.clone());
+        let (mut publisher, reader) = TablePublisher::start(p);
+        let prev = publisher.current();
+        // "Trainer" touches rows 2 and 19 of the hidden layer, row 1 of
+        // the output layer, and an output bias.
+        let mut touched = vec![TouchedSet::new(24), TouchedSet::new(3)];
+        for &r in &[2usize, 19] {
+            for v in live.layers[0].w.row_mut(r) {
+                *v += 0.5;
+            }
+        }
+        touched[0].extend(&[2, 19]);
+        for v in live.layers[1].w.row_mut(1) {
+            *v -= 0.25;
+        }
+        touched[1].insert(1);
+        live.layers[1].b[0] += 0.125;
+        let (next, cost) =
+            ModelParts::delta_from(&prev, &live, &touched, tables, sparsity, rerank);
+        assert_eq!(cost.rows_copied, 3);
+        assert_eq!(cost.bytes_deep, (2 * 8 * 4 + 24 * 4 + 24 * 4 + 3 * 4) as u64);
+        assert_eq!(cost.bytes_shared, (22 * 8 * 4 + 2 * 24 * 4) as u64);
+        let full = next.full_cost();
+        assert!(cost.bytes_deep < full.bytes_deep / 2, "delta must beat the full clone");
+        let v = publisher.publish_with_cost(next, cost, true);
+        let cur = reader.current();
+        assert_eq!(cur.version, v);
+        // The delta epoch is logically a full freeze of the live net...
+        for (pub_l, live_l) in cur.net.layers.iter().zip(&live.layers) {
+            assert_eq!(pub_l.w, live_l.w);
+            assert_eq!(pub_l.b, live_l.b);
+        }
+        // ...that physically shares exactly the untouched rows with v0.
+        assert_eq!(cur.net.layers[0].w.shared_rows(&prev.net.layers[0].w), 22);
+        assert_eq!(cur.net.layers[1].w.shared_rows(&prev.net.layers[1].w), 2);
     }
 
     #[test]

@@ -193,6 +193,24 @@ impl NodeSelector for LshSelector {
     fn lsh_tables(&self) -> Option<&LayerTables> {
         Some(&self.tables)
     }
+
+    fn frozen_stack_delta(
+        &self,
+        prev: Option<&crate::lsh::sharded::LayerTableStack>,
+    ) -> Option<crate::lsh::sharded::LayerTableStack> {
+        use crate::lsh::sharded::LayerTableStack;
+        match prev {
+            Some(LayerTableStack::Single(p)) if p.n_nodes() == self.tables.n_nodes() => {
+                Some(LayerTableStack::Single(crate::lsh::FrozenLayerTables::refreeze_delta(
+                    &self.tables,
+                    p,
+                )))
+            }
+            // Shape change or a sharded/absent base: fall back to a full
+            // freeze (still cheap in deep bytes — buckets are CoW).
+            _ => self.frozen_stack(),
+        }
+    }
 }
 
 #[cfg(test)]

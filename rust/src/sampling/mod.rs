@@ -198,6 +198,18 @@ pub trait NodeSelector: Send {
             .map(|t| LayerTableStack::Single(crate::lsh::FrozenLayerTables::freeze(t)))
     }
 
+    /// Delta-aware variant of [`NodeSelector::frozen_stack`]: given the
+    /// *previous* epoch's published stack, selectors that track mutations
+    /// (LSH, sharded LSH) share whatever has not changed since that stack
+    /// was frozen and re-freeze only the rest. The contract is strict:
+    /// the result must be bucket-for-bucket what `frozen_stack()` would
+    /// return right now. The default ignores `prev` and freezes fresh,
+    /// which trivially satisfies it.
+    fn frozen_stack_delta(&self, prev: Option<&LayerTableStack>) -> Option<LayerTableStack> {
+        let _ = prev;
+        self.frozen_stack()
+    }
+
     /// Per-table-group health rows for the telemetry exporter: exactly one
     /// row for an unsharded selector, one per shard for a sharded one,
     /// empty for policies without tables.

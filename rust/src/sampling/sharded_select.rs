@@ -177,6 +177,21 @@ impl NodeSelector for ShardedLshSelector {
         Some(LayerTableStack::Sharded(ShardedFrozenTables::freeze(&self.tables)))
     }
 
+    fn frozen_stack_delta(&self, prev: Option<&LayerTableStack>) -> Option<LayerTableStack> {
+        match prev {
+            Some(LayerTableStack::Sharded(p))
+                if p.shard_count() == self.tables.shard_count()
+                    && p.n_nodes() == self.tables.n_nodes() =>
+            {
+                Some(LayerTableStack::Sharded(ShardedFrozenTables::refreeze_delta(
+                    &self.tables,
+                    p,
+                )))
+            }
+            _ => self.frozen_stack(),
+        }
+    }
+
     fn health_rows(&self) -> Vec<TableHealth> {
         self.tables.health_rows()
     }

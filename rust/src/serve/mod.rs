@@ -6,8 +6,9 @@
 //! Five pieces:
 //! * [`snapshot`] — frozen model files: weights + sampler config +
 //!   prehashed LSH tables, versioned (v3 bit-packs fingerprints, v4
-//!   delta-codes bucket id lists) and backward compatible with legacy
-//!   weights-only checkpoints.
+//!   delta-codes bucket id lists, v6 ships delta *patches* between
+//!   published epochs) and backward compatible with legacy weights-only
+//!   checkpoints.
 //! * [`engine`] — [`engine::SparseInferenceEngine`]: a handle over the
 //!   `publish` subsystem's lock-free epoch slot. Workers pin one
 //!   version-stamped [`crate::publish::PublishedModel`] per micro-batch
@@ -33,6 +34,7 @@
 pub mod bench;
 pub mod engine;
 pub mod pool;
+pub mod publish_bench;
 pub mod shard_bench;
 pub mod snapshot;
 pub mod stats;
@@ -45,11 +47,17 @@ pub use bench::{
     TrainServeReport,
 };
 pub use engine::{EvalSummary, Inference, InferenceWorkspace, SparseInferenceEngine};
+pub use publish_bench::{
+    run_publish_bench, write_publish_bench_json, PublishBenchConfig, PublishBenchReport,
+};
 pub use shard_bench::{
     run_shard_bench, write_shard_bench_json, ShardBenchConfig, ShardBenchReport,
 };
 pub use pool::{
     PoolConfig, PoolHandle, PoolStats, Request, RequestQueue, Response, ServePool, SubmitOutcome,
 };
-pub use snapshot::{load_snapshot, save_snapshot, save_snapshot_v2, save_snapshot_v3, ModelSnapshot};
+pub use snapshot::{
+    apply_snapshot_delta, load_snapshot, load_snapshot_delta, save_snapshot, save_snapshot_delta,
+    save_snapshot_v2, save_snapshot_v3, LayerPatch, ModelSnapshot, SnapshotDelta,
+};
 pub use stats::{LatencyHistogram, LatencySnapshot, VersionAgeHistogram, VersionAgeSnapshot};

@@ -1,0 +1,352 @@
+//! Delta-publication benchmark (`publish-bench`): measure what the
+//! copy-on-write publishing path actually saves, and prove it changes
+//! nothing a reader can observe.
+//!
+//! For each (shard count, touched fraction) case the bench replays the
+//! trainer's publish cycle against a wide-hidden-layer model: perturb a
+//! touched-fraction of hidden rows (plus the always-fully-touched output
+//! head), run LSH maintenance over them, then build the next epoch twice
+//! from the same live state —
+//!
+//! * **delta** — [`crate::sampling::NodeSelector::frozen_stack_delta`]
+//!   re-freezes only mutated tables and
+//!   [`crate::publish::ModelParts::delta_from`] deep-copies only touched
+//!   rows, sharing the rest with the served epoch by Arc;
+//! * **full** — fresh freeze + full network clone, the pre-delta
+//!   baseline.
+//!
+//! Reported per case: deep-copied bytes for both paths and their ratio
+//! (the acceptance bar: ≤ 20% at 5% touched), build wall times, and a
+//! `bitwise_equal` flag — the delta-published epoch must serve logits
+//! bit-identical to the full build on every probe query. Results land in
+//! `BENCH_publish.json` (see [`write_publish_bench_json`]).
+
+use crate::nn::activation::Activation;
+use crate::nn::layer::Layer;
+use crate::nn::network::{Network, NetworkConfig};
+use crate::publish::{ModelParts, TablePublisher, TouchedSet};
+use crate::sampling::{make_selector, Method, NodeSelector, SamplerConfig};
+use crate::serve::{InferenceWorkspace, SparseInferenceEngine};
+use crate::util::json::{JsonArray, JsonObject};
+use crate::util::rng::Pcg64;
+use std::io;
+use std::path::Path;
+use std::time::Instant;
+
+/// Knobs for one publish-bench run. Defaults keep the hidden layer wide
+/// enough that weight-plane copying dominates the publish cost — the
+/// regime delta publication targets.
+#[derive(Clone, Debug)]
+pub struct PublishBenchConfig {
+    /// Hidden-layer width (the delta-published weight plane).
+    pub nodes: usize,
+    pub n_in: usize,
+    pub n_out: usize,
+    /// Fractions of hidden rows perturbed between publishes.
+    pub touched_fractions: Vec<f64>,
+    /// Shard counts to run every fraction at (1 = unsharded).
+    pub shard_cases: Vec<usize>,
+    /// Delta publishes measured per case (costs are averaged).
+    pub epochs: usize,
+    /// Probe queries for the bitwise serving check.
+    pub queries: usize,
+    pub seed: u64,
+}
+
+impl Default for PublishBenchConfig {
+    fn default() -> Self {
+        PublishBenchConfig {
+            nodes: 8_192,
+            n_in: 256,
+            n_out: 16,
+            touched_fractions: vec![0.01, 0.05, 0.20],
+            shard_cases: vec![1, 4],
+            epochs: 3,
+            queries: 8,
+            seed: 42,
+        }
+    }
+}
+
+/// One (shard count, touched fraction) case of the report.
+#[derive(Clone, Debug)]
+pub struct PublishCaseReport {
+    pub shards: usize,
+    pub touched_fraction: f64,
+    /// Mean rows deep-copied per delta publish (hidden + output).
+    pub rows_copied: f64,
+    /// Mean bytes deep-copied per delta / full publish.
+    pub bytes_deep_delta: f64,
+    pub bytes_deep_full: f64,
+    /// `bytes_deep_delta / bytes_deep_full` — the acceptance metric.
+    pub deep_ratio: f64,
+    /// Mean bytes Arc-shared with the previous epoch per delta publish.
+    pub bytes_shared: f64,
+    /// Mean wall micros to build one delta / full epoch (freeze + plane).
+    pub delta_build_micros: f64,
+    pub full_build_micros: f64,
+    /// Mean micros of the delta build spent re-freezing tables.
+    pub freeze_micros: f64,
+    /// Every probe query served bit-identically by the delta-published
+    /// epoch and the full build of the same state.
+    pub bitwise_equal: bool,
+}
+
+/// Everything `BENCH_publish.json` carries.
+#[derive(Clone, Debug)]
+pub struct PublishBenchReport {
+    pub nodes: usize,
+    pub n_in: usize,
+    pub n_out: usize,
+    pub epochs: usize,
+    pub cases: Vec<PublishCaseReport>,
+}
+
+/// Add scaled noise to the listed rows — the stand-in for an optimizer
+/// step whose gradient sink reported exactly these rows.
+fn perturb_rows(layer: &mut Layer, rows: &[u32], rng: &mut Pcg64) {
+    for &r in rows {
+        for v in layer.w.row_mut(r as usize).iter_mut() {
+            *v += 0.01 * rng.gaussian();
+        }
+        layer.b[r as usize] += 0.001 * rng.gaussian();
+    }
+}
+
+fn run_case(
+    cfg: &PublishBenchConfig,
+    shards: usize,
+    fraction: f64,
+) -> PublishCaseReport {
+    let mut rng = Pcg64::new(cfg.seed, 0x9B11);
+    let mut net = Network::new(
+        &NetworkConfig {
+            n_in: cfg.n_in,
+            hidden: vec![cfg.nodes],
+            n_out: cfg.n_out,
+            act: Activation::ReLU,
+        },
+        &mut rng,
+    );
+    let sampler = SamplerConfig {
+        shards,
+        ..SamplerConfig::with_method(Method::Lsh, 0.05)
+    };
+    let mut sel: Box<dyn NodeSelector> = make_selector(&sampler, &net.layers[0], &mut rng);
+    let queries: Vec<Vec<f32>> = (0..cfg.queries)
+        .map(|q| (0..cfg.n_in).map(|j| ((q * cfg.n_in + j) as f32 * 0.31).sin()).collect())
+        .collect();
+
+    let parts0 = ModelParts {
+        net: net.clone(),
+        tables: vec![sel.frozen_stack().expect("LSH ships tables")],
+        sparsity: sampler.sparsity,
+        rerank_factor: sampler.lsh.rerank_factor,
+    };
+    let (mut publisher, reader) = TablePublisher::start(parts0);
+    let engine_live = SparseInferenceEngine::live(reader);
+    let mut ws_live = InferenceWorkspace::new(&engine_live);
+
+    let k = ((cfg.nodes as f64 * fraction).round() as usize).clamp(1, cfg.nodes);
+    let mut sums = PublishCaseReport {
+        shards,
+        touched_fraction: fraction,
+        rows_copied: 0.0,
+        bytes_deep_delta: 0.0,
+        bytes_deep_full: 0.0,
+        deep_ratio: 0.0,
+        bytes_shared: 0.0,
+        delta_build_micros: 0.0,
+        full_build_micros: 0.0,
+        freeze_micros: 0.0,
+        bitwise_equal: true,
+    };
+    for _ in 0..cfg.epochs {
+        // One simulated training interval: perturb a touched-fraction of
+        // hidden rows and the whole output head, then run the same table
+        // maintenance the trainer would.
+        let mut rows = rng.sample_indices(cfg.nodes, k);
+        rows.sort_unstable();
+        perturb_rows(&mut net.layers[0], &rows, &mut rng);
+        let out_rows: Vec<u32> = (0..cfg.n_out as u32).collect();
+        perturb_rows(&mut net.layers[1], &out_rows, &mut rng);
+        sel.post_update(&net.layers[0], &rows, &mut rng);
+
+        let mut touched = vec![TouchedSet::new(cfg.nodes), TouchedSet::new(cfg.n_out)];
+        touched[0].extend(&rows);
+        touched[1].extend(&out_rows);
+
+        // Delta build: re-freeze only mutated tables, copy only touched
+        // rows, publish through the RCU slot.
+        let prev = publisher.current();
+        let t0 = Instant::now();
+        let stack = sel.frozen_stack_delta(prev.tables.get(0)).expect("LSH ships tables");
+        let freeze_micros = t0.elapsed().as_micros() as u64;
+        let (parts, mut cost) = ModelParts::delta_from(
+            &prev,
+            &net,
+            &touched,
+            vec![stack],
+            sampler.sparsity,
+            sampler.lsh.rerank_factor,
+        );
+        sums.delta_build_micros += t0.elapsed().as_micros() as f64;
+        cost.freeze_micros = freeze_micros;
+        sums.freeze_micros += freeze_micros as f64;
+        sums.rows_copied += cost.rows_copied as f64;
+        sums.bytes_deep_delta += cost.bytes_deep as f64;
+        sums.bytes_shared += cost.bytes_shared as f64;
+        publisher.publish_with_cost(parts, cost, true);
+
+        // Full build of the *same* state: fresh freeze + full clone.
+        let t1 = Instant::now();
+        let parts_full = ModelParts {
+            net: net.clone(),
+            tables: vec![sel.frozen_stack().expect("LSH ships tables")],
+            sparsity: sampler.sparsity,
+            rerank_factor: sampler.lsh.rerank_factor,
+        };
+        sums.full_build_micros += t1.elapsed().as_micros() as f64;
+        sums.bytes_deep_full += parts_full.full_cost().bytes_deep as f64;
+
+        // The delta-published epoch must be indistinguishable from the
+        // full build, logit for logit, bit for bit.
+        ws_live.sync(&engine_live);
+        let engine_full = SparseInferenceEngine::frozen(parts_full);
+        let mut ws_full = InferenceWorkspace::new(&engine_full);
+        for x in &queries {
+            let a = engine_live.infer(x, &mut ws_live);
+            let b = engine_full.infer(x, &mut ws_full);
+            sums.bitwise_equal &= a.pred == b.pred
+                && ws_live.logits == ws_full.logits
+                && a.mults.total() == b.mults.total();
+        }
+    }
+    let n = cfg.epochs.max(1) as f64;
+    sums.rows_copied /= n;
+    sums.bytes_deep_delta /= n;
+    sums.bytes_deep_full /= n;
+    sums.bytes_shared /= n;
+    sums.delta_build_micros /= n;
+    sums.full_build_micros /= n;
+    sums.freeze_micros /= n;
+    sums.deep_ratio = if sums.bytes_deep_full > 0.0 {
+        sums.bytes_deep_delta / sums.bytes_deep_full
+    } else {
+        1.0
+    };
+    sums
+}
+
+/// Run every (shard count, touched fraction) case.
+pub fn run_publish_bench(cfg: &PublishBenchConfig) -> PublishBenchReport {
+    let mut cases = Vec::new();
+    for &shards in &cfg.shard_cases {
+        for &fraction in &cfg.touched_fractions {
+            eprintln!(
+                "publish-bench: {} nodes, S={shards}, touched {:.1}%...",
+                cfg.nodes,
+                fraction * 100.0
+            );
+            let case = run_case(cfg, shards.max(1), fraction);
+            eprintln!(
+                "publish-bench:   deep ratio {:.3} ({:.0} of {:.0} bytes), \
+                 build {:.0}us vs {:.0}us, bitwise={}",
+                case.deep_ratio,
+                case.bytes_deep_delta,
+                case.bytes_deep_full,
+                case.delta_build_micros,
+                case.full_build_micros,
+                case.bitwise_equal
+            );
+            cases.push(case);
+        }
+    }
+    PublishBenchReport {
+        nodes: cfg.nodes,
+        n_in: cfg.n_in,
+        n_out: cfg.n_out,
+        epochs: cfg.epochs,
+        cases,
+    }
+}
+
+/// Serialize a [`PublishBenchReport`] to the `BENCH_publish.json` schema.
+pub fn write_publish_bench_json(report: &PublishBenchReport, path: &Path) -> io::Result<()> {
+    let mut cases = JsonArray::new();
+    for c in &report.cases {
+        cases.push_raw(
+            &JsonObject::new()
+                .usize("shards", c.shards)
+                .fixed("touched_fraction", c.touched_fraction, 4)
+                .fixed("rows_copied", c.rows_copied, 1)
+                .fixed("bytes_deep_delta", c.bytes_deep_delta, 0)
+                .fixed("bytes_deep_full", c.bytes_deep_full, 0)
+                .fixed("deep_ratio", c.deep_ratio, 4)
+                .fixed("bytes_shared", c.bytes_shared, 0)
+                .fixed("delta_build_micros", c.delta_build_micros, 1)
+                .fixed("full_build_micros", c.full_build_micros, 1)
+                .fixed("freeze_micros", c.freeze_micros, 1)
+                .bool("bitwise_equal", c.bitwise_equal)
+                .finish(),
+        );
+    }
+    let json = JsonObject::new()
+        .str("bench", "publish")
+        .usize("nodes", report.nodes)
+        .usize("n_in", report.n_in)
+        .usize("n_out", report.n_out)
+        .usize("epochs", report.epochs)
+        .raw("cases", &cases.finish())
+        .finish()
+        + "\n";
+    std::fs::write(path, json)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_publish_bench_meets_the_delta_bar() {
+        let cfg = PublishBenchConfig {
+            nodes: 512,
+            n_in: 64,
+            n_out: 4,
+            touched_fractions: vec![0.05, 0.25],
+            shard_cases: vec![1, 2],
+            epochs: 2,
+            queries: 4,
+            seed: 11,
+        };
+        let report = run_publish_bench(&cfg);
+        assert_eq!(report.cases.len(), 4);
+        for c in &report.cases {
+            assert!(c.bitwise_equal, "S={} f={} must serve bitwise", c.shards, c.touched_fraction);
+            assert!(c.deep_ratio < 1.0, "delta must beat full: {}", c.deep_ratio);
+            assert!(c.bytes_shared > 0.0, "untouched rows must be shared");
+        }
+        // The acceptance bar: ≤ 20% of full-publish bytes at 5% touched,
+        // sharded and unsharded alike.
+        for c in report.cases.iter().filter(|c| c.touched_fraction < 0.06) {
+            assert!(
+                c.deep_ratio <= 0.20,
+                "S={}: deep ratio {} over the 20% bar",
+                c.shards,
+                c.deep_ratio
+            );
+        }
+        // More touched rows must deep-copy more bytes.
+        let (a, b) = (&report.cases[0], &report.cases[1]);
+        assert!(a.bytes_deep_delta < b.bytes_deep_delta);
+
+        let path = std::env::temp_dir()
+            .join(format!("hashdl_publish_bench_{}.json", std::process::id()));
+        write_publish_bench_json(&report, &path).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert!(body.contains("\"bench\": \"publish\"") || body.contains("\"bench\":\"publish\""));
+        assert!(body.contains("deep_ratio"));
+        assert!(body.contains("bitwise_equal"));
+    }
+}

@@ -32,11 +32,24 @@
 //! set. `load_snapshot` reads v1–v4; [`save_snapshot`] writes v4,
 //! [`save_snapshot_v3`]/[`save_snapshot_v2`] keep the older encodings for
 //! tooling pinned to them (and for the exact-size-win tests).
+//!
+//! **Delta patches (v6):** a `HDLMODL6` file is *not* a standalone model
+//! — it is a patch that advances a base snapshot one published epoch
+//! forward, mirroring the in-process delta publication
+//! ([`crate::publish::ModelParts::delta_from`]): per layer, only the rows
+//! that changed since the base (varint-coded ascending ids + their f32
+//! contents, v4-style) plus the full O(nodes) bias vector; per hidden
+//! layer, a full table section only when that layer's stack actually
+//! changed. [`save_snapshot_delta`] diffs two snapshots (CoW-published
+//! planes diff by Arc identity, O(touched)), [`load_snapshot_delta`] +
+//! [`apply_snapshot_delta`] replay a chain of patches on top of a full
+//! base file. `load_snapshot` rejects v6 with a pointed error.
 
 use crate::data::io::{
     invalid, read_f32, read_f32s, read_network_body, read_str, read_u32, read_u32s, read_u64,
     write_f32, write_f32s, write_network_body, write_str, write_u32, write_u32s, write_u64,
-    MODEL_MAGIC, SNAPSHOT3_MAGIC, SNAPSHOT4_MAGIC, SNAPSHOT5_MAGIC, SNAPSHOT_MAGIC,
+    MODEL_MAGIC, SNAPSHOT3_MAGIC, SNAPSHOT4_MAGIC, SNAPSHOT5_MAGIC, SNAPSHOT6_MAGIC,
+    SNAPSHOT_MAGIC,
 };
 use crate::util::bitpack::{
     pack_u32s, packed_words, read_varint, unpack_u32s, unzigzag, write_varint, zigzag,
@@ -361,6 +374,29 @@ fn read_bucket_delta(r: &mut impl Read, n_nodes: usize) -> io::Result<Vec<u32>> 
     Ok(ids)
 }
 
+/// Read one v5-style table stack: a `u32` shard count followed by that
+/// many self-contained table sections (`l` only labels errors).
+fn read_table_stack(
+    r: &mut impl Read,
+    cfg: LshConfig,
+    fmt: SnapFormat,
+    l: usize,
+) -> io::Result<LayerTableStack> {
+    let shard_count = read_u32(r)? as usize;
+    if shard_count == 0 {
+        return Err(invalid(format!("table set {l} has zero shards")));
+    }
+    if shard_count == 1 {
+        return Ok(LayerTableStack::Single(read_table_set(r, cfg, fmt)?));
+    }
+    let mut parts = Vec::with_capacity(shard_count);
+    for _ in 0..shard_count {
+        parts.push(read_table_set(r, cfg, fmt)?);
+    }
+    let total: usize = parts.iter().map(|p| p.n_nodes()).sum();
+    Ok(LayerTableStack::Sharded(ShardedFrozenTables::from_parts(parts, total).map_err(invalid)?))
+}
+
 fn read_table_set(
     r: &mut impl Read,
     cfg: LshConfig,
@@ -425,6 +461,12 @@ pub fn load_snapshot(path: &Path) -> io::Result<ModelSnapshot> {
         return Ok(ModelSnapshot::without_tables(net, SamplerConfig::default(), 42));
     }
     let fmt = match &magic {
+        m if m == SNAPSHOT6_MAGIC => {
+            return Err(invalid(
+                "HDLMODL6 is a delta patch, not a standalone model: load its base \
+                 snapshot and apply it with apply_snapshot_delta",
+            ))
+        }
         m if m == SNAPSHOT5_MAGIC => SnapFormat::V5,
         m if m == SNAPSHOT4_MAGIC => SnapFormat::V4,
         m if m == SNAPSHOT3_MAGIC => SnapFormat::V3,
@@ -469,22 +511,7 @@ pub fn load_snapshot(path: &Path) -> io::Result<ModelSnapshot> {
         let mut sets = Vec::with_capacity(n_sets);
         for l in 0..n_sets {
             let stack = if fmt.sharded() {
-                let shard_count = read_u32(&mut r)? as usize;
-                if shard_count == 0 {
-                    return Err(invalid(format!("table set {l} has zero shards")));
-                }
-                if shard_count == 1 {
-                    LayerTableStack::Single(read_table_set(&mut r, lsh, fmt)?)
-                } else {
-                    let mut parts = Vec::with_capacity(shard_count);
-                    for _ in 0..shard_count {
-                        parts.push(read_table_set(&mut r, lsh, fmt)?);
-                    }
-                    let total: usize = parts.iter().map(|p| p.n_nodes()).sum();
-                    LayerTableStack::Sharded(
-                        ShardedFrozenTables::from_parts(parts, total).map_err(invalid)?,
-                    )
-                }
+                read_table_stack(&mut r, lsh, fmt, l)?
             } else {
                 LayerTableStack::Single(read_table_set(&mut r, lsh, fmt)?)
             };
@@ -500,6 +527,270 @@ pub fn load_snapshot(path: &Path) -> io::Result<ModelSnapshot> {
         Some(sets)
     };
     Ok(ModelSnapshot { net, sampler, seed, tables })
+}
+
+/// In-memory form of a v6 delta patch (see the module docs and
+/// [`save_snapshot_delta`] for the byte layout).
+pub struct SnapshotDelta {
+    /// Version of the model this patch applies on top of. Pure metadata
+    /// for the caller's chain bookkeeping — a [`ModelSnapshot`] carries
+    /// no version, so [`apply_snapshot_delta`] validates shapes, not
+    /// versions.
+    pub base_version: u64,
+    /// Version of the model the patch produces.
+    pub version: u64,
+    /// LSH config the table sections were written under (needed to
+    /// parse them).
+    pub lsh: LshConfig,
+    pub layers: Vec<LayerPatch>,
+    /// One entry per hidden layer: `None` = this layer's stack is
+    /// unchanged from the base, `Some` = replacement stack. Empty when
+    /// the patched model ships no tables.
+    pub tables: Vec<Option<LayerTableStack>>,
+}
+
+/// One layer's weight/bias patch inside a [`SnapshotDelta`].
+pub struct LayerPatch {
+    pub rows: usize,
+    pub cols: usize,
+    /// Strictly ascending changed-row ids.
+    pub touched: Vec<u32>,
+    /// Row contents, `touched.len() * cols` floats in `touched` order.
+    pub data: Vec<f32>,
+    /// The full bias vector — O(nodes), copied whole like the
+    /// in-process delta publish ([`crate::publish::ModelParts::delta_from`]).
+    pub bias: Vec<f32>,
+}
+
+/// Rows of `next` that differ bitwise from `base`, ascending. CoW planes
+/// (delta-published epochs) short-circuit per row on Arc identity, so
+/// diffing two neighbouring published models costs O(touched) compares;
+/// dense planes fall back to a bitwise row comparison.
+fn changed_rows(base: &Matrix, next: &Matrix) -> Vec<u32> {
+    let mut out = Vec::new();
+    for r in 0..next.rows() {
+        let shared = match (base.cow_row_arc(r), next.cow_row_arc(r)) {
+            (Some(a), Some(b)) => std::sync::Arc::ptr_eq(a, b),
+            _ => false,
+        };
+        if !shared && !rows_bitwise_equal(base.row(r), next.row(r)) {
+            out.push(r as u32);
+        }
+    }
+    out
+}
+
+/// Bitwise (not IEEE) equality, so a patch never silently drops a row
+/// that only changed in representation (-0.0 vs 0.0, NaN payloads).
+fn rows_bitwise_equal(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Logical equality of two frozen table sets: ordered buckets, node
+/// fingerprints, the ALSH scaling constant and the projections.
+fn table_sets_equal(a: &FrozenLayerTables, b: &FrozenLayerTables) -> bool {
+    a.n_nodes() == b.n_nodes()
+        && a.config().k == b.config().k
+        && a.config().l == b.config().l
+        && a.family().max_norm().to_bits() == b.family().max_norm().to_bits()
+        && a.family().srp().projections() == b.family().srp().projections()
+        && a.tables() == b.tables()
+}
+
+fn stacks_equal(a: &LayerTableStack, b: &LayerTableStack) -> bool {
+    match (a, b) {
+        (LayerTableStack::Single(x), LayerTableStack::Single(y)) => table_sets_equal(x, y),
+        (LayerTableStack::Sharded(x), LayerTableStack::Sharded(y)) => {
+            x.shard_count() == y.shard_count()
+                && x.map() == y.map()
+                && x.shards().iter().zip(y.shards()).all(|(p, q)| table_sets_equal(p, q))
+        }
+        _ => false,
+    }
+}
+
+/// Diff `next` against `base` and write a v6 delta patch. Layout (all
+/// little-endian):
+///
+/// ```text
+/// "HDLMODL6"
+/// u64 base_version, u64 version
+/// u32 {k, l, probes, crowded, rerank}, f32 rehash_prob
+/// u32 layer count
+/// per layer:
+///   u32 rows, u32 cols
+///   varint touched len, then len zigzag-delta varints of ascending
+///     row ids (the v4 bucket coding, reused verbatim)
+///   f32s row data        (touched len * cols)
+///   f32s bias            (rows floats, always whole)
+/// u32 table entry count  (0 = next ships no tables)
+/// per entry: u32 changed flag, then (when 1) a v5-style stack section
+/// ```
+pub fn save_snapshot_delta(
+    base: &ModelSnapshot,
+    next: &ModelSnapshot,
+    base_version: u64,
+    version: u64,
+    path: &Path,
+) -> io::Result<()> {
+    if base.net.layers.len() != next.net.layers.len() {
+        return Err(invalid("delta across different architectures"));
+    }
+    let mut w = io::BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(SNAPSHOT6_MAGIC)?;
+    write_u64(&mut w, base_version)?;
+    write_u64(&mut w, version)?;
+    let lsh = next.sampler.lsh;
+    write_u32(&mut w, lsh.k as u32)?;
+    write_u32(&mut w, lsh.l as u32)?;
+    write_u32(&mut w, lsh.probes_per_table as u32)?;
+    write_u32(&mut w, lsh.crowded_limit as u32)?;
+    write_u32(&mut w, lsh.rerank_factor as u32)?;
+    write_f32(&mut w, lsh.rehash_probability)?;
+    write_u32(&mut w, next.net.layers.len() as u32)?;
+    for (bl, nl) in base.net.layers.iter().zip(&next.net.layers) {
+        if bl.w.rows() != nl.w.rows() || bl.w.cols() != nl.w.cols() {
+            return Err(invalid("delta across different layer shapes"));
+        }
+        let touched = changed_rows(&bl.w, &nl.w);
+        write_u32(&mut w, nl.w.rows() as u32)?;
+        write_u32(&mut w, nl.w.cols() as u32)?;
+        write_bucket_delta(&mut w, &touched)?;
+        for &r in &touched {
+            write_f32s(&mut w, nl.w.row(r as usize))?;
+        }
+        write_f32s(&mut w, &nl.b)?;
+    }
+    match &next.tables {
+        None => write_u32(&mut w, 0)?,
+        Some(sets) => {
+            write_u32(&mut w, sets.len() as u32)?;
+            for (l, stack) in sets.iter().enumerate() {
+                let unchanged = base
+                    .tables
+                    .as_ref()
+                    .and_then(|b| b.get(l))
+                    .map_or(false, |b| stacks_equal(b, stack));
+                write_u32(&mut w, if unchanged { 0 } else { 1 })?;
+                if !unchanged {
+                    write_table_stack(&mut w, stack, SnapFormat::V5)?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Parse a v6 patch file (see [`save_snapshot_delta`] for the layout).
+pub fn load_snapshot_delta(path: &Path) -> io::Result<SnapshotDelta> {
+    let mut r = io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != SNAPSHOT6_MAGIC {
+        return Err(invalid("not a HDLMODL6 delta patch"));
+    }
+    let base_version = read_u64(&mut r)?;
+    let version = read_u64(&mut r)?;
+    let lsh = LshConfig {
+        k: read_u32(&mut r)? as usize,
+        l: read_u32(&mut r)? as usize,
+        probes_per_table: read_u32(&mut r)? as usize,
+        crowded_limit: read_u32(&mut r)? as usize,
+        rerank_factor: read_u32(&mut r)? as usize,
+        rehash_probability: read_f32(&mut r)?,
+    };
+    if lsh.k == 0 || lsh.k > 16 || lsh.l == 0 {
+        return Err(invalid(format!("patch LSH config K={} L={} out of range", lsh.k, lsh.l)));
+    }
+    let n_layers = read_u32(&mut r)? as usize;
+    let mut layers = Vec::with_capacity(n_layers);
+    for _ in 0..n_layers {
+        let rows = read_u32(&mut r)? as usize;
+        let cols = read_u32(&mut r)? as usize;
+        let touched = read_bucket_delta(&mut r, rows)?;
+        if touched.windows(2).any(|p| p[0] >= p[1]) {
+            return Err(invalid("patch row ids must be strictly ascending"));
+        }
+        let data = read_f32s(&mut r, touched.len() * cols)?;
+        let bias = read_f32s(&mut r, rows)?;
+        layers.push(LayerPatch { rows, cols, touched, data, bias });
+    }
+    let n_sets = read_u32(&mut r)? as usize;
+    let mut tables = Vec::with_capacity(n_sets);
+    for l in 0..n_sets {
+        match read_u32(&mut r)? {
+            0 => tables.push(None),
+            1 => tables.push(Some(read_table_stack(&mut r, lsh, SnapFormat::V5, l)?)),
+            other => return Err(invalid(format!("bad changed flag {other} for table set {l}"))),
+        }
+    }
+    Ok(SnapshotDelta { base_version, version, lsh, layers, tables })
+}
+
+/// Apply a patch to its base, producing the next epoch's full snapshot.
+/// Shape mismatches fail loudly; version bookkeeping is the caller's
+/// (see [`SnapshotDelta::base_version`]).
+pub fn apply_snapshot_delta(
+    base: &ModelSnapshot,
+    delta: &SnapshotDelta,
+) -> io::Result<ModelSnapshot> {
+    if delta.layers.len() != base.net.layers.len() {
+        return Err(invalid(format!(
+            "patch has {} layers, base has {}",
+            delta.layers.len(),
+            base.net.layers.len()
+        )));
+    }
+    let mut layers = Vec::with_capacity(delta.layers.len());
+    for (bl, p) in base.net.layers.iter().zip(&delta.layers) {
+        if bl.w.rows() != p.rows || bl.w.cols() != p.cols || bl.b.len() != p.rows {
+            return Err(invalid("patch layer shape does not match base"));
+        }
+        let mut data = Vec::with_capacity(p.rows * p.cols);
+        for r in 0..p.rows {
+            data.extend_from_slice(bl.w.row(r));
+        }
+        for (k, &r) in p.touched.iter().enumerate() {
+            data[r as usize * p.cols..(r as usize + 1) * p.cols]
+                .copy_from_slice(&p.data[k * p.cols..(k + 1) * p.cols]);
+        }
+        layers.push(crate::nn::layer::Layer {
+            w: Matrix::from_vec(p.rows, p.cols, data),
+            b: p.bias.clone(),
+            act: bl.act,
+        });
+    }
+    let net = crate::nn::network::Network { layers };
+    let tables = if delta.tables.is_empty() {
+        None
+    } else {
+        if delta.tables.len() != net.n_hidden() {
+            return Err(invalid(format!(
+                "patch has {} table entries for {} hidden layers",
+                delta.tables.len(),
+                net.n_hidden()
+            )));
+        }
+        let mut sets = Vec::with_capacity(delta.tables.len());
+        for (l, entry) in delta.tables.iter().enumerate() {
+            let stack = match entry {
+                Some(s) => s.clone(),
+                None => base.tables.as_ref().and_then(|b| b.get(l)).cloned().ok_or_else(
+                    || invalid(format!("patch keeps table set {l} but the base ships none")),
+                )?,
+            };
+            if stack.n_nodes() != net.layers[l].n_out() {
+                return Err(invalid(format!(
+                    "table set {l} covers {} nodes, layer has {}",
+                    stack.n_nodes(),
+                    net.layers[l].n_out()
+                )));
+            }
+            sets.push(stack);
+        }
+        Some(sets)
+    };
+    Ok(ModelSnapshot { net, sampler: base.sampler, seed: base.seed, tables })
 }
 
 #[cfg(test)]
@@ -669,7 +960,7 @@ mod tests {
                 let v3_bytes = 4 + 4 * bucket.len() as u64;
                 let mut v4_bytes = varint_len(bucket.len() as u64) as u64;
                 let mut prev = 0i64;
-                for &id in bucket {
+                for &id in bucket.iter() {
                     v4_bytes += varint_len(zigzag(id as i64 - prev)) as u64;
                     prev = id as i64;
                 }
@@ -755,5 +1046,77 @@ mod tests {
             assert_eq!(a.b, b.b);
         }
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn v6_delta_chain_roundtrips_and_stays_small() {
+        let mut snap0 = ModelSnapshot::without_tables(tiny_net(20), SamplerConfig::default(), 31);
+        snap0.ensure_tables();
+
+        // Epoch 1: a handful of weight rows and one bias move; no tables.
+        let mut snap1 = ModelSnapshot {
+            net: snap0.net.clone(),
+            sampler: snap0.sampler,
+            seed: snap0.seed,
+            tables: snap0.tables.clone(),
+        };
+        for &r in &[3usize, 17, 39] {
+            snap1.net.layers[0].w.row_mut(r).iter_mut().for_each(|v| *v += 0.5);
+        }
+        snap1.net.layers[2].w.row_mut(1).iter_mut().for_each(|v| *v = -*v);
+        snap1.net.layers[1].b[5] += 1.0;
+
+        // Epoch 2: one more row moves and layer 1's tables are rebuilt.
+        let mut snap2 = ModelSnapshot {
+            net: snap1.net.clone(),
+            sampler: snap1.sampler,
+            seed: snap1.seed,
+            tables: snap1.tables.clone(),
+        };
+        snap2.net.layers[1].w.row_mut(8).iter_mut().for_each(|v| *v += 2.0);
+        snap2.tables.as_mut().unwrap()[1] = LayerTableStack::Single(FrozenLayerTables::freeze(
+            &LayerTables::build(&snap2.net.layers[1].w, snap2.sampler.lsh, &mut Pcg64::seeded(777)),
+        ));
+
+        let (full, p1, p2) = (tmp("v6_base"), tmp("v6_d1"), tmp("v6_d2"));
+        save_snapshot(&snap0, &full).unwrap();
+        save_snapshot_delta(&snap0, &snap1, 0, 1, &p1).unwrap();
+        save_snapshot_delta(&snap1, &snap2, 1, 2, &p2).unwrap();
+
+        // Replay the chain on a fresh load of the base file.
+        let base = load_snapshot(&full).unwrap();
+        let d1 = load_snapshot_delta(&p1).unwrap();
+        assert_eq!((d1.base_version, d1.version), (0, 1));
+        assert_eq!(d1.layers[0].touched, vec![3, 17, 39]);
+        assert_eq!(d1.layers[1].touched, Vec::<u32>::new());
+        assert_eq!(d1.layers[2].touched, vec![1]);
+        assert!(d1.tables.iter().all(|t| t.is_none()), "no tables changed in epoch 1");
+        let s1 = apply_snapshot_delta(&base, &d1).unwrap();
+        let d2 = load_snapshot_delta(&p2).unwrap();
+        assert!(d2.tables[0].is_none() && d2.tables[1].is_some());
+        let s2 = apply_snapshot_delta(&s1, &d2).unwrap();
+
+        for (a, b) in s2.net.layers.iter().zip(&snap2.net.layers) {
+            assert_eq!(a.w, b.w, "patched weights must match the live epoch bitwise");
+            assert_eq!(a.b, b.b);
+        }
+        for (a, b) in s2.tables.as_ref().unwrap().iter().zip(snap2.tables.as_ref().unwrap()) {
+            let (a, b) = (a.single().unwrap(), b.single().unwrap());
+            assert_eq!(a.tables(), b.tables());
+            assert_eq!(a.family().srp().projections(), b.family().srp().projections());
+        }
+
+        // A patch touching 4 of 83 rows and no tables must be a small
+        // fraction of the full file.
+        let sf = std::fs::metadata(&full).unwrap().len();
+        let s1b = std::fs::metadata(&p1).unwrap().len();
+        assert!(s1b * 5 < sf, "delta patch {s1b} bytes vs full snapshot {sf}");
+
+        // v6 is a patch, not a standalone model.
+        let err = load_snapshot(&p1).unwrap_err();
+        assert!(err.to_string().contains("delta patch"), "{err}");
+        for p in [full, p1, p2] {
+            std::fs::remove_file(p).ok();
+        }
     }
 }

@@ -1,0 +1,143 @@
+//! Copy-on-write row planes for O(touched) model publication.
+//!
+//! A [`CowPlane`] holds one `Arc<AVec>` per matrix row. Cloning the plane
+//! bumps refcounts; replacing a row swaps one Arc. A published model's
+//! weight planes are CoW, so publishing epoch N+1 deep-copies only the
+//! rows the trainer actually touched since epoch N and *shares* every
+//! other row with its predecessor byte-for-byte — the storage analogue of
+//! the paper's "the updates [are] always sparse" observation. Each row is
+//! its own [`AVec`], so every row base (not just row 0) sits on a 32-byte
+//! boundary regardless of the column count.
+
+use crate::tensor::aligned::AVec;
+use std::sync::Arc;
+
+/// A row-major plane whose rows are individually reference-counted.
+#[derive(Clone)]
+pub struct CowPlane {
+    rows: Vec<Arc<AVec>>,
+    cols: usize,
+}
+
+impl CowPlane {
+    /// Assemble a plane from per-row Arcs. Every row must have logical
+    /// length `cols`.
+    pub fn new(cols: usize, rows: Vec<Arc<AVec>>) -> Self {
+        debug_assert!(rows.iter().all(|r| r.len() == cols), "ragged CowPlane rows");
+        CowPlane { rows, cols }
+    }
+
+    /// Deep-copy a sequence of dense rows into a fully-owned plane (the
+    /// full-publish path: every row gets a fresh Arc).
+    pub fn from_dense_rows<'a>(cols: usize, rows: impl Iterator<Item = &'a [f32]>) -> Self {
+        let rows: Vec<Arc<AVec>> = rows
+            .map(|r| {
+                debug_assert_eq!(r.len(), cols);
+                Arc::new(AVec::from_slice(r))
+            })
+            .collect();
+        CowPlane { rows, cols }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        self.rows[r].as_slice()
+    }
+
+    /// The Arc behind row `r` (for sharing diagnostics and delta builds).
+    pub fn arc_row(&self, r: usize) -> &Arc<AVec> {
+        &self.rows[r]
+    }
+
+    /// Replace row `r` with a freshly-copied version of `data` (the
+    /// delta-publish path for a touched row).
+    pub fn replace_row(&mut self, r: usize, data: &[f32]) {
+        debug_assert_eq!(data.len(), self.cols);
+        self.rows[r] = Arc::new(AVec::from_slice(data));
+    }
+
+    /// How many rows of `self` are *the same allocation* as the matching
+    /// row of `other` (Arc pointer equality — the sharing a delta publish
+    /// buys, measurable).
+    pub fn shared_rows_with(&self, other: &CowPlane) -> usize {
+        self.rows
+            .iter()
+            .zip(&other.rows)
+            .filter(|(a, b)| Arc::ptr_eq(a, b))
+            .count()
+    }
+}
+
+impl PartialEq for CowPlane {
+    fn eq(&self, other: &CowPlane) -> bool {
+        self.cols == other.cols
+            && self.rows.len() == other.rows.len()
+            && self
+                .rows
+                .iter()
+                .zip(&other.rows)
+                .all(|(a, b)| Arc::ptr_eq(a, b) || a.as_slice() == b.as_slice())
+    }
+}
+
+impl std::fmt::Debug for CowPlane {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CowPlane")
+            .field("rows", &self.rows.len())
+            .field("cols", &self.cols)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plane(rows: usize, cols: usize) -> CowPlane {
+        let data: Vec<Vec<f32>> =
+            (0..rows).map(|r| (0..cols).map(|c| (r * cols + c) as f32).collect()).collect();
+        CowPlane::from_dense_rows(cols, data.iter().map(|r| r.as_slice()))
+    }
+
+    #[test]
+    fn rows_are_32_byte_aligned_at_any_width() {
+        for cols in [1usize, 3, 8, 13] {
+            let p = plane(4, cols);
+            for r in 0..4 {
+                assert_eq!(p.row(r).as_ptr() as usize % 32, 0, "cols={cols} row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn clone_shares_every_row_and_replace_unshares_one() {
+        let a = plane(5, 4);
+        let mut b = a.clone();
+        assert_eq!(b.shared_rows_with(&a), 5);
+        b.replace_row(2, &[9.0, 9.0, 9.0, 9.0]);
+        assert_eq!(b.shared_rows_with(&a), 4);
+        assert_eq!(b.row(2), &[9.0; 4]);
+        assert_eq!(a.row(2), &[8.0, 9.0, 10.0, 11.0], "source plane untouched");
+    }
+
+    #[test]
+    fn equality_is_logical_not_pointer() {
+        let a = plane(3, 2);
+        let mut b = a.clone();
+        assert_eq!(a, b);
+        // Same bytes, different allocation: still equal.
+        let row1 = a.row(1).to_vec();
+        b.replace_row(1, &row1);
+        assert_eq!(a, b);
+        b.replace_row(1, &[-1.0, -2.0]);
+        assert_ne!(a, b);
+    }
+}

@@ -1,28 +1,55 @@
 //! Row-major f32 matrix. Weight matrices store one *row per output neuron*
 //! so that a neuron's weight vector — the thing LSH indexes and the sparse
-//! pass dots against — is a contiguous slice. Storage is a 32-byte-aligned
-//! [`AVec`] plane, so row 0 (and every row when `cols % 8 == 0`, the
-//! common case for hidden layers) starts on an AVX2-friendly boundary.
+//! pass dots against — is a contiguous slice. The default store is a
+//! 32-byte-aligned [`AVec`] plane, so row 0 (and every row when
+//! `cols % 8 == 0`, the common case for hidden layers) starts on an
+//! AVX2-friendly boundary.
+//!
+//! A matrix can alternatively be backed by a [`CowPlane`]
+//! (copy-on-write, one `Arc` per row): that is the *published* form —
+//! immutable, sharing untouched rows with the previous epoch. Reads
+//! (`row`, `get`, `gemv`) work on either store; mutation (`row_mut`,
+//! `set`, `as_mut_slice`) is defined only for the dense store, which is
+//! the only one the trainer ever holds.
 
 use crate::tensor::aligned::AVec;
+use crate::tensor::cow::CowPlane;
 use crate::tensor::vecops;
 use crate::util::rng::Pcg64;
+use std::sync::Arc;
 
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug)]
+enum Store {
+    Dense(AVec),
+    Cow(CowPlane),
+}
+
+#[derive(Clone, Debug)]
 pub struct Matrix {
     rows: usize,
     cols: usize,
-    data: AVec,
+    data: Store,
+}
+
+impl PartialEq for Matrix {
+    /// Logical equality: same shape, same row contents — regardless of
+    /// which store backs each side (a delta-published CoW matrix equals
+    /// the dense trainer matrix it was frozen from).
+    fn eq(&self, other: &Matrix) -> bool {
+        self.rows == other.rows
+            && self.cols == other.cols
+            && (0..self.rows).all(|r| self.row(r) == other.row(r))
+    }
 }
 
 impl Matrix {
     pub fn zeros(rows: usize, cols: usize) -> Self {
-        Matrix { rows, cols, data: AVec::zeros(rows * cols) }
+        Matrix { rows, cols, data: Store::Dense(AVec::zeros(rows * cols)) }
     }
 
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
         assert_eq!(data.len(), rows * cols, "shape mismatch");
-        Matrix { rows, cols, data: AVec::from_slice(&data) }
+        Matrix { rows, cols, data: Store::Dense(AVec::from_slice(&data)) }
     }
 
     pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
@@ -38,7 +65,7 @@ impl Matrix {
     /// Gaussian-filled matrix (used for LSH projection directions).
     pub fn randn(rows: usize, cols: usize, rng: &mut Pcg64) -> Self {
         let mut m = Matrix::zeros(rows, cols);
-        for v in m.data.as_mut_slice() {
+        for v in m.as_mut_slice() {
             *v = rng.gaussian();
         }
         m
@@ -51,32 +78,106 @@ impl Matrix {
         self.cols
     }
 
+    /// Whether this matrix is backed by the copy-on-write store (published
+    /// epochs) rather than the dense trainer plane.
+    pub fn is_cow(&self) -> bool {
+        matches!(self.data, Store::Cow(_))
+    }
+
     #[inline]
     pub fn row(&self, r: usize) -> &[f32] {
-        &self.data[r * self.cols..(r + 1) * self.cols]
+        match &self.data {
+            Store::Dense(d) => &d[r * self.cols..(r + 1) * self.cols],
+            Store::Cow(p) => p.row(r),
+        }
+    }
+
+    #[inline]
+    fn dense(&self) -> &AVec {
+        match &self.data {
+            Store::Dense(d) => d,
+            Store::Cow(_) => panic!("copy-on-write matrix has no contiguous dense plane"),
+        }
+    }
+
+    #[inline]
+    fn dense_mut(&mut self) -> &mut AVec {
+        match &mut self.data {
+            Store::Dense(d) => d,
+            Store::Cow(_) => panic!("copy-on-write matrix is immutable"),
+        }
     }
 
     #[inline]
     pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
-        &mut self.data[r * self.cols..(r + 1) * self.cols]
+        let cols = self.cols;
+        &mut self.dense_mut()[r * cols..(r + 1) * cols]
     }
 
     #[inline]
     pub fn get(&self, r: usize, c: usize) -> f32 {
-        self.data[r * self.cols + c]
+        self.row(r)[c]
     }
 
     #[inline]
     pub fn set(&mut self, r: usize, c: usize, v: f32) {
-        self.data[r * self.cols + c] = v;
+        let cols = self.cols;
+        self.dense_mut()[r * cols + c] = v;
     }
 
     pub fn as_slice(&self) -> &[f32] {
-        self.data.as_slice()
+        self.dense().as_slice()
     }
 
     pub fn as_mut_slice(&mut self) -> &mut [f32] {
-        self.data.as_mut_slice()
+        self.dense_mut().as_mut_slice()
+    }
+
+    /// Freeze into a fully-owned copy-on-write matrix: every row is
+    /// deep-copied into its own `Arc` (O(params) — the *full*-publish
+    /// path, and the baseline every delta publish shares rows against).
+    pub fn to_cow(&self) -> Matrix {
+        let plane = CowPlane::from_dense_rows(self.cols, (0..self.rows).map(|r| self.row(r)));
+        Matrix { rows: self.rows, cols: self.cols, data: Store::Cow(plane) }
+    }
+
+    /// Build the next published epoch from the previous one in
+    /// O(touched): share every row of `prev` by Arc, then deep-copy only
+    /// the `touched` rows out of `live` (the trainer's current dense
+    /// plane). `prev` must be CoW and shape-identical to `live`.
+    ///
+    /// Correctness rests on the trainer's update discipline: the
+    /// optimizer mutates weights exclusively through `row_mut` on rows it
+    /// reports touched, so every *untouched* row of `live` is bit-for-bit
+    /// the row `prev` already holds.
+    pub fn cow_delta(prev: &Matrix, live: &Matrix, touched: &[u32]) -> Matrix {
+        assert_eq!((prev.rows, prev.cols), (live.rows, live.cols), "delta across shapes");
+        let Store::Cow(prev_plane) = &prev.data else {
+            panic!("cow_delta base must be a copy-on-write matrix");
+        };
+        let mut plane = prev_plane.clone();
+        for &r in touched {
+            plane.replace_row(r as usize, live.row(r as usize));
+        }
+        Matrix { rows: prev.rows, cols: prev.cols, data: Store::Cow(plane) }
+    }
+
+    /// Rows of `self` physically shared (same allocation) with `other`.
+    /// Zero unless both are CoW — dense planes never share.
+    pub fn shared_rows(&self, other: &Matrix) -> usize {
+        match (&self.data, &other.data) {
+            (Store::Cow(a), Store::Cow(b)) => a.shared_rows_with(b),
+            _ => 0,
+        }
+    }
+
+    /// The Arc behind CoW row `r` (None for dense matrices) — lets tests
+    /// pin exactly *which* rows a delta publish re-allocated.
+    pub fn cow_row_arc(&self, r: usize) -> Option<&Arc<AVec>> {
+        match &self.data {
+            Store::Cow(p) => Some(p.arc_row(r)),
+            Store::Dense(_) => None,
+        }
     }
 
     /// y = A x  (dense gemv; the STD-baseline inner loop when not using the
@@ -168,6 +269,49 @@ mod tests {
         for r in 0..4 {
             assert_eq!(m.row(r).as_ptr() as usize % 32, 0, "row {r}");
         }
+    }
+
+    #[test]
+    fn cow_freeze_equals_source_and_cow_rows_stay_aligned() {
+        let m = Matrix::from_fn(5, 13, |r, c| (r * 13 + c) as f32 * 0.5);
+        let frozen = m.to_cow();
+        assert!(frozen.is_cow() && !m.is_cow());
+        assert_eq!(frozen, m, "CoW freeze must be logically identical");
+        for r in 0..5 {
+            assert_eq!(frozen.row(r), m.row(r));
+            // Per-row AVecs: every row aligned even at cols=13.
+            assert_eq!(frozen.row(r).as_ptr() as usize % 32, 0, "row {r}");
+        }
+    }
+
+    #[test]
+    fn cow_delta_shares_untouched_rows_and_copies_touched_ones() {
+        let mut live = Matrix::from_fn(6, 4, |r, c| (r + c) as f32);
+        let prev = live.to_cow();
+        // Trainer mutates rows 1 and 4, then publishes a delta.
+        for &r in &[1usize, 4] {
+            for v in live.row_mut(r) {
+                *v += 10.0;
+            }
+        }
+        let next = Matrix::cow_delta(&prev, &live, &[1, 4]);
+        assert_eq!(next, live, "delta must equal a full freeze of live");
+        assert_eq!(next.shared_rows(&prev), 4, "4 of 6 rows shared by Arc");
+        for r in 0..6 {
+            let shared = std::sync::Arc::ptr_eq(
+                next.cow_row_arc(r).unwrap(),
+                prev.cow_row_arc(r).unwrap(),
+            );
+            assert_eq!(shared, !matches!(r, 1 | 4), "row {r}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "immutable")]
+    fn cow_matrix_rejects_mutation() {
+        let m = Matrix::zeros(2, 2).to_cow();
+        let mut m = m;
+        m.row_mut(0)[0] = 1.0;
     }
 
     #[test]

@@ -4,6 +4,7 @@
 
 pub mod aligned;
 pub mod batch;
+pub mod cow;
 pub mod kernels;
 pub mod matrix;
 pub mod sharded;
@@ -11,5 +12,6 @@ pub mod vecops;
 
 pub use aligned::AVec;
 pub use batch::{Batch, BatchPlane};
+pub use cow::CowPlane;
 pub use matrix::Matrix;
 pub use sharded::{ShardMap, ShardedPlane};

@@ -29,7 +29,7 @@ use crate::nn::sparse::{LayerInput, SparseVec};
 use crate::obs;
 use crate::obs::{Stage, TableHealth};
 use crate::optim::{OptimConfig, Optimizer};
-use crate::publish::{ModelParts, TablePublisher};
+use crate::publish::{ModelParts, TablePublisher, TouchedSet};
 use crate::sampling::{make_selector, NodeSelector, SamplerConfig};
 use crate::tensor::batch::BatchPlane;
 use crate::train::metrics::{EpochRecord, MultCounters, RunRecord};
@@ -634,6 +634,13 @@ pub struct PublishHook {
     /// Also publish every N minibatches (0 = epoch boundaries only).
     every_batches: usize,
     batches_seen: u64,
+    /// Rows mutated since the last publish, one watermark per layer
+    /// (hidden *and* output — the weight delta covers the whole net,
+    /// while tables only exist for hidden layers). Accumulated from the
+    /// gradient sinks after every batch, cleared on every publish, so a
+    /// delta publish deep-copies exactly these rows and Arc-shares the
+    /// rest with the previously served model.
+    touched: Vec<TouchedSet>,
 }
 
 /// Freeze live trainer state into publishable parts. `None` when the
@@ -651,6 +658,66 @@ fn freeze_model_parts(
         sparsity: sampler.sparsity,
         rerank_factor: sampler.lsh.rerank_factor,
     })
+}
+
+/// Publish through `hook` in O(touched): weight planes deep-copy only the
+/// rows in `hook.touched` and Arc-share the rest with the publisher's
+/// currently served model ([`ModelParts::delta_from`]); table stacks
+/// re-freeze only where the live tables' mutation stamps moved since the
+/// served stacks were frozen
+/// ([`crate::sampling::NodeSelector::frozen_stack_delta`] — a rebuild
+/// epoch bumps every stamp, which is the full-freeze fallback). The
+/// touched sets reset on every successful publish, so they always mean
+/// "rows mutated since the served base". When the served model's shape
+/// disagrees with the live net (a publisher seeded from elsewhere), falls
+/// back to a full freeze. `None` when the method ships no tables —
+/// nothing is published and the watermarks are kept.
+fn publish_delta_through(
+    hook: &mut PublishHook,
+    net: &Network,
+    selectors: &[Box<dyn NodeSelector>],
+    sampler: &SamplerConfig,
+) -> Option<u64> {
+    let prev = hook.publisher.current();
+    let shapes_match = prev.net.layers.len() == net.layers.len()
+        && prev
+            .net
+            .layers
+            .iter()
+            .zip(&net.layers)
+            .all(|(p, l)| p.w.rows() == l.w.rows() && p.w.cols() == l.w.cols());
+    if !shapes_match {
+        let t0 = Instant::now();
+        let parts = freeze_model_parts(net, selectors, sampler)?;
+        let mut cost = parts.full_cost();
+        cost.freeze_micros = t0.elapsed().as_micros() as u64;
+        for t in &mut hook.touched {
+            t.clear();
+        }
+        return Some(hook.publisher.publish_with_cost(parts, cost, false));
+    }
+    let t0 = Instant::now();
+    let frozen: Vec<LayerTableStack> = selectors
+        .iter()
+        .enumerate()
+        .filter_map(|(l, s)| s.frozen_stack_delta(prev.tables.get(l)))
+        .collect();
+    if frozen.len() != net.n_hidden() {
+        return None;
+    }
+    let (parts, mut cost) = ModelParts::delta_from(
+        &prev,
+        net,
+        &hook.touched,
+        frozen,
+        sampler.sparsity,
+        sampler.lsh.rerank_factor,
+    );
+    cost.freeze_micros = t0.elapsed().as_micros() as u64;
+    for t in &mut hook.touched {
+        t.clear();
+    }
+    Some(hook.publisher.publish_with_cost(parts, cost, true))
 }
 
 /// Sequential trainer owning network + selectors + optimizer.
@@ -691,18 +758,32 @@ impl Trainer {
     /// boundary and, when `every_batches > 0`, every that-many
     /// minibatches mid-epoch.
     pub fn attach_publisher(&mut self, publisher: TablePublisher, every_batches: usize) {
-        self.hook = Some(PublishHook { publisher, every_batches, batches_seen: 0 });
+        // Seed every row as touched: rows mutated before the hook
+        // attached are invisible to per-batch tracking, so the first
+        // publish deep-copies everything (full-publish cost) and later
+        // publishes delta against that known-good base.
+        let touched: Vec<TouchedSet> = self
+            .net
+            .layers
+            .iter()
+            .map(|l| {
+                let mut t = TouchedSet::new(l.n_out());
+                for r in 0..l.n_out() as u32 {
+                    t.insert(r);
+                }
+                t
+            })
+            .collect();
+        self.hook = Some(PublishHook { publisher, every_batches, batches_seen: 0, touched });
     }
 
     /// Publish the current state immediately through the attached
-    /// publisher. `None` when no publisher is attached or the method
+    /// publisher — delta against the served model, like the in-training
+    /// publishes. `None` when no publisher is attached or the method
     /// ships no tables; otherwise the stamped version.
     pub fn publish_now(&mut self) -> Option<u64> {
-        // Check for a hook before freezing: the freeze clones the full
-        // network, which would be pure waste with nowhere to publish.
-        self.hook.as_ref()?;
-        let parts = freeze_model_parts(&self.net, &self.selectors, &self.cfg.sampler)?;
-        self.hook.as_mut().map(|h| h.publisher.publish(parts))
+        let hook = self.hook.as_mut()?;
+        publish_delta_through(hook, &self.net, &self.selectors, &self.cfg.sampler)
     }
 
     /// Versions published through the attached hook (0 = none attached or
@@ -791,15 +872,21 @@ impl Trainer {
             mults.add(&r.mults);
             // Mid-epoch publication: freeze the *post-update* weights and
             // tables every N batches. The freeze runs on this (trainer)
-            // thread; serving workers only ever see the atomic swap.
+            // thread; serving workers only ever see the atomic swap. The
+            // sinks keep their rows until the next batch clears them, so
+            // the union they report is exactly what this batch mutated.
             if let Some(hook) = self.hook.as_mut() {
+                for (l, sink) in self.ws.grads.iter().enumerate() {
+                    hook.touched[l].extend(sink.touched_rows());
+                }
                 hook.batches_seen += 1;
                 if hook.every_batches > 0 && hook.batches_seen % hook.every_batches as u64 == 0 {
-                    if let Some(parts) =
-                        freeze_model_parts(&self.net, &self.selectors, &self.cfg.sampler)
-                    {
-                        hook.publisher.publish(parts);
-                    }
+                    let _ = publish_delta_through(
+                        hook,
+                        &self.net,
+                        &self.selectors,
+                        &self.cfg.sampler,
+                    );
                 }
             }
         }
@@ -825,12 +912,11 @@ impl Trainer {
             self.health_log.push(per_layer.into_iter().flatten().collect());
         }
         // Epoch-boundary publication ships the freshly rebuilt tables.
+        // On rebuild epochs every mutation stamp has moved, so the table
+        // side degenerates to a full freeze; the weight side still
+        // publishes delta.
         if let Some(hook) = self.hook.as_mut() {
-            if let Some(parts) =
-                freeze_model_parts(&self.net, &self.selectors, &self.cfg.sampler)
-            {
-                hook.publisher.publish(parts);
-            }
+            let _ = publish_delta_through(hook, &self.net, &self.selectors, &self.cfg.sampler);
         }
         let wall = t0.elapsed().as_secs_f64();
         let cap = if self.cfg.eval_cap == 0 { test.len() } else { self.cfg.eval_cap.min(test.len()) };

@@ -1,0 +1,213 @@
+//! Incremental-publication integration tests (ISSUE 10): a delta-published
+//! epoch must be *observably identical* to a full publish of the same
+//! trainer state — bitwise weights, identical bucket contents, identical
+//! served logits / active sets / mult counts — while untouched rows are
+//! shared with the previous epoch by `Arc` instead of being copied.
+//!
+//! Covered here:
+//! * unsharded delta publish vs full freeze — bitwise serving equality;
+//! * `S = 4` sharded delta publish vs full freeze — same bar;
+//! * zero-touched republish shares every weight row (pointer-identical
+//!   row storage across consecutive versions);
+//! * v6 snapshot patches between two published epochs round-trip to the
+//!   exact next-epoch model.
+
+use hashdl::data::Dataset;
+use hashdl::nn::activation::Activation;
+use hashdl::nn::network::{Network, NetworkConfig};
+use hashdl::optim::OptimConfig;
+use hashdl::publish::TablePublisher;
+use hashdl::sampling::{Method, SamplerConfig};
+use hashdl::serve::{
+    apply_snapshot_delta, load_snapshot_delta, save_snapshot_delta, InferenceWorkspace,
+    SparseInferenceEngine,
+};
+use hashdl::train::trainer::{TrainConfig, Trainer};
+use hashdl::util::rng::Pcg64;
+use std::path::PathBuf;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("hashdl_pubdelta_it_{name}_{}.bin", std::process::id()))
+}
+
+/// Small linearly-separable dataset so a few epochs of real training
+/// (gradients, rehashes, rebuilds) drive the delta machinery.
+fn blob_dataset(n: usize, dim: usize, seed: u64) -> (Dataset, Dataset) {
+    let mut rng = Pcg64::seeded(seed);
+    let mut gen = |n: usize| {
+        let mut ds = Dataset::new("blobs", dim, 2);
+        for i in 0..n {
+            let y = (i % 2) as u32;
+            let c = if y == 0 { 0.7 } else { -0.7 };
+            ds.push((0..dim).map(|_| c + 0.3 * rng.gaussian()).collect(), y);
+        }
+        ds
+    };
+    (gen(n), gen(n / 4))
+}
+
+fn lsh_trainer(hidden: Vec<usize>, shards: usize, seed: u64) -> Trainer {
+    let net = Network::new(
+        &NetworkConfig { n_in: 16, hidden, n_out: 2, act: Activation::ReLU },
+        &mut Pcg64::seeded(seed),
+    );
+    Trainer::new(
+        net,
+        TrainConfig {
+            epochs: 2,
+            batch_size: 8,
+            optim: OptimConfig { lr: 0.05, ..Default::default() },
+            sampler: SamplerConfig { shards, ..SamplerConfig::with_method(Method::Lsh, 0.25) },
+            seed,
+            ..Default::default()
+        },
+    )
+}
+
+/// Compare a delta-published model against a freshly built full publish of
+/// the same trainer state: weights, tables and the full served answer.
+fn assert_delta_matches_full(t: &Trainer, reader: &hashdl::publish::TableReader, xs: &[Vec<f32>]) {
+    let delta = reader.current();
+    let full = t.model_parts().expect("LSH trainer always has publishable parts");
+
+    // Weights: logical Matrix equality spans the CoW/Dense representations.
+    assert_eq!(delta.net.layers.len(), full.net.layers.len());
+    for (a, b) in delta.net.layers.iter().zip(&full.net.layers) {
+        assert_eq!(a.w, b.w, "delta-published weights must equal a full freeze");
+        assert_eq!(a.b, b.b, "biases must match bitwise");
+    }
+    // Tables: identical bucket contents + fingerprints per (shard ×) layer.
+    assert_eq!(delta.tables.len(), full.tables.len());
+    for (sa, sb) in delta.tables.iter().zip(&full.tables) {
+        assert_eq!(sa.shard_count(), sb.shard_count());
+        match (sa.single(), sb.single()) {
+            (Some(a), Some(b)) => {
+                assert_eq!(a.tables(), b.tables(), "single-stack buckets must be identical");
+                assert_eq!(a.family().srp().projections(), b.family().srp().projections());
+            }
+            _ => {
+                let (a, b) = (sa.sharded().unwrap(), sb.sharded().unwrap());
+                for (fa, fb) in a.shards().iter().zip(b.shards()) {
+                    assert_eq!(fa.tables(), fb.tables(), "per-shard buckets must be identical");
+                }
+            }
+        }
+    }
+    // Served answers: bit-for-bit across the full query set.
+    let engine_delta = SparseInferenceEngine::frozen(hashdl::publish::ModelParts {
+        net: delta.net.clone(),
+        tables: delta.tables.clone(),
+        sparsity: delta.sparsity,
+        rerank_factor: delta.rerank_factor,
+    });
+    let engine_full = SparseInferenceEngine::frozen(full);
+    let mut wd = InferenceWorkspace::new(&engine_delta);
+    let mut wf = InferenceWorkspace::new(&engine_full);
+    for x in xs.iter().take(25) {
+        let a = engine_delta.infer(x, &mut wd);
+        let b = engine_full.infer(x, &mut wf);
+        assert_eq!(a.pred, b.pred);
+        assert_eq!(wd.logits, wf.logits, "logits must be bit-identical");
+        assert_eq!(a.mults.total(), b.mults.total(), "same active sets ⇒ same mult count");
+        for (u, v) in wd.acts.iter().zip(&wf.acts) {
+            assert_eq!(u.idx, v.idx, "active sets must be identical");
+        }
+    }
+}
+
+#[test]
+fn delta_published_epochs_match_full_publish_unsharded() {
+    let (train, test) = blob_dataset(192, 16, 31);
+    let mut t = lsh_trainer(vec![48, 48], 1, 31);
+    let (publisher, reader) = TablePublisher::start(t.model_parts().unwrap());
+    // Mid-epoch cadence of 3 exercises the in-epoch delta site as well as
+    // the epoch-boundary one.
+    t.attach_publisher(publisher, 3);
+    t.run(&train, &test);
+    assert!(t.published_versions() > 2, "expected epoch + mid-epoch publishes");
+    assert_delta_matches_full(&t, &reader, &test.xs);
+
+    // On-demand publish with fresh training in between stays equivalent.
+    t.run_epoch(2, &train, &test);
+    t.publish_now().expect("hook attached");
+    assert_delta_matches_full(&t, &reader, &test.xs);
+}
+
+#[test]
+fn delta_published_epochs_match_full_publish_sharded_s4() {
+    let (train, test) = blob_dataset(160, 16, 57);
+    let mut t = lsh_trainer(vec![64], 4, 57);
+    let (publisher, reader) = TablePublisher::start(t.model_parts().unwrap());
+    t.attach_publisher(publisher, 4);
+    t.run(&train, &test);
+    let current = reader.current();
+    assert_eq!(current.tables[0].shard_count(), 4, "wide layer must publish 4 shards");
+    assert_delta_matches_full(&t, &reader, &test.xs);
+}
+
+#[test]
+fn zero_touched_republish_shares_every_row_by_pointer() {
+    let (train, test) = blob_dataset(96, 16, 73);
+    let mut t = lsh_trainer(vec![40], 1, 73);
+    let (publisher, reader) = TablePublisher::start(t.model_parts().unwrap());
+    t.attach_publisher(publisher, 0);
+    t.run(&train, &test);
+
+    // Two publishes with no training in between: the second one touches
+    // nothing, so every weight row of v+1 must alias v's storage — the
+    // O(touched) claim made observable.
+    let v1 = t.publish_now().unwrap();
+    let p1 = reader.current();
+    let v2 = t.publish_now().unwrap();
+    let p2 = reader.current();
+    assert_eq!(v2, v1 + 1);
+    for (a, b) in p1.net.layers.iter().zip(&p2.net.layers) {
+        for r in 0..a.w.rows() {
+            assert!(
+                std::ptr::eq(a.w.row(r).as_ptr(), b.w.row(r).as_ptr()),
+                "untouched row {r} must be shared, not copied"
+            );
+        }
+    }
+    // Unchanged tables are shared too (same frozen stack, same buckets).
+    for (sa, sb) in p1.tables.iter().zip(&p2.tables) {
+        let (a, b) = (sa.single().unwrap(), sb.single().unwrap());
+        assert_eq!(a.tables(), b.tables());
+    }
+}
+
+#[test]
+fn v6_patch_between_published_epochs_roundtrips() {
+    let (train, test) = blob_dataset(128, 16, 91);
+    let mut t = lsh_trainer(vec![48], 1, 91);
+    t.run_epoch(0, &train, &test);
+    let snap_a = t.snapshot();
+    t.run_epoch(1, &train, &test);
+    let snap_b = t.snapshot();
+
+    let path = tmp("v6_epoch_patch");
+    save_snapshot_delta(&snap_a, &snap_b, 1, 2, &path).unwrap();
+    let patch = load_snapshot_delta(&path).unwrap();
+    assert_eq!(patch.base_version, 1);
+    assert_eq!(patch.version, 2);
+    let rebuilt = apply_snapshot_delta(&snap_a, &patch).unwrap();
+
+    for (a, b) in rebuilt.net.layers.iter().zip(&snap_b.net.layers) {
+        assert_eq!(a.w, b.w, "patched weights must equal the next epoch bitwise");
+        assert_eq!(a.b, b.b);
+    }
+    let e1 = SparseInferenceEngine::from_snapshot(snap_b);
+    let e2 = SparseInferenceEngine::from_snapshot(rebuilt);
+    let mut w1 = InferenceWorkspace::new(&e1);
+    let mut w2 = InferenceWorkspace::new(&e2);
+    for x in test.xs.iter().take(25) {
+        let a = e1.infer(x, &mut w1);
+        let b = e2.infer(x, &mut w2);
+        assert_eq!(a.pred, b.pred);
+        assert_eq!(w1.logits, w2.logits, "patched model must serve bit-identically");
+        for (u, v) in w1.acts.iter().zip(&w2.acts) {
+            assert_eq!(u.idx, v.idx);
+        }
+    }
+    std::fs::remove_file(path).ok();
+}
